@@ -1,0 +1,138 @@
+//! Microbenchmarks for the L3 hot paths (no artifacts needed):
+//! serving router across metrics, dispatch simulator, metric kernels,
+//! data pipeline, JSON parsing.
+//!
+//! Run: `cargo bench --bench micro` (results appended to
+//! `results/bench.csv`).
+
+use lpr::data::{Batcher, ZipfMarkovCorpus};
+use lpr::dispatch::{synthetic_assignments, DispatchSim, SimConfig};
+use lpr::metrics::{gini, min_max_ratio};
+use lpr::router::linalg::matmul;
+use lpr::router::{Router, RouterConfig, RouterKind, RouterParams};
+use lpr::util::bench::Bench;
+use lpr::util::json::Json;
+use lpr::util::rng::Rng;
+
+fn normal_vec(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32 * scale).collect()
+}
+
+fn lpr_router(metric: &str, rng: &mut Rng, d: usize, dz: usize, e: usize,
+              k: usize) -> Router {
+    let heads = 4;
+    let dh = (dz / heads).max(1);
+    Router::new(
+        RouterConfig {
+            kind: RouterKind::Lpr,
+            d_model: d,
+            n_experts: e,
+            top_k: k,
+            latent_dim: dz,
+            metric: metric.into(),
+            unit_ball: true,
+            gaussian_sigma: 1.0,
+            n_score_heads: heads,
+        },
+        RouterParams {
+            norm: vec![1.0; d],
+            w_mu: normal_vec(rng, d * dz, 0.1),
+            b_mu: vec![0.0; dz],
+            w_lv: normal_vec(rng, d * dz, 0.01),
+            b_lv: vec![-4.0; dz],
+            proto_mu: normal_vec(rng, e * dz, 0.5),
+            proto_lv: vec![-2.0; e * dz],
+            wq: normal_vec(rng, heads * dz * dh, 0.3),
+            wk: normal_vec(rng, heads * dz * dh, 0.3),
+            ..Default::default()
+        },
+    )
+}
+
+fn main() {
+    let mut b = Bench::new("micro");
+    let mut rng = Rng::new(1);
+
+    // ---- serving router: tokens/s per metric (paper-scale E=128) ----
+    let (d, dz, e, k, n) = (256usize, 16usize, 128usize, 8usize, 1024usize);
+    let h = normal_vec(&mut rng, n * d, 1.0);
+    for metric in ["dot", "cosine", "gaussian", "wasserstein", "xattn"] {
+        let r = lpr_router(metric, &mut rng, d, dz, e, k);
+        b.run_items(&format!("router_fwd/{metric}/{n}tok"), n as f64,
+                    &mut || {
+            std::hint::black_box(r.forward(&h));
+        });
+    }
+    // vanilla for comparison (d x E matmul dominates)
+    let van = Router::new(
+        RouterConfig {
+            kind: RouterKind::Vanilla,
+            d_model: d,
+            n_experts: e,
+            top_k: k,
+            latent_dim: 0,
+            metric: "dot".into(),
+            unit_ball: false,
+            gaussian_sigma: 1.0,
+            n_score_heads: 1,
+        },
+        RouterParams { wg: normal_vec(&mut rng, d * e, 0.1),
+                       ..Default::default() },
+    );
+    b.run_items(&format!("router_fwd/vanilla/{n}tok"), n as f64, &mut || {
+        std::hint::black_box(van.forward(&h));
+    });
+
+    // ---- dispatch simulator ----
+    let assignments =
+        synthetic_assignments(&mut rng, 2048, 8, 64, 0.7);
+    b.run_items("dispatch_sim/step/2048tok", 2048.0, &mut || {
+        let mut sim = DispatchSim::new(SimConfig::default());
+        sim.step(std::hint::black_box(&assignments));
+        std::hint::black_box(sim.report());
+    });
+
+    // ---- metrics ----
+    let load = normal_vec(&mut rng, 512, 1.0)
+        .iter()
+        .map(|x| x.abs())
+        .collect::<Vec<_>>();
+    b.run("gini/512experts", || {
+        std::hint::black_box(gini(std::hint::black_box(&load)));
+    });
+    b.run("min_max/512experts", || {
+        std::hint::black_box(min_max_ratio(std::hint::black_box(&load)));
+    });
+
+    // ---- data pipeline ----
+    let mut corpus = ZipfMarkovCorpus::standard(512, 3);
+    let batcher = Batcher::new(8, 128);
+    b.run_items("corpus/batch_8x128", 1024.0, &mut || {
+        std::hint::black_box(batcher.next_synthetic(&mut corpus));
+    });
+
+    // ---- json (meta parsing path) ----
+    let meta = std::fs::read_to_string(
+        lpr::default_art_dir().join("quickstart.meta.json"),
+    )
+    .unwrap_or_else(|_| "{\"a\": [1,2,3]}".into());
+    b.run("json/parse_meta", || {
+        std::hint::black_box(Json::parse(std::hint::black_box(&meta)).unwrap());
+    });
+
+    // ---- dense matmul bound (router roofline reference) ----
+    let a = normal_vec(&mut rng, n * d, 1.0);
+    let w = normal_vec(&mut rng, d * e, 1.0);
+    b.run_items("linalg/matmul_1024x256x128", n as f64, &mut || {
+        std::hint::black_box(matmul(
+            std::hint::black_box(&a),
+            std::hint::black_box(&w),
+            n,
+            d,
+            e,
+        ));
+    });
+
+    std::fs::create_dir_all("results").ok();
+    b.write_csv(std::path::Path::new("results/bench.csv")).ok();
+}

@@ -1,0 +1,84 @@
+//! Per-table end-to-end benchmarks: for each paper table, time the AOT
+//! train-step / eval-step executables of that table's representative
+//! artifacts on the PJRT CPU runtime (state device-resident, exactly the
+//! hot loop the `repro` experiments run).
+//!
+//! The full table *reproductions* (hundreds of steps each) live behind
+//! `lpr repro tN`; these benches measure the per-step cost that drives
+//! their wall time, so `cargo bench` stays minutes, not hours.
+//!
+//! Self-skips artifacts that have not been built.
+
+use lpr::coordinator::Trainer;
+use lpr::data::{Batcher, ZipfMarkovCorpus};
+use lpr::runtime::{CompiledArtifacts, Runtime};
+use lpr::util::bench::Bench;
+
+/// (paper table, representative artifacts)
+// One representative artifact per table family: PJRT compiles cost
+// ~25 s each on this box, so the bench suite samples rather than
+// enumerates (the per-step cost within a family varies only with the
+// shapes benchmarked here).
+const TABLE_ARTIFACTS: &[(&str, &[&str])] = &[
+    ("table1", &["t1-qwen3", "t1-qwen3-lpr"]),
+    ("table2+4", &["ab-base"]), // tables 2/4 reuse ab-base with lw patches
+    ("table3+6+7", &["t7-wasserstein"]),
+    ("table5", &["t5-128-8"]),
+    ("fig1", &["fig1-lpr"]),
+    ("e2e", &["e2e-lm"]),
+];
+
+fn main() {
+    let art_dir = lpr::default_art_dir();
+    if !art_dir.join("manifest.json").exists() {
+        eprintln!(
+            "SKIP all table benches: no artifacts at {} \
+             (run `make artifacts`)",
+            art_dir.display()
+        );
+        return;
+    }
+    let rt = Runtime::cpu().expect("pjrt cpu");
+    let mut b = Bench::new("tables");
+    b.target_s = 0.5;
+    b.warmup_iters = 1;
+
+    for (table, artifacts) in TABLE_ARTIFACTS {
+        for name in *artifacts {
+            if !art_dir.join(format!("{name}.meta.json")).exists() {
+                eprintln!("SKIP {table}/{name}: artifact not built");
+                continue;
+            }
+            let arts = CompiledArtifacts::load(&rt, &art_dir, name)
+                .expect("compile");
+            let cfg = arts.meta.config.clone();
+            let mut trainer =
+                Trainer::new(&rt, &arts, 0, None).expect("init");
+            let mut corpus = ZipfMarkovCorpus::standard(cfg.vocab, 1);
+            let batcher = Batcher::new(cfg.batch_size, cfg.seq_len);
+            let batch = batcher.next_synthetic(&mut corpus);
+            let tokens = cfg.batch_size * cfg.seq_len;
+
+            b.run_items(
+                &format!("{table}/{name}/train_step"),
+                tokens as f64,
+                &mut || {
+                    trainer.train_step(&batch).expect("step");
+                },
+            );
+
+            let mut eval_corpus =
+                ZipfMarkovCorpus::standard(cfg.vocab, 2);
+            b.run_items(
+                &format!("{table}/{name}/eval_batch"),
+                tokens as f64,
+                &mut || {
+                    trainer.evaluate(&mut eval_corpus, 1).expect("eval");
+                },
+            );
+        }
+    }
+
+    std::fs::create_dir_all("results").ok();
+    b.write_csv(std::path::Path::new("results/bench.csv")).ok();
+}

@@ -1,0 +1,27 @@
+//! Temporary probe: time artifact compile + train_step under xla 0.5.1.
+use lpr::coordinator::Trainer;
+use lpr::data::{Batcher, ZipfMarkovCorpus};
+use lpr::runtime::{CompiledArtifacts, Runtime};
+use std::time::Instant;
+
+fn main() {
+    let name = std::env::args().nth(1).unwrap_or("t1-mixtral".into());
+    let rt = Runtime::cpu().unwrap();
+    let t0 = Instant::now();
+    let arts = CompiledArtifacts::load(&rt, &lpr::default_art_dir(), &name).unwrap();
+    println!("compile all: {:.1}s", t0.elapsed().as_secs_f64());
+    let t0 = Instant::now();
+    let mut trainer = Trainer::new(&rt, &arts, 0, None).unwrap();
+    println!("init: {:.1}s", t0.elapsed().as_secs_f64());
+    let (b, t) = arts.meta.batch_shape;
+    let mut corpus = ZipfMarkovCorpus::standard(arts.meta.config.vocab, 1);
+    let batch = Batcher::new(b, t).next_synthetic(&mut corpus);
+    for i in 0..3 {
+        let t0 = Instant::now();
+        trainer.train_step(&batch).unwrap();
+        println!("step {i}: {:.2}s", t0.elapsed().as_secs_f64());
+    }
+    let t0 = Instant::now();
+    trainer.evaluate(&mut corpus, 1).unwrap();
+    println!("eval: {:.2}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,50 @@
+//! Quickstart: the smallest end-to-end use of the public API.
+//!
+//! Loads the `quickstart` AOT artifact (built by `make artifacts`),
+//! trains a tiny LPR-routed MoE LM on the synthetic Zipf-Markov corpus
+//! for 60 steps with the state device-resident, then evaluates held-out
+//! loss and prints the per-layer expert-load heatmap with Gini/min-max.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use anyhow::Result;
+use lpr::coordinator::Trainer;
+use lpr::data::ZipfMarkovCorpus;
+use lpr::metrics::ascii_heatmap;
+use lpr::runtime::{CompiledArtifacts, Runtime};
+
+fn main() -> Result<()> {
+    let art_dir = lpr::default_art_dir();
+    let rt = Runtime::cpu()?;
+    println!("loading + compiling artifacts/quickstart.* ...");
+    let arts = CompiledArtifacts::load(&rt, &art_dir, "quickstart")?;
+    let cfg = &arts.meta.config;
+    println!(
+        "model: {} params | {} layers | {} experts, top-{} | router={}",
+        arts.meta.param_count, cfg.n_layers, cfg.n_experts, cfg.top_k,
+        cfg.router
+    );
+
+    let mut trainer = Trainer::new(&rt, &arts, 0, None)?;
+    let mut corpus = ZipfMarkovCorpus::standard(cfg.vocab, 1);
+    let steps = cfg.total_steps;
+    let loss_idx = arts.meta.metric_idx("loss");
+    trainer.train_synthetic(&mut corpus, steps, |m| {
+        if m.step % 10 == 0 || m.step + 1 == steps {
+            println!("step {:>3}/{steps}  loss {:.4}", m.step,
+                     m.values[loss_idx]);
+        }
+    })?;
+
+    let mut held_out = ZipfMarkovCorpus::held_out(cfg.vocab, 1, 990_000);
+    let eval = trainer.evaluate(&mut held_out, 8)?;
+    println!(
+        "\nheld-out: loss {:.4} | GINI {:.3} | min-max {:.3} | drop {:.3}",
+        eval.loss,
+        eval.load.mean_gini(),
+        eval.load.mean_min_max(),
+        eval.drop_frac
+    );
+    println!("{}", ascii_heatmap(&eval.load));
+    Ok(())
+}

@@ -1,0 +1,100 @@
+//! Router playground: the pure-Rust serving router on cluster-structured
+//! activations, across the full §2.4.1 metric library.
+//!
+//! Builds an LPR router with hypersphere-initialized prototypes, feeds a
+//! Gaussian-mixture token stream (the clusterability assumption of
+//! §2.2.1, with Zipf-skewed cluster sizes — the imbalanced-frequencies
+//! assumption), and prints per-metric load balance + routing throughput.
+//! No PJRT needed — this is the zero-dependency serving hot path.
+//!
+//! Run: `cargo run --release --example router_playground`
+
+use lpr::metrics::{entropy_frac, gini, min_max_ratio};
+use lpr::router::{Router, RouterConfig, RouterKind, RouterParams, METRICS};
+use lpr::util::rng::Rng;
+use std::time::Instant;
+
+fn normal_vec(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32 * scale).collect()
+}
+
+fn main() {
+    let (d, dz, e, k, heads) = (64usize, 16usize, 32usize, 4usize, 4usize);
+    let n_tokens = 4096usize;
+    let mut rng = Rng::new(2025);
+
+    // Gaussian-mixture stream: 8 clusters, Zipf(1.1) cluster sizes.
+    let n_clusters = 8;
+    let centers = normal_vec(&mut rng, n_clusters * d, 1.0);
+    let weights: Vec<f64> =
+        (1..=n_clusters).map(|r| 1.0 / (r as f64).powf(1.1)).collect();
+    let mut h = vec![0.0f32; n_tokens * d];
+    for t in 0..n_tokens {
+        let c = rng.categorical(&weights);
+        for j in 0..d {
+            h[t * d + j] = centers[c * d + j] + 0.4 * rng.normal() as f32;
+        }
+    }
+
+    println!(
+        "{} tokens from {} Zipf-weighted clusters -> {} experts top-{}",
+        n_tokens, n_clusters, e, k
+    );
+    println!(
+        "{:<14} {:>7} {:>9} {:>9} {:>14}",
+        "metric", "GINI", "min-max", "entropy", "tokens/s"
+    );
+
+    for metric in METRICS {
+        // hypersphere prototype init (normalize gaussian rows)
+        let mut proto = normal_vec(&mut rng, e * dz, 1.0);
+        for i in 0..e {
+            let row = &mut proto[i * dz..(i + 1) * dz];
+            let norm: f32 = row.iter().map(|x| x * x).sum::<f32>().sqrt();
+            row.iter_mut().for_each(|x| *x /= norm);
+        }
+        let dh = dz / heads;
+        let router = Router::new(
+            RouterConfig {
+                kind: RouterKind::Lpr,
+                d_model: d,
+                n_experts: e,
+                top_k: k,
+                latent_dim: dz,
+                metric: metric.to_string(),
+                unit_ball: true,
+                gaussian_sigma: 1.0,
+                n_score_heads: heads,
+            },
+            RouterParams {
+                norm: vec![1.0; d],
+                w_mu: normal_vec(&mut rng, d * dz, 1.0 / (d as f32).sqrt()),
+                b_mu: vec![0.0; dz],
+                w_lv: normal_vec(&mut rng, d * dz, 0.01),
+                b_lv: vec![-4.0; dz],
+                proto_mu: proto,
+                proto_lv: vec![-2.0; e * dz],
+                wq: normal_vec(&mut rng, heads * dz * dh, 0.3),
+                wk: normal_vec(&mut rng, heads * dz * dh, 0.3),
+                ..Default::default()
+            },
+        );
+
+        let t0 = Instant::now();
+        let out = router.forward(&h);
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "{:<14} {:>7.3} {:>9.4} {:>9.3} {:>14.0}",
+            metric,
+            gini(&out.load),
+            min_max_ratio(&out.load),
+            entropy_frac(&out.load),
+            n_tokens as f64 / dt
+        );
+    }
+    println!(
+        "\nhypersphere-initialized prototypes route near-uniformly at \
+         init for geometric metrics — the paper's §2.4 initialization \
+         argument, reproduced without any training."
+    );
+}

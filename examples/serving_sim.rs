@@ -1,0 +1,71 @@
+//! Serving study: what near-perfect load balance buys at inference time.
+//!
+//! Sweeps routing skew through the expert-parallel dispatch simulator
+//! (64 experts on 8 virtual devices, top-8, finite expert capacity) and
+//! reports throughput / tail latency / drops / utilization — the
+//! quantitative version of the paper's "hardware-software mismatch"
+//! argument (§1). The two endpoints of the sweep bracket the paper's
+//! measured routers: vanilla (GINI ~0.7) vs LPR (GINI ~0.04).
+//!
+//! Run: `cargo run --release --example serving_sim`
+
+use lpr::dispatch::{synthetic_assignments, DispatchSim, SimConfig};
+use lpr::util::rng::Rng;
+
+fn main() {
+    let base = SimConfig {
+        n_experts: 64,
+        n_devices: 8,
+        top_k: 8,
+        capacity_factor: 1.25,
+        alpha_us: 50.0,
+        beta_us: 0.5,
+    };
+    println!(
+        "dispatch sim: {} experts / {} devices / top-{} / cf {}",
+        base.n_experts, base.n_devices, base.top_k, base.capacity_factor
+    );
+    println!(
+        "{:<12} {:>7} {:>9} {:>14} {:>12} {:>8} {:>8}",
+        "skew", "GINI", "min-max", "tok/s", "p99 us", "drop%", "util"
+    );
+
+    let mut baseline_tps = None;
+    for &skew in &[0.0, 0.25, 0.5, 0.75, 1.0, 1.5, 2.0] {
+        let mut sim = DispatchSim::new(base.clone());
+        let mut rng = Rng::new(17);
+        for _ in 0..300 {
+            let a = synthetic_assignments(
+                &mut rng,
+                2048,
+                base.top_k,
+                base.n_experts,
+                skew,
+            );
+            sim.step(&a);
+        }
+        let r = sim.report();
+        let tps = r.throughput_tok_per_s;
+        let rel = baseline_tps
+            .map(|b: f64| format!(" ({:.2}x)", tps / b))
+            .unwrap_or_default();
+        if baseline_tps.is_none() {
+            baseline_tps = Some(tps);
+        }
+        println!(
+            "{:<12} {:>7.3} {:>9.4} {:>14} {:>12.0} {:>8.2} {:>8.3}",
+            format!("zipf {skew}"),
+            r.load_gini,
+            r.load_min_max,
+            format!("{:.0}{rel}", tps),
+            r.latency_p99_us,
+            100.0 * r.drop_frac,
+            r.utilization
+        );
+    }
+    println!(
+        "\nreading: a GINI-0.7 router (vanilla baseline territory) loses \
+         throughput,\nblows up p99 latency and drops tokens; the GINI~0 \
+         end is where LPR operates."
+    );
+}

@@ -1,0 +1,272 @@
+"""AOT pipeline: lower init/train/eval/router to HLO text + meta.json.
+
+This is the ONLY bridge between python (build time) and rust (runtime).
+Per config we emit:
+
+  artifacts/<name>.init.hlo.txt    init(seed:i32[]) -> state...
+  artifacts/<name>.train.hlo.txt   train_step(state..., step, lw, tok, tgt)
+                                     -> (state'..., metrics, load)
+  artifacts/<name>.eval.hlo.txt    eval_step(params..., tok, tgt)
+                                     -> (metrics, load)
+  artifacts/<name>.router.hlo.txt  router(router_params..., h)
+                                     -> (topk_idx, weights, load)
+  artifacts/<name>.meta.json       flat buffer contract for the rust side
+  artifacts/manifest.json          registry of built artifacts
+
+HLO *text* is the interchange format, NOT serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published `xla` crate binds) rejects; the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import configs, train
+from .configs import Config
+from .model import init_params
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _leaf_spec(path, x):
+    return {"path": jax.tree_util.keystr(path), "shape": list(x.shape),
+            "dtype": str(x.dtype)}
+
+
+def state_template(cfg: Config):
+    """Shapes of (params, m, v) without allocating real weights."""
+    return jax.eval_shape(lambda: train.init_state(
+        jax.random.PRNGKey(0), cfg))
+
+
+def build_functions(cfg: Config):
+    """Flat-signature wrappers around the pytree train/eval/init fns."""
+    params_t, m_t, v_t = state_template(cfg)
+    p_leaves, p_def = jax.tree_util.tree_flatten(params_t)
+    n_p = len(p_leaves)
+
+    def flatten_state(params, m, v):
+        return (jax.tree_util.tree_leaves(params)
+                + jax.tree_util.tree_leaves(m)
+                + jax.tree_util.tree_leaves(v))
+
+    def unflatten_state(flat):
+        p = jax.tree_util.tree_unflatten(p_def, flat[:n_p])
+        m = jax.tree_util.tree_unflatten(p_def, flat[n_p:2 * n_p])
+        v = jax.tree_util.tree_unflatten(p_def, flat[2 * n_p:3 * n_p])
+        return p, m, v
+
+    def init_fn(seed):
+        key = jax.random.PRNGKey(seed)
+        params, m, v = train.init_state(key, cfg)
+        return tuple(flatten_state(params, m, v))
+
+    def train_fn(*args):
+        flat = args[:3 * n_p]
+        step, lw, tokens, targets = args[3 * n_p:]
+        params, m, v = unflatten_state(list(flat))
+        params, m, v, metrics, load = train.train_step(
+            params, m, v, step, lw, tokens, targets, cfg)
+        return tuple(flatten_state(params, m, v)) + (metrics, load)
+
+    def eval_fn(*args):
+        flat = args[:n_p]
+        tokens, targets = args[n_p:]
+        params = jax.tree_util.tree_unflatten(p_def, list(flat))
+        metrics, load = train.eval_step(params, tokens, targets, cfg)
+        return (metrics, load)
+
+    # Router-only artifact operates on layer-0's router params.
+    router_t = params_t["layers"][0]["moe"]["router"]
+    r_leaves, r_def = jax.tree_util.tree_flatten(router_t)
+
+    def router_fn(*args):
+        flat = args[:len(r_leaves)]
+        h = args[len(r_leaves)]
+        rp = jax.tree_util.tree_unflatten(r_def, list(flat))
+        return train.router_only(rp, h, cfg)
+
+    return {
+        "n_params": n_p,
+        "params_t": params_t, "router_t": router_t,
+        "init_fn": init_fn, "train_fn": train_fn,
+        "eval_fn": eval_fn, "router_fn": router_fn,
+    }
+
+
+def lower_config(cfg: Config, out_dir: str, verbose: bool = True) -> dict:
+    t0 = time.time()
+    fns = build_functions(cfg)
+    params_t, router_t = fns["params_t"], fns["router_t"]
+    n_p = fns["n_params"]
+
+    b, t = cfg.batch_size, cfg.seq_len
+    state_specs = [jax.ShapeDtypeStruct(x.shape, x.dtype)
+                   for x in jax.tree_util.tree_leaves(params_t)] * 3
+    step_s = jax.ShapeDtypeStruct((), jnp.int32)
+    lw_s = jax.ShapeDtypeStruct((len(configs.LOSS_WEIGHTS),), jnp.float32)
+    tok_s = jax.ShapeDtypeStruct((b, t), jnp.int32)
+    h_s = jax.ShapeDtypeStruct((cfg.tokens_per_batch, cfg.d_model),
+                               jnp.float32)
+    router_specs = [jax.ShapeDtypeStruct(x.shape, x.dtype)
+                    for x in jax.tree_util.tree_leaves(router_t)]
+
+    files = {}
+
+    def emit(kind, fn, specs):
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{cfg.name}.{kind}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        files[kind] = {"file": fname,
+                       "sha256": hashlib.sha256(
+                           text.encode()).hexdigest()[:16],
+                       "bytes": len(text)}
+        if verbose:
+            print(f"  {fname}: {len(text)/1e6:.2f} MB")
+
+    emit("init", fns["init_fn"], [step_s])
+    emit("train", fns["train_fn"],
+         state_specs + [step_s, lw_s, tok_s, tok_s])
+    emit("eval", fns["eval_fn"], state_specs[:n_p] + [tok_s, tok_s])
+    emit("router", fns["router_fn"], router_specs + [h_s])
+
+    # Flat-buffer contract for the rust runtime.
+    p_paths = jax.tree_util.tree_flatten_with_path(params_t)[0]
+    r_paths = jax.tree_util.tree_flatten_with_path(router_t)[0]
+    meta = {
+        "name": cfg.name,
+        "config": cfg.to_json(),
+        "files": files,
+        "n_params": n_p,
+        "n_state": 3 * n_p,
+        "params": [_leaf_spec(p, x) for p, x in p_paths],
+        "router_params": [_leaf_spec(p, x) for p, x in r_paths],
+        "loss_weights": configs.LOSS_WEIGHTS,
+        "default_loss_weights": cfg.default_loss_weights(),
+        "metric_names": train.METRIC_NAMES,
+        "eval_metric_names": ["loss", "drop_frac"],
+        "load_shape": [cfg.n_layers, cfg.n_experts],
+        "batch_shape": [b, t],
+        "router_in_shape": list(h_s.shape),
+        "topk_shape": [cfg.tokens_per_batch, cfg.top_k],
+        "param_count": int(sum(
+            int(jnp.prod(jnp.array(x.shape)))
+            for x in jax.tree_util.tree_leaves(params_t))),
+        "train_inputs": (["state"] * (3 * n_p)
+                         + ["step", "loss_weights", "tokens", "targets"]),
+    }
+    with open(os.path.join(out_dir, f"{cfg.name}.meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    if verbose:
+        print(f"  [{cfg.name}] {meta['param_count']/1e6:.2f}M params, "
+              f"{time.time()-t0:.1f}s")
+    return meta
+
+
+def write_goldens(out_dir: str):
+    """Input/output pairs for the rust<->jax router parity tests."""
+    gdir = os.path.join(out_dir, "goldens")
+    os.makedirs(gdir, exist_ok=True)
+
+    # Load-balance metric goldens (gini/min-max/entropy/cv cross-check).
+    from . import metrics as M
+    rng = jax.random.PRNGKey(123)
+    cases = []
+    for i, load in enumerate([
+            [1.0] * 8,
+            [0.0] * 7 + [1.0],
+            [1, 2, 3, 4, 5, 6, 7, 8],
+            list(jnp.abs(jax.random.normal(rng, (32,))).tolist()),
+            [0.0, 0.0, 5.0, 5.0],
+    ]):
+        cases.append({"load": [float(x) for x in load],
+                      "gini": M.gini(load),
+                      "min_max": M.min_max_ratio(load),
+                      "entropy_frac": M.entropy_frac(load),
+                      "cv": M.cv(load)})
+    with open(os.path.join(gdir, "metrics.json"), "w") as f:
+        json.dump(cases, f)
+    print("  golden metrics written")
+    for router, metric in (("vanilla", "dot"), ("lpr", "cosine"),
+                           ("lpr", "gaussian"), ("deepseek", "dot")):
+        cfg = Config(name=f"golden-{router}-{metric}", router=router,
+                     metric=metric, d_model=32, n_experts=8, top_k=2,
+                     latent_dim=8, n_layers=1, seq_len=8, batch_size=2,
+                     vocab=64, n_heads=2, n_kv_heads=1, head_dim=16,
+                     moe_d_ff=16, variational=False)
+        key = jax.random.PRNGKey(7)
+        params = init_params(key, cfg)
+        rp = params["layers"][0]["moe"]["router"]
+        h = jax.random.normal(jax.random.fold_in(key, 1),
+                              (16, cfg.d_model), jnp.float32)
+        topk, w, load = train.router_only(rp, h, cfg)
+        flat = {
+            "config": cfg.to_json(),
+            "router_params": {
+                jax.tree_util.keystr(p): jnp.asarray(x).tolist()
+                for p, x in jax.tree_util.tree_flatten_with_path(rp)[0]},
+            "h": h.tolist(),
+            "topk_idx": topk.tolist(),
+            "weights": w.tolist(),
+            "load": load.tolist(),
+        }
+        path = os.path.join(gdir, f"{router}-{metric}.json")
+        with open(path, "w") as f:
+            json.dump(flat, f)
+        print(f"  golden {router}-{metric} written")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--presets", default="all",
+                    help="comma-separated preset names, or 'all'")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for name in sorted(configs.REGISTRY):
+            print(name)
+        return
+
+    names = (sorted(configs.REGISTRY) if args.presets == "all"
+             else args.presets.split(","))
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"artifacts": {}}
+    mpath = os.path.join(args.out, "manifest.json")
+    if os.path.exists(mpath):
+        with open(mpath) as f:
+            manifest = json.load(f)
+
+    for i, name in enumerate(names):
+        cfg = configs.get(name)
+        print(f"[{i+1}/{len(names)}] lowering {name} ...")
+        meta = lower_config(cfg, args.out)
+        manifest["artifacts"][name] = meta["files"]
+        with open(mpath, "w") as f:
+            json.dump(manifest, f, indent=1)
+
+    write_goldens(args.out)
+    print(f"manifest: {mpath} ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

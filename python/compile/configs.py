@@ -1,0 +1,226 @@
+"""Experiment configuration registry.
+
+One `Config` fully determines an AOT artifact set (init/train/eval/router
+HLO + meta.json). The preset registry mirrors DESIGN.md's per-experiment
+index: every paper table/figure row maps to a preset name here, and the
+Rust CLI refers to artifacts by these names.
+
+Scale note: everything is tiny (d_model=128, 2 MoE layers) so that a full
+table sweep fits a 1-core CPU budget; see DESIGN.md §Substitutions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+GEOMETRIC_METRICS = ("dot", "cosine", "gaussian", "mahalanobis", "xattn")
+DISTRIBUTION_METRICS = ("wasserstein", "kl", "js", "hellinger")
+METRICS = GEOMETRIC_METRICS + DISTRIBUTION_METRICS
+DIVERSITY_TYPES = ("orthogonal", "cosine", "euclidean", "none")
+ROUTERS = ("vanilla", "deepseek", "lpr")
+ARCHS = ("qwen3", "deepseek", "mixtral")
+
+# Layout of the runtime loss-weight vector (f32[8] input to train_step).
+# Keeping these runtime inputs lets Tables 2/4 (component ablation,
+# regularization-strength sweep) reuse ONE compiled artifact.
+LOSS_WEIGHTS = [
+    "beta_rs",      # 0: global LPR regularization scale (paper: 0.01)
+    "beta_div",     # 1: diversity loss weight (paper: 1.0)
+    "beta_align",   # 2: alignment loss weight (paper: 0.1)
+    "beta_kl",      # 3: KL loss weight (paper: 0.01)
+    "aux_coef",     # 4: vanilla aux load-balance loss coef (paper: 1e-3)
+    "bias_update",  # 5: DeepSeek aux-free bias update rate
+    "ema_alpha",    # 6: (1-lambda) for EMA prototype adaptation; 0 = off
+    "spare",        # 7: reserved
+]
+
+
+@dataclass(frozen=True)
+class Config:
+    """Full model + router + training configuration for one artifact set."""
+
+    name: str
+    arch: str = "qwen3"            # qwen3 | deepseek | mixtral
+    router: str = "lpr"            # vanilla | deepseek | lpr
+
+    # model
+    vocab: int = 512
+    d_model: int = 128
+    n_layers: int = 2              # all layers are MoE layers
+    n_heads: int = 4
+    n_kv_heads: int = 2
+    head_dim: int = 32
+    moe_d_ff: int = 64             # per-expert FFN width
+    n_experts: int = 32
+    top_k: int = 4
+    n_shared_experts: int = 0      # deepseek flavor uses > 0
+    capacity_factor: float = 1.5
+    qk_norm: bool = False          # qwen3 flavor
+    rope_theta: float = 10000.0
+
+    # LPR router
+    latent_dim: int = 16
+    metric: str = "cosine"         # see METRICS
+    n_score_heads: int = 4         # for metric == "xattn"
+    diversity: str = "orthogonal"  # see DIVERSITY_TYPES
+    variational: bool = True
+    hypersphere_init: bool = True
+    unit_ball: bool = True
+    gaussian_sigma: float = 1.0    # for metric == "gaussian"
+
+    # training
+    seq_len: int = 128
+    batch_size: int = 8
+    lr: float = 1e-3
+    min_lr_ratio: float = 0.05
+    warmup_frac: float = 0.05
+    stable_frac: float = 0.70      # warmup 5% / stable 70% / decay 25%
+    weight_decay: float = 0.1
+    adam_b1: float = 0.9
+    adam_b2: float = 0.95
+    grad_clip: float = 1.0
+    total_steps: int = 300         # used by the in-graph WSD schedule
+
+    # default runtime loss weights (Rust may override per run)
+    beta_rs: float = 0.01
+    beta_div: float = 1.0
+    beta_align: float = 0.1
+    beta_kl: float = 0.01
+    aux_coef: float = 1e-3
+    bias_update: float = 1e-3
+    ema_alpha: float = 0.0
+
+    def __post_init__(self):
+        assert self.arch in ARCHS, self.arch
+        assert self.router in ROUTERS, self.router
+        assert self.metric in METRICS, self.metric
+        assert self.diversity in DIVERSITY_TYPES, self.diversity
+        assert self.d_model % self.n_heads == 0 or self.head_dim > 0
+        assert self.n_heads % self.n_kv_heads == 0
+        assert self.top_k <= self.n_experts
+
+    @property
+    def tokens_per_batch(self) -> int:
+        return self.seq_len * self.batch_size
+
+    @property
+    def capacity(self) -> int:
+        """Per-expert capacity of the dense dispatch bins."""
+        n = self.tokens_per_batch
+        cap = int(n * self.top_k / self.n_experts * self.capacity_factor)
+        return max(4, cap)
+
+    def default_loss_weights(self) -> List[float]:
+        w = [
+            self.beta_rs, self.beta_div, self.beta_align, self.beta_kl,
+            self.aux_coef, self.bias_update, self.ema_alpha, 0.0,
+        ]
+        assert len(w) == len(LOSS_WEIGHTS)
+        return w
+
+    def to_json(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+# Tiny-scale LPR calibration (see DESIGN.md §Substitutions and
+# EXPERIMENTS.md §Calibration): the paper trains 100M-1B tokens with
+# beta_rs=0.01; at our ~500x smaller step budget the regularization
+# pressure integrates over far fewer updates, so LPR presets default to
+# the paper's own Table-4 beta_rs=0.1 operating point and enable the
+# paper's EMA prototype adaptation (contribution 3, hard-assignment
+# version, lambda=0.7). Measured on quickstart/240 steps: gini
+# 0.60->0.067, min-max 0 -> 0.63, test loss unchanged vs beta_rs=0.01.
+TINY_LPR = dict(beta_rs=0.1, ema_alpha=0.3)
+
+
+def _lpr(name: str, **kw) -> Config:
+    for k, v in TINY_LPR.items():
+        kw.setdefault(k, v)
+    return Config(name=name, router="lpr", **kw)
+
+
+def build_registry() -> Dict[str, Config]:
+    """All presets referenced by DESIGN.md's per-experiment index."""
+    r: Dict[str, Config] = {}
+
+    def add(cfg: Config):
+        assert cfg.name not in r, f"duplicate preset {cfg.name}"
+        r[cfg.name] = cfg
+
+    # ---- quickstart / e2e ----------------------------------------------
+    add(Config(name="quickstart", n_experts=16, top_k=2, n_layers=2,
+               total_steps=60, batch_size=4, **TINY_LPR))
+    # e2e driver: the largest model practical on this testbed.
+    add(Config(name="e2e-lm", d_model=256, n_layers=4, n_heads=8,
+               n_kv_heads=4, head_dim=32, moe_d_ff=128, n_experts=32,
+               top_k=4, vocab=512, seq_len=256, batch_size=4,
+               total_steps=300, router="lpr", **TINY_LPR))
+    add(Config(name="e2e-lm-vanilla", d_model=256, n_layers=4, n_heads=8,
+               n_kv_heads=4, head_dim=32, moe_d_ff=128, n_experts=32,
+               top_k=4, vocab=512, seq_len=256, batch_size=4,
+               total_steps=300, router="vanilla"))
+
+    # ---- Table 1: arch x router ----------------------------------------
+    t1 = dict(n_experts=64, top_k=8, total_steps=300)
+    add(Config(name="t1-qwen3", arch="qwen3", router="vanilla",
+               qk_norm=True, **t1))
+    add(Config(name="t1-qwen3-lpr", arch="qwen3", router="lpr",
+               qk_norm=True, hypersphere_init=True, **TINY_LPR, **t1))
+    add(Config(name="t1-qwen3-lpr-noinit", arch="qwen3", router="lpr",
+               qk_norm=True, hypersphere_init=False, **TINY_LPR, **t1))
+    add(Config(name="t1-deepseek", arch="deepseek", router="deepseek",
+               n_shared_experts=2, **t1))
+    add(Config(name="t1-deepseek-lpr", arch="deepseek", router="lpr",
+               n_shared_experts=2, hypersphere_init=False, **TINY_LPR,
+               **t1))
+    add(Config(name="t1-mixtral", arch="mixtral", router="vanilla", **t1))
+    add(Config(name="t1-mixtral-lpr", arch="mixtral", router="lpr",
+               hypersphere_init=False, **TINY_LPR, **t1))
+
+    # ---- ablation base (Tables 2 & 4 reuse this single artifact) -------
+    add(_lpr("ab-base", total_steps=240))
+
+    # ---- Table 3: latent dim -------------------------------------------
+    for dz in (4, 8, 16, 32, 64, 128, 256):
+        add(_lpr(f"t3-dim{dz}", latent_dim=dz, total_steps=240))
+
+    # ---- Table 5: expert count sweep (tiny-scale mirror: 32..256) ------
+    # Paper sweeps 128..512 at 0.6B; we mirror the *ratios* N/k.
+    for n, k in ((32, 8), (64, 8), (128, 8), (128, 4), (128, 1)):
+        add(_lpr(f"t5-{n}-{k}", n_experts=n, top_k=k, total_steps=240))
+
+    # ---- Table 6: diversity measure ------------------------------------
+    for div in ("cosine", "orthogonal", "euclidean"):
+        add(_lpr(f"t6-div-{div}", diversity=div, total_steps=240))
+
+    # ---- Table 7: similarity / divergence metric -----------------------
+    for m in METRICS:
+        if m == "dot":
+            continue  # 'dot' is the vanilla baseline, covered by t1
+        add(_lpr(f"t7-{m}", metric=m, total_steps=240))
+
+    # ---- Figure 1: per-layer load heatmaps ------------------------------
+    add(Config(name="fig1-vanilla", router="vanilla", n_layers=4,
+               total_steps=240))
+    add(_lpr("fig1-lpr", n_layers=4, total_steps=240))
+
+    return r
+
+
+REGISTRY = build_registry()
+
+
+def get(name: str) -> Config:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown preset '{name}'; known: {sorted(REGISTRY)}")
+    return REGISTRY[name]
+
+
+def main():
+    print(json.dumps({k: v.to_json() for k, v in REGISTRY.items()}, indent=1))
+
+
+if __name__ == "__main__":
+    main()

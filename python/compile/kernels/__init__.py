@@ -1,0 +1,6 @@
+"""L1: Pallas kernels for the MoE hot-spots (interpret=True on CPU)."""
+from .moe_ffn import moe_ffn
+from .scores import ALL_METRICS, DISTRIBUTIONAL, GEOMETRIC, router_scores
+
+__all__ = ["moe_ffn", "router_scores", "ALL_METRICS", "GEOMETRIC",
+           "DISTRIBUTIONAL"]

@@ -1,0 +1,101 @@
+"""L1 Pallas kernel: grouped (capacity-binned) SwiGLU expert FFN.
+
+Tokens are pre-binned by the L2 dispatch (`compile.moe`) into a dense
+`[E, C, d]` tensor, so the expert compute is a *regular* batched matmul —
+the shape the TPU MXU wants. The kernel body operates on an
+`[Eb, Cb, d]` block; the grid streams blocks HBM->VMEM via BlockSpec
+(the Pallas analogue of the paper's GPU threadblock scheduling — see
+DESIGN.md §Hardware-Adaptation).
+
+Block-shape policy (measured, see EXPERIMENTS.md §Perf):
+  * real TPU: e_block=1, c_block~128-256 so one expert tile fits VMEM
+    and the MXU sees [Cb, d] @ [d, f] matmuls back-to-back.
+  * CPU interpret=True (this testbed): every grid iteration costs a
+    `lax.while_loop` step with full dynamic-slice copies — measured
+    ~2 ms/iteration, i.e. 600x the math it wraps at tiny shapes. CPU
+    artifacts therefore lower with e_block=E, c_block=C (ONE grid
+    step); the kernel body is identical, only the schedule changes.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO so the same graph runs
+under the Rust PJRT client. TPU perf is estimated analytically in
+DESIGN.md (VMEM footprint / MXU utilization), never from interpret-mode
+wallclock.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _swiglu_kernel(x_ref, w1_ref, w3_ref, w2_ref, o_ref):
+    """One (expert-block, capacity-tile) grid step.
+
+    Block shapes: x [Eb, Cb, d], w1/w3 [Eb, d, f], w2 [Eb, f, d],
+    o [Eb, Cb, d]. einsum over the expert-block dim keeps the body
+    identical for Eb=1 (TPU tiling) and Eb=E (CPU fused lowering).
+    """
+    x = x_ref[...]
+    gate = jnp.einsum("ecd,edf->ecf", x, w1_ref[...])   # MXU matmul 1
+    up = jnp.einsum("ecd,edf->ecf", x, w3_ref[...])     # MXU matmul 2
+    act = jax.nn.silu(gate) * up                        # VPU elementwise
+    o_ref[...] = jnp.einsum("ecf,efd->ecd", act, w2_ref[...])  # matmul 3
+
+
+def _pick_c_block(capacity: int, c_block: int | None) -> int:
+    if c_block is not None:
+        assert capacity % c_block == 0, (capacity, c_block)
+        return c_block
+    # CPU-interpret default: one tile (see module docstring).
+    return capacity
+
+
+def _pick_e_block(e: int, e_block: int | None) -> int:
+    if e_block is not None:
+        assert e % e_block == 0, (e, e_block)
+        return e_block
+    return e
+
+
+@functools.partial(
+    jax.jit, static_argnames=("c_block", "e_block", "interpret"))
+def moe_ffn(x: jax.Array, w1: jax.Array, w3: jax.Array, w2: jax.Array,
+            *, c_block: int | None = None, e_block: int | None = None,
+            interpret: bool = True) -> jax.Array:
+    """SwiGLU FFN applied per expert bin.
+
+    Args:
+      x:  [E, C, d] dispatched token activations (zero rows for empty
+          slots).
+      w1: [E, d, f] gate projection.
+      w3: [E, d, f] up projection.
+      w2: [E, f, d] down projection.
+      c_block/e_block: tile sizes (None = whole axis, the CPU default;
+          use e_block=1, c_block=128 for the TPU-faithful schedule).
+    Returns:
+      [E, C, d] expert outputs.
+    """
+    e, c, d = x.shape
+    f = w1.shape[-1]
+    assert w1.shape == (e, d, f) and w3.shape == (e, d, f)
+    assert w2.shape == (e, f, d)
+    cb = _pick_c_block(c, c_block)
+    eb = _pick_e_block(e, e_block)
+
+    grid = (e // eb, c // cb)
+    return pl.pallas_call(
+        _swiglu_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((eb, cb, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((eb, d, f), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((eb, d, f), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((eb, f, d), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((eb, cb, d), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((e, c, d), x.dtype),
+        interpret=interpret,
+    )(x, w1, w3, w2)

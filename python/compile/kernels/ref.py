@@ -1,0 +1,28 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness signal: every kernel must match its oracle
+to float32 tolerance across a hypothesis sweep of shapes (see
+python/tests/test_kernels.py). No pallas entry points here — only the
+shared metric math, evaluated directly (untiled).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .scores import metric_scores
+
+
+def moe_ffn_ref(x, w1, w3, w2):
+    """Reference grouped SwiGLU FFN: einsum over the expert dimension."""
+    gate = jnp.einsum("ecd,edf->ecf", x, w1)
+    up = jnp.einsum("ecd,edf->ecf", x, w3)
+    act = jax.nn.silu(gate) * up
+    return jnp.einsum("ecf,efd->ecd", act, w2)
+
+
+def router_scores_ref(z_mu, z_logvar, p_mu, p_logvar, wq=None, wk=None, *,
+                      metric="cosine", sigma: float = 1.0):
+    """Reference metric scores — direct (untiled) evaluation."""
+    return metric_scores(metric, z_mu, z_logvar, p_mu, p_logvar, wq, wk,
+                         sigma=sigma)

@@ -1,0 +1,145 @@
+"""Differentiable wrappers for the Pallas kernels.
+
+`pallas_call` has no reverse-mode autodiff rule, so the train graph uses
+these `jax.custom_vjp` wrappers:
+
+- `moe_ffn_ad`  — forward AND backward are Pallas kernels (the backward
+  recomputes gate/up activations per expert tile — rematerialization — so
+  the fwd saves only (x, w1, w3, w2), matching what a VMEM-resident TPU
+  schedule would keep).
+- `router_scores_ad` — forward is the Pallas score kernel; backward is the
+  exact VJP of the shared pure-jnp metric math (tiny: N x E x d_z with
+  d_z<=256, never a hot spot in the backward pass).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .moe_ffn import _pick_c_block, _pick_e_block, moe_ffn
+from .scores import metric_scores, router_scores
+
+
+# --------------------------------------------------------------------------
+# moe_ffn backward kernel
+# --------------------------------------------------------------------------
+
+def _swiglu_bwd_kernel(x_ref, w1_ref, w3_ref, w2_ref, dy_ref,
+                       dx_ref, dw1_ref, dw3_ref, dw2_ref):
+    """Per-(expert-block, C-tile) backward. Recomputes activations
+    (rematerialization — the fwd saves only the inputs, matching what a
+    VMEM-resident TPU schedule would keep)."""
+    x = x_ref[...]          # [Eb, Cb, d]
+    w1, w3, w2 = w1_ref[...], w3_ref[...], w2_ref[...]
+    dy = dy_ref[...]        # [Eb, Cb, d]
+
+    gate = jnp.einsum("ecd,edf->ecf", x, w1)
+    up = jnp.einsum("ecd,edf->ecf", x, w3)
+    sg = jax.nn.sigmoid(gate)
+    silu = gate * sg
+    a = silu * up
+
+    da = jnp.einsum("ecd,efd->ecf", dy, w2)
+    dsilu = sg * (1.0 + gate * (1.0 - sg))
+    dgate = da * up * dsilu
+    dup = da * silu
+
+    dx_ref[...] = (jnp.einsum("ecf,edf->ecd", dgate, w1)
+                   + jnp.einsum("ecf,edf->ecd", dup, w3))
+    # C-tiles of one expert block accumulate into the same dW block.
+    is_first = pl.program_id(1) == 0
+
+    @pl.when(is_first)
+    def _init():
+        dw1_ref[...] = jnp.zeros_like(dw1_ref[...])
+        dw3_ref[...] = jnp.zeros_like(dw3_ref[...])
+        dw2_ref[...] = jnp.zeros_like(dw2_ref[...])
+
+    dw1_ref[...] += jnp.einsum("ecd,ecf->edf", x, dgate)
+    dw3_ref[...] += jnp.einsum("ecd,ecf->edf", x, dup)
+    dw2_ref[...] += jnp.einsum("ecf,ecd->efd", a, dy)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("c_block", "e_block", "interpret"))
+def moe_ffn_bwd(x, w1, w3, w2, dy, *, c_block: int | None = None,
+                e_block: int | None = None, interpret: bool = True):
+    e, c, d = x.shape
+    f = w1.shape[-1]
+    cb = _pick_c_block(c, c_block)
+    eb = _pick_e_block(e, e_block)
+    grid = (e // eb, c // cb)
+    out_shapes = (
+        jax.ShapeDtypeStruct((e, c, d), x.dtype),
+        jax.ShapeDtypeStruct((e, d, f), w1.dtype),
+        jax.ShapeDtypeStruct((e, d, f), w3.dtype),
+        jax.ShapeDtypeStruct((e, f, d), w2.dtype),
+    )
+    return pl.pallas_call(
+        _swiglu_bwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((eb, cb, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((eb, d, f), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((eb, d, f), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((eb, f, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((eb, cb, d), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((eb, cb, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((eb, d, f), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((eb, d, f), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((eb, f, d), lambda i, j: (i, 0, 0)),
+        ),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(x, w1, w3, w2, dy)
+
+
+@jax.custom_vjp
+def moe_ffn_ad(x, w1, w3, w2):
+    return moe_ffn(x, w1, w3, w2)
+
+
+def _moe_ffn_fwd(x, w1, w3, w2):
+    return moe_ffn(x, w1, w3, w2), (x, w1, w3, w2)
+
+
+def _moe_ffn_bwd(res, dy):
+    return moe_ffn_bwd(*res, dy)
+
+
+moe_ffn_ad.defvjp(_moe_ffn_fwd, _moe_ffn_bwd)
+
+
+# --------------------------------------------------------------------------
+# router_scores backward (exact VJP of the shared metric math)
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7))
+def router_scores_ad(z_mu, z_logvar, p_mu, p_logvar, wq, wk,
+                     metric: str, sigma: float):
+    return router_scores(z_mu, z_logvar, p_mu, p_logvar, wq, wk,
+                         metric=metric, sigma=sigma)
+
+
+def _scores_fwd(z_mu, z_logvar, p_mu, p_logvar, wq, wk, metric, sigma):
+    out = router_scores(z_mu, z_logvar, p_mu, p_logvar, wq, wk,
+                        metric=metric, sigma=sigma)
+    return out, (z_mu, z_logvar, p_mu, p_logvar, wq, wk)
+
+
+def _scores_bwd(metric, sigma, res, ds):
+    z_mu, z_logvar, p_mu, p_logvar, wq, wk = res
+
+    def pure(zm, zv, pm, pv, q, k):
+        return metric_scores(metric, zm, zv, pm, pv, q, k, sigma=sigma)
+
+    _, vjp = jax.vjp(pure, z_mu, z_logvar, p_mu, p_logvar, wq, wk)
+    return vjp(ds)
+
+
+router_scores_ad.defvjp(_scores_fwd, _scores_bwd)

@@ -1,0 +1,94 @@
+"""L2 substrate: transformer building blocks (RMSNorm, RoPE, GQA attention).
+
+Everything is hand-rolled on jnp (no flax/optax) so the lowered HLO has no
+framework baggage and the flat-parameter AOT contract stays simple.
+Parameters are nested dicts of jnp arrays; `init_*` functions build them,
+`*_fwd` functions apply them.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .configs import Config
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def _dense_init(key, d_in: int, d_out: int) -> jax.Array:
+    scale = 1.0 / jnp.sqrt(d_in)
+    return jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
+
+
+def rope_tables(seq_len: int, head_dim: int, theta: float):
+    """Precompute RoPE cos/sin tables [T, head_dim/2]."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    pos = jnp.arange(seq_len, dtype=jnp.float32)
+    ang = pos[:, None] * freqs[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: [B, T, H, hd] with hd even; rotate pairs (x1, x2)."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[None, :, None, :]
+    s = sin[None, :, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+
+
+def init_attention(key, cfg: Config) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    kq, kk, kv, ko, kn1, kn2 = jax.random.split(key, 6)
+    p = {
+        "wq": _dense_init(kq, d, cfg.n_heads * hd),
+        "wk": _dense_init(kk, d, cfg.n_kv_heads * hd),
+        "wv": _dense_init(kv, d, cfg.n_kv_heads * hd),
+        "wo": _dense_init(ko, cfg.n_heads * hd, d),
+    }
+    if cfg.qk_norm:  # qwen3 flavor: per-head-dim RMSNorm on q and k
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def attention_fwd(p: dict, x: jax.Array, cfg: Config,
+                  cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """Causal grouped-query attention. x: [B, T, d] -> [B, T, d]."""
+    b, t, d = x.shape
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, t, nh, hd)
+    k = (x @ p["wk"]).reshape(b, t, nkv, hd)
+    v = (x @ p["wv"]).reshape(b, t, nkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    # Expand KV heads to query heads (GQA).
+    rep = nh // nkv
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    att = jnp.einsum("bthd,bshd->bhts", q, k) / jnp.sqrt(float(hd))
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    att = jnp.where(mask[None, None], att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("bhts,bshd->bthd", att, v).reshape(b, t, nh * hd)
+    return out @ p["wo"]
+
+
+def init_dense_ffn(key, d_model: int, d_ff: int) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w1": _dense_init(k1, d_model, d_ff),
+        "w3": _dense_init(k2, d_model, d_ff),
+        "w2": _dense_init(k3, d_ff, d_model),
+    }
+
+
+def dense_ffn_fwd(p: dict, x: jax.Array) -> jax.Array:
+    """SwiGLU FFN (used for DeepSeek-style shared experts)."""
+    return (jax.nn.silu(x @ p["w1"]) * (x @ p["w3"])) @ p["w2"]

@@ -1,0 +1,98 @@
+"""L2: MoE transformer language model (Qwen3 / DeepSeek / Mixtral flavors).
+
+Tiny-scale mirrors of the paper's three 0.6B baselines (Appendix A):
+every layer is pre-norm attention + MoE FFN; flavor differences:
+  - qwen3:    GQA with qk-norm, aux-loss vanilla router (or LPR)
+  - deepseek: shared experts + aux-free bias router (or LPR)
+  - mixtral:  plain GQA, aux-loss vanilla router (or LPR)
+The model returns the LM loss plus everything the paper's evaluation
+needs: per-layer expert load histograms, the individual router losses and
+the drop fraction of the capacity-binned dispatch.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import Config
+from .layers import (attention_fwd, init_attention, rms_norm, rope_tables)
+from .moe import init_moe_layer, moe_layer_fwd
+
+
+class ModelOut(NamedTuple):
+    loss: jax.Array                 # scalar LM cross-entropy
+    load: jax.Array                 # [L, E] per-layer expert loads
+    losses: Dict[str, jax.Array]    # router loss components (mean over L)
+    drop_frac: jax.Array            # scalar, mean over layers
+    updates: list                   # per-layer non-gradient update dicts
+
+
+def init_params(key, cfg: Config) -> dict:
+    kemb, *kl = jax.random.split(key, 1 + cfg.n_layers)
+    params = {
+        "embed": jax.random.normal(
+            kemb, (cfg.vocab, cfg.d_model), jnp.float32) * 0.02,
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "layers": [],
+    }
+    for i in range(cfg.n_layers):
+        ka, km = jax.random.split(kl[i])
+        params["layers"].append({
+            "attn_norm": jnp.ones((cfg.d_model,), jnp.float32),
+            "attn": init_attention(ka, cfg),
+            "ffn_norm": jnp.ones((cfg.d_model,), jnp.float32),
+            "moe": init_moe_layer(km, cfg),
+        })
+    return params
+
+
+def forward(params: dict, tokens: jax.Array, targets: jax.Array,
+            cfg: Config, rng=None, train: bool = True) -> ModelOut:
+    """tokens/targets: [B, T] int32. Next-token cross-entropy loss."""
+    b, t = tokens.shape
+    cos, sin = rope_tables(t, cfg.head_dim, cfg.rope_theta)
+    h = params["embed"][tokens]                      # [B, T, d]
+
+    loads, updates = [], []
+    acc = {"div": 0.0, "align": 0.0, "kl": 0.0, "aux": 0.0}
+    drop = 0.0
+    for i, lp in enumerate(params["layers"]):
+        a = attention_fwd(lp["attn"], rms_norm(h, lp["attn_norm"]), cfg,
+                          cos, sin)
+        h = h + a
+        hn = rms_norm(h, lp["ffn_norm"]).reshape(b * t, cfg.d_model)
+        lrng = None if rng is None else jax.random.fold_in(rng, i)
+        y, rout, stats = moe_layer_fwd(lp["moe"], hn, cfg, lrng, train)
+        h = h + y.reshape(b, t, cfg.d_model)
+        loads.append(rout.load)
+        updates.append(rout.updates)
+        for k in acc:
+            acc[k] = acc[k] + rout.losses[k]
+        drop = drop + stats["drop_frac"]
+
+    h = rms_norm(h, params["final_norm"])
+    logits = h @ params["embed"].T                   # tied embeddings
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    loss = jnp.mean(nll)
+
+    nl = float(cfg.n_layers)
+    losses = {k: v / nl for k, v in acc.items()}
+    return ModelOut(loss, jnp.stack(loads), losses, drop / nl, updates)
+
+
+def total_loss(params: dict, tokens, targets, cfg: Config, rng,
+               lw: jax.Array) -> Tuple[jax.Array, ModelOut]:
+    """Paper eq.24: L = L_task + beta_rs(b1*div + b2*align + b3*kl) [+ aux].
+
+    `lw` is the runtime loss-weight vector (configs.LOSS_WEIGHTS layout),
+    so ablations over weights reuse one compiled artifact.
+    """
+    out = forward(params, tokens, targets, cfg, rng, train=True)
+    reg = lw[0] * (lw[1] * out.losses["div"]
+                   + lw[2] * out.losses["align"]
+                   + lw[3] * out.losses["kl"])
+    aux = lw[4] * out.losses["aux"]
+    return out.loss + reg + aux, out

@@ -1,0 +1,96 @@
+"""L2: MoE layer — capacity-binned dispatch/combine around the L1 kernel.
+
+GShard-style dense capacity binning: each expert owns a fixed-size bin of
+C = ceil(N*k/E * capacity_factor) token slots. Dispatch is a scatter-add
+into [E*C, d] (linear in N*k — no [N,E,C] one-hot blow-up), the expert
+SwiGLU runs as the Pallas `moe_ffn` kernel over the dense [E, C, d]
+tensor, and combine gathers back with the router's top-k weights.
+
+Tokens that overflow an expert's bin are DROPPED (contribute zero), and
+the drop fraction is reported — this is precisely the paper's
+hardware-software-mismatch cost of imbalanced routing, made visible in
+the training metrics; the Rust dispatch simulator models the same
+mechanism at serving time.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import Config
+from .kernels.vjp import moe_ffn_ad
+from .layers import _dense_init, dense_ffn_fwd, init_dense_ffn
+from .routers import RouterOut, init_router, router_fwd
+
+
+def init_moe_layer(key, cfg: Config) -> dict:
+    kr, k1, k3, k2, ks = jax.random.split(key, 5)
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.moe_d_ff
+    # One fused normal draw per stacked-expert tensor: a per-expert
+    # jax.random.split loop emits E independent threefry subgraphs, which
+    # blows XLA compile time up by minutes at E=64+ (measured: the init
+    # module was the only artifact with pathological compile latency).
+    def stack_init(k, d_in, d_out):
+        w = jax.random.normal(k, (e, d_in, d_out), jnp.float32)
+        return w / jnp.sqrt(float(d_in))
+
+    p = {
+        "router": init_router(kr, cfg),
+        "w1": stack_init(k1, d, f),
+        "w3": stack_init(k3, d, f),
+        "w2": stack_init(k2, f, d),
+    }
+    if cfg.n_shared_experts > 0:  # DeepSeek flavor: always-on experts
+        p["shared"] = init_dense_ffn(ks, d, f * cfg.n_shared_experts)
+    return p
+
+
+def dispatch_combine(h: jax.Array, rout: RouterOut, cfg: Config,
+                     w1, w3, w2) -> Tuple[jax.Array, jax.Array]:
+    """Scatter tokens into capacity bins, run experts, gather back.
+
+    h: [N, d]. Returns (y [N, d], drop_frac scalar).
+    """
+    n, d = h.shape
+    e, k, c = cfg.n_experts, cfg.top_k, cfg.capacity
+
+    flat_e = rout.topk_idx.reshape(-1)                     # [N*k]
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.float32)  # [N*k, E]
+    # Rank of each (token, slot) within its expert queue (arrival order).
+    # associative_scan, NOT jnp.cumsum: xla_extension 0.5.1 (the rust
+    # runtime's XLA) lowers cumsum to an O(N^2) reduce_window on CPU —
+    # measured 4.6 s for this [8192, 64] scan vs 3.5 ms for the
+    # log-depth scan (EXPERIMENTS.md §Perf). The scan is detached:
+    # arrival ranks are discrete routing metadata, not a gradient path
+    # (combine weights carry the router gradient), and detaching keeps
+    # the backward pass free of the reversed scan.
+    running = jax.lax.stop_gradient(
+        jax.lax.associative_scan(jnp.add, onehot, axis=0))
+    pos = jnp.sum((running - 1.0) * onehot, axis=-1)
+    pos = pos.astype(jnp.int32)
+    valid = (pos < c).astype(h.dtype)                      # [N*k]
+    dest = flat_e * c + jnp.minimum(pos, c - 1)            # [N*k]
+
+    h_rep = jnp.repeat(h, k, axis=0)                       # [N*k, d]
+    disp = jnp.zeros((e * c, d), h.dtype).at[dest].add(
+        h_rep * valid[:, None], mode="drop")
+    expert_out = moe_ffn_ad(disp.reshape(e, c, d), w1, w3, w2)
+    gathered = expert_out.reshape(e * c, d)[dest]          # [N*k, d]
+
+    w = rout.combine_w.reshape(-1) * valid                 # [N*k]
+    y = jnp.sum((gathered * w[:, None]).reshape(n, k, d), axis=1)
+    drop_frac = 1.0 - jnp.sum(valid) / (n * k)
+    return y, drop_frac
+
+
+def moe_layer_fwd(p: dict, h: jax.Array, cfg: Config, rng=None,
+                  train: bool = True
+                  ) -> Tuple[jax.Array, RouterOut, Dict[str, jax.Array]]:
+    """h: [N, d] (token-flattened). Returns (y, router_out, stats)."""
+    rout = router_fwd(p["router"], h, cfg, rng, train)
+    y, drop_frac = dispatch_combine(h, rout, cfg, p["w1"], p["w3"], p["w2"])
+    if "shared" in p:
+        y = y + dense_ffn_fwd(p["shared"], h)
+    return y, rout, {"drop_frac": drop_frac}

@@ -1,0 +1,267 @@
+"""L2: the routing contribution — vanilla, DeepSeek aux-free, and LPR.
+
+Implements the paper §2.3 (vanilla top-k router with auxiliary
+load-balance loss), the DeepSeek-V3 auxiliary-loss-free bias-correction
+router [Wang et al. 2024], and the paper's §2.4 Latent Prototype Router:
+
+  R(x) = D(E(x), P)
+
+with a (variational) non-linear encoder `E` into a low-dim latent space,
+expert prototypes `P` (optionally hypersphere-initialized and unit-ball
+constrained), the full §2.4.1 metric library `D` (computed by the L1
+Pallas kernel), and the three LPR regularizers (KL eq.13, diversity
+eq.14, alignment eq.15-17) plus the non-gradient EMA prototype update.
+
+All routers share one return contract (`RouterOut`) so the MoE layer and
+the train step are router-agnostic. Non-gradient state updates (DeepSeek
+bias, LPR EMA) are returned as *proposals* and applied by train.py after
+the optimizer step, bypassing Adam.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .configs import Config
+from .kernels.vjp import router_scores_ad
+from .layers import _dense_init, rms_norm
+
+_EPS = 1e-9
+
+
+class RouterOut(NamedTuple):
+    topk_idx: jax.Array       # [N, k] int32 expert ids
+    combine_w: jax.Array      # [N, k] f32 combine weights (sum<=1)
+    scores: jax.Array         # [N, E] raw scores
+    load: jax.Array           # [E] f32 assignment counts
+    losses: Dict[str, jax.Array]   # div/align/kl/aux scalars
+    updates: Dict[str, jax.Array]  # non-gradient param update proposals
+
+
+def manual_top_k(scores: jax.Array, k: int):
+    """Iterative-argmax top-k.
+
+    Functionally identical to `jax.lax.top_k` (descending values, ties
+    broken toward the lower index) but lowers to plain argmax/select HLO:
+    jax >= 0.7 emits a `topk(..., largest=true)` HLO instruction that the
+    xla_extension 0.5.1 text parser (the version the rust `xla` crate
+    binds) rejects. k is <= 8 everywhere in the paper, so the k-step scan
+    costs k reduces — negligible against the expert FFN.
+    """
+    s = scores
+    idxs, vals = [], []
+    for _ in range(k):
+        i = jnp.argmax(s, axis=-1)
+        v = jnp.take_along_axis(s, i[..., None], axis=-1)[..., 0]
+        idxs.append(i.astype(jnp.int32))
+        vals.append(v)
+        mask = jax.nn.one_hot(i, s.shape[-1], dtype=jnp.bool_)
+        s = jnp.where(mask, -jnp.inf, s)
+    return jnp.stack(vals, -1), jnp.stack(idxs, -1)
+
+
+def _topk_softmax(scores: jax.Array, k: int):
+    """Paper eq.6: softmax over the selected top-k scores only."""
+    top_s, top_i = manual_top_k(scores, k)
+    w = jax.nn.softmax(top_s, axis=-1)
+    return top_i, w
+
+
+def _load_counts(topk_idx: jax.Array, n_experts: int) -> jax.Array:
+    onehot = jax.nn.one_hot(topk_idx, n_experts, dtype=jnp.float32)
+    return jnp.sum(onehot, axis=(0, 1))
+
+
+# --------------------------------------------------------------------------
+# Vanilla router (Qwen3MoE / Mixtral baseline): linear keys + top-k softmax
+# + Switch-style auxiliary load-balance loss.
+# --------------------------------------------------------------------------
+
+def init_vanilla(key, cfg: Config) -> dict:
+    return {"wg": _dense_init(key, cfg.d_model, cfg.n_experts)}
+
+
+def vanilla_fwd(p: dict, h: jax.Array, cfg: Config, rng=None,
+                train: bool = True) -> RouterOut:
+    del rng, train
+    n, _ = h.shape
+    e, k = cfg.n_experts, cfg.top_k
+    scores = h @ p["wg"]                                  # [N, E] logits
+    probs = jax.nn.softmax(scores, axis=-1)
+    topk_idx, combine_w = _topk_softmax(scores, k)
+    load = _load_counts(topk_idx, e)
+    # Switch/GShard aux loss: E * sum_e f_e * P_e  (1.0 at perfect balance)
+    f = load / (n * k)
+    pbar = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(f * pbar)
+    zeros = jnp.zeros((), jnp.float32)
+    return RouterOut(topk_idx, combine_w, scores, load,
+                     {"div": zeros, "align": zeros, "kl": zeros, "aux": aux},
+                     {})
+
+
+# --------------------------------------------------------------------------
+# DeepSeek-V3 auxiliary-loss-free router: sigmoid affinities, a per-expert
+# selection bias that is nudged (non-gradient) toward balance.
+# --------------------------------------------------------------------------
+
+def init_deepseek(key, cfg: Config) -> dict:
+    return {
+        "wg": _dense_init(key, cfg.d_model, cfg.n_experts),
+        "bias": jnp.zeros((cfg.n_experts,), jnp.float32),
+    }
+
+
+def deepseek_fwd(p: dict, h: jax.Array, cfg: Config, rng=None,
+                 train: bool = True) -> RouterOut:
+    del rng
+    n, _ = h.shape
+    e, k = cfg.n_experts, cfg.top_k
+    s = jax.nn.sigmoid(h @ p["wg"])                       # [N, E] affinities
+    # Bias enters SELECTION only; combine weights come from raw affinities.
+    sel = s + p["bias"][None, :]
+    _, topk_idx = manual_top_k(sel, k)
+    top_s = jnp.take_along_axis(s, topk_idx, axis=-1)
+    combine_w = top_s / (jnp.sum(top_s, axis=-1, keepdims=True) + _EPS)
+    load = _load_counts(topk_idx, e)
+    # Non-gradient bias update proposal: push underloaded experts up.
+    # b_e += u * sign(mean_load - load_e); u is a runtime loss weight.
+    err = jnp.mean(load) - load
+    zeros = jnp.zeros((), jnp.float32)
+    return RouterOut(topk_idx, combine_w, s, load,
+                     {"div": zeros, "align": zeros, "kl": zeros,
+                      "aux": zeros},
+                     {"bias_delta": jnp.sign(err)})
+
+
+# --------------------------------------------------------------------------
+# Latent Prototype Router (the paper's contribution).
+# --------------------------------------------------------------------------
+
+def init_lpr(key, cfg: Config) -> dict:
+    dz = cfg.latent_dim
+    ke, km, kv, kp, kq, kk2 = jax.random.split(key, 6)
+    p = {
+        "norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "w_mu": _dense_init(km, cfg.d_model, dz),
+        "b_mu": jnp.zeros((dz,), jnp.float32),
+        # logvar head starts near sigma ~ exp(-2) so early routing is
+        # mean-driven but the variational path is live from step 0.
+        "w_lv": _dense_init(kv, cfg.d_model, dz) * 0.1,
+        "b_lv": jnp.full((dz,), -4.0, jnp.float32),
+    }
+    proto = jax.random.normal(kp, (cfg.n_experts, dz), jnp.float32)
+    if cfg.hypersphere_init:
+        # Hyperspherical init (§2.4): uniform-on-sphere prototypes give
+        # unbiased early routing.
+        proto = proto / (jnp.linalg.norm(proto, axis=-1, keepdims=True)
+                         + _EPS)
+    else:
+        proto = proto / jnp.sqrt(float(dz))
+    p["proto_mu"] = proto
+    p["proto_lv"] = jnp.full((cfg.n_experts, dz), -2.0, jnp.float32)
+    if cfg.metric == "xattn":
+        h, dh = cfg.n_score_heads, max(1, dz // cfg.n_score_heads)
+        p["wq"] = jax.random.normal(kq, (h, dz, dh)) / jnp.sqrt(float(dz))
+        p["wk"] = jax.random.normal(kk2, (h, dz, dh)) / jnp.sqrt(float(dz))
+    del ke
+    return p
+
+
+def encode(p: dict, h: jax.Array):
+    """Paper eq.10-12: a = SiLU(Norm(x)); variational heads (mu, logvar)."""
+    a = jax.nn.silu(rms_norm(h, p["norm"]))
+    mu = a @ p["w_mu"] + p["b_mu"]
+    logvar = jnp.clip(a @ p["w_lv"] + p["b_lv"], -8.0, 4.0)
+    return mu, logvar
+
+
+def diversity_loss(kind: str, proto: jax.Array) -> jax.Array:
+    """Paper eq.14 + Table 6 variants, on the prototype matrix [E, dz]."""
+    e = proto.shape[0]
+    if kind == "none":
+        return jnp.zeros((), jnp.float32)
+    pn = proto / (jnp.linalg.norm(proto, axis=-1, keepdims=True) + _EPS)
+    if kind == "orthogonal":
+        g = pn @ pn.T
+        return jnp.sum((g - jnp.eye(e)) ** 2) / (e * e)
+    if kind == "cosine":
+        g = jnp.abs(pn @ pn.T) - jnp.eye(e)
+        return jnp.sum(jnp.maximum(g, 0.0)) / (e * (e - 1))
+    if kind == "euclidean":
+        # Pairwise repulsion hinge: penalize prototypes closer than margin.
+        d2 = jnp.sum((proto[:, None, :] - proto[None, :, :]) ** 2, -1)
+        margin = 1.0
+        hinge = jnp.maximum(margin - jnp.sqrt(d2 + _EPS), 0.0) ** 2
+        off = 1.0 - jnp.eye(e)
+        return jnp.sum(hinge * off) / (e * (e - 1))
+    raise ValueError(kind)
+
+
+def lpr_fwd(p: dict, h: jax.Array, cfg: Config, rng=None,
+            train: bool = True) -> RouterOut:
+    n, _ = h.shape
+    e, k, dz = cfg.n_experts, cfg.top_k, cfg.latent_dim
+
+    mu, logvar = encode(p, h)
+    if cfg.variational and train and rng is not None:
+        eps = jax.random.normal(rng, mu.shape, mu.dtype)
+        z = mu + jnp.exp(0.5 * logvar) * eps
+    else:
+        z = mu
+
+    proto_mu, proto_lv = p["proto_mu"], p["proto_lv"]
+    if cfg.unit_ball:
+        # Project prototypes into the unit ball (Appendix A).
+        norm = jnp.linalg.norm(proto_mu, axis=-1, keepdims=True)
+        proto_mu = proto_mu / jnp.maximum(norm, 1.0)
+
+    wq, wk = p.get("wq"), p.get("wk")
+    scores = router_scores_ad(z, logvar, proto_mu, proto_lv, wq, wk,
+                              cfg.metric, cfg.gaussian_sigma)
+
+    topk_idx, combine_w = _topk_softmax(scores, k)
+    load = _load_counts(topk_idx, e)
+
+    # --- LPR losses -----------------------------------------------------
+    # KL eq.13 against N(0, I), mean over tokens.
+    kl = 0.5 * jnp.sum(mu**2 + jnp.exp(logvar) - logvar - 1.0, -1)
+    l_kl = jnp.mean(kl)
+    # Alignment eq.15-17: prototypes chase the (detached) token latents.
+    probs = jax.nn.softmax(scores, axis=-1)
+    k_agg = probs @ proto_mu
+    l_align = jnp.mean(
+        jnp.sum((jax.lax.stop_gradient(z) - k_agg) ** 2, -1))
+    # Diversity eq.14 on the prototypes.
+    l_div = diversity_loss(cfg.diversity, p["proto_mu"])
+
+    # --- EMA prototype adaptation proposal (hard assignment version) ----
+    zd = jax.lax.stop_gradient(z)
+    assign = jnp.sum(jax.nn.one_hot(topk_idx, e, dtype=zd.dtype), axis=1)
+    z_sum = assign.T @ zd                                  # [E, dz]
+    cnt = jnp.sum(assign, axis=0)[:, None]                 # [E, 1]
+    z_mean = z_sum / jnp.maximum(cnt, 1.0)
+    # Where an expert received no tokens, keep its prototype.
+    ema_target = jnp.where(cnt > 0, z_mean, p["proto_mu"])
+
+    zeros = jnp.zeros((), jnp.float32)
+    return RouterOut(topk_idx, combine_w, scores, load,
+                     {"div": l_div, "align": l_align, "kl": l_kl,
+                      "aux": zeros},
+                     {"ema_target": ema_target})
+
+
+INIT = {"vanilla": init_vanilla, "deepseek": init_deepseek, "lpr": init_lpr}
+FWD = {"vanilla": vanilla_fwd, "deepseek": deepseek_fwd, "lpr": lpr_fwd}
+
+
+def init_router(key, cfg: Config) -> dict:
+    return INIT[cfg.router](key, cfg)
+
+
+def router_fwd(p: dict, h: jax.Array, cfg: Config,
+               rng: Optional[jax.Array] = None,
+               train: bool = True) -> RouterOut:
+    return FWD[cfg.router](p, h, cfg, rng, train)

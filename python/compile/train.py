@@ -1,0 +1,134 @@
+"""L2: training step — AdamW + warmup-stable-decay LR, grad clipping, and
+the non-gradient router updates (DeepSeek bias correction, LPR EMA).
+
+The whole update is ONE jitted function so the AOT artifact contains the
+entire training step; the Rust coordinator only shuttles device buffers.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import Config
+from .model import init_params, forward, total_loss
+
+# Names (and order) of the scalar metrics vector returned by train_step.
+METRIC_NAMES = [
+    "loss", "total_loss", "div", "align", "kl", "aux",
+    "drop_frac", "grad_norm", "lr",
+]
+
+
+def wsd_lr(step: jax.Array, cfg: Config) -> jax.Array:
+    """Warmup-stable-decay schedule (paper §3.1): 5% linear warmup,
+    stable plateau, cosine decay to min_lr_ratio over the final span."""
+    t = step.astype(jnp.float32)
+    total = float(cfg.total_steps)
+    warm = jnp.maximum(total * cfg.warmup_frac, 1.0)
+    stable_end = total * (cfg.warmup_frac + cfg.stable_frac)
+    decay_span = jnp.maximum(total - stable_end, 1.0)
+
+    warm_lr = t / warm
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * jnp.clip(
+        (t - stable_end) / decay_span, 0.0, 1.0)))
+    decay_lr = cfg.min_lr_ratio + (1.0 - cfg.min_lr_ratio) * cos
+    frac = jnp.where(t < warm, warm_lr, jnp.where(t < stable_end, 1.0,
+                                                  decay_lr))
+    return cfg.lr * frac
+
+
+def _decay_mask(params):
+    """Weight decay on matrices/stacked-expert tensors only (ndim >= 2)."""
+    return jax.tree.map(lambda p: float(p.ndim >= 2), params)
+
+
+def init_state(key, cfg: Config):
+    """(params, m, v) — Adam first/second moments zero-initialized."""
+    params = init_params(key, cfg)
+    m = jax.tree.map(jnp.zeros_like, params)
+    v = jax.tree.map(jnp.zeros_like, params)
+    return params, m, v
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gnorm
+
+
+def _apply_router_updates(params, updates, lw, cfg: Config):
+    """Non-gradient updates, applied AFTER Adam (they bypass momentum):
+    - DeepSeek aux-free bias: b += u * sign(mean_load - load)
+    - LPR EMA prototype adaptation: mu <- (1-a)*mu + a*batch_mean(z)
+    """
+    for i, upd in enumerate(updates):
+        router = params["layers"][i]["moe"]["router"]
+        if "bias_delta" in upd:
+            router["bias"] = router["bias"] + lw[5] * upd["bias_delta"]
+        if "ema_target" in upd:
+            alpha = lw[6]
+            router["proto_mu"] = ((1.0 - alpha) * router["proto_mu"]
+                                  + alpha * upd["ema_target"])
+    return params
+
+
+def train_step(params, m, v, step, lw, tokens, targets, cfg: Config):
+    """One fused optimization step.
+
+    Returns (params', m', v', metrics f32[len(METRIC_NAMES)], load [L,E]).
+    """
+    rng = jax.random.fold_in(jax.random.PRNGKey(20250711), step)
+
+    (tl, out), grads = jax.value_and_grad(total_loss, has_aux=True)(
+        params, tokens, targets, cfg, rng, lw)
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+
+    lr = wsd_lr(step, cfg)
+    t = (step + 1).astype(jnp.float32)
+    b1, b2 = cfg.adam_b1, cfg.adam_b2
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+    wd_mask = _decay_mask(params)
+
+    def upd(p, g, mi, vi, dm):
+        mi = b1 * mi + (1.0 - b1) * g
+        vi = b2 * vi + (1.0 - b2) * g * g
+        mhat = mi / bc1
+        vhat = vi / bc2
+        p = p - lr * (mhat / (jnp.sqrt(vhat) + 1e-8)
+                      + cfg.weight_decay * dm * p)
+        return p, mi, vi
+
+    flat = jax.tree.map(upd, params, grads, m, v, wd_mask)
+    params = jax.tree.map(lambda x: x[0], flat,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    m = jax.tree.map(lambda x: x[1], flat,
+                     is_leaf=lambda x: isinstance(x, tuple))
+    v = jax.tree.map(lambda x: x[2], flat,
+                     is_leaf=lambda x: isinstance(x, tuple))
+
+    params = _apply_router_updates(params, out.updates, lw, cfg)
+
+    metrics = jnp.stack([
+        out.loss, tl, out.losses["div"], out.losses["align"],
+        out.losses["kl"], out.losses["aux"], out.drop_frac, gnorm, lr,
+    ])
+    return params, m, v, metrics, out.load
+
+
+def eval_step(params, tokens, targets, cfg: Config):
+    """Deterministic evaluation (mean latents, no reparam noise)."""
+    out = forward(params, tokens, targets, cfg, rng=None, train=False)
+    metrics = jnp.stack([out.loss, out.drop_frac])
+    return metrics, out.load
+
+
+def router_only(params, h, cfg: Config):
+    """Standalone router pass for the Rust dispatch simulator / fig.1:
+    h [N, d] -> (topk_idx [N,k], combine_w [N,k], load [E])."""
+    from .routers import router_fwd
+    rout = router_fwd(params, h, cfg, rng=None, train=False)
+    return rout.topk_idx, rout.combine_w, rout.load

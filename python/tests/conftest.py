@@ -1,0 +1,12 @@
+import os
+import sys
+
+# Tests run from python/ (see Makefile); make `compile` importable when
+# invoked from the repo root too.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from hypothesis import settings
+
+# Single-core CI-ish budget: keep hypothesis sweeps small but meaningful.
+settings.register_profile("repro", max_examples=12, deadline=None)
+settings.load_profile("repro")

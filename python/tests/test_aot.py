@@ -1,0 +1,124 @@
+"""AOT pipeline: lowering determinism, meta contract, goldens."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, configs, train
+from compile.configs import Config
+from compile.model import init_params
+
+
+@pytest.fixture(scope="module")
+def art(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    aot.main(["--out", out, "--presets", "quickstart"])
+    return out
+
+
+def test_artifact_files_exist(art):
+    for kind in ("init", "train", "eval", "router"):
+        p = os.path.join(art, f"quickstart.{kind}.hlo.txt")
+        assert os.path.exists(p) and os.path.getsize(p) > 1000, p
+    assert os.path.exists(os.path.join(art, "quickstart.meta.json"))
+    assert os.path.exists(os.path.join(art, "manifest.json"))
+
+
+def test_hlo_is_text_not_proto(art):
+    head = open(os.path.join(art, "quickstart.train.hlo.txt")).read(200)
+    assert "HloModule" in head  # textual HLO, parseable by xla 0.5.1
+
+
+def test_meta_contract(art):
+    meta = json.load(open(os.path.join(art, "quickstart.meta.json")))
+    cfg = configs.get("quickstart")
+    assert meta["n_state"] == 3 * meta["n_params"]
+    assert meta["load_shape"] == [cfg.n_layers, cfg.n_experts]
+    assert meta["batch_shape"] == [cfg.batch_size, cfg.seq_len]
+    assert len(meta["params"]) == meta["n_params"]
+    assert meta["metric_names"] == train.METRIC_NAMES
+    # declared param count equals the sum over leaf shapes
+    total = sum(int(np.prod(p["shape"])) for p in meta["params"])
+    assert total == meta["param_count"]
+    # train input list: state then step/lw/tokens/targets
+    ti = meta["train_inputs"]
+    assert ti[-4:] == ["step", "loss_weights", "tokens", "targets"]
+    assert len(ti) == meta["n_state"] + 4
+
+
+def test_flat_roundtrip_matches_pytree():
+    """The flat-signature wrappers must equal the pytree train step."""
+    cfg = Config(name="rt", d_model=32, n_experts=8, top_k=2, latent_dim=8,
+                 n_layers=1, seq_len=8, batch_size=2, vocab=64, n_heads=2,
+                 n_kv_heads=1, head_dim=16, moe_d_ff=16, total_steps=10)
+    fns = aot.build_functions(cfg)
+    key = jax.random.PRNGKey(0)
+    params, m, v = train.init_state(key, cfg)
+    lw = jnp.array(cfg.default_loss_weights(), jnp.float32)
+    tok = jax.random.randint(key, (2, 8), 0, 64)
+    tgt = jnp.roll(tok, -1, 1)
+
+    want = train.train_step(params, m, v, jnp.int32(0), lw, tok, tgt, cfg)
+    flat_in = (jax.tree_util.tree_leaves(params)
+               + jax.tree_util.tree_leaves(m)
+               + jax.tree_util.tree_leaves(v))
+    got = fns["train_fn"](*flat_in, jnp.int32(0), lw, tok, tgt)
+    np_want = jax.tree_util.tree_leaves(want)
+    assert len(got) == len(np_want)
+    for a, b in zip(got, np_want):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_init_fn_deterministic():
+    cfg = configs.get("quickstart")
+    fns = aot.build_functions(cfg)
+    a = fns["init_fn"](jnp.int32(42))
+    b = fns["init_fn"](jnp.int32(42))
+    c = fns["init_fn"](jnp.int32(7))
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    assert any(np.abs(np.asarray(x) - np.asarray(y)).max() > 0
+               for x, y in zip(a, c))
+
+
+def test_goldens_reproduce(art):
+    gdir = os.path.join(art, "goldens")
+    for fname in os.listdir(gdir):
+        if fname == "metrics.json":
+            continue
+        g = json.load(open(os.path.join(gdir, fname)))
+        cfg = Config(**g["config"])
+        key = jax.random.PRNGKey(7)
+        params = init_params(key, cfg)
+        rp = params["layers"][0]["moe"]["router"]
+        h = jnp.asarray(g["h"], jnp.float32)
+        topk, w, load = train.router_only(rp, h, cfg)
+        np.testing.assert_array_equal(np.asarray(topk),
+                                      np.asarray(g["topk_idx"]))
+        np.testing.assert_allclose(np.asarray(w), np.asarray(g["weights"]),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(load),
+                                   np.asarray(g["load"]), rtol=1e-6)
+
+
+def test_registry_presets_cover_paper_tables():
+    names = set(configs.REGISTRY)
+    for required in ("t1-qwen3", "t1-qwen3-lpr", "t1-qwen3-lpr-noinit",
+                     "t1-deepseek", "t1-deepseek-lpr", "t1-mixtral",
+                     "t1-mixtral-lpr", "ab-base", "fig1-vanilla",
+                     "fig1-lpr", "e2e-lm", "quickstart"):
+        assert required in names, required
+    assert sum(1 for n in names if n.startswith("t3-dim")) == 7
+    assert sum(1 for n in names if n.startswith("t5-")) == 5
+    assert sum(1 for n in names if n.startswith("t6-div")) == 3
+    assert sum(1 for n in names if n.startswith("t7-")) == 8
+
+
+def test_all_registry_configs_valid():
+    for name, cfg in configs.REGISTRY.items():
+        assert cfg.capacity >= 4, name
+        assert cfg.tokens_per_batch % 8 == 0, name

@@ -1,0 +1,71 @@
+"""Load-balance metric definitions (paper eq.25-26)."""
+import numpy as np
+import pytest
+from hypothesis import given
+from hypothesis import strategies as st
+
+from compile.metrics import cv, entropy_frac, gini, min_max_ratio
+
+
+def test_gini_uniform_is_zero():
+    assert gini([5.0] * 16) == pytest.approx(0.0, abs=1e-12)
+
+
+def test_gini_single_expert_takes_all():
+    # one of n experts holds all load -> gini = (n-1)/n
+    n = 8
+    load = [0.0] * (n - 1) + [10.0]
+    assert gini(load) == pytest.approx((n - 1) / n)
+
+
+def test_gini_known_value():
+    # loads 1..4: gini = sum((2i-n-1) x_i) / (n * sum) = 10/40 = 0.25
+    assert gini([1, 2, 3, 4]) == pytest.approx(0.25)
+
+
+def test_gini_scale_invariant():
+    a = [1, 5, 2, 9, 3]
+    assert gini(a) == pytest.approx(gini([x * 37.5 for x in a]))
+
+
+def test_gini_permutation_invariant():
+    a = [1, 5, 2, 9, 3]
+    assert gini(a) == pytest.approx(gini(list(reversed(a))))
+
+
+@given(st.lists(st.floats(0.0, 1e6), min_size=2, max_size=64))
+def test_gini_bounds(xs):
+    g = gini(xs)
+    assert -1e-9 <= g <= 1.0
+
+
+def test_min_max_uniform():
+    assert min_max_ratio([3.0] * 4) == pytest.approx(1.0, rel=1e-6)
+
+
+def test_min_max_starved_expert():
+    assert min_max_ratio([0.0, 10.0]) == pytest.approx(0.0, abs=1e-9)
+
+
+@given(st.lists(st.floats(0.001, 1e3), min_size=2, max_size=64))
+def test_min_max_bounds(xs):
+    r = min_max_ratio(xs)
+    assert 0.0 <= r <= 1.0 + 1e-9
+
+
+def test_entropy_uniform_is_one():
+    assert entropy_frac([2.0] * 32) == pytest.approx(1.0, rel=1e-9)
+
+
+def test_cv_uniform_is_zero():
+    assert cv([7.0] * 5) == pytest.approx(0.0, abs=1e-9)
+
+
+def test_imbalance_orders_consistently():
+    """All four metrics must order a balanced load before a skewed one."""
+    balanced = [10.0] * 8
+    skewed = [1.0] * 7 + [93.0]
+    assert gini(balanced) < gini(skewed)
+    assert min_max_ratio(balanced) > min_max_ratio(skewed)
+    assert entropy_frac(balanced) > entropy_frac(skewed)
+    assert cv(balanced) < cv(skewed)

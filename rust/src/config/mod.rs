@@ -1,0 +1,216 @@
+//! Experiment run specifications and the single-run executor.
+//!
+//! A `RunSpec` names an AOT artifact (preset from
+//! `python/compile/configs.py`), optional loss-weight patches (how the
+//! Table 2/4 ablations reuse one compiled artifact) and run length;
+//! `execute_run` trains it on the synthetic corpus, evaluates on a
+//! held-out stream and returns the paper's headline numbers
+//! (test loss, Gini, min-max).
+
+use anyhow::{Context, Result};
+use std::path::Path;
+use std::time::Instant;
+
+use crate::coordinator::Trainer;
+use crate::data::ZipfMarkovCorpus;
+use crate::metrics::LoadMatrix;
+use crate::runtime::{CompiledArtifacts, Runtime};
+
+#[derive(Debug, Clone)]
+pub struct RunSpec {
+    /// Row label in the report (mirrors the paper's table rows).
+    pub label: String,
+    /// Artifact preset name under `artifacts/`.
+    pub artifact: String,
+    /// Override the config's total_steps (None = use config).
+    pub steps: Option<usize>,
+    /// Data / init seed.
+    pub seed: i32,
+    /// (index, value) patches over the meta's default loss weights.
+    pub lw_patch: Vec<(usize, f32)>,
+    /// Held-out batches for the final evaluation.
+    pub eval_batches: usize,
+}
+
+impl RunSpec {
+    pub fn new(label: &str, artifact: &str) -> Self {
+        RunSpec {
+            label: label.to_string(),
+            artifact: artifact.to_string(),
+            steps: None,
+            seed: 0,
+            lw_patch: Vec::new(),
+            eval_batches: 8,
+        }
+    }
+
+    pub fn steps(mut self, n: usize) -> Self {
+        self.steps = Some(n);
+        self
+    }
+
+    pub fn patch(mut self, idx: usize, value: f32) -> Self {
+        self.lw_patch.push((idx, value));
+        self
+    }
+}
+
+/// Everything a table row needs, plus curves for the figures.
+#[derive(Debug)]
+pub struct RunSummary {
+    pub label: String,
+    pub artifact: String,
+    pub steps: usize,
+    pub train_loss_final: f64,
+    pub test_loss: f64,
+    /// Mean per-layer Gini / min-max of the *held-out* load distribution
+    /// (the paper evaluates balance on the validation set).
+    pub gini: f64,
+    pub min_max: f64,
+    pub drop_frac: f64,
+    pub eval_load: LoadMatrix,
+    pub train_load: LoadMatrix,
+    /// Per-step training loss (figure 3 input).
+    pub loss_curve: Vec<f32>,
+    /// Mean top-1 combine weight on held-out tokens (specialization
+    /// proxy for figure 4; see EXPERIMENTS.md).
+    pub top1_confidence: f64,
+    pub wall_s: f64,
+    pub steps_per_s: f64,
+}
+
+/// Train + evaluate one spec. Separate corpora seeds keep eval held out.
+pub fn execute_run(
+    rt: &Runtime,
+    art_dir: &Path,
+    spec: &RunSpec,
+    verbose: bool,
+) -> Result<RunSummary> {
+    let arts = CompiledArtifacts::load(rt, art_dir, &spec.artifact)
+        .with_context(|| format!("artifact '{}'", spec.artifact))?;
+    execute_run_arts(rt, &arts, spec, verbose)
+}
+
+/// Like [`execute_run`] but reuses an already-compiled artifact set
+/// (the Reporter caches compiles: tables 2/4 and fig.4 re-run `ab-base`
+/// nine times with different runtime loss weights).
+pub fn execute_run_arts(
+    rt: &Runtime,
+    arts: &CompiledArtifacts,
+    spec: &RunSpec,
+    verbose: bool,
+) -> Result<RunSummary> {
+    let meta = arts.meta.clone();
+    let steps = spec.steps.unwrap_or(meta.config.total_steps);
+
+    let mut lw = meta.default_loss_weights.clone();
+    for &(i, v) in &spec.lw_patch {
+        lw[i] = v;
+    }
+
+    let mut trainer = Trainer::new(rt, arts, spec.seed, Some(lw))?;
+    let mut corpus = ZipfMarkovCorpus::standard(
+        meta.config.vocab,
+        1000 + spec.seed as u64,
+    );
+
+    let t0 = Instant::now();
+    let loss_idx = meta.metric_idx("loss");
+    let mut loss_curve = Vec::with_capacity(steps);
+    trainer.train_synthetic(&mut corpus, steps, |m| {
+        loss_curve.push(m.values[loss_idx]);
+        if verbose && (m.step % 50 == 0 || m.step + 1 == steps) {
+            eprintln!(
+                "  [{}] step {:>4}/{steps} loss {:.4}",
+                spec.label, m.step, m.values[loss_idx]
+            );
+        }
+    })?;
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    // Held-out evaluation: same corpus law, disjoint sample stream.
+    let mut eval_corpus = ZipfMarkovCorpus::held_out(
+        meta.config.vocab,
+        1000 + spec.seed as u64,
+        900_000 + spec.seed as u64,
+    );
+    let eval = trainer.evaluate(&mut eval_corpus, spec.eval_batches)?;
+
+    // Specialization proxy: run the standalone router artifact on the
+    // trained router params with cluster-structured inputs.
+    let top1 = router_top1_confidence(rt, arts, &trainer)
+        .unwrap_or(f64::NAN);
+
+    Ok(RunSummary {
+        label: spec.label.clone(),
+        artifact: spec.artifact.clone(),
+        steps,
+        train_loss_final: *loss_curve.last().unwrap_or(&f32::NAN) as f64,
+        test_loss: eval.loss,
+        gini: eval.load.mean_gini(),
+        min_max: eval.load.mean_min_max(),
+        drop_frac: eval.drop_frac,
+        eval_load: eval.load,
+        train_load: trainer.load.clone(),
+        loss_curve,
+        top1_confidence: top1,
+        wall_s,
+        steps_per_s: steps as f64 / wall_s.max(1e-9),
+    })
+}
+
+/// Extract layer-0 router params from the trained state and run the
+/// router-only executable on synthetic clusterable activations; returns
+/// the mean top-1 combine weight (1/k = undecided, 1.0 = fully
+/// specialized routing).
+pub fn router_top1_confidence(
+    rt: &Runtime,
+    arts: &CompiledArtifacts,
+    trainer: &Trainer,
+) -> Result<f64> {
+    let meta = &arts.meta;
+    let host = trainer.params_to_host()?;
+    let prefix = "['layers'][0]['moe']['router']";
+
+    let mut router_bufs = Vec::new();
+    for rp in &meta.router_params {
+        let full = format!("{prefix}{}", rp.path);
+        let idx = meta
+            .params
+            .iter()
+            .position(|p| p.path == full)
+            .with_context(|| format!("router leaf {full} not in params"))?;
+        router_bufs.push(rt.buf_f32(&host[idx], &meta.params[idx].shape)?);
+    }
+
+    // Cluster-structured inputs: a Gaussian mixture with E/4 centers —
+    // the clusterability assumption of §2.2.1.
+    let n = meta.config.tokens_per_batch();
+    let d = meta.config.d_model;
+    let mut rng = crate::util::rng::Rng::new(4242);
+    let n_centers = (meta.config.n_experts / 4).max(2);
+    let centers: Vec<f32> = (0..n_centers * d)
+        .map(|_| rng.normal() as f32)
+        .collect();
+    let mut h = vec![0.0f32; n * d];
+    for t in 0..n {
+        let c = rng.below(n_centers);
+        for j in 0..d {
+            h[t * d + j] =
+                centers[c * d + j] + 0.3 * rng.normal() as f32;
+        }
+    }
+    let h_buf = rt.buf_f32(&h, &[n, d])?;
+    let mut args: Vec<&xla::PjRtBuffer> = router_bufs.iter().collect();
+    args.push(&h_buf);
+    let outs = crate::runtime::execute_buffers(&arts.router, &args)?;
+    // outputs: topk_idx [N,k] i32, weights [N,k] f32, load [E] f32
+    let weights = rt.to_f32(&outs[1])?;
+    let k = meta.config.top_k;
+    let mut sum = 0.0f64;
+    for t in 0..n {
+        let row = &weights[t * k..(t + 1) * k];
+        sum += row.iter().cloned().fold(f32::MIN, f32::max) as f64;
+    }
+    Ok(sum / n as f64)
+}

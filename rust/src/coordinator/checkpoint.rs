@@ -1,0 +1,112 @@
+//! Checkpoint format: `LPRCKPT1` magic + json header + raw little-endian
+//! f32 payload. Self-contained (no npy/serde); resumable across runs of
+//! the same artifact (the header pins the artifact name and step).
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::util::json::{obj, Json};
+
+const MAGIC: &[u8; 8] = b"LPRCKPT1";
+
+pub struct Checkpoint {
+    pub artifact: String,
+    pub step: usize,
+    pub buffers: Vec<Vec<f32>>,
+}
+
+pub fn save(path: &Path, artifact: &str, step: usize, buffers: &[Vec<f32>]) -> Result<()> {
+    let header = obj(vec![
+        ("artifact", Json::Str(artifact.to_string())),
+        ("step", Json::Num(step as f64)),
+        (
+            "lens",
+            Json::Arr(buffers.iter().map(|b| Json::Num(b.len() as f64)).collect()),
+        ),
+    ])
+    .to_string();
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    f.write_all(MAGIC)?;
+    f.write_all(&(header.len() as u64).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    for buf in buffers {
+        // SAFETY-free: explicit LE encoding, portable.
+        let mut bytes = Vec::with_capacity(buf.len() * 4);
+        for v in buf {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        f.write_all(&bytes)?;
+    }
+    Ok(())
+}
+
+pub fn load(path: &Path) -> Result<Checkpoint> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not an LPR checkpoint: bad magic");
+    }
+    let mut len8 = [0u8; 8];
+    f.read_exact(&mut len8)?;
+    let hlen = u64::from_le_bytes(len8) as usize;
+    let mut hbytes = vec![0u8; hlen];
+    f.read_exact(&mut hbytes)?;
+    let header = Json::parse(std::str::from_utf8(&hbytes)?)
+        .context("checkpoint header")?;
+    let artifact = header.at("artifact").as_str().unwrap().to_string();
+    let step = header.at("step").as_usize().unwrap();
+    let lens = header.at("lens").as_usize_vec();
+    let mut buffers = Vec::with_capacity(lens.len());
+    for len in lens {
+        let mut bytes = vec![0u8; len * 4];
+        f.read_exact(&mut bytes)
+            .context("checkpoint payload truncated")?;
+        let buf: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        buffers.push(buf);
+    }
+    Ok(Checkpoint { artifact, step, buffers })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("lpr-ckpt-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("a.ckpt");
+        let bufs = vec![vec![1.0f32, -2.5, 3.25], vec![0.0; 7]];
+        save(&path, "quickstart", 42, &bufs).unwrap();
+        let ck = load(&path).unwrap();
+        assert_eq!(ck.artifact, "quickstart");
+        assert_eq!(ck.step, 42);
+        assert_eq!(ck.buffers, bufs);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("lpr-ckpt-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ckpt");
+        std::fs::write(&path, b"not a checkpoint at all").unwrap();
+        assert!(load(&path).is_err());
+    }
+
+    #[test]
+    fn empty_buffers_ok() {
+        let dir = std::env::temp_dir().join("lpr-ckpt-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("empty.ckpt");
+        save(&path, "x", 0, &[]).unwrap();
+        let ck = load(&path).unwrap();
+        assert!(ck.buffers.is_empty());
+    }
+}

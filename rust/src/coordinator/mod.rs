@@ -1,0 +1,257 @@
+//! L3 coordinator: the training orchestrator.
+//!
+//! Owns the training loop around the AOT `train_step` executable. Model
+//! parameters and Adam state live as PJRT device buffers for the whole
+//! run (`execute_b` feeds the previous step's output buffers straight
+//! back in); per step the host only uploads the token batch + step index
+//! and downloads the small metrics vector and the [L, E] load histogram.
+//!
+//! Also provides deterministic evaluation over held-out batches,
+//! checkpointing (custom binary format — no external deps), and CSV
+//! metric logs for the experiment reports.
+
+pub mod checkpoint;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::{Batcher, LmBatch, ZipfMarkovCorpus};
+use crate::metrics::LoadMatrix;
+use crate::runtime::{execute_buffers, CompiledArtifacts, Runtime};
+
+/// Scalar metrics of one training step (layout = meta.metric_names).
+#[derive(Debug, Clone)]
+pub struct StepMetrics {
+    pub step: usize,
+    pub values: Vec<f32>,
+}
+
+impl StepMetrics {
+    pub fn get(&self, meta: &crate::runtime::ArtifactMeta, name: &str) -> f32 {
+        self.values[meta.metric_idx(name)]
+    }
+}
+
+/// Device-resident trainer for one artifact set.
+pub struct Trainer<'a> {
+    pub rt: &'a Runtime,
+    pub arts: &'a CompiledArtifacts,
+    state: Vec<xla::PjRtBuffer>,
+    lw: Vec<f32>,
+    lw_buf: xla::PjRtBuffer,
+    pub step: usize,
+    /// Cumulative per-layer expert loads over all training steps.
+    pub load: LoadMatrix,
+    pub history: Vec<StepMetrics>,
+}
+
+impl<'a> Trainer<'a> {
+    /// Initialize model + optimizer state on device via the init
+    /// executable. `loss_weights = None` uses the config defaults.
+    pub fn new(
+        rt: &'a Runtime,
+        arts: &'a CompiledArtifacts,
+        seed: i32,
+        loss_weights: Option<Vec<f32>>,
+    ) -> Result<Self> {
+        let meta = &arts.meta;
+        let lw = loss_weights.unwrap_or_else(|| meta.default_loss_weights.clone());
+        if lw.len() != meta.default_loss_weights.len() {
+            bail!(
+                "loss weight vector must have {} entries",
+                meta.default_loss_weights.len()
+            );
+        }
+        let seed_buf = rt.buf_scalar_i32(seed)?;
+        let state = execute_buffers(&arts.init, &[&seed_buf])
+            .context("init executable")?;
+        if state.len() != meta.n_state {
+            bail!(
+                "init returned {} buffers, meta says {}",
+                state.len(),
+                meta.n_state
+            );
+        }
+        let lw_buf = rt.buf_f32(&lw, &[lw.len()])?;
+        let (l, e) = meta.load_shape;
+        Ok(Trainer {
+            rt,
+            arts,
+            state,
+            lw,
+            lw_buf,
+            step: 0,
+            load: LoadMatrix::new(l, e),
+            history: Vec::new(),
+        })
+    }
+
+    /// Change loss weights mid-run (used by ablation schedules).
+    pub fn set_loss_weights(&mut self, lw: Vec<f32>) -> Result<()> {
+        self.lw_buf = self.rt.buf_f32(&lw, &[lw.len()])?;
+        self.lw = lw;
+        Ok(())
+    }
+
+    pub fn loss_weights(&self) -> &[f32] {
+        &self.lw
+    }
+
+    /// One optimization step on `batch`. State stays on device.
+    pub fn train_step(&mut self, batch: &LmBatch) -> Result<StepMetrics> {
+        let meta = &self.arts.meta;
+        let (b, t) = meta.batch_shape;
+        debug_assert_eq!(batch.tokens.len(), b * t);
+
+        let step_buf = self.rt.buf_scalar_i32(self.step as i32)?;
+        let tok_buf = self.rt.buf_i32(&batch.tokens, &[b, t])?;
+        let tgt_buf = self.rt.buf_i32(&batch.targets, &[b, t])?;
+
+        let mut args: Vec<&xla::PjRtBuffer> =
+            Vec::with_capacity(meta.n_state + 4);
+        args.extend(self.state.iter());
+        args.push(&step_buf);
+        args.push(&self.lw_buf);
+        args.push(&tok_buf);
+        args.push(&tgt_buf);
+
+        let mut outs = execute_buffers(&self.arts.train, &args)
+            .with_context(|| format!("train step {}", self.step))?;
+        if outs.len() != meta.n_state + 2 {
+            bail!(
+                "train returned {} outputs, expected {}",
+                outs.len(),
+                meta.n_state + 2
+            );
+        }
+        let load_buf = outs.pop().unwrap();
+        let metrics_buf = outs.pop().unwrap();
+        self.state = outs;
+
+        let values = self.rt.to_f32(&metrics_buf)?;
+        let load = self.rt.to_f32(&load_buf)?;
+        self.load.accumulate(&load);
+
+        let m = StepMetrics { step: self.step, values };
+        self.history.push(m.clone());
+        self.step += 1;
+        Ok(m)
+    }
+
+    /// Run `n` steps drawing batches from a synthetic corpus.
+    pub fn train_synthetic(
+        &mut self,
+        corpus: &mut ZipfMarkovCorpus,
+        n: usize,
+        mut on_step: impl FnMut(&StepMetrics),
+    ) -> Result<()> {
+        let (b, t) = self.arts.meta.batch_shape;
+        let batcher = Batcher::new(b, t);
+        for _ in 0..n {
+            let batch = batcher.next_synthetic(corpus);
+            let m = self.train_step(&batch)?;
+            on_step(&m);
+        }
+        Ok(())
+    }
+
+    /// Deterministic evaluation over `n_batches` held-out batches.
+    /// Returns (mean loss, mean drop_frac, eval LoadMatrix).
+    pub fn evaluate(
+        &self,
+        corpus: &mut ZipfMarkovCorpus,
+        n_batches: usize,
+    ) -> Result<EvalResult> {
+        let meta = &self.arts.meta;
+        let (b, t) = meta.batch_shape;
+        let (l, e) = meta.load_shape;
+        let batcher = Batcher::new(b, t);
+        let mut loss_sum = 0.0f64;
+        let mut drop_sum = 0.0f64;
+        let mut load = LoadMatrix::new(l, e);
+        for _ in 0..n_batches {
+            let batch = batcher.next_synthetic(corpus);
+            let tok_buf = self.rt.buf_i32(&batch.tokens, &[b, t])?;
+            let tgt_buf = self.rt.buf_i32(&batch.targets, &[b, t])?;
+            let mut args: Vec<&xla::PjRtBuffer> =
+                Vec::with_capacity(meta.n_params + 2);
+            args.extend(self.state.iter().take(meta.n_params));
+            args.push(&tok_buf);
+            args.push(&tgt_buf);
+            let outs = execute_buffers(&self.arts.eval, &args)
+                .context("eval step")?;
+            if outs.len() != 2 {
+                bail!("eval returned {} outputs, expected 2", outs.len());
+            }
+            let m = self.rt.to_f32(&outs[0])?;
+            loss_sum += m[0] as f64;
+            drop_sum += m[1] as f64;
+            load.accumulate(&self.rt.to_f32(&outs[1])?);
+        }
+        let n = n_batches.max(1) as f64;
+        Ok(EvalResult {
+            loss: loss_sum / n,
+            drop_frac: drop_sum / n,
+            load,
+        })
+    }
+
+    /// Download the model parameters (first P state buffers) to host.
+    pub fn params_to_host(&self) -> Result<Vec<Vec<f32>>> {
+        self.state
+            .iter()
+            .take(self.arts.meta.n_params)
+            .map(|b| self.rt.to_f32(b))
+            .collect()
+    }
+
+    /// Download full state (params + Adam moments) for checkpointing.
+    pub fn state_to_host(&self) -> Result<Vec<Vec<f32>>> {
+        self.state.iter().map(|b| self.rt.to_f32(b)).collect()
+    }
+
+    /// Restore full state from host vectors (checkpoint resume).
+    pub fn state_from_host(&mut self, host: &[Vec<f32>]) -> Result<()> {
+        let meta = &self.arts.meta;
+        if host.len() != meta.n_state {
+            bail!("checkpoint has {} buffers, want {}", host.len(), meta.n_state);
+        }
+        let mut bufs = Vec::with_capacity(host.len());
+        for (i, data) in host.iter().enumerate() {
+            let spec = &meta.params[i % meta.n_params];
+            if data.len() != spec.numel() {
+                bail!(
+                    "buffer {i} ({}) has {} elems, want {}",
+                    spec.path,
+                    data.len(),
+                    spec.numel()
+                );
+            }
+            bufs.push(self.rt.buf_f32(data, &spec.shape)?);
+        }
+        self.state = bufs;
+        Ok(())
+    }
+
+    /// Write a CSV of the full metric history.
+    pub fn history_csv(&self) -> String {
+        let meta = &self.arts.meta;
+        let mut s = String::from("step,");
+        s.push_str(&meta.metric_names.join(","));
+        s.push('\n');
+        for m in &self.history {
+            s.push_str(&format!("{}", m.step));
+            for v in &m.values {
+                s.push_str(&format!(",{v}"));
+            }
+            s.push('\n');
+        }
+        s
+    }
+}
+
+#[derive(Debug)]
+pub struct EvalResult {
+    pub loss: f64,
+    pub drop_frac: f64,
+    pub load: LoadMatrix,
+}

@@ -1,0 +1,275 @@
+//! L3 data pipeline — the fineweb substitute (DESIGN.md §Substitutions).
+//!
+//! The paper's routing phenomena rest on two token-distribution facts
+//! (§2.2.1): *clusterability* (tokens form semantically coherent
+//! clusters) and *imbalanced frequencies* (cluster sizes are Zipf-
+//! skewed). `ZipfMarkovCorpus` reproduces both: a seeded first-order
+//! Markov chain whose stationary distribution is Zipf(s) and whose
+//! transition rows are sparse (each token has a small out-neighborhood),
+//! giving learnable sequential structure for the LM task.
+//!
+//! A byte-level tokenizer is included for feeding real text files
+//! through the same batcher.
+
+pub mod tokenizer;
+
+use crate::util::rng::Rng;
+
+/// Streaming synthetic corpus with Zipf marginals + Markov structure.
+pub struct ZipfMarkovCorpus {
+    pub vocab: usize,
+    rng: Rng,
+    state: usize,
+    /// Per-token sparse transition table: (next_token, weight).
+    transitions: Vec<Vec<(usize, f64)>>,
+    /// Zipf weights, used for restarts and for building transitions.
+    zipf: Vec<f64>,
+}
+
+impl ZipfMarkovCorpus {
+    /// `s` is the Zipf exponent (paper-scale natural text is s ~= 1.0-1.2);
+    /// `branching` is the out-degree of the Markov chain (structure
+    /// strength: smaller = more predictable).
+    pub fn new(vocab: usize, seed: u64, s: f64, branching: usize) -> Self {
+        Self::with_law(vocab, seed, seed, s, branching)
+    }
+
+    /// Build the transition table ("the language") from `law_seed` and
+    /// the sampling stream from `stream_seed`. Train and held-out
+    /// corpora MUST share the law and differ only in the stream —
+    /// otherwise evaluation measures loss on a different language and
+    /// sits at ln(V) regardless of training.
+    pub fn with_law(vocab: usize, law_seed: u64, stream_seed: u64,
+                    s: f64, branching: usize) -> Self {
+        assert!(vocab >= 4 && branching >= 2);
+        let zipf: Vec<f64> =
+            (1..=vocab).map(|r| 1.0 / (r as f64).powf(s)).collect();
+        let mut build_rng = Rng::new(law_seed ^ 0x5eed_c0de);
+        let mut transitions = Vec::with_capacity(vocab);
+        for _ in 0..vocab {
+            // Sparse successor set *drawn from* the Zipf marginal (so
+            // frequent tokens are frequent successors and the stationary
+            // distribution stays skewed) but with near-uniform weights
+            // within the set (so the conditional next-token entropy is
+            // ~ln(branching), far below the unigram entropy — i.e. the
+            // chain is learnable).
+            let mut succ: Vec<(usize, f64)> = Vec::with_capacity(branching);
+            while succ.len() < branching {
+                let t = build_rng.categorical(&zipf);
+                if !succ.iter().any(|&(s, _)| s == t) {
+                    succ.push((t, build_rng.range_f64(0.5, 1.5)));
+                }
+            }
+            transitions.push(succ);
+        }
+        let mut rng = Rng::new(stream_seed);
+        let state = rng.categorical(&zipf);
+        ZipfMarkovCorpus { vocab, rng, state, transitions, zipf }
+    }
+
+    /// Default corpus parameters used by all experiments.
+    /// NOTE: law and stream both derive from `seed`; for a held-out
+    /// stream of the SAME language use [`ZipfMarkovCorpus::held_out`].
+    pub fn standard(vocab: usize, seed: u64) -> Self {
+        Self::new(vocab, seed, 1.1, 12)
+    }
+
+    /// Held-out stream: same language (transition law) as
+    /// `standard(vocab, seed)` but a disjoint sample path.
+    pub fn held_out(vocab: usize, law_seed: u64, stream_seed: u64) -> Self {
+        Self::with_law(vocab, law_seed, stream_seed, 1.1, 12)
+    }
+
+    pub fn next_token(&mut self) -> usize {
+        // 2% restart probability keeps the chain ergodic over the full
+        // vocabulary (otherwise rare tokens would never re-appear).
+        if self.rng.f64() < 0.02 {
+            self.state = self.rng.categorical(&self.zipf);
+            return self.state;
+        }
+        let row = &self.transitions[self.state];
+        let weights: Vec<f64> = row.iter().map(|&(_, w)| w).collect();
+        let k = self.rng.categorical(&weights);
+        self.state = row[k].0;
+        self.state
+    }
+
+    pub fn fill(&mut self, out: &mut [i32]) {
+        for slot in out.iter_mut() {
+            *slot = self.next_token() as i32;
+        }
+    }
+}
+
+/// Produces fixed-shape `[B, T]` next-token batches from any token stream.
+pub struct Batcher {
+    pub batch: usize,
+    pub seq: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct LmBatch {
+    /// [B*T] row-major input ids.
+    pub tokens: Vec<i32>,
+    /// [B*T] row-major next-token targets.
+    pub targets: Vec<i32>,
+}
+
+impl Batcher {
+    pub fn new(batch: usize, seq: usize) -> Self {
+        Batcher { batch, seq }
+    }
+
+    /// Draw one batch from a synthetic corpus. Each row consumes T+1
+    /// tokens so targets are true next tokens (no wraparound hack).
+    pub fn next_synthetic(&self, corpus: &mut ZipfMarkovCorpus) -> LmBatch {
+        let (b, t) = (self.batch, self.seq);
+        let mut tokens = vec![0i32; b * t];
+        let mut targets = vec![0i32; b * t];
+        let mut row = vec![0i32; t + 1];
+        for i in 0..b {
+            corpus.fill(&mut row);
+            tokens[i * t..(i + 1) * t].copy_from_slice(&row[..t]);
+            targets[i * t..(i + 1) * t].copy_from_slice(&row[1..]);
+        }
+        LmBatch { tokens, targets }
+    }
+
+    /// Slice sequential batches out of a pre-tokenized document stream.
+    /// `cursor` advances; wraps around at the end of the stream.
+    pub fn next_from_stream(&self, stream: &[i32], cursor: &mut usize) -> LmBatch {
+        let (b, t) = (self.batch, self.seq);
+        assert!(
+            stream.len() > t + 1,
+            "stream too short: {} <= {}",
+            stream.len(),
+            t + 1
+        );
+        let mut tokens = vec![0i32; b * t];
+        let mut targets = vec![0i32; b * t];
+        for i in 0..b {
+            if *cursor + t + 1 > stream.len() {
+                *cursor = 0;
+            }
+            let chunk = &stream[*cursor..*cursor + t + 1];
+            tokens[i * t..(i + 1) * t].copy_from_slice(&chunk[..t]);
+            targets[i * t..(i + 1) * t].copy_from_slice(&chunk[1..]);
+            *cursor += t;
+        }
+        LmBatch { tokens, targets }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::gini;
+
+    #[test]
+    fn corpus_is_deterministic() {
+        let mut a = ZipfMarkovCorpus::standard(256, 9);
+        let mut b = ZipfMarkovCorpus::standard(256, 9);
+        let sa: Vec<usize> = (0..256).map(|_| a.next_token()).collect();
+        let sb: Vec<usize> = (0..256).map(|_| b.next_token()).collect();
+        assert_eq!(sa, sb);
+    }
+
+    #[test]
+    fn tokens_in_vocab() {
+        let mut c = ZipfMarkovCorpus::standard(128, 1);
+        for _ in 0..5000 {
+            assert!(c.next_token() < 128);
+        }
+    }
+
+    #[test]
+    fn frequencies_are_zipf_skewed() {
+        // The paper's premise: token frequencies are highly imbalanced.
+        let vocab = 256;
+        let mut c = ZipfMarkovCorpus::standard(vocab, 2);
+        let mut counts = vec![0f32; vocab];
+        for _ in 0..200_000 {
+            counts[c.next_token()] += 1.0;
+        }
+        let g = gini(&counts);
+        assert!(g > 0.45, "corpus should be skewed, gini={g}");
+        // ... and ergodic: a large majority of the vocab appears.
+        let seen = counts.iter().filter(|&&c| c > 0.0).count();
+        assert!(seen > vocab * 2 / 3, "only {seen}/{vocab} tokens seen");
+    }
+
+    #[test]
+    fn markov_structure_is_learnable() {
+        // Bigram conditional entropy must be far below unigram entropy —
+        // otherwise the LM task has nothing to learn.
+        let vocab = 64;
+        let mut c = ZipfMarkovCorpus::standard(vocab, 3);
+        let n = 300_000;
+        let mut uni = vec![0f64; vocab];
+        let mut bi = vec![0f64; vocab * vocab];
+        let mut prev = c.next_token();
+        for _ in 0..n {
+            let t = c.next_token();
+            uni[t] += 1.0;
+            bi[prev * vocab + t] += 1.0;
+            prev = t;
+        }
+        let h_uni: f64 = uni
+            .iter()
+            .filter(|&&x| x > 0.0)
+            .map(|&x| {
+                let p = x / n as f64;
+                -p * p.ln()
+            })
+            .sum();
+        let mut h_bi = 0.0;
+        for p_row in 0..vocab {
+            let row = &bi[p_row * vocab..(p_row + 1) * vocab];
+            let tot: f64 = row.iter().sum();
+            if tot == 0.0 {
+                continue;
+            }
+            for &x in row {
+                if x > 0.0 {
+                    let p = x / tot;
+                    h_bi -= (x / n as f64) * p.ln();
+                }
+            }
+        }
+        assert!(
+            h_bi < 0.8 * h_uni,
+            "bigram entropy {h_bi:.3} not « unigram {h_uni:.3}"
+        );
+    }
+
+    #[test]
+    fn batcher_targets_are_next_tokens() {
+        let stream: Vec<i32> = (0..100).collect();
+        let b = Batcher::new(2, 8);
+        let mut cursor = 0;
+        let batch = b.next_from_stream(&stream, &mut cursor);
+        assert_eq!(batch.tokens[..8], (0..8).collect::<Vec<i32>>()[..]);
+        assert_eq!(batch.targets[..8], (1..9).collect::<Vec<i32>>()[..]);
+        assert_eq!(batch.tokens[8..16], (8..16).collect::<Vec<i32>>()[..]);
+        assert_eq!(cursor, 16);
+    }
+
+    #[test]
+    fn batcher_wraps_stream() {
+        let stream: Vec<i32> = (0..20).collect();
+        let b = Batcher::new(1, 8);
+        let mut cursor = 16; // forces wrap
+        let batch = b.next_from_stream(&stream, &mut cursor);
+        assert_eq!(batch.tokens[0], 0);
+    }
+
+    #[test]
+    fn synthetic_batch_shapes() {
+        let mut c = ZipfMarkovCorpus::standard(64, 5);
+        let b = Batcher::new(3, 16);
+        let batch = b.next_synthetic(&mut c);
+        assert_eq!(batch.tokens.len(), 48);
+        assert_eq!(batch.targets.len(), 48);
+        assert!(batch.tokens.iter().all(|&t| (t as usize) < 64));
+    }
+}

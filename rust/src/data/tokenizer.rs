@@ -1,0 +1,150 @@
+//! Byte-level tokenizer with an optional learned merge table (mini-BPE).
+//!
+//! Lets the pipeline consume real text files: bytes are the base vocab
+//! (0..256) and `train_merges` learns the most frequent pair merges,
+//! producing ids in [256, 256+n_merges). For the synthetic experiments
+//! the plain byte path suffices; mini-BPE exists so the e2e driver can
+//! run on any user-provided corpus with a vocab that matches the
+//! artifact's embedding table.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Clone)]
+pub struct ByteTokenizer {
+    /// Learned merges in application order: (left, right) -> new id.
+    pub merges: Vec<(i32, i32)>,
+    merge_lookup: HashMap<(i32, i32), i32>,
+}
+
+impl Default for ByteTokenizer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ByteTokenizer {
+    pub fn new() -> Self {
+        ByteTokenizer { merges: Vec::new(), merge_lookup: HashMap::new() }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        256 + self.merges.len()
+    }
+
+    /// Learn `n_merges` byte-pair merges from `text` (greedy BPE).
+    pub fn train_merges(&mut self, text: &[u8], n_merges: usize) {
+        let mut ids: Vec<i32> = text.iter().map(|&b| b as i32).collect();
+        for step in 0..n_merges {
+            let mut counts: HashMap<(i32, i32), usize> = HashMap::new();
+            for w in ids.windows(2) {
+                *counts.entry((w[0], w[1])).or_insert(0) += 1;
+            }
+            let Some((&pair, &cnt)) =
+                counts.iter().max_by_key(|(p, c)| (**c, std::cmp::Reverse(**p)))
+            else {
+                break;
+            };
+            if cnt < 2 {
+                break;
+            }
+            let new_id = 256 + step as i32;
+            self.merges.push(pair);
+            self.merge_lookup.insert(pair, new_id);
+            ids = Self::apply_merge(&ids, pair, new_id);
+        }
+    }
+
+    fn apply_merge(ids: &[i32], pair: (i32, i32), new_id: i32) -> Vec<i32> {
+        let mut out = Vec::with_capacity(ids.len());
+        let mut i = 0;
+        while i < ids.len() {
+            if i + 1 < ids.len() && (ids[i], ids[i + 1]) == pair {
+                out.push(new_id);
+                i += 2;
+            } else {
+                out.push(ids[i]);
+                i += 1;
+            }
+        }
+        out
+    }
+
+    pub fn encode(&self, text: &[u8]) -> Vec<i32> {
+        let mut ids: Vec<i32> = text.iter().map(|&b| b as i32).collect();
+        for (k, pair) in self.merges.iter().enumerate() {
+            ids = Self::apply_merge(&ids, *pair, 256 + k as i32);
+        }
+        ids
+    }
+
+    pub fn decode(&self, ids: &[i32]) -> Vec<u8> {
+        // Expand merges recursively (merge ids may reference merge ids).
+        fn expand(tok: &ByteTokenizer, id: i32, out: &mut Vec<u8>) {
+            if id < 256 {
+                out.push(id as u8);
+            } else {
+                let (l, r) = tok.merges[(id - 256) as usize];
+                expand(tok, l, out);
+                expand(tok, r, out);
+            }
+        }
+        let mut out = Vec::with_capacity(ids.len());
+        for &id in ids {
+            expand(self, id, &mut out);
+        }
+        out
+    }
+
+    /// Clamp token ids into a model vocab (ids >= vocab map to bytes via
+    /// modulo — only relevant when a text has merges beyond the model's
+    /// embedding size).
+    pub fn clamp_to_vocab(ids: &[i32], vocab: usize) -> Vec<i32> {
+        ids.iter().map(|&t| t % vocab as i32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_roundtrip_without_merges() {
+        let t = ByteTokenizer::new();
+        let text = b"hello, world! \xf0\x9f\x99\x82";
+        assert_eq!(t.decode(&t.encode(text)), text.to_vec());
+    }
+
+    #[test]
+    fn merges_compress_and_roundtrip() {
+        let mut t = ByteTokenizer::new();
+        let text = b"abababab ababab abab".repeat(8);
+        t.train_merges(&text, 16);
+        assert!(!t.merges.is_empty());
+        let enc = t.encode(&text);
+        assert!(enc.len() < text.len(), "{} !< {}", enc.len(), text.len());
+        assert_eq!(t.decode(&enc), text);
+    }
+
+    #[test]
+    fn merge_ids_sequential() {
+        let mut t = ByteTokenizer::new();
+        t.train_merges(&b"xyxyxyxy".repeat(4), 4);
+        let max_id = *t.encode(&b"xyxyxyxy".repeat(4)).iter().max().unwrap();
+        assert!(max_id >= 256);
+        assert!((max_id as usize) < t.vocab_size());
+    }
+
+    #[test]
+    fn clamp_stays_in_vocab() {
+        let ids = vec![0, 100, 255, 256, 300];
+        let c = ByteTokenizer::clamp_to_vocab(&ids, 128);
+        assert!(c.iter().all(|&t| (t as usize) < 128));
+    }
+
+    #[test]
+    fn train_on_empty_is_noop() {
+        let mut t = ByteTokenizer::new();
+        t.train_merges(b"", 8);
+        assert!(t.merges.is_empty());
+    }
+}

@@ -1,0 +1,44 @@
+//! # lpr — Latent Prototype Routing, reproduced as a three-layer stack
+//!
+//! Reproduction of *"Latent Prototype Routing: Achieving Near-Perfect
+//! Load Balancing in Mixture-of-Experts"* (Yang, 2025) as a
+//! Rust + JAX + Pallas system:
+//!
+//! - **L1/L2 (build time, python)** — Pallas MoE kernels + JAX model,
+//!   AOT-lowered to HLO text under `artifacts/` (`make artifacts`).
+//! - **L3 (this crate)** — the runtime coordinator: PJRT execution with
+//!   device-resident training state, data pipeline, load-balance
+//!   metrics, an expert-parallel dispatch simulator, a pure-Rust
+//!   serving router, and the experiment harness reproducing every
+//!   table/figure of the paper.
+//!
+//! Start with [`runtime::Runtime`] + [`coordinator::Trainer`] for
+//! training, [`router::Router`] + [`dispatch::DispatchSim`] for
+//! serving-path studies, and [`report::Reporter`] for the paper's
+//! experiments. See `examples/` for end-to-end drivers.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod dispatch;
+pub mod metrics;
+pub mod report;
+pub mod router;
+pub mod runtime;
+pub mod util;
+
+/// Default artifacts directory (relative to the repo root); override
+/// with env `LPR_ARTIFACTS`.
+pub fn default_art_dir() -> std::path::PathBuf {
+    std::env::var("LPR_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}
+
+/// Default results directory for experiment reports; override with env
+/// `LPR_RESULTS`.
+pub fn default_out_dir() -> std::path::PathBuf {
+    std::env::var("LPR_RESULTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("results"))
+}

@@ -1,0 +1,301 @@
+//! `lpr` — CLI launcher for the LPR reproduction.
+//!
+//! Subcommands:
+//!   train <preset>        train one artifact, log metrics + heatmap
+//!   eval <preset> --ckpt  evaluate a checkpoint
+//!   repro <exp>           reproduce a paper table/figure
+//!                         (t1..t7, fig1, fig3, fig4, dispatch,
+//!                          dispatch-replay, all)
+//!   dispatch-sim          run the expert-parallel dispatch simulator
+//!   route <preset>        run the standalone router artifact and print
+//!                         the specialization proxy
+//!   list                  list artifacts present in the artifacts dir
+//!
+//! Global options: --artifacts DIR, --out DIR, --steps N, --seed N.
+
+use anyhow::{bail, Context, Result};
+use std::path::PathBuf;
+
+use lpr::coordinator::{checkpoint, Trainer};
+use lpr::data::ZipfMarkovCorpus;
+use lpr::dispatch::{synthetic_assignments, DispatchSim, SimConfig};
+use lpr::metrics::ascii_heatmap;
+use lpr::report::Reporter;
+use lpr::runtime::{CompiledArtifacts, Runtime};
+use lpr::util::cli::Args;
+use lpr::util::rng::Rng;
+use lpr::util::table::fmt_sci;
+
+const USAGE: &str = "\
+lpr — Latent Prototype Routing reproduction (rust + jax + pallas)
+
+USAGE:
+  lpr train <preset> [--steps N] [--seed N] [--ckpt-out FILE]
+  lpr eval <preset> --ckpt FILE [--batches N]
+  lpr route <preset> [--ckpt FILE]
+  lpr repro <t1|t2|t3|t4|t5|t6|t7|fig1|fig3|fig4|dispatch|dispatch-replay|all>
+            [--steps N]
+  lpr dispatch-sim [--experts N] [--devices N] [--topk K] [--skew S]
+                   [--cf F] [--steps N]
+  lpr list
+Options:
+  --artifacts DIR   artifact directory (default: artifacts/)
+  --out DIR         results directory (default: results/)
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        eprintln!("{USAGE}");
+        std::process::exit(2);
+    }
+    let args = Args::parse(&argv);
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn art_dir(args: &Args) -> PathBuf {
+    args.opt("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(lpr::default_art_dir)
+}
+
+fn out_dir(args: &Args) -> PathBuf {
+    args.opt("out")
+        .map(PathBuf::from)
+        .unwrap_or_else(lpr::default_out_dir)
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.cmd.as_str() {
+        "train" => cmd_train(args),
+        "eval" => cmd_eval(args),
+        "route" => cmd_route(args),
+        "repro" => cmd_repro(args),
+        "dispatch-sim" => cmd_dispatch_sim(args),
+        "list" => cmd_list(args),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}'\n{USAGE}"),
+    }
+}
+
+fn preset_arg(args: &Args) -> Result<&str> {
+    args.positional
+        .first()
+        .map(|s| s.as_str())
+        .context("missing <preset> argument")
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let preset = preset_arg(args)?;
+    let rt = Runtime::cpu()?;
+    let arts = CompiledArtifacts::load(&rt, &art_dir(args), preset)?;
+    let steps = args.opt_usize("steps", arts.meta.config.total_steps);
+    let seed = args.opt_usize("seed", 0) as i32;
+
+    eprintln!(
+        "training {preset}: {} params, {} experts x top-{}, {} steps",
+        arts.meta.param_count,
+        arts.meta.config.n_experts,
+        arts.meta.config.top_k,
+        steps
+    );
+    let mut trainer = Trainer::new(&rt, &arts, seed, None)?;
+    let mut corpus =
+        ZipfMarkovCorpus::standard(arts.meta.config.vocab, 1000 + seed as u64);
+    let loss_idx = arts.meta.metric_idx("loss");
+    let lr_idx = arts.meta.metric_idx("lr");
+    let t0 = std::time::Instant::now();
+    trainer.train_synthetic(&mut corpus, steps, |m| {
+        if m.step % 20 == 0 || m.step + 1 == steps {
+            eprintln!(
+                "step {:>5}/{steps}  loss {:.4}  lr {:.2e}",
+                m.step, m.values[loss_idx], m.values[lr_idx]
+            );
+        }
+    })?;
+    let dt = t0.elapsed().as_secs_f64();
+    eprintln!(
+        "trained {steps} steps in {dt:.1}s ({:.2} steps/s)",
+        steps as f64 / dt
+    );
+
+    let mut eval_corpus = ZipfMarkovCorpus::held_out(
+        arts.meta.config.vocab, 1000 + seed as u64, 990_000);
+    let eval =
+        trainer.evaluate(&mut eval_corpus, args.opt_usize("batches", 8))?;
+    println!(
+        "test loss {:.4}  GINI {:.4}  min-max {:.4}  drop {:.4}",
+        eval.loss,
+        eval.load.mean_gini(),
+        eval.load.mean_min_max(),
+        eval.drop_frac
+    );
+    println!("{}", ascii_heatmap(&eval.load));
+
+    let out = out_dir(args);
+    std::fs::create_dir_all(&out)?;
+    std::fs::write(
+        out.join(format!("{preset}.train.csv")),
+        trainer.history_csv(),
+    )?;
+    if let Some(ckpt) = args.opt("ckpt-out") {
+        let state = trainer.state_to_host()?;
+        checkpoint::save(
+            std::path::Path::new(ckpt),
+            preset,
+            trainer.step,
+            &state,
+        )?;
+        eprintln!("checkpoint written to {ckpt}");
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let preset = preset_arg(args)?;
+    let ckpt_path = args.opt("ckpt").context("--ckpt FILE required")?;
+    let rt = Runtime::cpu()?;
+    let arts = CompiledArtifacts::load(&rt, &art_dir(args), preset)?;
+    let ck = checkpoint::load(std::path::Path::new(ckpt_path))?;
+    if ck.artifact != preset {
+        bail!("checkpoint is for artifact '{}', not '{preset}'", ck.artifact);
+    }
+    let mut trainer = Trainer::new(&rt, &arts, 0, None)?;
+    trainer.state_from_host(&ck.buffers)?;
+    let mut corpus = ZipfMarkovCorpus::held_out(
+        arts.meta.config.vocab, 1000, 990_000);
+    let eval =
+        trainer.evaluate(&mut corpus, args.opt_usize("batches", 8))?;
+    println!(
+        "step {}  test loss {:.4}  GINI {:.4}  min-max {:.4}",
+        ck.step,
+        eval.loss,
+        eval.load.mean_gini(),
+        eval.load.mean_min_max()
+    );
+    println!("{}", ascii_heatmap(&eval.load));
+    Ok(())
+}
+
+fn cmd_route(args: &Args) -> Result<()> {
+    // Standalone router pass over cluster-structured inputs; uses the
+    // checkpointed trained params when given, otherwise fresh init.
+    let preset = preset_arg(args)?;
+    let rt = Runtime::cpu()?;
+    let arts = CompiledArtifacts::load(&rt, &art_dir(args), preset)?;
+    let mut trainer = Trainer::new(&rt, &arts, 0, None)?;
+    if let Some(ckpt_path) = args.opt("ckpt") {
+        let ck = checkpoint::load(std::path::Path::new(ckpt_path))?;
+        trainer.state_from_host(&ck.buffers)?;
+    }
+    let conf = lpr::config::router_top1_confidence(&rt, &arts, &trainer)?;
+    println!(
+        "router {preset}: mean top-1 combine weight {conf:.4} \
+         (1/k = {:.4} means undecided)",
+        1.0 / arts.meta.config.top_k as f64
+    );
+    Ok(())
+}
+
+fn cmd_repro(args: &Args) -> Result<()> {
+    let exp = preset_arg(args)?;
+    let rt = Runtime::cpu()?;
+    let art = art_dir(args);
+    let out = out_dir(args);
+    let mut rep = Reporter::new(&rt, &art, &out);
+    if let Some(steps) = args.opt("steps") {
+        rep.steps_override = Some(steps.parse().context("--steps")?);
+    }
+    rep.verbose = !args.has_flag("quiet");
+    match exp {
+        "t1" => rep.table1().map(|_| ())?,
+        "t2" => rep.table2().map(|_| ())?,
+        "t3" => rep.table3().map(|_| ())?,
+        "t4" => rep.table4().map(|_| ())?,
+        "t5" => rep.table5().map(|_| ())?,
+        "t6" => rep.table6().map(|_| ())?,
+        "t7" => rep.table7().map(|_| ())?,
+        "fig1" => rep.fig1()?,
+        "fig3" => rep.fig3()?,
+        "fig4" => rep.fig4()?,
+        "dispatch" => rep.dispatch_report()?,
+        "dispatch-replay" => rep.dispatch_replay()?,
+        "all" => rep.all()?,
+        other => bail!("unknown experiment '{other}'"),
+    }
+    Ok(())
+}
+
+fn cmd_dispatch_sim(args: &Args) -> Result<()> {
+    let cfg = SimConfig {
+        n_experts: args.opt_usize("experts", 64),
+        n_devices: args.opt_usize("devices", 8),
+        top_k: args.opt_usize("topk", 8),
+        capacity_factor: args.opt_f64("cf", 1.25),
+        alpha_us: args.opt_f64("alpha", 50.0),
+        beta_us: args.opt_f64("beta", 0.5),
+    };
+    let skew = args.opt_f64("skew", 0.0);
+    let steps = args.opt_usize("steps", 200);
+    let tokens = args.opt_usize("tokens", 1024);
+    let (e, k) = (cfg.n_experts, cfg.top_k);
+    let mut sim = DispatchSim::new(cfg);
+    let mut rng = Rng::new(args.opt_usize("seed", 7) as u64);
+    let t0 = std::time::Instant::now();
+    for _ in 0..steps {
+        let a = synthetic_assignments(&mut rng, tokens, k, e, skew);
+        sim.step(&a);
+    }
+    let r = sim.report();
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "dispatch-sim: {} steps x {tokens} tokens (skew {skew}) in \
+         {dt:.2}s ({:.0} tok/s simulated)",
+        r.steps,
+        (r.tokens_routed as f64 / k as f64) / dt
+    );
+    println!(
+        "  GINI {}  min-max {}  throughput {:.0} tok/s  \
+         latency mean/p50/p99 {:.0}/{:.0}/{:.0} us",
+        fmt_sci(r.load_gini),
+        fmt_sci(r.load_min_max),
+        r.throughput_tok_per_s,
+        r.latency_mean_us,
+        r.latency_p50_us,
+        r.latency_p99_us
+    );
+    println!(
+        "  drop {:.2}%  utilization {:.3}  stall {:.3}",
+        100.0 * r.drop_frac,
+        r.utilization,
+        r.stall_frac
+    );
+    Ok(())
+}
+
+fn cmd_list(args: &Args) -> Result<()> {
+    let dir = art_dir(args);
+    let manifest = dir.join("manifest.json");
+    if !manifest.exists() {
+        bail!(
+            "no manifest at {} — run `make artifacts` first",
+            manifest.display()
+        );
+    }
+    let j =
+        lpr::util::json::Json::parse(&std::fs::read_to_string(&manifest)?)
+            .context("manifest.json")?;
+    if let lpr::util::json::Json::Obj(arts) = j.at("artifacts") {
+        println!("{} artifacts in {}:", arts.len(), dir.display());
+        for name in arts.keys() {
+            println!("  {name}");
+        }
+    }
+    Ok(())
+}

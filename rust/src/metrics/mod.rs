@@ -1,0 +1,299 @@
+//! Load-balance metrics — paper §3.1 eq.25 (Gini) and eq.26 (min-max),
+//! plus normalized entropy and coefficient of variation.
+//!
+//! Mirrors `python/compile/metrics.py`; the two implementations are
+//! cross-checked against `artifacts/goldens/metrics.json` in the
+//! integration tests (`rust/tests/goldens.rs`).
+
+pub const EPS: f64 = 1e-9;
+
+/// Gini coefficient of an expert-load vector. 0 = perfectly balanced,
+/// (n-1)/n = all load on one expert.
+pub fn gini(load: &[f32]) -> f64 {
+    let n = load.len();
+    if n == 0 {
+        return 0.0;
+    }
+    let mut x: Vec<f64> = load.iter().map(|&v| v as f64).collect();
+    x.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let total: f64 = x.iter().sum();
+    if total <= 0.0 {
+        return 0.0;
+    }
+    let mut acc = 0.0;
+    for (i, v) in x.iter().enumerate() {
+        // paper eq.25 with i as 1-based rank
+        acc += (2.0 * (i as f64 + 1.0) - n as f64 - 1.0) * v;
+    }
+    acc / (n as f64 * total)
+}
+
+/// Min-max ratio (paper eq.26): min load / (max load + eps).
+pub fn min_max_ratio(load: &[f32]) -> f64 {
+    if load.is_empty() {
+        return 0.0;
+    }
+    let min = load.iter().cloned().fold(f32::INFINITY, f32::min) as f64;
+    let max = load.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    min / (max + EPS)
+}
+
+/// Normalized entropy of the load distribution: 1 = uniform.
+pub fn entropy_frac(load: &[f32]) -> f64 {
+    let total: f64 = load.iter().map(|&v| v as f64).sum();
+    if total <= 0.0 || load.len() < 2 {
+        return 0.0;
+    }
+    let h: f64 = load
+        .iter()
+        .map(|&v| {
+            let p = (v as f64 / total).max(EPS);
+            -p * p.ln()
+        })
+        .sum();
+    h / (load.len() as f64).ln()
+}
+
+/// Coefficient of variation (std / mean) of expert loads.
+pub fn cv(load: &[f32]) -> f64 {
+    if load.is_empty() {
+        return 0.0;
+    }
+    let n = load.len() as f64;
+    let mean: f64 = load.iter().map(|&v| v as f64).sum::<f64>() / n;
+    let var: f64 = load
+        .iter()
+        .map(|&v| (v as f64 - mean) * (v as f64 - mean))
+        .sum::<f64>()
+        / n;
+    var.sqrt() / mean.max(EPS)
+}
+
+/// Per-layer load accounting accumulated over a training/eval run.
+#[derive(Debug, Clone)]
+pub struct LoadMatrix {
+    pub n_layers: usize,
+    pub n_experts: usize,
+    /// Row-major [n_layers * n_experts] cumulative counts.
+    pub counts: Vec<f64>,
+}
+
+impl LoadMatrix {
+    pub fn new(n_layers: usize, n_experts: usize) -> Self {
+        LoadMatrix {
+            n_layers,
+            n_experts,
+            counts: vec![0.0; n_layers * n_experts],
+        }
+    }
+
+    /// Accumulate one step's [L, E] load histogram (f32, row-major).
+    pub fn accumulate(&mut self, step_load: &[f32]) {
+        assert_eq!(step_load.len(), self.counts.len());
+        for (c, &v) in self.counts.iter_mut().zip(step_load) {
+            *c += v as f64;
+        }
+    }
+
+    pub fn layer(&self, l: usize) -> Vec<f32> {
+        let e = self.n_experts;
+        self.counts[l * e..(l + 1) * e]
+            .iter()
+            .map(|&v| v as f32)
+            .collect()
+    }
+
+    /// Load summed over layers.
+    pub fn total(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.n_experts];
+        for l in 0..self.n_layers {
+            for (o, &v) in out.iter_mut().zip(&self.counts[l * self.n_experts..])
+            {
+                *o += v as f32;
+            }
+        }
+        out
+    }
+
+    /// Mean per-layer metric values (how the paper reports model-level
+    /// Gini / min-max: averaged over MoE layers).
+    pub fn mean_gini(&self) -> f64 {
+        (0..self.n_layers).map(|l| gini(&self.layer(l))).sum::<f64>()
+            / self.n_layers.max(1) as f64
+    }
+
+    pub fn mean_min_max(&self) -> f64 {
+        (0..self.n_layers)
+            .map(|l| min_max_ratio(&self.layer(l)))
+            .sum::<f64>()
+            / self.n_layers.max(1) as f64
+    }
+
+    /// Normalized per-layer loads (each layer sums to 1) — the exact
+    /// quantity figure 1 visualizes.
+    pub fn normalized(&self) -> Vec<Vec<f64>> {
+        (0..self.n_layers)
+            .map(|l| {
+                let row = self.layer(l);
+                let total: f64 = row.iter().map(|&v| v as f64).sum();
+                row.iter()
+                    .map(|&v| v as f64 / total.max(EPS))
+                    .collect()
+            })
+            .collect()
+    }
+}
+
+/// Render a Fig.1-style ASCII heatmap of normalized per-layer loads.
+pub fn ascii_heatmap(lm: &LoadMatrix) -> String {
+    let shades = [' ', '.', ':', '-', '=', '+', '*', '#', '%', '@'];
+    let norm = lm.normalized();
+    let uniform = 1.0 / lm.n_experts as f64;
+    let mut s = String::new();
+    s.push_str(&format!(
+        "normalized expert load ({} layers x {} experts); \
+         '@' >= 3x uniform, ' ' = starved\n",
+        lm.n_layers, lm.n_experts
+    ));
+    for (l, row) in norm.iter().enumerate() {
+        s.push_str(&format!("L{l:<2} |"));
+        for &v in row {
+            let rel = (v / uniform / 3.0).min(1.0);
+            let idx = (rel * (shades.len() - 1) as f64).round() as usize;
+            s.push(shades[idx]);
+        }
+        s.push_str(&format!(
+            "| gini={:.3} minmax={:.3}\n",
+            gini(&lm.layer(l)),
+            min_max_ratio(&lm.layer(l))
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, gen};
+
+    #[test]
+    fn gini_uniform_zero() {
+        assert!(gini(&[5.0; 16]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gini_one_expert_takes_all() {
+        let mut load = vec![0.0f32; 8];
+        load[3] = 10.0;
+        assert!((gini(&load) - 7.0 / 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gini_known_value() {
+        assert!((gini(&[1.0, 2.0, 3.0, 4.0]) - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gini_props() {
+        forall(
+            200,
+            42,
+            |r| gen::vec_f32(r, 64, 0.0, 1e4),
+            |v| {
+                let g = gini(v);
+                if !(-1e-9..=1.0).contains(&g) {
+                    return Err(format!("gini out of bounds: {g}"));
+                }
+                // scale invariance
+                let scaled: Vec<f32> = v.iter().map(|x| x * 3.7).collect();
+                if (gini(&scaled) - g).abs() > 1e-6 {
+                    return Err("not scale invariant".into());
+                }
+                // permutation invariance
+                let mut rev = v.clone();
+                rev.reverse();
+                if (gini(&rev) - g).abs() > 1e-9 {
+                    return Err("not permutation invariant".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn min_max_props() {
+        forall(
+            200,
+            43,
+            |r| gen::vec_f32(r, 64, 0.001, 1e3),
+            |v| {
+                let r = min_max_ratio(v);
+                if !(0.0..=1.0 + 1e-9).contains(&r) {
+                    return Err(format!("minmax out of bounds: {r}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn minmax_uniform_is_one() {
+        assert!((min_max_ratio(&[2.0; 4]) - 1.0).abs() < 1e-6);
+        assert!(min_max_ratio(&[0.0, 5.0]) < 1e-9);
+    }
+
+    #[test]
+    fn entropy_and_cv() {
+        assert!((entropy_frac(&[3.0; 32]) - 1.0).abs() < 1e-9);
+        assert!(cv(&[3.0; 32]).abs() < 1e-9);
+        let skew = [0.0, 0.0, 0.0, 12.0];
+        assert!(entropy_frac(&skew) < 0.2);
+        assert!(cv(&skew) > 1.0);
+    }
+
+    #[test]
+    fn balanced_always_beats_skewed() {
+        forall(
+            100,
+            44,
+            |r| {
+                let n = 2 + r.below(32);
+                let mut skew = vec![0.1f32; n];
+                skew[0] = 100.0;
+                (vec![1.0f32; n], skew)
+            },
+            |(bal, skew)| {
+                if gini(bal) < gini(skew)
+                    && min_max_ratio(bal) > min_max_ratio(skew)
+                    && entropy_frac(bal) > entropy_frac(skew)
+                    && cv(bal) < cv(skew)
+                {
+                    Ok(())
+                } else {
+                    Err("metric ordering violated".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn load_matrix_accumulates() {
+        let mut lm = LoadMatrix::new(2, 4);
+        lm.accumulate(&[1.0, 0.0, 0.0, 0.0, 1.0, 1.0, 1.0, 1.0]);
+        lm.accumulate(&[1.0, 0.0, 0.0, 0.0, 1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(lm.layer(0), vec![2.0, 0.0, 0.0, 0.0]);
+        assert!((lm.mean_gini() - (0.75 + 0.0) / 2.0).abs() < 1e-9);
+        assert_eq!(lm.total(), vec![4.0, 2.0, 2.0, 2.0]);
+        let norm = lm.normalized();
+        assert!((norm[1].iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn heatmap_renders() {
+        let mut lm = LoadMatrix::new(1, 8);
+        lm.accumulate(&[8.0, 0.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0]);
+        let s = ascii_heatmap(&lm);
+        assert!(s.contains("L0"));
+        assert!(s.contains("gini="));
+    }
+}

@@ -1,0 +1,108 @@
+//! Minimal dense linear algebra for the serving-path router.
+//!
+//! Row-major f32 throughout. `matmul` is written as an i-k-j loop with a
+//! flat accumulator row so the inner loop auto-vectorizes (this is the
+//! dispatch simulator's hot path; see EXPERIMENTS.md §Perf).
+
+/// C[n,p] = A[n,m] @ B[m,p]
+pub fn matmul(a: &[f32], b: &[f32], n: usize, m: usize, p: usize) -> Vec<f32> {
+    assert_eq!(a.len(), n * m, "A shape");
+    assert_eq!(b.len(), m * p, "B shape");
+    let mut c = vec![0.0f32; n * p];
+    for i in 0..n {
+        let a_row = &a[i * m..(i + 1) * m];
+        let c_row = &mut c[i * p..(i + 1) * p];
+        for (k, &aik) in a_row.iter().enumerate() {
+            let b_row = &b[k * p..(k + 1) * p];
+            for (cj, &bkj) in c_row.iter_mut().zip(b_row) {
+                *cj += aik * bkj;
+            }
+        }
+    }
+    c
+}
+
+/// Per-row RMSNorm with learned scale `w` ([d]).
+pub fn rms_norm_rows(x: &[f32], w: &[f32], n: usize, d: usize) -> Vec<f32> {
+    assert_eq!(x.len(), n * d);
+    assert_eq!(w.len(), d);
+    let mut out = vec![0.0f32; n * d];
+    for i in 0..n {
+        let row = &x[i * d..(i + 1) * d];
+        let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let inv = 1.0 / (ms + 1e-6).sqrt();
+        for j in 0..d {
+            out[i * d + j] = row[j] * inv * w[j];
+        }
+    }
+    out
+}
+
+/// In-place SiLU.
+pub fn silu(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v = *v / (1.0 + (-*v).exp());
+    }
+}
+
+/// Softmax over each row of [n, d].
+pub fn softmax_rows(x: &mut [f32], n: usize, d: usize) {
+    for i in 0..n {
+        let row = &mut x[i * d..(i + 1) * d];
+        let m = row.iter().cloned().fold(f32::MIN, f32::max);
+        let mut z = 0.0;
+        for v in row.iter_mut() {
+            *v = (*v - m).exp();
+            z += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= z;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        let eye = vec![1.0, 0.0, 0.0, 1.0];
+        assert_eq!(matmul(&a, &eye, 2, 2, 2), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        // [[1,2],[3,4]] @ [[5],[6]] = [[17],[39]]
+        let c = matmul(&[1., 2., 3., 4.], &[5., 6.], 2, 2, 1);
+        assert_eq!(c, vec![17.0, 39.0]);
+    }
+
+    #[test]
+    fn rms_norm_unit_rows() {
+        let x = vec![3.0, 4.0];
+        let out = rms_norm_rows(&x, &[1.0, 1.0], 1, 2);
+        let ms: f32 = out.iter().map(|v| v * v).sum::<f32>() / 2.0;
+        assert!((ms - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn silu_known_points() {
+        let mut x = vec![0.0, 100.0];
+        silu(&mut x);
+        assert!(x[0].abs() < 1e-7);
+        assert!((x[1] - 100.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn softmax_rows_normalize() {
+        let mut x = vec![1.0, 2.0, 3.0, -1.0, 0.0, 1.0];
+        softmax_rows(&mut x, 2, 3);
+        for i in 0..2 {
+            let s: f32 = x[i * 3..(i + 1) * 3].iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+        }
+        assert!(x[2] > x[1] && x[1] > x[0]);
+    }
+}

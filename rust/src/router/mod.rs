@@ -1,0 +1,604 @@
+//! Pure-Rust router forward pass — the serving-path twin of
+//! `python/compile/routers.py`.
+//!
+//! Used by (a) the dispatch simulator, which needs millions of routing
+//! decisions per second without a PJRT round-trip, and (b) the parity
+//! tests in `rust/tests/goldens.rs`, which pin this implementation
+//! bit-for-bit (top-k indices) and to float tolerance (weights) against
+//! the JAX reference through `artifacts/goldens/*.json`.
+//!
+//! Implements all three router families (vanilla top-k softmax, DeepSeek
+//! aux-free sigmoid+bias, LPR) and the full §2.4.1 metric library.
+
+pub mod linalg;
+
+use crate::util::json::Json;
+use linalg::{matmul, rms_norm_rows, silu};
+
+pub const METRICS: &[&str] = &[
+    "dot", "cosine", "gaussian", "mahalanobis", "xattn", "wasserstein",
+    "kl", "js", "hellinger",
+];
+
+const EPS: f32 = 1e-6;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum RouterKind {
+    Vanilla,
+    DeepSeek,
+    Lpr,
+}
+
+/// Flat router parameters (layout documented per field).
+#[derive(Debug, Clone, Default)]
+pub struct RouterParams {
+    // vanilla / deepseek
+    pub wg: Vec<f32>,   // [d, E] row-major
+    pub bias: Vec<f32>, // [E] (deepseek selection bias)
+    // lpr
+    pub norm: Vec<f32>,     // [d]
+    pub w_mu: Vec<f32>,     // [d, dz]
+    pub b_mu: Vec<f32>,     // [dz]
+    pub w_lv: Vec<f32>,     // [d, dz]
+    pub b_lv: Vec<f32>,     // [dz]
+    pub proto_mu: Vec<f32>, // [E, dz]
+    pub proto_lv: Vec<f32>, // [E, dz]
+    pub wq: Vec<f32>,       // [H, dz, dh] (xattn only)
+    pub wk: Vec<f32>,       // [H, dz, dh]
+}
+
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    pub kind: RouterKind,
+    pub d_model: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub latent_dim: usize,
+    pub metric: String,
+    pub unit_ball: bool,
+    pub gaussian_sigma: f32,
+    pub n_score_heads: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct RouterOutput {
+    /// [N, k] expert ids, descending score order (ties -> lower id).
+    pub topk_idx: Vec<Vec<u32>>,
+    /// [N, k] combine weights.
+    pub weights: Vec<Vec<f32>>,
+    /// [E] assignment counts.
+    pub load: Vec<f32>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Router {
+    pub cfg: RouterConfig,
+    pub p: RouterParams,
+}
+
+impl Router {
+    pub fn new(cfg: RouterConfig, p: RouterParams) -> Self {
+        Router { cfg, p }
+    }
+
+    /// Route a batch of token activations `h` ([N, d] row-major).
+    /// Deterministic (eval-mode: mean latents, no reparam noise).
+    pub fn forward(&self, h: &[f32]) -> RouterOutput {
+        let d = self.cfg.d_model;
+        assert_eq!(h.len() % d, 0, "h must be [N, {d}]");
+        let n = h.len() / d;
+        let scores = self.scores(h, n);
+        match self.cfg.kind {
+            RouterKind::Vanilla | RouterKind::Lpr => {
+                self.topk_softmax(&scores, n)
+            }
+            RouterKind::DeepSeek => self.deepseek_select(&scores, n),
+        }
+    }
+
+    /// Raw [N, E] scores.
+    pub fn scores(&self, h: &[f32], n: usize) -> Vec<f32> {
+        let (d, e) = (self.cfg.d_model, self.cfg.n_experts);
+        match self.cfg.kind {
+            RouterKind::Vanilla => matmul(h, &self.p.wg, n, d, e),
+            RouterKind::DeepSeek => {
+                let mut s = matmul(h, &self.p.wg, n, d, e);
+                for v in s.iter_mut() {
+                    *v = 1.0 / (1.0 + (-*v).exp()); // sigmoid affinity
+                }
+                s
+            }
+            RouterKind::Lpr => self.lpr_scores(h, n),
+        }
+    }
+
+    fn lpr_scores(&self, h: &[f32], n: usize) -> Vec<f32> {
+        let (d, dz, e) = (
+            self.cfg.d_model,
+            self.cfg.latent_dim,
+            self.cfg.n_experts,
+        );
+        // encoder: a = SiLU(RMSNorm(h)); mu/logvar heads (eval: z = mu)
+        let mut a = rms_norm_rows(h, &self.p.norm, n, d);
+        silu(&mut a);
+        let mut mu = matmul(&a, &self.p.w_mu, n, d, dz);
+        for r in 0..n {
+            for j in 0..dz {
+                mu[r * dz + j] += self.p.b_mu[j];
+            }
+        }
+        let mut lv = matmul(&a, &self.p.w_lv, n, d, dz);
+        for r in 0..n {
+            for j in 0..dz {
+                lv[r * dz + j] =
+                    (lv[r * dz + j] + self.p.b_lv[j]).clamp(-8.0, 4.0);
+            }
+        }
+        // unit-ball projection of prototypes
+        let mut pm = self.p.proto_mu.clone();
+        if self.cfg.unit_ball {
+            for i in 0..e {
+                let row = &mut pm[i * dz..(i + 1) * dz];
+                let norm: f32 =
+                    row.iter().map(|x| x * x).sum::<f32>().sqrt();
+                if norm > 1.0 {
+                    row.iter_mut().for_each(|x| *x /= norm);
+                }
+            }
+        }
+        metric_scores(
+            &self.cfg.metric,
+            &mu,
+            &lv,
+            &pm,
+            &self.p.proto_lv,
+            &self.p.wq,
+            &self.p.wk,
+            n,
+            e,
+            dz,
+            self.cfg.n_score_heads,
+            self.cfg.gaussian_sigma,
+        )
+    }
+
+    fn topk_softmax(&self, scores: &[f32], n: usize) -> RouterOutput {
+        let (e, k) = (self.cfg.n_experts, self.cfg.top_k);
+        let mut topk_idx = Vec::with_capacity(n);
+        let mut weights = Vec::with_capacity(n);
+        let mut load = vec![0.0f32; e];
+        for r in 0..n {
+            let row = &scores[r * e..(r + 1) * e];
+            let idx = top_k_indices(row, k);
+            // softmax over the selected scores (paper eq.6)
+            let m = idx.iter().map(|&i| row[i as usize]).fold(f32::MIN, f32::max);
+            let exps: Vec<f32> =
+                idx.iter().map(|&i| (row[i as usize] - m).exp()).collect();
+            let z: f32 = exps.iter().sum();
+            for &i in &idx {
+                load[i as usize] += 1.0;
+            }
+            weights.push(exps.iter().map(|x| x / z).collect());
+            topk_idx.push(idx);
+        }
+        RouterOutput { topk_idx, weights, load }
+    }
+
+    fn deepseek_select(&self, affinity: &[f32], n: usize) -> RouterOutput {
+        let (e, k) = (self.cfg.n_experts, self.cfg.top_k);
+        let mut topk_idx = Vec::with_capacity(n);
+        let mut weights = Vec::with_capacity(n);
+        let mut load = vec![0.0f32; e];
+        for r in 0..n {
+            let row = &affinity[r * e..(r + 1) * e];
+            // bias enters selection only
+            let sel: Vec<f32> = row
+                .iter()
+                .zip(&self.p.bias)
+                .map(|(s, b)| s + b)
+                .collect();
+            let idx = top_k_indices(&sel, k);
+            let raw: Vec<f32> = idx.iter().map(|&i| row[i as usize]).collect();
+            let z: f32 = raw.iter().sum::<f32>() + 1e-9;
+            for &i in &idx {
+                load[i as usize] += 1.0;
+            }
+            weights.push(raw.iter().map(|x| x / z).collect());
+            topk_idx.push(idx);
+        }
+        RouterOutput { topk_idx, weights, load }
+    }
+}
+
+/// Indices of the k largest values, descending, ties -> lower index
+/// (matches `jax.lax.top_k`).
+pub fn top_k_indices(row: &[f32], k: usize) -> Vec<u32> {
+    let mut idx: Vec<u32> = (0..row.len() as u32).collect();
+    idx.sort_by(|&a, &b| {
+        row[b as usize]
+            .partial_cmp(&row[a as usize])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    idx.truncate(k);
+    idx
+}
+
+/// §2.4.1 metric library on flat row-major arrays.
+#[allow(clippy::too_many_arguments)]
+pub fn metric_scores(
+    metric: &str,
+    z_mu: &[f32],
+    z_lv: &[f32],
+    p_mu: &[f32],
+    p_lv: &[f32],
+    wq: &[f32],
+    wk: &[f32],
+    n: usize,
+    e: usize,
+    dz: usize,
+    n_heads: usize,
+    sigma: f32,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; n * e];
+    match metric {
+        "dot" => {
+            for r in 0..n {
+                for i in 0..e {
+                    let mut s = 0.0;
+                    for j in 0..dz {
+                        s += z_mu[r * dz + j] * p_mu[i * dz + j];
+                    }
+                    out[r * e + i] = s;
+                }
+            }
+        }
+        "cosine" => {
+            let zn: Vec<f32> = (0..n)
+                .map(|r| {
+                    z_mu[r * dz..(r + 1) * dz]
+                        .iter()
+                        .map(|x| x * x)
+                        .sum::<f32>()
+                        .sqrt()
+                        + EPS
+                })
+                .collect();
+            let pn: Vec<f32> = (0..e)
+                .map(|i| {
+                    p_mu[i * dz..(i + 1) * dz]
+                        .iter()
+                        .map(|x| x * x)
+                        .sum::<f32>()
+                        .sqrt()
+                        + EPS
+                })
+                .collect();
+            for r in 0..n {
+                for i in 0..e {
+                    let mut s = 0.0;
+                    for j in 0..dz {
+                        s += z_mu[r * dz + j] * p_mu[i * dz + j];
+                    }
+                    out[r * e + i] = s / (zn[r] * pn[i]);
+                }
+            }
+        }
+        "gaussian" => {
+            for r in 0..n {
+                for i in 0..e {
+                    let mut d2 = 0.0;
+                    for j in 0..dz {
+                        let d = z_mu[r * dz + j] - p_mu[i * dz + j];
+                        d2 += d * d;
+                    }
+                    out[r * e + i] = (-d2 / (2.0 * sigma * sigma)).exp();
+                }
+            }
+        }
+        "mahalanobis" => {
+            for r in 0..n {
+                for i in 0..e {
+                    let mut d2 = 0.0;
+                    for j in 0..dz {
+                        let d = z_mu[r * dz + j] - p_mu[i * dz + j];
+                        d2 += d * d * (-p_lv[i * dz + j]).exp();
+                    }
+                    out[r * e + i] = -d2;
+                }
+            }
+        }
+        "xattn" => {
+            let dh = dz.div_euclid(n_heads).max(1);
+            for r in 0..n {
+                for i in 0..e {
+                    let mut s = 0.0;
+                    for hh in 0..n_heads {
+                        // q = z @ wq[h], kk = p @ wk[h]; accumulate q.k
+                        let mut dot = 0.0;
+                        for c in 0..dh {
+                            let mut q = 0.0;
+                            let mut kk = 0.0;
+                            for j in 0..dz {
+                                q += z_mu[r * dz + j]
+                                    * wq[hh * dz * dh + j * dh + c];
+                                kk += p_mu[i * dz + j]
+                                    * wk[hh * dz * dh + j * dh + c];
+                            }
+                            dot += q * kk;
+                        }
+                        s += dot / (dh as f32).sqrt();
+                    }
+                    out[r * e + i] = s / n_heads as f32;
+                }
+            }
+        }
+        "wasserstein" | "kl" | "js" | "hellinger" => {
+            for r in 0..n {
+                for i in 0..e {
+                    let mut acc = 0.0f32;
+                    let mut log_bc = 0.0f32;
+                    for j in 0..dz {
+                        let m1 = z_mu[r * dz + j];
+                        let m2 = p_mu[i * dz + j];
+                        let v1 = z_lv[r * dz + j].exp();
+                        let v2 = p_lv[i * dz + j].exp();
+                        let dm2 = (m1 - m2) * (m1 - m2);
+                        match metric {
+                            "wasserstein" => {
+                                let ds = v1.sqrt() - v2.sqrt();
+                                acc += dm2 + ds * ds;
+                            }
+                            "kl" => {
+                                acc += 0.5
+                                    * ((v2 / v1).ln() + (v1 + dm2) / v2
+                                        - 1.0);
+                            }
+                            "js" => {
+                                let v0 = 0.5 * (v1 + v2);
+                                let m0 = 0.5 * (m1 + m2);
+                                acc += 0.25
+                                    * (((v1 + v2) * (v1 + v2)
+                                        / (4.0 * v1 * v2))
+                                        .ln()
+                                        + (v1 + (m1 - m0) * (m1 - m0)) / v0
+                                        + (v2 + (m2 - m0) * (m2 - m0)) / v0
+                                        - 2.0);
+                            }
+                            "hellinger" => {
+                                let s1 = v1.sqrt();
+                                let s2 = v2.sqrt();
+                                log_bc += 0.5
+                                    * (2.0 * s1 * s2 / (v1 + v2) + EPS).ln()
+                                    - 0.25 * dm2 / (v1 + v2);
+                            }
+                            _ => unreachable!(),
+                        }
+                    }
+                    out[r * e + i] = if metric == "hellinger" {
+                        -(1.0 - log_bc.exp())
+                    } else {
+                        -acc
+                    };
+                }
+            }
+        }
+        other => panic!("unknown metric '{other}'"),
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// Construction from artifact metadata / golden files
+// ---------------------------------------------------------------------
+
+fn leaf(params: &Json, key: &str) -> Vec<f32> {
+    params
+        .get(&format!("['{key}']"))
+        .map(|j| j.as_f32_flat())
+        .unwrap_or_default()
+}
+
+impl Router {
+    /// Build from a golden JSON file's `config` + `router_params`.
+    pub fn from_golden(g: &Json) -> Router {
+        let c = g.at("config");
+        let kind = match c.at("router").as_str().unwrap() {
+            "vanilla" => RouterKind::Vanilla,
+            "deepseek" => RouterKind::DeepSeek,
+            "lpr" => RouterKind::Lpr,
+            other => panic!("unknown router kind {other}"),
+        };
+        let cfg = RouterConfig {
+            kind,
+            d_model: c.at("d_model").as_usize().unwrap(),
+            n_experts: c.at("n_experts").as_usize().unwrap(),
+            top_k: c.at("top_k").as_usize().unwrap(),
+            latent_dim: c.at("latent_dim").as_usize().unwrap(),
+            metric: c.at("metric").as_str().unwrap().to_string(),
+            unit_ball: c.at("unit_ball").as_bool().unwrap(),
+            gaussian_sigma: c.at("gaussian_sigma").as_f64().unwrap() as f32,
+            n_score_heads: c.at("n_score_heads").as_usize().unwrap(),
+        };
+        let rp = g.at("router_params");
+        let p = RouterParams {
+            wg: leaf(rp, "wg"),
+            bias: leaf(rp, "bias"),
+            norm: leaf(rp, "norm"),
+            w_mu: leaf(rp, "w_mu"),
+            b_mu: leaf(rp, "b_mu"),
+            w_lv: leaf(rp, "w_lv"),
+            b_lv: leaf(rp, "b_lv"),
+            proto_mu: leaf(rp, "proto_mu"),
+            proto_lv: leaf(rp, "proto_lv"),
+            wq: leaf(rp, "wq"),
+            wk: leaf(rp, "wk"),
+        };
+        Router::new(cfg, p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    fn rand_vec(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32 * scale).collect()
+    }
+
+    fn lpr_router(metric: &str, rng: &mut Rng) -> Router {
+        let (d, dz, e) = (16, 8, 6);
+        let cfg = RouterConfig {
+            kind: RouterKind::Lpr,
+            d_model: d,
+            n_experts: e,
+            top_k: 2,
+            latent_dim: dz,
+            metric: metric.to_string(),
+            unit_ball: true,
+            gaussian_sigma: 1.0,
+            n_score_heads: 4,
+        };
+        let dh = dz / 4;
+        let p = RouterParams {
+            norm: vec![1.0; d],
+            w_mu: rand_vec(rng, d * dz, 0.3),
+            b_mu: vec![0.0; dz],
+            w_lv: rand_vec(rng, d * dz, 0.05),
+            b_lv: vec![-4.0; dz],
+            proto_mu: rand_vec(rng, e * dz, 0.5),
+            proto_lv: vec![-2.0; e * dz],
+            wq: rand_vec(rng, 4 * dz * dh, 0.4),
+            wk: rand_vec(rng, 4 * dz * dh, 0.4),
+            ..Default::default()
+        };
+        Router::new(cfg, p)
+    }
+
+    #[test]
+    fn top_k_orders_and_breaks_ties_low_index() {
+        assert_eq!(top_k_indices(&[1.0, 3.0, 3.0, 2.0], 3), vec![1, 2, 3]);
+        assert_eq!(top_k_indices(&[5.0, 1.0], 1), vec![0]);
+    }
+
+    #[test]
+    fn all_metrics_route_and_conserve_load() {
+        let mut rng = Rng::new(5);
+        for metric in METRICS {
+            let r = lpr_router(metric, &mut rng);
+            let n = 32;
+            let h = rand_vec(&mut rng, n * r.cfg.d_model, 1.0);
+            let out = r.forward(&h);
+            assert_eq!(out.topk_idx.len(), n);
+            let total: f32 = out.load.iter().sum();
+            assert_eq!(total as usize, n * r.cfg.top_k, "metric {metric}");
+            for w in &out.weights {
+                let s: f32 = w.iter().sum();
+                assert!((s - 1.0).abs() < 1e-4, "{metric}: {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn weights_sum_to_one_property() {
+        forall(
+            30,
+            77,
+            |rng| {
+                let r = lpr_router("cosine", &mut rng.clone());
+                let h = rand_vec(rng, 8 * 16, 1.0);
+                (r, h)
+            },
+            |(r, h)| {
+                let out = r.forward(h);
+                for w in &out.weights {
+                    let s: f32 = w.iter().sum();
+                    if (s - 1.0).abs() > 1e-4 {
+                        return Err(format!("weights sum {s}"));
+                    }
+                    if w.windows(2).any(|p| p[0] < p[1] - 1e-6) {
+                        return Err("weights not descending".into());
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn deepseek_bias_forces_selection_not_weights() {
+        let (d, e) = (8, 4);
+        let mut rng = Rng::new(3);
+        let cfg = RouterConfig {
+            kind: RouterKind::DeepSeek,
+            d_model: d,
+            n_experts: e,
+            top_k: 2,
+            latent_dim: 0,
+            metric: "dot".into(),
+            unit_ball: false,
+            gaussian_sigma: 1.0,
+            n_score_heads: 1,
+        };
+        let mut p = RouterParams {
+            wg: rand_vec(&mut rng, d * e, 0.5),
+            bias: vec![0.0; e],
+            ..Default::default()
+        };
+        p.bias[3] = 100.0;
+        let r = Router::new(cfg, p);
+        let h = rand_vec(&mut rng, 16 * d, 1.0);
+        let out = r.forward(&h);
+        for row in &out.topk_idx {
+            assert!(row.contains(&3));
+        }
+        // weights normalized from raw affinities: within (0, 1]
+        for w in out.weights.iter().flatten() {
+            assert!(*w > 0.0 && *w <= 1.0 + 1e-5);
+        }
+    }
+
+    #[test]
+    fn vanilla_matches_manual_computation() {
+        // d=2, E=3; h=[1,0] -> scores = first row of wg
+        let cfg = RouterConfig {
+            kind: RouterKind::Vanilla,
+            d_model: 2,
+            n_experts: 3,
+            top_k: 2,
+            latent_dim: 0,
+            metric: "dot".into(),
+            unit_ball: false,
+            gaussian_sigma: 1.0,
+            n_score_heads: 1,
+        };
+        let p = RouterParams {
+            wg: vec![0.5, 2.0, 1.0, /* row2 */ 0.0, 0.0, 0.0],
+            ..Default::default()
+        };
+        let r = Router::new(cfg, p);
+        let out = r.forward(&[1.0, 0.0]);
+        assert_eq!(out.topk_idx[0], vec![1, 2]);
+        let w = &out.weights[0];
+        let e0 = (2.0f32 - 2.0).exp();
+        let e1 = (1.0f32 - 2.0).exp();
+        assert!((w[0] - e0 / (e0 + e1)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn unit_ball_projection_only_shrinks() {
+        let mut rng = Rng::new(11);
+        let mut r = lpr_router("gaussian", &mut rng);
+        for v in r.p.proto_mu.iter_mut() {
+            *v *= 50.0; // blow up prototypes
+        }
+        let h = rand_vec(&mut rng, 4 * 16, 1.0);
+        let out = r.forward(&h);
+        // gaussian scores must stay well away from underflow because
+        // prototypes were projected back into the unit ball
+        let max_w = out.weights.iter().flatten().cloned().fold(0.0, f32::max);
+        assert!(max_w > 0.4);
+    }
+}

@@ -1,0 +1,220 @@
+//! Parsed `meta.json` — the flat-buffer contract emitted by aot.py.
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// One leaf tensor of the flattened parameter pytree.
+#[derive(Debug, Clone)]
+pub struct LeafSpec {
+    pub path: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl LeafSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Subset of the python `Config` the runtime needs.
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub name: String,
+    pub arch: String,
+    pub router: String,
+    pub metric: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub latent_dim: usize,
+    pub total_steps: usize,
+    pub batch_size: usize,
+    pub seq_len: usize,
+    pub capacity_factor: f64,
+    pub unit_ball: bool,
+    pub hypersphere_init: bool,
+    pub gaussian_sigma: f64,
+}
+
+impl ModelConfig {
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let s = |k: &str| -> Result<String> {
+            Ok(j.at(k).as_str().context(k.to_string())?.to_string())
+        };
+        let u = |k: &str| -> Result<usize> {
+            j.at(k).as_usize().with_context(|| k.to_string())
+        };
+        let f = |k: &str| -> Result<f64> {
+            j.at(k).as_f64().with_context(|| k.to_string())
+        };
+        let b = |k: &str| -> Result<bool> {
+            j.at(k).as_bool().with_context(|| k.to_string())
+        };
+        Ok(ModelConfig {
+            name: s("name")?,
+            arch: s("arch")?,
+            router: s("router")?,
+            metric: s("metric")?,
+            vocab: u("vocab")?,
+            d_model: u("d_model")?,
+            n_layers: u("n_layers")?,
+            n_experts: u("n_experts")?,
+            top_k: u("top_k")?,
+            latent_dim: u("latent_dim")?,
+            total_steps: u("total_steps")?,
+            batch_size: u("batch_size")?,
+            seq_len: u("seq_len")?,
+            capacity_factor: f("capacity_factor")?,
+            unit_ball: b("unit_ball")?,
+            hypersphere_init: b("hypersphere_init")?,
+            gaussian_sigma: f("gaussian_sigma")?,
+        })
+    }
+
+    pub fn tokens_per_batch(&self) -> usize {
+        self.batch_size * self.seq_len
+    }
+}
+
+/// Full parsed meta.json.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub config: ModelConfig,
+    pub n_params: usize,
+    pub n_state: usize,
+    pub params: Vec<LeafSpec>,
+    pub router_params: Vec<LeafSpec>,
+    pub metric_names: Vec<String>,
+    pub eval_metric_names: Vec<String>,
+    pub load_shape: (usize, usize),
+    pub batch_shape: (usize, usize),
+    pub default_loss_weights: Vec<f32>,
+    pub param_count: usize,
+}
+
+fn leaf_specs(j: &Json) -> Result<Vec<LeafSpec>> {
+    let arr = j.as_arr().context("leaf specs: expected array")?;
+    arr.iter()
+        .map(|x| {
+            Ok(LeafSpec {
+                path: x.at("path").as_str().context("path")?.to_string(),
+                shape: x.at("shape").as_usize_vec(),
+                dtype: x.at("dtype").as_str().context("dtype")?.to_string(),
+            })
+        })
+        .collect()
+}
+
+fn str_vec(j: &Json) -> Vec<String> {
+    j.as_arr()
+        .expect("expected array of strings")
+        .iter()
+        .map(|x| x.as_str().expect("string").to_string())
+        .collect()
+}
+
+impl ArtifactMeta {
+    pub fn load(art_dir: &Path, name: &str) -> Result<Self> {
+        let path = art_dir.join(format!("{name}.meta.json"));
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let j = Json::parse(&text)
+            .with_context(|| format!("parse {}", path.display()))?;
+        Self::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let load_shape = j.at("load_shape").as_usize_vec();
+        let batch_shape = j.at("batch_shape").as_usize_vec();
+        if load_shape.len() != 2 || batch_shape.len() != 2 {
+            bail!("malformed shape fields in meta");
+        }
+        let meta = ArtifactMeta {
+            name: j.at("name").as_str().context("name")?.to_string(),
+            config: ModelConfig::from_json(j.at("config"))?,
+            n_params: j.at("n_params").as_usize().context("n_params")?,
+            n_state: j.at("n_state").as_usize().context("n_state")?,
+            params: leaf_specs(j.at("params"))?,
+            router_params: leaf_specs(j.at("router_params"))?,
+            metric_names: str_vec(j.at("metric_names")),
+            eval_metric_names: str_vec(j.at("eval_metric_names")),
+            load_shape: (load_shape[0], load_shape[1]),
+            batch_shape: (batch_shape[0], batch_shape[1]),
+            default_loss_weights: j
+                .at("default_loss_weights")
+                .as_f32_flat(),
+            param_count: j.at("param_count").as_usize().context("param_count")?,
+        };
+        if meta.n_state != 3 * meta.n_params {
+            bail!("meta invariant broken: n_state != 3*n_params");
+        }
+        if meta.params.len() != meta.n_params {
+            bail!("meta invariant broken: params list length");
+        }
+        Ok(meta)
+    }
+
+    /// Index of a metric in the train-step metrics vector.
+    pub fn metric_idx(&self, name: &str) -> usize {
+        self.metric_names
+            .iter()
+            .position(|m| m == name)
+            .unwrap_or_else(|| panic!("unknown metric '{name}'"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta_json() -> Json {
+        Json::parse(
+            r#"{
+          "name": "t", "n_params": 2, "n_state": 6,
+          "config": {"name":"t","arch":"qwen3","router":"lpr",
+            "metric":"cosine","vocab":64,"d_model":32,"n_layers":1,
+            "n_experts":8,"top_k":2,"latent_dim":8,"total_steps":10,
+            "batch_size":2,"seq_len":8,"capacity_factor":1.5,
+            "unit_ball":true,"hypersphere_init":true,
+            "gaussian_sigma":1.0},
+          "params": [
+            {"path":"['embed']","shape":[64,32],"dtype":"float32"},
+            {"path":"['final_norm']","shape":[32],"dtype":"float32"}],
+          "router_params": [
+            {"path":"['proto_mu']","shape":[8,8],"dtype":"float32"}],
+          "metric_names": ["loss","lr"],
+          "eval_metric_names": ["loss","drop_frac"],
+          "load_shape": [1,8], "batch_shape": [2,8],
+          "default_loss_weights": [0.01,1,0.1,0.01,0.001,0.001,0,0],
+          "param_count": 2080
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_meta() {
+        let m = ArtifactMeta::from_json(&meta_json()).unwrap();
+        assert_eq!(m.n_params, 2);
+        assert_eq!(m.params[0].numel(), 64 * 32);
+        assert_eq!(m.load_shape, (1, 8));
+        assert_eq!(m.config.n_experts, 8);
+        assert_eq!(m.metric_idx("lr"), 1);
+        assert_eq!(m.default_loss_weights.len(), 8);
+    }
+
+    #[test]
+    fn rejects_broken_invariants() {
+        let mut j = meta_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("n_state".into(), Json::Num(5.0));
+        }
+        assert!(ArtifactMeta::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,113 @@
+//! L3 runtime: load AOT HLO-text artifacts and execute them on PJRT.
+//!
+//! The contract with the build-time python side (`python/compile/aot.py`)
+//! is: per config, four HLO-text executables (`init`, `train`, `eval`,
+//! `router`) plus `meta.json` describing the flat buffer order. This
+//! module wraps the `xla` crate (`PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → compile → execute) and keeps
+//! training state **device-resident**: the vendored crate is patched to
+//! untuple executable outputs, so `train_step` output buffers are fed
+//! straight back as next-step inputs with no host round-trip (the only
+//! per-step host traffic is the metrics vector and load histogram).
+
+pub mod artifact;
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::Path;
+
+pub use artifact::{ArtifactMeta, LeafSpec};
+
+/// A PJRT CPU session owning the client and compiled executables.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime { client })
+    }
+
+    /// Load one HLO text file and compile it.
+    pub fn compile_hlo(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))
+    }
+
+    // ---- host -> device ------------------------------------------------
+    pub fn buf_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("upload f32{dims:?}: {e:?}"))
+    }
+
+    pub fn buf_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("upload i32{dims:?}: {e:?}"))
+    }
+
+    pub fn buf_scalar_i32(&self, v: i32) -> Result<xla::PjRtBuffer> {
+        self.buf_i32(&[v], &[])
+    }
+
+    // ---- device -> host ------------------------------------------------
+    pub fn to_f32(&self, buf: &xla::PjRtBuffer) -> Result<Vec<f32>> {
+        let lit = buf
+            .to_literal_sync()
+            .map_err(|e| anyhow!("download literal: {e:?}"))?;
+        lit.to_vec::<f32>().map_err(|e| anyhow!("literal->f32: {e:?}"))
+    }
+
+    pub fn to_i32(&self, buf: &xla::PjRtBuffer) -> Result<Vec<i32>> {
+        let lit = buf
+            .to_literal_sync()
+            .map_err(|e| anyhow!("download literal: {e:?}"))?;
+        lit.to_vec::<i32>().map_err(|e| anyhow!("literal->i32: {e:?}"))
+    }
+}
+
+/// Run an executable whose inputs are already on device; returns the
+/// untupled output buffers of replica 0.
+pub fn execute_buffers(
+    exe: &xla::PjRtLoadedExecutable,
+    args: &[&xla::PjRtBuffer],
+) -> Result<Vec<xla::PjRtBuffer>> {
+    let mut outs = exe
+        .execute_b(args)
+        .map_err(|e| anyhow!("execute_b: {e:?}"))?;
+    if outs.is_empty() {
+        bail!("executable produced no replicas");
+    }
+    Ok(outs.swap_remove(0))
+}
+
+/// Compiled artifact set for one config (init/train/eval/router).
+pub struct CompiledArtifacts {
+    pub meta: ArtifactMeta,
+    pub init: xla::PjRtLoadedExecutable,
+    pub train: xla::PjRtLoadedExecutable,
+    pub eval: xla::PjRtLoadedExecutable,
+    pub router: xla::PjRtLoadedExecutable,
+}
+
+impl CompiledArtifacts {
+    /// Load `artifacts/<name>.*` and compile all four executables.
+    pub fn load(rt: &Runtime, art_dir: &Path, name: &str) -> Result<Self> {
+        let meta = ArtifactMeta::load(art_dir, name)
+            .with_context(|| format!("loading meta for '{name}'"))?;
+        let path = |kind: &str| art_dir.join(format!("{name}.{kind}.hlo.txt"));
+        Ok(CompiledArtifacts {
+            init: rt.compile_hlo(&path("init"))?,
+            train: rt.compile_hlo(&path("train"))?,
+            eval: rt.compile_hlo(&path("eval"))?,
+            router: rt.compile_hlo(&path("router"))?,
+            meta,
+        })
+    }
+}

@@ -1,0 +1,171 @@
+//! Micro-benchmark harness (offline build: no `criterion`).
+//!
+//! `cargo bench` binaries use `Bench` to time closures with warmup and
+//! report min/median/mean like criterion's summary line. Results are
+//! also appended to a CSV so EXPERIMENTS.md §Perf can track deltas
+//! across optimization iterations.
+
+use std::time::Instant;
+
+pub struct Bench {
+    pub name: String,
+    /// Target wall-time per measurement batch, seconds.
+    pub target_s: f64,
+    pub warmup_iters: usize,
+    results: Vec<BenchResult>,
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub min_ns: f64,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    /// Optional throughput denominator (items per iteration).
+    pub items_per_iter: f64,
+}
+
+impl BenchResult {
+    pub fn per_item_ns(&self) -> f64 {
+        self.median_ns / self.items_per_iter.max(1.0)
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+impl Bench {
+    pub fn new(suite: &str) -> Self {
+        println!("== bench suite: {suite}");
+        Bench {
+            name: suite.to_string(),
+            target_s: 1.0,
+            warmup_iters: 3,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f`, auto-scaling iteration count to ~target_s of wall time.
+    pub fn run(&mut self, name: &str, mut f: impl FnMut()) -> BenchResult {
+        self.run_items(name, 1.0, &mut f)
+    }
+
+    /// Like `run`, but reports per-item throughput too.
+    pub fn run_items(
+        &mut self,
+        name: &str,
+        items_per_iter: f64,
+        f: &mut dyn FnMut(),
+    ) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        // estimate single-iter cost
+        let t0 = Instant::now();
+        f();
+        let est = t0.elapsed().as_secs_f64().max(1e-9);
+        let batch = ((self.target_s / 10.0 / est).ceil() as usize).clamp(1, 1_000_000);
+        let n_batches = 10usize;
+        let mut samples = Vec::with_capacity(n_batches);
+        for _ in 0..n_batches {
+            let t = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            samples.push(t.elapsed().as_secs_f64() * 1e9 / batch as f64);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let res = BenchResult {
+            name: format!("{}/{}", self.name, name),
+            iters: batch * n_batches,
+            min_ns: samples[0],
+            median_ns: samples[n_batches / 2],
+            mean_ns: samples.iter().sum::<f64>() / n_batches as f64,
+            items_per_iter,
+        };
+        let thr = if items_per_iter > 1.0 {
+            format!(
+                "  ({:.2} Melem/s)",
+                items_per_iter / res.median_ns * 1e3
+            )
+        } else {
+            String::new()
+        };
+        println!(
+            "{:<44} median {:>10}  min {:>10}  n={}{}",
+            res.name,
+            fmt_ns(res.median_ns),
+            fmt_ns(res.min_ns),
+            res.iters,
+            thr
+        );
+        self.results.push(res.clone());
+        res
+    }
+
+    /// Append all results to a CSV (created with header if absent).
+    pub fn write_csv(&self, path: &std::path::Path) -> std::io::Result<()> {
+        use std::io::Write;
+        let new = !path.exists();
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)?;
+        if new {
+            writeln!(f, "name,iters,min_ns,median_ns,mean_ns,items_per_iter")?;
+        }
+        for r in &self.results {
+            writeln!(
+                f,
+                "{},{},{},{},{},{}",
+                r.name, r.iters, r.min_ns, r.median_ns, r.mean_ns,
+                r.items_per_iter
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn times_a_closure() {
+        let mut b = Bench::new("test");
+        b.target_s = 0.05;
+        b.warmup_iters = 1;
+        let mut acc = 0u64;
+        let r = b.run("noop-ish", || {
+            acc = acc.wrapping_add(std::hint::black_box(1));
+        });
+        assert!(r.median_ns > 0.0);
+        assert!(r.min_ns <= r.median_ns);
+    }
+
+    #[test]
+    fn csv_written() {
+        let mut b = Bench::new("test2");
+        b.target_s = 0.02;
+        b.warmup_iters = 0;
+        b.run("x", || {
+            std::hint::black_box(3u64.pow(7));
+        });
+        let p = std::env::temp_dir().join("lpr-bench-test.csv");
+        let _ = std::fs::remove_file(&p);
+        b.write_csv(&p).unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        assert!(s.starts_with("name,"));
+        assert!(s.contains("test2/x"));
+    }
+}

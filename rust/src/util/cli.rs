@@ -1,0 +1,106 @@
+//! Tiny argv parser (offline build: no `clap`).
+//!
+//! Grammar: `lpr <subcommand> [positional...] [--flag] [--key value]`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub cmd: String,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Args {
+        let mut a = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(cmd) = it.next() {
+            a.cmd = cmd.clone();
+        }
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                // `--key=value` or `--key value` or bare `--flag`
+                if let Some((k, v)) = name.split_once('=') {
+                    a.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    a.options
+                        .insert(name.to_string(), it.next().unwrap().clone());
+                } else {
+                    a.flags.push(name.to_string());
+                }
+            } else {
+                a.positional.push(tok.clone());
+            }
+        }
+        a
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.opt(key).unwrap_or(default)
+    }
+
+    pub fn opt_usize(&self, key: &str, default: usize) -> usize {
+        self.opt(key)
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{key} wants an integer, got '{s}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn opt_f64(&self, key: &str, default: f64) -> f64 {
+        self.opt(key)
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{key} wants a number, got '{s}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        // NOTE: a bare `--flag` followed by a non-dash token is parsed as
+        // `--key value`; flags must therefore come last or use `--k=v`.
+        let a = Args::parse(&argv(
+            "train ab-base extra --steps 100 --out=/tmp/x --quiet",
+        ));
+        assert_eq!(a.cmd, "train");
+        assert_eq!(a.positional, vec!["ab-base", "extra"]);
+        assert_eq!(a.opt("steps"), Some("100"));
+        assert_eq!(a.opt("out"), Some("/tmp/x"));
+        assert!(a.has_flag("quiet"));
+        assert_eq!(a.opt_usize("steps", 0), 100);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = Args::parse(&argv("eval --fast"));
+        assert!(a.has_flag("fast"));
+        assert!(a.opt("fast").is_none());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(&argv("x"));
+        assert_eq!(a.opt_or("missing", "d"), "d");
+        assert_eq!(a.opt_usize("n", 7), 7);
+        assert_eq!(a.opt_f64("f", 1.5), 1.5);
+    }
+}

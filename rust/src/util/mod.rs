@@ -1,0 +1,9 @@
+//! Self-contained substrate utilities (the offline build has no serde /
+//! clap / rand / proptest — these modules replace them).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod table;

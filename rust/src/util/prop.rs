@@ -1,0 +1,75 @@
+//! Micro property-testing harness (offline build: no `proptest`).
+//!
+//! `forall(cases, seed, gen, check)` draws `cases` random inputs from
+//! `gen` and asserts `check`; on failure it panics with the case index
+//! and a debug dump of the failing input so the run is reproducible from
+//! the fixed seed.
+
+use super::rng::Rng;
+
+pub fn forall<T: std::fmt::Debug>(
+    cases: usize,
+    seed: u64,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut check: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = check(&input) {
+            panic!(
+                "property failed at case {case}/{cases} (seed {seed}): \
+                 {msg}\ninput: {input:#?}"
+            );
+        }
+    }
+}
+
+/// Common generators.
+pub mod gen {
+    use super::Rng;
+
+    pub fn vec_f64(rng: &mut Rng, len_max: usize, lo: f64, hi: f64) -> Vec<f64> {
+        let n = 1 + rng.below(len_max.max(1));
+        (0..n).map(|_| rng.range_f64(lo, hi)).collect()
+    }
+
+    pub fn vec_f32(rng: &mut Rng, len_max: usize, lo: f64, hi: f64) -> Vec<f32> {
+        vec_f64(rng, len_max, lo, hi)
+            .into_iter()
+            .map(|x| x as f32)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        forall(
+            50,
+            1,
+            |r| gen::vec_f64(r, 16, 0.0, 1.0),
+            |v| {
+                if v.iter().all(|x| (0.0..1.0).contains(x)) {
+                    Ok(())
+                } else {
+                    Err("out of range".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_failures() {
+        forall(
+            10,
+            2,
+            |r| r.below(10),
+            |&x| if x < 5 { Ok(()) } else { Err(format!("{x} >= 5")) },
+        );
+    }
+}
