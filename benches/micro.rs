@@ -1,15 +1,22 @@
 //! Microbenchmarks for the L3 hot paths (no artifacts needed):
-//! serving router across metrics, dispatch simulator, metric kernels,
-//! data pipeline, JSON parsing.
+//! serving router (legacy vs compiled plan vs sharded engine) across
+//! the full metric library, dispatch simulator, metric kernels, data
+//! pipeline, JSON parsing.
 //!
 //! Run: `cargo bench --bench micro` (results appended to
-//! `results/bench.csv`).
+//! `results/bench.csv`; the routing sweep is also written as
+//! machine-readable JSON to `BENCH_router.json` so the perf trajectory
+//! is trackable across PRs). Set `LPR_BENCH_FAST=1` for a short smoke
+//! run (CI).
 
 use lpr::data::{Batcher, ZipfMarkovCorpus};
 use lpr::dispatch::{synthetic_assignments, DispatchSim, SimConfig};
 use lpr::metrics::{gini, min_max_ratio};
 use lpr::router::linalg::matmul;
-use lpr::router::{Router, RouterConfig, RouterKind, RouterParams};
+use lpr::router::{
+    synthetic_lpr_router, RouteBuffers, Router, RouterBatch, RouterConfig,
+    RouterKind, RouterParams, ServingEngine, METRICS,
+};
 use lpr::util::bench::Bench;
 use lpr::util::json::Json;
 use lpr::util::rng::Rng;
@@ -18,51 +25,131 @@ fn normal_vec(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
     (0..n).map(|_| rng.normal() as f32 * scale).collect()
 }
 
-fn lpr_router(metric: &str, rng: &mut Rng, d: usize, dz: usize, e: usize,
-              k: usize) -> Router {
-    let heads = 4;
-    let dh = (dz / heads).max(1);
-    Router::new(
-        RouterConfig {
-            kind: RouterKind::Lpr,
-            d_model: d,
-            n_experts: e,
-            top_k: k,
-            latent_dim: dz,
-            metric: metric.into(),
-            unit_ball: true,
-            gaussian_sigma: 1.0,
-            n_score_heads: heads,
-        },
-        RouterParams {
-            norm: vec![1.0; d],
-            w_mu: normal_vec(rng, d * dz, 0.1),
-            b_mu: vec![0.0; dz],
-            w_lv: normal_vec(rng, d * dz, 0.01),
-            b_lv: vec![-4.0; dz],
-            proto_mu: normal_vec(rng, e * dz, 0.5),
-            proto_lv: vec![-2.0; e * dz],
-            wq: normal_vec(rng, heads * dz * dh, 0.3),
-            wk: normal_vec(rng, heads * dz * dh, 0.3),
-            ..Default::default()
-        },
-    )
+/// One row of BENCH_router.json.
+struct RouterRow {
+    name: String,
+    n: usize,
+    d: usize,
+    e: usize,
+    k: usize,
+    threads: usize,
+    ns_per_token: f64,
+}
+
+fn write_router_json(rows: &[RouterRow]) {
+    let mut s = String::from("[\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "  {{\"name\": \"{}\", \"n\": {}, \"d\": {}, \"E\": {}, \
+             \"k\": {}, \"threads\": {}, \"ns_per_token\": {:.2}}}{}\n",
+            r.name,
+            r.n,
+            r.d,
+            r.e,
+            r.k,
+            r.threads,
+            r.ns_per_token,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("]\n");
+    if let Err(e) = std::fs::write("BENCH_router.json", &s) {
+        eprintln!("warn: could not write BENCH_router.json: {e}");
+    }
 }
 
 fn main() {
     let mut b = Bench::new("micro");
+    if std::env::var("LPR_BENCH_FAST").is_ok() {
+        b.target_s = 0.05; // CI smoke mode
+    }
     let mut rng = Rng::new(1);
+    let mut router_rows: Vec<RouterRow> = Vec::new();
 
-    // ---- serving router: tokens/s per metric (paper-scale E=128) ----
-    let (d, dz, e, k, n) = (256usize, 16usize, 128usize, 8usize, 1024usize);
+    // ---- serving router: tokens/s per metric (acceptance config:
+    // E=64, d=256, top-8) — legacy per-call path vs compiled plan.
+    // NOTE: forward_reference already includes the construction-time
+    // projection hoist, so the legacy rows slightly understate the
+    // true pre-plan cost (see ROADMAP.md perf-trajectory notes). ----
+    let (d, dz, e, k, n) = (256usize, 16usize, 64usize, 8usize, 1024usize);
     let h = normal_vec(&mut rng, n * d, 1.0);
-    for metric in ["dot", "cosine", "gaussian", "wasserstein", "xattn"] {
-        let r = lpr_router(metric, &mut rng, d, dz, e, k);
-        b.run_items(&format!("router_fwd/{metric}/{n}tok"), n as f64,
-                    &mut || {
-            std::hint::black_box(r.forward(&h));
+    for metric in METRICS {
+        let r = synthetic_lpr_router(metric, &mut rng, d, dz, e, k);
+        let res = b.run_items(
+            &format!("router_legacy/{metric}/{n}tok"),
+            n as f64,
+            &mut || {
+                std::hint::black_box(r.forward_reference(&h));
+            },
+        );
+        router_rows.push(RouterRow {
+            name: format!("legacy/{metric}"),
+            n,
+            d,
+            e,
+            k,
+            threads: 1,
+            ns_per_token: res.per_item_ns(),
+        });
+        let plan = r.plan().clone();
+        let mut buf = RouteBuffers::new();
+        let mut out = RouterBatch::new();
+        let res = b.run_items(
+            &format!("router_plan/{metric}/{n}tok"),
+            n as f64,
+            &mut || {
+                plan.forward_into(
+                    std::hint::black_box(&h),
+                    &mut buf,
+                    &mut out,
+                );
+                std::hint::black_box(&out);
+            },
+        );
+        router_rows.push(RouterRow {
+            name: format!("plan/{metric}"),
+            n,
+            d,
+            e,
+            k,
+            threads: 1,
+            ns_per_token: res.per_item_ns(),
         });
     }
+
+    // ---- sharded serving engine: thread scaling on the LPR hot path --
+    let cores = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1);
+    for metric in ["cosine", "xattn"] {
+        let r = synthetic_lpr_router(metric, &mut rng, d, dz, e, k);
+        for threads in [1usize, 2, 4, 8] {
+            if threads > cores {
+                continue;
+            }
+            let mut engine =
+                ServingEngine::new(r.plan().clone(), threads);
+            let mut out = RouterBatch::new();
+            let res = b.run_items(
+                &format!("router_engine/{metric}/t{threads}/{n}tok"),
+                n as f64,
+                &mut || {
+                    engine.route_into(std::hint::black_box(&h), &mut out);
+                    std::hint::black_box(&out);
+                },
+            );
+            router_rows.push(RouterRow {
+                name: format!("engine/{metric}"),
+                n,
+                d,
+                e,
+                k,
+                threads,
+                ns_per_token: res.per_item_ns(),
+            });
+        }
+    }
+
     // vanilla for comparison (d x E matmul dominates)
     let van = Router::new(
         RouterConfig {
@@ -79,9 +166,34 @@ fn main() {
         RouterParams { wg: normal_vec(&mut rng, d * e, 0.1),
                        ..Default::default() },
     );
-    b.run_items(&format!("router_fwd/vanilla/{n}tok"), n as f64, &mut || {
-        std::hint::black_box(van.forward(&h));
-    });
+    {
+        let plan = van.plan().clone();
+        let mut buf = RouteBuffers::new();
+        let mut out = RouterBatch::new();
+        let res = b.run_items(
+            &format!("router_plan/vanilla/{n}tok"),
+            n as f64,
+            &mut || {
+                plan.forward_into(
+                    std::hint::black_box(&h),
+                    &mut buf,
+                    &mut out,
+                );
+                std::hint::black_box(&out);
+            },
+        );
+        router_rows.push(RouterRow {
+            name: "plan/vanilla".into(),
+            n,
+            d,
+            e,
+            k,
+            threads: 1,
+            ns_per_token: res.per_item_ns(),
+        });
+    }
+
+    write_router_json(&router_rows);
 
     // ---- dispatch simulator ----
     let assignments =
@@ -123,7 +235,7 @@ fn main() {
     // ---- dense matmul bound (router roofline reference) ----
     let a = normal_vec(&mut rng, n * d, 1.0);
     let w = normal_vec(&mut rng, d * e, 1.0);
-    b.run_items("linalg/matmul_1024x256x128", n as f64, &mut || {
+    b.run_items("linalg/matmul_1024x256x64", n as f64, &mut || {
         std::hint::black_box(matmul(
             std::hint::black_box(&a),
             std::hint::black_box(&w),

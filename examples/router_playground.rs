@@ -4,13 +4,18 @@
 //! Builds an LPR router with hypersphere-initialized prototypes, feeds a
 //! Gaussian-mixture token stream (the clusterability assumption of
 //! §2.2.1, with Zipf-skewed cluster sizes — the imbalanced-frequencies
-//! assumption), and prints per-metric load balance + routing throughput.
-//! No PJRT needed — this is the zero-dependency serving hot path.
+//! assumption), and prints per-metric load balance + routing throughput
+//! for both the legacy per-call path and the compiled `RouterPlan`
+//! (reused `RouteBuffers`, flat outputs, partial top-k select). The two
+//! paths are asserted identical on every batch. No PJRT needed — this
+//! is the zero-dependency serving hot path.
 //!
 //! Run: `cargo run --release --example router_playground`
 
 use lpr::metrics::{entropy_frac, gini, min_max_ratio};
-use lpr::router::{Router, RouterConfig, RouterKind, RouterParams, METRICS};
+use lpr::router::{
+    synthetic_lpr_router, RouteBuffers, RouterBatch, METRICS,
+};
 use lpr::util::rng::Rng;
 use std::time::Instant;
 
@@ -19,7 +24,7 @@ fn normal_vec(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
 }
 
 fn main() {
-    let (d, dz, e, k, heads) = (64usize, 16usize, 32usize, 4usize, 4usize);
+    let (d, dz, e, k) = (64usize, 16usize, 32usize, 4usize);
     let n_tokens = 4096usize;
     let mut rng = Rng::new(2025);
 
@@ -41,55 +46,40 @@ fn main() {
         n_tokens, n_clusters, e, k
     );
     println!(
-        "{:<14} {:>7} {:>9} {:>9} {:>14}",
-        "metric", "GINI", "min-max", "entropy", "tokens/s"
+        "{:<14} {:>7} {:>9} {:>9} {:>12} {:>12} {:>8}",
+        "metric", "GINI", "min-max", "entropy", "plan tok/s",
+        "legacy tok/s", "speedup"
     );
 
+    let mut buf = RouteBuffers::new();
+    let mut out = RouterBatch::new();
     for metric in METRICS {
-        // hypersphere prototype init (normalize gaussian rows)
-        let mut proto = normal_vec(&mut rng, e * dz, 1.0);
-        for i in 0..e {
-            let row = &mut proto[i * dz..(i + 1) * dz];
-            let norm: f32 = row.iter().map(|x| x * x).sum::<f32>().sqrt();
-            row.iter_mut().for_each(|x| *x /= norm);
-        }
-        let dh = dz / heads;
-        let router = Router::new(
-            RouterConfig {
-                kind: RouterKind::Lpr,
-                d_model: d,
-                n_experts: e,
-                top_k: k,
-                latent_dim: dz,
-                metric: metric.to_string(),
-                unit_ball: true,
-                gaussian_sigma: 1.0,
-                n_score_heads: heads,
-            },
-            RouterParams {
-                norm: vec![1.0; d],
-                w_mu: normal_vec(&mut rng, d * dz, 1.0 / (d as f32).sqrt()),
-                b_mu: vec![0.0; dz],
-                w_lv: normal_vec(&mut rng, d * dz, 0.01),
-                b_lv: vec![-4.0; dz],
-                proto_mu: proto,
-                proto_lv: vec![-2.0; e * dz],
-                wq: normal_vec(&mut rng, heads * dz * dh, 0.3),
-                wk: normal_vec(&mut rng, heads * dz * dh, 0.3),
-                ..Default::default()
-            },
-        );
+        let router = synthetic_lpr_router(metric, &mut rng, d, dz, e, k);
+        let plan = router.plan();
+
+        plan.forward_into(&h, &mut buf, &mut out); // warm buffers
+        let t0 = Instant::now();
+        plan.forward_into(&h, &mut buf, &mut out);
+        let dt_plan = t0.elapsed().as_secs_f64();
 
         let t0 = Instant::now();
-        let out = router.forward(&h);
-        let dt = t0.elapsed().as_secs_f64();
+        let reference = router.forward_reference(&h);
+        let dt_legacy = t0.elapsed().as_secs_f64();
+
+        // the compiled path must agree with the legacy oracle exactly
+        let nested = out.clone().into_nested();
+        assert_eq!(nested.topk_idx, reference.topk_idx, "{metric}");
+        assert_eq!(nested.load, reference.load, "{metric}");
+
         println!(
-            "{:<14} {:>7.3} {:>9.4} {:>9.3} {:>14.0}",
+            "{:<14} {:>7.3} {:>9.4} {:>9.3} {:>12.0} {:>12.0} {:>7.1}x",
             metric,
             gini(&out.load),
             min_max_ratio(&out.load),
             entropy_frac(&out.load),
-            n_tokens as f64 / dt
+            n_tokens as f64 / dt_plan,
+            n_tokens as f64 / dt_legacy,
+            dt_legacy / dt_plan
         );
     }
     println!(

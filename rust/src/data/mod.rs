@@ -15,6 +15,59 @@ pub mod tokenizer;
 
 use crate::util::rng::Rng;
 
+/// Gaussian-mixture *activation* stream with Zipf-skewed cluster sizes:
+/// the continuous-space analogue of `ZipfMarkovCorpus`, mirroring the
+/// same §2.2.1 assumptions (clusterability + imbalanced frequencies)
+/// for code that feeds token activations straight into the serving
+/// router (`route synthetic`, `dispatch-sim --routed`, the
+/// `dispatch-routed` report, `examples/serving_sim.rs`).
+pub struct MixtureStream {
+    pub d: usize,
+    /// [n_clusters, d] cluster centers.
+    centers: Vec<f32>,
+    /// Zipf cluster-selection weights.
+    weights: Vec<f64>,
+    /// Per-dim Gaussian noise scale around the chosen center.
+    noise: f32,
+}
+
+impl MixtureStream {
+    pub fn new(
+        rng: &mut Rng,
+        d: usize,
+        n_clusters: usize,
+        zipf_s: f64,
+        noise: f32,
+    ) -> MixtureStream {
+        let centers =
+            (0..n_clusters * d).map(|_| rng.normal() as f32).collect();
+        let weights = (1..=n_clusters)
+            .map(|r| 1.0 / (r as f64).powf(zipf_s))
+            .collect();
+        MixtureStream { d, centers, weights, noise }
+    }
+
+    /// The configuration shared by every synthetic serving driver:
+    /// 8 clusters, Zipf(1.1) sizes, noise 0.4.
+    pub fn standard(rng: &mut Rng, d: usize) -> MixtureStream {
+        MixtureStream::new(rng, d, 8, 1.1, 0.4)
+    }
+
+    /// Sample `n_tokens` activations into `h` ([n_tokens, d]; cleared
+    /// and resized, so a reused buffer does not allocate steady-state).
+    pub fn fill(&self, rng: &mut Rng, n_tokens: usize, h: &mut Vec<f32>) {
+        h.clear();
+        h.resize(n_tokens * self.d, 0.0);
+        for t in 0..n_tokens {
+            let c = rng.categorical(&self.weights);
+            for j in 0..self.d {
+                h[t * self.d + j] = self.centers[c * self.d + j]
+                    + self.noise * rng.normal() as f32;
+            }
+        }
+    }
+}
+
 /// Streaming synthetic corpus with Zipf marginals + Markov structure.
 pub struct ZipfMarkovCorpus {
     pub vocab: usize,
@@ -271,5 +324,19 @@ mod tests {
         assert_eq!(batch.tokens.len(), 48);
         assert_eq!(batch.targets.len(), 48);
         assert!(batch.tokens.iter().all(|&t| (t as usize) < 64));
+    }
+
+    #[test]
+    fn mixture_stream_shapes_and_determinism() {
+        let mut rng = Rng::new(12);
+        let mix = MixtureStream::standard(&mut rng, 8);
+        let mut h1 = Vec::new();
+        mix.fill(&mut Rng::new(99), 17, &mut h1);
+        assert_eq!(h1.len(), 17 * 8);
+        // same sampling seed -> identical stream; reused buffer resizes
+        let mut h2 = vec![0.0f32; 3];
+        mix.fill(&mut Rng::new(99), 17, &mut h2);
+        assert_eq!(h1, h2);
+        assert!(h1.iter().any(|&x| x != 0.0));
     }
 }

@@ -14,7 +14,9 @@
 //! Reported: throughput, per-step latency (mean/p50/p99), drop fraction,
 //! device utilization (busy time / wall time), and stall fraction.
 
+use crate::data::MixtureStream;
 use crate::metrics::{gini, min_max_ratio};
+use crate::router::{RouterBatch, ServingEngine};
 use crate::util::rng::Rng;
 
 #[derive(Debug, Clone)]
@@ -137,6 +139,14 @@ impl DispatchSim {
         self.steps += 1;
     }
 
+    /// Simulate one serving step directly from a routed batch: the flat
+    /// `[N*k]` id layout of `RouterBatch` is exactly the per-(token,
+    /// slot) assignment stream `step` consumes, so the compiled routing
+    /// engine feeds the simulator with no conversion or copy.
+    pub fn step_routed(&mut self, batch: &RouterBatch) {
+        self.step(&batch.topk_idx);
+    }
+
     pub fn report(&self) -> SimReport {
         let mut lat = self.latencies_us.clone();
         lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -170,6 +180,34 @@ impl DispatchSim {
             load_min_max: min_max_ratio(&load_f32),
         }
     }
+}
+
+/// Drive `steps` serving steps end-to-end with one shared protocol:
+/// sample a fresh mixture batch, route it through the engine, dispatch
+/// the routed ids into the simulator. Returns total routing
+/// nanoseconds (for ns/token accounting). This is the single
+/// implementation behind `dispatch-sim --routed`, the
+/// `dispatch-routed` report, and `examples/serving_sim.rs` — change
+/// the measurement protocol here, not per call site.
+pub fn run_routed_steps(
+    engine: &mut ServingEngine,
+    mix: &MixtureStream,
+    rng: &mut Rng,
+    sim: &mut DispatchSim,
+    steps: usize,
+    tokens_per_step: usize,
+) -> u128 {
+    let mut h = Vec::new();
+    let mut batch = RouterBatch::new();
+    let mut route_ns = 0u128;
+    for _ in 0..steps {
+        mix.fill(rng, tokens_per_step, &mut h);
+        let t0 = std::time::Instant::now();
+        engine.route_into(&h, &mut batch);
+        route_ns += t0.elapsed().as_nanos();
+        sim.step_routed(&batch);
+    }
+    route_ns
 }
 
 /// Generate synthetic routing assignments whose expert distribution has
@@ -323,6 +361,49 @@ mod tests {
             set.dedup();
             assert_eq!(set.len(), 4, "duplicate expert in {chunk:?}");
         }
+    }
+
+    #[test]
+    fn step_routed_consumes_flat_router_batches() {
+        use crate::router::{synthetic_lpr_router, ServingEngine};
+        let mut rng = Rng::new(5);
+        let r = synthetic_lpr_router("cosine", &mut rng, 16, 8, 8, 2);
+        let mut eng = ServingEngine::new(r.plan().clone(), 2);
+        let h: Vec<f32> =
+            (0..64 * 16).map(|_| rng.normal() as f32).collect();
+        let batch = eng.route(&h);
+        let cfg = SimConfig {
+            n_experts: 8,
+            n_devices: 2,
+            top_k: 2,
+            ..SimConfig::default()
+        };
+        let mut a = DispatchSim::new(cfg.clone());
+        let mut b = DispatchSim::new(cfg);
+        a.step_routed(&batch);
+        b.step(&batch.topk_idx);
+        assert_eq!(a.report().tokens_routed, 64 * 2);
+        assert_eq!(a.expert_load, b.expert_load);
+    }
+
+    #[test]
+    fn run_routed_steps_conserves_tokens() {
+        use crate::data::MixtureStream;
+        use crate::router::{synthetic_lpr_router, ServingEngine};
+        let mut rng = Rng::new(8);
+        let r = synthetic_lpr_router("dot", &mut rng, 16, 8, 8, 2);
+        let mut eng = ServingEngine::new(r.plan().clone(), 2);
+        let mix = MixtureStream::standard(&mut rng, 16);
+        let mut sim = DispatchSim::new(SimConfig {
+            n_experts: 8,
+            n_devices: 2,
+            top_k: 2,
+            ..SimConfig::default()
+        });
+        run_routed_steps(&mut eng, &mix, &mut rng, &mut sim, 3, 32);
+        let rep = sim.report();
+        assert_eq!(rep.steps, 3);
+        assert_eq!(rep.tokens_routed, 3 * 32 * 2);
     }
 
     #[test]

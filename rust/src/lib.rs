@@ -8,14 +8,25 @@
 //!   AOT-lowered to HLO text under `artifacts/` (`make artifacts`).
 //! - **L3 (this crate)** — the runtime coordinator: PJRT execution with
 //!   device-resident training state, data pipeline, load-balance
-//!   metrics, an expert-parallel dispatch simulator, a pure-Rust
-//!   serving router, and the experiment harness reproducing every
-//!   table/figure of the paper.
+//!   metrics, an expert-parallel dispatch simulator, a compiled
+//!   pure-Rust serving router, and the experiment harness reproducing
+//!   every table/figure of the paper.
+//!
+//! The serving hot path is a compile-then-route design:
+//! [`router::RouterPlan`] precompiles parameters (projected prototypes,
+//! fused score kernel, prototype-side constants) and routes batches
+//! into flat `[N*k]` buffers with zero steady-state allocation;
+//! [`router::ServingEngine`] shards batches across scoped worker
+//! threads with bit-identical outputs for every thread count (the
+//! thread-determinism contract is documented in `router::engine`). The
+//! flat id buffer feeds [`dispatch::DispatchSim`] directly.
 //!
 //! Start with [`runtime::Runtime`] + [`coordinator::Trainer`] for
-//! training, [`router::Router`] + [`dispatch::DispatchSim`] for
-//! serving-path studies, and [`report::Reporter`] for the paper's
-//! experiments. See `examples/` for end-to-end drivers.
+//! training, [`router::RouterPlan`] + [`router::ServingEngine`] +
+//! [`dispatch::DispatchSim`] for serving-path studies
+//! ([`router::Router`] remains as a compatibility façade), and
+//! [`report::Reporter`] for the paper's experiments. See `examples/`
+//! for end-to-end drivers.
 
 pub mod config;
 pub mod coordinator;

@@ -5,10 +5,13 @@
 //!   eval <preset> --ckpt  evaluate a checkpoint
 //!   repro <exp>           reproduce a paper table/figure
 //!                         (t1..t7, fig1, fig3, fig4, dispatch,
-//!                          dispatch-replay, all)
-//!   dispatch-sim          run the expert-parallel dispatch simulator
+//!                          dispatch-routed, dispatch-replay, all)
+//!   dispatch-sim          run the expert-parallel dispatch simulator;
+//!                         --routed drives it from the compiled routing
+//!                         engine (--threads shards the batch)
 //!   route <preset>        run the standalone router artifact and print
-//!                         the specialization proxy
+//!                         the specialization proxy; `route synthetic`
+//!                         runs the pure-Rust serving engine instead
 //!   list                  list artifacts present in the artifacts dir
 //!
 //! Global options: --artifacts DIR, --out DIR, --steps N, --seed N.
@@ -17,10 +20,13 @@ use anyhow::{bail, Context, Result};
 use std::path::PathBuf;
 
 use lpr::coordinator::{checkpoint, Trainer};
-use lpr::data::ZipfMarkovCorpus;
-use lpr::dispatch::{synthetic_assignments, DispatchSim, SimConfig};
-use lpr::metrics::ascii_heatmap;
+use lpr::data::{MixtureStream, ZipfMarkovCorpus};
+use lpr::dispatch::{
+    run_routed_steps, synthetic_assignments, DispatchSim, SimConfig,
+};
+use lpr::metrics::{ascii_heatmap, entropy_frac, gini, min_max_ratio};
 use lpr::report::Reporter;
+use lpr::router::{synthetic_lpr_router, RouterBatch, ServingEngine};
 use lpr::runtime::{CompiledArtifacts, Runtime};
 use lpr::util::cli::Args;
 use lpr::util::rng::Rng;
@@ -33,14 +39,21 @@ USAGE:
   lpr train <preset> [--steps N] [--seed N] [--ckpt-out FILE]
   lpr eval <preset> --ckpt FILE [--batches N]
   lpr route <preset> [--ckpt FILE]
-  lpr repro <t1|t2|t3|t4|t5|t6|t7|fig1|fig3|fig4|dispatch|dispatch-replay|all>
-            [--steps N]
+  lpr route synthetic [--metric M] [--threads N] [--tokens N]
+            [--experts N] [--topk K]
+  lpr repro <t1|t2|t3|t4|t5|t6|t7|fig1|fig3|fig4|dispatch
+            |dispatch-routed|dispatch-replay|all> [--steps N]
   lpr dispatch-sim [--experts N] [--devices N] [--topk K] [--skew S]
-                   [--cf F] [--steps N]
+                   [--cf F] [--steps N] [--threads N] [--metric M]
+                   [--routed]
   lpr list
 Options:
   --artifacts DIR   artifact directory (default: artifacts/)
   --out DIR         results directory (default: results/)
+  --threads N       routing threads for the serving engine (default 1)
+  --routed          dispatch-sim: drive the simulator from the compiled
+                    routing engine on clustered tokens instead of
+                    synthetic Zipf assignments
 ";
 
 fn main() {
@@ -183,10 +196,53 @@ fn cmd_eval(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Pure-Rust serving path: no artifacts / PJRT needed. Routes a
+/// clustered token stream through the compiled `RouterPlan` on a
+/// sharded `ServingEngine` and reports balance + throughput.
+fn cmd_route_synthetic(args: &Args) -> Result<()> {
+    let threads = args.opt_usize("threads", 1);
+    let metric = args.opt_or("metric", "cosine");
+    let n_tokens = args.opt_usize("tokens", 4096);
+    let d = args.opt_usize("dmodel", 64);
+    let dz = args.opt_usize("latent", 16);
+    let e = args.opt_usize("experts", 32);
+    let k = args.opt_usize("topk", 4);
+    let mut rng = Rng::new(args.opt_usize("seed", 2025) as u64);
+    let router = synthetic_lpr_router(metric, &mut rng, d, dz, e, k);
+    let mut engine = ServingEngine::new(router.plan().clone(), threads);
+    let mix = MixtureStream::standard(&mut rng, d);
+    let mut h = Vec::new();
+    mix.fill(&mut rng, n_tokens, &mut h);
+    let mut out = RouterBatch::new();
+    engine.route_into(&h, &mut out); // warm buffers
+    let t0 = std::time::Instant::now();
+    engine.route_into(&h, &mut out);
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "route synthetic: {n_tokens} tokens -> {e} experts top-{k} \
+         ({metric}, {threads} threads)"
+    );
+    println!(
+        "  GINI {:.3}  min-max {:.4}  entropy {:.3}",
+        gini(&out.load),
+        min_max_ratio(&out.load),
+        entropy_frac(&out.load)
+    );
+    println!(
+        "  {:.0} tok/s  ({:.0} ns/token)",
+        n_tokens as f64 / dt,
+        dt * 1e9 / n_tokens as f64
+    );
+    Ok(())
+}
+
 fn cmd_route(args: &Args) -> Result<()> {
     // Standalone router pass over cluster-structured inputs; uses the
     // checkpointed trained params when given, otherwise fresh init.
     let preset = preset_arg(args)?;
+    if preset == "synthetic" || args.has_flag("synthetic") {
+        return cmd_route_synthetic(args);
+    }
     let rt = Runtime::cpu()?;
     let arts = CompiledArtifacts::load(&rt, &art_dir(args), preset)?;
     let mut trainer = Trainer::new(&rt, &arts, 0, None)?;
@@ -225,6 +281,7 @@ fn cmd_repro(args: &Args) -> Result<()> {
         "fig3" => rep.fig3()?,
         "fig4" => rep.fig4()?,
         "dispatch" => rep.dispatch_report()?,
+        "dispatch-routed" => rep.dispatch_routed()?,
         "dispatch-replay" => rep.dispatch_replay()?,
         "all" => rep.all()?,
         other => bail!("unknown experiment '{other}'"),
@@ -244,13 +301,34 @@ fn cmd_dispatch_sim(args: &Args) -> Result<()> {
     let skew = args.opt_f64("skew", 0.0);
     let steps = args.opt_usize("steps", 200);
     let tokens = args.opt_usize("tokens", 1024);
+    let threads = args.opt_usize("threads", 1);
+    let routed = args.has_flag("routed") || args.opt("routed").is_some();
     let (e, k) = (cfg.n_experts, cfg.top_k);
     let mut sim = DispatchSim::new(cfg);
     let mut rng = Rng::new(args.opt_usize("seed", 7) as u64);
     let t0 = std::time::Instant::now();
-    for _ in 0..steps {
-        let a = synthetic_assignments(&mut rng, tokens, k, e, skew);
-        sim.step(&a);
+    if routed {
+        // serving path: compiled routing engine over clustered tokens
+        let metric = args.opt_or("metric", "cosine");
+        let d = args.opt_usize("dmodel", 64);
+        let dz = args.opt_usize("latent", 16);
+        let router = synthetic_lpr_router(metric, &mut rng, d, dz, e, k);
+        let mut engine =
+            ServingEngine::new(router.plan().clone(), threads);
+        let mix = MixtureStream::standard(&mut rng, d);
+        let route_ns = run_routed_steps(
+            &mut engine, &mix, &mut rng, &mut sim, steps, tokens,
+        );
+        println!(
+            "dispatch-sim --routed: metric {metric}, {threads} threads, \
+             routing {:.0} ns/token",
+            route_ns as f64 / (steps * tokens) as f64
+        );
+    } else {
+        for _ in 0..steps {
+            let a = synthetic_assignments(&mut rng, tokens, k, e, skew);
+            sim.step(&a);
+        }
     }
     let r = sim.report();
     let dt = t0.elapsed().as_secs_f64();

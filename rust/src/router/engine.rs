@@ -1,0 +1,171 @@
+//! Parallel sharded serving path: a [`ServingEngine`] routes batches
+//! across scoped worker threads over one shared [`RouterPlan`].
+//!
+//! Sharding model: a batch of `N` tokens is split into `T` contiguous
+//! shards (first `N mod T` shards get one extra token). Each worker
+//! routes its shard with its own persistent [`RouteBuffers`] +
+//! [`RouterBatch`] (no sharing, no locks), writing a disjoint token
+//! range. After the scope joins, shard outputs are merged **in shard
+//! order**: ids/weights are copied into their flat `[N*k]` positions and
+//! per-shard load histograms are summed.
+//!
+//! Threads are spawned per `route_into` call via `std::thread::scope`
+//! (only the shard *buffers* persist across calls) — spawn+join costs
+//! tens of microseconds, so multi-threading pays off on large batches
+//! or expensive kernels; tiny batches route inline on the caller's
+//! thread. A persistent channel-fed worker pool is the follow-up once
+//! the async serving PR lands.
+//!
+//! Thread-determinism contract: token routing is per-token pure, shard
+//! boundaries depend only on `(N, T)`, and the merge order is fixed —
+//! so `route(h)` is bit-identical for every thread count, including 1
+//! (pinned by `multi_thread_matches_single_thread`). Load counts are
+//! small integers in f32, so even summation order cannot perturb them.
+
+use super::plan::{RouteBuffers, RouterBatch, RouterPlan};
+
+/// A reusable routing engine: owns the compiled plan plus per-shard
+/// scratch, so steady-state `route_into` calls allocate nothing.
+#[derive(Debug)]
+pub struct ServingEngine {
+    plan: RouterPlan,
+    n_threads: usize,
+    shards: Vec<Shard>,
+}
+
+#[derive(Debug, Clone, Default)]
+struct Shard {
+    buf: RouteBuffers,
+    out: RouterBatch,
+}
+
+impl ServingEngine {
+    /// `n_threads` is clamped to at least 1; 1 routes inline on the
+    /// caller's thread.
+    pub fn new(plan: RouterPlan, n_threads: usize) -> ServingEngine {
+        let n_threads = n_threads.max(1);
+        ServingEngine {
+            shards: vec![Shard::default(); n_threads],
+            n_threads,
+            plan,
+        }
+    }
+
+    pub fn plan(&self) -> &RouterPlan {
+        &self.plan
+    }
+
+    pub fn n_threads(&self) -> usize {
+        self.n_threads
+    }
+
+    /// Route `h` ([N, d] row-major) into `out`. Output is identical to
+    /// `self.plan().forward_into(..)` regardless of thread count.
+    pub fn route_into(&mut self, h: &[f32], out: &mut RouterBatch) {
+        let d = self.plan.cfg.d_model;
+        assert_eq!(h.len() % d, 0, "h must be [N, {d}]");
+        let n = h.len() / d;
+        let (e, k) = (self.plan.cfg.n_experts, self.plan.cfg.top_k);
+        // tiny batches: spawn overhead dominates, route inline
+        if self.n_threads == 1 || n < 2 * self.n_threads {
+            let shard = &mut self.shards[0];
+            self.plan.forward_into(h, &mut shard.buf, out);
+            return;
+        }
+        let base = n / self.n_threads;
+        let rem = n % self.n_threads;
+        let plan = &self.plan;
+        std::thread::scope(|scope| {
+            let mut start = 0usize;
+            for (t, shard) in self.shards.iter_mut().enumerate() {
+                let len = base + usize::from(t < rem);
+                let hs = &h[start * d..(start + len) * d];
+                scope.spawn(move || {
+                    plan.forward_into(hs, &mut shard.buf, &mut shard.out);
+                });
+                start += len;
+            }
+        });
+        // deterministic merge in shard order
+        out.reset(n, k, e);
+        let mut start = 0usize;
+        for (t, shard) in self.shards.iter().enumerate() {
+            let len = base + usize::from(t < rem);
+            out.topk_idx[start * k..(start + len) * k]
+                .copy_from_slice(&shard.out.topk_idx);
+            out.weights[start * k..(start + len) * k]
+                .copy_from_slice(&shard.out.weights);
+            for (acc, &l) in out.load.iter_mut().zip(&shard.out.load) {
+                *acc += l;
+            }
+            start += len;
+        }
+    }
+
+    /// Allocating convenience wrapper around [`Self::route_into`].
+    pub fn route(&mut self, h: &[f32]) -> RouterBatch {
+        let mut out = RouterBatch::new();
+        self.route_into(h, &mut out);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::router::synthetic_lpr_router;
+    use crate::util::rng::Rng;
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    /// The determinism contract: identical outputs for every thread
+    /// count, including batch sizes that do not divide evenly.
+    #[test]
+    fn multi_thread_matches_single_thread() {
+        let mut rng = Rng::new(9);
+        for metric in ["cosine", "xattn", "kl"] {
+            let r = synthetic_lpr_router(metric, &mut rng, 16, 8, 6, 2);
+            let plan = r.plan().clone();
+            for n in [1usize, 7, 103] {
+                let h = rand_vec(&mut rng, n * 16);
+                let mut single = ServingEngine::new(plan.clone(), 1);
+                let want = single.route(&h);
+                for threads in [2usize, 3, 4, 8] {
+                    let mut eng =
+                        ServingEngine::new(plan.clone(), threads);
+                    let got = eng.route(&h);
+                    assert_eq!(
+                        got, want,
+                        "{metric}: n={n} threads={threads} diverged"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn engine_matches_plan_forward() {
+        let mut rng = Rng::new(21);
+        let r = synthetic_lpr_router("gaussian", &mut rng, 16, 8, 6, 2);
+        let plan = r.plan().clone();
+        let h = rand_vec(&mut rng, 64 * 16);
+        let want = plan.forward(&h);
+        let mut eng = ServingEngine::new(plan, 4);
+        assert_eq!(eng.route(&h), want);
+    }
+
+    #[test]
+    fn load_conserved_across_shards() {
+        let mut rng = Rng::new(33);
+        let r = synthetic_lpr_router("dot", &mut rng, 16, 8, 6, 3);
+        let mut eng = ServingEngine::new(r.plan().clone(), 3);
+        let h = rand_vec(&mut rng, 50 * 16);
+        let out = eng.route(&h);
+        let total: f32 = out.load.iter().sum();
+        assert_eq!(total as usize, 50 * 3);
+        assert_eq!(out.topk_idx.len(), 50 * 3);
+        assert_eq!(out.weights.len(), 50 * 3);
+    }
+}

@@ -6,9 +6,25 @@
 
 /// C[n,p] = A[n,m] @ B[m,p]
 pub fn matmul(a: &[f32], b: &[f32], n: usize, m: usize, p: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; n * p];
+    matmul_into(a, b, &mut c, n, m, p);
+    c
+}
+
+/// C[n,p] = A[n,m] @ B[m,p], written into a caller-owned buffer
+/// (overwrites `c`; the serving hot path reuses one buffer per batch).
+pub fn matmul_into(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    n: usize,
+    m: usize,
+    p: usize,
+) {
     assert_eq!(a.len(), n * m, "A shape");
     assert_eq!(b.len(), m * p, "B shape");
-    let mut c = vec![0.0f32; n * p];
+    assert_eq!(c.len(), n * p, "C shape");
+    c.fill(0.0);
     for i in 0..n {
         let a_row = &a[i * m..(i + 1) * m];
         let c_row = &mut c[i * p..(i + 1) * p];
@@ -19,14 +35,26 @@ pub fn matmul(a: &[f32], b: &[f32], n: usize, m: usize, p: usize) -> Vec<f32> {
             }
         }
     }
-    c
 }
 
 /// Per-row RMSNorm with learned scale `w` ([d]).
 pub fn rms_norm_rows(x: &[f32], w: &[f32], n: usize, d: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n * d];
+    rms_norm_rows_into(x, w, &mut out, n, d);
+    out
+}
+
+/// Per-row RMSNorm into a caller-owned buffer (overwrites `out`).
+pub fn rms_norm_rows_into(
+    x: &[f32],
+    w: &[f32],
+    out: &mut [f32],
+    n: usize,
+    d: usize,
+) {
     assert_eq!(x.len(), n * d);
     assert_eq!(w.len(), d);
-    let mut out = vec![0.0f32; n * d];
+    assert_eq!(out.len(), n * d);
     for i in 0..n {
         let row = &x[i * d..(i + 1) * d];
         let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
@@ -35,7 +63,6 @@ pub fn rms_norm_rows(x: &[f32], w: &[f32], n: usize, d: usize) -> Vec<f32> {
             out[i * d + j] = row[j] * inv * w[j];
         }
     }
-    out
 }
 
 /// In-place SiLU.
@@ -77,6 +104,19 @@ mod tests {
         // [[1,2],[3,4]] @ [[5],[6]] = [[17],[39]]
         let c = matmul(&[1., 2., 3., 4.], &[5., 6.], 2, 2, 1);
         assert_eq!(c, vec![17.0, 39.0]);
+    }
+
+    #[test]
+    fn into_variants_match_allocating_and_overwrite() {
+        let a = vec![1., 2., 3., 4., 5., 6.];
+        let b = vec![7., 8., 9., 10., 11., 12.];
+        let mut c = vec![9.9f32; 4]; // stale garbage must be overwritten
+        matmul_into(&a, &b, &mut c, 2, 3, 2);
+        assert_eq!(c, matmul(&a, &b, 2, 3, 2));
+        let w = vec![1.0, 0.5, 2.0];
+        let mut o = vec![-3.0f32; 6];
+        rms_norm_rows_into(&a, &w, &mut o, 2, 3);
+        assert_eq!(o, rms_norm_rows(&a, &w, 2, 3));
     }
 
     #[test]

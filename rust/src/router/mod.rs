@@ -9,18 +9,88 @@
 //!
 //! Implements all three router families (vanilla top-k softmax, DeepSeek
 //! aux-free sigmoid+bias, LPR) and the full §2.4.1 metric library.
+//!
+//! # Architecture: compiled plans + serving engine
+//!
+//! The serving hot path is a two-stage compile-then-route design:
+//!
+//! - [`plan::RouterPlan`] — `RouterConfig + RouterParams` compiled once
+//!   into an immutable plan: unit-ball-projected prototypes, a fused
+//!   [`plan::ScoreKernel`] selected once (no per-batch string match),
+//!   and precomputed prototype-side constants (norms, inverse
+//!   variances, cross-attention keys). `RouterPlan::forward_into`
+//!   routes into flat `[N*k]` buffers ([`plan::RouterBatch`]) with a
+//!   reusable [`plan::RouteBuffers`] arena — zero steady-state
+//!   allocation — and an `O(E·k)` partial select instead of a full
+//!   per-token sort.
+//! - [`engine::ServingEngine`] — shards batches across scoped worker
+//!   threads (spawned per batch; per-shard buffers persist) with merged
+//!   load accounting. Outputs are bit-identical for every thread count
+//!   (see the module docs for the determinism contract).
+//! - [`Router`] — the legacy façade. `Router::forward` is a thin
+//!   compatibility wrapper over a lazily-built plan;
+//!   `Router::forward_reference` keeps the original per-call
+//!   implementation as the parity oracle for tests. Prototypes are
+//!   projected **once at construction** (mutating `p` after the first
+//!   `forward` will not rebuild the cached plan).
+//!
+//! Selection order everywhere: descending score, NaN always loses,
+//! score ties break to the lower expert id ([`rank_cmp`] is the single
+//! source of truth, matching `jax.lax.top_k` on NaN-free input).
 
+pub mod engine;
 pub mod linalg;
+pub mod plan;
+
+pub use engine::ServingEngine;
+pub use plan::{RouteBuffers, RouterBatch, RouterPlan, ScoreKernel};
 
 use crate::util::json::Json;
+use crate::util::rng::Rng;
 use linalg::{matmul, rms_norm_rows, silu};
+use std::cmp::Ordering;
+use std::sync::OnceLock;
 
 pub const METRICS: &[&str] = &[
     "dot", "cosine", "gaussian", "mahalanobis", "xattn", "wasserstein",
     "kl", "js", "hellinger",
 ];
 
-const EPS: f32 = 1e-6;
+pub(crate) const EPS: f32 = 1e-6;
+
+/// Unit-ball projection of `[E, dz]` prototype rows, in place: rows with
+/// norm > 1 are rescaled onto the ball. Applied exactly once per
+/// parameter set (at `Router`/`RouterPlan` construction) — the
+/// projection is not bit-stable under repetition for rows that
+/// renormalize to slightly above 1.
+pub(crate) fn project_unit_ball(pm: &mut [f32], dz: usize) {
+    if dz == 0 {
+        return;
+    }
+    for row in pm.chunks_mut(dz) {
+        let norm: f32 = row.iter().map(|x| x * x).sum::<f32>().sqrt();
+        if norm > 1.0 {
+            row.iter_mut().for_each(|x| *x /= norm);
+        }
+    }
+}
+
+/// Total selection order shared by the legacy sort and the plan's
+/// partial select: `Less` means "(sa, a) ranks before (sb, b)".
+/// Descending score; NaN scores lose deterministically (all non-NaN
+/// scores rank first); ties — including NaN/NaN — break to the lower
+/// index.
+pub(crate) fn rank_cmp(sa: f32, a: u32, sb: f32, b: u32) -> Ordering {
+    match (sa.is_nan(), sb.is_nan()) {
+        (false, true) => Ordering::Less,
+        (true, false) => Ordering::Greater,
+        (true, true) => a.cmp(&b),
+        (false, false) => sb
+            .partial_cmp(&sa)
+            .expect("non-NaN scores are comparable")
+            .then(a.cmp(&b)),
+    }
+}
 
 #[derive(Debug, Clone, PartialEq)]
 pub enum RouterKind {
@@ -73,17 +143,47 @@ pub struct RouterOutput {
 #[derive(Debug, Clone)]
 pub struct Router {
     pub cfg: RouterConfig,
+    /// NOTE: prototypes are unit-ball projected at construction; the
+    /// first `forward` caches a compiled plan, so mutations of `p`
+    /// after that are not observed by `forward` (rebuild the router).
     pub p: RouterParams,
+    /// `OnceLock` (not `OnceCell`) so `Router` stays `Sync` — sharing
+    /// a router across threads was legal before this field existed.
+    compiled: OnceLock<RouterPlan>,
 }
 
 impl Router {
-    pub fn new(cfg: RouterConfig, p: RouterParams) -> Self {
-        Router { cfg, p }
+    pub fn new(cfg: RouterConfig, mut p: RouterParams) -> Self {
+        // project once at construction instead of cloning + reprojecting
+        // all prototypes on every forward call
+        if cfg.kind == RouterKind::Lpr && cfg.unit_ball {
+            project_unit_ball(&mut p.proto_mu, cfg.latent_dim);
+        }
+        Router { cfg, p, compiled: OnceLock::new() }
+    }
+
+    /// The compiled plan for this router, built lazily on first use.
+    pub fn plan(&self) -> &RouterPlan {
+        self.compiled.get_or_init(|| {
+            RouterPlan::from_projected(self.cfg.clone(), &self.p)
+        })
     }
 
     /// Route a batch of token activations `h` ([N, d] row-major).
     /// Deterministic (eval-mode: mean latents, no reparam noise).
+    ///
+    /// Compatibility wrapper: routes through the lazily-built
+    /// [`RouterPlan`] and converts the flat output to the legacy nested
+    /// layout. Hot paths should use [`Router::plan`] /
+    /// [`RouterPlan::forward_into`] (or [`ServingEngine`]) directly.
     pub fn forward(&self, h: &[f32]) -> RouterOutput {
+        self.plan().forward(h).into_nested()
+    }
+
+    /// The original per-call implementation, kept as the bit-parity
+    /// oracle for the plan path (see `plan_matches_legacy_router_exactly`
+    /// and `rust/tests/goldens.rs`).
+    pub fn forward_reference(&self, h: &[f32]) -> RouterOutput {
         let d = self.cfg.d_model;
         assert_eq!(h.len() % d, 0, "h must be [N, {d}]");
         let n = h.len() / d;
@@ -134,23 +234,12 @@ impl Router {
                     (lv[r * dz + j] + self.p.b_lv[j]).clamp(-8.0, 4.0);
             }
         }
-        // unit-ball projection of prototypes
-        let mut pm = self.p.proto_mu.clone();
-        if self.cfg.unit_ball {
-            for i in 0..e {
-                let row = &mut pm[i * dz..(i + 1) * dz];
-                let norm: f32 =
-                    row.iter().map(|x| x * x).sum::<f32>().sqrt();
-                if norm > 1.0 {
-                    row.iter_mut().for_each(|x| *x /= norm);
-                }
-            }
-        }
+        // prototypes were unit-ball projected once at construction
         metric_scores(
             &self.cfg.metric,
             &mu,
             &lv,
-            &pm,
+            &self.p.proto_mu,
             &self.p.proto_lv,
             &self.p.wq,
             &self.p.wk,
@@ -211,17 +300,67 @@ impl Router {
 }
 
 /// Indices of the k largest values, descending, ties -> lower index
-/// (matches `jax.lax.top_k`).
+/// (matches `jax.lax.top_k` on NaN-free input). NaN scores lose
+/// deterministically: they rank after every real score, lower index
+/// first — the previous `partial_cmp(..).unwrap_or(Equal)` comparator
+/// was not a total order under NaN and silently produced
+/// permutation-dependent results.
 pub fn top_k_indices(row: &[f32], k: usize) -> Vec<u32> {
     let mut idx: Vec<u32> = (0..row.len() as u32).collect();
-    idx.sort_by(|&a, &b| {
-        row[b as usize]
-            .partial_cmp(&row[a as usize])
-            .unwrap_or(std::cmp::Ordering::Equal)
-            .then(a.cmp(&b))
-    });
+    idx.sort_by(|&a, &b| rank_cmp(row[a as usize], a, row[b as usize], b));
     idx.truncate(k);
     idx
+}
+
+/// Deterministic synthetic LPR router with hypersphere-initialized
+/// prototypes (the paper's §2.4 init) — the shared builder behind the
+/// benches, examples, `route --synthetic`, `dispatch-sim --routed`, and
+/// the engine tests.
+pub fn synthetic_lpr_router(
+    metric: &str,
+    rng: &mut Rng,
+    d: usize,
+    dz: usize,
+    e: usize,
+    k: usize,
+) -> Router {
+    let heads = 4usize;
+    let dh = dz.div_euclid(heads).max(1);
+    let mut proto = normal_vec(rng, e * dz, 1.0);
+    for row in proto.chunks_mut(dz.max(1)) {
+        let norm: f32 = row.iter().map(|x| x * x).sum::<f32>().sqrt();
+        if norm > 0.0 {
+            row.iter_mut().for_each(|x| *x /= norm);
+        }
+    }
+    let cfg = RouterConfig {
+        kind: RouterKind::Lpr,
+        d_model: d,
+        n_experts: e,
+        top_k: k,
+        latent_dim: dz,
+        metric: metric.to_string(),
+        unit_ball: true,
+        gaussian_sigma: 1.0,
+        n_score_heads: heads,
+    };
+    let p = RouterParams {
+        norm: vec![1.0; d],
+        w_mu: normal_vec(rng, d * dz, 1.0 / (d as f32).sqrt()),
+        b_mu: vec![0.0; dz],
+        w_lv: normal_vec(rng, d * dz, 0.01),
+        b_lv: vec![-4.0; dz],
+        proto_mu: proto,
+        proto_lv: vec![-2.0; e * dz],
+        wq: normal_vec(rng, heads * dz * dh, 0.3),
+        wk: normal_vec(rng, heads * dz * dh, 0.3),
+        ..Default::default()
+    };
+    Router::new(cfg, p)
+}
+
+fn normal_vec(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32 * scale).collect()
 }
 
 /// §2.4.1 metric library on flat row-major arrays.
@@ -484,6 +623,24 @@ mod tests {
     }
 
     #[test]
+    fn top_k_nan_loses_deterministically() {
+        // NaN must rank after every real score, regardless of position
+        let nan = f32::NAN;
+        assert_eq!(top_k_indices(&[nan, 1.0, nan, 0.5], 2), vec![1, 3]);
+        assert_eq!(top_k_indices(&[1.0, nan, 0.5, nan], 3), vec![0, 2, 1]);
+        // all-NaN row: lower index first (still a total order)
+        assert_eq!(top_k_indices(&[nan, nan, nan], 2), vec![0, 1]);
+        // negative scores still beat NaN
+        assert_eq!(top_k_indices(&[nan, -5.0], 1), vec![1]);
+        // and the reversed row selects the mirrored indices — the old
+        // unwrap_or(Equal) comparator failed this permutation check
+        let fwd = top_k_indices(&[2.0, nan, 1.0, nan, 3.0], 3);
+        let rev = top_k_indices(&[3.0, nan, 1.0, nan, 2.0], 3);
+        assert_eq!(fwd, vec![4, 0, 2]);
+        assert_eq!(rev, vec![0, 4, 2]);
+    }
+
+    #[test]
     fn all_metrics_route_and_conserve_load() {
         let mut rng = Rng::new(5);
         for metric in METRICS {
@@ -590,9 +747,17 @@ mod tests {
     #[test]
     fn unit_ball_projection_only_shrinks() {
         let mut rng = Rng::new(11);
-        let mut r = lpr_router("gaussian", &mut rng);
-        for v in r.p.proto_mu.iter_mut() {
+        let r0 = lpr_router("gaussian", &mut rng);
+        let mut p = r0.p.clone();
+        for v in p.proto_mu.iter_mut() {
             *v *= 50.0; // blow up prototypes
+        }
+        // projection now happens once, at construction
+        let r = Router::new(r0.cfg.clone(), p);
+        let dz = r.cfg.latent_dim;
+        for row in r.p.proto_mu.chunks(dz) {
+            let norm: f32 = row.iter().map(|x| x * x).sum::<f32>().sqrt();
+            assert!(norm <= 1.0 + 1e-5, "row not projected: {norm}");
         }
         let h = rand_vec(&mut rng, 4 * 16, 1.0);
         let out = r.forward(&h);

@@ -1,0 +1,844 @@
+//! Compiled routing engine: `RouterConfig + RouterParams` compiled once
+//! into an immutable [`RouterPlan`].
+//!
+//! The legacy `Router::forward` path redid per-call work on every batch:
+//! it cloned and unit-ball-reprojected all `E` prototype vectors, string-
+//! matched the metric name, recomputed prototype-side constants
+//! (norms, `exp(±logvar)`, cross-attention keys) for every token, ran a
+//! full `O(E log E)` sort per token, and allocated `Vec<Vec<_>>` outputs.
+//! A `RouterPlan` hoists all of that to construction time:
+//!
+//! - prototypes are unit-ball projected **once** (`project_unit_ball`);
+//! - the metric string compiles to a [`ScoreKernel`] enum, selected once;
+//! - per-prototype constants are precomputed per kernel: `‖p‖+eps`
+//!   (cosine), `exp(-logvar)` inverse variances (Mahalanobis),
+//!   `exp(logvar)` / `sqrt` thereof (Wasserstein/KL/JS/Hellinger),
+//!   cross-attention keys `K = p @ w_k` (xattn), `2σ²` (gaussian);
+//! - [`RouterPlan::forward_into`] routes into a caller-owned
+//!   [`RouterBatch`] using a reusable [`RouteBuffers`] arena — zero
+//!   steady-state allocation;
+//! - outputs use a flat `[N*k]` layout instead of `Vec<Vec<_>>`, so the
+//!   top-k ids feed `dispatch::DispatchSim::step` directly;
+//! - selection is an `O(E·k)` partial insertion-select
+//!   ([`select_topk`]) instead of a full sort, with tie-breaking
+//!   bit-identical to the legacy path (pinned by the goldens and by the
+//!   `plan_matches_legacy_router_exactly` property test below).
+//!
+//! Every float operation is kept in the same order as the legacy
+//! implementation so plan outputs are *bit-identical* on indices and
+//! float-equal on weights/load — precomputation only moves work, it
+//! never reassociates it.
+
+use super::linalg::{matmul_into, rms_norm_rows_into, silu};
+use super::{
+    project_unit_ball, rank_cmp, RouterConfig, RouterKind, RouterOutput,
+    RouterParams, EPS,
+};
+use std::cmp::Ordering;
+
+/// The §2.4.1 metric library as a fused-kernel enum: parsed once at plan
+/// build instead of string-matched per batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScoreKernel {
+    Dot,
+    Cosine,
+    Gaussian,
+    Mahalanobis,
+    Xattn,
+    Wasserstein,
+    Kl,
+    Js,
+    Hellinger,
+}
+
+impl ScoreKernel {
+    pub fn parse(metric: &str) -> Option<ScoreKernel> {
+        Some(match metric {
+            "dot" => ScoreKernel::Dot,
+            "cosine" => ScoreKernel::Cosine,
+            "gaussian" => ScoreKernel::Gaussian,
+            "mahalanobis" => ScoreKernel::Mahalanobis,
+            "xattn" => ScoreKernel::Xattn,
+            "wasserstein" => ScoreKernel::Wasserstein,
+            "kl" => ScoreKernel::Kl,
+            "js" => ScoreKernel::Js,
+            "hellinger" => ScoreKernel::Hellinger,
+            _ => return None,
+        })
+    }
+
+    /// Kernels that read the token-side log-variance head.
+    pub fn needs_logvar(self) -> bool {
+        matches!(
+            self,
+            ScoreKernel::Wasserstein
+                | ScoreKernel::Kl
+                | ScoreKernel::Js
+                | ScoreKernel::Hellinger
+        )
+    }
+
+    /// Kernels that additionally need per-dim standard deviations.
+    pub fn needs_std(self) -> bool {
+        matches!(self, ScoreKernel::Wasserstein | ScoreKernel::Hellinger)
+    }
+}
+
+/// Flat routing result for one batch: `[N*k]` ids/weights plus the `[E]`
+/// load histogram. The id buffer is directly consumable by
+/// `dispatch::DispatchSim::step` (one entry per (token, slot) pair).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RouterBatch {
+    pub n: usize,
+    pub top_k: usize,
+    /// [N*k] expert ids, per-token descending score order
+    /// (NaN loses, ties -> lower id).
+    pub topk_idx: Vec<u32>,
+    /// [N*k] combine weights, same layout.
+    pub weights: Vec<f32>,
+    /// [E] assignment counts.
+    pub load: Vec<f32>,
+}
+
+impl RouterBatch {
+    pub fn new() -> RouterBatch {
+        RouterBatch::default()
+    }
+
+    /// Resize for a batch of `n` tokens (clears contents; reuses the
+    /// existing capacity, so steady-state calls do not allocate).
+    pub fn reset(&mut self, n: usize, k: usize, e: usize) {
+        self.n = n;
+        self.top_k = k;
+        self.topk_idx.clear();
+        self.topk_idx.resize(n * k, 0);
+        self.weights.clear();
+        self.weights.resize(n * k, 0.0);
+        self.load.clear();
+        self.load.resize(e, 0.0);
+    }
+
+    pub fn idx_row(&self, r: usize) -> &[u32] {
+        &self.topk_idx[r * self.top_k..(r + 1) * self.top_k]
+    }
+
+    pub fn weight_row(&self, r: usize) -> &[f32] {
+        &self.weights[r * self.top_k..(r + 1) * self.top_k]
+    }
+
+    /// Convert to the legacy nested-`Vec` output (compat shim for code
+    /// that still wants `Vec<Vec<_>>` rows).
+    pub fn into_nested(self) -> RouterOutput {
+        let k = self.top_k;
+        RouterOutput {
+            topk_idx: self
+                .topk_idx
+                .chunks(k.max(1))
+                .map(|c| c.to_vec())
+                .collect(),
+            weights: self
+                .weights
+                .chunks(k.max(1))
+                .map(|c| c.to_vec())
+                .collect(),
+            load: self.load,
+        }
+    }
+}
+
+/// Reusable scratch arena for [`RouterPlan::forward_into`]. All buffers
+/// grow to the high-water batch size once and are reused afterwards.
+#[derive(Debug, Clone, Default)]
+pub struct RouteBuffers {
+    a: Vec<f32>,      // [n, d]  SiLU(RMSNorm(h))
+    mu: Vec<f32>,     // [n, dz] latent means
+    lv: Vec<f32>,     // [n, dz] latent log-variances (variance kernels)
+    v1: Vec<f32>,     // [n, dz] exp(lv)
+    s1: Vec<f32>,     // [n, dz] sqrt(exp(lv))
+    zn: Vec<f32>,     // [n]     token latent norms (cosine)
+    q: Vec<f32>,      // [n, H*dh] cross-attention queries
+    scores: Vec<f32>, // [n, E]
+    sel: Vec<f32>,    // [E]     DeepSeek biased selection scores
+    top: Vec<(f32, u32)>, // [k] partial-select scratch
+}
+
+impl RouteBuffers {
+    pub fn new() -> RouteBuffers {
+        RouteBuffers::default()
+    }
+}
+
+/// Indices of the k best scores (NaN loses, ties -> lower index),
+/// best-first, via a single `O(E·k)` insertion pass over the row —
+/// replaces the legacy full `O(E log E)` sort. Order is identical to
+/// `top_k_indices` by construction (both order by [`rank_cmp`]).
+pub fn select_topk(row: &[f32], k: usize, top: &mut Vec<(f32, u32)>) {
+    top.clear();
+    let k = k.min(row.len());
+    if k == 0 {
+        return;
+    }
+    for (i, &s) in row.iter().enumerate() {
+        let i = i as u32;
+        if top.len() == k {
+            let worst = top[k - 1];
+            if rank_cmp(s, i, worst.0, worst.1) != Ordering::Less {
+                continue;
+            }
+            top.pop();
+        }
+        let mut pos = top.len();
+        while pos > 0
+            && rank_cmp(s, i, top[pos - 1].0, top[pos - 1].1)
+                == Ordering::Less
+        {
+            pos -= 1;
+        }
+        top.insert(pos, (s, i));
+    }
+}
+
+/// An immutable, pre-compiled router: all per-call invariants of the
+/// legacy `Router` hoisted to construction time. Cheap to share across
+/// threads (`Sync`); see `router::engine::ServingEngine` for the
+/// parallel sharded serving path.
+#[derive(Debug, Clone)]
+pub struct RouterPlan {
+    pub cfg: RouterConfig,
+    kernel: Option<ScoreKernel>,
+    // vanilla / deepseek
+    wg: Vec<f32>,
+    bias: Vec<f32>,
+    // lpr encoder
+    norm: Vec<f32>,
+    w_mu: Vec<f32>,
+    b_mu: Vec<f32>,
+    w_lv: Vec<f32>,
+    b_lv: Vec<f32>,
+    // prototypes, unit-ball projected once at build
+    proto_mu: Vec<f32>,
+    // per-kernel prototype-side precomputes (empty when unused)
+    proto_norm: Vec<f32>, // [E]     ‖p‖ + eps            (cosine)
+    proto_iv: Vec<f32>,   // [E, dz] exp(-logvar)          (mahalanobis)
+    proto_var: Vec<f32>,  // [E, dz] exp(logvar)           (divergences)
+    proto_sd: Vec<f32>,   // [E, dz] sqrt(exp(logvar))     (wass/hellinger)
+    proto_k: Vec<f32>,    // [E, H*dh] keys p @ w_k        (xattn)
+    wq: Vec<f32>,         // [H, dz, dh]                   (xattn)
+    dh: usize,
+    sqrt_dh: f32,
+    gauss_denom: f32, // 2σ²
+}
+
+impl RouterPlan {
+    /// Compile a plan from raw (unprojected) parameters; applies the
+    /// unit-ball projection internally when the config asks for it.
+    pub fn new(cfg: RouterConfig, p: &RouterParams) -> RouterPlan {
+        let mut p = p.clone();
+        if cfg.unit_ball {
+            project_unit_ball(&mut p.proto_mu, cfg.latent_dim);
+        }
+        RouterPlan::from_projected(cfg, &p)
+    }
+
+    /// Compile from parameters whose prototypes are **already**
+    /// unit-ball projected (the `Router` constructor projects at build,
+    /// so its lazily-built plan must not re-project — re-projection is
+    /// not bit-stable for rows that renormalize to slightly above 1).
+    pub(crate) fn from_projected(
+        cfg: RouterConfig,
+        p: &RouterParams,
+    ) -> RouterPlan {
+        // with k > E the flat [N*k] layout would silently pad rows with
+        // expert 0 — fail at build time instead
+        assert!(
+            cfg.top_k <= cfg.n_experts,
+            "top_k ({}) must not exceed n_experts ({})",
+            cfg.top_k,
+            cfg.n_experts
+        );
+        let (dz, e, heads) = (cfg.latent_dim, cfg.n_experts, cfg.n_score_heads);
+        let kernel = match cfg.kind {
+            RouterKind::Lpr => Some(
+                ScoreKernel::parse(&cfg.metric).unwrap_or_else(|| {
+                    panic!("unknown metric '{}'", cfg.metric)
+                }),
+            ),
+            _ => None,
+        };
+        let mut plan = RouterPlan {
+            kernel,
+            wg: Vec::new(),
+            bias: Vec::new(),
+            norm: Vec::new(),
+            w_mu: Vec::new(),
+            b_mu: Vec::new(),
+            w_lv: Vec::new(),
+            b_lv: Vec::new(),
+            proto_mu: Vec::new(),
+            proto_norm: Vec::new(),
+            proto_iv: Vec::new(),
+            proto_var: Vec::new(),
+            proto_sd: Vec::new(),
+            proto_k: Vec::new(),
+            wq: Vec::new(),
+            dh: 0,
+            sqrt_dh: 1.0,
+            gauss_denom: 1.0,
+            cfg,
+        };
+        match plan.cfg.kind {
+            RouterKind::Vanilla => plan.wg = p.wg.clone(),
+            RouterKind::DeepSeek => {
+                plan.wg = p.wg.clone();
+                plan.bias = p.bias.clone();
+            }
+            RouterKind::Lpr => {
+                plan.norm = p.norm.clone();
+                plan.w_mu = p.w_mu.clone();
+                plan.b_mu = p.b_mu.clone();
+                plan.w_lv = p.w_lv.clone();
+                plan.b_lv = p.b_lv.clone();
+                plan.proto_mu = p.proto_mu.clone();
+            }
+        }
+        match kernel {
+            Some(ScoreKernel::Cosine) => {
+                plan.proto_norm = (0..e)
+                    .map(|i| {
+                        plan.proto_mu[i * dz..(i + 1) * dz]
+                            .iter()
+                            .map(|x| x * x)
+                            .sum::<f32>()
+                            .sqrt()
+                            + EPS
+                    })
+                    .collect();
+            }
+            Some(ScoreKernel::Gaussian) => {
+                let s = plan.cfg.gaussian_sigma;
+                plan.gauss_denom = 2.0 * s * s;
+            }
+            Some(ScoreKernel::Mahalanobis) => {
+                plan.proto_iv =
+                    p.proto_lv.iter().map(|x| (-x).exp()).collect();
+            }
+            Some(ScoreKernel::Xattn) => {
+                let dh = dz.div_euclid(heads).max(1);
+                plan.dh = dh;
+                plan.sqrt_dh = (dh as f32).sqrt();
+                plan.wq = p.wq.clone();
+                // keys K[i, h, c] = Σ_j p[i,j] · w_k[h, j, c], summed in
+                // the same j-ascending order as the legacy per-token loop
+                let mut pk = vec![0.0f32; e * heads * dh];
+                for i in 0..e {
+                    for hh in 0..heads {
+                        for c in 0..dh {
+                            let mut acc = 0.0f32;
+                            for j in 0..dz {
+                                acc += plan.proto_mu[i * dz + j]
+                                    * p.wk[hh * dz * dh + j * dh + c];
+                            }
+                            pk[i * heads * dh + hh * dh + c] = acc;
+                        }
+                    }
+                }
+                plan.proto_k = pk;
+            }
+            Some(k) if k.needs_logvar() => {
+                plan.proto_var =
+                    p.proto_lv.iter().map(|x| x.exp()).collect();
+                if k.needs_std() {
+                    plan.proto_sd =
+                        plan.proto_var.iter().map(|x| x.sqrt()).collect();
+                }
+            }
+            _ => {}
+        }
+        plan
+    }
+
+    /// Route a batch of token activations `h` ([N, d] row-major) into
+    /// caller-owned output + scratch. Deterministic; zero steady-state
+    /// allocation once the buffers have grown to the batch size.
+    pub fn forward_into(
+        &self,
+        h: &[f32],
+        buf: &mut RouteBuffers,
+        out: &mut RouterBatch,
+    ) {
+        let d = self.cfg.d_model;
+        assert_eq!(h.len() % d, 0, "h must be [N, {d}]");
+        let n = h.len() / d;
+        out.reset(n, self.cfg.top_k, self.cfg.n_experts);
+        self.scores_into(h, n, buf);
+        match self.cfg.kind {
+            RouterKind::Vanilla | RouterKind::Lpr => {
+                self.select_softmax(n, buf, out)
+            }
+            RouterKind::DeepSeek => self.select_deepseek(n, buf, out),
+        }
+    }
+
+    /// Allocating convenience wrapper around [`Self::forward_into`].
+    pub fn forward(&self, h: &[f32]) -> RouterBatch {
+        let mut buf = RouteBuffers::new();
+        let mut out = RouterBatch::new();
+        self.forward_into(h, &mut buf, &mut out);
+        out
+    }
+
+    fn scores_into(&self, h: &[f32], n: usize, buf: &mut RouteBuffers) {
+        let (d, e) = (self.cfg.d_model, self.cfg.n_experts);
+        buf.scores.clear();
+        buf.scores.resize(n * e, 0.0);
+        match self.cfg.kind {
+            RouterKind::Vanilla => {
+                matmul_into(h, &self.wg, &mut buf.scores, n, d, e);
+            }
+            RouterKind::DeepSeek => {
+                matmul_into(h, &self.wg, &mut buf.scores, n, d, e);
+                for v in buf.scores.iter_mut() {
+                    *v = 1.0 / (1.0 + (-*v).exp());
+                }
+            }
+            RouterKind::Lpr => self.lpr_scores_into(h, n, buf),
+        }
+    }
+
+    fn lpr_scores_into(&self, h: &[f32], n: usize, buf: &mut RouteBuffers) {
+        let (d, dz, e) = (
+            self.cfg.d_model,
+            self.cfg.latent_dim,
+            self.cfg.n_experts,
+        );
+        let kernel = self.kernel.expect("lpr plan carries a kernel");
+        // encoder: a = SiLU(RMSNorm(h)); mu head (eval: z = mu)
+        buf.a.clear();
+        buf.a.resize(n * d, 0.0);
+        rms_norm_rows_into(h, &self.norm, &mut buf.a, n, d);
+        silu(&mut buf.a);
+        buf.mu.clear();
+        buf.mu.resize(n * dz, 0.0);
+        matmul_into(&buf.a, &self.w_mu, &mut buf.mu, n, d, dz);
+        for r in 0..n {
+            for j in 0..dz {
+                buf.mu[r * dz + j] += self.b_mu[j];
+            }
+        }
+        // logvar head only when the kernel reads it (the legacy path
+        // always computed it; skipping is score-invariant)
+        if kernel.needs_logvar() {
+            buf.lv.clear();
+            buf.lv.resize(n * dz, 0.0);
+            matmul_into(&buf.a, &self.w_lv, &mut buf.lv, n, d, dz);
+            for r in 0..n {
+                for j in 0..dz {
+                    buf.lv[r * dz + j] = (buf.lv[r * dz + j]
+                        + self.b_lv[j])
+                        .clamp(-8.0, 4.0);
+                }
+            }
+            buf.v1.clear();
+            buf.v1.extend(buf.lv.iter().map(|x| x.exp()));
+            if kernel.needs_std() {
+                buf.s1.clear();
+                buf.s1.extend(buf.v1.iter().map(|x| x.sqrt()));
+            }
+        }
+        let mu = &buf.mu;
+        let pm = &self.proto_mu;
+        let scores = &mut buf.scores;
+        match kernel {
+            ScoreKernel::Dot => {
+                for r in 0..n {
+                    for i in 0..e {
+                        let mut s = 0.0;
+                        for j in 0..dz {
+                            s += mu[r * dz + j] * pm[i * dz + j];
+                        }
+                        scores[r * e + i] = s;
+                    }
+                }
+            }
+            ScoreKernel::Cosine => {
+                buf.zn.clear();
+                buf.zn.extend((0..n).map(|r| {
+                    mu[r * dz..(r + 1) * dz]
+                        .iter()
+                        .map(|x| x * x)
+                        .sum::<f32>()
+                        .sqrt()
+                        + EPS
+                }));
+                for r in 0..n {
+                    for i in 0..e {
+                        let mut s = 0.0;
+                        for j in 0..dz {
+                            s += mu[r * dz + j] * pm[i * dz + j];
+                        }
+                        scores[r * e + i] =
+                            s / (buf.zn[r] * self.proto_norm[i]);
+                    }
+                }
+            }
+            ScoreKernel::Gaussian => {
+                for r in 0..n {
+                    for i in 0..e {
+                        let mut d2 = 0.0;
+                        for j in 0..dz {
+                            let dd = mu[r * dz + j] - pm[i * dz + j];
+                            d2 += dd * dd;
+                        }
+                        scores[r * e + i] = (-d2 / self.gauss_denom).exp();
+                    }
+                }
+            }
+            ScoreKernel::Mahalanobis => {
+                for r in 0..n {
+                    for i in 0..e {
+                        let mut d2 = 0.0;
+                        for j in 0..dz {
+                            let dd = mu[r * dz + j] - pm[i * dz + j];
+                            d2 += dd * dd * self.proto_iv[i * dz + j];
+                        }
+                        scores[r * e + i] = -d2;
+                    }
+                }
+            }
+            ScoreKernel::Xattn => {
+                let (heads, dh) = (self.cfg.n_score_heads, self.dh);
+                let hd = heads * dh;
+                // queries Q[r, h, c] = Σ_j z[r,j] · w_q[h, j, c]
+                buf.q.clear();
+                buf.q.resize(n * hd, 0.0);
+                for r in 0..n {
+                    for hh in 0..heads {
+                        for c in 0..dh {
+                            let mut acc = 0.0f32;
+                            for j in 0..dz {
+                                acc += mu[r * dz + j]
+                                    * self.wq[hh * dz * dh + j * dh + c];
+                            }
+                            buf.q[r * hd + hh * dh + c] = acc;
+                        }
+                    }
+                }
+                let heads_f = heads as f32;
+                for r in 0..n {
+                    for i in 0..e {
+                        let mut s = 0.0f32;
+                        for hh in 0..heads {
+                            let qb = &buf.q
+                                [r * hd + hh * dh..r * hd + (hh + 1) * dh];
+                            let kb = &self.proto_k
+                                [i * hd + hh * dh..i * hd + (hh + 1) * dh];
+                            let mut dot = 0.0f32;
+                            for c in 0..dh {
+                                dot += qb[c] * kb[c];
+                            }
+                            s += dot / self.sqrt_dh;
+                        }
+                        scores[r * e + i] = s / heads_f;
+                    }
+                }
+            }
+            ScoreKernel::Wasserstein => {
+                for r in 0..n {
+                    for i in 0..e {
+                        let mut acc = 0.0f32;
+                        for j in 0..dz {
+                            let m1 = mu[r * dz + j];
+                            let m2 = pm[i * dz + j];
+                            let dm2 = (m1 - m2) * (m1 - m2);
+                            let ds = buf.s1[r * dz + j]
+                                - self.proto_sd[i * dz + j];
+                            acc += dm2 + ds * ds;
+                        }
+                        scores[r * e + i] = -acc;
+                    }
+                }
+            }
+            ScoreKernel::Kl => {
+                for r in 0..n {
+                    for i in 0..e {
+                        let mut acc = 0.0f32;
+                        for j in 0..dz {
+                            let m1 = mu[r * dz + j];
+                            let m2 = pm[i * dz + j];
+                            let v1 = buf.v1[r * dz + j];
+                            let v2 = self.proto_var[i * dz + j];
+                            let dm2 = (m1 - m2) * (m1 - m2);
+                            acc += 0.5
+                                * ((v2 / v1).ln() + (v1 + dm2) / v2 - 1.0);
+                        }
+                        scores[r * e + i] = -acc;
+                    }
+                }
+            }
+            ScoreKernel::Js => {
+                for r in 0..n {
+                    for i in 0..e {
+                        let mut acc = 0.0f32;
+                        for j in 0..dz {
+                            let m1 = mu[r * dz + j];
+                            let m2 = pm[i * dz + j];
+                            let v1 = buf.v1[r * dz + j];
+                            let v2 = self.proto_var[i * dz + j];
+                            let v0 = 0.5 * (v1 + v2);
+                            let m0 = 0.5 * (m1 + m2);
+                            acc += 0.25
+                                * (((v1 + v2) * (v1 + v2)
+                                    / (4.0 * v1 * v2))
+                                    .ln()
+                                    + (v1 + (m1 - m0) * (m1 - m0)) / v0
+                                    + (v2 + (m2 - m0) * (m2 - m0)) / v0
+                                    - 2.0);
+                        }
+                        scores[r * e + i] = -acc;
+                    }
+                }
+            }
+            ScoreKernel::Hellinger => {
+                for r in 0..n {
+                    for i in 0..e {
+                        let mut log_bc = 0.0f32;
+                        for j in 0..dz {
+                            let m1 = mu[r * dz + j];
+                            let m2 = pm[i * dz + j];
+                            let v1 = buf.v1[r * dz + j];
+                            let v2 = self.proto_var[i * dz + j];
+                            let s1 = buf.s1[r * dz + j];
+                            let s2 = self.proto_sd[i * dz + j];
+                            let dm2 = (m1 - m2) * (m1 - m2);
+                            log_bc += 0.5
+                                * (2.0 * s1 * s2 / (v1 + v2) + EPS).ln()
+                                - 0.25 * dm2 / (v1 + v2);
+                        }
+                        scores[r * e + i] = -(1.0 - log_bc.exp());
+                    }
+                }
+            }
+        }
+    }
+
+    fn select_softmax(
+        &self,
+        n: usize,
+        buf: &mut RouteBuffers,
+        out: &mut RouterBatch,
+    ) {
+        let (e, k) = (self.cfg.n_experts, self.cfg.top_k);
+        for r in 0..n {
+            {
+                let row = &buf.scores[r * e..(r + 1) * e];
+                select_topk(row, k, &mut buf.top);
+            }
+            let idx_out = &mut out.topk_idx[r * k..(r + 1) * k];
+            let w_out = &mut out.weights[r * k..(r + 1) * k];
+            // softmax over the selected scores (paper eq.6)
+            let m = buf
+                .top
+                .iter()
+                .map(|&(s, _)| s)
+                .fold(f32::MIN, f32::max);
+            let mut z = 0.0f32;
+            for (j, &(s, i)) in buf.top.iter().enumerate() {
+                let ex = (s - m).exp();
+                w_out[j] = ex;
+                z += ex;
+                idx_out[j] = i;
+                out.load[i as usize] += 1.0;
+            }
+            for w in w_out.iter_mut() {
+                *w /= z;
+            }
+        }
+    }
+
+    fn select_deepseek(
+        &self,
+        n: usize,
+        buf: &mut RouteBuffers,
+        out: &mut RouterBatch,
+    ) {
+        let (e, k) = (self.cfg.n_experts, self.cfg.top_k);
+        for r in 0..n {
+            // bias enters selection only
+            buf.sel.clear();
+            buf.sel.extend(
+                buf.scores[r * e..(r + 1) * e]
+                    .iter()
+                    .zip(&self.bias)
+                    .map(|(s, b)| s + b),
+            );
+            select_topk(&buf.sel, k, &mut buf.top);
+            let row = &buf.scores[r * e..(r + 1) * e];
+            let idx_out = &mut out.topk_idx[r * k..(r + 1) * k];
+            let w_out = &mut out.weights[r * k..(r + 1) * k];
+            let mut z = 0.0f32;
+            for (j, &(_, i)) in buf.top.iter().enumerate() {
+                let raw = row[i as usize];
+                w_out[j] = raw;
+                z += raw;
+                idx_out[j] = i;
+                out.load[i as usize] += 1.0;
+            }
+            let z = z + 1e-9;
+            for w in w_out.iter_mut() {
+                *w /= z;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::router::{synthetic_lpr_router, top_k_indices, Router, METRICS};
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    fn rand_vec(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32 * scale).collect()
+    }
+
+    fn random_router(rng: &mut Rng, kind: RouterKind, metric: &str) -> Router {
+        let (d, dz, e, k) = (12, 8, 7, 3);
+        match kind {
+            RouterKind::Lpr => synthetic_lpr_router(metric, rng, d, dz, e, k),
+            _ => {
+                let cfg = RouterConfig {
+                    kind: kind.clone(),
+                    d_model: d,
+                    n_experts: e,
+                    top_k: k,
+                    latent_dim: 0,
+                    metric: "dot".into(),
+                    unit_ball: false,
+                    gaussian_sigma: 1.0,
+                    n_score_heads: 1,
+                };
+                let p = RouterParams {
+                    wg: rand_vec(rng, d * e, 0.5),
+                    bias: rand_vec(rng, e, 0.3),
+                    ..Default::default()
+                };
+                Router::new(cfg, p)
+            }
+        }
+    }
+
+    /// Plan outputs must be bit-identical (indices, load) and
+    /// float-equal (weights) to the legacy per-call implementation,
+    /// across all three router kinds and all nine metrics.
+    #[test]
+    fn plan_matches_legacy_router_exactly() {
+        forall(
+            36,
+            2024,
+            |rng| {
+                // cases: 0 vanilla, 1 deepseek, 2..=10 one LPR metric
+                let case = rng.below(2 + METRICS.len());
+                let r = match case {
+                    0 => random_router(rng, RouterKind::Vanilla, "dot"),
+                    1 => random_router(rng, RouterKind::DeepSeek, "dot"),
+                    c => random_router(rng, RouterKind::Lpr, METRICS[c - 2]),
+                };
+                let h = rand_vec(rng, 9 * r.cfg.d_model, 1.0);
+                (r, h)
+            },
+            |(r, h)| {
+                let legacy = r.forward_reference(h);
+                let flat = r.plan().forward(h);
+                let nested = flat.into_nested();
+                if nested.topk_idx != legacy.topk_idx {
+                    return Err(format!(
+                        "{}: indices diverge: {:?} vs {:?}",
+                        r.cfg.metric, nested.topk_idx, legacy.topk_idx
+                    ));
+                }
+                if nested.weights != legacy.weights {
+                    return Err(format!(
+                        "{}: weights diverge",
+                        r.cfg.metric
+                    ));
+                }
+                if nested.load != legacy.load {
+                    return Err(format!("{}: load diverges", r.cfg.metric));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// The partial insertion-select must order exactly like the legacy
+    /// full sort, including NaN demotion and index tie-breaks.
+    #[test]
+    fn select_topk_matches_full_sort() {
+        forall(
+            200,
+            7,
+            |rng| {
+                let e = 1 + rng.below(24);
+                let k = 1 + rng.below(e.min(9));
+                let row: Vec<f32> = (0..e)
+                    .map(|_| match rng.below(6) {
+                        0 => f32::NAN,
+                        1 => 0.5, // force score ties
+                        _ => rng.normal() as f32,
+                    })
+                    .collect();
+                (row, k)
+            },
+            |(row, k)| {
+                let mut top = Vec::new();
+                select_topk(row, *k, &mut top);
+                let got: Vec<u32> = top.iter().map(|&(_, i)| i).collect();
+                let want = top_k_indices(row, *k);
+                if got != want {
+                    return Err(format!("{got:?} != {want:?}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn forward_into_reuses_buffers_and_resets_output() {
+        let mut rng = Rng::new(3);
+        let r = synthetic_lpr_router("cosine", &mut rng, 16, 8, 6, 2);
+        let plan = r.plan().clone();
+        let mut buf = RouteBuffers::new();
+        let mut out = RouterBatch::new();
+        let h1 = rand_vec(&mut rng, 32 * 16, 1.0);
+        plan.forward_into(&h1, &mut buf, &mut out);
+        let first = out.clone();
+        // a second, smaller batch must fully overwrite the outputs
+        let h2 = rand_vec(&mut rng, 8 * 16, 1.0);
+        plan.forward_into(&h2, &mut buf, &mut out);
+        assert_eq!(out.n, 8);
+        assert_eq!(out.topk_idx.len(), 8 * 2);
+        let total: f32 = out.load.iter().sum();
+        assert_eq!(total as usize, 8 * 2);
+        // and routing h1 again reproduces the first result exactly
+        plan.forward_into(&h1, &mut buf, &mut out);
+        assert_eq!(out, first);
+    }
+
+    #[test]
+    fn kernel_parse_covers_metric_library() {
+        for m in METRICS {
+            assert!(ScoreKernel::parse(m).is_some(), "metric {m}");
+        }
+        assert!(ScoreKernel::parse("euclidean-typo").is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown metric")]
+    fn unknown_metric_panics_at_plan_build() {
+        let mut rng = Rng::new(5);
+        let mut r = synthetic_lpr_router("cosine", &mut rng, 8, 4, 4, 2);
+        r.cfg.metric = "nope".into();
+        let _ = RouterPlan::new(r.cfg.clone(), &r.p);
+    }
+}
