@@ -5,17 +5,22 @@
 //!
 //! Run: `cargo bench --bench micro` (results appended to
 //! `results/bench.csv`; the routing sweep is also written as
-//! machine-readable JSON to `BENCH_router.json` so the perf trajectory
-//! is trackable across PRs). Set `LPR_BENCH_FAST=1` for a short smoke
-//! run (CI).
+//! machine-readable JSON to `BENCH_router.json`, and the dispatch-plan
+//! / full expert-forward sweep to `BENCH_dispatch.json`, so the perf
+//! trajectory is trackable across PRs). Set `LPR_BENCH_FAST=1` for a
+//! short smoke run (CI).
 
-use lpr::data::{Batcher, ZipfMarkovCorpus};
-use lpr::dispatch::{synthetic_assignments, DispatchSim, SimConfig};
+use lpr::data::{Batcher, MixtureStream, ZipfMarkovCorpus};
+use lpr::dispatch::{
+    capacity_for, synthetic_assignments, DispatchPlan, DispatchSim,
+    OverflowPolicy, SimConfig,
+};
+use lpr::experts::ExpertBank;
 use lpr::metrics::{gini, min_max_ratio};
 use lpr::router::linalg::matmul;
 use lpr::router::{
-    synthetic_lpr_router, RouteBuffers, Router, RouterBatch, RouterConfig,
-    RouterKind, RouterParams, ServingEngine, METRICS,
+    synthetic_lpr_router, FullForward, RouteBuffers, Router, RouterBatch,
+    RouterConfig, RouterKind, RouterParams, ServingEngine, METRICS,
 };
 use lpr::util::bench::Bench;
 use lpr::util::json::Json;
@@ -36,26 +41,60 @@ struct RouterRow {
     ns_per_token: f64,
 }
 
-fn write_router_json(rows: &[RouterRow]) {
+/// Write pre-formatted JSON objects as a pretty-printed array — the
+/// shared emitter behind every `BENCH_*.json` artifact.
+fn write_json_rows(path: &str, rows: &[String]) {
     let mut s = String::from("[\n");
     for (i, r) in rows.iter().enumerate() {
-        s.push_str(&format!(
-            "  {{\"name\": \"{}\", \"n\": {}, \"d\": {}, \"E\": {}, \
-             \"k\": {}, \"threads\": {}, \"ns_per_token\": {:.2}}}{}\n",
-            r.name,
-            r.n,
-            r.d,
-            r.e,
-            r.k,
-            r.threads,
-            r.ns_per_token,
-            if i + 1 == rows.len() { "" } else { "," }
-        ));
+        let sep = if i + 1 == rows.len() { "" } else { "," };
+        s.push_str(&format!("  {r}{sep}\n"));
     }
     s.push_str("]\n");
-    if let Err(e) = std::fs::write("BENCH_router.json", &s) {
-        eprintln!("warn: could not write BENCH_router.json: {e}");
+    if let Err(e) = std::fs::write(path, &s) {
+        eprintln!("warn: could not write {path}: {e}");
     }
+}
+
+fn write_router_json(rows: &[RouterRow]) {
+    let objs: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{{\"name\": \"{}\", \"n\": {}, \"d\": {}, \"E\": {}, \
+                 \"k\": {}, \"threads\": {}, \"ns_per_token\": {:.2}}}",
+                r.name, r.n, r.d, r.e, r.k, r.threads, r.ns_per_token
+            )
+        })
+        .collect();
+    write_json_rows("BENCH_router.json", &objs);
+}
+
+/// One row of BENCH_dispatch.json.
+struct DispatchRow {
+    name: String,
+    n: usize,
+    d: usize,
+    d_ff: usize,
+    e: usize,
+    k: usize,
+    threads: usize,
+    ns_per_token: f64,
+}
+
+fn write_dispatch_json(rows: &[DispatchRow]) {
+    let objs: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{{\"name\": \"{}\", \"n\": {}, \"d\": {}, \
+                 \"d_ff\": {}, \"E\": {}, \"k\": {}, \"threads\": {}, \
+                 \"ns_per_token\": {:.2}}}",
+                r.name, r.n, r.d, r.d_ff, r.e, r.k, r.threads,
+                r.ns_per_token
+            )
+        })
+        .collect();
+    write_json_rows("BENCH_dispatch.json", &objs);
 }
 
 fn main() {
@@ -194,6 +233,85 @@ fn main() {
     }
 
     write_router_json(&router_rows);
+
+    // ---- dispatch plans + full expert-parallel forward: per-policy
+    // plan-build and route->plan->FFN->combine ns/token, emitted as
+    // BENCH_dispatch.json for the cross-PR perf trajectory ----
+    {
+        let (dd, dz, de, dk, dn, dff) =
+            (64usize, 16usize, 64usize, 8usize, 1024usize, 256usize);
+        let mut dispatch_rows: Vec<DispatchRow> = Vec::new();
+        let router = synthetic_lpr_router("cosine", &mut rng, dd, dz, de, dk);
+        let bank = ExpertBank::new(&lpr::util::rng::Rng::new(42), de, dd, dff);
+        let mix = MixtureStream::skewed(&mut rng, dd, 1.6);
+        let mut hd = Vec::new();
+        mix.fill(&mut rng, dn, &mut hd);
+        let mut engine = ServingEngine::new(router.plan().clone(), 1);
+        let mut batch = RouterBatch::new();
+        engine.route_into(&hd, &mut batch);
+        let cap = capacity_for(batch.topk_idx.len(), de, 1.0);
+        for policy in OverflowPolicy::ALL {
+            let mut plan = DispatchPlan::new();
+            let res = b.run_items(
+                &format!("dispatch_plan/{}/{dn}tok", policy.name()),
+                dn as f64,
+                &mut || {
+                    plan.compile_batch(
+                        std::hint::black_box(&batch),
+                        cap,
+                        policy,
+                    );
+                    std::hint::black_box(&plan);
+                },
+            );
+            dispatch_rows.push(DispatchRow {
+                name: format!("plan_build/{}", policy.name()),
+                n: dn,
+                d: dd,
+                d_ff: dff,
+                e: de,
+                k: dk,
+                threads: 1,
+                ns_per_token: res.per_item_ns(),
+            });
+            for threads in [1usize, 4] {
+                if threads > cores {
+                    continue;
+                }
+                let mut eng =
+                    ServingEngine::new(router.plan().clone(), threads);
+                let mut ff = FullForward::new();
+                let res = b.run_items(
+                    &format!(
+                        "dispatch_full/{}/t{threads}/{dn}tok",
+                        policy.name()
+                    ),
+                    dn as f64,
+                    &mut || {
+                        eng.forward_full(
+                            std::hint::black_box(&hd),
+                            &bank,
+                            1.0,
+                            policy,
+                            &mut ff,
+                        );
+                        std::hint::black_box(&ff);
+                    },
+                );
+                dispatch_rows.push(DispatchRow {
+                    name: format!("full_forward/{}", policy.name()),
+                    n: dn,
+                    d: dd,
+                    d_ff: dff,
+                    e: de,
+                    k: dk,
+                    threads,
+                    ns_per_token: res.per_item_ns(),
+                });
+            }
+        }
+        write_dispatch_json(&dispatch_rows);
+    }
 
     // ---- dispatch simulator ----
     let assignments =

@@ -53,6 +53,13 @@ impl MixtureStream {
         MixtureStream::new(rng, d, 8, 1.1, 0.4)
     }
 
+    /// `standard` with an explicit cluster-size skew — the overflow-
+    /// policy studies sweep this to stress the capacity bins (larger
+    /// `zipf_s` concentrates tokens on few clusters, hence few experts).
+    pub fn skewed(rng: &mut Rng, d: usize, zipf_s: f64) -> MixtureStream {
+        MixtureStream::new(rng, d, 8, zipf_s, 0.4)
+    }
+
     /// Sample `n_tokens` activations into `h` ([n_tokens, d]; cleared
     /// and resized, so a reused buffer does not allocate steady-state).
     pub fn fill(&self, rng: &mut Rng, n_tokens: usize, h: &mut Vec<f32>) {

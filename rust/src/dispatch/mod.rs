@@ -1,22 +1,35 @@
-//! Expert-parallel dispatch simulator — the paper's "hardware-software
-//! mismatch" claim (§1: imbalance causes "GPU memory fragmentation and
-//! pipeline stalls, increasing end-to-end latency") made measurable.
+//! Expert-parallel dispatch — the paper's "hardware-software mismatch"
+//! claim (§1: imbalance causes "GPU memory fragmentation and pipeline
+//! stalls, increasing end-to-end latency") made measurable, and (since
+//! PR 2) made *runnable*: routed batches compile into capacity-binned
+//! [`DispatchPlan`]s (see [`plan`]) that both the latency model here and
+//! the real expert FFN compute (`experts` + `ServingEngine::
+//! forward_full`) consume — so simulated accounting and actual compute
+//! agree by construction.
 //!
 //! Model: `E` experts sharded round-robin over `G` devices. Each serving
 //! step, a batch of routed tokens is dispatched; every expert has a
-//! capacity of `cf * fair_share` token slots per step (overflow tokens
-//! are dropped, exactly like the capacity-binned training dispatch).
-//! A device's step time is `alpha + beta * tokens_on_device` (fixed
-//! kernel-launch overhead + linear expert FLOPs); the *batch* completes
-//! when the slowest device finishes — so imbalance translates directly
-//! into pipeline stall time on every other device.
+//! capacity of `cf * fair_share` token slots per step. Over-capacity
+//! tokens are handled by the step's [`OverflowPolicy`] (greedy drop,
+//! next-choice fall-through, or least-loaded reroute). A device's step
+//! time is `alpha + beta * tokens_on_device` (fixed kernel-launch
+//! overhead + linear expert FLOPs); the *batch* completes when the
+//! slowest device finishes — so imbalance translates directly into
+//! pipeline stall time on every other device.
 //!
-//! Reported: throughput, per-step latency (mean/p50/p99), drop fraction,
-//! device utilization (busy time / wall time), and stall fraction.
+//! Reported: throughput, per-step latency (mean/p50/p99, nearest-rank
+//! percentiles), drop & reroute fractions, device utilization, stall
+//! fraction, and both cumulative and windowed (rolling
+//! [`LoadTracker`]) balance metrics.
+
+pub mod plan;
+
+pub use plan::{capacity_for, DispatchPlan, OverflowPolicy, DROPPED};
 
 use crate::data::MixtureStream;
-use crate::metrics::{gini, min_max_ratio};
-use crate::router::{RouterBatch, ServingEngine};
+use crate::experts::ExpertBank;
+use crate::metrics::{gini, min_max_ratio, LoadTracker};
+use crate::router::{FullForward, RouterBatch, ServingEngine};
 use crate::util::rng::Rng;
 
 #[derive(Debug, Clone)]
@@ -50,7 +63,10 @@ pub struct SimReport {
     pub steps: usize,
     pub tokens_routed: usize,
     pub tokens_dropped: usize,
+    /// Tokens kept on a different expert than routed (policy fallback).
+    pub tokens_rerouted: usize,
     pub drop_frac: f64,
+    pub reroute_frac: f64,
     pub throughput_tok_per_s: f64,
     pub latency_mean_us: f64,
     pub latency_p50_us: f64,
@@ -60,26 +76,38 @@ pub struct SimReport {
     /// Mean fraction of each step the average device idles waiting for
     /// the straggler.
     pub stall_frac: f64,
+    /// Cumulative (whole-run) balance of the *routed* load.
     pub load_gini: f64,
     pub load_min_max: f64,
+    /// Rolling balance over the last [`DispatchSim::LOAD_WINDOW`] steps.
+    pub window_gini: f64,
+    pub window_min_max: f64,
+    pub window_cv: f64,
 }
 
-/// A stream of per-step routing decisions: each step is a Vec of expert
-/// assignments, one entry per (token, k-slot).
+/// A stream of per-step routing decisions: each step is a flat `[N·k]`
+/// vector of expert assignments, one entry per (token, k-slot).
 pub struct DispatchSim {
     pub cfg: SimConfig,
     expert_device: Vec<usize>,
-    /// Cumulative per-expert load (for gini / min-max accounting).
+    /// Cumulative per-expert *routed* load (pre-policy; dropped tokens
+    /// count — this is what the router asked for).
     pub expert_load: Vec<f64>,
+    /// Rolling routed-load window shared with the report.
+    pub tracker: LoadTracker,
     latencies_us: Vec<f64>,
     busy_us: f64,
     wall_us: f64,
     tokens_routed: usize,
     tokens_dropped: usize,
+    tokens_rerouted: usize,
     steps: usize,
 }
 
 impl DispatchSim {
+    /// Steps covered by the rolling balance window in [`SimReport`].
+    pub const LOAD_WINDOW: usize = crate::metrics::DEFAULT_LOAD_WINDOW;
+
     pub fn new(cfg: SimConfig) -> Self {
         assert!(cfg.n_experts >= cfg.n_devices);
         // Round-robin expert placement (standard expert parallelism).
@@ -87,40 +115,48 @@ impl DispatchSim {
             (0..cfg.n_experts).map(|e| e % cfg.n_devices).collect();
         DispatchSim {
             expert_load: vec![0.0; cfg.n_experts],
+            tracker: LoadTracker::new(Self::LOAD_WINDOW, cfg.n_experts),
             expert_device,
             latencies_us: Vec::new(),
             busy_us: 0.0,
             wall_us: 0.0,
             tokens_routed: 0,
             tokens_dropped: 0,
+            tokens_rerouted: 0,
             steps: 0,
             cfg,
         }
     }
 
-    /// Per-expert capacity for a step routing `n_assignments` tokens.
+    /// Per-expert capacity for a step routing `n_assignments` tokens
+    /// (delegates to the shared [`capacity_for`], so the sim and the
+    /// dispatch plans can never disagree on a bin size).
     pub fn capacity(&self, n_assignments: usize) -> usize {
-        let fair = n_assignments as f64 / self.cfg.n_experts as f64;
-        (fair * self.cfg.capacity_factor).ceil().max(1.0) as usize
+        capacity_for(
+            n_assignments,
+            self.cfg.n_experts,
+            self.cfg.capacity_factor,
+        )
     }
 
-    /// Simulate one serving step given the routed expert id of every
-    /// (token, slot) pair.
-    pub fn step(&mut self, assignments: &[u32]) {
-        let cap = self.capacity(assignments.len());
-        let mut per_expert = vec![0usize; self.cfg.n_experts];
-        let mut dropped = 0usize;
-        for &e in assignments {
-            let e = e as usize;
-            if per_expert[e] < cap {
-                per_expert[e] += 1;
-            } else {
-                dropped += 1; // over capacity: token falls back to residual
-            }
-            self.expert_load[e] += 1.0;
+    /// Shared accounting core: every step path (legacy greedy-drop,
+    /// compiled plan, full expert-compute forward) lands here with
+    /// post-policy `counts` and pre-policy `routed`, so the latency
+    /// model and the drop/load bookkeeping are policy-agnostic.
+    fn apply_step(
+        &mut self,
+        counts: &[u32],
+        routed: &[u32],
+        dropped: usize,
+        rerouted: usize,
+        n_assignments: usize,
+    ) {
+        for (l, &r) in self.expert_load.iter_mut().zip(routed) {
+            *l += r as f64;
         }
-        let mut per_device = vec![0usize; self.cfg.n_devices];
-        for (e, &cnt) in per_expert.iter().enumerate() {
+        self.tracker.push_counts(routed);
+        let mut per_device = vec![0u32; self.cfg.n_devices];
+        for (e, &cnt) in counts.iter().enumerate() {
             per_device[self.expert_device[e]] += cnt;
         }
         // Device time = alpha + beta * tokens; the step latency is the
@@ -134,27 +170,110 @@ impl DispatchSim {
         self.latencies_us.push(step_latency);
         self.busy_us += busy;
         self.wall_us += step_latency * self.cfg.n_devices as f64;
-        self.tokens_routed += assignments.len();
+        self.tokens_routed += n_assignments;
         self.tokens_dropped += dropped;
+        self.tokens_rerouted += rerouted;
         self.steps += 1;
+    }
+
+    /// Simulate one serving step given the routed expert id of every
+    /// (token, slot) pair, with greedy in-order drop on overflow — the
+    /// historical behavior, identical to an [`OverflowPolicy::Drop`]
+    /// plan (pinned by `drop_plan_matches_sim_step_exactly`).
+    pub fn step(&mut self, assignments: &[u32]) {
+        let cap = self.capacity(assignments.len());
+        let mut counts = vec![0u32; self.cfg.n_experts];
+        let mut routed = vec![0u32; self.cfg.n_experts];
+        let mut dropped = 0usize;
+        for &e in assignments {
+            let e = e as usize;
+            routed[e] += 1;
+            if (counts[e] as usize) < cap {
+                counts[e] += 1;
+            } else {
+                dropped += 1; // over capacity: token falls to residual
+            }
+        }
+        self.apply_step(&counts, &routed, dropped, 0, assignments.len());
     }
 
     /// Simulate one serving step directly from a routed batch: the flat
     /// `[N*k]` id layout of `RouterBatch` is exactly the per-(token,
-    /// slot) assignment stream `step` consumes, so the compiled routing
-    /// engine feeds the simulator with no conversion or copy.
+    /// slot) assignment stream `step` consumes (greedy-drop policy).
     pub fn step_routed(&mut self, batch: &RouterBatch) {
         self.step(&batch.topk_idx);
     }
 
+    /// Account one serving step from an already-compiled plan — the
+    /// post-policy per-expert counts drive the latency model, so the
+    /// sim agrees with whatever the plan's policy actually kept. The
+    /// plan must have been binned with this sim's capacity rule.
+    pub fn step_plan(&mut self, plan: &DispatchPlan) {
+        assert_eq!(
+            plan.n_experts, self.cfg.n_experts,
+            "plan/sim expert count mismatch"
+        );
+        let n_assignments = plan.n * plan.top_k;
+        assert_eq!(
+            plan.capacity,
+            self.capacity(n_assignments),
+            "plan was binned with a different capacity rule"
+        );
+        self.apply_step(
+            &plan.counts,
+            &plan.routed,
+            plan.n_dropped,
+            plan.n_rerouted,
+            n_assignments,
+        );
+    }
+
+    /// Compile `batch` under `policy` (into the caller's reusable plan
+    /// scratch) and account it — the one-call serving-step path.
+    pub fn step_planned(
+        &mut self,
+        batch: &RouterBatch,
+        policy: OverflowPolicy,
+        plan: &mut DispatchPlan,
+    ) {
+        assert_eq!(batch.load.len(), self.cfg.n_experts);
+        let cap = self.capacity(batch.topk_idx.len());
+        plan.compile_batch(batch, cap, policy);
+        self.step_plan(plan);
+    }
+
+    /// [`DispatchSim::step_planned`] for a raw assignment stream (the
+    /// synthetic-skew drivers).
+    pub fn step_assignments(
+        &mut self,
+        assignments: &[u32],
+        top_k: usize,
+        policy: OverflowPolicy,
+        plan: &mut DispatchPlan,
+    ) {
+        let cap = self.capacity(assignments.len());
+        plan.compile(
+            assignments,
+            top_k,
+            self.cfg.n_experts,
+            cap,
+            policy,
+        );
+        self.step_plan(plan);
+    }
+
     pub fn report(&self) -> SimReport {
         let mut lat = self.latencies_us.clone();
-        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        lat.sort_by(f64::total_cmp);
+        // Nearest-rank percentile (ceil): the previous `(len-1)·p`
+        // floor understated p99 for small step counts (e.g. 10 steps
+        // gave the 9th-ranked latency, not the max).
         let pct = |p: f64| -> f64 {
             if lat.is_empty() {
                 return 0.0;
             }
-            lat[((lat.len() - 1) as f64 * p) as usize]
+            let rank = (p * lat.len() as f64).ceil().max(1.0) as usize;
+            lat[rank.min(lat.len()) - 1]
         };
         let total_lat: f64 = self.latencies_us.iter().sum();
         let load_f32: Vec<f32> =
@@ -163,7 +282,10 @@ impl DispatchSim {
             steps: self.steps,
             tokens_routed: self.tokens_routed,
             tokens_dropped: self.tokens_dropped,
+            tokens_rerouted: self.tokens_rerouted,
             drop_frac: self.tokens_dropped as f64
+                / self.tokens_routed.max(1) as f64,
+            reroute_frac: self.tokens_rerouted as f64
                 / self.tokens_routed.max(1) as f64,
             throughput_tok_per_s: if total_lat > 0.0 {
                 (self.tokens_routed - self.tokens_dropped) as f64
@@ -178,17 +300,22 @@ impl DispatchSim {
             stall_frac: 1.0 - self.busy_us / self.wall_us.max(1e-9),
             load_gini: gini(&load_f32),
             load_min_max: min_max_ratio(&load_f32),
+            window_gini: self.tracker.gini(),
+            window_min_max: self.tracker.min_max(),
+            window_cv: self.tracker.cv(),
         }
     }
 }
 
 /// Drive `steps` serving steps end-to-end with one shared protocol:
-/// sample a fresh mixture batch, route it through the engine, dispatch
-/// the routed ids into the simulator. Returns total routing
-/// nanoseconds (for ns/token accounting). This is the single
-/// implementation behind `dispatch-sim --routed`, the
-/// `dispatch-routed` report, and `examples/serving_sim.rs` — change
+/// sample a fresh mixture batch, route it through the engine, compile
+/// the routed batch into a dispatch plan under `policy`, account it in
+/// the simulator. Returns total routing nanoseconds (for ns/token
+/// accounting). This is the single implementation behind
+/// `dispatch-sim --routed`, the `dispatch-routed` /
+/// `dispatch-policies` reports, and `examples/serving_sim.rs` — change
 /// the measurement protocol here, not per call site.
+#[allow(clippy::too_many_arguments)]
 pub fn run_routed_steps(
     engine: &mut ServingEngine,
     mix: &MixtureStream,
@@ -196,18 +323,55 @@ pub fn run_routed_steps(
     sim: &mut DispatchSim,
     steps: usize,
     tokens_per_step: usize,
+    policy: OverflowPolicy,
 ) -> u128 {
     let mut h = Vec::new();
     let mut batch = RouterBatch::new();
+    let mut plan = DispatchPlan::new();
     let mut route_ns = 0u128;
     for _ in 0..steps {
         mix.fill(rng, tokens_per_step, &mut h);
         let t0 = std::time::Instant::now();
         engine.route_into(&h, &mut batch);
         route_ns += t0.elapsed().as_nanos();
-        sim.step_routed(&batch);
+        sim.step_planned(&batch, policy, &mut plan);
     }
     route_ns
+}
+
+/// [`run_routed_steps`] with real expert compute: each step runs the
+/// full route → plan → expert FFN → combine path
+/// (`ServingEngine::forward_full`) and accounts the resulting plan in
+/// the simulator. Returns total forward nanoseconds (routing + plan
+/// build + FFN + combine).
+#[allow(clippy::too_many_arguments)]
+pub fn run_full_steps(
+    engine: &mut ServingEngine,
+    bank: &ExpertBank,
+    mix: &MixtureStream,
+    rng: &mut Rng,
+    sim: &mut DispatchSim,
+    steps: usize,
+    tokens_per_step: usize,
+    policy: OverflowPolicy,
+    ff: &mut FullForward,
+) -> u128 {
+    let mut h = Vec::new();
+    let mut fwd_ns = 0u128;
+    for _ in 0..steps {
+        mix.fill(rng, tokens_per_step, &mut h);
+        let t0 = std::time::Instant::now();
+        engine.forward_full(
+            &h,
+            bank,
+            sim.cfg.capacity_factor,
+            policy,
+            ff,
+        );
+        fwd_ns += t0.elapsed().as_nanos();
+        sim.step_plan(&ff.plan);
+    }
+    fwd_ns
 }
 
 /// Generate synthetic routing assignments whose expert distribution has
@@ -320,6 +484,8 @@ mod tests {
         assert!(skew.drop_frac > bal.drop_frac + 0.1);
         assert!(skew.utilization < bal.utilization);
         assert!(skew.throughput_tok_per_s < bal.throughput_tok_per_s);
+        // window metrics track the cumulative story on a steady stream
+        assert!(skew.window_gini > bal.window_gini + 0.3);
     }
 
     #[test]
@@ -386,6 +552,79 @@ mod tests {
         assert_eq!(a.expert_load, b.expert_load);
     }
 
+    /// Acceptance: an `OverflowPolicy::Drop` plan reproduces the legacy
+    /// greedy-drop `step` accounting exactly — drops, routed load,
+    /// latencies, the whole report.
+    #[test]
+    fn drop_plan_matches_sim_step_exactly() {
+        let cfg = SimConfig {
+            n_experts: 16,
+            n_devices: 4,
+            top_k: 4,
+            capacity_factor: 1.0,
+            alpha_us: 10.0,
+            beta_us: 1.0,
+        };
+        let mut legacy = DispatchSim::new(cfg.clone());
+        let mut planned = DispatchSim::new(cfg);
+        let mut rng = Rng::new(14);
+        let mut plan = DispatchPlan::new();
+        for _ in 0..20 {
+            let a = synthetic_assignments(&mut rng, 128, 4, 16, 1.3);
+            legacy.step(&a);
+            planned.step_assignments(
+                &a,
+                4,
+                OverflowPolicy::Drop,
+                &mut plan,
+            );
+        }
+        assert_eq!(legacy.expert_load, planned.expert_load);
+        let (lr, pr) = (legacy.report(), planned.report());
+        assert_eq!(lr.tokens_dropped, pr.tokens_dropped);
+        assert_eq!(lr.tokens_routed, pr.tokens_routed);
+        assert_eq!(lr.latency_p50_us, pr.latency_p50_us);
+        assert_eq!(lr.latency_p99_us, pr.latency_p99_us);
+        assert_eq!(lr.throughput_tok_per_s, pr.throughput_tok_per_s);
+        assert_eq!(lr.utilization, pr.utilization);
+        assert_eq!(lr.load_gini, pr.load_gini);
+        assert_eq!(lr.window_gini, pr.window_gini);
+        assert_eq!(pr.tokens_rerouted, 0);
+    }
+
+    #[test]
+    fn rerouting_policies_reduce_drops_in_sim() {
+        let mut rng = Rng::new(6);
+        let a = synthetic_assignments(&mut rng, 512, 4, 16, 1.4);
+        let cfg = SimConfig {
+            n_experts: 16,
+            n_devices: 4,
+            top_k: 4,
+            capacity_factor: 1.0,
+            ..SimConfig::default()
+        };
+        let mut drops = Vec::new();
+        for policy in OverflowPolicy::ALL {
+            let mut sim = DispatchSim::new(cfg.clone());
+            let mut plan = DispatchPlan::new();
+            sim.step_assignments(&a, 4, policy, &mut plan);
+            let r = sim.report();
+            assert_eq!(
+                r.tokens_routed,
+                r.tokens_dropped
+                    + plan
+                        .counts
+                        .iter()
+                        .map(|&c| c as usize)
+                        .sum::<usize>()
+            );
+            drops.push(r.tokens_dropped);
+        }
+        assert!(drops[0] > 0, "skewed batch at cf=1.0 must drop");
+        assert!(drops[1] < drops[0], "next-choice {drops:?}");
+        assert!(drops[2] < drops[0], "least-loaded {drops:?}");
+    }
+
     #[test]
     fn run_routed_steps_conserves_tokens() {
         use crate::data::MixtureStream;
@@ -400,10 +639,57 @@ mod tests {
             top_k: 2,
             ..SimConfig::default()
         });
-        run_routed_steps(&mut eng, &mix, &mut rng, &mut sim, 3, 32);
+        run_routed_steps(
+            &mut eng,
+            &mix,
+            &mut rng,
+            &mut sim,
+            3,
+            32,
+            OverflowPolicy::Drop,
+        );
         let rep = sim.report();
         assert_eq!(rep.steps, 3);
         assert_eq!(rep.tokens_routed, 3 * 32 * 2);
+    }
+
+    #[test]
+    fn run_full_steps_accounts_real_compute() {
+        use crate::data::MixtureStream;
+        use crate::experts::ExpertBank;
+        use crate::router::{
+            synthetic_lpr_router, FullForward, ServingEngine,
+        };
+        let mut rng = Rng::new(19);
+        let (d, e, k) = (16usize, 8usize, 2usize);
+        let r = synthetic_lpr_router("cosine", &mut rng, d, 8, e, k);
+        let mut eng = ServingEngine::new(r.plan().clone(), 2);
+        let bank = ExpertBank::new(&Rng::new(4), e, d, 16);
+        let mix = MixtureStream::standard(&mut rng, d);
+        let mut sim = DispatchSim::new(SimConfig {
+            n_experts: e,
+            n_devices: 2,
+            top_k: k,
+            capacity_factor: 1.0,
+            ..SimConfig::default()
+        });
+        let mut ff = FullForward::new();
+        run_full_steps(
+            &mut eng,
+            &bank,
+            &mix,
+            &mut rng,
+            &mut sim,
+            4,
+            32,
+            OverflowPolicy::LeastLoaded,
+            &mut ff,
+        );
+        let rep = sim.report();
+        assert_eq!(rep.steps, 4);
+        assert_eq!(rep.tokens_routed, 4 * 32 * k);
+        // the last step's combined output has one row per token
+        assert_eq!(ff.combined.len(), 32 * d);
     }
 
     #[test]
@@ -420,5 +706,30 @@ mod tests {
         let r = run(1.0, 1.25);
         assert!(r.latency_p50_us <= r.latency_p99_us + 1e-9);
         assert!(r.latency_mean_us > 0.0);
+    }
+
+    /// Satellite: nearest-rank percentiles on a known latency vector.
+    /// The old floor-based rank gave p99 = 9 on this input.
+    #[test]
+    fn percentiles_are_nearest_rank() {
+        let cfg = SimConfig {
+            n_experts: 2,
+            n_devices: 1,
+            top_k: 1,
+            capacity_factor: 1e9, // never drop
+            alpha_us: 0.0,
+            beta_us: 1.0,
+        };
+        let mut sim = DispatchSim::new(cfg);
+        // step i routes i+1 single-expert tokens -> latency i+1 us
+        for i in 0..10usize {
+            let a = vec![0u32; i + 1];
+            sim.step(&a);
+        }
+        let r = sim.report();
+        // nearest-rank over [1..10]: p50 = ceil(5)th = 5, p99 = 10
+        assert_eq!(r.latency_p50_us, 5.0);
+        assert_eq!(r.latency_p99_us, 10.0);
+        assert_eq!(r.latency_mean_us, 5.5);
     }
 }

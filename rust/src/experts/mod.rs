@@ -1,0 +1,378 @@
+//! Real expert FFN compute for the serving path — the stage PR 1's
+//! analytic latency model stood in for. A [`ExpertBank`] holds `E`
+//! dense SwiGLU-less FFN shards (`out = SiLU(x·W1 + b1)·W2 + b2`,
+//! matching the SiLU idiom of the LPR encoder); tokens reach it through
+//! a [`DispatchPlan`]'s grouped layout:
+//!
+//! 1. **gather** ([`gather_rows`]) — copy each surviving token's
+//!    activation into the expert-grouped `[kept, d]` buffer (one
+//!    contiguous row-block per expert: the grouped-GEMM input);
+//! 2. **compute** ([`ExpertBank::forward_rows`]) — one batched matmul
+//!    pair per expert over its contiguous rows (the serving engine
+//!    shards these buckets across threads; per-expert compute is pure,
+//!    so the grouping never changes the bits);
+//! 3. **combine** ([`combine_rows`]) — gate-weighted accumulation back
+//!    into token order, walked in fixed (token, slot) order so the
+//!    result is independent of expert grouping and thread count.
+//!
+//! Dropped slots contribute nothing (the token continues through the
+//! residual stream, as in capacity-factor training dispatch); rerouted
+//! slots keep their original gate weight.
+
+use crate::dispatch::plan::{DispatchPlan, DROPPED};
+use crate::router::linalg::{matmul_into, silu};
+use crate::util::rng::Rng;
+
+/// `E` dense FFN expert shards with flat row-major parameters.
+#[derive(Debug, Clone)]
+pub struct ExpertBank {
+    pub n_experts: usize,
+    pub d_model: usize,
+    pub d_ff: usize,
+    /// [E, d, d_ff]
+    w1: Vec<f32>,
+    /// [E, d_ff]
+    b1: Vec<f32>,
+    /// [E, d_ff, d]
+    w2: Vec<f32>,
+    /// [E, d]
+    b2: Vec<f32>,
+}
+
+impl ExpertBank {
+    /// Deterministic init: every expert draws from its own `rng.fold(e)`
+    /// child stream, so expert `e`'s parameters depend only on the seed
+    /// and `e` — not on `E` or construction order.
+    pub fn new(
+        rng: &Rng,
+        n_experts: usize,
+        d_model: usize,
+        d_ff: usize,
+    ) -> ExpertBank {
+        assert!(n_experts > 0 && d_model > 0 && d_ff > 0);
+        let (s1, s2) = (
+            1.0 / (d_model as f32).sqrt(),
+            1.0 / (d_ff as f32).sqrt(),
+        );
+        let mut w1 = Vec::with_capacity(n_experts * d_model * d_ff);
+        let mut w2 = Vec::with_capacity(n_experts * d_ff * d_model);
+        for e in 0..n_experts {
+            let mut r = rng.fold(e as u64);
+            w1.extend(
+                (0..d_model * d_ff).map(|_| r.normal() as f32 * s1),
+            );
+            w2.extend(
+                (0..d_ff * d_model).map(|_| r.normal() as f32 * s2),
+            );
+        }
+        ExpertBank {
+            n_experts,
+            d_model,
+            d_ff,
+            w1,
+            b1: vec![0.0; n_experts * d_ff],
+            w2,
+            b2: vec![0.0; n_experts * d_model],
+        }
+    }
+
+    /// FFN of expert `e` over `m` contiguous rows: `out[m, d] =
+    /// SiLU(x·W1 + b1)·W2 + b2`. `hid` is caller-owned scratch (grows
+    /// once to the high-water bucket size). Pure per expert — the same
+    /// rows give the same bits regardless of which thread runs them.
+    pub fn forward_rows(
+        &self,
+        e: usize,
+        x: &[f32],
+        m: usize,
+        hid: &mut Vec<f32>,
+        out: &mut [f32],
+    ) {
+        let (d, ff) = (self.d_model, self.d_ff);
+        assert!(e < self.n_experts, "expert {e} out of range");
+        assert_eq!(x.len(), m * d, "x shape");
+        assert_eq!(out.len(), m * d, "out shape");
+        hid.clear();
+        hid.resize(m * ff, 0.0);
+        matmul_into(x, &self.w1[e * d * ff..(e + 1) * d * ff], hid, m, d, ff);
+        let b1 = &self.b1[e * ff..(e + 1) * ff];
+        for row in hid.chunks_mut(ff) {
+            for (v, &b) in row.iter_mut().zip(b1) {
+                *v += b;
+            }
+        }
+        silu(hid);
+        matmul_into(
+            hid,
+            &self.w2[e * ff * d..(e + 1) * ff * d],
+            out,
+            m,
+            ff,
+            d,
+        );
+        let b2 = &self.b2[e * d..(e + 1) * d];
+        for row in out.chunks_mut(d) {
+            for (v, &b) in row.iter_mut().zip(b2) {
+                *v += b;
+            }
+        }
+    }
+
+    /// Single-threaded reference: run every expert bucket of `plan`
+    /// over the gathered rows `xg` into `y` (both `[kept, d]`). The
+    /// sharded engine path must match this bit-for-bit.
+    pub fn forward_all(
+        &self,
+        plan: &DispatchPlan,
+        xg: &[f32],
+        hid: &mut Vec<f32>,
+        y: &mut [f32],
+    ) {
+        let d = self.d_model;
+        assert_eq!(xg.len(), plan.kept() * d);
+        assert_eq!(y.len(), plan.kept() * d);
+        for e in 0..plan.n_experts {
+            let rows = plan.expert_rows(e);
+            let m = rows.len();
+            if m == 0 {
+                continue;
+            }
+            self.forward_rows(
+                e,
+                &xg[rows.start * d..rows.end * d],
+                m,
+                hid,
+                &mut y[rows.start * d..rows.end * d],
+            );
+        }
+    }
+}
+
+/// Gather surviving token activations into the expert-grouped layout:
+/// `xg[pos] = h[plan.src[pos] / top_k]` for every grouped row. `h` is
+/// `[N, d]` row-major; `xg` is cleared/resized to `[kept, d]`.
+pub fn gather_rows(
+    plan: &DispatchPlan,
+    h: &[f32],
+    d: usize,
+    xg: &mut Vec<f32>,
+) {
+    assert_eq!(h.len(), plan.n * d, "h shape");
+    let k = plan.top_k;
+    xg.clear();
+    xg.resize(plan.kept() * d, 0.0);
+    for (pos, &f) in plan.src.iter().enumerate() {
+        let t = f as usize / k;
+        xg[pos * d..(pos + 1) * d]
+            .copy_from_slice(&h[t * d..(t + 1) * d]);
+    }
+}
+
+/// Gate-weighted combine back into token order: for each token, sum
+/// `weight[slot] · y[row-of-slot]` over its surviving slots, in slot
+/// order. `weights` is the flat `[N·k]` combine-weight buffer of the
+/// routed batch; `out` is cleared/resized to `[N, d]`. Fixed iteration
+/// order ⇒ bit-identical regardless of expert grouping or threading.
+pub fn combine_rows(
+    plan: &DispatchPlan,
+    weights: &[f32],
+    y: &[f32],
+    d: usize,
+    out: &mut Vec<f32>,
+) {
+    let (n, k) = (plan.n, plan.top_k);
+    assert_eq!(weights.len(), n * k, "weights shape");
+    assert_eq!(y.len(), plan.kept() * d, "y shape");
+    out.clear();
+    out.resize(n * d, 0.0);
+    for r in 0..n {
+        let orow = &mut out[r * d..(r + 1) * d];
+        for j in 0..k {
+            let f = r * k + j;
+            let pos = plan.pos_of[f];
+            if pos == DROPPED {
+                continue;
+            }
+            let w = weights[f];
+            let yrow = &y[pos as usize * d..(pos as usize + 1) * d];
+            for (o, &v) in orow.iter_mut().zip(yrow) {
+                *o += w * v;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dispatch::plan::{capacity_for, OverflowPolicy};
+    use crate::router::{synthetic_lpr_router, ServingEngine};
+    use crate::util::rng::Rng;
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn init_is_deterministic_and_expert_distinct() {
+        let a = ExpertBank::new(&Rng::new(5), 4, 8, 16);
+        let b = ExpertBank::new(&Rng::new(5), 4, 8, 16);
+        assert_eq!(a.w1, b.w1);
+        assert_eq!(a.w2, b.w2);
+        // different experts hold different weights
+        assert_ne!(a.w1[0..8 * 16], a.w1[8 * 16..2 * 8 * 16]);
+        // expert e's params depend only on (seed, e), not on E
+        let wide = ExpertBank::new(&Rng::new(5), 6, 8, 16);
+        assert_eq!(a.w1[..4 * 8 * 16], wide.w1[..4 * 8 * 16]);
+    }
+
+    #[test]
+    fn forward_rows_matches_manual_ffn() {
+        // d=2, ff=1: out = silu(x·w1)·w2 with zero biases
+        let mut bank = ExpertBank::new(&Rng::new(1), 1, 2, 1);
+        bank.w1 = vec![1.0, -1.0]; // [2, 1]
+        bank.w2 = vec![0.5, 2.0]; // [1, 2]
+        let x = [3.0f32, 1.0]; // h = silu(2.0)
+        let hpre = 2.0f32;
+        let hval = hpre / (1.0 + (-hpre).exp());
+        let mut hid = Vec::new();
+        let mut out = vec![0.0f32; 2];
+        bank.forward_rows(0, &x, 1, &mut hid, &mut out);
+        assert!((out[0] - hval * 0.5).abs() < 1e-6);
+        assert!((out[1] - hval * 2.0).abs() < 1e-6);
+    }
+
+    /// With capacity high enough that nothing drops, the full
+    /// gather→compute→combine path must equal the naive per-token loop
+    /// `sum_j w_j · FFN_{e_j}(h_t)` bit-for-bit.
+    #[test]
+    fn grouped_path_matches_naive_reference() {
+        let mut rng = Rng::new(77);
+        let (d, dz, e, k, n, ff) = (16usize, 8, 8, 3, 40, 12);
+        let r = synthetic_lpr_router("dot", &mut rng, d, dz, e, k);
+        let mut eng = ServingEngine::new(r.plan().clone(), 1);
+        let h = rand_vec(&mut rng, n * d);
+        let batch = eng.route(&h);
+        let bank = ExpertBank::new(&Rng::new(9), e, d, ff);
+        let mut plan = DispatchPlan::new();
+        plan.compile_batch(&batch, n * k, OverflowPolicy::Drop);
+        assert_eq!(plan.n_dropped, 0);
+
+        let (mut xg, mut hid) = (Vec::new(), Vec::new());
+        gather_rows(&plan, &h, d, &mut xg);
+        let mut y = vec![0.0f32; plan.kept() * d];
+        bank.forward_all(&plan, &xg, &mut hid, &mut y);
+        let mut combined = Vec::new();
+        combine_rows(&plan, &batch.weights, &y, d, &mut combined);
+
+        // naive reference: route each (token, slot) through its expert
+        for t in 0..n {
+            let mut want = vec![0.0f32; d];
+            for j in 0..k {
+                let f = t * k + j;
+                let ex = batch.topk_idx[f] as usize;
+                let mut yrow = vec![0.0f32; d];
+                bank.forward_rows(
+                    ex,
+                    &h[t * d..(t + 1) * d],
+                    1,
+                    &mut hid,
+                    &mut yrow,
+                );
+                let w = batch.weights[f];
+                for (acc, &v) in want.iter_mut().zip(&yrow) {
+                    *acc += w * v;
+                }
+            }
+            // identical op order per slot ⇒ exact equality
+            assert_eq!(
+                &combined[t * d..(t + 1) * d],
+                &want[..],
+                "token {t} diverged"
+            );
+        }
+    }
+
+    #[test]
+    fn dropped_slots_contribute_nothing() {
+        let mut rng = Rng::new(31);
+        let (d, dz, e, k, n, ff) = (8usize, 4, 4, 2, 32, 8);
+        let r = synthetic_lpr_router("gaussian", &mut rng, d, dz, e, k);
+        let mut eng = ServingEngine::new(r.plan().clone(), 1);
+        let h = rand_vec(&mut rng, n * d);
+        let batch = eng.route(&h);
+        let bank = ExpertBank::new(&Rng::new(2), e, d, ff);
+        // capacity 1: almost everything drops
+        let mut plan = DispatchPlan::new();
+        plan.compile_batch(&batch, 1, OverflowPolicy::Drop);
+        assert!(plan.n_dropped > 0);
+        let (mut xg, mut hid, mut combined) =
+            (Vec::new(), Vec::new(), Vec::new());
+        gather_rows(&plan, &h, d, &mut xg);
+        let mut y = vec![0.0f32; plan.kept() * d];
+        bank.forward_all(&plan, &xg, &mut hid, &mut y);
+        combine_rows(&plan, &batch.weights, &y, d, &mut combined);
+        for t in 0..n {
+            let all_dropped = (0..k)
+                .all(|j| plan.pos_of[t * k + j] == DROPPED);
+            let row_zero = combined[t * d..(t + 1) * d]
+                .iter()
+                .all(|&v| v == 0.0);
+            if all_dropped {
+                assert!(row_zero, "dropped token {t} must be zero");
+            }
+        }
+        // exactly `capacity * live experts` rows computed
+        assert_eq!(
+            plan.kept(),
+            plan.counts.iter().map(|&c| c as usize).sum::<usize>()
+        );
+    }
+
+    #[test]
+    fn capacity_helper_agrees_with_plan_bins() {
+        let cap = capacity_for(64 * 2, 4, 1.0);
+        assert_eq!(cap, 32);
+    }
+
+    /// NextChoice can land a rerouted slot on an expert the token
+    /// already reaches through another slot (its fallback set IS the
+    /// token's later choices). The defined semantics: the token takes
+    /// two rows of that expert's bucket and the combine sums both slot
+    /// weights over the same FFN output — the overflowed weight
+    /// transfers to the fallback expert.
+    #[test]
+    fn next_choice_transfers_weight_on_duplicate() {
+        let (d, ff, e, k) = (4usize, 6usize, 3usize, 2usize);
+        let bank = ExpertBank::new(&Rng::new(12), e, d, ff);
+        // tokens (0,2), (0,2), (0,1); cap 2: token 2's slot 0
+        // overflows expert 0 and falls through to its next choice,
+        // expert 1 — which its own slot 1 also reaches.
+        let a: Vec<u32> = vec![0, 2, 0, 2, 0, 1];
+        let mut plan = DispatchPlan::new();
+        plan.compile(&a, k, e, 2, OverflowPolicy::NextChoice);
+        assert_eq!(plan.expert_of, vec![0, 2, 0, 2, 1, 1]);
+        assert_eq!(plan.n_rerouted, 1);
+        assert_eq!(plan.n_dropped, 0);
+
+        let mut rng = Rng::new(3);
+        let h: Vec<f32> =
+            (0..3 * d).map(|_| rng.normal() as f32).collect();
+        let weights: Vec<f32> =
+            vec![0.6, 0.4, 0.7, 0.3, 0.55, 0.45];
+        let (mut xg, mut hid, mut combined) =
+            (Vec::new(), Vec::new(), Vec::new());
+        gather_rows(&plan, &h, d, &mut xg);
+        let mut y = vec![0.0f32; plan.kept() * d];
+        bank.forward_all(&plan, &xg, &mut hid, &mut y);
+        combine_rows(&plan, &weights, &y, d, &mut combined);
+
+        // token 2: both slots hit expert 1 -> w0·F1(h2) + w1·F1(h2)
+        let mut f1 = vec![0.0f32; d];
+        bank.forward_rows(1, &h[2 * d..3 * d], 1, &mut hid, &mut f1);
+        for c in 0..d {
+            let want = 0.55 * f1[c] + 0.45 * f1[c];
+            assert_eq!(combined[2 * d + c], want, "dim {c}");
+        }
+    }
+}

@@ -12,17 +12,34 @@
 //!   pure-Rust serving router, and the experiment harness reproducing
 //!   every table/figure of the paper.
 //!
-//! The serving hot path is a compile-then-route design:
-//! [`router::RouterPlan`] precompiles parameters (projected prototypes,
-//! fused score kernel, prototype-side constants) and routes batches
-//! into flat `[N*k]` buffers with zero steady-state allocation;
-//! [`router::ServingEngine`] shards batches across scoped worker
-//! threads with bit-identical outputs for every thread count (the
-//! thread-determinism contract is documented in `router::engine`). The
-//! flat id buffer feeds [`dispatch::DispatchSim`] directly.
+//! The serving hot path is a compile-then-route-then-dispatch design:
+//!
+//! 1. **route** — [`router::RouterPlan`] precompiles parameters
+//!    (projected prototypes, fused score kernel, prototype-side
+//!    constants) and routes batches into flat `[N*k]` buffers with zero
+//!    steady-state allocation; [`router::ServingEngine`] shards batches
+//!    across scoped worker threads with bit-identical outputs for every
+//!    thread count (the thread-determinism contract is documented in
+//!    `router::engine`).
+//! 2. **plan** — the routed batch compiles into a
+//!    [`dispatch::DispatchPlan`]: capacity-binned per-expert buckets in
+//!    the grouped-GEMM scatter/gather layout, with a pluggable
+//!    [`dispatch::OverflowPolicy`] (greedy drop / next-choice
+//!    fall-through / least-loaded reroute) applied at plan build.
+//! 3. **compute** — [`experts::ExpertBank`] runs real dense FFN expert
+//!    shards over the plan's contiguous buckets (sharded across the
+//!    engine's threads, still bit-identical).
+//! 4. **combine** — gate-weighted accumulation back into token order
+//!    (`router::FullForward::combined`); dropped slots fall through to
+//!    the residual stream.
+//!
+//! [`dispatch::DispatchSim`] consumes the *same* plans for its latency
+//! model, so simulated accounting and real compute agree by
+//! construction; [`metrics::LoadTracker`] gives both a rolling
+//! balance window.
 //!
 //! Start with [`runtime::Runtime`] + [`coordinator::Trainer`] for
-//! training, [`router::RouterPlan`] + [`router::ServingEngine`] +
+//! training, [`router::ServingEngine::forward_full`] +
 //! [`dispatch::DispatchSim`] for serving-path studies
 //! ([`router::Router`] remains as a compatibility façade), and
 //! [`report::Reporter`] for the paper's experiments. See `examples/`
@@ -32,6 +49,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod dispatch;
+pub mod experts;
 pub mod metrics;
 pub mod report;
 pub mod router;

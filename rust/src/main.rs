@@ -22,11 +22,15 @@ use std::path::PathBuf;
 use lpr::coordinator::{checkpoint, Trainer};
 use lpr::data::{MixtureStream, ZipfMarkovCorpus};
 use lpr::dispatch::{
-    run_routed_steps, synthetic_assignments, DispatchSim, SimConfig,
+    run_full_steps, run_routed_steps, synthetic_assignments,
+    DispatchPlan, DispatchSim, OverflowPolicy, SimConfig,
 };
+use lpr::experts::ExpertBank;
 use lpr::metrics::{ascii_heatmap, entropy_frac, gini, min_max_ratio};
 use lpr::report::Reporter;
-use lpr::router::{synthetic_lpr_router, RouterBatch, ServingEngine};
+use lpr::router::{
+    synthetic_lpr_router, FullForward, RouterBatch, ServingEngine,
+};
 use lpr::runtime::{CompiledArtifacts, Runtime};
 use lpr::util::cli::Args;
 use lpr::util::rng::Rng;
@@ -42,18 +46,24 @@ USAGE:
   lpr route synthetic [--metric M] [--threads N] [--tokens N]
             [--experts N] [--topk K]
   lpr repro <t1|t2|t3|t4|t5|t6|t7|fig1|fig3|fig4|dispatch
-            |dispatch-routed|dispatch-replay|all> [--steps N]
+            |dispatch-routed|dispatch-policies|dispatch-replay|all>
+            [--steps N]
   lpr dispatch-sim [--experts N] [--devices N] [--topk K] [--skew S]
                    [--cf F] [--steps N] [--threads N] [--metric M]
-                   [--routed]
+                   [--policy P] [--routed] [--full]
   lpr list
 Options:
   --artifacts DIR   artifact directory (default: artifacts/)
   --out DIR         results directory (default: results/)
   --threads N       routing threads for the serving engine (default 1)
+  --policy P        overflow policy for over-capacity tokens:
+                    drop | next-choice | least-loaded (default drop)
   --routed          dispatch-sim: drive the simulator from the compiled
                     routing engine on clustered tokens instead of
                     synthetic Zipf assignments
+  --full            dispatch-sim: with --routed, run the real expert
+                    FFN path (route -> plan -> compute -> combine)
+                    instead of the latency model alone
 ";
 
 fn main() {
@@ -223,10 +233,13 @@ fn cmd_route_synthetic(args: &Args) -> Result<()> {
          ({metric}, {threads} threads)"
     );
     println!(
-        "  GINI {:.3}  min-max {:.4}  entropy {:.3}",
+        "  GINI {:.3}  min-max {:.4}  entropy {:.3}  \
+         win-GINI {:.3} ({} batches)",
         gini(&out.load),
         min_max_ratio(&out.load),
-        entropy_frac(&out.load)
+        entropy_frac(&out.load),
+        engine.tracker().gini(),
+        engine.tracker().len()
     );
     println!(
         "  {:.0} tok/s  ({:.0} ns/token)",
@@ -282,6 +295,7 @@ fn cmd_repro(args: &Args) -> Result<()> {
         "fig4" => rep.fig4()?,
         "dispatch" => rep.dispatch_report()?,
         "dispatch-routed" => rep.dispatch_routed()?,
+        "dispatch-policies" => rep.dispatch_policies()?,
         "dispatch-replay" => rep.dispatch_replay()?,
         "all" => rep.all()?,
         other => bail!("unknown experiment '{other}'"),
@@ -303,6 +317,14 @@ fn cmd_dispatch_sim(args: &Args) -> Result<()> {
     let tokens = args.opt_usize("tokens", 1024);
     let threads = args.opt_usize("threads", 1);
     let routed = args.has_flag("routed") || args.opt("routed").is_some();
+    let full = args.has_flag("full") || args.opt("full").is_some();
+    let policy_name = args.opt_or("policy", "drop");
+    let policy = OverflowPolicy::parse(policy_name).with_context(|| {
+        format!(
+            "unknown --policy '{policy_name}' \
+             (drop | next-choice | least-loaded)"
+        )
+    })?;
     let (e, k) = (cfg.n_experts, cfg.top_k);
     let mut sim = DispatchSim::new(cfg);
     let mut rng = Rng::new(args.opt_usize("seed", 7) as u64);
@@ -316,32 +338,55 @@ fn cmd_dispatch_sim(args: &Args) -> Result<()> {
         let mut engine =
             ServingEngine::new(router.plan().clone(), threads);
         let mix = MixtureStream::standard(&mut rng, d);
-        let route_ns = run_routed_steps(
-            &mut engine, &mix, &mut rng, &mut sim, steps, tokens,
-        );
-        println!(
-            "dispatch-sim --routed: metric {metric}, {threads} threads, \
-             routing {:.0} ns/token",
-            route_ns as f64 / (steps * tokens) as f64
-        );
+        if full {
+            // real expert compute: route -> plan -> FFN -> combine
+            let d_ff = args.opt_usize("dff", 4 * d);
+            let bank = ExpertBank::new(&Rng::new(42), e, d, d_ff);
+            let mut ff = FullForward::new();
+            let fwd_ns = run_full_steps(
+                &mut engine, &bank, &mix, &mut rng, &mut sim, steps,
+                tokens, policy, &mut ff,
+            );
+            println!(
+                "dispatch-sim --routed --full: metric {metric}, \
+                 policy {}, d_ff {d_ff}, {threads} threads, \
+                 full forward {:.0} ns/token",
+                policy.name(),
+                fwd_ns as f64 / (steps * tokens) as f64
+            );
+        } else {
+            let route_ns = run_routed_steps(
+                &mut engine, &mix, &mut rng, &mut sim, steps, tokens,
+                policy,
+            );
+            println!(
+                "dispatch-sim --routed: metric {metric}, policy {}, \
+                 {threads} threads, routing {:.0} ns/token",
+                policy.name(),
+                route_ns as f64 / (steps * tokens) as f64
+            );
+        }
     } else {
+        let mut plan = DispatchPlan::new();
         for _ in 0..steps {
             let a = synthetic_assignments(&mut rng, tokens, k, e, skew);
-            sim.step(&a);
+            sim.step_assignments(&a, k, policy, &mut plan);
         }
     }
     let r = sim.report();
     let dt = t0.elapsed().as_secs_f64();
     println!(
-        "dispatch-sim: {} steps x {tokens} tokens (skew {skew}) in \
-         {dt:.2}s ({:.0} tok/s simulated)",
+        "dispatch-sim: {} steps x {tokens} tokens (skew {skew}, \
+         policy {}) in {dt:.2}s ({:.0} tok/s simulated)",
         r.steps,
+        policy.name(),
         (r.tokens_routed as f64 / k as f64) / dt
     );
     println!(
-        "  GINI {}  min-max {}  throughput {:.0} tok/s  \
+        "  GINI {}  win-GINI {}  min-max {}  throughput {:.0} tok/s  \
          latency mean/p50/p99 {:.0}/{:.0}/{:.0} us",
         fmt_sci(r.load_gini),
+        fmt_sci(r.window_gini),
         fmt_sci(r.load_min_max),
         r.throughput_tok_per_s,
         r.latency_mean_us,
@@ -349,8 +394,9 @@ fn cmd_dispatch_sim(args: &Args) -> Result<()> {
         r.latency_p99_us
     );
     println!(
-        "  drop {:.2}%  utilization {:.3}  stall {:.3}",
+        "  drop {:.2}%  reroute {:.2}%  utilization {:.3}  stall {:.3}",
         100.0 * r.drop_frac,
+        100.0 * r.reroute_frac,
         r.utilization,
         r.stall_frac
     );

@@ -1,11 +1,18 @@
 //! Load-balance metrics — paper §3.1 eq.25 (Gini) and eq.26 (min-max),
-//! plus normalized entropy and coefficient of variation.
+//! plus normalized entropy, coefficient of variation, and a streaming
+//! windowed [`LoadTracker`] (rolling Gini / min-max / CV over the last
+//! W serving steps) shared by the dispatch simulator, the serving
+//! engine, and the reporter.
 //!
 //! Mirrors `python/compile/metrics.py`; the two implementations are
 //! cross-checked against `artifacts/goldens/metrics.json` in the
 //! integration tests (`rust/tests/goldens.rs`).
 
 pub const EPS: f64 = 1e-9;
+
+/// Default [`LoadTracker`] window (serving steps) shared by the
+/// dispatch simulator and the serving engine.
+pub const DEFAULT_LOAD_WINDOW: usize = 64;
 
 /// Gini coefficient of an expert-load vector. 0 = perfectly balanced,
 /// (n-1)/n = all load on one expert.
@@ -15,7 +22,10 @@ pub fn gini(load: &[f32]) -> f64 {
         return 0.0;
     }
     let mut x: Vec<f64> = load.iter().map(|&v| v as f64).collect();
-    x.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total order (same approach as router::rank_cmp): NaN entries must
+    // not panic the sort — they sort last and propagate NaN through the
+    // sum, so a poisoned load vector yields gini = NaN, never a panic.
+    x.sort_by(f64::total_cmp);
     let total: f64 = x.iter().sum();
     if total <= 0.0 {
         return 0.0;
@@ -141,6 +151,126 @@ impl LoadMatrix {
                     .collect()
             })
             .collect()
+    }
+}
+
+/// Streaming windowed load statistics: rolling Gini / min-max / CV over
+/// the last `window` serving steps. One tracker is shared by the
+/// dispatch simulator, the serving engine, and the reporter so "recent
+/// balance" means the same thing everywhere (cumulative metrics like
+/// [`LoadMatrix`] hide drift: a router that was balanced for the first
+/// million tokens and collapsed afterwards still looks fine on the
+/// cumulative Gini).
+///
+/// `push` is O(E) (ring-buffer overwrite); the windowed metrics
+/// recompute the per-expert sums from the ring on demand, so they are
+/// exact — no incremental add/subtract float drift.
+#[derive(Debug, Clone)]
+pub struct LoadTracker {
+    window: usize,
+    n_experts: usize,
+    /// [window * n_experts] ring of per-step load rows.
+    ring: Vec<f32>,
+    /// Next write slot in [0, window).
+    head: usize,
+    /// Filled rows (saturates at `window`).
+    len: usize,
+    total_steps: usize,
+}
+
+impl LoadTracker {
+    pub fn new(window: usize, n_experts: usize) -> LoadTracker {
+        assert!(window >= 1, "window must be >= 1");
+        assert!(n_experts >= 1, "n_experts must be >= 1");
+        LoadTracker {
+            window,
+            n_experts,
+            ring: vec![0.0; window * n_experts],
+            head: 0,
+            len: 0,
+            total_steps: 0,
+        }
+    }
+
+    pub fn window(&self) -> usize {
+        self.window
+    }
+
+    /// Steps currently inside the window.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Steps observed over the tracker's lifetime.
+    pub fn total_steps(&self) -> usize {
+        self.total_steps
+    }
+
+    /// Record one step's [E] load row, evicting the oldest step once
+    /// the window is full.
+    pub fn push(&mut self, step_load: &[f32]) {
+        assert_eq!(step_load.len(), self.n_experts, "load row shape");
+        let e = self.n_experts;
+        self.ring[self.head * e..(self.head + 1) * e]
+            .copy_from_slice(step_load);
+        self.head = (self.head + 1) % self.window;
+        self.len = (self.len + 1).min(self.window);
+        self.total_steps += 1;
+    }
+
+    /// `push` for integer assignment counts (the dispatch-plan layout).
+    pub fn push_counts(&mut self, counts: &[u32]) {
+        assert_eq!(counts.len(), self.n_experts, "load row shape");
+        let e = self.n_experts;
+        for (slot, &c) in self.ring[self.head * e..(self.head + 1) * e]
+            .iter_mut()
+            .zip(counts)
+        {
+            *slot = c as f32;
+        }
+        self.head = (self.head + 1) % self.window;
+        self.len = (self.len + 1).min(self.window);
+        self.total_steps += 1;
+    }
+
+    /// Per-expert load summed over the window, into a reusable buffer.
+    pub fn windowed_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        out.resize(self.n_experts, 0.0);
+        for row in self.ring.chunks(self.n_experts).take(self.len) {
+            for (acc, &v) in out.iter_mut().zip(row) {
+                *acc += v;
+            }
+        }
+    }
+
+    /// Per-expert load summed over the window.
+    pub fn windowed(&self) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.windowed_into(&mut out);
+        out
+    }
+
+    /// Rolling Gini over the window (0.0 when no steps recorded).
+    pub fn gini(&self) -> f64 {
+        gini(&self.windowed())
+    }
+
+    /// Rolling min-max ratio over the window.
+    pub fn min_max(&self) -> f64 {
+        if self.len == 0 {
+            return 0.0;
+        }
+        min_max_ratio(&self.windowed())
+    }
+
+    /// Rolling coefficient of variation over the window.
+    pub fn cv(&self) -> f64 {
+        cv(&self.windowed())
     }
 }
 
@@ -286,6 +416,72 @@ mod tests {
         assert_eq!(lm.total(), vec![4.0, 2.0, 2.0, 2.0]);
         let norm = lm.normalized();
         assert!((norm[1].iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gini_nan_entry_does_not_panic() {
+        // regression: the old partial_cmp().unwrap() comparator panicked
+        // on NaN load entries mid-sort; NaN must now propagate instead.
+        let g = gini(&[1.0, f32::NAN, 2.0]);
+        assert!(g.is_nan(), "NaN load should yield NaN gini, got {g}");
+        // and the NaN-free path is untouched
+        assert!((gini(&[1.0, 2.0, 3.0, 4.0]) - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn load_tracker_windows_roll() {
+        let mut t = LoadTracker::new(2, 3);
+        assert!(t.is_empty());
+        assert!(t.gini().abs() < 1e-12); // empty window: defined, zero
+        t.push(&[4.0, 0.0, 0.0]);
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.windowed(), vec![4.0, 0.0, 0.0]);
+        t.push_counts(&[0, 4, 0]);
+        assert_eq!(t.windowed(), vec![4.0, 4.0, 0.0]);
+        // third push evicts the first step: window is [step2, step3]
+        t.push(&[0.0, 0.0, 4.0]);
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.total_steps(), 3);
+        assert_eq!(t.windowed(), vec![0.0, 4.0, 4.0]);
+    }
+
+    #[test]
+    fn load_tracker_metrics_match_free_functions() {
+        let mut t = LoadTracker::new(8, 4);
+        t.push(&[1.0, 2.0, 3.0, 4.0]);
+        t.push(&[4.0, 3.0, 2.0, 1.0]);
+        let w = t.windowed();
+        assert_eq!(w, vec![5.0; 4]);
+        assert!((t.gini() - gini(&w)).abs() < 1e-12);
+        assert!((t.min_max() - min_max_ratio(&w)).abs() < 1e-12);
+        assert!((t.cv() - cv(&w)).abs() < 1e-12);
+        // uniform window: perfectly balanced
+        assert!(t.gini().abs() < 1e-12);
+        assert!((t.min_max() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn load_tracker_sees_recent_collapse_cumulative_misses() {
+        // 100 balanced steps then 16 collapsed steps: the cumulative
+        // load still looks healthy, the windowed tracker does not.
+        let mut cumulative = vec![0.0f32; 4];
+        let mut t = LoadTracker::new(16, 4);
+        for _ in 0..100 {
+            let row = [1.0f32; 4];
+            for (c, v) in cumulative.iter_mut().zip(row) {
+                *c += v;
+            }
+            t.push(&row);
+        }
+        for _ in 0..16 {
+            let row = [4.0f32, 0.0, 0.0, 0.0];
+            for (c, v) in cumulative.iter_mut().zip(row) {
+                *c += v;
+            }
+            t.push(&row);
+        }
+        assert!(gini(&cumulative) < 0.2, "cumulative hides the collapse");
+        assert!(t.gini() > 0.7, "window must expose it: {}", t.gini());
     }
 
     #[test]

@@ -1,42 +1,94 @@
 //! Parallel sharded serving path: a [`ServingEngine`] routes batches
-//! across scoped worker threads over one shared [`RouterPlan`].
+//! across scoped worker threads over one shared [`RouterPlan`], and —
+//! since PR 2 — runs the **full expert-parallel data path**
+//! ([`ServingEngine::forward_full`]): route → compile a
+//! [`DispatchPlan`] → real expert FFN compute → gate-weighted combine.
 //!
-//! Sharding model: a batch of `N` tokens is split into `T` contiguous
-//! shards (first `N mod T` shards get one extra token). Each worker
-//! routes its shard with its own persistent [`RouteBuffers`] +
+//! Routing shard model: a batch of `N` tokens is split into `T`
+//! contiguous shards (first `N mod T` shards get one extra token). Each
+//! worker routes its shard with its own persistent [`RouteBuffers`] +
 //! [`RouterBatch`] (no sharing, no locks), writing a disjoint token
 //! range. After the scope joins, shard outputs are merged **in shard
 //! order**: ids/weights are copied into their flat `[N*k]` positions and
 //! per-shard load histograms are summed.
 //!
-//! Threads are spawned per `route_into` call via `std::thread::scope`
-//! (only the shard *buffers* persist across calls) — spawn+join costs
-//! tens of microseconds, so multi-threading pays off on large batches
-//! or expensive kernels; tiny batches route inline on the caller's
-//! thread. A persistent channel-fed worker pool is the follow-up once
-//! the async serving PR lands.
+//! Expert-compute shard model: the compiled plan's grouped-GEMM layout
+//! is split into `T` *contiguous expert ranges* balanced by row count
+//! (boundaries depend only on the plan, never on thread timing); each
+//! worker runs its experts' FFN buckets into a disjoint row range of
+//! the grouped output. Per-expert compute is pure, and the final
+//! combine walks tokens in fixed (token, slot) order on the caller's
+//! thread — so the full forward output is bit-identical for every
+//! thread count, exactly like routing.
+//!
+//! Threads are spawned per call via `std::thread::scope` (only the
+//! shard *buffers* persist across calls) — spawn+join costs tens of
+//! microseconds, so multi-threading pays off on large batches or
+//! expensive kernels; tiny batches run inline on the caller's thread.
+//! A persistent channel-fed worker pool is the follow-up once the
+//! async serving PR lands.
 //!
 //! Thread-determinism contract: token routing is per-token pure, shard
-//! boundaries depend only on `(N, T)`, and the merge order is fixed —
-//! so `route(h)` is bit-identical for every thread count, including 1
-//! (pinned by `multi_thread_matches_single_thread`). Load counts are
+//! boundaries depend only on `(N, T)` (routing) or the plan's offsets
+//! (experts), and merge/combine orders are fixed — so `route(h)` and
+//! `forward_full(h, ..)` are bit-identical for every thread count,
+//! including 1 (pinned by `multi_thread_matches_single_thread` and
+//! `forward_full_bit_identical_across_thread_counts`). Load counts are
 //! small integers in f32, so even summation order cannot perturb them.
 
 use super::plan::{RouteBuffers, RouterBatch, RouterPlan};
+use crate::dispatch::plan::{capacity_for, DispatchPlan, OverflowPolicy};
+use crate::experts::{combine_rows, gather_rows, ExpertBank};
+use crate::metrics::{LoadTracker, DEFAULT_LOAD_WINDOW};
 
 /// A reusable routing engine: owns the compiled plan plus per-shard
-/// scratch, so steady-state `route_into` calls allocate nothing.
+/// scratch, so steady-state `route_into` / `forward_full` calls
+/// allocate nothing.
 #[derive(Debug)]
 pub struct ServingEngine {
     plan: RouterPlan,
     n_threads: usize,
     shards: Vec<Shard>,
+    /// Rolling routed-load window over this engine's batches.
+    tracker: LoadTracker,
 }
 
 #[derive(Debug, Clone, Default)]
 struct Shard {
     buf: RouteBuffers,
     out: RouterBatch,
+    /// FFN hidden-activation scratch for the expert-compute stage.
+    hid: Vec<f32>,
+}
+
+/// Reusable output + scratch of [`ServingEngine::forward_full`]: the
+/// routed batch, the compiled dispatch plan, and the `[N, d]` combined
+/// token vectors (gather/grouped buffers are kept internally so
+/// steady-state calls do not allocate).
+#[derive(Debug, Clone, Default)]
+pub struct FullForward {
+    pub batch: RouterBatch,
+    pub plan: DispatchPlan,
+    /// [N, d] gate-weighted combined expert outputs, token order.
+    /// Tokens whose every slot was dropped are all-zero rows (they
+    /// continue through the residual stream).
+    pub combined: Vec<f32>,
+    /// [kept, d] expert-grouped gathered inputs.
+    xg: Vec<f32>,
+    /// [kept, d] expert-grouped FFN outputs.
+    y: Vec<f32>,
+}
+
+impl FullForward {
+    pub fn new() -> FullForward {
+        FullForward::default()
+    }
+
+    /// Combined vector of token `r`.
+    pub fn token_row(&self, r: usize) -> &[f32] {
+        let d = self.combined.len() / self.plan.n.max(1);
+        &self.combined[r * d..(r + 1) * d]
+    }
 }
 
 impl ServingEngine {
@@ -44,9 +96,11 @@ impl ServingEngine {
     /// caller's thread.
     pub fn new(plan: RouterPlan, n_threads: usize) -> ServingEngine {
         let n_threads = n_threads.max(1);
+        let n_experts = plan.cfg.n_experts;
         ServingEngine {
             shards: vec![Shard::default(); n_threads],
             n_threads,
+            tracker: LoadTracker::new(DEFAULT_LOAD_WINDOW, n_experts),
             plan,
         }
     }
@@ -57,6 +111,11 @@ impl ServingEngine {
 
     pub fn n_threads(&self) -> usize {
         self.n_threads
+    }
+
+    /// Rolling balance of the batches this engine has routed.
+    pub fn tracker(&self) -> &LoadTracker {
+        &self.tracker
     }
 
     /// Route `h` ([N, d] row-major) into `out`. Output is identical to
@@ -70,6 +129,7 @@ impl ServingEngine {
         if self.n_threads == 1 || n < 2 * self.n_threads {
             let shard = &mut self.shards[0];
             self.plan.forward_into(h, &mut shard.buf, out);
+            self.tracker.push(&out.load);
             return;
         }
         let base = n / self.n_threads;
@@ -100,6 +160,7 @@ impl ServingEngine {
             }
             start += len;
         }
+        self.tracker.push(&out.load);
     }
 
     /// Allocating convenience wrapper around [`Self::route_into`].
@@ -107,6 +168,94 @@ impl ServingEngine {
         let mut out = RouterBatch::new();
         self.route_into(h, &mut out);
         out
+    }
+
+    /// The full expert-parallel data path for one batch: route `h`,
+    /// compile the routed batch into a capacity-binned [`DispatchPlan`]
+    /// under `policy`, run the real expert FFNs over the grouped
+    /// layout (sharded across this engine's threads), and combine the
+    /// gate-weighted outputs back into token order in `out.combined`.
+    ///
+    /// Bit-identical for every thread count (see module docs).
+    pub fn forward_full(
+        &mut self,
+        h: &[f32],
+        bank: &ExpertBank,
+        capacity_factor: f64,
+        policy: OverflowPolicy,
+        out: &mut FullForward,
+    ) {
+        let (d, e) = (self.plan.cfg.d_model, self.plan.cfg.n_experts);
+        assert_eq!(bank.d_model, d, "expert bank d_model mismatch");
+        assert_eq!(bank.n_experts, e, "expert bank expert count mismatch");
+        // 1. route (sharded, deterministic)
+        self.route_into(h, &mut out.batch);
+        // 2. compile the dispatch plan (shared capacity rule)
+        let cap =
+            capacity_for(out.batch.topk_idx.len(), e, capacity_factor);
+        out.plan.compile_batch(&out.batch, cap, policy);
+        // 3. gather surviving tokens into the grouped-GEMM layout
+        let FullForward { batch, plan, combined, xg, y } = out;
+        let plan: &DispatchPlan = plan;
+        gather_rows(plan, h, d, xg);
+        // 4. expert FFN compute over contiguous per-expert buckets
+        let kept = plan.kept();
+        y.clear();
+        y.resize(kept * d, 0.0);
+        let groups = self.n_threads.min(e).max(1);
+        if groups == 1 || kept < 2 * self.n_threads {
+            let shard = &mut self.shards[0];
+            bank.forward_all(plan, xg, &mut shard.hid, y);
+        } else {
+            // contiguous expert ranges balanced by grouped-row count;
+            // boundaries depend only on the plan's offsets, so the
+            // partition (hence every expert's input rows) is the same
+            // for every thread count
+            let xg: &[f32] = xg;
+            let mut bounds = Vec::with_capacity(groups + 1);
+            for g in 0..=groups {
+                let target = (kept * g / groups) as u32;
+                bounds.push(
+                    plan.offsets.partition_point(|&o| o < target),
+                );
+            }
+            std::thread::scope(|scope| {
+                let mut y_rest: &mut [f32] = y;
+                for (g, shard) in
+                    self.shards.iter_mut().take(groups).enumerate()
+                {
+                    let (e0, e1) = (bounds[g], bounds[g + 1]);
+                    let row0 = plan.offsets[e0] as usize;
+                    let row1 = plan.offsets[e1] as usize;
+                    let (ys, rest) =
+                        y_rest.split_at_mut((row1 - row0) * d);
+                    y_rest = rest;
+                    if row1 == row0 {
+                        continue; // no rows in this group
+                    }
+                    scope.spawn(move || {
+                        let mut cursor = 0usize;
+                        for ei in e0..e1 {
+                            let rows = plan.expert_rows(ei);
+                            let m = rows.len();
+                            if m == 0 {
+                                continue;
+                            }
+                            bank.forward_rows(
+                                ei,
+                                &xg[rows.start * d..rows.end * d],
+                                m,
+                                &mut shard.hid,
+                                &mut ys[cursor..cursor + m * d],
+                            );
+                            cursor += m * d;
+                        }
+                    });
+                }
+            });
+        }
+        // 5. gate-weighted combine, fixed (token, slot) order
+        combine_rows(plan, &batch.weights, y, d, combined);
     }
 }
 
@@ -167,5 +316,105 @@ mod tests {
         assert_eq!(total as usize, 50 * 3);
         assert_eq!(out.topk_idx.len(), 50 * 3);
         assert_eq!(out.weights.len(), 50 * 3);
+        // the engine tracker saw exactly this batch
+        assert_eq!(eng.tracker().total_steps(), 1);
+        assert_eq!(eng.tracker().windowed(), out.load);
+    }
+
+    /// Acceptance: the full route → plan → expert compute → combine
+    /// path is bit-identical across thread counts, for every overflow
+    /// policy, including ragged batch sizes.
+    #[test]
+    fn forward_full_bit_identical_across_thread_counts() {
+        let mut rng = Rng::new(51);
+        let (d, dz, e, k, ff_dim) = (16usize, 8, 8, 3, 12);
+        let bank = ExpertBank::new(&Rng::new(3), e, d, ff_dim);
+        for metric in ["cosine", "kl"] {
+            let r = synthetic_lpr_router(metric, &mut rng, d, dz, e, k);
+            let plan = r.plan().clone();
+            for n in [5usize, 97] {
+                let h = rand_vec(&mut rng, n * d);
+                for policy in OverflowPolicy::ALL {
+                    let mut single =
+                        ServingEngine::new(plan.clone(), 1);
+                    let mut want = FullForward::new();
+                    single.forward_full(&h, &bank, 1.0, policy, &mut want);
+                    for threads in [2usize, 3, 8] {
+                        let mut eng =
+                            ServingEngine::new(plan.clone(), threads);
+                        let mut got = FullForward::new();
+                        eng.forward_full(
+                            &h, &bank, 1.0, policy, &mut got,
+                        );
+                        assert_eq!(
+                            got.combined, want.combined,
+                            "{metric}: n={n} t={threads} {} combined \
+                             diverged",
+                            policy.name()
+                        );
+                        assert_eq!(got.plan, want.plan);
+                        assert_eq!(got.batch, want.batch);
+                    }
+                }
+            }
+        }
+    }
+
+    /// The sharded full forward must equal the hand-assembled
+    /// single-threaded reference pipeline over the same plan.
+    #[test]
+    fn forward_full_matches_manual_pipeline() {
+        use crate::experts::{combine_rows, gather_rows};
+        let mut rng = Rng::new(61);
+        let (d, dz, e, k, n, ff_dim) = (16usize, 8, 6, 2, 48, 10);
+        let r = synthetic_lpr_router("dot", &mut rng, d, dz, e, k);
+        let bank = ExpertBank::new(&Rng::new(8), e, d, ff_dim);
+        let h = rand_vec(&mut rng, n * d);
+        let mut eng = ServingEngine::new(r.plan().clone(), 4);
+        let mut out = FullForward::new();
+        eng.forward_full(
+            &h,
+            &bank,
+            1.25,
+            OverflowPolicy::NextChoice,
+            &mut out,
+        );
+
+        let batch = r.plan().forward(&h);
+        let cap = capacity_for(batch.topk_idx.len(), e, 1.25);
+        let mut plan = DispatchPlan::new();
+        plan.compile_batch(&batch, cap, OverflowPolicy::NextChoice);
+        let (mut xg, mut hid, mut combined) =
+            (Vec::new(), Vec::new(), Vec::new());
+        gather_rows(&plan, &h, d, &mut xg);
+        let mut y = vec![0.0f32; plan.kept() * d];
+        bank.forward_all(&plan, &xg, &mut hid, &mut y);
+        combine_rows(&plan, &batch.weights, &y, d, &mut combined);
+
+        assert_eq!(out.batch, batch);
+        assert_eq!(out.plan, plan);
+        assert_eq!(out.combined, combined);
+        assert_eq!(out.token_row(0).len(), d);
+    }
+
+    #[test]
+    fn forward_full_reuses_buffers() {
+        let mut rng = Rng::new(71);
+        let (d, dz, e, k) = (16usize, 8, 6, 2);
+        let r = synthetic_lpr_router("cosine", &mut rng, d, dz, e, k);
+        let bank = ExpertBank::new(&Rng::new(1), e, d, 8);
+        let mut eng = ServingEngine::new(r.plan().clone(), 2);
+        let mut out = FullForward::new();
+        let h1 = rand_vec(&mut rng, 32 * d);
+        eng.forward_full(&h1, &bank, 1.25, OverflowPolicy::Drop, &mut out);
+        let first = out.combined.clone();
+        // a smaller batch must fully overwrite the outputs
+        let h2 = rand_vec(&mut rng, 8 * d);
+        eng.forward_full(&h2, &bank, 1.25, OverflowPolicy::Drop, &mut out);
+        assert_eq!(out.combined.len(), 8 * d);
+        assert_eq!(out.plan.n, 8);
+        // and re-running h1 reproduces the first result exactly
+        eng.forward_full(&h1, &bank, 1.25, OverflowPolicy::Drop, &mut out);
+        assert_eq!(out.combined, first);
     }
 }

@@ -27,6 +27,12 @@
 //!   threads (spawned per batch; per-shard buffers persist) with merged
 //!   load accounting. Outputs are bit-identical for every thread count
 //!   (see the module docs for the determinism contract).
+//!   `ServingEngine::forward_full` extends the path end to end: the
+//!   routed batch compiles into a capacity-binned
+//!   `dispatch::DispatchPlan` (overflow policy applied at build), real
+//!   expert FFNs (`experts::ExpertBank`) run over the grouped layout,
+//!   and gate-weighted outputs combine back into token order — same
+//!   determinism contract.
 //! - [`Router`] — the legacy façade. `Router::forward` is a thin
 //!   compatibility wrapper over a lazily-built plan;
 //!   `Router::forward_reference` keeps the original per-call
@@ -42,7 +48,7 @@ pub mod engine;
 pub mod linalg;
 pub mod plan;
 
-pub use engine::ServingEngine;
+pub use engine::{FullForward, ServingEngine};
 pub use plan::{RouteBuffers, RouterBatch, RouterPlan, ScoreKernel};
 
 use crate::util::json::Json;
