@@ -5,10 +5,11 @@
 //!
 //! Run: `cargo bench --bench micro` (results appended to
 //! `results/bench.csv`; the routing sweep is also written as
-//! machine-readable JSON to `BENCH_router.json`, and the dispatch-plan
-//! / full expert-forward sweep to `BENCH_dispatch.json`, so the perf
-//! trajectory is trackable across PRs). Set `LPR_BENCH_FAST=1` for a
-//! short smoke run (CI).
+//! machine-readable JSON to `BENCH_router.json`, the dispatch-plan /
+//! full expert-forward sweep — scoped *and* persistent-pool — to
+//! `BENCH_dispatch.json`, and the serving-runtime arrival sweep to
+//! `BENCH_serve.json`, so the perf trajectory is trackable across
+//! PRs). Set `LPR_BENCH_FAST=1` for a short smoke run (CI).
 
 use lpr::data::{Batcher, MixtureStream, ZipfMarkovCorpus};
 use lpr::dispatch::{
@@ -22,7 +23,11 @@ use lpr::router::{
     synthetic_lpr_router, FullForward, RouteBuffers, Router, RouterBatch,
     RouterConfig, RouterKind, RouterParams, ServingEngine, METRICS,
 };
-use lpr::util::bench::Bench;
+use lpr::serve::{
+    measure_service_rate, run_open_loop, PoolEngine, ServeConfig,
+    ServeRuntime,
+};
+use lpr::util::bench::{write_json_rows, Bench};
 use lpr::util::json::Json;
 use lpr::util::rng::Rng;
 
@@ -41,16 +46,11 @@ struct RouterRow {
     ns_per_token: f64,
 }
 
-/// Write pre-formatted JSON objects as a pretty-printed array — the
-/// shared emitter behind every `BENCH_*.json` artifact.
-fn write_json_rows(path: &str, rows: &[String]) {
-    let mut s = String::from("[\n");
-    for (i, r) in rows.iter().enumerate() {
-        let sep = if i + 1 == rows.len() { "" } else { "," };
-        s.push_str(&format!("  {r}{sep}\n"));
-    }
-    s.push_str("]\n");
-    if let Err(e) = std::fs::write(path, &s) {
+/// `lpr::util::bench::write_json_rows` with a warning instead of a
+/// hard failure (benches should finish even on a read-only results
+/// directory).
+fn write_rows_or_warn(path: &str, rows: &[String]) {
+    if let Err(e) = write_json_rows(path, rows) {
         eprintln!("warn: could not write {path}: {e}");
     }
 }
@@ -66,7 +66,7 @@ fn write_router_json(rows: &[RouterRow]) {
             )
         })
         .collect();
-    write_json_rows("BENCH_router.json", &objs);
+    write_rows_or_warn("BENCH_router.json", &objs);
 }
 
 /// One row of BENCH_dispatch.json.
@@ -94,7 +94,7 @@ fn write_dispatch_json(rows: &[DispatchRow]) {
             )
         })
         .collect();
-    write_json_rows("BENCH_dispatch.json", &objs);
+    write_rows_or_warn("BENCH_dispatch.json", &objs);
 }
 
 fn main() {
@@ -308,9 +308,132 @@ fn main() {
                     threads,
                     ns_per_token: res.per_item_ns(),
                 });
+                // persistent pool vs scoped threads on the same batch:
+                // the spawn-per-batch fixed cost this PR removes
+                let mut pool = PoolEngine::new(
+                    router.plan().clone(),
+                    bank.clone(),
+                    threads,
+                );
+                let mut pf = FullForward::new();
+                let res = b.run_items(
+                    &format!(
+                        "pool_full/{}/t{threads}/{dn}tok",
+                        policy.name()
+                    ),
+                    dn as f64,
+                    &mut || {
+                        pool.forward_full(
+                            std::hint::black_box(&hd),
+                            1.0,
+                            policy,
+                            &mut pf,
+                        );
+                        std::hint::black_box(&pf);
+                    },
+                );
+                dispatch_rows.push(DispatchRow {
+                    name: format!("pool_forward/{}", policy.name()),
+                    n: dn,
+                    d: dd,
+                    d_ff: dff,
+                    e: de,
+                    k: dk,
+                    threads,
+                    ns_per_token: res.per_item_ns(),
+                });
             }
         }
         write_dispatch_json(&dispatch_rows);
+    }
+
+    // ---- serving runtime: open-loop arrival sweep through the
+    // persistent pool + micro-batch queue, emitted as BENCH_serve.json
+    // (policy × workers × arrival-rate -> p50/p99/throughput) ----
+    {
+        let fast = std::env::var("LPR_BENCH_FAST").is_ok();
+        let (sd, sdz, se, sk, sff) = (32usize, 16usize, 64usize, 4usize, 64usize);
+        let (req_tokens, max_batch) = (32usize, 256usize);
+        let n_requests = if fast { 64 } else { 256 };
+        let workers_sweep: Vec<usize> =
+            [1usize, 4].iter().cloned().filter(|&w| w <= cores).collect();
+        let mut serve_rows: Vec<String> = Vec::new();
+        for &workers in &workers_sweep {
+            let mut rng = Rng::new(23);
+            let router =
+                synthetic_lpr_router("cosine", &mut rng, sd, sdz, se, sk);
+            let bank = ExpertBank::new(&Rng::new(42), se, sd, sff);
+            let mix = MixtureStream::skewed(&mut rng, sd, 1.6);
+            let mut cal = PoolEngine::new(
+                router.plan().clone(),
+                bank.clone(),
+                workers,
+            );
+            let cap_tok_s = measure_service_rate(
+                &mut cal,
+                &mix,
+                &mut rng,
+                max_batch,
+                3,
+                1.25,
+                OverflowPolicy::Drop,
+            );
+            drop(cal);
+            for policy in OverflowPolicy::ALL {
+                for load in [0.5f64, 2.0] {
+                    let mut rng = Rng::new(23);
+                    let router = synthetic_lpr_router(
+                        "cosine", &mut rng, sd, sdz, se, sk,
+                    );
+                    let bank = ExpertBank::new(&Rng::new(42), se, sd, sff);
+                    let mix = MixtureStream::skewed(&mut rng, sd, 1.6);
+                    let cfg = ServeConfig {
+                        n_workers: workers,
+                        max_batch,
+                        max_wait: 2_000,
+                        queue_tokens: 8 * max_batch,
+                        capacity_factor: 1.25,
+                        policy,
+                        ..ServeConfig::default()
+                    };
+                    let mut srv = ServeRuntime::new(
+                        router.plan().clone(),
+                        bank,
+                        cfg,
+                    );
+                    let t0 = std::time::Instant::now();
+                    run_open_loop(
+                        &mut srv,
+                        &mix,
+                        &mut rng,
+                        n_requests,
+                        req_tokens,
+                        load * cap_tok_s,
+                    );
+                    let wall = t0.elapsed().as_secs_f64();
+                    let r = srv.report();
+                    println!(
+                        "micro/serve/{}/w{workers}/load{load}    \
+                         p50 {:>7.0} us  p99 {:>7.0} us  {:>10.0} tok/s \
+                         ({} batches, {:.2}s wall)",
+                        policy.name(),
+                        r.latency_p50_us,
+                        r.latency_p99_us,
+                        r.throughput_tok_per_s,
+                        r.batches,
+                        wall
+                    );
+                    serve_rows.push(r.bench_json_row(
+                        policy,
+                        workers,
+                        load * cap_tok_s,
+                        load,
+                        req_tokens,
+                    ));
+                }
+            }
+        }
+        write_rows_or_warn("BENCH_serve.json", &serve_rows);
     }
 
     // ---- dispatch simulator ----

@@ -19,6 +19,13 @@
 //! itself becomes a balancing lever (drops fall, throughput rises,
 //! and every token is conserved: routed = computed + dropped).
 //!
+//! Part 4 is the **serving runtime**: the same data path behind a
+//! bounded micro-batching request queue on a *persistent* worker pool
+//! (`ServeRuntime`), driven by open-loop Poisson arrivals at a sweep
+//! of load fractions of the machine's measured capacity — below
+//! saturation the latency percentiles hug the batch service time;
+//! past it, queueing delay takes over and p99 runs away.
+//!
 //! Run: `cargo run --release --example serving_sim`
 
 use lpr::data::MixtureStream;
@@ -28,6 +35,10 @@ use lpr::dispatch::{
 };
 use lpr::experts::ExpertBank;
 use lpr::router::{synthetic_lpr_router, FullForward, ServingEngine};
+use lpr::serve::{
+    measure_service_rate, run_open_loop, PoolEngine, ServeConfig,
+    ServeRuntime,
+};
 use lpr::util::rng::Rng;
 
 fn main() {
@@ -184,5 +195,83 @@ fn main() {
          lever — falling\nthrough to a spare expert (next-choice) or the \
          least-loaded one keeps tokens\nthat greedy drop discards, at \
          identical routed load."
+    );
+
+    // ---- part 4: persistent-pool serving runtime — request queue,
+    // micro-batching, open-loop arrival sweep ----
+    let (sd, sdz, se, sk, sff) = (32usize, 16usize, 64usize, 4usize, 64);
+    let (req_tokens, max_batch, n_requests) = (32usize, 256usize, 256usize);
+    let pool_workers = threads.min(4);
+    let mut rng = Rng::new(23);
+    let router = synthetic_lpr_router("cosine", &mut rng, sd, sdz, se, sk);
+    let bank = ExpertBank::new(&Rng::new(42), se, sd, sff);
+    let mix = MixtureStream::skewed(&mut rng, sd, 1.6);
+    let mut cal =
+        PoolEngine::new(router.plan().clone(), bank.clone(), pool_workers);
+    let cap_tok_s = measure_service_rate(
+        &mut cal,
+        &mix,
+        &mut rng,
+        max_batch,
+        3,
+        1.25,
+        OverflowPolicy::LeastLoaded,
+    );
+    drop(cal);
+    println!(
+        "\nserving runtime: persistent pool ({pool_workers} workers, \
+         least-loaded policy),\n{req_tokens}-token requests, max_batch \
+         {max_batch}, max_wait 2ms; measured capacity \
+         {cap_tok_s:.0} tok/s"
+    );
+    println!(
+        "{:<8} {:>12} {:>9} {:>9} {:>9} {:>14} {:>9} {:>9}",
+        "load", "rate tok/s", "batches", "p50 us", "p99 us",
+        "tok/s served", "win-GINI", "rejected"
+    );
+    for load in [0.4f64, 0.8, 1.6] {
+        let mut rng = Rng::new(23);
+        let router =
+            synthetic_lpr_router("cosine", &mut rng, sd, sdz, se, sk);
+        let bank = ExpertBank::new(&Rng::new(42), se, sd, sff);
+        let mix = MixtureStream::skewed(&mut rng, sd, 1.6);
+        let cfg = ServeConfig {
+            n_workers: pool_workers,
+            max_batch,
+            max_wait: 2_000,
+            queue_tokens: 8 * max_batch,
+            capacity_factor: 1.25,
+            policy: OverflowPolicy::LeastLoaded,
+            ..ServeConfig::default()
+        };
+        let mut srv = ServeRuntime::new(router.plan().clone(), bank, cfg);
+        run_open_loop(
+            &mut srv,
+            &mix,
+            &mut rng,
+            n_requests,
+            req_tokens,
+            load * cap_tok_s,
+        );
+        let r = srv.report();
+        println!(
+            "{:<8} {:>12.0} {:>9} {:>9.0} {:>9.0} {:>14.0} {:>9.3} \
+             {:>9}",
+            format!("{load}x"),
+            load * cap_tok_s,
+            r.batches,
+            r.latency_p50_us,
+            r.latency_p99_us,
+            r.throughput_tok_per_s,
+            r.window_gini,
+            r.rejected
+        );
+    }
+    println!(
+        "\nreading: the pool's workers persist across batches (no \
+         per-batch thread spawn),\nand the micro-batcher turns a \
+         request stream into full batches — below\nsaturation p50 sits \
+         near the batch service time; past it, queueing delay\n\
+         dominates the tail exactly as the queueing model predicts."
     );
 }

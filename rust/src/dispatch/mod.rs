@@ -28,7 +28,9 @@ pub use plan::{capacity_for, DispatchPlan, OverflowPolicy, DROPPED};
 
 use crate::data::MixtureStream;
 use crate::experts::ExpertBank;
-use crate::metrics::{gini, min_max_ratio, LoadTracker};
+use crate::metrics::{
+    gini, min_max_ratio, percentile_nearest_rank, LoadTracker,
+};
 use crate::router::{FullForward, RouterBatch, ServingEngine};
 use crate::util::rng::Rng;
 
@@ -265,16 +267,11 @@ impl DispatchSim {
     pub fn report(&self) -> SimReport {
         let mut lat = self.latencies_us.clone();
         lat.sort_by(f64::total_cmp);
-        // Nearest-rank percentile (ceil): the previous `(len-1)·p`
-        // floor understated p99 for small step counts (e.g. 10 steps
-        // gave the 9th-ranked latency, not the max).
-        let pct = |p: f64| -> f64 {
-            if lat.is_empty() {
-                return 0.0;
-            }
-            let rank = (p * lat.len() as f64).ceil().max(1.0) as usize;
-            lat[rank.min(lat.len()) - 1]
-        };
+        // Nearest-rank percentile (ceil) via the shared helper — the
+        // previous `(len-1)·p` floor understated p99 for small step
+        // counts (e.g. 10 steps gave the 9th-ranked latency, not the
+        // max), and the serving runtime must report the same convention.
+        let pct = |p: f64| percentile_nearest_rank(&lat, p);
         let total_lat: f64 = self.latencies_us.iter().sum();
         let load_f32: Vec<f32> =
             self.expert_load.iter().map(|&x| x as f32).collect();

@@ -128,20 +128,20 @@ pub struct DispatchPlan {
     pub n_experts: usize,
     pub capacity: usize,
     pub policy: OverflowPolicy,
-    /// [E] pre-policy routed counts (what the router asked for; the
+    /// `[E]` pre-policy routed counts (what the router asked for; the
     /// load-accounting quantity — dropped slots still count here).
     pub routed: Vec<u32>,
-    /// [E] post-policy computed counts (what the experts actually run;
-    /// every entry ≤ `capacity`).
+    /// `[E]` post-policy computed counts (what the experts actually
+    /// run; every entry ≤ `capacity`).
     pub counts: Vec<u32>,
-    /// [E+1] exclusive prefix sum of `counts`.
+    /// `[E+1]` exclusive prefix sum of `counts`.
     pub offsets: Vec<u32>,
-    /// [kept] gather permutation: grouped row `pos` reads flat slot
+    /// `[kept]` gather permutation: grouped row `pos` reads flat slot
     /// `src[pos]` (token `src[pos] / top_k`).
     pub src: Vec<u32>,
-    /// [N·k] grouped row of each flat slot, or [`DROPPED`].
+    /// `[N·k]` grouped row of each flat slot, or [`DROPPED`].
     pub pos_of: Vec<u32>,
-    /// [N·k] final expert of each flat slot, or [`DROPPED`].
+    /// `[N·k]` final expert of each flat slot, or [`DROPPED`].
     pub expert_of: Vec<u32>,
     pub n_dropped: usize,
     /// Slots kept on a *different* expert than routed (policy fallback).
@@ -164,6 +164,29 @@ impl DispatchPlan {
     /// Grouped-buffer row range of expert `e`.
     pub fn expert_rows(&self, e: usize) -> std::ops::Range<usize> {
         self.offsets[e] as usize..self.offsets[e + 1] as usize
+    }
+
+    /// Copy `src` into `self`, reusing this plan's existing buffer
+    /// capacity — how the persistent pool (`serve::PoolEngine`) hands
+    /// each batch's compiled plan back to the caller's
+    /// [`crate::router::FullForward`] without fresh allocations once
+    /// the buffers are warm. Equivalent to `*self = src.clone()`
+    /// (pinned by `copy_from_equals_clone`).
+    pub fn copy_from(&mut self, src: &DispatchPlan) {
+        self.n = src.n;
+        self.top_k = src.top_k;
+        self.n_experts = src.n_experts;
+        self.capacity = src.capacity;
+        self.policy = src.policy;
+        self.routed.clone_from(&src.routed);
+        self.counts.clone_from(&src.counts);
+        self.offsets.clone_from(&src.offsets);
+        self.src.clone_from(&src.src);
+        self.pos_of.clone_from(&src.pos_of);
+        self.expert_of.clone_from(&src.expert_of);
+        self.n_dropped = src.n_dropped;
+        self.n_rerouted = src.n_rerouted;
+        self.fill.clone_from(&src.fill);
     }
 
     /// Convenience wrapper over [`DispatchPlan::compile`] for a routed
@@ -441,6 +464,22 @@ mod tests {
             finals.dedup();
             assert_eq!(finals.len(), before, "token {t} duplicated");
         }
+    }
+
+    #[test]
+    fn copy_from_equals_clone() {
+        let mut rng = Rng::new(71);
+        let a = synthetic_assignments(&mut rng, 64, 3, 8, 1.1);
+        let mut src = DispatchPlan::new();
+        src.compile(&a, 3, 8, 5, OverflowPolicy::NextChoice);
+        let mut dst = DispatchPlan::new();
+        // warm dst with a different shape first: copy_from must fully
+        // overwrite stale state
+        let b = synthetic_assignments(&mut rng, 16, 2, 4, 0.0);
+        dst.compile(&b, 2, 4, 9, OverflowPolicy::Drop);
+        dst.copy_from(&src);
+        assert_eq!(dst, src);
+        assert_eq!(dst, src.clone());
     }
 
     #[test]

@@ -180,12 +180,47 @@ pub fn combine_rows(
     d: usize,
     out: &mut Vec<f32>,
 ) {
+    combine_rows_opts(plan, weights, y, d, false, out);
+}
+
+/// [`combine_rows`] with an optional gate-weight renormalization (the
+/// `--renormalize` serving option): when `renormalize` is set and some
+/// of a token's slots were dropped by the overflow policy, its
+/// *surviving* weights are rescaled so their sum equals the token's
+/// pre-drop mass `Σ_j w_j` — a drop then costs expert diversity rather
+/// than combine magnitude. Tokens with no surviving slot stay all-zero
+/// (there is nothing to renormalize onto), and tokens with no dropped
+/// slot are untouched *bit-for-bit*: their surviving-mass sum is
+/// computed with the identical float additions as the pre-drop mass, so
+/// the scale is exactly 1 and never applied.
+pub fn combine_rows_opts(
+    plan: &DispatchPlan,
+    weights: &[f32],
+    y: &[f32],
+    d: usize,
+    renormalize: bool,
+    out: &mut Vec<f32>,
+) {
     let (n, k) = (plan.n, plan.top_k);
     assert_eq!(weights.len(), n * k, "weights shape");
     assert_eq!(y.len(), plan.kept() * d, "y shape");
     out.clear();
     out.resize(n * d, 0.0);
     for r in 0..n {
+        let mut scale = 1.0f32;
+        if renormalize {
+            let (mut total, mut kept) = (0.0f32, 0.0f32);
+            for j in 0..k {
+                let f = r * k + j;
+                total += weights[f];
+                if plan.pos_of[f] != DROPPED {
+                    kept += weights[f];
+                }
+            }
+            if kept > 0.0 && kept != total {
+                scale = total / kept;
+            }
+        }
         let orow = &mut out[r * d..(r + 1) * d];
         for j in 0..k {
             let f = r * k + j;
@@ -193,7 +228,11 @@ pub fn combine_rows(
             if pos == DROPPED {
                 continue;
             }
-            let w = weights[f];
+            let w = if renormalize {
+                weights[f] * scale
+            } else {
+                weights[f]
+            };
             let yrow = &y[pos as usize * d..(pos as usize + 1) * d];
             for (o, &v) in orow.iter_mut().zip(yrow) {
                 *o += w * v;
@@ -333,6 +372,87 @@ mod tests {
     fn capacity_helper_agrees_with_plan_bins() {
         let cap = capacity_for(64 * 2, 4, 1.0);
         assert_eq!(cap, 32);
+    }
+
+    /// Pinned `--renormalize` semantics: a token that lost a slot to
+    /// the Drop policy has its surviving weight rescaled to the full
+    /// pre-drop mass, so Drop+renormalize conserves per-token combine
+    /// weight; tokens with no drops are bit-identical to the plain
+    /// combine.
+    #[test]
+    fn renormalize_restores_dropped_mass() {
+        let (d, ff, e, k) = (4usize, 6usize, 3usize, 2usize);
+        let bank = ExpertBank::new(&Rng::new(15), e, d, ff);
+        // tokens t0:(0,1), t1:(0,2); capacity 1, Drop: t1's slot 0
+        // overflows expert 0 and drops, its slot 1 (expert 2) survives.
+        let a: Vec<u32> = vec![0, 1, 0, 2];
+        let mut plan = DispatchPlan::new();
+        plan.compile(&a, k, e, 1, OverflowPolicy::Drop);
+        assert_eq!(plan.expert_of, vec![0, 1, DROPPED, 2]);
+        assert_eq!(plan.n_dropped, 1);
+
+        let mut rng = Rng::new(7);
+        let h: Vec<f32> =
+            (0..2 * d).map(|_| rng.normal() as f32).collect();
+        let weights: Vec<f32> = vec![0.6, 0.4, 0.7, 0.3];
+        let (mut xg, mut hid) = (Vec::new(), Vec::new());
+        gather_rows(&plan, &h, d, &mut xg);
+        let mut y = vec![0.0f32; plan.kept() * d];
+        bank.forward_all(&plan, &xg, &mut hid, &mut y);
+        let (mut plain, mut renorm) = (Vec::new(), Vec::new());
+        combine_rows_opts(&plan, &weights, &y, d, false, &mut plain);
+        combine_rows_opts(&plan, &weights, &y, d, true, &mut renorm);
+
+        // t0 lost nothing: bit-identical either way
+        assert_eq!(&plain[..d], &renorm[..d]);
+        // t1: surviving slot rescaled from 0.3 to the full 1.0 mass —
+        // same op order as the implementation, so exact equality holds
+        let scale = (0.7f32 + 0.3) / 0.3;
+        let w = 0.3f32 * scale;
+        assert!((w - 1.0).abs() < 1e-6);
+        let mut f2 = vec![0.0f32; d];
+        bank.forward_rows(2, &h[d..2 * d], 1, &mut hid, &mut f2);
+        for c in 0..d {
+            assert_eq!(renorm[d + c], w * f2[c], "dim {c}");
+            // and the plain combine only kept 0.3 of it
+            assert_eq!(plain[d + c], 0.3 * f2[c], "dim {c}");
+        }
+    }
+
+    /// Drop+renormalize conserves per-token combine weight: with unit
+    /// FFN outputs the combined row *is* the applied weight mass, which
+    /// must equal the pre-drop mass for every token with a survivor.
+    #[test]
+    fn renormalize_conserves_per_token_mass() {
+        let mut rng = Rng::new(57);
+        let (d, dz, e, k, n) = (8usize, 4, 8, 3, 64);
+        let r = synthetic_lpr_router("cosine", &mut rng, d, dz, e, k);
+        let mut eng = ServingEngine::new(r.plan().clone(), 1);
+        let h: Vec<f32> =
+            (0..n * d).map(|_| rng.normal() as f32).collect();
+        let batch = eng.route(&h);
+        let mut plan = DispatchPlan::new();
+        plan.compile_batch(&batch, 2, OverflowPolicy::Drop);
+        assert!(plan.n_dropped > 0, "capacity 2 must drop");
+        // y = all-ones rows: combined[r*d] = sum of applied weights
+        let y = vec![1.0f32; plan.kept() * d];
+        let mut out = Vec::new();
+        combine_rows_opts(&plan, &batch.weights, &y, d, true, &mut out);
+        for t in 0..n {
+            let survivors = (0..k)
+                .filter(|&j| plan.pos_of[t * k + j] != DROPPED)
+                .count();
+            let total: f32 = batch.weights[t * k..(t + 1) * k].iter().sum();
+            let applied = out[t * d];
+            if survivors == 0 {
+                assert_eq!(applied, 0.0, "token {t} has no survivors");
+            } else {
+                assert!(
+                    (applied - total).abs() < 1e-5,
+                    "token {t}: applied {applied} != pre-drop {total}"
+                );
+            }
+        }
     }
 
     /// NextChoice can land a rerouted slot on an expert the token

@@ -31,7 +31,17 @@
 //!    engine's threads, still bit-identical).
 //! 4. **combine** — gate-weighted accumulation back into token order
 //!    (`router::FullForward::combined`); dropped slots fall through to
-//!    the residual stream.
+//!    the residual stream (or, with `--renormalize`, a token's
+//!    surviving gate weights are rescaled to its pre-drop mass).
+//!
+//! The [`serve`] module turns that per-batch pipeline into a
+//! **serving runtime**: [`serve::BatchQueue`] micro-batches a bounded
+//! stream of requests (flush on `max_batch` tokens or `max_wait`
+//! virtual-clock ticks), [`serve::PoolEngine`] runs the full path on a
+//! *persistent* channel-fed worker pool (no per-batch thread spawns;
+//! bit-identical to the scoped engine for every worker count), and
+//! [`serve::ServeRuntime`] records per-request latency percentiles
+//! plus windowed balance stats.
 //!
 //! [`dispatch::DispatchSim`] consumes the *same* plans for its latency
 //! model, so simulated accounting and real compute agree by
@@ -39,11 +49,18 @@
 //! balance window.
 //!
 //! Start with [`runtime::Runtime`] + [`coordinator::Trainer`] for
-//! training, [`router::ServingEngine::forward_full`] +
-//! [`dispatch::DispatchSim`] for serving-path studies
-//! ([`router::Router`] remains as a compatibility façade), and
-//! [`report::Reporter`] for the paper's experiments. See `examples/`
-//! for end-to-end drivers.
+//! training, [`serve::ServeRuntime`] /
+//! [`router::ServingEngine::forward_full`] + [`dispatch::DispatchSim`]
+//! for serving-path studies ([`router::Router`] remains as a
+//! compatibility façade), and [`report::Reporter`] for the paper's
+//! experiments. See `examples/` for end-to-end drivers.
+//!
+//! A layered map of the whole crate — module dependencies, the
+//! grouped-GEMM layout with a worked example, the thread-determinism
+//! contract, and where every `BENCH_*.json` / `repro` artifact comes
+//! from — lives in
+//! [docs/ARCHITECTURE.md](../../docs/ARCHITECTURE.md) at the repo
+//! root.
 
 pub mod config;
 pub mod coordinator;
@@ -54,6 +71,7 @@ pub mod metrics;
 pub mod report;
 pub mod router;
 pub mod runtime;
+pub mod serve;
 pub mod util;
 
 /// Default artifacts directory (relative to the repo root); override

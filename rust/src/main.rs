@@ -5,10 +5,15 @@
 //!   eval <preset> --ckpt  evaluate a checkpoint
 //!   repro <exp>           reproduce a paper table/figure
 //!                         (t1..t7, fig1, fig3, fig4, dispatch,
-//!                          dispatch-routed, dispatch-replay, all)
+//!                          dispatch-routed, dispatch-policies, serve,
+//!                          dispatch-replay, all)
 //!   dispatch-sim          run the expert-parallel dispatch simulator;
 //!                         --routed drives it from the compiled routing
 //!                         engine (--threads shards the batch)
+//!   serve-bench           drive open-loop MixtureStream traffic
+//!                         through the persistent-pool serving runtime
+//!                         (policy x workers x arrival-rate sweep,
+//!                         emits BENCH_serve.json)
 //!   route <preset>        run the standalone router artifact and print
 //!                         the specialization proxy; `route synthetic`
 //!                         runs the pure-Rust serving engine instead
@@ -32,6 +37,11 @@ use lpr::router::{
     synthetic_lpr_router, FullForward, RouterBatch, ServingEngine,
 };
 use lpr::runtime::{CompiledArtifacts, Runtime};
+use lpr::serve::{
+    measure_service_rate, run_open_loop, PoolEngine, ServeConfig,
+    ServeRuntime,
+};
+use lpr::util::bench::write_json_rows;
 use lpr::util::cli::Args;
 use lpr::util::rng::Rng;
 use lpr::util::table::fmt_sci;
@@ -46,24 +56,35 @@ USAGE:
   lpr route synthetic [--metric M] [--threads N] [--tokens N]
             [--experts N] [--topk K]
   lpr repro <t1|t2|t3|t4|t5|t6|t7|fig1|fig3|fig4|dispatch
-            |dispatch-routed|dispatch-policies|dispatch-replay|all>
-            [--steps N]
+            |dispatch-routed|dispatch-policies|serve|dispatch-replay
+            |all> [--steps N]
   lpr dispatch-sim [--experts N] [--devices N] [--topk K] [--skew S]
                    [--cf F] [--steps N] [--threads N] [--metric M]
-                   [--policy P] [--routed] [--full]
+                   [--policy P] [--routed] [--full] [--renormalize]
+  lpr serve-bench [--metric M] [--experts N] [--topk K] [--dmodel D]
+                  [--dff F] [--workers N] [--policy P] [--rate TOK/S]
+                  [--requests N] [--req-tokens N] [--max-batch N]
+                  [--max-wait TICKS] [--cf F] [--renormalize]
   lpr list
 Options:
   --artifacts DIR   artifact directory (default: artifacts/)
   --out DIR         results directory (default: results/)
   --threads N       routing threads for the serving engine (default 1)
   --policy P        overflow policy for over-capacity tokens:
-                    drop | next-choice | least-loaded (default drop)
+                    drop | next-choice | least-loaded (default drop;
+                    serve-bench sweeps all three when omitted)
   --routed          dispatch-sim: drive the simulator from the compiled
                     routing engine on clustered tokens instead of
                     synthetic Zipf assignments
   --full            dispatch-sim: with --routed, run the real expert
                     FFN path (route -> plan -> compute -> combine)
                     instead of the latency model alone
+  --renormalize     rescale a token's surviving gate weights to its
+                    pre-drop mass when the overflow policy drops slots
+                    (off by default)
+  --workers N       serve-bench: pool workers (sweeps 1,2,4 if omitted)
+  --rate R          serve-bench: absolute arrival rate in tokens/s
+                    (sweeps 0.5x/1x/2x of measured capacity if omitted)
 ";
 
 fn main() {
@@ -98,6 +119,7 @@ fn run(args: &Args) -> Result<()> {
         "route" => cmd_route(args),
         "repro" => cmd_repro(args),
         "dispatch-sim" => cmd_dispatch_sim(args),
+        "serve-bench" => cmd_serve_bench(args),
         "list" => cmd_list(args),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
@@ -274,10 +296,17 @@ fn cmd_route(args: &Args) -> Result<()> {
 
 fn cmd_repro(args: &Args) -> Result<()> {
     let exp = preset_arg(args)?;
-    let rt = Runtime::cpu()?;
     let art = art_dir(args);
     let out = out_dir(args);
-    let mut rep = Reporter::new(&rt, &art, &out);
+    // The dispatch/serve reports are pure Rust: only build the PJRT
+    // runtime for experiments that execute AOT artifacts, so the
+    // serving reports work against the offline vendor/xla stub.
+    let pure_rust = matches!(
+        exp,
+        "dispatch" | "dispatch-routed" | "dispatch-policies" | "serve"
+    );
+    let rt = if pure_rust { None } else { Some(Runtime::cpu()?) };
+    let mut rep = Reporter::new(rt.as_ref(), &art, &out);
     if let Some(steps) = args.opt("steps") {
         rep.steps_override = Some(steps.parse().context("--steps")?);
     }
@@ -296,6 +325,7 @@ fn cmd_repro(args: &Args) -> Result<()> {
         "dispatch" => rep.dispatch_report()?,
         "dispatch-routed" => rep.dispatch_routed()?,
         "dispatch-policies" => rep.dispatch_policies()?,
+        "serve" => rep.serve_table()?,
         "dispatch-replay" => rep.dispatch_replay()?,
         "all" => rep.all()?,
         other => bail!("unknown experiment '{other}'"),
@@ -342,6 +372,7 @@ fn cmd_dispatch_sim(args: &Args) -> Result<()> {
             // real expert compute: route -> plan -> FFN -> combine
             let d_ff = args.opt_usize("dff", 4 * d);
             let bank = ExpertBank::new(&Rng::new(42), e, d, d_ff);
+            engine.set_renormalize(args.has_flag("renormalize"));
             let mut ff = FullForward::new();
             let fwd_ns = run_full_steps(
                 &mut engine, &bank, &mix, &mut rng, &mut sim, steps,
@@ -400,6 +431,144 @@ fn cmd_dispatch_sim(args: &Args) -> Result<()> {
         r.utilization,
         r.stall_frac
     );
+    Ok(())
+}
+
+/// Open-loop serving benchmark on the persistent-pool runtime: sweep
+/// overflow policy × worker count × arrival rate over a skewed
+/// clustered token stream, print the latency/throughput table, and
+/// emit the rows as `BENCH_serve.json` (next to `BENCH_router.json` /
+/// `BENCH_dispatch.json` in the cross-PR perf trajectory).
+///
+/// Arrival rates default to 0.5×/1×/2× of this machine's *measured*
+/// full-forward capacity per worker count (so the sweep brackets
+/// saturation everywhere); `--rate` pins one absolute rate instead.
+fn cmd_serve_bench(args: &Args) -> Result<()> {
+    let metric = args.opt_or("metric", "cosine");
+    let d = args.opt_usize("dmodel", 32);
+    let dz = args.opt_usize("latent", 16);
+    let e = args.opt_usize("experts", 64);
+    let k = args.opt_usize("topk", 4);
+    let d_ff = args.opt_usize("dff", 2 * d);
+    let req_tokens = args.opt_usize("req-tokens", 32);
+    let n_requests = args.opt_usize("requests", 256);
+    let max_batch = args.opt_usize("max-batch", 256);
+    let max_wait = args.opt_usize("max-wait", 2000) as u64;
+    let cf = args.opt_f64("cf", 1.25);
+    let renormalize = args.has_flag("renormalize");
+    let seed = args.opt_usize("seed", 23) as u64;
+    anyhow::ensure!(
+        req_tokens <= max_batch,
+        "--req-tokens {req_tokens} exceeds --max-batch {max_batch}"
+    );
+
+    let cores = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1);
+    let workers_list: Vec<usize> = match args.opt("workers") {
+        Some(s) => vec![s.parse().context("--workers")?],
+        None => [1usize, 2, 4].iter().cloned().filter(|&w| w <= cores.max(1)).collect(),
+    };
+    let workers_list = if workers_list.is_empty() {
+        vec![1]
+    } else {
+        workers_list
+    };
+    let policies: Vec<OverflowPolicy> = match args.opt("policy") {
+        Some(p) => vec![OverflowPolicy::parse(p).with_context(|| {
+            format!("unknown --policy '{p}'")
+        })?],
+        None => OverflowPolicy::ALL.to_vec(),
+    };
+    let fixed_rate = args.opt("rate").map(|r| r.parse::<f64>()).transpose()
+        .context("--rate")?;
+
+    println!(
+        "serve-bench: {metric} router, {e} experts top-{k}, d={d} \
+         d_ff={d_ff}, {req_tokens}-token requests x {n_requests}, \
+         max_batch {max_batch}, max_wait {max_wait} us, cf {cf}{}",
+        if renormalize { ", renormalize" } else { "" }
+    );
+    println!(
+        "{:<14} {:>7} {:>6} {:>12} {:>9} {:>9} {:>14} {:>9} {:>9}",
+        "policy", "workers", "load", "rate tok/s", "p50 us", "p99 us",
+        "tok/s served", "win-GINI", "rejected"
+    );
+    let mut json_rows: Vec<String> = Vec::new();
+    for &workers in &workers_list {
+        // measured capacity of this worker count anchors the load sweep
+        let mut rng = Rng::new(seed);
+        let router = synthetic_lpr_router(metric, &mut rng, d, dz, e, k);
+        let bank = ExpertBank::new(&Rng::new(42), e, d, d_ff);
+        let mix = MixtureStream::skewed(&mut rng, d, 1.6);
+        let mut cal =
+            PoolEngine::new(router.plan().clone(), bank.clone(), workers);
+        let cap_tok_s = measure_service_rate(
+            &mut cal,
+            &mix,
+            &mut rng,
+            max_batch,
+            3,
+            cf,
+            OverflowPolicy::Drop,
+        );
+        drop(cal);
+        let rates: Vec<(f64, f64)> = match fixed_rate {
+            Some(r) => vec![(r / cap_tok_s, r)],
+            None => [0.5f64, 1.0, 2.0]
+                .iter()
+                .map(|&l| (l, l * cap_tok_s))
+                .collect(),
+        };
+        for &policy in &policies {
+            for &(load, rate) in &rates {
+                // identical seeds per cell: same router, same stream
+                let mut rng = Rng::new(seed);
+                let router =
+                    synthetic_lpr_router(metric, &mut rng, d, dz, e, k);
+                let bank = ExpertBank::new(&Rng::new(42), e, d, d_ff);
+                let mix = MixtureStream::skewed(&mut rng, d, 1.6);
+                let cfg = ServeConfig {
+                    n_workers: workers,
+                    max_batch,
+                    max_wait,
+                    queue_tokens: 8 * max_batch,
+                    capacity_factor: cf,
+                    policy,
+                    renormalize,
+                    service_ticks: None,
+                };
+                let mut srv =
+                    ServeRuntime::new(router.plan().clone(), bank, cfg);
+                run_open_loop(
+                    &mut srv, &mix, &mut rng, n_requests, req_tokens,
+                    rate,
+                );
+                let r = srv.report();
+                println!(
+                    "{:<14} {:>7} {:>6.2} {:>12.0} {:>9.0} {:>9.0} \
+                     {:>14.0} {:>9.3} {:>9}",
+                    policy.name(),
+                    workers,
+                    load,
+                    rate,
+                    r.latency_p50_us,
+                    r.latency_p99_us,
+                    r.throughput_tok_per_s,
+                    r.window_gini,
+                    r.rejected
+                );
+                json_rows.push(r.bench_json_row(
+                    policy, workers, rate, load, req_tokens,
+                ));
+            }
+        }
+    }
+    if let Err(e) = write_json_rows("BENCH_serve.json", &json_rows) {
+        eprintln!("warn: could not write BENCH_serve.json: {e}");
+    } else {
+        eprintln!("wrote BENCH_serve.json ({} rows)", json_rows.len());
+    }
     Ok(())
 }
 

@@ -14,6 +14,27 @@ pub const EPS: f64 = 1e-9;
 /// dispatch simulator and the serving engine.
 pub const DEFAULT_LOAD_WINDOW: usize = 64;
 
+/// Nearest-rank percentile over an **ascending-sorted** slice: the
+/// value at 1-based rank `ceil(p · len)`, clamped to `1..=len`; `0.0`
+/// on empty input. This is the single percentile convention shared by
+/// [`crate::dispatch::DispatchSim`]'s latency report and the serving
+/// runtime's per-request latency stats (`crate::serve::ServeReport`) —
+/// the two must never disagree on what "p99" means.
+///
+/// ```
+/// use lpr::metrics::percentile_nearest_rank;
+/// let lat: Vec<f64> = (1..=10).map(f64::from).collect();
+/// assert_eq!(percentile_nearest_rank(&lat, 0.50), 5.0);
+/// assert_eq!(percentile_nearest_rank(&lat, 0.99), 10.0);
+/// ```
+pub fn percentile_nearest_rank(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = (p * sorted.len() as f64).ceil().max(1.0) as usize;
+    sorted[rank.min(sorted.len()) - 1]
+}
+
 /// Gini coefficient of an expert-load vector. 0 = perfectly balanced,
 /// (n-1)/n = all load on one expert.
 pub fn gini(load: &[f32]) -> f64 {
@@ -210,7 +231,7 @@ impl LoadTracker {
         self.total_steps
     }
 
-    /// Record one step's [E] load row, evicting the oldest step once
+    /// Record one step's `[E]` load row, evicting the oldest step once
     /// the window is full.
     pub fn push(&mut self, step_load: &[f32]) {
         assert_eq!(step_load.len(), self.n_experts, "load row shape");
@@ -305,6 +326,24 @@ pub fn ascii_heatmap(lm: &LoadMatrix) -> String {
 mod tests {
     use super::*;
     use crate::util::prop::{forall, gen};
+
+    /// Satellite: the shared latency-percentile helper pinned on a
+    /// known vector (the classic nearest-rank worked example), matching
+    /// `DispatchSim`'s convention exactly.
+    #[test]
+    fn percentile_nearest_rank_pinned() {
+        let v = [15.0, 20.0, 35.0, 40.0, 50.0];
+        assert_eq!(percentile_nearest_rank(&v, 0.05), 15.0);
+        assert_eq!(percentile_nearest_rank(&v, 0.30), 20.0);
+        assert_eq!(percentile_nearest_rank(&v, 0.40), 20.0);
+        assert_eq!(percentile_nearest_rank(&v, 0.50), 35.0);
+        assert_eq!(percentile_nearest_rank(&v, 0.99), 50.0);
+        assert_eq!(percentile_nearest_rank(&v, 1.00), 50.0);
+        // clamped at both ends; empty input is defined
+        assert_eq!(percentile_nearest_rank(&v, 0.0), 15.0);
+        assert_eq!(percentile_nearest_rank(&v, 2.0), 50.0);
+        assert_eq!(percentile_nearest_rank(&[], 0.5), 0.0);
+    }
 
     #[test]
     fn gini_uniform_zero() {

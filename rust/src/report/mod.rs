@@ -20,9 +20,14 @@ use crate::dispatch::{
     assignments_from_load, run_routed_steps, synthetic_assignments,
     DispatchSim, OverflowPolicy, SimConfig,
 };
+use crate::experts::ExpertBank;
 use crate::metrics::ascii_heatmap;
 use crate::router::{synthetic_lpr_router, ServingEngine, METRICS};
 use crate::runtime::Runtime;
+use crate::serve::{
+    measure_service_rate, run_open_loop, PoolEngine, ServeConfig,
+    ServeRuntime,
+};
 use crate::util::rng::Rng;
 use crate::util::table::{fmt_sci, Table};
 
@@ -33,7 +38,11 @@ pub const LW_BETA_ALIGN: usize = 2;
 pub const LW_BETA_KL: usize = 3;
 
 pub struct Reporter<'a> {
-    pub rt: &'a Runtime,
+    /// PJRT runtime, present only when the artifacts/training paths are
+    /// available (the pure-Rust serving reports — `dispatch*`, `serve`
+    /// — run without it, so they work against the offline `vendor/xla`
+    /// stub).
+    pub rt: Option<&'a Runtime>,
     pub art_dir: &'a Path,
     pub out_dir: &'a Path,
     pub steps_override: Option<usize>,
@@ -47,7 +56,11 @@ pub struct Reporter<'a> {
 type PaperRow = (&'static str, f64, f64, f64);
 
 impl<'a> Reporter<'a> {
-    pub fn new(rt: &'a Runtime, art_dir: &'a Path, out_dir: &'a Path) -> Self {
+    pub fn new(
+        rt: Option<&'a Runtime>,
+        art_dir: &'a Path,
+        out_dir: &'a Path,
+    ) -> Self {
         std::fs::create_dir_all(out_dir).ok();
         Reporter {
             rt,
@@ -59,6 +72,16 @@ impl<'a> Reporter<'a> {
         }
     }
 
+    /// The PJRT runtime, or a useful error for experiments that need
+    /// artifacts when only the offline stub is present.
+    fn runtime(&self) -> Result<&'a Runtime> {
+        self.rt.context(
+            "this experiment needs the PJRT runtime (AOT artifacts + a \
+             patched vendor/xla); the pure-Rust reports are: dispatch, \
+             dispatch-routed, dispatch-policies, serve",
+        )
+    }
+
     fn artifacts(
         &self,
         name: &str,
@@ -67,7 +90,7 @@ impl<'a> Reporter<'a> {
             return Ok(a.clone());
         }
         let a = Rc::new(crate::runtime::CompiledArtifacts::load(
-            self.rt,
+            self.runtime()?,
             self.art_dir,
             name,
         )?);
@@ -86,7 +109,7 @@ impl<'a> Reporter<'a> {
             eprintln!("== running {} ({})", spec.label, spec.artifact);
         }
         let arts = self.artifacts(&spec.artifact)?;
-        execute_run_arts(self.rt, &arts, &spec, self.verbose)
+        execute_run_arts(self.runtime()?, &arts, &spec, self.verbose)
     }
 
     fn emit(&self, name: &str, table: &Table, extra: &str) -> Result<String> {
@@ -615,6 +638,109 @@ impl<'a> Reporter<'a> {
         Ok(())
     }
 
+    /// Serving-runtime sweep: policy × worker count × arrival rate
+    /// through the persistent-pool [`ServeRuntime`] (bounded queue,
+    /// micro-batching, real expert FFN compute). Arrival rates are
+    /// expressed as load fractions of this machine's *measured*
+    /// full-forward capacity per worker count, so the sweep brackets
+    /// saturation on any box: below 1.0 the latency percentiles sit
+    /// near the batch service time, above it queueing delay takes over
+    /// and p99 departs from p50 — the queueing-theory picture the
+    /// related serving-dispatch work evaluates. Pure-Rust: needs no
+    /// artifacts or PJRT runtime.
+    pub fn serve_table(&self) -> Result<()> {
+        let (d, dz, e, k, d_ff) = (32usize, 16, 32, 4, 64);
+        let (req_tokens, n_requests) = (32usize, 256usize);
+        let (max_batch, max_wait) = (256usize, 2_000u64);
+        let mut t = Table::new(
+            &format!(
+                "Serving runtime: persistent pool + micro-batch queue \
+                 ({e} experts top-{k}, cosine router, {req_tokens}-token \
+                 requests, max_batch {max_batch}, skewed Zipf(1.6) \
+                 clustered tokens)"
+            ),
+            &[
+                "policy", "workers", "load", "rate tok/s", "p50 us",
+                "p99 us", "throughput tok/s", "win-GINI", "rejected",
+            ],
+        );
+        for &workers in &[1usize, 2, 4] {
+            // calibrate this worker count's service capacity once
+            let mut rng = Rng::new(23);
+            let router =
+                synthetic_lpr_router("cosine", &mut rng, d, dz, e, k);
+            let bank = ExpertBank::new(&Rng::new(42), e, d, d_ff);
+            let mix = MixtureStream::skewed(&mut rng, d, 1.6);
+            let mut cal =
+                PoolEngine::new(router.plan().clone(), bank.clone(), workers);
+            let cap_tok_s = measure_service_rate(
+                &mut cal,
+                &mix,
+                &mut rng,
+                max_batch,
+                3,
+                1.25,
+                OverflowPolicy::Drop,
+            );
+            drop(cal);
+            for policy in OverflowPolicy::ALL {
+                for &load in &[0.5f64, 1.5] {
+                    // identical seeds per cell: every cell sees the
+                    // same router geometry and token stream
+                    let mut rng = Rng::new(23);
+                    let router = synthetic_lpr_router(
+                        "cosine", &mut rng, d, dz, e, k,
+                    );
+                    let bank = ExpertBank::new(&Rng::new(42), e, d, d_ff);
+                    let mix = MixtureStream::skewed(&mut rng, d, 1.6);
+                    let cfg = ServeConfig {
+                        n_workers: workers,
+                        max_batch,
+                        max_wait,
+                        queue_tokens: 8 * max_batch,
+                        capacity_factor: 1.25,
+                        policy,
+                        ..ServeConfig::default()
+                    };
+                    let mut srv = ServeRuntime::new(
+                        router.plan().clone(),
+                        bank,
+                        cfg,
+                    );
+                    run_open_loop(
+                        &mut srv,
+                        &mix,
+                        &mut rng,
+                        n_requests,
+                        req_tokens,
+                        load * cap_tok_s,
+                    );
+                    let r = srv.report();
+                    t.row(vec![
+                        policy.name().to_string(),
+                        format!("{workers}"),
+                        format!("{load}"),
+                        format!("{:.0}", load * cap_tok_s),
+                        format!("{:.0}", r.latency_p50_us),
+                        format!("{:.0}", r.latency_p99_us),
+                        format!("{:.0}", r.throughput_tok_per_s),
+                        fmt_sci(r.window_gini),
+                        format!("{}", r.rejected),
+                    ]);
+                }
+            }
+        }
+        self.emit(
+            "serve",
+            &t,
+            "\nload = arrival rate / measured full-forward capacity at \
+             that worker count; latencies are virtual-clock ticks (1 \
+             tick = 1 us) including queue wait, micro-batch wait, \
+             pipeline backpressure, and measured compute.\n",
+        )?;
+        Ok(())
+    }
+
     /// Replay measured load distributions from fig-1 runs through the
     /// simulator: the end-to-end "LPR fixes serving" result.
     pub fn dispatch_replay(&self) -> Result<()> {
@@ -674,6 +800,7 @@ impl<'a> Reporter<'a> {
         self.dispatch_report()?;
         self.dispatch_routed()?;
         self.dispatch_policies()?;
+        self.serve_table()?;
         self.dispatch_replay_from(&v, &l)?;
         self.table5()?;
         self.table6()?;

@@ -25,8 +25,13 @@
 //! shard *buffers* persist across calls) — spawn+join costs tens of
 //! microseconds, so multi-threading pays off on large batches or
 //! expensive kernels; tiny batches run inline on the caller's thread.
-//! A persistent channel-fed worker pool is the follow-up once the
-//! async serving PR lands.
+//! For sustained serving traffic, [`crate::serve::PoolEngine`] runs the
+//! same pipeline on a **persistent channel-fed worker pool** instead;
+//! it shares this module's partition helpers ([`shard_span`],
+//! `expert_group_bounds`) and merge/compute steps (`merge_route_shard`,
+//! `run_expert_range`), so pool outputs are bit-identical to the scoped
+//! path for every worker count (pinned by
+//! `pool_forward_full_matches_scoped_engine` in `serve::pool`).
 //!
 //! Thread-determinism contract: token routing is per-token pure, shard
 //! boundaries depend only on `(N, T)` (routing) or the plan's offsets
@@ -38,8 +43,91 @@
 
 use super::plan::{RouteBuffers, RouterBatch, RouterPlan};
 use crate::dispatch::plan::{capacity_for, DispatchPlan, OverflowPolicy};
-use crate::experts::{combine_rows, gather_rows, ExpertBank};
+use crate::experts::{combine_rows_opts, gather_rows, ExpertBank};
 use crate::metrics::{LoadTracker, DEFAULT_LOAD_WINDOW};
+
+/// Token range of shard `i` when `n` tokens split into `t` contiguous
+/// shards: the first `n mod t` shards get one extra token. This is the
+/// single shard rule shared by [`ServingEngine`] (scoped threads) and
+/// `serve::PoolEngine` (persistent workers) — part of the
+/// thread-determinism contract: boundaries depend only on `(n, t, i)`,
+/// never on thread timing.
+pub fn shard_span(n: usize, t: usize, i: usize) -> std::ops::Range<usize> {
+    let (base, rem) = (n / t, n % t);
+    let start = i * base + i.min(rem);
+    start..start + base + usize::from(i < rem)
+}
+
+/// Copy one routed shard into its token range of `out` and accumulate
+/// its load histogram — the fixed merge step run in shard order by both
+/// serving paths. `out` must already be `reset` for the full batch.
+pub(crate) fn merge_route_shard(
+    out: &mut RouterBatch,
+    shard: &RouterBatch,
+    start: usize,
+) {
+    let k = out.top_k;
+    out.topk_idx[start * k..start * k + shard.topk_idx.len()]
+        .copy_from_slice(&shard.topk_idx);
+    out.weights[start * k..start * k + shard.weights.len()]
+        .copy_from_slice(&shard.weights);
+    for (acc, &l) in out.load.iter_mut().zip(&shard.load) {
+        *acc += l;
+    }
+}
+
+/// Expert-group boundaries for the compute stage: `groups + 1` indices
+/// into `plan`'s expert range, chosen so each group covers a contiguous
+/// expert span with roughly `kept / groups` grouped rows. Depends only
+/// on the plan's offsets — the same partition for every thread count.
+pub(crate) fn expert_group_bounds(
+    plan: &DispatchPlan,
+    groups: usize,
+    bounds: &mut Vec<usize>,
+) {
+    let kept = plan.kept();
+    bounds.clear();
+    bounds.reserve(groups + 1);
+    for g in 0..=groups {
+        let target = (kept * g / groups) as u32;
+        bounds.push(plan.offsets.partition_point(|&o| o < target));
+    }
+}
+
+/// Run the FFN buckets of experts `e0..e1` over the gathered rows `xg`,
+/// writing grouped rows `offsets[e0]..offsets[e1]` into `ys` (which
+/// holds exactly that sub-range). Pure per expert, so any thread may
+/// execute a group — shared by the scoped engine and the pool workers.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_expert_range(
+    bank: &ExpertBank,
+    plan: &DispatchPlan,
+    xg: &[f32],
+    e0: usize,
+    e1: usize,
+    d: usize,
+    hid: &mut Vec<f32>,
+    ys: &mut [f32],
+) {
+    let row0 = plan.offsets[e0] as usize;
+    let mut cursor = 0usize;
+    for ei in e0..e1 {
+        let rows = plan.expert_rows(ei);
+        let m = rows.len();
+        if m == 0 {
+            continue;
+        }
+        bank.forward_rows(
+            ei,
+            &xg[rows.start * d..rows.end * d],
+            m,
+            hid,
+            &mut ys[cursor..cursor + m * d],
+        );
+        cursor += m * d;
+    }
+    debug_assert_eq!(cursor, (plan.offsets[e1] as usize - row0) * d);
+}
 
 /// A reusable routing engine: owns the compiled plan plus per-shard
 /// scratch, so steady-state `route_into` / `forward_full` calls
@@ -51,6 +139,9 @@ pub struct ServingEngine {
     shards: Vec<Shard>,
     /// Rolling routed-load window over this engine's batches.
     tracker: LoadTracker,
+    /// Renormalize surviving gate weights of partially-dropped tokens
+    /// in the combine (see [`combine_rows_opts`]); off by default.
+    renormalize: bool,
 }
 
 #[derive(Debug, Clone, Default)]
@@ -69,14 +160,15 @@ struct Shard {
 pub struct FullForward {
     pub batch: RouterBatch,
     pub plan: DispatchPlan,
-    /// [N, d] gate-weighted combined expert outputs, token order.
+    /// `[N, d]` gate-weighted combined expert outputs, token order.
     /// Tokens whose every slot was dropped are all-zero rows (they
     /// continue through the residual stream).
     pub combined: Vec<f32>,
-    /// [kept, d] expert-grouped gathered inputs.
+    /// `[kept, d]` expert-grouped gathered inputs.
     xg: Vec<f32>,
-    /// [kept, d] expert-grouped FFN outputs.
-    y: Vec<f32>,
+    /// `[kept, d]` expert-grouped FFN outputs (also written by
+    /// `serve::PoolEngine`, which gathers into its own shared state).
+    pub(crate) y: Vec<f32>,
 }
 
 impl FullForward {
@@ -102,6 +194,7 @@ impl ServingEngine {
             n_threads,
             tracker: LoadTracker::new(DEFAULT_LOAD_WINDOW, n_experts),
             plan,
+            renormalize: false,
         }
     }
 
@@ -111,6 +204,14 @@ impl ServingEngine {
 
     pub fn n_threads(&self) -> usize {
         self.n_threads
+    }
+
+    /// Enable/disable gate-weight renormalization for partially-dropped
+    /// tokens in [`Self::forward_full`]'s combine (the `--renormalize`
+    /// CLI option). Off by default; with no drops the output is
+    /// bit-identical either way (see [`combine_rows_opts`]).
+    pub fn set_renormalize(&mut self, on: bool) {
+        self.renormalize = on;
     }
 
     /// Rolling balance of the batches this engine has routed.
@@ -132,33 +233,21 @@ impl ServingEngine {
             self.tracker.push(&out.load);
             return;
         }
-        let base = n / self.n_threads;
-        let rem = n % self.n_threads;
+        let n_threads = self.n_threads;
         let plan = &self.plan;
         std::thread::scope(|scope| {
-            let mut start = 0usize;
             for (t, shard) in self.shards.iter_mut().enumerate() {
-                let len = base + usize::from(t < rem);
-                let hs = &h[start * d..(start + len) * d];
+                let span = shard_span(n, n_threads, t);
+                let hs = &h[span.start * d..span.end * d];
                 scope.spawn(move || {
                     plan.forward_into(hs, &mut shard.buf, &mut shard.out);
                 });
-                start += len;
             }
         });
         // deterministic merge in shard order
         out.reset(n, k, e);
-        let mut start = 0usize;
         for (t, shard) in self.shards.iter().enumerate() {
-            let len = base + usize::from(t < rem);
-            out.topk_idx[start * k..(start + len) * k]
-                .copy_from_slice(&shard.out.topk_idx);
-            out.weights[start * k..(start + len) * k]
-                .copy_from_slice(&shard.out.weights);
-            for (acc, &l) in out.load.iter_mut().zip(&shard.out.load) {
-                *acc += l;
-            }
-            start += len;
+            merge_route_shard(out, &shard.out, shard_span(n, n_threads, t).start);
         }
         self.tracker.push(&out.load);
     }
@@ -213,12 +302,7 @@ impl ServingEngine {
             // for every thread count
             let xg: &[f32] = xg;
             let mut bounds = Vec::with_capacity(groups + 1);
-            for g in 0..=groups {
-                let target = (kept * g / groups) as u32;
-                bounds.push(
-                    plan.offsets.partition_point(|&o| o < target),
-                );
-            }
+            expert_group_bounds(plan, groups, &mut bounds);
             std::thread::scope(|scope| {
                 let mut y_rest: &mut [f32] = y;
                 for (g, shard) in
@@ -234,28 +318,23 @@ impl ServingEngine {
                         continue; // no rows in this group
                     }
                     scope.spawn(move || {
-                        let mut cursor = 0usize;
-                        for ei in e0..e1 {
-                            let rows = plan.expert_rows(ei);
-                            let m = rows.len();
-                            if m == 0 {
-                                continue;
-                            }
-                            bank.forward_rows(
-                                ei,
-                                &xg[rows.start * d..rows.end * d],
-                                m,
-                                &mut shard.hid,
-                                &mut ys[cursor..cursor + m * d],
-                            );
-                            cursor += m * d;
-                        }
+                        run_expert_range(
+                            bank, plan, xg, e0, e1, d, &mut shard.hid,
+                            ys,
+                        );
                     });
                 }
             });
         }
         // 5. gate-weighted combine, fixed (token, slot) order
-        combine_rows(plan, &batch.weights, y, d, combined);
+        combine_rows_opts(
+            plan,
+            &batch.weights,
+            y,
+            d,
+            self.renormalize,
+            combined,
+        );
     }
 }
 
@@ -395,6 +474,46 @@ mod tests {
         assert_eq!(out.plan, plan);
         assert_eq!(out.combined, combined);
         assert_eq!(out.token_row(0).len(), d);
+    }
+
+    #[test]
+    fn shard_spans_partition_the_batch() {
+        for n in [0usize, 1, 7, 64, 103] {
+            for t in [1usize, 2, 3, 8] {
+                let mut next = 0usize;
+                for i in 0..t {
+                    let span = shard_span(n, t, i);
+                    assert_eq!(span.start, next, "n={n} t={t} i={i}");
+                    next = span.end;
+                }
+                assert_eq!(next, n, "spans must cover n={n} for t={t}");
+            }
+        }
+        // first n % t shards carry the extra token
+        assert_eq!(shard_span(7, 3, 0), 0..3);
+        assert_eq!(shard_span(7, 3, 1), 3..5);
+        assert_eq!(shard_span(7, 3, 2), 5..7);
+    }
+
+    /// With a capacity that never drops, renormalization is inert:
+    /// outputs are bit-identical with the option on or off.
+    #[test]
+    fn renormalize_is_inert_without_drops() {
+        let mut rng = Rng::new(83);
+        let (d, dz, e, k, n) = (16usize, 8, 6, 2, 40);
+        let r = synthetic_lpr_router("cosine", &mut rng, d, dz, e, k);
+        let bank = ExpertBank::new(&Rng::new(6), e, d, 8);
+        let h = rand_vec(&mut rng, n * d);
+        let mut plain = ServingEngine::new(r.plan().clone(), 2);
+        let mut renorm = ServingEngine::new(r.plan().clone(), 2);
+        renorm.set_renormalize(true);
+        let (mut a, mut b) = (FullForward::new(), FullForward::new());
+        // capacity factor e (= one bin per token-slot) cannot overflow
+        let cf = e as f64;
+        plain.forward_full(&h, &bank, cf, OverflowPolicy::Drop, &mut a);
+        renorm.forward_full(&h, &bank, cf, OverflowPolicy::Drop, &mut b);
+        assert_eq!(a.plan.n_dropped, 0);
+        assert_eq!(a.combined, b.combined);
     }
 
     #[test]

@@ -37,7 +37,7 @@ pub fn matmul_into(
     }
 }
 
-/// Per-row RMSNorm with learned scale `w` ([d]).
+/// Per-row RMSNorm with learned scale `w` (`[d]`).
 pub fn rms_norm_rows(x: &[f32], w: &[f32], n: usize, d: usize) -> Vec<f32> {
     let mut out = vec![0.0f32; n * d];
     rms_norm_rows_into(x, w, &mut out, n, d);

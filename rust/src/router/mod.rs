@@ -86,7 +86,7 @@ pub(crate) fn project_unit_ball(pm: &mut [f32], dz: usize) {
 /// Descending score; NaN scores lose deterministically (all non-NaN
 /// scores rank first); ties — including NaN/NaN — break to the lower
 /// index.
-pub(crate) fn rank_cmp(sa: f32, a: u32, sb: f32, b: u32) -> Ordering {
+pub fn rank_cmp(sa: f32, a: u32, sb: f32, b: u32) -> Ordering {
     match (sa.is_nan(), sb.is_nan()) {
         (false, true) => Ordering::Less,
         (true, false) => Ordering::Greater,
@@ -138,11 +138,11 @@ pub struct RouterConfig {
 
 #[derive(Debug, Clone)]
 pub struct RouterOutput {
-    /// [N, k] expert ids, descending score order (ties -> lower id).
+    /// `[N, k]` expert ids, descending score order (ties -> lower id).
     pub topk_idx: Vec<Vec<u32>>,
-    /// [N, k] combine weights.
+    /// `[N, k]` combine weights.
     pub weights: Vec<Vec<f32>>,
-    /// [E] assignment counts.
+    /// `[E]` assignment counts.
     pub load: Vec<f32>,
 }
 

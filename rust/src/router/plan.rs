@@ -91,12 +91,12 @@ impl ScoreKernel {
 pub struct RouterBatch {
     pub n: usize,
     pub top_k: usize,
-    /// [N*k] expert ids, per-token descending score order
+    /// `[N*k]` expert ids, per-token descending score order
     /// (NaN loses, ties -> lower id).
     pub topk_idx: Vec<u32>,
-    /// [N*k] combine weights, same layout.
+    /// `[N*k]` combine weights, same layout.
     pub weights: Vec<f32>,
-    /// [E] assignment counts.
+    /// `[E]` assignment counts.
     pub load: Vec<f32>,
 }
 

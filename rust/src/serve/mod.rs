@@ -1,0 +1,584 @@
+//! Persistent-pool serving runtime: a request front-end over the full
+//! expert-parallel data path.
+//!
+//! PR 2 ended with a per-batch pipeline (`route → DispatchPlan →
+//! expert FFN → combine`) but no way to *feed* it from a stream of
+//! requests, and with worker threads re-spawned by `thread::scope` on
+//! every batch. This module supplies both halves of the serving story:
+//!
+//! - [`queue::BatchQueue`] — a bounded submission queue that
+//!   micro-batches incoming token groups FIFO: flush on `max_batch`
+//!   tokens or when the oldest request has waited `max_wait` ticks;
+//!   requests are never split or reordered.
+//! - [`pool::PoolEngine`] — a long-lived channel-fed worker pool
+//!   running the full data path with the workers' `RouteBuffers` /
+//!   scratch owned for the process lifetime; bit-identical to the
+//!   scoped [`crate::router::ServingEngine`] for every worker count.
+//! - [`ServeRuntime`] — glues them together and keeps the serving
+//!   telemetry: per-request latency percentiles (nearest-rank, the
+//!   same [`percentile_nearest_rank`] convention as `DispatchSim`) and
+//!   windowed [`crate::metrics::LoadTracker`] balance stats.
+//!
+//! # Time model
+//!
+//! The runtime is event-driven on a **virtual clock** (integer ticks;
+//! the bench drivers use 1 tick = 1 µs). Callers stamp `submit`/`poll`
+//! with `now`; a flushed batch *starts* at `max(now, busy_until)` —
+//! the pool serves batches in order — and *completes* `service` ticks
+//! later, where `service` is the measured wall time of the real pool
+//! forward (or a fixed [`ServeConfig::service_ticks`] override, which
+//! makes tests fully deterministic). A request's latency is
+//! `completion − arrival`: queueing delay, micro-batch wait, pipeline
+//! backpressure, and real compute all land in the percentiles, which
+//! is what turns arrival-rate sweeps into the queueing-behavior curves
+//! the related serving-dispatch work evaluates.
+//!
+//! [`run_open_loop`] is the single traffic protocol (Poisson arrivals
+//! from a seeded [`Rng`] over a [`MixtureStream`]) shared by
+//! `serve-bench`, `repro serve`, `benches/micro.rs`, and
+//! `examples/serving_sim.rs` — change the measurement protocol here,
+//! not per call site.
+
+pub mod pool;
+pub mod queue;
+
+pub use pool::PoolEngine;
+pub use queue::{BatchMember, BatchQueue, SubmitError};
+
+use crate::data::MixtureStream;
+use crate::dispatch::plan::OverflowPolicy;
+use crate::experts::ExpertBank;
+use crate::metrics::percentile_nearest_rank;
+use crate::router::{FullForward, RouterPlan};
+use crate::util::rng::Rng;
+
+/// Configuration of a [`ServeRuntime`].
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Persistent pool workers (clamped to at least 1).
+    pub n_workers: usize,
+    /// Micro-batch flush size, tokens.
+    pub max_batch: usize,
+    /// Oldest-request age (ticks) that forces a flush.
+    pub max_wait: u64,
+    /// Submission-queue bound, tokens (back-pressure past this).
+    pub queue_tokens: usize,
+    /// Expert capacity factor per batch (shared `capacity_for` rule).
+    pub capacity_factor: f64,
+    /// Overflow policy applied at dispatch-plan build.
+    pub policy: OverflowPolicy,
+    /// Renormalize surviving gate weights of partially-dropped tokens.
+    pub renormalize: bool,
+    /// Fixed per-batch service time in ticks; `None` measures the real
+    /// pool forward (tests pin this for determinism).
+    pub service_ticks: Option<u64>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            n_workers: 1,
+            max_batch: 1024,
+            max_wait: 2_000,
+            queue_tokens: 8_192,
+            capacity_factor: 1.25,
+            policy: OverflowPolicy::Drop,
+            renormalize: false,
+            service_ticks: None,
+        }
+    }
+}
+
+/// One finished request, as returned by [`ServeRuntime::poll`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Completion {
+    pub id: u64,
+    pub n_tokens: usize,
+    /// Submission → completion, ticks.
+    pub latency: u64,
+    /// Completion tick.
+    pub done_at: u64,
+}
+
+/// Aggregate serving telemetry; see [`ServeRuntime::report`].
+#[derive(Debug, Clone, Default)]
+pub struct ServeReport {
+    pub requests: usize,
+    pub tokens: usize,
+    pub batches: usize,
+    /// Submissions refused by the bounded queue (back-pressure).
+    pub rejected: usize,
+    pub mean_batch_tokens: f64,
+    pub latency_mean_us: f64,
+    pub latency_p50_us: f64,
+    pub latency_p99_us: f64,
+    /// Completed tokens over first-arrival → last-completion time.
+    pub throughput_tok_per_s: f64,
+    /// Rolling routed-load balance over the pool's window.
+    pub window_gini: f64,
+    pub window_min_max: f64,
+    pub window_cv: f64,
+}
+
+impl ServeReport {
+    /// Render this report as one `BENCH_serve.json` row — the single
+    /// schema shared by `lpr serve-bench` and the `benches/micro.rs`
+    /// serve sweep, so the CI perf artifact cannot fork formats
+    /// between emitters.
+    pub fn bench_json_row(
+        &self,
+        policy: OverflowPolicy,
+        workers: usize,
+        rate_tok_s: f64,
+        load: f64,
+        req_tokens: usize,
+    ) -> String {
+        format!(
+            "{{\"name\": \"serve/{}\", \"workers\": {}, \
+             \"rate_tok_s\": {:.0}, \"load\": {:.2}, \
+             \"req_tokens\": {}, \"p50_us\": {:.1}, \
+             \"p99_us\": {:.1}, \"mean_us\": {:.1}, \
+             \"throughput_tok_s\": {:.0}, \"win_gini\": {:.4}, \
+             \"rejected\": {}}}",
+            policy.name(),
+            workers,
+            rate_tok_s,
+            load,
+            req_tokens,
+            self.latency_p50_us,
+            self.latency_p99_us,
+            self.latency_mean_us,
+            self.throughput_tok_per_s,
+            self.window_gini,
+            self.rejected
+        )
+    }
+}
+
+/// The serving runtime: bounded queue → micro-batcher → persistent
+/// pool → latency/balance telemetry. See the module docs for the time
+/// model.
+#[derive(Debug)]
+pub struct ServeRuntime {
+    cfg: ServeConfig,
+    pool: PoolEngine,
+    queue: BatchQueue,
+    out: FullForward,
+    batch_h: Vec<f32>,
+    members: Vec<BatchMember>,
+    completions: Vec<Completion>,
+    latencies: Vec<f64>,
+    latency_sum: f64,
+    /// Virtual tick until which the pool is busy with earlier batches.
+    busy_until: u64,
+    n_batches: usize,
+    tokens_done: usize,
+    rejected: usize,
+    first_arrival: Option<u64>,
+    last_done: u64,
+}
+
+impl ServeRuntime {
+    pub fn new(
+        plan: RouterPlan,
+        bank: ExpertBank,
+        cfg: ServeConfig,
+    ) -> ServeRuntime {
+        let d = plan.cfg.d_model;
+        let mut pool = PoolEngine::new(plan, bank, cfg.n_workers);
+        pool.set_renormalize(cfg.renormalize);
+        let queue =
+            BatchQueue::new(d, cfg.max_batch, cfg.max_wait, cfg.queue_tokens);
+        ServeRuntime {
+            pool,
+            queue,
+            out: FullForward::new(),
+            batch_h: Vec::new(),
+            members: Vec::new(),
+            completions: Vec::new(),
+            latencies: Vec::new(),
+            latency_sum: 0.0,
+            busy_until: 0,
+            n_batches: 0,
+            tokens_done: 0,
+            rejected: 0,
+            first_arrival: None,
+            last_done: 0,
+            cfg,
+        }
+    }
+
+    pub fn config(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    /// The pool's rolling routed-load balance window.
+    pub fn tracker(&self) -> &crate::metrics::LoadTracker {
+        self.pool.tracker()
+    }
+
+    /// The last flushed batch's full forward (routed batch, dispatch
+    /// plan, combined rows) — request `i` of the batch owns token rows
+    /// `members[i].start..start + n_tokens` of `combined`.
+    pub fn last_forward(&self) -> &FullForward {
+        &self.out
+    }
+
+    /// Members of the last flushed batch, in FIFO order.
+    pub fn last_members(&self) -> &[BatchMember] {
+        &self.members
+    }
+
+    /// Pending tokens in the submission queue.
+    pub fn pending_tokens(&self) -> usize {
+        self.queue.pending_tokens()
+    }
+
+    /// Submit a request of `h.len() / d` token rows at tick `now`.
+    /// [`SubmitError::Full`] submissions are counted in
+    /// [`ServeReport::rejected`].
+    pub fn submit(&mut self, h: &[f32], now: u64) -> Result<u64, SubmitError> {
+        match self.queue.submit(h, now) {
+            Ok(id) => {
+                self.first_arrival.get_or_insert(now);
+                Ok(id)
+            }
+            Err(e) => {
+                if e == SubmitError::Full {
+                    self.rejected += 1;
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// Advance the runtime to tick `now`: flush every micro-batch the
+    /// queue considers due and return the requests completed by those
+    /// flushes.
+    pub fn poll(&mut self, now: u64) -> &[Completion] {
+        self.completions.clear();
+        while self.queue.ready(now) {
+            self.flush_one(now);
+        }
+        &self.completions
+    }
+
+    /// Flush everything still queued (end of a run), regardless of the
+    /// flush conditions.
+    pub fn drain(&mut self, now: u64) -> &[Completion] {
+        self.completions.clear();
+        while !self.queue.is_empty() {
+            self.flush_one(now);
+        }
+        &self.completions
+    }
+
+    fn flush_one(&mut self, now: u64) {
+        self.queue.pop_batch(&mut self.batch_h, &mut self.members);
+        let t0 = std::time::Instant::now();
+        self.pool.forward_full(
+            &self.batch_h,
+            self.cfg.capacity_factor,
+            self.cfg.policy,
+            &mut self.out,
+        );
+        let measured_us = (t0.elapsed().as_nanos() / 1_000).max(1) as u64;
+        let service = self.cfg.service_ticks.unwrap_or(measured_us);
+        // the pool serves batches in order: this batch starts when the
+        // previous one finished (or now, if the pool sat idle)
+        let start = now.max(self.busy_until);
+        let done = start + service;
+        self.busy_until = done;
+        self.last_done = self.last_done.max(done);
+        for m in &self.members {
+            let latency = done.saturating_sub(m.arrival);
+            self.latencies.push(latency as f64);
+            self.latency_sum += latency as f64;
+            self.tokens_done += m.n_tokens;
+            self.completions.push(Completion {
+                id: m.id,
+                n_tokens: m.n_tokens,
+                latency,
+                done_at: done,
+            });
+        }
+        self.n_batches += 1;
+    }
+
+    /// Aggregate latency/throughput/balance telemetry for everything
+    /// served so far.
+    pub fn report(&self) -> ServeReport {
+        let mut lat = self.latencies.clone();
+        lat.sort_by(f64::total_cmp);
+        let requests = lat.len();
+        let elapsed_us = self
+            .last_done
+            .saturating_sub(self.first_arrival.unwrap_or(0))
+            .max(1);
+        ServeReport {
+            requests,
+            tokens: self.tokens_done,
+            batches: self.n_batches,
+            rejected: self.rejected,
+            mean_batch_tokens: self.tokens_done as f64
+                / self.n_batches.max(1) as f64,
+            latency_mean_us: self.latency_sum / requests.max(1) as f64,
+            latency_p50_us: percentile_nearest_rank(&lat, 0.5),
+            latency_p99_us: percentile_nearest_rank(&lat, 0.99),
+            throughput_tok_per_s: if requests == 0 {
+                0.0
+            } else {
+                self.tokens_done as f64 / (elapsed_us as f64 * 1e-6)
+            },
+            window_gini: self.pool.tracker().gini(),
+            window_min_max: self.pool.tracker().min_max(),
+            window_cv: self.pool.tracker().cv(),
+        }
+    }
+}
+
+/// Drive `n_requests` open-loop requests of `req_tokens` tokens through
+/// `runtime`: Poisson arrivals at `rate_tok_per_s` (virtual tokens per
+/// second, 1 tick = 1 µs), tokens sampled from `mix`, queue-full
+/// submissions counted as rejected (no retry), and a final drain. The
+/// single traffic protocol behind `serve-bench`, `repro serve`, the
+/// micro benches, and the serving example.
+pub fn run_open_loop(
+    runtime: &mut ServeRuntime,
+    mix: &MixtureStream,
+    rng: &mut Rng,
+    n_requests: usize,
+    req_tokens: usize,
+    rate_tok_per_s: f64,
+) {
+    assert!(rate_tok_per_s > 0.0, "arrival rate must be positive");
+    // a TooLarge request can never flush; every submission would be
+    // silently discarded (neither completed nor rejected), zeroing the
+    // whole report — refuse the misconfiguration loudly instead
+    assert!(
+        req_tokens <= runtime.config().max_batch,
+        "req_tokens {req_tokens} exceeds max_batch {} — requests \
+         would never fit a micro-batch",
+        runtime.config().max_batch
+    );
+    let mean_gap_us = req_tokens as f64 / rate_tok_per_s * 1e6;
+    let mut h = Vec::new();
+    let mut now = 0u64;
+    for _ in 0..n_requests {
+        // exponential inter-arrival: -ln(1 - U) * mean, U in [0, 1)
+        let gap = (-(1.0 - rng.f64()).ln() * mean_gap_us).max(1.0);
+        now += gap as u64;
+        runtime.poll(now);
+        mix.fill(rng, req_tokens, &mut h);
+        let _ = runtime.submit(&h, now);
+    }
+    runtime.drain(now);
+}
+
+/// Measure a pool's steady-state full-forward service rate (tokens per
+/// second) over `reps` batches of `n_tokens`: the calibration
+/// `serve-bench` and `repro serve` use to express arrival rates as
+/// load fractions of this machine's capacity, so the sweep saturates
+/// on every box instead of only on the one it was tuned on.
+pub fn measure_service_rate(
+    pool: &mut PoolEngine,
+    mix: &MixtureStream,
+    rng: &mut Rng,
+    n_tokens: usize,
+    reps: usize,
+    capacity_factor: f64,
+    policy: OverflowPolicy,
+) -> f64 {
+    let mut h = Vec::new();
+    let mut out = FullForward::new();
+    mix.fill(rng, n_tokens, &mut h);
+    pool.forward_full(&h, capacity_factor, policy, &mut out); // warm
+    let mut best = f64::INFINITY;
+    for _ in 0..reps.max(1) {
+        mix.fill(rng, n_tokens, &mut h);
+        let t0 = std::time::Instant::now();
+        pool.forward_full(&h, capacity_factor, policy, &mut out);
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    n_tokens as f64 / best.max(1e-9)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::router::{synthetic_lpr_router, ServingEngine};
+
+    fn tiny_setup(
+        seed: u64,
+    ) -> (crate::router::Router, ExpertBank, MixtureStream, Rng) {
+        let mut rng = Rng::new(seed);
+        let (d, dz, e, k) = (8usize, 4, 4, 2);
+        let r = synthetic_lpr_router("cosine", &mut rng, d, dz, e, k);
+        let bank = ExpertBank::new(&Rng::new(9), e, d, 6);
+        let mix = MixtureStream::standard(&mut rng, d);
+        (r, bank, mix, rng)
+    }
+
+    /// Deterministic latency accounting on the virtual clock: queue
+    /// wait, micro-batch flush rules, and pipeline backpressure all
+    /// land in per-request latencies exactly.
+    #[test]
+    fn latency_accounting_is_exact_on_virtual_clock() {
+        let (r, bank, mix, mut rng) = tiny_setup(1);
+        let cfg = ServeConfig {
+            n_workers: 1,
+            max_batch: 4,
+            max_wait: 10,
+            queue_tokens: 64,
+            service_ticks: Some(7),
+            ..ServeConfig::default()
+        };
+        let mut rt = ServeRuntime::new(r.plan().clone(), bank, cfg);
+        let mut h = Vec::new();
+        // r0 (2 tokens) at t=0: below max_batch, not aged — no flush
+        mix.fill(&mut rng, 2, &mut h);
+        let r0 = rt.submit(&h, 0).unwrap();
+        assert!(rt.poll(0).is_empty());
+        assert!(rt.poll(9).is_empty(), "age 9 < max_wait 10");
+        // r1 (2 tokens) at t=9 fills the batch: flush on that poll
+        mix.fill(&mut rng, 2, &mut h);
+        let r1 = rt.submit(&h, 9).unwrap();
+        let done: Vec<Completion> = rt.poll(9).to_vec();
+        assert_eq!(done.len(), 2);
+        // batch starts at t=9 (pool idle), completes at 9 + 7 = 16
+        assert_eq!(done[0], Completion { id: r0, n_tokens: 2, latency: 16, done_at: 16 });
+        assert_eq!(done[1], Completion { id: r1, n_tokens: 2, latency: 7, done_at: 16 });
+        // r2 (1 token) at t=11: flushes only once aged out at t=21,
+        // and the pool is free by then (busy_until = 16)
+        mix.fill(&mut rng, 1, &mut h);
+        let r2 = rt.submit(&h, 11).unwrap();
+        assert!(rt.poll(20).is_empty());
+        let done: Vec<Completion> = rt.poll(21).to_vec();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0], Completion { id: r2, n_tokens: 1, latency: 17, done_at: 28 });
+        // r3 at t=22 drains immediately but queues behind busy_until=28
+        mix.fill(&mut rng, 1, &mut h);
+        let r3 = rt.submit(&h, 22).unwrap();
+        let done: Vec<Completion> = rt.drain(22).to_vec();
+        assert_eq!(done[0], Completion { id: r3, n_tokens: 1, latency: 13, done_at: 35 });
+        let rep = rt.report();
+        assert_eq!(rep.requests, 4);
+        assert_eq!(rep.tokens, 6);
+        assert_eq!(rep.batches, 3);
+        assert_eq!(rep.rejected, 0);
+        // nearest-rank over sorted [7, 13, 16, 17]
+        assert_eq!(rep.latency_p50_us, 13.0);
+        assert_eq!(rep.latency_p99_us, 17.0);
+    }
+
+    /// The runtime's combined output for a flushed batch equals the
+    /// scoped engine's forward over the same concatenated tokens.
+    #[test]
+    fn flushed_batch_matches_scoped_engine_forward() {
+        let (r, bank, mix, mut rng) = tiny_setup(2);
+        let d = 8usize;
+        let cfg = ServeConfig {
+            n_workers: 2,
+            max_batch: 8,
+            max_wait: 100,
+            queue_tokens: 64,
+            service_ticks: Some(1),
+            capacity_factor: 1.25,
+            policy: OverflowPolicy::LeastLoaded,
+            ..ServeConfig::default()
+        };
+        let mut rt = ServeRuntime::new(r.plan().clone(), bank.clone(), cfg);
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        mix.fill(&mut rng, 3, &mut a);
+        mix.fill(&mut rng, 5, &mut b);
+        rt.submit(&a, 0).unwrap();
+        rt.submit(&b, 1).unwrap();
+        let done = rt.poll(1).to_vec();
+        assert_eq!(done.len(), 2);
+        let mut h = a.clone();
+        h.extend_from_slice(&b);
+        let mut scoped = ServingEngine::new(r.plan().clone(), 1);
+        let mut want = FullForward::new();
+        scoped.forward_full(
+            &h,
+            &bank,
+            1.25,
+            OverflowPolicy::LeastLoaded,
+            &mut want,
+        );
+        assert_eq!(rt.last_forward().combined, want.combined);
+        // member slices address the combined rows per request
+        let m = rt.last_members();
+        assert_eq!((m[0].start, m[0].n_tokens), (0, 3));
+        assert_eq!((m[1].start, m[1].n_tokens), (3, 5));
+        assert_eq!(rt.last_forward().combined.len(), 8 * d);
+    }
+
+    #[test]
+    fn bench_json_row_is_valid_and_stable() {
+        let rep = ServeReport {
+            requests: 2,
+            tokens: 8,
+            latency_p50_us: 5.0,
+            latency_p99_us: 9.0,
+            throughput_tok_per_s: 1234.0,
+            ..ServeReport::default()
+        };
+        let row =
+            rep.bench_json_row(OverflowPolicy::NextChoice, 2, 1000.0, 0.5, 4);
+        let j = crate::util::json::Json::parse(&row).unwrap();
+        assert_eq!(j.at("name").as_str(), Some("serve/next-choice"));
+        assert_eq!(j.at("workers").as_f64(), Some(2.0));
+        assert_eq!(j.at("p50_us").as_f64(), Some(5.0));
+        assert_eq!(j.at("throughput_tok_s").as_f64(), Some(1234.0));
+    }
+
+    #[test]
+    fn bounded_queue_counts_rejections() {
+        let (r, bank, mix, mut rng) = tiny_setup(3);
+        let cfg = ServeConfig {
+            n_workers: 1,
+            max_batch: 4,
+            max_wait: 1_000_000, // never age-flush
+            queue_tokens: 4,
+            service_ticks: Some(1),
+            ..ServeConfig::default()
+        };
+        let mut rt = ServeRuntime::new(r.plan().clone(), bank, cfg);
+        let mut h = Vec::new();
+        mix.fill(&mut rng, 3, &mut h);
+        rt.submit(&h, 0).unwrap();
+        mix.fill(&mut rng, 2, &mut h);
+        assert_eq!(rt.submit(&h, 1), Err(SubmitError::Full));
+        assert_eq!(rt.report().rejected, 1);
+        rt.drain(2);
+        assert_eq!(rt.report().requests, 1);
+    }
+
+    /// Open-loop smoke: the shared traffic driver conserves requests
+    /// and produces a coherent report under a fixed service time.
+    #[test]
+    fn open_loop_driver_serves_all_accepted_requests() {
+        let (r, bank, mix, mut rng) = tiny_setup(4);
+        let cfg = ServeConfig {
+            n_workers: 2,
+            max_batch: 16,
+            max_wait: 50,
+            queue_tokens: 256,
+            service_ticks: Some(5),
+            ..ServeConfig::default()
+        };
+        let mut rt = ServeRuntime::new(r.plan().clone(), bank, cfg);
+        run_open_loop(&mut rt, &mix, &mut rng, 40, 4, 1_000_000.0);
+        let rep = rt.report();
+        assert_eq!(rep.requests + rep.rejected, 40);
+        assert_eq!(rep.tokens, rep.requests * 4);
+        assert!(rep.batches >= 1);
+        assert!(rep.latency_p50_us >= 5.0, "at least the service time");
+        assert!(rep.latency_p99_us >= rep.latency_p50_us);
+        assert!(rep.throughput_tok_per_s > 0.0);
+        assert!(rep.window_gini >= 0.0);
+        // every batch respected max_batch
+        assert!(rep.mean_batch_tokens <= 16.0);
+    }
+}

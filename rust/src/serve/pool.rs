@@ -1,0 +1,571 @@
+//! Persistent channel-fed worker pool: the long-lived twin of the
+//! scoped-thread [`ServingEngine`](crate::router::ServingEngine).
+//!
+//! [`ServingEngine`](crate::router::ServingEngine) spawns workers via `std::thread::scope` on every
+//! batch — tens of microseconds of spawn+join per call, a fixed cost
+//! PR 2 left on the table. [`PoolEngine`] spawns its workers **once**:
+//! each worker owns its [`RouteBuffers`] / [`RouterBatch`] / FFN
+//! scratch for the process lifetime, receives jobs over an `mpsc`
+//! channel, and answers on a shared completion channel. Scratch buffers
+//! *travel inside the job messages* (ownership ping-pong), so the pool
+//! needs no `unsafe` and no locks: per-batch state the workers read
+//! (input rows, the compiled [`DispatchPlan`], the gathered rows) is
+//! shared read-only behind an [`Arc`] that the engine reclaims with
+//! [`Arc::make_mut`] between batches — workers drop their clones when a
+//! job completes, so steady-state batches never deep-copy it.
+//!
+//! # Determinism: bit-identical to the scoped path
+//!
+//! The pool runs the exact pipeline of
+//! [`ServingEngine::forward_full`](crate::router::ServingEngine::forward_full) and reuses the engine's partition
+//! and merge primitives (`shard_span`, `merge_route_shard`,
+//! `expert_group_bounds`, `run_expert_range`):
+//!
+//! 1. **route** — token shards by [`shard_span`]; shard `i` always runs
+//!    on worker `i`; results merge in shard order after all workers
+//!    answer.
+//! 2. **plan + gather** — on the caller's thread, single-threaded.
+//! 3. **experts** — contiguous expert ranges from the plan's offsets;
+//!    each worker computes its grouped rows into its own buffer, which
+//!    the caller copies into the fixed destination range (completion
+//!    *order* does not matter — destinations are disjoint and the
+//!    content per range is pure).
+//! 4. **combine** — on the caller's thread, fixed (token, slot) order.
+//!
+//! Per-token routing and per-expert compute are pure and the partitions
+//! depend only on `(n, workers)` / the plan's offsets, so pool outputs
+//! are **bit-identical to the scoped engine for every worker count**
+//! (pinned by `pool_forward_full_matches_scoped_engine` for workers
+//! {1, 2, 3, 8}).
+//!
+//! Cost model vs the scoped path: one channel round-trip per worker per
+//! stage (~a microsecond total) replaces per-batch spawn+join; the
+//! expert stage pays one extra memcpy of its grouped output rows
+//! (workers cannot safely write the caller's buffer without scoped
+//! lifetimes). Both are far below the FFN compute they orchestrate.
+
+use std::ops::Range;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::dispatch::plan::{capacity_for, DispatchPlan, OverflowPolicy};
+use crate::experts::{combine_rows_opts, gather_rows, ExpertBank};
+use crate::metrics::{LoadTracker, DEFAULT_LOAD_WINDOW};
+use crate::router::engine::{
+    expert_group_bounds, merge_route_shard, run_expert_range, shard_span,
+};
+use crate::router::{FullForward, RouteBuffers, RouterBatch, RouterPlan};
+
+/// Per-batch state the workers read during one stage. Reclaimed with
+/// `Arc::make_mut` between stages; see the module docs.
+#[derive(Debug, Clone, Default)]
+struct BatchShared {
+    /// `[N, d]` input rows (route stage only).
+    h: Vec<f32>,
+    /// Compiled dispatch plan (expert stage).
+    plan: DispatchPlan,
+    /// `[kept, d]` gathered rows (expert stage).
+    xg: Vec<f32>,
+}
+
+/// A worker's process-lifetime scratch; travels inside job messages.
+#[derive(Debug, Default)]
+struct Scratch {
+    buf: RouteBuffers,
+    out: RouterBatch,
+    hid: Vec<f32>,
+    y: Vec<f32>,
+}
+
+enum Job {
+    /// Route token rows `span` of `shared.h` into `scratch.out`.
+    Route {
+        shared: Arc<BatchShared>,
+        span: Range<usize>,
+        scratch: Box<Scratch>,
+    },
+    /// Run experts `e0..e1` of `shared.plan` over `shared.xg` into
+    /// `scratch.y` (pre-sized by the caller).
+    Experts {
+        shared: Arc<BatchShared>,
+        e0: usize,
+        e1: usize,
+        scratch: Box<Scratch>,
+    },
+}
+
+enum Done {
+    Ok {
+        slot: usize,
+        /// Grouped-row start of an expert job's output (unused for
+        /// routing; route shards merge by slot via `shard_span`).
+        row0: usize,
+        scratch: Box<Scratch>,
+    },
+    /// The job panicked on the worker; the engine re-raises on the
+    /// caller's thread (its scratch unwound with the job). Without
+    /// this, a worker panic would leave the engine blocked on `recv`
+    /// forever — the scoped path propagates worker panics through
+    /// `thread::scope`, and the pool must not regress that.
+    Panicked { slot: usize },
+}
+
+struct Worker {
+    /// Dropping the sender closes the channel; the worker thread exits.
+    tx: Option<Sender<Job>>,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// Execute one job to completion; the shared handle is dropped
+/// *before* constructing the answer so the engine's `make_mut` never
+/// observes a stale clone once the `Done` arrives.
+fn run_job(plan: &RouterPlan, bank: &ExpertBank, slot: usize, job: Job) -> Done {
+    let d = plan.cfg.d_model;
+    match job {
+        Job::Route { shared, span, mut scratch } => {
+            let hs = &shared.h[span.start * d..span.end * d];
+            plan.forward_into(hs, &mut scratch.buf, &mut scratch.out);
+            drop(shared);
+            Done::Ok { slot, row0: span.start, scratch }
+        }
+        Job::Experts { shared, e0, e1, mut scratch } => {
+            run_expert_range(
+                bank,
+                &shared.plan,
+                &shared.xg,
+                e0,
+                e1,
+                d,
+                &mut scratch.hid,
+                &mut scratch.y,
+            );
+            let row0 = shared.plan.offsets[e0] as usize;
+            drop(shared);
+            Done::Ok { slot, row0, scratch }
+        }
+    }
+}
+
+fn worker_loop(
+    slot: usize,
+    plan: &RouterPlan,
+    bank: &ExpertBank,
+    rx: Receiver<Job>,
+    done: Sender<Done>,
+) {
+    while let Ok(job) = rx.recv() {
+        // a panicking job must still answer, or the engine deadlocks
+        // waiting for this worker's Done (the panic message itself goes
+        // to stderr via the default hook)
+        let msg = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || run_job(plan, bank, slot, job),
+        ))
+        .unwrap_or(Done::Panicked { slot });
+        if done.send(msg).is_err() {
+            return;
+        }
+    }
+}
+
+/// A persistent serving engine: long-lived workers over one shared
+/// [`RouterPlan`] + [`ExpertBank`], running the full route → plan →
+/// expert FFN → combine path with zero per-batch thread spawns.
+/// Outputs are bit-identical to [`ServingEngine`](crate::router::ServingEngine) for every worker
+/// count (see the module docs).
+#[derive(Debug)]
+pub struct PoolEngine {
+    plan: Arc<RouterPlan>,
+    bank: Arc<ExpertBank>,
+    n_workers: usize,
+    workers: Vec<Worker>,
+    done_rx: Receiver<Done>,
+    shared: Arc<BatchShared>,
+    /// Worker scratch parked between jobs (slot `i` ↔ worker `i`, so
+    /// each worker's buffers stay warm for *its* shard sizes).
+    parked: Vec<Option<Box<Scratch>>>,
+    /// Caller-thread scratch for inline (small-batch) stages.
+    inline: Box<Scratch>,
+    bounds: Vec<usize>,
+    tracker: LoadTracker,
+    renormalize: bool,
+}
+
+impl std::fmt::Debug for Worker {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Worker")
+            .field("alive", &self.handle.is_some())
+            .finish()
+    }
+}
+
+impl PoolEngine {
+    /// Spawn `n_workers` (clamped to at least 1) persistent workers
+    /// over `plan` + `bank`. One worker still runs every stage inline
+    /// on the caller's thread, like the scoped engine.
+    pub fn new(
+        plan: RouterPlan,
+        bank: ExpertBank,
+        n_workers: usize,
+    ) -> PoolEngine {
+        assert_eq!(
+            plan.cfg.d_model, bank.d_model,
+            "expert bank d_model mismatch"
+        );
+        assert_eq!(
+            plan.cfg.n_experts, bank.n_experts,
+            "expert bank expert count mismatch"
+        );
+        let n_workers = n_workers.max(1);
+        let n_experts = plan.cfg.n_experts;
+        let plan = Arc::new(plan);
+        let bank = Arc::new(bank);
+        let (done_tx, done_rx) = channel();
+        let mut workers = Vec::with_capacity(n_workers);
+        for slot in 0..n_workers {
+            let (tx, rx) = channel::<Job>();
+            let (plan, bank) = (plan.clone(), bank.clone());
+            let done = done_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("lpr-pool-{slot}"))
+                .spawn(move || worker_loop(slot, &plan, &bank, rx, done))
+                .expect("spawn pool worker");
+            workers.push(Worker { tx: Some(tx), handle: Some(handle) });
+        }
+        PoolEngine {
+            parked: (0..n_workers).map(|_| Some(Box::default())).collect(),
+            inline: Box::default(),
+            bounds: Vec::new(),
+            shared: Arc::new(BatchShared::default()),
+            tracker: LoadTracker::new(DEFAULT_LOAD_WINDOW, n_experts),
+            plan,
+            bank,
+            n_workers,
+            workers,
+            done_rx,
+        }
+    }
+
+    pub fn plan(&self) -> &RouterPlan {
+        &self.plan
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.n_workers
+    }
+
+    /// Rolling balance of the batches this pool has routed.
+    pub fn tracker(&self) -> &LoadTracker {
+        &self.tracker
+    }
+
+    /// Enable/disable gate-weight renormalization for partially-dropped
+    /// tokens in the combine (`--renormalize`); off by default.
+    pub fn set_renormalize(&mut self, on: bool) {
+        self.renormalize = on;
+    }
+
+    /// Route `h` (`[N, d]` row-major) into `out` on the persistent
+    /// workers. Identical output to `ServingEngine::route_into` for
+    /// every worker count.
+    pub fn route_into(&mut self, h: &[f32], out: &mut RouterBatch) {
+        let d = self.plan.cfg.d_model;
+        assert_eq!(h.len() % d, 0, "h must be [N, {d}]");
+        let n = h.len() / d;
+        self.route_stage(h, n, out);
+        self.tracker.push(&out.load);
+    }
+
+    fn route_stage(&mut self, h: &[f32], n: usize, out: &mut RouterBatch) {
+        let d = self.plan.cfg.d_model;
+        let (e, k) = (self.plan.cfg.n_experts, self.plan.cfg.top_k);
+        // tiny batches: channel round-trips dominate, route inline
+        // (same threshold as the scoped engine)
+        if self.n_workers == 1 || n < 2 * self.n_workers {
+            self.plan.forward_into(h, &mut self.inline.buf, out);
+            return;
+        }
+        {
+            let shared = Arc::make_mut(&mut self.shared);
+            shared.h.clear();
+            shared.h.extend_from_slice(h);
+        }
+        for slot in 0..self.n_workers {
+            let scratch =
+                self.parked[slot].take().expect("worker scratch parked");
+            let job = Job::Route {
+                shared: self.shared.clone(),
+                span: shard_span(n, self.n_workers, slot),
+                scratch,
+            };
+            self.workers[slot]
+                .tx
+                .as_ref()
+                .expect("pool alive")
+                .send(job)
+                .expect("pool worker died");
+        }
+        for _ in 0..self.n_workers {
+            match self.done_rx.recv().expect("pool worker died") {
+                Done::Ok { slot, scratch, .. } => {
+                    self.parked[slot] = Some(scratch);
+                }
+                Done::Panicked { slot } => {
+                    // the job's scratch unwound with it; repark a fresh
+                    // one so a caller that catches this panic can keep
+                    // using the pool (the worker itself survived)
+                    self.parked[slot] = Some(Box::default());
+                    panic!("pool worker {slot} panicked while routing")
+                }
+            }
+        }
+        // deterministic merge in shard order, same step as the scoped
+        // engine
+        out.reset(n, k, e);
+        for slot in 0..self.n_workers {
+            let scratch =
+                self.parked[slot].as_ref().expect("scratch returned");
+            merge_route_shard(
+                out,
+                &scratch.out,
+                shard_span(n, self.n_workers, slot).start,
+            );
+        }
+    }
+
+    /// The full expert-parallel data path for one batch on the
+    /// persistent pool — the drop-in twin of
+    /// [`ServingEngine::forward_full`](crate::router::ServingEngine::forward_full) (the expert bank lives in the
+    /// pool, so it is not a parameter). Bit-identical to the scoped
+    /// path for every worker count.
+    pub fn forward_full(
+        &mut self,
+        h: &[f32],
+        capacity_factor: f64,
+        policy: OverflowPolicy,
+        out: &mut FullForward,
+    ) {
+        let d = self.plan.cfg.d_model;
+        let e = self.plan.cfg.n_experts;
+        assert_eq!(h.len() % d, 0, "h must be [N, {d}]");
+        let n = h.len() / d;
+        // 1. route (persistent workers, same shard/merge rule)
+        self.route_stage(h, n, &mut out.batch);
+        self.tracker.push(&out.batch.load);
+        // 2. compile + gather on the caller thread into the shared
+        // batch state, handing the caller a copy of the plan
+        {
+            let shared = Arc::make_mut(&mut self.shared);
+            let cap =
+                capacity_for(out.batch.topk_idx.len(), e, capacity_factor);
+            shared.plan.compile_batch(&out.batch, cap, policy);
+            gather_rows(&shared.plan, h, d, &mut shared.xg);
+            out.plan.copy_from(&shared.plan);
+        }
+        let kept = self.shared.plan.kept();
+        // 3. expert FFNs over contiguous per-expert ranges
+        out.y.clear();
+        out.y.resize(kept * d, 0.0);
+        let groups = self.n_workers.min(e).max(1);
+        if groups == 1 || kept < 2 * self.n_workers {
+            self.bank.forward_all(
+                &self.shared.plan,
+                &self.shared.xg,
+                &mut self.inline.hid,
+                &mut out.y,
+            );
+        } else {
+            expert_group_bounds(&self.shared.plan, groups, &mut self.bounds);
+            let mut outstanding = 0usize;
+            for g in 0..groups {
+                let (e0, e1) = (self.bounds[g], self.bounds[g + 1]);
+                let row0 = self.shared.plan.offsets[e0] as usize;
+                let row1 = self.shared.plan.offsets[e1] as usize;
+                if row1 == row0 {
+                    continue; // no rows in this group
+                }
+                let mut scratch =
+                    self.parked[g].take().expect("worker scratch parked");
+                scratch.y.clear();
+                scratch.y.resize((row1 - row0) * d, 0.0);
+                let job = Job::Experts {
+                    shared: self.shared.clone(),
+                    e0,
+                    e1,
+                    scratch,
+                };
+                self.workers[g]
+                    .tx
+                    .as_ref()
+                    .expect("pool alive")
+                    .send(job)
+                    .expect("pool worker died");
+                outstanding += 1;
+            }
+            // copy each group's rows into its fixed disjoint range;
+            // completion order is irrelevant to the result
+            for _ in 0..outstanding {
+                match self.done_rx.recv().expect("pool worker died") {
+                    Done::Ok { slot, row0, scratch } => {
+                        out.y[row0 * d..row0 * d + scratch.y.len()]
+                            .copy_from_slice(&scratch.y);
+                        self.parked[slot] = Some(scratch);
+                    }
+                    Done::Panicked { slot } => {
+                        self.parked[slot] = Some(Box::default());
+                        panic!(
+                            "pool worker {slot} panicked in expert \
+                             compute"
+                        )
+                    }
+                }
+            }
+        }
+        // 4. gate-weighted combine, fixed (token, slot) order
+        combine_rows_opts(
+            &self.shared.plan,
+            &out.batch.weights,
+            &out.y,
+            d,
+            self.renormalize,
+            &mut out.combined,
+        );
+    }
+}
+
+impl Drop for PoolEngine {
+    fn drop(&mut self) {
+        // close every job channel, then join — workers exit when their
+        // receiver disconnects
+        for w in &mut self.workers {
+            w.tx = None;
+        }
+        for w in &mut self.workers {
+            if let Some(h) = w.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::router::{synthetic_lpr_router, ServingEngine};
+    use crate::util::rng::Rng;
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    /// Acceptance: the pool's full forward is bit-identical to the
+    /// scoped-thread path for worker counts {1, 2, 3, 8}, across
+    /// metrics, batch sizes, and overflow policies.
+    #[test]
+    fn pool_forward_full_matches_scoped_engine() {
+        let mut rng = Rng::new(91);
+        let (d, dz, e, k, ff) = (16usize, 8, 8, 3, 12);
+        let bank = ExpertBank::new(&Rng::new(3), e, d, ff);
+        for metric in ["cosine", "kl"] {
+            let r = synthetic_lpr_router(metric, &mut rng, d, dz, e, k);
+            let plan = r.plan().clone();
+            for n in [5usize, 97] {
+                let h = rand_vec(&mut rng, n * d);
+                for policy in OverflowPolicy::ALL {
+                    let mut scoped = ServingEngine::new(plan.clone(), 1);
+                    let mut want = FullForward::new();
+                    scoped.forward_full(&h, &bank, 1.0, policy, &mut want);
+                    for workers in [1usize, 2, 3, 8] {
+                        let mut pool = PoolEngine::new(
+                            plan.clone(),
+                            bank.clone(),
+                            workers,
+                        );
+                        let mut got = FullForward::new();
+                        pool.forward_full(&h, 1.0, policy, &mut got);
+                        assert_eq!(
+                            got.combined, want.combined,
+                            "{metric}: n={n} w={workers} {} combined \
+                             diverged",
+                            policy.name()
+                        );
+                        assert_eq!(got.plan, want.plan);
+                        assert_eq!(got.batch, want.batch);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pool_route_matches_scoped_engine() {
+        let mut rng = Rng::new(19);
+        let (d, dz, e, k) = (16usize, 8, 6, 2);
+        let r = synthetic_lpr_router("xattn", &mut rng, d, dz, e, k);
+        let plan = r.plan().clone();
+        let bank = ExpertBank::new(&Rng::new(1), e, d, 8);
+        for n in [1usize, 7, 103] {
+            let h = rand_vec(&mut rng, n * d);
+            let mut scoped = ServingEngine::new(plan.clone(), 1);
+            let want = scoped.route(&h);
+            for workers in [1usize, 2, 3, 8] {
+                let mut pool =
+                    PoolEngine::new(plan.clone(), bank.clone(), workers);
+                let mut got = RouterBatch::new();
+                pool.route_into(&h, &mut got);
+                assert_eq!(got, want, "n={n} workers={workers}");
+                assert_eq!(pool.tracker().total_steps(), 1);
+            }
+        }
+    }
+
+    /// Renormalized combines go through the same pool path and stay
+    /// bit-identical to the scoped engine with the option on.
+    #[test]
+    fn pool_renormalize_matches_scoped_engine() {
+        let mut rng = Rng::new(37);
+        let (d, dz, e, k, ff, n) = (16usize, 8, 8, 3, 10, 64);
+        let r = synthetic_lpr_router("cosine", &mut rng, d, dz, e, k);
+        let bank = ExpertBank::new(&Rng::new(5), e, d, ff);
+        let h = rand_vec(&mut rng, n * d);
+        let mut scoped = ServingEngine::new(r.plan().clone(), 2);
+        scoped.set_renormalize(true);
+        let mut want = FullForward::new();
+        // cf=0.5 halves the total bin space, so drops are guaranteed
+        scoped.forward_full(
+            &h,
+            &bank,
+            0.5,
+            OverflowPolicy::Drop,
+            &mut want,
+        );
+        assert!(want.plan.n_dropped > 0, "cf=0.5 must drop");
+        let mut pool = PoolEngine::new(r.plan().clone(), bank, 3);
+        pool.set_renormalize(true);
+        let mut got = FullForward::new();
+        pool.forward_full(&h, 0.5, OverflowPolicy::Drop, &mut got);
+        assert_eq!(got.combined, want.combined);
+    }
+
+    /// Steady-state reuse: interleaved batch sizes through one pool
+    /// reproduce their first results exactly (buffers fully overwrite).
+    #[test]
+    fn pool_reuses_buffers_across_batches() {
+        let mut rng = Rng::new(53);
+        let (d, dz, e, k, ff) = (16usize, 8, 6, 2, 8);
+        let r = synthetic_lpr_router("gaussian", &mut rng, d, dz, e, k);
+        let bank = ExpertBank::new(&Rng::new(2), e, d, ff);
+        let mut pool = PoolEngine::new(r.plan().clone(), bank, 2);
+        let mut out = FullForward::new();
+        let h1 = rand_vec(&mut rng, 48 * d);
+        let h2 = rand_vec(&mut rng, 6 * d);
+        pool.forward_full(&h1, 1.25, OverflowPolicy::NextChoice, &mut out);
+        let first = out.combined.clone();
+        pool.forward_full(&h2, 1.25, OverflowPolicy::NextChoice, &mut out);
+        assert_eq!(out.combined.len(), 6 * d);
+        assert_eq!(out.plan.n, 6);
+        pool.forward_full(&h1, 1.25, OverflowPolicy::NextChoice, &mut out);
+        assert_eq!(out.combined, first);
+        assert_eq!(pool.tracker().total_steps(), 3);
+    }
+}

@@ -1,0 +1,354 @@
+//! Bounded submission queue + micro-batcher: the request front-end of
+//! the serving runtime.
+//!
+//! Requests are token groups (`[n, d]` activation rows). The queue is
+//! bounded in *tokens* (`capacity_tokens`): a submission that would
+//! overflow it is refused with [`SubmitError::Full`] — back-pressure,
+//! not silent buffering. Pending requests micro-batch FIFO:
+//!
+//! - a batch **flushes** when the pending tokens reach `max_batch`, or
+//!   when the oldest pending request has waited `max_wait` ticks
+//!   ([`BatchQueue::ready`]);
+//! - a flushed batch is the longest FIFO prefix of whole requests that
+//!   fits `max_batch` tokens — requests are never split and never
+//!   reordered, and their tokens stay contiguous and in submission
+//!   order inside the batch (property-tested below);
+//! - a request larger than `max_batch` could never flush, so `submit`
+//!   refuses it up front with [`SubmitError::TooLarge`].
+//!
+//! Time is a **virtual clock**: callers pass integer `now` ticks into
+//! `submit`/`ready`, so tests drive the batcher deterministically and
+//! the bench drivers map one tick to one microsecond. The queue itself
+//! never reads a wall clock.
+
+use std::collections::VecDeque;
+
+/// Why a submission was refused.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The queue is at `capacity_tokens`; retry after a flush.
+    Full,
+    /// The request alone exceeds `max_batch` tokens and can never
+    /// flush.
+    TooLarge,
+}
+
+/// One request's slice of a flushed batch: token rows
+/// `start..start + n_tokens` of the batch buffer belong to request
+/// `id`, in the request's own token order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchMember {
+    pub id: u64,
+    /// Submission tick.
+    pub arrival: u64,
+    /// First token row of this request inside the flushed batch.
+    pub start: usize,
+    pub n_tokens: usize,
+}
+
+#[derive(Debug)]
+struct Pending {
+    id: u64,
+    arrival: u64,
+    h: Vec<f32>,
+}
+
+/// The bounded FIFO micro-batcher. See the module docs for the flush
+/// rules and the virtual-clock contract.
+#[derive(Debug)]
+pub struct BatchQueue {
+    d: usize,
+    max_batch: usize,
+    max_wait: u64,
+    capacity_tokens: usize,
+    reqs: VecDeque<Pending>,
+    pending_tokens: usize,
+    next_id: u64,
+    /// Retired request buffers, reused by later submissions so the
+    /// steady-state queue allocates only when depth grows.
+    spares: Vec<Vec<f32>>,
+}
+
+impl BatchQueue {
+    /// `d` is the token width (`d_model`); `max_batch` the flush size
+    /// in tokens; `max_wait` the oldest-request age (ticks) that forces
+    /// a flush; `capacity_tokens` the submission bound.
+    pub fn new(
+        d: usize,
+        max_batch: usize,
+        max_wait: u64,
+        capacity_tokens: usize,
+    ) -> BatchQueue {
+        assert!(d >= 1, "token width must be >= 1");
+        assert!(max_batch >= 1, "max_batch must be >= 1");
+        assert!(
+            capacity_tokens >= max_batch,
+            "queue capacity below max_batch can never fill a batch"
+        );
+        BatchQueue {
+            d,
+            max_batch,
+            max_wait,
+            capacity_tokens,
+            reqs: VecDeque::new(),
+            pending_tokens: 0,
+            next_id: 0,
+            spares: Vec::new(),
+        }
+    }
+
+    /// Submit one request of `h.len() / d` tokens at tick `now`.
+    /// Returns the request id used in the matching
+    /// `serve::Completion`.
+    pub fn submit(&mut self, h: &[f32], now: u64) -> Result<u64, SubmitError> {
+        assert_eq!(h.len() % self.d, 0, "request must be [n, {}]", self.d);
+        let n = h.len() / self.d;
+        assert!(n > 0, "empty request");
+        if n > self.max_batch {
+            return Err(SubmitError::TooLarge);
+        }
+        if self.pending_tokens + n > self.capacity_tokens {
+            return Err(SubmitError::Full);
+        }
+        let mut buf = self.spares.pop().unwrap_or_default();
+        buf.clear();
+        buf.extend_from_slice(h);
+        let id = self.next_id;
+        self.next_id += 1;
+        self.reqs.push_back(Pending { id, arrival: now, h: buf });
+        self.pending_tokens += n;
+        Ok(id)
+    }
+
+    /// Whether a micro-batch should flush at tick `now`: pending tokens
+    /// reached `max_batch`, or the oldest request aged out.
+    pub fn ready(&self, now: u64) -> bool {
+        match self.reqs.front() {
+            None => false,
+            Some(front) => {
+                self.pending_tokens >= self.max_batch
+                    || now.saturating_sub(front.arrival) >= self.max_wait
+            }
+        }
+    }
+
+    /// Pop the next micro-batch: the longest FIFO prefix of whole
+    /// pending requests fitting `max_batch` tokens. `batch_h` receives
+    /// the concatenated `[tokens, d]` rows, `members` the per-request
+    /// slices (both cleared first). Always pops at least one request
+    /// when the queue is non-empty (every request fits `max_batch` by
+    /// the `submit` contract). Panics on an empty queue.
+    pub fn pop_batch(
+        &mut self,
+        batch_h: &mut Vec<f32>,
+        members: &mut Vec<BatchMember>,
+    ) {
+        assert!(!self.reqs.is_empty(), "pop_batch on an empty queue");
+        batch_h.clear();
+        members.clear();
+        let mut tokens = 0usize;
+        while let Some(front) = self.reqs.front() {
+            let n = front.h.len() / self.d;
+            if tokens + n > self.max_batch {
+                break;
+            }
+            let req = self.reqs.pop_front().unwrap();
+            members.push(BatchMember {
+                id: req.id,
+                arrival: req.arrival,
+                start: tokens,
+                n_tokens: n,
+            });
+            batch_h.extend_from_slice(&req.h);
+            tokens += n;
+            self.pending_tokens -= n;
+            self.spares.push(req.h);
+        }
+    }
+
+    /// Pending requests.
+    pub fn len(&self) -> usize {
+        self.reqs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.reqs.is_empty()
+    }
+
+    /// Pending tokens across all queued requests.
+    pub fn pending_tokens(&self) -> usize {
+        self.pending_tokens
+    }
+
+    /// Flush size in tokens.
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    /// Token `j` of request `id` carries a recognizable value per dim.
+    fn req_tokens(id: u64, n: usize, d: usize) -> Vec<f32> {
+        (0..n * d)
+            .map(|i| {
+                let (j, c) = (i / d, i % d);
+                (id * 1000 + j as u64 * 8 + c as u64) as f32
+            })
+            .collect()
+    }
+
+    #[test]
+    fn flushes_on_max_batch_or_max_wait() {
+        let mut q = BatchQueue::new(2, 4, 10, 64);
+        let id0 = q.submit(&req_tokens(0, 2, 2), 100).unwrap();
+        assert_eq!(id0, 0);
+        assert!(!q.ready(100), "2 of 4 tokens, no wait yet");
+        assert!(!q.ready(109), "age 9 < max_wait 10");
+        assert!(q.ready(110), "oldest aged out");
+        // a second request tips pending over max_batch -> size flush
+        q.submit(&req_tokens(1, 3, 2), 101).unwrap();
+        assert!(q.ready(101));
+        let (mut h, mut m) = (Vec::new(), Vec::new());
+        q.pop_batch(&mut h, &mut m);
+        // only request 0 fits (2 + 3 > 4): requests are never split
+        assert_eq!(m.len(), 1);
+        assert_eq!(m[0].id, 0);
+        assert_eq!(m[0].start, 0);
+        assert_eq!(m[0].n_tokens, 2);
+        assert_eq!(h, req_tokens(0, 2, 2));
+        assert_eq!(q.pending_tokens(), 3);
+        // the leftover request still flushes by age
+        assert!(!q.ready(101));
+        assert!(q.ready(111));
+    }
+
+    #[test]
+    fn bounded_queue_backpressure_and_too_large() {
+        let mut q = BatchQueue::new(1, 4, 5, 6);
+        assert_eq!(q.submit(&[0.0; 8], 0), Err(SubmitError::TooLarge));
+        q.submit(&[0.0; 4], 0).unwrap();
+        q.submit(&[0.0; 2], 0).unwrap();
+        // 6 of 6 tokens pending: the next submission is refused
+        assert_eq!(q.submit(&[0.0; 1], 0), Err(SubmitError::Full));
+        let (mut h, mut m) = (Vec::new(), Vec::new());
+        q.pop_batch(&mut h, &mut m);
+        assert_eq!(m.len(), 1); // the 4-token request fills max_batch
+        // capacity released: submissions succeed again
+        q.submit(&[0.0; 4], 1).unwrap();
+        assert_eq!(q.pending_tokens(), 6);
+    }
+
+    /// Satellite property: the micro-batcher never exceeds `max_batch`
+    /// and never reorders tokens within a request (requests stay whole,
+    /// contiguous, FIFO, with their token rows in submission order).
+    #[test]
+    fn batches_bounded_and_order_preserving() {
+        forall(
+            40,
+            2027,
+            |rng| {
+                let d = 1 + rng.below(3);
+                let max_batch = 1 + rng.below(12);
+                let cap = max_batch * (1 + rng.below(3));
+                let n_reqs = 1 + rng.below(20);
+                let sizes: Vec<usize> = (0..n_reqs)
+                    .map(|_| 1 + rng.below(max_batch))
+                    .collect();
+                (d, max_batch, cap, sizes)
+            },
+            |(d, max_batch, cap, sizes)| {
+                let mut q = BatchQueue::new(*d, *max_batch, 3, *cap);
+                let mut accepted: Vec<(u64, usize)> = Vec::new();
+                let mut popped: Vec<u64> = Vec::new();
+                let (mut h, mut m) = (Vec::new(), Vec::new());
+                let drain =
+                    |q: &mut BatchQueue,
+                     popped: &mut Vec<u64>,
+                     h: &mut Vec<f32>,
+                     m: &mut Vec<BatchMember>,
+                     now: u64,
+                     all: bool|
+                     -> Result<(), String> {
+                        loop {
+                            let due = if all {
+                                !q.is_empty()
+                            } else {
+                                q.ready(now)
+                            };
+                            if !due {
+                                break;
+                            }
+                            q.pop_batch(h, m);
+                            let tokens: usize =
+                                m.iter().map(|x| x.n_tokens).sum();
+                            if tokens > *max_batch {
+                                return Err(format!(
+                                    "batch of {tokens} > max_batch \
+                                     {max_batch}"
+                                ));
+                            }
+                            let mut next_start = 0usize;
+                            for mem in m.iter() {
+                                if mem.start != next_start {
+                                    return Err(
+                                        "request rows not contiguous"
+                                            .into(),
+                                    );
+                                }
+                                next_start += mem.n_tokens;
+                                let want = req_tokens(
+                                    mem.id,
+                                    mem.n_tokens,
+                                    *d,
+                                );
+                                let got = &h[mem.start * d
+                                    ..(mem.start + mem.n_tokens) * d];
+                                if got != &want[..] {
+                                    return Err(format!(
+                                        "request {} tokens reordered",
+                                        mem.id
+                                    ));
+                                }
+                                popped.push(mem.id);
+                            }
+                        }
+                        Ok(())
+                    };
+                for (i, &n) in sizes.iter().enumerate() {
+                    let now = i as u64;
+                    match q.submit(&req_tokens(i as u64, n, *d), now) {
+                        Ok(id) => accepted.push((id, n)),
+                        Err(SubmitError::Full) => {
+                            // drain and retry once — must then fit
+                            drain(
+                                &mut q, &mut popped, &mut h, &mut m,
+                                now, true,
+                            )?;
+                            let id = q
+                                .submit(&req_tokens(i as u64, n, *d), now)
+                                .map_err(|e| format!("{e:?} after drain"))?;
+                            accepted.push((id, n));
+                        }
+                        Err(e) => return Err(format!("{e:?}")),
+                    }
+                    drain(&mut q, &mut popped, &mut h, &mut m, now, false)?;
+                }
+                let end = sizes.len() as u64;
+                drain(&mut q, &mut popped, &mut h, &mut m, end, true)?;
+                // every accepted request flushed exactly once, FIFO
+                let want: Vec<u64> =
+                    accepted.iter().map(|&(id, _)| id).collect();
+                if popped != want {
+                    return Err(format!(
+                        "flush order {popped:?} != submit order {want:?}"
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -136,9 +136,38 @@ impl Bench {
     }
 }
 
+/// Write pre-formatted JSON objects as a pretty-printed array — the
+/// shared emitter behind every `BENCH_*.json` perf artifact
+/// (`benches/micro.rs` and the `serve-bench` CLI).
+pub fn write_json_rows(path: &str, rows: &[String]) -> std::io::Result<()> {
+    let mut s = String::from("[\n");
+    for (i, r) in rows.iter().enumerate() {
+        let sep = if i + 1 == rows.len() { "" } else { "," };
+        s.push_str(&format!("  {r}{sep}\n"));
+    }
+    s.push_str("]\n");
+    std::fs::write(path, s)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn json_rows_render_as_array() {
+        let p = std::env::temp_dir().join("lpr-bench-rows.json");
+        let path = p.to_str().unwrap();
+        write_json_rows(
+            path,
+            &["{\"a\": 1}".to_string(), "{\"b\": 2}".to_string()],
+        )
+        .unwrap();
+        let s = std::fs::read_to_string(path).unwrap();
+        assert_eq!(s, "[\n  {\"a\": 1},\n  {\"b\": 2}\n]\n");
+        // parses back with the in-tree JSON parser
+        assert!(crate::util::json::Json::parse(&s).is_ok());
+        let _ = std::fs::remove_file(path);
+    }
 
     #[test]
     fn times_a_closure() {
