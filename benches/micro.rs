@@ -7,9 +7,11 @@
 //! `results/bench.csv`; the routing sweep is also written as
 //! machine-readable JSON to `BENCH_router.json`, the dispatch-plan /
 //! full expert-forward sweep — scoped *and* persistent-pool — to
-//! `BENCH_dispatch.json`, and the serving-runtime arrival sweep to
-//! `BENCH_serve.json`, so the perf trajectory is trackable across
-//! PRs). Set `LPR_BENCH_FAST=1` for a short smoke run (CI).
+//! `BENCH_dispatch.json`, the serving-runtime arrival sweep to
+//! `BENCH_serve.json`, and the stacked-model forward sweep — scoped
+//! `ModelEngine` vs the persistent pool's `forward_model`, layers
+//! {1, 4} — to `BENCH_model.json`, so the perf trajectory is trackable
+//! across PRs). Set `LPR_BENCH_FAST=1` for a short smoke run (CI).
 
 use lpr::data::{Batcher, MixtureStream, ZipfMarkovCorpus};
 use lpr::dispatch::{
@@ -18,6 +20,7 @@ use lpr::dispatch::{
 };
 use lpr::experts::ExpertBank;
 use lpr::metrics::{gini, min_max_ratio};
+use lpr::model::{synthetic_stacked_model, ModelEngine, ModelForward};
 use lpr::router::linalg::matmul;
 use lpr::router::{
     synthetic_lpr_router, FullForward, RouteBuffers, Router, RouterBatch,
@@ -434,6 +437,98 @@ fn main() {
             }
         }
         write_rows_or_warn("BENCH_serve.json", &serve_rows);
+    }
+
+    // ---- stacked model forward: scoped ModelEngine vs persistent
+    // pool, layers {1, 4} x workers {1, 4}, emitted as
+    // BENCH_model.json (route -> plan -> FFN -> combine -> residual,
+    // per layer) ----
+    {
+        let (md, mdz, me, mk, mff, mn) =
+            (32usize, 16usize, 32usize, 4usize, 64usize, 512usize);
+        let mut model_rows: Vec<String> = Vec::new();
+        let mut push_row = |name: &str,
+                            layers: usize,
+                            workers: usize,
+                            ns_per_token: f64| {
+            model_rows.push(format!(
+                "{{\"name\": \"{name}\", \"layers\": {layers}, \
+                 \"n\": {mn}, \"d\": {md}, \"d_ff\": {mff}, \
+                 \"E\": {me}, \"k\": {mk}, \"workers\": {workers}, \
+                 \"ns_per_token\": {ns_per_token:.2}}}"
+            ));
+        };
+        for n_layers in [1usize, 4] {
+            let model = synthetic_stacked_model(
+                "cosine",
+                &Rng::new(2025),
+                n_layers,
+                md,
+                mdz,
+                me,
+                mk,
+                mff,
+            );
+            let mut rng = Rng::new(7);
+            let mix = MixtureStream::skewed(&mut rng, md, 1.6);
+            let mut hm = Vec::new();
+            mix.fill(&mut rng, mn, &mut hm);
+            for workers in [1usize, 4] {
+                if workers > cores {
+                    continue;
+                }
+                let mut eng = ModelEngine::new(model.clone(), workers);
+                let mut out = ModelForward::new();
+                let res = b.run_items(
+                    &format!(
+                        "model_forward/scoped/L{n_layers}/t{workers}/\
+                         {mn}tok"
+                    ),
+                    mn as f64,
+                    &mut || {
+                        eng.forward(
+                            std::hint::black_box(&hm),
+                            1.25,
+                            OverflowPolicy::Drop,
+                            &mut out,
+                        );
+                        std::hint::black_box(&out);
+                    },
+                );
+                push_row(
+                    &format!("model_forward/scoped/L{n_layers}"),
+                    n_layers,
+                    workers,
+                    res.per_item_ns(),
+                );
+                let mut pool =
+                    PoolEngine::from_model(model.clone(), workers);
+                let mut pout = ModelForward::new();
+                let res = b.run_items(
+                    &format!(
+                        "model_forward/pool/L{n_layers}/t{workers}/\
+                         {mn}tok"
+                    ),
+                    mn as f64,
+                    &mut || {
+                        pool.forward_model(
+                            std::hint::black_box(&hm),
+                            1.25,
+                            OverflowPolicy::Drop,
+                            &mut pout,
+                        );
+                        std::hint::black_box(&pout);
+                    },
+                );
+                push_row(
+                    &format!("model_forward/pool/L{n_layers}"),
+                    n_layers,
+                    workers,
+                    res.per_item_ns(),
+                );
+            }
+        }
+        write_rows_or_warn("BENCH_model.json", &model_rows);
     }
 
     // ---- dispatch simulator ----

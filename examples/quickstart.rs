@@ -28,7 +28,7 @@ fn main() -> Result<()> {
     let mut trainer = Trainer::new(&rt, &arts, 0, None)?;
     let mut corpus = ZipfMarkovCorpus::standard(cfg.vocab, 1);
     let steps = cfg.total_steps;
-    let loss_idx = arts.meta.metric_idx("loss");
+    let loss_idx = arts.meta.metric_idx("loss")?;
     trainer.train_synthetic(&mut corpus, steps, |m| {
         if m.step % 10 == 0 || m.step + 1 == steps {
             println!("step {:>3}/{steps}  loss {:.4}", m.step,

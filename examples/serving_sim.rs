@@ -26,6 +26,12 @@
 //! saturation the latency percentiles hug the batch service time;
 //! past it, queueing delay takes over and p99 runs away.
 //!
+//! Part 5 serves a **whole model stack**: an L=4 LPR model (the shape
+//! the trainer trains — per-layer routers and expert banks) through
+//! the layered simulator and the persistent-pool runtime, reporting
+//! balance *per layer* exactly as the paper plots it — one imbalanced
+//! layer stalls the whole stack under the sequential straggler model.
+//!
 //! Run: `cargo run --release --example serving_sim`
 
 use lpr::data::MixtureStream;
@@ -34,6 +40,9 @@ use lpr::dispatch::{
     DispatchSim, OverflowPolicy, SimConfig,
 };
 use lpr::experts::ExpertBank;
+use lpr::model::{
+    run_model_steps, synthetic_stacked_model, ModelEngine, ModelForward,
+};
 use lpr::router::{synthetic_lpr_router, FullForward, ServingEngine};
 use lpr::serve::{
     measure_service_rate, run_open_loop, PoolEngine, ServeConfig,
@@ -273,5 +282,67 @@ fn main() {
          request stream into full batches — below\nsaturation p50 sits \
          near the batch service time; past it, queueing delay\n\
          dominates the tail exactly as the queueing model predicts."
+    );
+
+    // ---- part 5: whole model stack — L=4 per-layer routers + expert
+    // banks through the layered simulator, balance resolved per layer
+    let (n_layers, md, mdz, me, mk, mff) =
+        (4usize, 32usize, 16usize, 32usize, 4usize, 64usize);
+    let model = synthetic_stacked_model(
+        "cosine",
+        &Rng::new(2025),
+        n_layers,
+        md,
+        mdz,
+        me,
+        mk,
+        mff,
+    );
+    let mut engine = ModelEngine::new(model.clone(), threads.min(4));
+    let mut sim = DispatchSim::new_layered(
+        SimConfig {
+            n_experts: me,
+            top_k: mk,
+            capacity_factor: 1.25,
+            ..base.clone()
+        },
+        n_layers,
+    );
+    let mut rng = Rng::new(2025);
+    let mix = MixtureStream::skewed(&mut rng, md, 1.6);
+    let mut mf = ModelForward::new();
+    let fwd_ns = run_model_steps(
+        &mut engine, &mix, &mut rng, &mut sim, 50, 1024,
+        OverflowPolicy::Drop, &mut mf,
+    );
+    let r = sim.report();
+    println!(
+        "\nmodel serving: {n_layers}-layer LPR stack ({me} experts \
+         top-{mk}), stacked forward {:.0} ns/token,\nstep latency = sum \
+         of per-layer stragglers (p99 {:.0} us)",
+        fwd_ns as f64 / (50.0 * 1024.0),
+        r.latency_p99_us
+    );
+    println!("{:<7} {:>9} {:>9} {:>9}", "layer", "win-GINI", "min-max", "cv");
+    for lb in &r.layers {
+        println!(
+            "L{:<6} {:>9.4} {:>9.4} {:>9.3}",
+            lb.layer, lb.gini, lb.min_max, lb.cv
+        );
+    }
+    // the pool serves the identical stack bit-for-bit
+    let mut pool = PoolEngine::from_model(model, 2);
+    let mut pf = ModelForward::new();
+    let mut h = Vec::new();
+    mix.fill(&mut rng, 256, &mut h);
+    engine.forward(&h, 1.25, OverflowPolicy::Drop, &mut mf);
+    pool.forward_model(&h, 1.25, OverflowPolicy::Drop, &mut pf);
+    assert_eq!(mf.hidden, pf.hidden);
+    println!(
+        "\nreading: per-layer balance is what the paper's per-layer \
+         plots measure; the\npersistent pool serves the identical stack \
+         bit-for-bit (asserted above) with\nno per-batch thread spawns \
+         — `lpr serve --ckpt` runs this path on real\ntraining \
+         checkpoints via the pure-Rust bridge."
     );
 }

@@ -36,8 +36,8 @@ fn run_one(
 
     let mut trainer = Trainer::new(rt, &arts, 0, None)?;
     let mut corpus = ZipfMarkovCorpus::standard(cfg.vocab, 1);
-    let loss_idx = arts.meta.metric_idx("loss");
-    let drop_idx = arts.meta.metric_idx("drop_frac");
+    let loss_idx = arts.meta.metric_idx("loss")?;
+    let drop_idx = arts.meta.metric_idx("drop_frac")?;
 
     // balance trajectory: gini of the last-layer load each step
     let (l, e) = arts.meta.load_shape;

@@ -115,7 +115,7 @@ pub fn execute_run_arts(
     );
 
     let t0 = Instant::now();
-    let loss_idx = meta.metric_idx("loss");
+    let loss_idx = meta.metric_idx("loss")?;
     let mut loss_curve = Vec::with_capacity(steps);
     trainer.train_synthetic(&mut corpus, steps, |m| {
         loss_curve.push(m.values[loss_idx]);

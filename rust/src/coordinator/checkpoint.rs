@@ -16,6 +16,21 @@ pub struct Checkpoint {
     pub buffers: Vec<Vec<f32>>,
 }
 
+impl Checkpoint {
+    /// Reject a checkpoint saved for a different artifact — the shared
+    /// guard behind `lpr eval/route/serve --ckpt` and the
+    /// `model::bridge` checkpoint path.
+    pub fn expect_artifact(&self, name: &str) -> Result<()> {
+        if self.artifact != name {
+            bail!(
+                "checkpoint is for artifact '{}', not '{name}'",
+                self.artifact
+            );
+        }
+        Ok(())
+    }
+}
+
 pub fn save(path: &Path, artifact: &str, step: usize, buffers: &[Vec<f32>]) -> Result<()> {
     let header = obj(vec![
         ("artifact", Json::Str(artifact.to_string())),
@@ -51,15 +66,55 @@ pub fn load(path: &Path) -> Result<Checkpoint> {
         bail!("not an LPR checkpoint: bad magic");
     }
     let mut len8 = [0u8; 8];
-    f.read_exact(&mut len8)?;
+    f.read_exact(&mut len8)
+        .context("checkpoint header length truncated")?;
     let hlen = u64::from_le_bytes(len8) as usize;
+    // a corrupt length would otherwise drive a multi-GB allocation
+    if hlen > 1 << 20 {
+        bail!("implausible checkpoint header length ({hlen} bytes)");
+    }
     let mut hbytes = vec![0u8; hlen];
-    f.read_exact(&mut hbytes)?;
+    f.read_exact(&mut hbytes).context("checkpoint header truncated")?;
     let header = Json::parse(std::str::from_utf8(&hbytes)?)
         .context("checkpoint header")?;
-    let artifact = header.at("artifact").as_str().unwrap().to_string();
-    let step = header.at("step").as_usize().unwrap();
-    let lens = header.at("lens").as_usize_vec();
+    // header fields parse to Results (a truncated/garbage header is an
+    // IO-shaped failure, not a programmer error)
+    let artifact = header
+        .get("artifact")
+        .and_then(Json::as_str)
+        .context("checkpoint header: missing artifact name")?
+        .to_string();
+    let step = header
+        .get("step")
+        .and_then(Json::as_usize)
+        .context("checkpoint header: missing step")?;
+    let lens: Vec<usize> = header
+        .get("lens")
+        .and_then(Json::as_arr)
+        .context("checkpoint header: missing buffer lengths")?
+        .iter()
+        .map(|x| x.as_usize().context("checkpoint header: bad length"))
+        .collect::<Result<_>>()?;
+    // every buffer length must fit the file that claims it — a corrupt
+    // `lens` entry must not drive a huge allocation (or a silent
+    // `len * 4` overflow) any more than a corrupt header length may
+    let payload_bytes = f
+        .metadata()
+        .with_context(|| format!("stat {}", path.display()))?
+        .len()
+        .saturating_sub(16 + hlen as u64);
+    let mut claimed = 0u64;
+    for &len in &lens {
+        claimed = claimed.saturating_add(
+            u64::try_from(len).unwrap_or(u64::MAX).saturating_mul(4),
+        );
+    }
+    if claimed > payload_bytes {
+        bail!(
+            "checkpoint payload truncated: header claims {claimed} \
+             bytes, file holds {payload_bytes}"
+        );
+    }
     let mut buffers = Vec::with_capacity(lens.len());
     for len in lens {
         let mut bytes = vec![0u8; len * 4];
@@ -98,6 +153,104 @@ mod tests {
         let path = dir.join("bad.ckpt");
         std::fs::write(&path, b"not a checkpoint at all").unwrap();
         assert!(load(&path).is_err());
+    }
+
+    /// Satellite: golden round-trip — extreme/bit-exact f32 values
+    /// (denormals, infinities, NaN payloads, signed zero) survive the
+    /// explicit little-endian encoding bit-for-bit.
+    #[test]
+    fn golden_roundtrip_is_bit_exact() {
+        let dir = std::env::temp_dir().join("lpr-ckpt-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("golden.ckpt");
+        let golden: Vec<f32> = vec![
+            0.0,
+            -0.0,
+            1.0,
+            -1.5,
+            f32::MIN_POSITIVE,
+            f32::MIN_POSITIVE / 2.0, // subnormal
+            f32::MAX,
+            f32::MIN,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::from_bits(0x7fc0_dead), // NaN with payload
+            std::f32::consts::PI,
+        ];
+        save(&path, "golden-art", 123, &[golden.clone(), vec![2.5; 3]])
+            .unwrap();
+        let ck = load(&path).unwrap();
+        assert_eq!(ck.artifact, "golden-art");
+        assert_eq!(ck.step, 123);
+        assert_eq!(ck.buffers.len(), 2);
+        // bit-for-bit, not float-compare (NaN != NaN under PartialEq)
+        let got: Vec<u32> =
+            ck.buffers[0].iter().map(|v| v.to_bits()).collect();
+        let want: Vec<u32> = golden.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got, want);
+        assert_eq!(ck.buffers[1], vec![2.5; 3]);
+    }
+
+    /// Satellite: a checkpoint truncated mid-payload (or mid-header) is
+    /// rejected with a truncation error, never a short silent read.
+    #[test]
+    fn truncated_checkpoint_is_rejected() {
+        let dir = std::env::temp_dir().join("lpr-ckpt-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trunc.ckpt");
+        save(&path, "t", 7, &[vec![1.0f32; 64], vec![2.0f32; 64]]).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        // drop the tail of the payload
+        let cut = dir.join("cut.ckpt");
+        std::fs::write(&cut, &full[..full.len() - 17]).unwrap();
+        let err = load(&cut).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("truncated"),
+            "payload cut: {err:#}"
+        );
+        // cut inside the JSON header
+        std::fs::write(&cut, &full[..20]).unwrap();
+        let err = load(&cut).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("header"),
+            "header cut: {err:#}"
+        );
+        // a corrupt header length must not drive a huge allocation
+        let mut bad = full.clone();
+        bad[8..16].copy_from_slice(&u64::MAX.to_le_bytes());
+        std::fs::write(&cut, &bad).unwrap();
+        let err = load(&cut).unwrap_err();
+        assert!(format!("{err:#}").contains("implausible"), "{err:#}");
+        // ... and neither must a corrupt per-buffer length: a valid
+        // small header claiming a multi-TB buffer is rejected up front
+        // (checked against the file size), never allocated
+        let huge = dir.join("huge-lens.ckpt");
+        let header = r#"{"artifact":"t","lens":[1099511627776],"step":1}"#;
+        let mut buf = Vec::new();
+        buf.extend_from_slice(b"LPRCKPT1");
+        buf.extend_from_slice(&(header.len() as u64).to_le_bytes());
+        buf.extend_from_slice(header.as_bytes());
+        buf.extend_from_slice(&[0u8; 64]);
+        std::fs::write(&huge, &buf).unwrap();
+        let err = load(&huge).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("truncated"),
+            "huge lens: {err:#}"
+        );
+    }
+
+    /// Satellite: wrong-artifact-name rejection via the shared guard.
+    #[test]
+    fn wrong_artifact_name_is_rejected() {
+        let dir = std::env::temp_dir().join("lpr-ckpt-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("named.ckpt");
+        save(&path, "preset-a", 1, &[vec![1.0f32]]).unwrap();
+        let ck = load(&path).unwrap();
+        assert!(ck.expect_artifact("preset-a").is_ok());
+        let err = ck.expect_artifact("preset-b").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("preset-a") && msg.contains("preset-b"), "{msg}");
     }
 
     #[test]

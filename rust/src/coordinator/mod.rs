@@ -26,9 +26,55 @@ pub struct StepMetrics {
 }
 
 impl StepMetrics {
-    pub fn get(&self, meta: &crate::runtime::ArtifactMeta, name: &str) -> f32 {
-        self.values[meta.metric_idx(name)]
+    pub fn get(
+        &self,
+        meta: &crate::runtime::ArtifactMeta,
+        name: &str,
+    ) -> Result<f32> {
+        Ok(self.values[meta.metric_idx(name)?])
     }
+}
+
+/// Which Adam-state segment a flat state-buffer index belongs to.
+fn state_segment(i: usize, n_params: usize) -> &'static str {
+    match i / n_params {
+        0 => "param",
+        1 => "adam-m",
+        _ => "adam-v",
+    }
+}
+
+/// Validate a full host state (params + Adam moments) against the
+/// artifact's leaf specs — every buffer must match its leaf's element
+/// count. Errors name the leaf *and* the state segment: buffer
+/// `i >= n_params` is an Adam moment of `params[i % n_params]`, and the
+/// old message labeled it as the parameter itself, pointing debugging
+/// at the wrong buffer. Pure host-side, so it is testable (and usable)
+/// without a PJRT runtime.
+pub fn validate_state_shapes(
+    meta: &crate::runtime::ArtifactMeta,
+    host: &[Vec<f32>],
+) -> Result<()> {
+    if host.len() != meta.n_state {
+        bail!(
+            "checkpoint has {} buffers, want {}",
+            host.len(),
+            meta.n_state
+        );
+    }
+    for (i, data) in host.iter().enumerate() {
+        let spec = &meta.params[i % meta.n_params];
+        if data.len() != spec.numel() {
+            bail!(
+                "state buffer {i} ({} of {}) has {} elems, want {}",
+                state_segment(i, meta.n_params),
+                spec.path,
+                data.len(),
+                spec.numel()
+            );
+        }
+    }
+    Ok(())
 }
 
 /// Device-resident trainer for one artifact set.
@@ -210,22 +256,14 @@ impl<'a> Trainer<'a> {
     }
 
     /// Restore full state from host vectors (checkpoint resume).
+    /// Shape validation (with Adam-moment-aware error labels) runs
+    /// before any device upload — see [`validate_state_shapes`].
     pub fn state_from_host(&mut self, host: &[Vec<f32>]) -> Result<()> {
         let meta = &self.arts.meta;
-        if host.len() != meta.n_state {
-            bail!("checkpoint has {} buffers, want {}", host.len(), meta.n_state);
-        }
+        validate_state_shapes(meta, host)?;
         let mut bufs = Vec::with_capacity(host.len());
         for (i, data) in host.iter().enumerate() {
             let spec = &meta.params[i % meta.n_params];
-            if data.len() != spec.numel() {
-                bail!(
-                    "buffer {i} ({}) has {} elems, want {}",
-                    spec.path,
-                    data.len(),
-                    spec.numel()
-                );
-            }
             bufs.push(self.rt.buf_f32(data, &spec.shape)?);
         }
         self.state = bufs;
@@ -254,4 +292,52 @@ pub struct EvalResult {
     pub loss: f64,
     pub drop_frac: f64,
     pub load: LoadMatrix,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::bridge::synth_checkpoint_artifact;
+
+    /// Satellite regression: shape errors label Adam-moment buffers as
+    /// such. The old message reported the *param* path alone for
+    /// moment buffers (`meta.params[i % n_params]`), pointing debugging
+    /// at the wrong buffer when a moment was truncated.
+    #[test]
+    fn state_validation_labels_adam_moments() {
+        let (meta, mut state) =
+            synth_checkpoint_artifact("t", "cosine", 2, 8, 4, 4, 2, 6, 3)
+                .unwrap();
+        assert!(validate_state_shapes(&meta, &state).is_ok());
+
+        // corrupt the first adam-m buffer (index n_params)
+        let i = meta.n_params;
+        state[i] = vec![0.0; 1];
+        let err = validate_state_shapes(&meta, &state).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("adam-m"), "{msg}");
+        assert!(msg.contains(&meta.params[0].path), "{msg}");
+        assert!(msg.contains(&format!("buffer {i}")), "{msg}");
+
+        // corrupt an adam-v buffer too
+        state[i] = vec![0.0; meta.params[0].numel()];
+        let j = 2 * meta.n_params + 1;
+        state[j] = vec![0.0; 1];
+        let err = validate_state_shapes(&meta, &state).unwrap_err();
+        assert!(format!("{err:#}").contains("adam-v"));
+
+        // wrong buffer count still rejected
+        state.truncate(meta.n_params);
+        assert!(validate_state_shapes(&meta, &state).is_err());
+    }
+
+    #[test]
+    fn state_segments_partition_the_flat_index() {
+        assert_eq!(state_segment(0, 4), "param");
+        assert_eq!(state_segment(3, 4), "param");
+        assert_eq!(state_segment(4, 4), "adam-m");
+        assert_eq!(state_segment(7, 4), "adam-m");
+        assert_eq!(state_segment(8, 4), "adam-v");
+        assert_eq!(state_segment(11, 4), "adam-v");
+    }
 }

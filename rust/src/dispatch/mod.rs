@@ -29,7 +29,8 @@ pub use plan::{capacity_for, DispatchPlan, OverflowPolicy, DROPPED};
 use crate::data::MixtureStream;
 use crate::experts::ExpertBank;
 use crate::metrics::{
-    gini, min_max_ratio, percentile_nearest_rank, LoadTracker,
+    gini, min_max_ratio, percentile_nearest_rank, LayerBalance,
+    LayerLoadTracker, LoadTracker,
 };
 use crate::router::{FullForward, RouterBatch, ServingEngine};
 use crate::util::rng::Rng;
@@ -85,6 +86,11 @@ pub struct SimReport {
     pub window_gini: f64,
     pub window_min_max: f64,
     pub window_cv: f64,
+    /// Layer-resolved rolling balance (`[L, E]` tracking) for layered
+    /// sims ([`DispatchSim::new_layered`] + [`DispatchSim::step_model`]);
+    /// empty for single-layer sims. The flat `window_*` fields then
+    /// cover the load summed over layers.
+    pub layers: Vec<LayerBalance>,
 }
 
 /// A stream of per-step routing decisions: each step is a flat `[N·k]`
@@ -97,6 +103,9 @@ pub struct DispatchSim {
     pub expert_load: Vec<f64>,
     /// Rolling routed-load window shared with the report.
     pub tracker: LoadTracker,
+    /// Layer-resolved rolling windows, present on layered sims
+    /// ([`DispatchSim::new_layered`]).
+    layer_tracker: Option<LayerLoadTracker>,
     latencies_us: Vec<f64>,
     busy_us: f64,
     wall_us: f64,
@@ -118,6 +127,7 @@ impl DispatchSim {
         DispatchSim {
             expert_load: vec![0.0; cfg.n_experts],
             tracker: LoadTracker::new(Self::LOAD_WINDOW, cfg.n_experts),
+            layer_tracker: None,
             expert_device,
             latencies_us: Vec::new(),
             busy_us: 0.0,
@@ -128,6 +138,96 @@ impl DispatchSim {
             steps: 0,
             cfg,
         }
+    }
+
+    /// A sim that additionally resolves balance **per layer** of an
+    /// `n_layers` model stack: [`Self::step_model`] accounts one
+    /// stacked serving step (every layer's dispatch plan), the rolling
+    /// `[L, E]` windows land in [`SimReport::layers`], and the flat
+    /// fields cover the load summed over layers. Every layer must share
+    /// this config's expert count (the bridge-built stacks do).
+    pub fn new_layered(cfg: SimConfig, n_layers: usize) -> Self {
+        let n_experts = cfg.n_experts;
+        let mut sim = DispatchSim::new(cfg);
+        sim.layer_tracker = Some(LayerLoadTracker::new(
+            n_layers,
+            Self::LOAD_WINDOW,
+            n_experts,
+        ));
+        sim
+    }
+
+    /// Account one **stacked** serving step from the per-layer plans of
+    /// a model forward (`&model_forward.layers`). The latency model
+    /// composes sequentially, matching the residual pipeline: each
+    /// layer's step time is its straggler device (`alpha + beta ·
+    /// tokens`), and the batch's latency is the **sum over layers** —
+    /// layer ℓ+1 cannot start until ℓ's slowest device finishes, so one
+    /// imbalanced layer stalls the whole stack. Requires
+    /// [`Self::new_layered`] with a matching layer count.
+    pub fn step_model(&mut self, layers: &[FullForward]) {
+        let e = self.cfg.n_experts;
+        {
+            let lt = self
+                .layer_tracker
+                .as_ref()
+                .expect("step_model needs DispatchSim::new_layered");
+            assert_eq!(
+                lt.n_layers(),
+                layers.len(),
+                "sim layer count mismatch"
+            );
+        }
+        let mut step_latency = 0.0f64;
+        let mut busy = 0.0f64;
+        let mut routed_total = vec![0u32; e];
+        let (mut n_assign, mut dropped, mut rerouted) = (0usize, 0, 0);
+        let mut per_device = vec![0u32; self.cfg.n_devices];
+        for (l, ff) in layers.iter().enumerate() {
+            let plan = &ff.plan;
+            assert_eq!(
+                plan.n_experts, e,
+                "layer {l} expert count differs from the sim config"
+            );
+            let layer_assign = plan.n * plan.top_k;
+            assert_eq!(
+                plan.capacity,
+                self.capacity(layer_assign),
+                "layer {l} plan was binned with a different capacity rule"
+            );
+            per_device.fill(0);
+            for (ei, &cnt) in plan.counts.iter().enumerate() {
+                per_device[self.expert_device[ei]] += cnt;
+            }
+            let mut layer_straggler = 0.0f64;
+            for &t in &per_device {
+                let time = self.cfg.alpha_us + self.cfg.beta_us * t as f64;
+                layer_straggler = layer_straggler.max(time);
+                busy += time;
+            }
+            step_latency += layer_straggler;
+            self.layer_tracker
+                .as_mut()
+                .expect("layered")
+                .push_counts(l, &plan.routed);
+            for (acc, &r) in routed_total.iter_mut().zip(&plan.routed) {
+                *acc += r;
+            }
+            n_assign += layer_assign;
+            dropped += plan.n_dropped;
+            rerouted += plan.n_rerouted;
+        }
+        for (load, &r) in self.expert_load.iter_mut().zip(&routed_total) {
+            *load += r as f64;
+        }
+        self.tracker.push_counts(&routed_total);
+        self.latencies_us.push(step_latency);
+        self.busy_us += busy;
+        self.wall_us += step_latency * self.cfg.n_devices as f64;
+        self.tokens_routed += n_assign;
+        self.tokens_dropped += dropped;
+        self.tokens_rerouted += rerouted;
+        self.steps += 1;
     }
 
     /// Per-expert capacity for a step routing `n_assignments` tokens
@@ -300,6 +400,11 @@ impl DispatchSim {
             window_gini: self.tracker.gini(),
             window_min_max: self.tracker.min_max(),
             window_cv: self.tracker.cv(),
+            layers: self
+                .layer_tracker
+                .as_ref()
+                .map(|lt| lt.per_layer())
+                .unwrap_or_default(),
         }
     }
 }
@@ -587,6 +692,78 @@ mod tests {
         assert_eq!(lr.load_gini, pr.load_gini);
         assert_eq!(lr.window_gini, pr.window_gini);
         assert_eq!(pr.tokens_rerouted, 0);
+    }
+
+    /// A layered sim over one layer reproduces the flat `step_plan`
+    /// accounting exactly, plus the per-layer window rows.
+    #[test]
+    fn single_layer_step_model_matches_step_plan() {
+        let cfg = SimConfig {
+            n_experts: 16,
+            n_devices: 4,
+            top_k: 4,
+            capacity_factor: 1.0,
+            alpha_us: 10.0,
+            beta_us: 1.0,
+        };
+        let mut rng = Rng::new(14);
+        let mut flat = DispatchSim::new(cfg.clone());
+        let mut layered = DispatchSim::new_layered(cfg, 1);
+        let mut ff = FullForward::new();
+        for _ in 0..10 {
+            let a = synthetic_assignments(&mut rng, 128, 4, 16, 1.3);
+            let cap = flat.capacity(a.len());
+            let mut plan = DispatchPlan::new();
+            plan.compile(&a, 4, 16, cap, OverflowPolicy::Drop);
+            flat.step_plan(&plan);
+            ff.plan.copy_from(&plan);
+            layered.step_model(std::slice::from_ref(&ff));
+        }
+        let (fr, lr) = (flat.report(), layered.report());
+        assert_eq!(fr.tokens_routed, lr.tokens_routed);
+        assert_eq!(fr.tokens_dropped, lr.tokens_dropped);
+        assert_eq!(fr.latency_p50_us, lr.latency_p50_us);
+        assert_eq!(fr.latency_p99_us, lr.latency_p99_us);
+        assert_eq!(fr.utilization, lr.utilization);
+        assert_eq!(fr.load_gini, lr.load_gini);
+        assert_eq!(fr.window_gini, lr.window_gini);
+        assert!(fr.layers.is_empty());
+        assert_eq!(lr.layers.len(), 1);
+        assert_eq!(lr.layers[0].gini, fr.window_gini);
+    }
+
+    /// The stacked latency model composes sequentially: a two-layer
+    /// step's latency is the sum of the layers' straggler times, and
+    /// the per-layer windows keep the layers' balance separate.
+    #[test]
+    fn layered_step_sums_stragglers_and_splits_balance() {
+        let cfg = SimConfig {
+            n_experts: 4,
+            n_devices: 2,
+            top_k: 1,
+            capacity_factor: 1e9, // never drop
+            alpha_us: 0.0,
+            beta_us: 1.0,
+        };
+        let mut sim = DispatchSim::new_layered(cfg, 2);
+        // layer 0 balanced over experts {0..3}; layer 1 collapsed on 0
+        let (mut f0, mut f1) = (FullForward::new(), FullForward::new());
+        let a0: Vec<u32> = vec![0, 1, 2, 3, 0, 1, 2, 3];
+        let a1: Vec<u32> = vec![0; 8];
+        let cap = sim.capacity(8);
+        f0.plan.compile(&a0, 1, 4, cap, OverflowPolicy::Drop);
+        f1.plan.compile(&a1, 1, 4, cap, OverflowPolicy::Drop);
+        sim.step_model(&[f0, f1]);
+        let r = sim.report();
+        // layer 0: devices {0,1} get 4 tokens each -> straggler 4;
+        // layer 1: device 0 gets all 8 -> straggler 8; total 12
+        assert_eq!(r.latency_p50_us, 12.0);
+        assert_eq!(r.tokens_routed, 16);
+        assert_eq!(r.layers.len(), 2);
+        assert!(r.layers[0].gini.abs() < 1e-9, "{:?}", r.layers[0]);
+        assert!((r.layers[1].gini - 0.75).abs() < 1e-9);
+        // flat window covers the sum over layers
+        assert_eq!(sim.tracker.windowed(), vec![10.0, 2.0, 2.0, 2.0]);
     }
 
     #[test]

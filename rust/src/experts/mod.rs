@@ -76,6 +76,32 @@ impl ExpertBank {
         }
     }
 
+    /// Build a bank from raw stacked weights: `w1` is `[E, d, ff]` and
+    /// `w2` is `[E, ff, d]`, both flat row-major — exactly the layout
+    /// of the trainer's stacked expert leaves, so the checkpoint bridge
+    /// (`model::bridge`) hands buffers straight in. Biases are zero
+    /// (the training FFN has none).
+    pub fn from_weights(
+        n_experts: usize,
+        d_model: usize,
+        d_ff: usize,
+        w1: Vec<f32>,
+        w2: Vec<f32>,
+    ) -> ExpertBank {
+        assert!(n_experts > 0 && d_model > 0 && d_ff > 0);
+        assert_eq!(w1.len(), n_experts * d_model * d_ff, "w1 shape");
+        assert_eq!(w2.len(), n_experts * d_ff * d_model, "w2 shape");
+        ExpertBank {
+            n_experts,
+            d_model,
+            d_ff,
+            w1,
+            b1: vec![0.0; n_experts * d_ff],
+            w2,
+            b2: vec![0.0; n_experts * d_model],
+        }
+    }
+
     /// FFN of expert `e` over `m` contiguous rows: `out[m, d] =
     /// SiLU(x·W1 + b1)·W2 + b2`. `hid` is caller-owned scratch (grows
     /// once to the high-water bucket size). Pure per expert — the same

@@ -34,14 +34,27 @@
 //!    the residual stream (or, with `--renormalize`, a token's
 //!    surviving gate weights are rescaled to its pre-drop mass).
 //!
+//! The [`model`] layer stacks `L` of those per-layer pipelines into a
+//! served **model**: [`model::StackedModel`] holds one compiled
+//! `RouterPlan` + `ExpertBank` per layer, [`model::ModelEngine`] /
+//! [`serve::PoolEngine::forward_model`] run them in order with layer
+//! ℓ's residual output feeding layer ℓ+1 (bit-identical for every
+//! thread/worker count, stack-wide), and [`model::bridge`] builds the
+//! stack from real training output — `coordinator::checkpoint` +
+//! `runtime::ArtifactMeta` → per-layer `RouterParams`/`ExpertBank`,
+//! pure Rust, no PJRT. Per-layer balance lands in
+//! [`metrics::LayerLoadTracker`] (`[L, E]` rolling windows), exactly
+//! the per-layer Gini/min-max resolution the paper reports.
+//!
 //! The [`serve`] module turns that per-batch pipeline into a
 //! **serving runtime**: [`serve::BatchQueue`] micro-batches a bounded
 //! stream of requests (flush on `max_batch` tokens or `max_wait`
-//! virtual-clock ticks), [`serve::PoolEngine`] runs the full path on a
-//! *persistent* channel-fed worker pool (no per-batch thread spawns;
-//! bit-identical to the scoped engine for every worker count), and
-//! [`serve::ServeRuntime`] records per-request latency percentiles
-//! plus windowed balance stats.
+//! virtual-clock ticks), [`serve::PoolEngine`] runs the full path —
+//! single layer or whole stack — on a *persistent* channel-fed worker
+//! pool (no per-batch thread spawns; bit-identical to the scoped
+//! engine for every worker count), and [`serve::ServeRuntime`] records
+//! per-request latency percentiles plus windowed per-layer balance
+//! stats.
 //!
 //! [`dispatch::DispatchSim`] consumes the *same* plans for its latency
 //! model, so simulated accounting and real compute agree by
@@ -68,6 +81,7 @@ pub mod data;
 pub mod dispatch;
 pub mod experts;
 pub mod metrics;
+pub mod model;
 pub mod report;
 pub mod router;
 pub mod runtime;

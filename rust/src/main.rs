@@ -10,6 +10,14 @@
 //!   dispatch-sim          run the expert-parallel dispatch simulator;
 //!                         --routed drives it from the compiled routing
 //!                         engine (--threads shards the batch)
+//!   serve <preset|synthetic>  serve a whole L-layer model stack on the
+//!                         persistent pool: `--ckpt FILE` bridges a
+//!                         training checkpoint (pure Rust, no PJRT),
+//!                         `synthetic` builds an L-layer LPR stack;
+//!                         prints the per-layer Gini/min-max table
+//!   model-sim             run the stacked model through the layered
+//!                         dispatch simulator (per-layer balance +
+//!                         sequential straggler latency model)
 //!   serve-bench           drive open-loop MixtureStream traffic
 //!                         through the persistent-pool serving runtime
 //!                         (policy x workers x arrival-rate sweep,
@@ -32,6 +40,10 @@ use lpr::dispatch::{
 };
 use lpr::experts::ExpertBank;
 use lpr::metrics::{ascii_heatmap, entropy_frac, gini, min_max_ratio};
+use lpr::model::{
+    bridge, run_model_steps, synthetic_stacked_model, ModelEngine,
+    ModelForward, StackedModel,
+};
 use lpr::report::Reporter;
 use lpr::router::{
     synthetic_lpr_router, FullForward, RouterBatch, ServingEngine,
@@ -55,9 +67,16 @@ USAGE:
   lpr route <preset> [--ckpt FILE]
   lpr route synthetic [--metric M] [--threads N] [--tokens N]
             [--experts N] [--topk K]
+  lpr serve <preset> --ckpt FILE [--workers N] [--policy P] [--rate R]
+            [--requests N] [--req-tokens N] [--cf F] [--renormalize]
+  lpr serve synthetic [--layers L] [--metric M] [--experts N] [--topk K]
+            [--dmodel D] [--latent Z] [--dff F] [...same options]
+  lpr model-sim [--layers L] [--metric M] [--experts N] [--topk K]
+                [--dmodel D] [--dff F] [--threads N] [--policy P]
+                [--steps N] [--tokens N] [--cf F] [--devices N]
   lpr repro <t1|t2|t3|t4|t5|t6|t7|fig1|fig3|fig4|dispatch
-            |dispatch-routed|dispatch-policies|serve|dispatch-replay
-            |all> [--steps N]
+            |dispatch-routed|dispatch-policies|serve|model-serve
+            |dispatch-replay|all> [--steps N]
   lpr dispatch-sim [--experts N] [--devices N] [--topk K] [--skew S]
                    [--cf F] [--steps N] [--threads N] [--metric M]
                    [--policy P] [--routed] [--full] [--renormalize]
@@ -84,7 +103,12 @@ Options:
                     (off by default)
   --workers N       serve-bench: pool workers (sweeps 1,2,4 if omitted)
   --rate R          serve-bench: absolute arrival rate in tokens/s
-                    (sweeps 0.5x/1x/2x of measured capacity if omitted)
+                    (sweeps 0.5x/1x/2x of measured capacity if omitted);
+                    serve: one absolute rate (default 0.8x measured)
+  --layers L        serve synthetic / model-sim: MoE layers in the
+                    served stack (default 4)
+  --ckpt FILE       serve/eval/route: training checkpoint; serve builds
+                    the whole L-layer model from it (pure Rust, no PJRT)
 ";
 
 fn main() {
@@ -118,6 +142,8 @@ fn run(args: &Args) -> Result<()> {
         "eval" => cmd_eval(args),
         "route" => cmd_route(args),
         "repro" => cmd_repro(args),
+        "serve" => cmd_serve(args),
+        "model-sim" => cmd_model_sim(args),
         "dispatch-sim" => cmd_dispatch_sim(args),
         "serve-bench" => cmd_serve_bench(args),
         "list" => cmd_list(args),
@@ -153,8 +179,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     let mut trainer = Trainer::new(&rt, &arts, seed, None)?;
     let mut corpus =
         ZipfMarkovCorpus::standard(arts.meta.config.vocab, 1000 + seed as u64);
-    let loss_idx = arts.meta.metric_idx("loss");
-    let lr_idx = arts.meta.metric_idx("lr");
+    let loss_idx = arts.meta.metric_idx("loss")?;
+    let lr_idx = arts.meta.metric_idx("lr")?;
     let t0 = std::time::Instant::now();
     trainer.train_synthetic(&mut corpus, steps, |m| {
         if m.step % 20 == 0 || m.step + 1 == steps {
@@ -208,9 +234,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let rt = Runtime::cpu()?;
     let arts = CompiledArtifacts::load(&rt, &art_dir(args), preset)?;
     let ck = checkpoint::load(std::path::Path::new(ckpt_path))?;
-    if ck.artifact != preset {
-        bail!("checkpoint is for artifact '{}', not '{preset}'", ck.artifact);
-    }
+    ck.expect_artifact(preset)?;
     let mut trainer = Trainer::new(&rt, &arts, 0, None)?;
     trainer.state_from_host(&ck.buffers)?;
     let mut corpus = ZipfMarkovCorpus::held_out(
@@ -283,6 +307,7 @@ fn cmd_route(args: &Args) -> Result<()> {
     let mut trainer = Trainer::new(&rt, &arts, 0, None)?;
     if let Some(ckpt_path) = args.opt("ckpt") {
         let ck = checkpoint::load(std::path::Path::new(ckpt_path))?;
+        ck.expect_artifact(preset)?;
         trainer.state_from_host(&ck.buffers)?;
     }
     let conf = lpr::config::router_top1_confidence(&rt, &arts, &trainer)?;
@@ -303,7 +328,11 @@ fn cmd_repro(args: &Args) -> Result<()> {
     // serving reports work against the offline vendor/xla stub.
     let pure_rust = matches!(
         exp,
-        "dispatch" | "dispatch-routed" | "dispatch-policies" | "serve"
+        "dispatch"
+            | "dispatch-routed"
+            | "dispatch-policies"
+            | "serve"
+            | "model-serve"
     );
     let rt = if pure_rust { None } else { Some(Runtime::cpu()?) };
     let mut rep = Reporter::new(rt.as_ref(), &art, &out);
@@ -326,10 +355,227 @@ fn cmd_repro(args: &Args) -> Result<()> {
         "dispatch-routed" => rep.dispatch_routed()?,
         "dispatch-policies" => rep.dispatch_policies()?,
         "serve" => rep.serve_table()?,
+        "model-serve" => rep.model_serve_table()?,
         "dispatch-replay" => rep.dispatch_replay()?,
         "all" => rep.all()?,
         other => bail!("unknown experiment '{other}'"),
     }
+    Ok(())
+}
+
+fn parse_policy(args: &Args, default: &str) -> Result<OverflowPolicy> {
+    let name = args.opt_or("policy", default);
+    OverflowPolicy::parse(name).with_context(|| {
+        format!(
+            "unknown --policy '{name}' (drop | next-choice | least-loaded)"
+        )
+    })
+}
+
+/// Build the model stack `serve`/`model-sim` operate on: a training
+/// checkpoint through the pure-Rust bridge when `--ckpt` is given,
+/// otherwise a synthetic L-layer LPR stack.
+fn stacked_model_arg(args: &Args, preset: &str) -> Result<(StackedModel, String)> {
+    if preset == "synthetic" {
+        let n_layers = args.opt_usize("layers", 4);
+        let metric = args.opt_or("metric", "cosine");
+        let d = args.opt_usize("dmodel", 32);
+        let dz = args.opt_usize("latent", 16);
+        let e = args.opt_usize("experts", 32);
+        let k = args.opt_usize("topk", 4);
+        let d_ff = args.opt_usize("dff", 2 * d);
+        let seed = args.opt_usize("seed", 2025) as u64;
+        let model = synthetic_stacked_model(
+            metric,
+            &Rng::new(seed),
+            n_layers,
+            d,
+            dz,
+            e,
+            k,
+            d_ff,
+        );
+        let desc = format!(
+            "synthetic {n_layers}-layer {metric} stack, {e} experts \
+             top-{k}, d={d} d_ff={d_ff}"
+        );
+        Ok((model, desc))
+    } else {
+        let ckpt = args.opt("ckpt").context(
+            "--ckpt FILE required for a checkpointed model (or use \
+             `serve synthetic`)",
+        )?;
+        let (meta, model) = bridge::model_from_files(
+            &art_dir(args),
+            preset,
+            std::path::Path::new(ckpt),
+        )?;
+        let desc = format!(
+            "checkpoint {ckpt} ({preset}: {} layers, {} experts top-{}, \
+             {} router/{})",
+            meta.config.n_layers,
+            meta.config.n_experts,
+            meta.config.top_k,
+            meta.config.router,
+            meta.config.metric
+        );
+        Ok((model, desc))
+    }
+}
+
+fn print_layer_table(layers: &[lpr::metrics::LayerBalance]) {
+    println!(
+        "  {:<6} {:>9} {:>9} {:>9}",
+        "layer", "win-GINI", "min-max", "cv"
+    );
+    for lb in layers {
+        println!(
+            "  L{:<5} {:>9.4} {:>9.4} {:>9.3}",
+            lb.layer, lb.gini, lb.min_max, lb.cv
+        );
+    }
+}
+
+/// Serve a whole model stack on the persistent pool: bounded queue,
+/// micro-batching, open-loop Poisson arrivals — the `train → ckpt →
+/// serve` endpoint. Pure Rust: the checkpoint bridge reads only
+/// `meta.json` + the checkpoint file, so this works against the
+/// offline vendor/xla stub.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let preset = preset_arg(args)?;
+    let (model, desc) = stacked_model_arg(args, preset)?;
+    let d = model.d_model();
+    let workers = args.opt_usize("workers", 2);
+    let policy = parse_policy(args, "drop")?;
+    let cf = args.opt_f64("cf", 1.25);
+    let req_tokens = args.opt_usize("req-tokens", 32);
+    let n_requests = args.opt_usize("requests", 256);
+    let max_batch = args.opt_usize("max-batch", 256);
+    let max_wait = args.opt_usize("max-wait", 2000) as u64;
+    let seed = args.opt_usize("seed", 23) as u64;
+    anyhow::ensure!(
+        req_tokens <= max_batch,
+        "--req-tokens {req_tokens} exceeds --max-batch {max_batch}"
+    );
+
+    // calibrate this machine's stacked-forward capacity, then default
+    // the arrival rate to 0.8x of it (below saturation)
+    let mut rng = Rng::new(seed);
+    let mix = MixtureStream::skewed(&mut rng, d, 1.6);
+    let mut cal = PoolEngine::from_model(model.clone(), workers);
+    let cap_tok_s = measure_service_rate(
+        &mut cal, &mix, &mut rng, max_batch, 3, cf, policy,
+    );
+    drop(cal);
+    let rate = match args.opt("rate") {
+        Some(r) => r.parse::<f64>().context("--rate")?,
+        None => 0.8 * cap_tok_s,
+    };
+
+    let cfg = ServeConfig {
+        n_workers: workers,
+        max_batch,
+        max_wait,
+        queue_tokens: 8 * max_batch,
+        capacity_factor: cf,
+        policy,
+        renormalize: args.has_flag("renormalize"),
+        service_ticks: None,
+    };
+    let mut rt = ServeRuntime::from_model(model, cfg);
+    run_open_loop(&mut rt, &mix, &mut rng, n_requests, req_tokens, rate);
+    let r = rt.report();
+    println!("serve: {desc}");
+    println!(
+        "  {workers} workers, policy {}, cf {cf}; measured capacity \
+         {cap_tok_s:.0} tok/s, arrival {rate:.0} tok/s",
+        policy.name()
+    );
+    println!(
+        "  {} requests ({} rejected), {} batches, p50/p99 {:.0}/{:.0} us, \
+         {:.0} tok/s served",
+        r.requests,
+        r.rejected,
+        r.batches,
+        r.latency_p50_us,
+        r.latency_p99_us,
+        r.throughput_tok_per_s
+    );
+    println!(
+        "  per-layer rolling balance (mean GINI {:.4}, min-max {:.4}):",
+        r.window_gini, r.window_min_max
+    );
+    print_layer_table(&r.layers);
+    Ok(())
+}
+
+/// Stacked-model dispatch study: run the L-layer `ModelForward` through
+/// the layered simulator — per-layer `[L, E]` balance plus the
+/// sequential straggler latency model (layer l+1 waits for layer l's
+/// slowest device).
+fn cmd_model_sim(args: &Args) -> Result<()> {
+    let n_layers = args.opt_usize("layers", 4);
+    let metric = args.opt_or("metric", "cosine");
+    let d = args.opt_usize("dmodel", 64);
+    let dz = args.opt_usize("latent", 16);
+    let e = args.opt_usize("experts", 32);
+    let k = args.opt_usize("topk", 4);
+    let d_ff = args.opt_usize("dff", 2 * d);
+    let threads = args.opt_usize("threads", 1);
+    let steps = args.opt_usize("steps", 50);
+    let tokens = args.opt_usize("tokens", 1024);
+    let policy = parse_policy(args, "drop")?;
+    let cfg = SimConfig {
+        n_experts: e,
+        n_devices: args.opt_usize("devices", 8),
+        top_k: k,
+        capacity_factor: args.opt_f64("cf", 1.25),
+        alpha_us: args.opt_f64("alpha", 50.0),
+        beta_us: args.opt_f64("beta", 0.5),
+    };
+    let seed = args.opt_usize("seed", 2025) as u64;
+    let model = synthetic_stacked_model(
+        metric,
+        &Rng::new(seed),
+        n_layers,
+        d,
+        dz,
+        e,
+        k,
+        d_ff,
+    );
+    let mut engine = ModelEngine::new(model, threads);
+    engine.set_renormalize(args.has_flag("renormalize"));
+    let mut sim = DispatchSim::new_layered(cfg, n_layers);
+    let mut rng = Rng::new(seed);
+    let mix = MixtureStream::skewed(&mut rng, d, 1.6);
+    let mut out = ModelForward::new();
+    let fwd_ns = run_model_steps(
+        &mut engine, &mix, &mut rng, &mut sim, steps, tokens, policy,
+        &mut out,
+    );
+    let r = sim.report();
+    println!(
+        "model-sim: {n_layers}-layer {metric} stack, {e} experts top-{k}, \
+         policy {}, {threads} threads",
+        policy.name()
+    );
+    println!(
+        "  {} steps x {tokens} tokens, stacked forward {:.0} ns/token",
+        r.steps,
+        fwd_ns as f64 / (steps * tokens).max(1) as f64
+    );
+    println!(
+        "  throughput {:.0} tok/s  latency p50/p99 {:.0}/{:.0} us  \
+         drop {:.2}%  reroute {:.2}%  utilization {:.3}",
+        r.throughput_tok_per_s,
+        r.latency_p50_us,
+        r.latency_p99_us,
+        100.0 * r.drop_frac,
+        100.0 * r.reroute_frac,
+        r.utilization
+    );
+    print_layer_table(&r.layers);
     Ok(())
 }
 

@@ -295,6 +295,99 @@ impl LoadTracker {
     }
 }
 
+/// One layer's rolling balance snapshot, as reported by
+/// [`LayerLoadTracker::per_layer`] — the row format of the layer-resolved
+/// Gini/min-max tables (`repro model-serve`, `lpr serve`, `model-sim`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerBalance {
+    pub layer: usize,
+    pub gini: f64,
+    pub min_max: f64,
+    pub cv: f64,
+}
+
+/// Per-layer generalization of [`LoadTracker`]: `L` independent rolling
+/// windows over `[L, E]` load rows, one per MoE layer of a served model
+/// stack. The paper measures balance *per layer* (its Gini 0.70 → 0.035
+/// numbers are per-layer values over whole models), so serving-side
+/// telemetry must resolve layers too — a stack whose mean Gini looks
+/// healthy can still hide one collapsed layer.
+///
+/// Layer `l`'s window is exactly a [`LoadTracker`]; `mean_gini` /
+/// `mean_min_max` aggregate the way the paper reports model-level
+/// numbers (mean over MoE layers, like [`LoadMatrix::mean_gini`]).
+#[derive(Debug, Clone)]
+pub struct LayerLoadTracker {
+    layers: Vec<LoadTracker>,
+}
+
+impl LayerLoadTracker {
+    pub fn new(n_layers: usize, window: usize, n_experts: usize) -> Self {
+        Self::with_experts(window, &vec![n_experts; n_layers])
+    }
+
+    /// Constructor for stacks whose layers hold different expert
+    /// counts: one window per entry of `n_experts_per_layer`.
+    pub fn with_experts(window: usize, n_experts_per_layer: &[usize]) -> Self {
+        assert!(!n_experts_per_layer.is_empty(), "n_layers must be >= 1");
+        LayerLoadTracker {
+            layers: n_experts_per_layer
+                .iter()
+                .map(|&e| LoadTracker::new(window, e))
+                .collect(),
+        }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Layer `l`'s rolling window.
+    pub fn layer(&self, l: usize) -> &LoadTracker {
+        &self.layers[l]
+    }
+
+    /// Record one step's `[E]` load row for layer `l`.
+    pub fn push(&mut self, l: usize, step_load: &[f32]) {
+        self.layers[l].push(step_load);
+    }
+
+    /// [`Self::push`] for integer assignment counts.
+    pub fn push_counts(&mut self, l: usize, counts: &[u32]) {
+        self.layers[l].push_counts(counts);
+    }
+
+    /// Rolling balance of every layer, in layer order.
+    pub fn per_layer(&self) -> Vec<LayerBalance> {
+        self.layers
+            .iter()
+            .enumerate()
+            .map(|(layer, t)| LayerBalance {
+                layer,
+                gini: t.gini(),
+                min_max: t.min_max(),
+                cv: t.cv(),
+            })
+            .collect()
+    }
+
+    /// Mean per-layer rolling Gini (the paper's model-level convention).
+    pub fn mean_gini(&self) -> f64 {
+        self.layers.iter().map(|t| t.gini()).sum::<f64>()
+            / self.layers.len() as f64
+    }
+
+    pub fn mean_min_max(&self) -> f64 {
+        self.layers.iter().map(|t| t.min_max()).sum::<f64>()
+            / self.layers.len() as f64
+    }
+
+    pub fn mean_cv(&self) -> f64 {
+        self.layers.iter().map(|t| t.cv()).sum::<f64>()
+            / self.layers.len() as f64
+    }
+}
+
 /// Render a Fig.1-style ASCII heatmap of normalized per-layer loads.
 pub fn ascii_heatmap(lm: &LoadMatrix) -> String {
     let shades = [' ', '.', ':', '-', '=', '+', '*', '#', '%', '@'];
@@ -521,6 +614,28 @@ mod tests {
         }
         assert!(gini(&cumulative) < 0.2, "cumulative hides the collapse");
         assert!(t.gini() > 0.7, "window must expose it: {}", t.gini());
+    }
+
+    #[test]
+    fn layer_tracker_resolves_per_layer_balance() {
+        let mut t = LayerLoadTracker::new(2, 8, 4);
+        // layer 0 balanced, layer 1 collapsed onto expert 0
+        t.push(0, &[1.0, 1.0, 1.0, 1.0]);
+        t.push_counts(1, &[4, 0, 0, 0]);
+        let per = t.per_layer();
+        assert_eq!(per.len(), 2);
+        assert_eq!(per[0].layer, 0);
+        assert!(per[0].gini.abs() < 1e-12);
+        assert!((per[0].min_max - 1.0).abs() < 1e-6);
+        assert!((per[1].gini - 0.75).abs() < 1e-9);
+        assert!(per[1].min_max < 1e-6);
+        // mean aggregates match the free functions per layer
+        assert!((t.mean_gini() - (0.0 + 0.75) / 2.0).abs() < 1e-9);
+        assert!((t.mean_min_max() - (1.0 + 0.0) / 2.0).abs() < 1e-5);
+        assert!(t.mean_cv() > 0.0);
+        // and layer windows are the plain LoadTracker semantics
+        assert_eq!(t.layer(1).windowed(), vec![4.0, 0.0, 0.0, 0.0]);
+        assert_eq!(t.n_layers(), 2);
     }
 
     #[test]

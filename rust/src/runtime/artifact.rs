@@ -111,11 +111,15 @@ fn leaf_specs(j: &Json) -> Result<Vec<LeafSpec>> {
         .collect()
 }
 
-fn str_vec(j: &Json) -> Vec<String> {
+fn str_vec(j: &Json) -> Result<Vec<String>> {
     j.as_arr()
-        .expect("expected array of strings")
+        .context("expected array of strings")?
         .iter()
-        .map(|x| x.as_str().expect("string").to_string())
+        .map(|x| {
+            Ok(x.as_str()
+                .with_context(|| format!("non-string entry {x:?}"))?
+                .to_string())
+        })
         .collect()
 }
 
@@ -140,10 +144,13 @@ impl ArtifactMeta {
             config: ModelConfig::from_json(j.at("config"))?,
             n_params: j.at("n_params").as_usize().context("n_params")?,
             n_state: j.at("n_state").as_usize().context("n_state")?,
-            params: leaf_specs(j.at("params"))?,
-            router_params: leaf_specs(j.at("router_params"))?,
-            metric_names: str_vec(j.at("metric_names")),
-            eval_metric_names: str_vec(j.at("eval_metric_names")),
+            params: leaf_specs(j.at("params")).context("params")?,
+            router_params: leaf_specs(j.at("router_params"))
+                .context("router_params")?,
+            metric_names: str_vec(j.at("metric_names"))
+                .context("metric_names")?,
+            eval_metric_names: str_vec(j.at("eval_metric_names"))
+                .context("eval_metric_names")?,
             load_shape: (load_shape[0], load_shape[1]),
             batch_shape: (batch_shape[0], batch_shape[1]),
             default_loss_weights: j
@@ -160,12 +167,20 @@ impl ArtifactMeta {
         Ok(meta)
     }
 
-    /// Index of a metric in the train-step metrics vector.
-    pub fn metric_idx(&self, name: &str) -> usize {
-        self.metric_names
-            .iter()
-            .position(|m| m == name)
-            .unwrap_or_else(|| panic!("unknown metric '{name}'"))
+    /// Index of a metric in the train-step metrics vector. An unknown
+    /// name is a recoverable contract mismatch (stale artifacts vs a
+    /// newer binary), not a programmer error — so `Err`, not a panic,
+    /// like the rest of this parser.
+    pub fn metric_idx(&self, name: &str) -> Result<usize> {
+        self.metric_names.iter().position(|m| m == name).with_context(
+            || {
+                format!(
+                    "metric '{name}' not in artifact '{}' (has: {})",
+                    self.name,
+                    self.metric_names.join(", ")
+                )
+            },
+        )
     }
 }
 
@@ -205,7 +220,7 @@ mod tests {
         assert_eq!(m.params[0].numel(), 64 * 32);
         assert_eq!(m.load_shape, (1, 8));
         assert_eq!(m.config.n_experts, 8);
-        assert_eq!(m.metric_idx("lr"), 1);
+        assert_eq!(m.metric_idx("lr").unwrap(), 1);
         assert_eq!(m.default_loss_weights.len(), 8);
     }
 
@@ -216,5 +231,37 @@ mod tests {
             m.insert("n_state".into(), Json::Num(5.0));
         }
         assert!(ArtifactMeta::from_json(&j).is_err());
+    }
+
+    /// Satellite regression: an unknown metric name and malformed
+    /// metric-name arrays surface as `Err` with the offending field
+    /// named — the old code panicked (`expect`/`unwrap_or_else`) on
+    /// both, turning a stale-artifact mismatch into an abort.
+    #[test]
+    fn malformed_meta_is_an_error_not_a_panic() {
+        let m = ArtifactMeta::from_json(&meta_json()).unwrap();
+        let err = m.metric_idx("no-such-metric").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("no-such-metric"), "{msg}");
+        assert!(msg.contains("loss"), "should list known names: {msg}");
+
+        // metric_names with a non-string entry
+        let mut j = meta_json();
+        if let Json::Obj(obj) = &mut j {
+            obj.insert(
+                "metric_names".into(),
+                Json::Arr(vec![Json::Str("loss".into()), Json::Num(3.0)]),
+            );
+        }
+        let err = ArtifactMeta::from_json(&j).unwrap_err();
+        assert!(format!("{err:#}").contains("metric_names"));
+
+        // metric_names that is not an array at all
+        let mut j = meta_json();
+        if let Json::Obj(obj) = &mut j {
+            obj.insert("eval_metric_names".into(), Json::Num(1.0));
+        }
+        let err = ArtifactMeta::from_json(&j).unwrap_err();
+        assert!(format!("{err:#}").contains("eval_metric_names"));
     }
 }

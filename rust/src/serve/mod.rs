@@ -11,13 +11,19 @@
 //!   tokens or when the oldest request has waited `max_wait` ticks;
 //!   requests are never split or reordered.
 //! - [`pool::PoolEngine`] — a long-lived channel-fed worker pool
-//!   running the full data path with the workers' `RouteBuffers` /
-//!   scratch owned for the process lifetime; bit-identical to the
-//!   scoped [`crate::router::ServingEngine`] for every worker count.
+//!   running the full data path — for a single layer or a whole
+//!   [`crate::model::StackedModel`] ([`PoolEngine::forward_model`]) —
+//!   with the workers' `RouteBuffers` / scratch owned for the process
+//!   lifetime; bit-identical to the scoped
+//!   [`crate::router::ServingEngine`] / [`crate::model::ModelEngine`]
+//!   for every worker count.
 //! - [`ServeRuntime`] — glues them together and keeps the serving
 //!   telemetry: per-request latency percentiles (nearest-rank, the
 //!   same [`percentile_nearest_rank`] convention as `DispatchSim`) and
-//!   windowed [`crate::metrics::LoadTracker`] balance stats.
+//!   windowed per-layer `[L, E]` balance stats
+//!   ([`crate::metrics::LayerLoadTracker`]) — build multi-layer
+//!   runtimes with [`ServeRuntime::from_model`] (e.g. from a training
+//!   checkpoint via `model::bridge`, the `lpr serve --ckpt` path).
 //!
 //! # Time model
 //!
@@ -48,7 +54,8 @@ pub use queue::{BatchMember, BatchQueue, SubmitError};
 use crate::data::MixtureStream;
 use crate::dispatch::plan::OverflowPolicy;
 use crate::experts::ExpertBank;
-use crate::metrics::percentile_nearest_rank;
+use crate::metrics::{percentile_nearest_rank, LayerBalance};
+use crate::model::{ModelForward, StackedModel};
 use crate::router::{FullForward, RouterPlan};
 use crate::util::rng::Rng;
 
@@ -114,10 +121,14 @@ pub struct ServeReport {
     pub latency_p99_us: f64,
     /// Completed tokens over first-arrival → last-completion time.
     pub throughput_tok_per_s: f64,
-    /// Rolling routed-load balance over the pool's window.
+    /// Rolling routed-load balance over the pool's window — the mean
+    /// over MoE layers (the paper's model-level convention; identical
+    /// to the single window for one-layer runtimes).
     pub window_gini: f64,
     pub window_min_max: f64,
     pub window_cv: f64,
+    /// Layer-resolved rolling balance (`[L, E]` tracking), layer order.
+    pub layers: Vec<LayerBalance>,
 }
 
 impl ServeReport {
@@ -163,7 +174,7 @@ pub struct ServeRuntime {
     cfg: ServeConfig,
     pool: PoolEngine,
     queue: BatchQueue,
-    out: FullForward,
+    out: ModelForward,
     batch_h: Vec<f32>,
     members: Vec<BatchMember>,
     completions: Vec<Completion>,
@@ -179,20 +190,34 @@ pub struct ServeRuntime {
 }
 
 impl ServeRuntime {
+    /// Single-layer runtime (the PR 3 entry point): equivalent to
+    /// [`Self::from_model`] over `StackedModel::single(plan, bank)`.
     pub fn new(
         plan: RouterPlan,
         bank: ExpertBank,
         cfg: ServeConfig,
     ) -> ServeRuntime {
-        let d = plan.cfg.d_model;
-        let mut pool = PoolEngine::new(plan, bank, cfg.n_workers);
+        ServeRuntime::from_model(StackedModel::single(plan, bank), cfg)
+    }
+
+    /// Serve a whole `L`-layer model stack: every flushed micro-batch
+    /// runs [`PoolEngine::forward_model`] (route → plan → FFN → combine
+    /// per layer, residual-composed), and the balance telemetry
+    /// resolves per layer.
+    pub fn from_model(model: StackedModel, cfg: ServeConfig) -> ServeRuntime {
+        let d = model.d_model();
+        let mut pool = PoolEngine::from_model(model, cfg.n_workers);
         pool.set_renormalize(cfg.renormalize);
         let queue =
             BatchQueue::new(d, cfg.max_batch, cfg.max_wait, cfg.queue_tokens);
+        // pre-size the per-layer slots so `last_forward` is valid (an
+        // empty forward) before the first flush, as it was in PR 3
+        let mut out = ModelForward::new();
+        out.ensure_layers(pool.n_layers());
         ServeRuntime {
             pool,
             queue,
-            out: FullForward::new(),
+            out,
             batch_h: Vec::new(),
             members: Vec::new(),
             completions: Vec::new(),
@@ -212,15 +237,27 @@ impl ServeRuntime {
         &self.cfg
     }
 
-    /// The pool's rolling routed-load balance window.
+    /// The pool's rolling routed-load balance window (layer 0).
     pub fn tracker(&self) -> &crate::metrics::LoadTracker {
         self.pool.tracker()
     }
 
-    /// The last flushed batch's full forward (routed batch, dispatch
-    /// plan, combined rows) — request `i` of the batch owns token rows
-    /// `members[i].start..start + n_tokens` of `combined`.
+    /// The pool's per-layer `[L, E]` rolling balance windows.
+    pub fn layer_tracker(&self) -> &crate::metrics::LayerLoadTracker {
+        self.pool.layer_tracker()
+    }
+
+    /// The last flushed batch's **layer-0** forward (routed batch,
+    /// dispatch plan, combined rows) — request `i` of the batch owns
+    /// token rows `members[i].start..start + n_tokens` of `combined`
+    /// (and of [`Self::last_model_forward`]'s `hidden`).
     pub fn last_forward(&self) -> &FullForward {
+        &self.out.layers[0]
+    }
+
+    /// The last flushed batch's whole-stack forward: per-layer pipeline
+    /// state plus the final residual stream.
+    pub fn last_model_forward(&self) -> &ModelForward {
         &self.out
     }
 
@@ -276,7 +313,7 @@ impl ServeRuntime {
     fn flush_one(&mut self, now: u64) {
         self.queue.pop_batch(&mut self.batch_h, &mut self.members);
         let t0 = std::time::Instant::now();
-        self.pool.forward_full(
+        self.pool.forward_model(
             &self.batch_h,
             self.cfg.capacity_factor,
             self.cfg.policy,
@@ -330,9 +367,10 @@ impl ServeRuntime {
             } else {
                 self.tokens_done as f64 / (elapsed_us as f64 * 1e-6)
             },
-            window_gini: self.pool.tracker().gini(),
-            window_min_max: self.pool.tracker().min_max(),
-            window_cv: self.pool.tracker().cv(),
+            window_gini: self.pool.layer_tracker().mean_gini(),
+            window_min_max: self.pool.layer_tracker().mean_min_max(),
+            window_cv: self.pool.layer_tracker().mean_cv(),
+            layers: self.pool.layer_tracker().per_layer(),
         }
     }
 }
@@ -376,10 +414,12 @@ pub fn run_open_loop(
 }
 
 /// Measure a pool's steady-state full-forward service rate (tokens per
-/// second) over `reps` batches of `n_tokens`: the calibration
-/// `serve-bench` and `repro serve` use to express arrival rates as
-/// load fractions of this machine's capacity, so the sweep saturates
-/// on every box instead of only on the one it was tuned on.
+/// second) over `reps` batches of `n_tokens` — through the **whole
+/// stack** the pool serves, so multi-layer runtimes calibrate against
+/// multi-layer cost. The calibration `serve-bench` and `repro serve`
+/// use to express arrival rates as load fractions of this machine's
+/// capacity, so the sweep saturates on every box instead of only on
+/// the one it was tuned on.
 pub fn measure_service_rate(
     pool: &mut PoolEngine,
     mix: &MixtureStream,
@@ -390,14 +430,14 @@ pub fn measure_service_rate(
     policy: OverflowPolicy,
 ) -> f64 {
     let mut h = Vec::new();
-    let mut out = FullForward::new();
+    let mut out = ModelForward::new();
     mix.fill(rng, n_tokens, &mut h);
-    pool.forward_full(&h, capacity_factor, policy, &mut out); // warm
+    pool.forward_model(&h, capacity_factor, policy, &mut out); // warm
     let mut best = f64::INFINITY;
     for _ in 0..reps.max(1) {
         mix.fill(rng, n_tokens, &mut h);
         let t0 = std::time::Instant::now();
-        pool.forward_full(&h, capacity_factor, policy, &mut out);
+        pool.forward_model(&h, capacity_factor, policy, &mut out);
         best = best.min(t0.elapsed().as_secs_f64());
     }
     n_tokens as f64 / best.max(1e-9)
@@ -512,6 +552,62 @@ mod tests {
         assert_eq!((m[0].start, m[0].n_tokens), (0, 3));
         assert_eq!((m[1].start, m[1].n_tokens), (3, 5));
         assert_eq!(rt.last_forward().combined.len(), 8 * d);
+    }
+
+    /// A multi-layer runtime serves whole-stack forwards: the flushed
+    /// batch's residual stream equals the scoped `ModelEngine` over the
+    /// same concatenated tokens, and the report resolves per-layer
+    /// balance.
+    #[test]
+    fn model_runtime_matches_scoped_stack_and_reports_layers() {
+        use crate::model::{
+            synthetic_stacked_model, ModelEngine, ModelForward,
+        };
+        let (d, n_layers) = (8usize, 3usize);
+        let mut rng = Rng::new(6);
+        let model = synthetic_stacked_model(
+            "cosine",
+            &Rng::new(4),
+            n_layers,
+            d,
+            4,
+            4,
+            2,
+            6,
+        );
+        let mix = MixtureStream::standard(&mut rng, d);
+        let cfg = ServeConfig {
+            n_workers: 2,
+            max_batch: 8,
+            max_wait: 100,
+            queue_tokens: 64,
+            service_ticks: Some(1),
+            ..ServeConfig::default()
+        };
+        let mut rt = ServeRuntime::from_model(model.clone(), cfg);
+        // valid (empty) before the first flush — the PR 3 contract
+        assert!(rt.last_forward().combined.is_empty());
+        assert!(rt.last_model_forward().hidden.is_empty());
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        mix.fill(&mut rng, 3, &mut a);
+        mix.fill(&mut rng, 5, &mut b);
+        rt.submit(&a, 0).unwrap();
+        rt.submit(&b, 1).unwrap();
+        assert_eq!(rt.poll(1).len(), 2);
+        let mut h = a.clone();
+        h.extend_from_slice(&b);
+        let mut scoped = ModelEngine::new(model, 1);
+        let mut want = ModelForward::new();
+        scoped.forward(&h, 1.25, OverflowPolicy::Drop, &mut want);
+        assert_eq!(rt.last_model_forward().hidden, want.hidden);
+        assert_eq!(rt.last_forward().combined, want.layers[0].combined);
+        let rep = rt.report();
+        assert_eq!(rep.layers.len(), n_layers);
+        // mean-over-layers aggregation matches the layer rows
+        let mean: f64 = rep.layers.iter().map(|l| l.gini).sum::<f64>()
+            / n_layers as f64;
+        assert!((rep.window_gini - mean).abs() < 1e-12);
+        assert_eq!(rt.layer_tracker().n_layers(), n_layers);
     }
 
     #[test]

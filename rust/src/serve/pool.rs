@@ -1,5 +1,6 @@
 //! Persistent channel-fed worker pool: the long-lived twin of the
-//! scoped-thread [`ServingEngine`](crate::router::ServingEngine).
+//! scoped-thread [`ServingEngine`](crate::router::ServingEngine) —
+//! since PR 4 over a whole **model stack**, not a single router layer.
 //!
 //! [`ServingEngine`](crate::router::ServingEngine) spawns workers via `std::thread::scope` on every
 //! batch — tens of microseconds of spawn+join per call, a fixed cost
@@ -14,11 +15,25 @@
 //! [`Arc::make_mut`] between batches — workers drop their clones when a
 //! job completes, so steady-state batches never deep-copy it.
 //!
+//! # Multi-layer model serving
+//!
+//! The pool holds an `Arc<Vec<MoeLayer>>` — every layer's compiled
+//! [`RouterPlan`](crate::router::RouterPlan) + `ExpertBank` — and every
+//! job names its layer, so **one** set of persistent workers serves the
+//! whole stack (no per-layer thread pools).
+//! [`PoolEngine::forward_model`] runs the layers in order, each through
+//! the same route → plan → FFN → combine stages, composing them with
+//! the shared residual add ([`crate::model::residual_add`]): layer ℓ's
+//! residual output is layer ℓ+1's input. The single-layer entry points
+//! ([`PoolEngine::new`], [`PoolEngine::forward_full`],
+//! [`PoolEngine::route_into`]) are the `L = 1` special case and keep
+//! their PR 3 semantics bit-for-bit.
+//!
 //! # Determinism: bit-identical to the scoped path
 //!
 //! The pool runs the exact pipeline of
-//! [`ServingEngine::forward_full`](crate::router::ServingEngine::forward_full) and reuses the engine's partition
-//! and merge primitives (`shard_span`, `merge_route_shard`,
+//! [`ServingEngine::forward_full`](crate::router::ServingEngine::forward_full) per layer and reuses the engine's
+//! partition and merge primitives (`shard_span`, `merge_route_shard`,
 //! `expert_group_bounds`, `run_expert_range`):
 //!
 //! 1. **route** — token shards by [`shard_span`]; shard `i` always runs
@@ -31,12 +46,15 @@
 //!    *order* does not matter — destinations are disjoint and the
 //!    content per range is pure).
 //! 4. **combine** — on the caller's thread, fixed (token, slot) order.
+//! 5. **residual** (model path) — fixed elementwise add on the caller's
+//!    thread, feeding the next layer.
 //!
 //! Per-token routing and per-expert compute are pure and the partitions
 //! depend only on `(n, workers)` / the plan's offsets, so pool outputs
-//! are **bit-identical to the scoped engine for every worker count**
-//! (pinned by `pool_forward_full_matches_scoped_engine` for workers
-//! {1, 2, 3, 8}).
+//! are **bit-identical to the scoped engine for every worker count** —
+//! per layer (pinned by `pool_forward_full_matches_scoped_engine`) and
+//! for the whole stack (pinned by `pool_forward_model_matches_scoped`
+//! here and the L=4 checkpoint acceptance test in `model::bridge`).
 //!
 //! Cost model vs the scoped path: one channel round-trip per worker per
 //! stage (~a microsecond total) replaces per-batch spawn+join; the
@@ -51,7 +69,8 @@ use std::thread::JoinHandle;
 
 use crate::dispatch::plan::{capacity_for, DispatchPlan, OverflowPolicy};
 use crate::experts::{combine_rows_opts, gather_rows, ExpertBank};
-use crate::metrics::{LoadTracker, DEFAULT_LOAD_WINDOW};
+use crate::metrics::{LayerLoadTracker, LoadTracker, DEFAULT_LOAD_WINDOW};
+use crate::model::{residual_add, MoeLayer, ModelForward, StackedModel};
 use crate::router::engine::{
     expert_group_bounds, merge_route_shard, run_expert_range, shard_span,
 };
@@ -61,7 +80,7 @@ use crate::router::{FullForward, RouteBuffers, RouterBatch, RouterPlan};
 /// `Arc::make_mut` between stages; see the module docs.
 #[derive(Debug, Clone, Default)]
 struct BatchShared {
-    /// `[N, d]` input rows (route stage only).
+    /// `[N, d]` input rows of the current layer (route stage only).
     h: Vec<f32>,
     /// Compiled dispatch plan (expert stage).
     plan: DispatchPlan,
@@ -79,15 +98,18 @@ struct Scratch {
 }
 
 enum Job {
-    /// Route token rows `span` of `shared.h` into `scratch.out`.
+    /// Route token rows `span` of `shared.h` with layer `layer`'s plan
+    /// into `scratch.out`.
     Route {
+        layer: usize,
         shared: Arc<BatchShared>,
         span: Range<usize>,
         scratch: Box<Scratch>,
     },
-    /// Run experts `e0..e1` of `shared.plan` over `shared.xg` into
-    /// `scratch.y` (pre-sized by the caller).
+    /// Run experts `e0..e1` of `shared.plan` over `shared.xg` with
+    /// layer `layer`'s bank into `scratch.y` (pre-sized by the caller).
     Experts {
+        layer: usize,
         shared: Arc<BatchShared>,
         e0: usize,
         e1: usize,
@@ -120,18 +142,20 @@ struct Worker {
 /// Execute one job to completion; the shared handle is dropped
 /// *before* constructing the answer so the engine's `make_mut` never
 /// observes a stale clone once the `Done` arrives.
-fn run_job(plan: &RouterPlan, bank: &ExpertBank, slot: usize, job: Job) -> Done {
-    let d = plan.cfg.d_model;
+fn run_job(layers: &[MoeLayer], slot: usize, job: Job) -> Done {
     match job {
-        Job::Route { shared, span, mut scratch } => {
+        Job::Route { layer, shared, span, mut scratch } => {
+            let plan = &layers[layer].plan;
+            let d = plan.cfg.d_model;
             let hs = &shared.h[span.start * d..span.end * d];
             plan.forward_into(hs, &mut scratch.buf, &mut scratch.out);
             drop(shared);
             Done::Ok { slot, row0: span.start, scratch }
         }
-        Job::Experts { shared, e0, e1, mut scratch } => {
+        Job::Experts { layer, shared, e0, e1, mut scratch } => {
+            let d = layers[layer].plan.cfg.d_model;
             run_expert_range(
-                bank,
+                &layers[layer].bank,
                 &shared.plan,
                 &shared.xg,
                 e0,
@@ -149,8 +173,7 @@ fn run_job(plan: &RouterPlan, bank: &ExpertBank, slot: usize, job: Job) -> Done 
 
 fn worker_loop(
     slot: usize,
-    plan: &RouterPlan,
-    bank: &ExpertBank,
+    layers: &[MoeLayer],
     rx: Receiver<Job>,
     done: Sender<Done>,
 ) {
@@ -159,7 +182,7 @@ fn worker_loop(
         // waiting for this worker's Done (the panic message itself goes
         // to stderr via the default hook)
         let msg = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
-            || run_job(plan, bank, slot, job),
+            || run_job(layers, slot, job),
         ))
         .unwrap_or(Done::Panicked { slot });
         if done.send(msg).is_err() {
@@ -169,14 +192,17 @@ fn worker_loop(
 }
 
 /// A persistent serving engine: long-lived workers over one shared
-/// [`RouterPlan`] + [`ExpertBank`], running the full route → plan →
-/// expert FFN → combine path with zero per-batch thread spawns.
-/// Outputs are bit-identical to [`ServingEngine`](crate::router::ServingEngine) for every worker
-/// count (see the module docs).
+/// layer stack (`Arc<Vec<MoeLayer>>`), running the full route → plan →
+/// expert FFN → combine path — per layer and, via
+/// [`Self::forward_model`], across the whole residual stack — with zero
+/// per-batch thread spawns. Outputs are bit-identical to
+/// [`ServingEngine`](crate::router::ServingEngine) /
+/// [`crate::model::ModelEngine`] for every worker count (see the module
+/// docs).
 #[derive(Debug)]
 pub struct PoolEngine {
-    plan: Arc<RouterPlan>,
-    bank: Arc<ExpertBank>,
+    layers: Arc<Vec<MoeLayer>>,
+    d_model: usize,
     n_workers: usize,
     workers: Vec<Worker>,
     done_rx: Receiver<Done>,
@@ -187,7 +213,8 @@ pub struct PoolEngine {
     /// Caller-thread scratch for inline (small-batch) stages.
     inline: Box<Scratch>,
     bounds: Vec<usize>,
-    tracker: LoadTracker,
+    /// Rolling `[L, E]` routed-load balance over this pool's batches.
+    trackers: LayerLoadTracker,
     renormalize: bool,
 }
 
@@ -200,35 +227,37 @@ impl std::fmt::Debug for Worker {
 }
 
 impl PoolEngine {
-    /// Spawn `n_workers` (clamped to at least 1) persistent workers
-    /// over `plan` + `bank`. One worker still runs every stage inline
-    /// on the caller's thread, like the scoped engine.
+    /// Single-layer pool (the PR 3 entry point): equivalent to
+    /// [`Self::from_model`] over `StackedModel::single(plan, bank)`.
     pub fn new(
         plan: RouterPlan,
         bank: ExpertBank,
         n_workers: usize,
     ) -> PoolEngine {
-        assert_eq!(
-            plan.cfg.d_model, bank.d_model,
-            "expert bank d_model mismatch"
-        );
-        assert_eq!(
-            plan.cfg.n_experts, bank.n_experts,
-            "expert bank expert count mismatch"
-        );
+        PoolEngine::from_model(StackedModel::single(plan, bank), n_workers)
+    }
+
+    /// Spawn `n_workers` (clamped to at least 1) persistent workers
+    /// over the model's layer stack. One worker still runs every stage
+    /// inline on the caller's thread, like the scoped engine.
+    pub fn from_model(model: StackedModel, n_workers: usize) -> PoolEngine {
         let n_workers = n_workers.max(1);
-        let n_experts = plan.cfg.n_experts;
-        let plan = Arc::new(plan);
-        let bank = Arc::new(bank);
+        let d_model = model.d_model();
+        let experts: Vec<usize> = model
+            .layers()
+            .iter()
+            .map(|l| l.plan.cfg.n_experts)
+            .collect();
+        let layers = Arc::new(model.into_layers());
         let (done_tx, done_rx) = channel();
         let mut workers = Vec::with_capacity(n_workers);
         for slot in 0..n_workers {
             let (tx, rx) = channel::<Job>();
-            let (plan, bank) = (plan.clone(), bank.clone());
+            let layers = layers.clone();
             let done = done_tx.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("lpr-pool-{slot}"))
-                .spawn(move || worker_loop(slot, &plan, &bank, rx, done))
+                .spawn(move || worker_loop(slot, &layers, rx, done))
                 .expect("spawn pool worker");
             workers.push(Worker { tx: Some(tx), handle: Some(handle) });
         }
@@ -237,52 +266,80 @@ impl PoolEngine {
             inline: Box::default(),
             bounds: Vec::new(),
             shared: Arc::new(BatchShared::default()),
-            tracker: LoadTracker::new(DEFAULT_LOAD_WINDOW, n_experts),
-            plan,
-            bank,
+            trackers: LayerLoadTracker::with_experts(
+                DEFAULT_LOAD_WINDOW,
+                &experts,
+            ),
+            layers,
+            d_model,
             n_workers,
             workers,
             done_rx,
         }
     }
 
+    /// Layer 0's compiled plan (the whole plan stack is reachable via
+    /// [`Self::layer_plan`]).
     pub fn plan(&self) -> &RouterPlan {
-        &self.plan
+        &self.layers[0].plan
+    }
+
+    pub fn layer_plan(&self, l: usize) -> &RouterPlan {
+        &self.layers[l].plan
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
     }
 
     pub fn n_workers(&self) -> usize {
         self.n_workers
     }
 
-    /// Rolling balance of the batches this pool has routed.
+    /// Rolling routed-load balance of **layer 0** (the PR 3 accessor;
+    /// single-layer pools keep their old telemetry shape).
     pub fn tracker(&self) -> &LoadTracker {
-        &self.tracker
+        self.trackers.layer(0)
+    }
+
+    /// Rolling per-layer `[L, E]` balance over this pool's batches.
+    pub fn layer_tracker(&self) -> &LayerLoadTracker {
+        &self.trackers
     }
 
     /// Enable/disable gate-weight renormalization for partially-dropped
-    /// tokens in the combine (`--renormalize`); off by default.
+    /// tokens in every layer's combine (`--renormalize`); off by
+    /// default.
     pub fn set_renormalize(&mut self, on: bool) {
         self.renormalize = on;
     }
 
-    /// Route `h` (`[N, d]` row-major) into `out` on the persistent
-    /// workers. Identical output to `ServingEngine::route_into` for
-    /// every worker count.
+    /// Route `h` (`[N, d]` row-major) through **layer 0** into `out` on
+    /// the persistent workers. Identical output to
+    /// `ServingEngine::route_into` for every worker count.
     pub fn route_into(&mut self, h: &[f32], out: &mut RouterBatch) {
-        let d = self.plan.cfg.d_model;
+        let d = self.d_model;
         assert_eq!(h.len() % d, 0, "h must be [N, {d}]");
         let n = h.len() / d;
-        self.route_stage(h, n, out);
-        self.tracker.push(&out.load);
+        self.route_stage(0, h, n, out);
+        self.trackers.push(0, &out.load);
     }
 
-    fn route_stage(&mut self, h: &[f32], n: usize, out: &mut RouterBatch) {
-        let d = self.plan.cfg.d_model;
-        let (e, k) = (self.plan.cfg.n_experts, self.plan.cfg.top_k);
+    fn route_stage(
+        &mut self,
+        layer: usize,
+        h: &[f32],
+        n: usize,
+        out: &mut RouterBatch,
+    ) {
+        let plan_cfg = &self.layers[layer].plan.cfg;
+        let (e, k) = (plan_cfg.n_experts, plan_cfg.top_k);
         // tiny batches: channel round-trips dominate, route inline
         // (same threshold as the scoped engine)
         if self.n_workers == 1 || n < 2 * self.n_workers {
-            self.plan.forward_into(h, &mut self.inline.buf, out);
+            self.layers[layer]
+                .plan
+                .forward_into(h, &mut self.inline.buf, out);
             return;
         }
         {
@@ -294,6 +351,7 @@ impl PoolEngine {
             let scratch =
                 self.parked[slot].take().expect("worker scratch parked");
             let job = Job::Route {
+                layer,
                 shared: self.shared.clone(),
                 span: shard_span(n, self.n_workers, slot),
                 scratch,
@@ -333,25 +391,25 @@ impl PoolEngine {
         }
     }
 
-    /// The full expert-parallel data path for one batch on the
-    /// persistent pool — the drop-in twin of
-    /// [`ServingEngine::forward_full`](crate::router::ServingEngine::forward_full) (the expert bank lives in the
-    /// pool, so it is not a parameter). Bit-identical to the scoped
-    /// path for every worker count.
-    pub fn forward_full(
+    /// One layer's full expert-parallel path on the persistent pool:
+    /// route → compile + gather → expert FFNs → combine. The shared
+    /// stage core of [`Self::forward_full`] (layer 0) and
+    /// [`Self::forward_model`] (every layer in turn).
+    fn forward_layer(
         &mut self,
+        layer: usize,
         h: &[f32],
         capacity_factor: f64,
         policy: OverflowPolicy,
         out: &mut FullForward,
     ) {
-        let d = self.plan.cfg.d_model;
-        let e = self.plan.cfg.n_experts;
+        let d = self.d_model;
+        let e = self.layers[layer].plan.cfg.n_experts;
         assert_eq!(h.len() % d, 0, "h must be [N, {d}]");
         let n = h.len() / d;
         // 1. route (persistent workers, same shard/merge rule)
-        self.route_stage(h, n, &mut out.batch);
-        self.tracker.push(&out.batch.load);
+        self.route_stage(layer, h, n, &mut out.batch);
+        self.trackers.push(layer, &out.batch.load);
         // 2. compile + gather on the caller thread into the shared
         // batch state, handing the caller a copy of the plan
         {
@@ -368,7 +426,7 @@ impl PoolEngine {
         out.y.resize(kept * d, 0.0);
         let groups = self.n_workers.min(e).max(1);
         if groups == 1 || kept < 2 * self.n_workers {
-            self.bank.forward_all(
+            self.layers[layer].bank.forward_all(
                 &self.shared.plan,
                 &self.shared.xg,
                 &mut self.inline.hid,
@@ -389,6 +447,7 @@ impl PoolEngine {
                 scratch.y.clear();
                 scratch.y.resize((row1 - row0) * d, 0.0);
                 let job = Job::Experts {
+                    layer,
                     shared: self.shared.clone(),
                     e0,
                     e1,
@@ -431,6 +490,57 @@ impl PoolEngine {
             &mut out.combined,
         );
     }
+
+    /// The full expert-parallel data path for one batch through
+    /// **layer 0** — the drop-in twin of
+    /// [`ServingEngine::forward_full`](crate::router::ServingEngine::forward_full) (the expert bank lives in the
+    /// pool, so it is not a parameter). Bit-identical to the scoped
+    /// path for every worker count.
+    pub fn forward_full(
+        &mut self,
+        h: &[f32],
+        capacity_factor: f64,
+        policy: OverflowPolicy,
+        out: &mut FullForward,
+    ) {
+        self.forward_layer(0, h, capacity_factor, policy, out);
+    }
+
+    /// Run the whole `L`-layer stack on the persistent pool: per layer
+    /// the same four stages as [`Self::forward_full`], composed with
+    /// the shared residual add — the drop-in twin of
+    /// [`crate::model::ModelEngine::forward`], bit-identical to it for
+    /// every worker count. The final residual stream lands in
+    /// `out.hidden`; each layer's pipeline state stays inspectable in
+    /// `out.layers`.
+    pub fn forward_model(
+        &mut self,
+        h: &[f32],
+        capacity_factor: f64,
+        policy: OverflowPolicy,
+        out: &mut ModelForward,
+    ) {
+        let d = self.d_model;
+        assert_eq!(h.len() % d, 0, "h must be [N, {d}]");
+        let n_layers = self.layers.len();
+        out.ensure_layers(n_layers);
+        let ModelForward { layers: louts, hidden, h_cur } = out;
+        h_cur.clear();
+        h_cur.extend_from_slice(h);
+        for l in 0..n_layers {
+            self.forward_layer(
+                l,
+                &h_cur[..],
+                capacity_factor,
+                policy,
+                &mut louts[l],
+            );
+            residual_add(&h_cur[..], &louts[l].combined, hidden);
+            if l + 1 < n_layers {
+                std::mem::swap(&mut *h_cur, &mut *hidden);
+            }
+        }
+    }
 }
 
 impl Drop for PoolEngine {
@@ -451,6 +561,7 @@ impl Drop for PoolEngine {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::{synthetic_stacked_model, ModelEngine};
     use crate::router::{synthetic_lpr_router, ServingEngine};
     use crate::util::rng::Rng;
 
@@ -492,6 +603,59 @@ mod tests {
                         assert_eq!(got.plan, want.plan);
                         assert_eq!(got.batch, want.batch);
                     }
+                }
+            }
+        }
+    }
+
+    /// Acceptance (stack contract): an L=3 `forward_model` on the pool
+    /// is bit-identical to the scoped `ModelEngine` for worker counts
+    /// {1, 2, 3, 8} — final residual stream, every layer's combined
+    /// output, batches, and plans.
+    #[test]
+    fn pool_forward_model_matches_scoped() {
+        let model = synthetic_stacked_model(
+            "cosine",
+            &Rng::new(7),
+            3,
+            16,
+            8,
+            6,
+            2,
+            10,
+        );
+        let mut rng = Rng::new(13);
+        for n in [5usize, 61] {
+            let h = rand_vec(&mut rng, n * 16);
+            for policy in OverflowPolicy::ALL {
+                let mut scoped = ModelEngine::new(model.clone(), 1);
+                let mut want = ModelForward::new();
+                scoped.forward(&h, 1.0, policy, &mut want);
+                for workers in [1usize, 2, 3, 8] {
+                    let mut pool =
+                        PoolEngine::from_model(model.clone(), workers);
+                    let mut got = ModelForward::new();
+                    pool.forward_model(&h, 1.0, policy, &mut got);
+                    assert_eq!(
+                        got.hidden, want.hidden,
+                        "n={n} w={workers} {} hidden diverged",
+                        policy.name()
+                    );
+                    for l in 0..3 {
+                        assert_eq!(
+                            got.layers[l].combined,
+                            want.layers[l].combined,
+                            "layer {l}"
+                        );
+                        assert_eq!(got.layers[l].batch, want.layers[l].batch);
+                        assert_eq!(got.layers[l].plan, want.layers[l].plan);
+                    }
+                    // per-layer telemetry resolved on both sides
+                    assert_eq!(pool.layer_tracker().n_layers(), 3);
+                    assert_eq!(
+                        pool.layer_tracker().layer(1).windowed(),
+                        got.layers[1].batch.load
+                    );
                 }
             }
         }
@@ -567,5 +731,34 @@ mod tests {
         pool.forward_full(&h1, 1.25, OverflowPolicy::NextChoice, &mut out);
         assert_eq!(out.combined, first);
         assert_eq!(pool.tracker().total_steps(), 3);
+    }
+
+    /// One pool serves interleaved model/single-layer traffic without
+    /// cross-talk: the shared per-batch state fully overwrites.
+    #[test]
+    fn pool_model_reuses_buffers_across_batches() {
+        let model = synthetic_stacked_model(
+            "gaussian",
+            &Rng::new(3),
+            2,
+            16,
+            8,
+            6,
+            2,
+            8,
+        );
+        let mut pool = PoolEngine::from_model(model, 2);
+        let mut rng = Rng::new(8);
+        let mut out = ModelForward::new();
+        let h1 = rand_vec(&mut rng, 40 * 16);
+        let h2 = rand_vec(&mut rng, 5 * 16);
+        pool.forward_model(&h1, 1.25, OverflowPolicy::Drop, &mut out);
+        let first = out.hidden.clone();
+        pool.forward_model(&h2, 1.25, OverflowPolicy::Drop, &mut out);
+        assert_eq!(out.hidden.len(), 5 * 16);
+        pool.forward_model(&h1, 1.25, OverflowPolicy::Drop, &mut out);
+        assert_eq!(out.hidden, first);
+        assert_eq!(pool.layer_tracker().layer(0).total_steps(), 3);
+        assert_eq!(pool.n_layers(), 2);
     }
 }

@@ -78,7 +78,7 @@ fn train_step_learns_and_conserves_load(c: &Ctx) {
     let mut last = f32::NAN;
     for i in 0..10 {
         let m = trainer.train_step(&b).unwrap(); // same batch: memorize
-        let loss = m.get(meta, "loss");
+        let loss = m.get(meta, "loss").unwrap();
         assert!(loss.is_finite());
         if i == 0 {
             first = loss;
@@ -120,9 +120,13 @@ fn loss_weight_patches_change_training(c: &Ctx) {
     let m_on = t_on.train_step(&b).unwrap();
     let m_off = t_off.train_step(&b).unwrap();
     let meta = &c.arts.meta;
-    assert_eq!(m_on.get(meta, "loss"), m_off.get(meta, "loss"));
+    assert_eq!(
+        m_on.get(meta, "loss").unwrap(),
+        m_off.get(meta, "loss").unwrap()
+    );
     assert!(
-        m_on.get(meta, "total_loss") > m_off.get(meta, "total_loss"),
+        m_on.get(meta, "total_loss").unwrap()
+            > m_off.get(meta, "total_loss").unwrap(),
         "regularizers must add mass"
     );
     eprintln!("ok: loss-weight patches");
