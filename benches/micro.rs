@@ -8,26 +8,31 @@
 //! machine-readable JSON to `BENCH_router.json`, the dispatch-plan /
 //! full expert-forward sweep — scoped *and* persistent-pool — to
 //! `BENCH_dispatch.json`, the serving-runtime arrival sweep to
-//! `BENCH_serve.json`, and the stacked-model forward sweep — scoped
-//! `ModelEngine` vs the persistent pool's `forward_model`, layers
-//! {1, 4} — to `BENCH_model.json`, so the perf trajectory is trackable
-//! across PRs). Set `LPR_BENCH_FAST=1` for a short smoke run (CI).
+//! `BENCH_serve.json`, the stacked-model forward sweep — scoped vs
+//! pool backends, layers {1, 4} — to `BENCH_model.json`, and the
+//! facade-vs-direct overhead rows (boxed `dyn MoeEngine` vs the
+//! backend called directly) to `BENCH_engine.json`, so the perf
+//! trajectory is trackable across PRs). All serving-path engines are
+//! built through `Engine::builder()`; the `engine_direct/*` rows are
+//! the deliberate exception — they are the baseline the facade rows
+//! compare against. Set `LPR_BENCH_FAST=1` for a short smoke run (CI).
 
 use lpr::data::{Batcher, MixtureStream, ZipfMarkovCorpus};
 use lpr::dispatch::{
     capacity_for, synthetic_assignments, DispatchPlan, DispatchSim,
     OverflowPolicy, SimConfig,
 };
+use lpr::engine::{Backend, Engine, MoeEngine};
 use lpr::experts::ExpertBank;
 use lpr::metrics::{gini, min_max_ratio};
 use lpr::model::{synthetic_stacked_model, ModelEngine, ModelForward};
 use lpr::router::linalg::matmul;
 use lpr::router::{
-    synthetic_lpr_router, FullForward, RouteBuffers, Router, RouterBatch,
-    RouterConfig, RouterKind, RouterParams, ServingEngine, METRICS,
+    synthetic_lpr_router, RouteBuffers, Router, RouterBatch,
+    RouterConfig, RouterKind, RouterParams, METRICS,
 };
 use lpr::serve::{
-    measure_service_rate, run_open_loop, PoolEngine, ServeConfig,
+    measure_engine_rate, run_open_loop, PoolEngine, ServeConfig,
     ServeRuntime,
 };
 use lpr::util::bench::{write_json_rows, Bench};
@@ -159,7 +164,9 @@ fn main() {
         });
     }
 
-    // ---- sharded serving engine: thread scaling on the LPR hot path --
+    // ---- sharded routing via the engine facade: thread scaling on
+    // the LPR hot path (routing-only, so the facade carries a 1-wide
+    // placeholder bank — the FFN stage never runs) ----
     let cores = std::thread::available_parallelism()
         .map(|p| p.get())
         .unwrap_or(1);
@@ -169,8 +176,14 @@ fn main() {
             if threads > cores {
                 continue;
             }
-            let mut engine =
-                ServingEngine::new(r.plan().clone(), threads);
+            let mut engine = Engine::builder()
+                .layer(
+                    r.plan().clone(),
+                    ExpertBank::new(&Rng::new(0), e, d, 1),
+                )
+                .backend(Backend::Scoped { threads })
+                .build()
+                .expect("valid engine config");
             let mut out = RouterBatch::new();
             let res = b.run_items(
                 &format!("router_engine/{metric}/t{threads}/{n}tok"),
@@ -249,9 +262,7 @@ fn main() {
         let mix = MixtureStream::skewed(&mut rng, dd, 1.6);
         let mut hd = Vec::new();
         mix.fill(&mut rng, dn, &mut hd);
-        let mut engine = ServingEngine::new(router.plan().clone(), 1);
-        let mut batch = RouterBatch::new();
-        engine.route_into(&hd, &mut batch);
+        let batch = router.plan().forward(&hd);
         let cap = capacity_for(batch.topk_idx.len(), de, 1.0);
         for policy in OverflowPolicy::ALL {
             let mut plan = DispatchPlan::new();
@@ -281,9 +292,13 @@ fn main() {
                 if threads > cores {
                     continue;
                 }
-                let mut eng =
-                    ServingEngine::new(router.plan().clone(), threads);
-                let mut ff = FullForward::new();
+                let mut eng = Engine::builder()
+                    .layer(router.plan().clone(), bank.clone())
+                    .backend(Backend::Scoped { threads })
+                    .policy(policy)
+                    .capacity_factor(1.0)
+                    .build()
+                    .expect("valid engine config");
                 let res = b.run_items(
                     &format!(
                         "dispatch_full/{}/t{threads}/{dn}tok",
@@ -291,14 +306,9 @@ fn main() {
                     ),
                     dn as f64,
                     &mut || {
-                        eng.forward_full(
-                            std::hint::black_box(&hd),
-                            &bank,
-                            1.0,
-                            policy,
-                            &mut ff,
-                        );
-                        std::hint::black_box(&ff);
+                        let out =
+                            eng.forward(std::hint::black_box(&hd), dn);
+                        std::hint::black_box(out.hidden.len());
                     },
                 );
                 dispatch_rows.push(DispatchRow {
@@ -312,13 +322,15 @@ fn main() {
                     ns_per_token: res.per_item_ns(),
                 });
                 // persistent pool vs scoped threads on the same batch:
-                // the spawn-per-batch fixed cost this PR removes
-                let mut pool = PoolEngine::new(
-                    router.plan().clone(),
-                    bank.clone(),
-                    threads,
-                );
-                let mut pf = FullForward::new();
+                // the spawn-per-batch fixed cost the pool removes —
+                // under the facade the swap is one builder word
+                let mut pool = Engine::builder()
+                    .layer(router.plan().clone(), bank.clone())
+                    .backend(Backend::Pool { workers: threads })
+                    .policy(policy)
+                    .capacity_factor(1.0)
+                    .build()
+                    .expect("valid engine config");
                 let res = b.run_items(
                     &format!(
                         "pool_full/{}/t{threads}/{dn}tok",
@@ -326,13 +338,9 @@ fn main() {
                     ),
                     dn as f64,
                     &mut || {
-                        pool.forward_full(
-                            std::hint::black_box(&hd),
-                            1.0,
-                            policy,
-                            &mut pf,
-                        );
-                        std::hint::black_box(&pf);
+                        let out =
+                            pool.forward(std::hint::black_box(&hd), dn);
+                        std::hint::black_box(out.hidden.len());
                     },
                 );
                 dispatch_rows.push(DispatchRow {
@@ -367,19 +375,15 @@ fn main() {
                 synthetic_lpr_router("cosine", &mut rng, sd, sdz, se, sk);
             let bank = ExpertBank::new(&Rng::new(42), se, sd, sff);
             let mix = MixtureStream::skewed(&mut rng, sd, 1.6);
-            let mut cal = PoolEngine::new(
-                router.plan().clone(),
-                bank.clone(),
-                workers,
-            );
-            let cap_tok_s = measure_service_rate(
-                &mut cal,
-                &mix,
-                &mut rng,
-                max_batch,
-                3,
-                1.25,
-                OverflowPolicy::Drop,
+            let mut cal = Engine::builder()
+                .layer(router.plan().clone(), bank.clone())
+                .backend(Backend::Pool { workers })
+                .policy(OverflowPolicy::Drop)
+                .capacity_factor(1.25)
+                .build()
+                .expect("valid engine config");
+            let cap_tok_s = measure_engine_rate(
+                &mut cal, &mix, &mut rng, max_batch, 3,
             );
             drop(cal);
             for policy in OverflowPolicy::ALL {
@@ -390,18 +394,21 @@ fn main() {
                     );
                     let bank = ExpertBank::new(&Rng::new(42), se, sd, sff);
                     let mix = MixtureStream::skewed(&mut rng, sd, 1.6);
+                    let engine = Engine::builder()
+                        .layer(router.plan().clone(), bank)
+                        .backend(Backend::Pool { workers })
+                        .policy(policy)
+                        .capacity_factor(1.25)
+                        .build()
+                        .expect("valid engine config");
                     let cfg = ServeConfig {
-                        n_workers: workers,
                         max_batch,
                         max_wait: 2_000,
                         queue_tokens: 8 * max_batch,
-                        capacity_factor: 1.25,
-                        policy,
                         ..ServeConfig::default()
                     };
-                    let mut srv = ServeRuntime::new(
-                        router.plan().clone(),
-                        bank,
+                    let mut srv = ServeRuntime::with_engine(
+                        engine.into_inner(),
                         cfg,
                     );
                     let t0 = std::time::Instant::now();
@@ -477,8 +484,13 @@ fn main() {
                 if workers > cores {
                     continue;
                 }
-                let mut eng = ModelEngine::new(model.clone(), workers);
-                let mut out = ModelForward::new();
+                let mut eng = Engine::builder()
+                    .model(model.clone())
+                    .backend(Backend::Scoped { threads: workers })
+                    .policy(OverflowPolicy::Drop)
+                    .capacity_factor(1.25)
+                    .build()
+                    .expect("valid engine config");
                 let res = b.run_items(
                     &format!(
                         "model_forward/scoped/L{n_layers}/t{workers}/\
@@ -486,13 +498,9 @@ fn main() {
                     ),
                     mn as f64,
                     &mut || {
-                        eng.forward(
-                            std::hint::black_box(&hm),
-                            1.25,
-                            OverflowPolicy::Drop,
-                            &mut out,
-                        );
-                        std::hint::black_box(&out);
+                        let out =
+                            eng.forward(std::hint::black_box(&hm), mn);
+                        std::hint::black_box(out.hidden.len());
                     },
                 );
                 push_row(
@@ -501,9 +509,13 @@ fn main() {
                     workers,
                     res.per_item_ns(),
                 );
-                let mut pool =
-                    PoolEngine::from_model(model.clone(), workers);
-                let mut pout = ModelForward::new();
+                let mut pool = Engine::builder()
+                    .model(model.clone())
+                    .backend(Backend::Pool { workers })
+                    .policy(OverflowPolicy::Drop)
+                    .capacity_factor(1.25)
+                    .build()
+                    .expect("valid engine config");
                 let res = b.run_items(
                     &format!(
                         "model_forward/pool/L{n_layers}/t{workers}/\
@@ -511,13 +523,9 @@ fn main() {
                     ),
                     mn as f64,
                     &mut || {
-                        pool.forward_model(
-                            std::hint::black_box(&hm),
-                            1.25,
-                            OverflowPolicy::Drop,
-                            &mut pout,
-                        );
-                        std::hint::black_box(&pout);
+                        let out =
+                            pool.forward(std::hint::black_box(&hm), mn);
+                        std::hint::black_box(out.hidden.len());
                     },
                 );
                 push_row(
@@ -529,6 +537,106 @@ fn main() {
             }
         }
         write_rows_or_warn("BENCH_model.json", &model_rows);
+    }
+
+    // ---- engine facade overhead: the same forward through a boxed
+    // `dyn MoeEngine` vs the backend called directly. These are the
+    // only direct backend constructions left outside rust/src/engine/
+    // — they ARE the baseline this sweep exists to compare against.
+    // Claim under test: ≈0 ns/token for the trait-object indirection
+    // at batch sizes >= 256. Emitted as BENCH_engine.json. ----
+    {
+        let (fd, fdz, fe, fk, fff) =
+            (32usize, 16usize, 32usize, 4usize, 64usize);
+        let mut engine_rows: Vec<String> = Vec::new();
+        let model = synthetic_stacked_model(
+            "cosine",
+            &Rng::new(2025),
+            1,
+            fd,
+            fdz,
+            fe,
+            fk,
+            fff,
+        );
+        let mut rng = Rng::new(11);
+        let mix = MixtureStream::skewed(&mut rng, fd, 1.6);
+        let mut push_row = |name: &str, n: usize, ns: f64| {
+            engine_rows.push(format!(
+                "{{\"name\": \"{name}\", \"n\": {n}, \"d\": {fd}, \
+                 \"d_ff\": {fff}, \"E\": {fe}, \"k\": {fk}, \
+                 \"threads\": 1, \"ns_per_token\": {ns:.2}}}"
+            ));
+        };
+        let boxed = |backend: Backend| -> Box<dyn MoeEngine> {
+            Engine::builder()
+                .model(model.clone())
+                .backend(backend)
+                .policy(OverflowPolicy::Drop)
+                .capacity_factor(1.25)
+                .build()
+                .expect("valid engine config")
+                .into_inner()
+        };
+        for n in [256usize, 1024] {
+            let mut hf = Vec::new();
+            mix.fill(&mut rng, n, &mut hf);
+            // scoped backend: direct ModelEngine vs boxed facade
+            let mut direct = ModelEngine::new(model.clone(), 1);
+            let mut out = ModelForward::new();
+            let res = b.run_items(
+                &format!("engine_direct/scoped/{n}tok"),
+                n as f64,
+                &mut || {
+                    direct.forward(
+                        std::hint::black_box(&hf),
+                        1.25,
+                        OverflowPolicy::Drop,
+                        &mut out,
+                    );
+                    std::hint::black_box(&out);
+                },
+            );
+            push_row("direct/scoped", n, res.per_item_ns());
+            let mut facade = boxed(Backend::Scoped { threads: 1 });
+            let res = b.run_items(
+                &format!("engine_facade/scoped/{n}tok"),
+                n as f64,
+                &mut || {
+                    let o = facade.forward(std::hint::black_box(&hf), n);
+                    std::hint::black_box(o.hidden.len());
+                },
+            );
+            push_row("facade/scoped", n, res.per_item_ns());
+            // pool backend: direct PoolEngine vs boxed facade
+            let mut dpool = PoolEngine::from_model(model.clone(), 1);
+            let mut pout = ModelForward::new();
+            let res = b.run_items(
+                &format!("engine_direct/pool/{n}tok"),
+                n as f64,
+                &mut || {
+                    dpool.forward_model(
+                        std::hint::black_box(&hf),
+                        1.25,
+                        OverflowPolicy::Drop,
+                        &mut pout,
+                    );
+                    std::hint::black_box(&pout);
+                },
+            );
+            push_row("direct/pool", n, res.per_item_ns());
+            let mut fpool = boxed(Backend::Pool { workers: 1 });
+            let res = b.run_items(
+                &format!("engine_facade/pool/{n}tok"),
+                n as f64,
+                &mut || {
+                    let o = fpool.forward(std::hint::black_box(&hf), n);
+                    std::hint::black_box(o.hidden.len());
+                },
+            );
+            push_row("facade/pool", n, res.per_item_ns());
+        }
+        write_rows_or_warn("BENCH_engine.json", &engine_rows);
     }
 
     // ---- dispatch simulator ----

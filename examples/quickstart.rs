@@ -1,50 +1,105 @@
-//! Quickstart: the smallest end-to-end use of the public API.
+//! Quickstart: the smallest end-to-end use of the public API — the
+//! engine facade plus the wall-clock server, pure Rust (no artifacts,
+//! no PJRT; for the training quickstart see `examples/train_lm.rs`).
 //!
-//! Loads the `quickstart` AOT artifact (built by `make artifacts`),
-//! trains a tiny LPR-routed MoE LM on the synthetic Zipf-Markov corpus
-//! for 60 steps with the state device-resident, then evaluates held-out
-//! loss and prints the per-layer expert-load heatmap with Gini/min-max.
+//! 1. Build a 2-layer synthetic LPR model and an [`Engine`] for it via
+//!    the one construction path, `Engine::builder()` — backend,
+//!    overflow policy, capacity factor, renormalization all in one
+//!    place, validated into typed errors.
+//! 2. Run one batch through [`MoeEngine::forward`] and read the
+//!    per-layer balance telemetry.
+//! 3. Serve the same model behind [`Server`]: real wall-clock request
+//!    arrivals, background micro-batch flushing, blocking
+//!    `enqueue` / `await_completion`.
+//!
+//! Everything returns through the unified [`lpr::Error`], so `?` works
+//! across the engine, queue, and policy layers.
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use anyhow::Result;
-use lpr::coordinator::Trainer;
-use lpr::data::ZipfMarkovCorpus;
-use lpr::metrics::ascii_heatmap;
-use lpr::runtime::{CompiledArtifacts, Runtime};
+use lpr::data::MixtureStream;
+use lpr::dispatch::OverflowPolicy;
+use lpr::engine::{Backend, Engine, MoeEngine};
+use lpr::model::synthetic_stacked_model;
+use lpr::serve::{Server, ServeConfig, ServeRuntime};
+use lpr::util::rng::Rng;
 
-fn main() -> Result<()> {
-    let art_dir = lpr::default_art_dir();
-    let rt = Runtime::cpu()?;
-    println!("loading + compiling artifacts/quickstart.* ...");
-    let arts = CompiledArtifacts::load(&rt, &art_dir, "quickstart")?;
-    let cfg = &arts.meta.config;
-    println!(
-        "model: {} params | {} layers | {} experts, top-{} | router={}",
-        arts.meta.param_count, cfg.n_layers, cfg.n_experts, cfg.top_k,
-        cfg.router
+fn main() -> Result<(), lpr::Error> {
+    let (layers, d, dz, e, k, d_ff) = (2usize, 32, 16, 16, 4, 64);
+    let model = synthetic_stacked_model(
+        "cosine",
+        &Rng::new(7),
+        layers,
+        d,
+        dz,
+        e,
+        k,
+        d_ff,
     );
 
-    let mut trainer = Trainer::new(&rt, &arts, 0, None)?;
-    let mut corpus = ZipfMarkovCorpus::standard(cfg.vocab, 1);
-    let steps = cfg.total_steps;
-    let loss_idx = arts.meta.metric_idx("loss")?;
-    trainer.train_synthetic(&mut corpus, steps, |m| {
-        if m.step % 10 == 0 || m.step + 1 == steps {
-            println!("step {:>3}/{steps}  loss {:.4}", m.step,
-                     m.values[loss_idx]);
-        }
-    })?;
-
-    let mut held_out = ZipfMarkovCorpus::held_out(cfg.vocab, 1, 990_000);
-    let eval = trainer.evaluate(&mut held_out, 8)?;
+    // ---- 1 + 2: one batch through the facade ----
+    let mut engine = Engine::builder()
+        .model(model.clone())
+        .backend(Backend::Scoped { threads: 2 })
+        .policy(OverflowPolicy::LeastLoaded)
+        .capacity_factor(1.25)
+        .build()?;
+    let mut rng = Rng::new(1);
+    let mix = MixtureStream::standard(&mut rng, d);
+    let mut h = Vec::new();
+    mix.fill(&mut rng, 256, &mut h);
+    let n_layers = engine.layers();
+    let out = engine.forward(&h, 256);
     println!(
-        "\nheld-out: loss {:.4} | GINI {:.3} | min-max {:.3} | drop {:.3}",
-        eval.loss,
-        eval.load.mean_gini(),
-        eval.load.mean_min_max(),
-        eval.drop_frac
+        "forward: {} tokens through {n_layers} layers ({} experts \
+         top-{k}), residual stream {} floats",
+        out.n_tokens,
+        e,
+        out.hidden.len()
     );
-    println!("{}", ascii_heatmap(&eval.load));
+    for lb in engine.balance().per_layer() {
+        println!(
+            "  layer {}: win-GINI {:.3}  min-max {:.3}",
+            lb.layer, lb.gini, lb.min_max
+        );
+    }
+
+    // ---- 3: the same model behind the wall-clock server ----
+    let pool = Engine::builder()
+        .model(model)
+        .backend(Backend::Pool { workers: 2 })
+        .policy(OverflowPolicy::LeastLoaded)
+        .capacity_factor(1.25)
+        .build()?;
+    let cfg = ServeConfig {
+        max_batch: 128,
+        max_wait: 2_000, // flush a lone request after 2ms
+        queue_tokens: 1024,
+        ..ServeConfig::default()
+    };
+    let server = Server::start(ServeRuntime::with_engine(pool.into_inner(), cfg));
+    let mut ids = Vec::new();
+    for _ in 0..8 {
+        mix.fill(&mut rng, 16, &mut h);
+        ids.push(server.enqueue(&h)?);
+    }
+    for id in ids {
+        let c = server.await_completion(id);
+        println!(
+            "request {id}: {} tokens served in {} us (wall-clock)",
+            c.n_tokens, c.latency
+        );
+    }
+    let report = server.shutdown();
+    println!(
+        "server: {} requests / {} tokens in {} batches, p50/p99 \
+         {:.0}/{:.0} us, mean win-GINI {:.3}",
+        report.requests,
+        report.tokens,
+        report.batches,
+        report.latency_p50_us,
+        report.latency_p99_us,
+        report.window_gini
+    );
     Ok(())
 }

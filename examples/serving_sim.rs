@@ -7,10 +7,10 @@
 //! argument (§1). The two endpoints of the sweep bracket the paper's
 //! measured routers: vanilla (GINI ~0.7) vs LPR (GINI ~0.04).
 //!
-//! Part 2 routes *real* clustered tokens through the compiled routing
-//! engine (`RouterPlan` on a sharded `ServingEngine`) and dispatches
-//! the flat routed batches into the same simulator — the end-to-end
-//! serving path with no synthetic assignment shortcut.
+//! Part 2 routes *real* clustered tokens through the engine facade
+//! (`Engine::builder()` over a compiled `RouterPlan`, scoped backend)
+//! and dispatches the flat routed batches into the same simulator —
+//! the end-to-end serving path with no synthetic assignment shortcut.
 //!
 //! Part 3 runs the **full expert-parallel data path** on a skewed
 //! stream: route → compile a capacity-binned `DispatchPlan` → real
@@ -39,14 +39,12 @@ use lpr::dispatch::{
     run_full_steps, run_routed_steps, synthetic_assignments,
     DispatchSim, OverflowPolicy, SimConfig,
 };
+use lpr::engine::{Backend, Engine, MoeEngine};
 use lpr::experts::ExpertBank;
-use lpr::model::{
-    run_model_steps, synthetic_stacked_model, ModelEngine, ModelForward,
-};
-use lpr::router::{synthetic_lpr_router, FullForward, ServingEngine};
+use lpr::model::{run_model_steps, synthetic_stacked_model};
+use lpr::router::synthetic_lpr_router;
 use lpr::serve::{
-    measure_service_rate, run_open_loop, PoolEngine, ServeConfig,
-    ServeRuntime,
+    measure_engine_rate, run_open_loop, ServeConfig, ServeRuntime,
 };
 use lpr::util::rng::Rng;
 
@@ -127,7 +125,16 @@ fn main() {
         let router = synthetic_lpr_router(
             metric, &mut rng, d, dz, base.n_experts, base.top_k,
         );
-        let mut engine = ServingEngine::new(router.plan().clone(), threads);
+        // routing-only: the FFN stage never runs, so a 1-wide
+        // placeholder bank satisfies the facade's stack shape
+        let mut engine = Engine::builder()
+            .layer(
+                router.plan().clone(),
+                ExpertBank::new(&Rng::new(0), base.n_experts, d, 1),
+            )
+            .backend(Backend::Scoped { threads })
+            .build()
+            .expect("valid engine config");
         let mut sim = DispatchSim::new(base.clone());
         // Zipf-clustered Gaussian-mixture stream (§2.2.1 assumptions)
         let mix = MixtureStream::standard(&mut rng, d);
@@ -174,21 +181,28 @@ fn main() {
         let router = synthetic_lpr_router(
             "cosine", &mut rng, d, dz, base.n_experts, base.top_k,
         );
-        let mut engine = ServingEngine::new(router.plan().clone(), threads);
         let bank =
             ExpertBank::new(&Rng::new(42), base.n_experts, d, d_ff);
+        // policy and capacity factor live on the builder — one
+        // construction, no per-call threading
+        let mut engine = Engine::builder()
+            .layer(router.plan().clone(), bank)
+            .backend(Backend::Scoped { threads })
+            .policy(policy)
+            .capacity_factor(full_cfg.capacity_factor)
+            .build()
+            .expect("valid engine config");
         let mut sim = DispatchSim::new(full_cfg.clone());
         let mix = MixtureStream::skewed(&mut rng, d, 1.6);
-        let mut ff = FullForward::new();
         let fwd_ns = run_full_steps(
-            &mut engine, &bank, &mix, &mut rng, &mut sim, steps,
-            n_tokens, policy, &mut ff,
+            &mut engine, &mix, &mut rng, &mut sim, steps, n_tokens,
         );
         let r = sim.report();
         // token conservation on the last step's plan
+        let plan = &engine.last().layers[0].plan;
         let computed: usize =
-            ff.plan.counts.iter().map(|&c| c as usize).sum();
-        assert_eq!(computed + ff.plan.n_dropped, n_tokens * base.top_k);
+            plan.counts.iter().map(|&c| c as usize).sum();
+        assert_eq!(computed + plan.n_dropped, n_tokens * base.top_k);
         println!(
             "{:<14} {:>8.2} {:>9.2} {:>13.0} {:>14.0} {:>12.0}",
             policy.name(),
@@ -211,21 +225,27 @@ fn main() {
     let (sd, sdz, se, sk, sff) = (32usize, 16usize, 64usize, 4usize, 64);
     let (req_tokens, max_batch, n_requests) = (32usize, 256usize, 256usize);
     let pool_workers = threads.min(4);
+    let build_pool = |seed: u64, workers: usize| {
+        let mut rng = Rng::new(seed);
+        let router =
+            synthetic_lpr_router("cosine", &mut rng, sd, sdz, se, sk);
+        let bank = ExpertBank::new(&Rng::new(42), se, sd, sff);
+        Engine::builder()
+            .layer(router.plan().clone(), bank)
+            .backend(Backend::Pool { workers })
+            .policy(OverflowPolicy::LeastLoaded)
+            .capacity_factor(1.25)
+            .build()
+            .expect("valid engine config")
+    };
     let mut rng = Rng::new(23);
-    let router = synthetic_lpr_router("cosine", &mut rng, sd, sdz, se, sk);
-    let bank = ExpertBank::new(&Rng::new(42), se, sd, sff);
+    // burn the router draw so this mix matches the per-load cells'
+    // streams (identical seed discipline to the pre-facade version)
+    let _ = synthetic_lpr_router("cosine", &mut rng, sd, sdz, se, sk);
     let mix = MixtureStream::skewed(&mut rng, sd, 1.6);
-    let mut cal =
-        PoolEngine::new(router.plan().clone(), bank.clone(), pool_workers);
-    let cap_tok_s = measure_service_rate(
-        &mut cal,
-        &mix,
-        &mut rng,
-        max_batch,
-        3,
-        1.25,
-        OverflowPolicy::LeastLoaded,
-    );
+    let mut cal = build_pool(23, pool_workers);
+    let cap_tok_s =
+        measure_engine_rate(&mut cal, &mix, &mut rng, max_batch, 3);
     drop(cal);
     println!(
         "\nserving runtime: persistent pool ({pool_workers} workers, \
@@ -240,20 +260,17 @@ fn main() {
     );
     for load in [0.4f64, 0.8, 1.6] {
         let mut rng = Rng::new(23);
-        let router =
-            synthetic_lpr_router("cosine", &mut rng, sd, sdz, se, sk);
-        let bank = ExpertBank::new(&Rng::new(42), se, sd, sff);
+        let engine = build_pool(23, pool_workers);
+        // burn the router draw: identical stream per cell
+        let _ = synthetic_lpr_router("cosine", &mut rng, sd, sdz, se, sk);
         let mix = MixtureStream::skewed(&mut rng, sd, 1.6);
         let cfg = ServeConfig {
-            n_workers: pool_workers,
             max_batch,
             max_wait: 2_000,
             queue_tokens: 8 * max_batch,
-            capacity_factor: 1.25,
-            policy: OverflowPolicy::LeastLoaded,
             ..ServeConfig::default()
         };
-        let mut srv = ServeRuntime::new(router.plan().clone(), bank, cfg);
+        let mut srv = ServeRuntime::with_engine(engine.into_inner(), cfg);
         run_open_loop(
             &mut srv,
             &mix,
@@ -298,7 +315,13 @@ fn main() {
         mk,
         mff,
     );
-    let mut engine = ModelEngine::new(model.clone(), threads.min(4));
+    let mut engine = Engine::builder()
+        .model(model.clone())
+        .backend(Backend::Scoped { threads: threads.min(4) })
+        .policy(OverflowPolicy::Drop)
+        .capacity_factor(1.25)
+        .build()
+        .expect("valid engine config");
     let mut sim = DispatchSim::new_layered(
         SimConfig {
             n_experts: me,
@@ -310,11 +333,8 @@ fn main() {
     );
     let mut rng = Rng::new(2025);
     let mix = MixtureStream::skewed(&mut rng, md, 1.6);
-    let mut mf = ModelForward::new();
-    let fwd_ns = run_model_steps(
-        &mut engine, &mix, &mut rng, &mut sim, 50, 1024,
-        OverflowPolicy::Drop, &mut mf,
-    );
+    let fwd_ns =
+        run_model_steps(&mut engine, &mix, &mut rng, &mut sim, 50, 1024);
     let r = sim.report();
     println!(
         "\nmodel serving: {n_layers}-layer LPR stack ({me} experts \
@@ -330,17 +350,22 @@ fn main() {
             lb.layer, lb.gini, lb.min_max, lb.cv
         );
     }
-    // the pool serves the identical stack bit-for-bit
-    let mut pool = PoolEngine::from_model(model, 2);
-    let mut pf = ModelForward::new();
+    // the pool backend serves the identical stack bit-for-bit — under
+    // the facade, swapping backends is a one-word change
+    let mut pool = Engine::builder()
+        .model(model)
+        .backend(Backend::Pool { workers: 2 })
+        .policy(OverflowPolicy::Drop)
+        .capacity_factor(1.25)
+        .build()
+        .expect("valid engine config");
     let mut h = Vec::new();
     mix.fill(&mut rng, 256, &mut h);
-    engine.forward(&h, 1.25, OverflowPolicy::Drop, &mut mf);
-    pool.forward_model(&h, 1.25, OverflowPolicy::Drop, &mut pf);
-    assert_eq!(mf.hidden, pf.hidden);
+    let scoped_hidden = engine.forward(&h, 256).hidden.to_vec();
+    assert_eq!(scoped_hidden, pool.forward(&h, 256).hidden);
     println!(
         "\nreading: per-layer balance is what the paper's per-layer \
-         plots measure; the\npersistent pool serves the identical stack \
+         plots measure; the\npool backend serves the identical stack \
          bit-for-bit (asserted above) with\nno per-batch thread spawns \
          — `lpr serve --ckpt` runs this path on real\ntraining \
          checkpoints via the pure-Rust bridge."

@@ -24,15 +24,16 @@
 
 pub mod plan;
 
-pub use plan::{capacity_for, DispatchPlan, OverflowPolicy, DROPPED};
+pub use plan::{
+    capacity_for, DispatchPlan, OverflowPolicy, ParsePolicyError, DROPPED,
+};
 
 use crate::data::MixtureStream;
-use crate::experts::ExpertBank;
 use crate::metrics::{
     gini, min_max_ratio, percentile_nearest_rank, LayerBalance,
     LayerLoadTracker, LoadTracker,
 };
-use crate::router::{FullForward, RouterBatch, ServingEngine};
+use crate::router::{FullForward, RouterBatch};
 use crate::util::rng::Rng;
 
 #[derive(Debug, Clone)]
@@ -419,7 +420,7 @@ impl DispatchSim {
 /// the measurement protocol here, not per call site.
 #[allow(clippy::too_many_arguments)]
 pub fn run_routed_steps(
-    engine: &mut ServingEngine,
+    engine: &mut dyn crate::engine::MoeEngine,
     mix: &MixtureStream,
     rng: &mut Rng,
     sim: &mut DispatchSim,
@@ -442,36 +443,37 @@ pub fn run_routed_steps(
 }
 
 /// [`run_routed_steps`] with real expert compute: each step runs the
-/// full route → plan → expert FFN → combine path
-/// (`ServingEngine::forward_full`) and accounts the resulting plan in
-/// the simulator. Returns total forward nanoseconds (routing + plan
-/// build + FFN + combine).
-#[allow(clippy::too_many_arguments)]
+/// full route → plan → expert FFN → combine path through the engine
+/// facade and accounts the resulting layer-0 plan in the simulator.
+/// Returns total forward nanoseconds (routing + plan build + FFN +
+/// combine). The engine's builder-time capacity factor / overflow
+/// policy govern the forward; build the engine from
+/// `sim.cfg.capacity_factor` — asserted here, so simulator accounting
+/// and real compute cannot silently use different bin sizes.
 pub fn run_full_steps(
-    engine: &mut ServingEngine,
-    bank: &ExpertBank,
+    engine: &mut dyn crate::engine::MoeEngine,
     mix: &MixtureStream,
     rng: &mut Rng,
     sim: &mut DispatchSim,
     steps: usize,
     tokens_per_step: usize,
-    policy: OverflowPolicy,
-    ff: &mut FullForward,
 ) -> u128 {
+    assert!(
+        (engine.capacity_factor() - sim.cfg.capacity_factor).abs() < 1e-12,
+        "engine capacity factor {} != sim capacity factor {} — build \
+         the engine from sim.cfg.capacity_factor so accounting matches \
+         compute",
+        engine.capacity_factor(),
+        sim.cfg.capacity_factor
+    );
     let mut h = Vec::new();
     let mut fwd_ns = 0u128;
     for _ in 0..steps {
         mix.fill(rng, tokens_per_step, &mut h);
         let t0 = std::time::Instant::now();
-        engine.forward_full(
-            &h,
-            bank,
-            sim.cfg.capacity_factor,
-            policy,
-            ff,
-        );
+        engine.forward(&h, tokens_per_step);
         fwd_ns += t0.elapsed().as_nanos();
-        sim.step_plan(&ff.plan);
+        sim.step_plan(&engine.last().layers[0].plan);
     }
     fwd_ns
 }
@@ -802,10 +804,19 @@ mod tests {
     #[test]
     fn run_routed_steps_conserves_tokens() {
         use crate::data::MixtureStream;
-        use crate::router::{synthetic_lpr_router, ServingEngine};
+        use crate::engine::{Backend, Engine};
+        use crate::experts::ExpertBank;
+        use crate::router::synthetic_lpr_router;
         let mut rng = Rng::new(8);
         let r = synthetic_lpr_router("dot", &mut rng, 16, 8, 8, 2);
-        let mut eng = ServingEngine::new(r.plan().clone(), 2);
+        // routing-only study: the FFN stage never runs, so a 1-wide
+        // placeholder bank satisfies the stack shape
+        let bank = ExpertBank::new(&Rng::new(0), 8, 16, 1);
+        let mut eng = Engine::builder()
+            .layer(r.plan().clone(), bank)
+            .backend(Backend::Scoped { threads: 2 })
+            .build()
+            .unwrap();
         let mix = MixtureStream::standard(&mut rng, 16);
         let mut sim = DispatchSim::new(SimConfig {
             n_experts: 8,
@@ -830,14 +841,12 @@ mod tests {
     #[test]
     fn run_full_steps_accounts_real_compute() {
         use crate::data::MixtureStream;
+        use crate::engine::{Backend, Engine, MoeEngine};
         use crate::experts::ExpertBank;
-        use crate::router::{
-            synthetic_lpr_router, FullForward, ServingEngine,
-        };
+        use crate::router::synthetic_lpr_router;
         let mut rng = Rng::new(19);
         let (d, e, k) = (16usize, 8usize, 2usize);
         let r = synthetic_lpr_router("cosine", &mut rng, d, 8, e, k);
-        let mut eng = ServingEngine::new(r.plan().clone(), 2);
         let bank = ExpertBank::new(&Rng::new(4), e, d, 16);
         let mix = MixtureStream::standard(&mut rng, d);
         let mut sim = DispatchSim::new(SimConfig {
@@ -847,23 +856,21 @@ mod tests {
             capacity_factor: 1.0,
             ..SimConfig::default()
         });
-        let mut ff = FullForward::new();
-        run_full_steps(
-            &mut eng,
-            &bank,
-            &mix,
-            &mut rng,
-            &mut sim,
-            4,
-            32,
-            OverflowPolicy::LeastLoaded,
-            &mut ff,
-        );
+        // the engine carries cf/policy; built from the sim's cf so the
+        // two account the same bins
+        let mut eng = Engine::builder()
+            .layer(r.plan().clone(), bank)
+            .backend(Backend::Pool { workers: 2 })
+            .policy(OverflowPolicy::LeastLoaded)
+            .capacity_factor(1.0)
+            .build()
+            .unwrap();
+        run_full_steps(&mut eng, &mix, &mut rng, &mut sim, 4, 32);
         let rep = sim.report();
         assert_eq!(rep.steps, 4);
         assert_eq!(rep.tokens_routed, 4 * 32 * k);
         // the last step's combined output has one row per token
-        assert_eq!(ff.combined.len(), 32 * d);
+        assert_eq!(eng.last().layers[0].combined.len(), 32 * d);
     }
 
     #[test]

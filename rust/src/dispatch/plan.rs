@@ -93,6 +93,38 @@ pub enum OverflowPolicy {
     LeastLoaded,
 }
 
+/// Error of `OverflowPolicy::from_str`: carries the rejected name and
+/// renders the accepted set, so callers print it verbatim instead of
+/// hand-assembling the list (`Display` + `std::error::Error`,
+/// convertible into [`crate::Error`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParsePolicyError(pub String);
+
+impl std::fmt::Display for ParsePolicyError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // render the accepted set from ALL so a new variant can never
+        // be missing from the message
+        write!(f, "unknown overflow policy '{}' (expected ", self.0)?;
+        for (i, p) in OverflowPolicy::ALL.iter().enumerate() {
+            if i > 0 {
+                write!(f, " | ")?;
+            }
+            write!(f, "{}", p.name())?;
+        }
+        write!(f, ")")
+    }
+}
+
+impl std::error::Error for ParsePolicyError {}
+
+impl std::str::FromStr for OverflowPolicy {
+    type Err = ParsePolicyError;
+
+    fn from_str(s: &str) -> Result<OverflowPolicy, ParsePolicyError> {
+        OverflowPolicy::parse(s).ok_or_else(|| ParsePolicyError(s.into()))
+    }
+}
+
 impl OverflowPolicy {
     pub const ALL: [OverflowPolicy; 3] = [
         OverflowPolicy::Drop,

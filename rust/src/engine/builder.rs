@@ -1,0 +1,341 @@
+//! [`EngineBuilder`]: the one place engine configuration lives.
+//!
+//! Before this module, every scenario (CLI subcommand, repro table,
+//! bench, example) hand-wired the serving stack — pick a
+//! `ServingEngine` / `PoolEngine` / `ModelEngine`, thread the capacity
+//! factor and overflow policy through each call, remember to
+//! `set_renormalize` on the right object — and misconfigurations
+//! surfaced as panics deep inside the pipeline (or not at all). The
+//! builder owns all of that configuration up front and validates it
+//! into **typed** [`EngineBuildError`]s (`Display` +
+//! `std::error::Error`, convertible into [`crate::Error`]) before any
+//! worker spawns or buffer allocates.
+//!
+//! ```
+//! use lpr::engine::{Backend, Engine, MoeEngine};
+//! use lpr::dispatch::OverflowPolicy;
+//! use lpr::model::synthetic_stacked_model;
+//! use lpr::util::rng::Rng;
+//!
+//! let model =
+//!     synthetic_stacked_model("cosine", &Rng::new(7), 2, 8, 4, 4, 2, 6);
+//! let mut engine = Engine::builder()
+//!     .model(model)
+//!     .backend(Backend::Scoped { threads: 2 })
+//!     .policy(OverflowPolicy::LeastLoaded)
+//!     .capacity_factor(1.25)
+//!     .renormalize(true)
+//!     .build()?;
+//! let h = vec![0.5f32; 4 * 8];
+//! let out = engine.forward(&h, 4);
+//! assert_eq!(out.hidden.len(), 4 * 8);
+//! assert_eq!(engine.layers(), 2);
+//! # Ok::<(), lpr::engine::EngineBuildError>(())
+//! ```
+
+use crate::dispatch::plan::OverflowPolicy;
+use crate::experts::ExpertBank;
+use crate::model::{MoeLayer, StackedModel};
+use crate::router::RouterPlan;
+
+use super::{Engine, PoolBackend, ScopedBackend};
+
+/// Which execution backend serves the model. Both run the identical
+/// route → plan → FFN → combine → residual pipeline and are
+/// bit-identical to each other for every thread/worker count (the
+/// thread-determinism contract; pinned by the parity tests in
+/// `engine::tests`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Scoped worker threads spawned per batch
+    /// (`model::ModelEngine` over `router::ServingEngine`): no
+    /// long-lived threads, best for one-shot or bursty work.
+    Scoped { threads: usize },
+    /// Persistent channel-fed worker pool (`serve::PoolEngine`): the
+    /// workers outlive every batch, best for sustained serving traffic.
+    Pool { workers: usize },
+}
+
+impl Backend {
+    /// The configured parallelism (threads or workers).
+    pub fn parallelism(self) -> usize {
+        match self {
+            Backend::Scoped { threads } => threads,
+            Backend::Pool { workers } => workers,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Scoped { .. } => "scoped",
+            Backend::Pool { .. } => "pool",
+        }
+    }
+}
+
+/// A rejected engine configuration. Every variant names the offending
+/// layer/value so `main.rs` can print it verbatim instead of
+/// re-deriving context by hand.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EngineBuildError {
+    /// Neither [`EngineBuilder::model`] nor [`EngineBuilder::layer`]
+    /// was called.
+    MissingModel,
+    /// Both [`EngineBuilder::model`] and [`EngineBuilder::layer`] were
+    /// called — ambiguous; pick one.
+    ModelAndLayers,
+    /// A layer's router plan and expert bank disagree on a dimension.
+    LayerMismatch {
+        layer: usize,
+        what: &'static str,
+        plan: usize,
+        bank: usize,
+    },
+    /// A layer's `d_model` differs from layer 0's — the residual
+    /// stream needs one width.
+    WidthMismatch { layer: usize, d_model: usize, expected: usize },
+    /// A layer's `d_model` is zero.
+    ZeroWidth { layer: usize },
+    /// A layer routes top-0: no expert is ever selected.
+    ZeroTopK { layer: usize },
+    /// A layer's `top_k` exceeds its expert count — the flat `[N·k]`
+    /// routed layout cannot hold `k` distinct experts.
+    TopKExceedsExperts { layer: usize, top_k: usize, n_experts: usize },
+    /// `Backend::Scoped { threads: 0 }` / `Backend::Pool { workers: 0 }`.
+    /// (The legacy constructors silently clamped this to 1; the builder
+    /// rejects it instead.)
+    ZeroParallelism { backend: &'static str },
+    /// Capacity factor must be finite and `> 0` (0 would squeeze every
+    /// expert bin to the minimum regardless of batch size — always a
+    /// misconfiguration, never an intent).
+    BadCapacityFactor(f64),
+}
+
+impl std::fmt::Display for EngineBuildError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EngineBuildError::MissingModel => write!(
+                f,
+                "engine builder needs a model: call .model(..) or \
+                 .layer(..) before .build()"
+            ),
+            EngineBuildError::ModelAndLayers => write!(
+                f,
+                "engine builder got both .model(..) and .layer(..) — \
+                 supply the stack one way or the other"
+            ),
+            EngineBuildError::LayerMismatch { layer, what, plan, bank } => {
+                write!(
+                    f,
+                    "layer {layer}: router plan and expert bank disagree \
+                     on {what} (plan {plan}, bank {bank})"
+                )
+            }
+            EngineBuildError::WidthMismatch { layer, d_model, expected } => {
+                write!(
+                    f,
+                    "layer {layer}: d_model {d_model} differs from layer \
+                     0's {expected} — the residual stream needs one width"
+                )
+            }
+            EngineBuildError::ZeroWidth { layer } => {
+                write!(f, "layer {layer}: d_model must be >= 1")
+            }
+            EngineBuildError::ZeroTopK { layer } => {
+                write!(f, "layer {layer}: top_k must be >= 1")
+            }
+            EngineBuildError::TopKExceedsExperts {
+                layer,
+                top_k,
+                n_experts,
+            } => write!(
+                f,
+                "layer {layer}: top_k ({top_k}) exceeds the expert count \
+                 ({n_experts})"
+            ),
+            EngineBuildError::ZeroParallelism { backend } => write!(
+                f,
+                "{backend} backend needs at least 1 worker thread"
+            ),
+            EngineBuildError::BadCapacityFactor(cf) => write!(
+                f,
+                "capacity factor must be finite and > 0, got {cf}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for EngineBuildError {}
+
+/// Builder for [`Engine`] — see the module docs for a worked example.
+/// Defaults: `Backend::Scoped { threads: 1 }`, `OverflowPolicy::Drop`,
+/// capacity factor 1.25, renormalization off.
+#[derive(Debug, Clone, Default)]
+pub struct EngineBuilder {
+    model: Option<StackedModel>,
+    raw_layers: Vec<(RouterPlan, ExpertBank)>,
+    backend: Option<Backend>,
+    policy: OverflowPolicy,
+    capacity_factor: Option<f64>,
+    renormalize: bool,
+}
+
+impl EngineBuilder {
+    pub fn new() -> EngineBuilder {
+        EngineBuilder::default()
+    }
+
+    /// Serve a pre-assembled [`StackedModel`] (e.g. from
+    /// `model::bridge` or `model::synthetic_stacked_model`).
+    pub fn model(mut self, model: StackedModel) -> EngineBuilder {
+        self.model = Some(model);
+        self
+    }
+
+    /// Push one layer as a raw (plan, bank) pair; layers stack in call
+    /// order. Unlike `MoeLayer::new`, mismatched pairs surface as typed
+    /// [`EngineBuildError`]s at [`Self::build`], not panics.
+    pub fn layer(
+        mut self,
+        plan: RouterPlan,
+        bank: ExpertBank,
+    ) -> EngineBuilder {
+        self.raw_layers.push((plan, bank));
+        self
+    }
+
+    /// Execution backend (default `Scoped { threads: 1 }`).
+    pub fn backend(mut self, backend: Backend) -> EngineBuilder {
+        self.backend = Some(backend);
+        self
+    }
+
+    /// Overflow policy applied at every layer's dispatch-plan build
+    /// (default [`OverflowPolicy::Drop`]).
+    pub fn policy(mut self, policy: OverflowPolicy) -> EngineBuilder {
+        self.policy = policy;
+        self
+    }
+
+    /// Expert capacity factor per batch (default 1.25; shared
+    /// `dispatch::capacity_for` rule).
+    pub fn capacity_factor(mut self, cf: f64) -> EngineBuilder {
+        self.capacity_factor = Some(cf);
+        self
+    }
+
+    /// Rescale a partially-dropped token's surviving gate weights to
+    /// its pre-drop mass in every layer's combine (default off). With
+    /// no drops this is a bit-exact no-op (pinned by
+    /// `renormalize_without_drops_is_a_no_op`).
+    pub fn renormalize(mut self, on: bool) -> EngineBuilder {
+        self.renormalize = on;
+        self
+    }
+
+    /// Validate the configuration and construct the backend. The only
+    /// place in the crate where backends are built for scenario code.
+    pub fn build(self) -> Result<Engine, EngineBuildError> {
+        let model = match (self.model, self.raw_layers.is_empty()) {
+            (Some(_), false) => {
+                return Err(EngineBuildError::ModelAndLayers)
+            }
+            (None, true) => return Err(EngineBuildError::MissingModel),
+            (Some(m), true) => {
+                validate_layers(m.layers().iter().map(|l| (&l.plan, &l.bank)))?;
+                m
+            }
+            (None, false) => {
+                validate_layers(
+                    self.raw_layers.iter().map(|(p, b)| (p, b)),
+                )?;
+                // validation passed, so the MoeLayer/StackedModel
+                // construction asserts cannot fire
+                StackedModel::new(
+                    self.raw_layers
+                        .into_iter()
+                        .map(|(p, b)| MoeLayer::new(p, b))
+                        .collect(),
+                )
+            }
+        };
+        let backend = self.backend.unwrap_or(Backend::Scoped { threads: 1 });
+        if backend.parallelism() == 0 {
+            return Err(EngineBuildError::ZeroParallelism {
+                backend: backend.name(),
+            });
+        }
+        let cf = self.capacity_factor.unwrap_or(1.25);
+        if !cf.is_finite() || cf <= 0.0 {
+            return Err(EngineBuildError::BadCapacityFactor(cf));
+        }
+        let inner: Box<dyn super::MoeEngine> = match backend {
+            Backend::Scoped { threads } => Box::new(ScopedBackend::new(
+                model,
+                threads,
+                cf,
+                self.policy,
+                self.renormalize,
+            )),
+            Backend::Pool { workers } => Box::new(PoolBackend::new(
+                model,
+                workers,
+                cf,
+                self.policy,
+                self.renormalize,
+            )),
+        };
+        Ok(Engine::from_parts(inner, backend, cf, self.policy))
+    }
+}
+
+/// The shared layer validation behind both builder input forms.
+fn validate_layers<'a>(
+    layers: impl Iterator<Item = (&'a RouterPlan, &'a ExpertBank)>,
+) -> Result<(), EngineBuildError> {
+    let mut expected_d = None;
+    let mut any = false;
+    for (layer, (plan, bank)) in layers.enumerate() {
+        any = true;
+        let cfg = &plan.cfg;
+        if cfg.d_model == 0 {
+            return Err(EngineBuildError::ZeroWidth { layer });
+        }
+        if cfg.d_model != bank.d_model {
+            return Err(EngineBuildError::LayerMismatch {
+                layer,
+                what: "d_model",
+                plan: cfg.d_model,
+                bank: bank.d_model,
+            });
+        }
+        if cfg.n_experts != bank.n_experts {
+            return Err(EngineBuildError::LayerMismatch {
+                layer,
+                what: "expert count",
+                plan: cfg.n_experts,
+                bank: bank.n_experts,
+            });
+        }
+        if cfg.top_k == 0 {
+            return Err(EngineBuildError::ZeroTopK { layer });
+        }
+        if cfg.top_k > cfg.n_experts {
+            return Err(EngineBuildError::TopKExceedsExperts {
+                layer,
+                top_k: cfg.top_k,
+                n_experts: cfg.n_experts,
+            });
+        }
+        let expected = *expected_d.get_or_insert(cfg.d_model);
+        if cfg.d_model != expected {
+            return Err(EngineBuildError::WidthMismatch {
+                layer,
+                d_model: cfg.d_model,
+                expected,
+            });
+        }
+    }
+    debug_assert!(any, "builder forms guarantee at least one layer");
+    Ok(())
+}

@@ -1,0 +1,719 @@
+//! The engine facade: **one** public forward API over every serving
+//! backend.
+//!
+//! Four PRs of growth left the forward path with six overlapping entry
+//! points (`Router::forward`, `RouterPlan::forward_into`,
+//! `ServingEngine::forward_full`, `PoolEngine::{forward_full,
+//! forward_model}`, `ModelEngine::forward`), so every new scenario
+//! re-wired the stack by hand — choosing a backend type, threading the
+//! capacity factor and overflow policy through each call, and
+//! remembering which object owns `set_renormalize`. This module
+//! replaces that with a single trait and a single construction path:
+//!
+//! - [`MoeEngine`] — the one forward interface: `forward(h, n)` runs
+//!   the full route → dispatch-plan → expert FFN → combine → residual
+//!   pipeline over the whole layer stack and returns a borrowed
+//!   [`EngineOutput`] view (zero copies, zero steady-state allocation);
+//!   `route_into` serves routing-only studies; `balance()`, `layers()`,
+//!   `d_model()` expose the telemetry and shape every scenario needs.
+//! - [`EngineBuilder`] (via [`Engine::builder`]) — owns **all**
+//!   configuration that used to be scattered across constructors and
+//!   setters (model, backend, overflow policy, capacity factor,
+//!   renormalization) and validates it into typed
+//!   [`EngineBuildError`]s instead of panics.
+//! - [`Backend`] — `Scoped { threads }` (per-batch `thread::scope`,
+//!   via `model::ModelEngine`) or `Pool { workers }` (persistent
+//!   channel-fed workers, via `serve::PoolEngine`). Both are
+//!   bit-identical to each other and to the legacy entry points for
+//!   every thread/worker count — pinned by the parity property tests
+//!   below across backends × layers × workers {1, 2, 3, 8}.
+//!
+//! The legacy entry points remain as thin `#[deprecated]` shims (see
+//! the deprecation table in `docs/ARCHITECTURE.md`); the engines they
+//! name are now *backend internals* constructed only here. The
+//! trait-object indirection costs ≈0 ns/token at serving batch sizes —
+//! `BENCH_engine.json` (facade vs direct-call rows, emitted by
+//! `benches/micro.rs`) tracks that claim in CI.
+//!
+//! ```
+//! use lpr::engine::{Backend, Engine, MoeEngine};
+//! use lpr::model::synthetic_stacked_model;
+//! use lpr::util::rng::Rng;
+//!
+//! let model =
+//!     synthetic_stacked_model("cosine", &Rng::new(1), 3, 8, 4, 4, 2, 6);
+//! // the same model behind both backends, built the same way
+//! let mut scoped = Engine::builder()
+//!     .model(model.clone())
+//!     .backend(Backend::Scoped { threads: 2 })
+//!     .build()?;
+//! let mut pool = Engine::builder()
+//!     .model(model)
+//!     .backend(Backend::Pool { workers: 3 })
+//!     .build()?;
+//! let h = vec![0.25f32; 5 * 8];
+//! let a = scoped.forward(&h, 5).hidden.to_vec();
+//! let b = pool.forward(&h, 5).hidden.to_vec();
+//! assert_eq!(a, b); // bit-identical across backends
+//! # Ok::<(), lpr::engine::EngineBuildError>(())
+//! ```
+
+pub mod builder;
+
+pub use builder::{Backend, EngineBuildError, EngineBuilder};
+
+use crate::dispatch::plan::OverflowPolicy;
+use crate::metrics::LayerLoadTracker;
+use crate::model::{ModelEngine, ModelForward, StackedModel};
+use crate::router::{FullForward, RouterBatch};
+use crate::serve::PoolEngine;
+
+/// Borrowed view of one stacked forward — what [`MoeEngine::forward`]
+/// returns. The referenced buffers live inside the engine and are
+/// overwritten by the next `forward` call (clone what must outlive it).
+#[derive(Debug)]
+pub struct EngineOutput<'a> {
+    /// Tokens in this batch.
+    pub n_tokens: usize,
+    /// `[n_tokens, d]` residual stream after the last layer.
+    pub hidden: &'a [f32],
+    /// Per-layer pipeline state (routed batch, dispatch plan, combined
+    /// MoE output), layer order.
+    pub layers: &'a [FullForward],
+}
+
+impl<'a> EngineOutput<'a> {
+    /// Final residual-stream row of token `r`.
+    pub fn token_row(&self, r: usize) -> &'a [f32] {
+        let hidden: &'a [f32] = self.hidden;
+        let d = hidden.len() / self.n_tokens.max(1);
+        &hidden[r * d..(r + 1) * d]
+    }
+}
+
+/// The one forward interface every serving backend implements. All
+/// run-time configuration (capacity factor, overflow policy,
+/// renormalization) is owned by the engine — fixed at
+/// [`Engine::builder`] time — so call sites pass activations and
+/// nothing else.
+///
+/// Implementations are `Send` (a boxed engine can move behind
+/// [`crate::serve::Server`]'s background thread) and deterministic:
+/// `forward` is bit-identical for every backend and thread/worker
+/// count (the thread-determinism contract in `docs/ARCHITECTURE.md`).
+pub trait MoeEngine: Send {
+    /// Run the full stack over `h` (`[n, d]` row-major, `n` tokens):
+    /// per layer route → compile a dispatch plan → expert FFNs →
+    /// gate-weighted combine, composed through the residual add.
+    fn forward(&mut self, h: &[f32], n: usize) -> EngineOutput<'_>;
+
+    /// Route `h` through **layer 0**'s router only (no dispatch/FFN) —
+    /// the routing-study entry point (`route synthetic`,
+    /// `dispatch-sim --routed`, the router benches).
+    fn route_into(&mut self, h: &[f32], out: &mut RouterBatch);
+
+    /// Rolling per-layer `[L, E]` routed-load balance over this
+    /// engine's batches.
+    fn balance(&self) -> &LayerLoadTracker;
+
+    /// The capacity factor every batch is planned with (builder-owned).
+    /// Exposed so drivers that also feed a `DispatchSim` can *assert*
+    /// the two agree on bin sizes instead of trusting a comment.
+    fn capacity_factor(&self) -> f64;
+
+    /// The overflow policy every batch is planned with (builder-owned).
+    fn policy(&self) -> OverflowPolicy;
+
+    /// MoE layers in the served stack.
+    fn layers(&self) -> usize;
+
+    /// Residual-stream width.
+    fn d_model(&self) -> usize;
+
+    /// The last `forward`'s full pipeline state (valid — empty — before
+    /// the first call). `serve::ServeRuntime` uses this to map batch
+    /// members onto combined rows.
+    fn last(&self) -> &ModelForward;
+}
+
+impl MoeEngine for Box<dyn MoeEngine> {
+    fn forward(&mut self, h: &[f32], n: usize) -> EngineOutput<'_> {
+        (**self).forward(h, n)
+    }
+    fn route_into(&mut self, h: &[f32], out: &mut RouterBatch) {
+        (**self).route_into(h, out)
+    }
+    fn balance(&self) -> &LayerLoadTracker {
+        (**self).balance()
+    }
+    fn capacity_factor(&self) -> f64 {
+        (**self).capacity_factor()
+    }
+    fn policy(&self) -> OverflowPolicy {
+        (**self).policy()
+    }
+    fn layers(&self) -> usize {
+        (**self).layers()
+    }
+    fn d_model(&self) -> usize {
+        (**self).d_model()
+    }
+    fn last(&self) -> &ModelForward {
+        (**self).last()
+    }
+}
+
+/// Scoped-thread backend: `model::ModelEngine` (one
+/// `router::ServingEngine` per layer, threads spawned per batch) plus
+/// the builder-owned run configuration. Constructed only by
+/// [`EngineBuilder::build`].
+pub(crate) struct ScopedBackend {
+    eng: ModelEngine,
+    capacity_factor: f64,
+    policy: OverflowPolicy,
+    out: ModelForward,
+}
+
+impl ScopedBackend {
+    pub(crate) fn new(
+        model: StackedModel,
+        threads: usize,
+        capacity_factor: f64,
+        policy: OverflowPolicy,
+        renormalize: bool,
+    ) -> ScopedBackend {
+        let mut eng = ModelEngine::new(model, threads);
+        eng.set_renormalize(renormalize);
+        let mut out = ModelForward::new();
+        out.ensure_layers(eng.n_layers());
+        ScopedBackend { eng, capacity_factor, policy, out }
+    }
+}
+
+impl MoeEngine for ScopedBackend {
+    fn forward(&mut self, h: &[f32], n: usize) -> EngineOutput<'_> {
+        assert_eq!(h.len(), n * self.eng.d_model(), "h must be [n, d]");
+        self.eng.forward(h, self.capacity_factor, self.policy, &mut self.out);
+        EngineOutput {
+            n_tokens: n,
+            hidden: &self.out.hidden,
+            layers: &self.out.layers,
+        }
+    }
+    fn route_into(&mut self, h: &[f32], out: &mut RouterBatch) {
+        self.eng.route_into(h, out);
+    }
+    fn balance(&self) -> &LayerLoadTracker {
+        self.eng.tracker()
+    }
+    fn capacity_factor(&self) -> f64 {
+        self.capacity_factor
+    }
+    fn policy(&self) -> OverflowPolicy {
+        self.policy
+    }
+    fn layers(&self) -> usize {
+        self.eng.n_layers()
+    }
+    fn d_model(&self) -> usize {
+        self.eng.d_model()
+    }
+    fn last(&self) -> &ModelForward {
+        &self.out
+    }
+}
+
+/// Persistent-pool backend: `serve::PoolEngine` (long-lived channel-fed
+/// workers serving the whole stack) plus the builder-owned run
+/// configuration. Constructed only by [`EngineBuilder::build`].
+pub(crate) struct PoolBackend {
+    pool: PoolEngine,
+    capacity_factor: f64,
+    policy: OverflowPolicy,
+    out: ModelForward,
+}
+
+impl PoolBackend {
+    pub(crate) fn new(
+        model: StackedModel,
+        workers: usize,
+        capacity_factor: f64,
+        policy: OverflowPolicy,
+        renormalize: bool,
+    ) -> PoolBackend {
+        let mut pool = PoolEngine::from_model(model, workers);
+        pool.set_renormalize(renormalize);
+        let mut out = ModelForward::new();
+        out.ensure_layers(pool.n_layers());
+        PoolBackend { pool, capacity_factor, policy, out }
+    }
+}
+
+impl MoeEngine for PoolBackend {
+    fn forward(&mut self, h: &[f32], n: usize) -> EngineOutput<'_> {
+        assert_eq!(h.len(), n * self.pool.d_model(), "h must be [n, d]");
+        self.pool.forward_model(
+            h,
+            self.capacity_factor,
+            self.policy,
+            &mut self.out,
+        );
+        EngineOutput {
+            n_tokens: n,
+            hidden: &self.out.hidden,
+            layers: &self.out.layers,
+        }
+    }
+    fn route_into(&mut self, h: &[f32], out: &mut RouterBatch) {
+        self.pool.route_into(h, out);
+    }
+    fn balance(&self) -> &LayerLoadTracker {
+        self.pool.layer_tracker()
+    }
+    fn capacity_factor(&self) -> f64 {
+        self.capacity_factor
+    }
+    fn policy(&self) -> OverflowPolicy {
+        self.policy
+    }
+    fn layers(&self) -> usize {
+        self.pool.n_layers()
+    }
+    fn d_model(&self) -> usize {
+        self.pool.d_model()
+    }
+    fn last(&self) -> &ModelForward {
+        &self.out
+    }
+}
+
+/// A built engine: the boxed backend plus the resolved configuration,
+/// for introspection. `Engine` itself implements [`MoeEngine`]
+/// (delegating), so scenario code can hold either an `Engine` or a
+/// `Box<dyn MoeEngine>` ([`Engine::into_inner`]) interchangeably.
+pub struct Engine {
+    inner: Box<dyn MoeEngine>,
+    backend: Backend,
+    capacity_factor: f64,
+    policy: OverflowPolicy,
+}
+
+impl Engine {
+    /// The one construction path: `Engine::builder().model(m)…build()`.
+    pub fn builder() -> EngineBuilder {
+        EngineBuilder::new()
+    }
+
+    pub(crate) fn from_parts(
+        inner: Box<dyn MoeEngine>,
+        backend: Backend,
+        capacity_factor: f64,
+        policy: OverflowPolicy,
+    ) -> Engine {
+        Engine { inner, backend, capacity_factor, policy }
+    }
+
+    /// The backend this engine was built with. (Capacity factor and
+    /// policy are exposed through the [`MoeEngine`] trait.)
+    pub fn backend(&self) -> Backend {
+        self.backend
+    }
+
+    /// Unwrap into the boxed trait object (e.g. for
+    /// `serve::ServeRuntime::with_engine`, whose default engine type is
+    /// `Box<dyn MoeEngine>`).
+    pub fn into_inner(self) -> Box<dyn MoeEngine> {
+        self.inner
+    }
+}
+
+impl std::fmt::Debug for Engine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Engine")
+            .field("backend", &self.backend)
+            .field("layers", &self.inner.layers())
+            .field("d_model", &self.inner.d_model())
+            .field("capacity_factor", &self.capacity_factor)
+            .field("policy", &self.policy.name())
+            .finish()
+    }
+}
+
+impl MoeEngine for Engine {
+    fn forward(&mut self, h: &[f32], n: usize) -> EngineOutput<'_> {
+        self.inner.forward(h, n)
+    }
+    fn route_into(&mut self, h: &[f32], out: &mut RouterBatch) {
+        self.inner.route_into(h, out)
+    }
+    fn balance(&self) -> &LayerLoadTracker {
+        self.inner.balance()
+    }
+    fn capacity_factor(&self) -> f64 {
+        self.capacity_factor
+    }
+    fn policy(&self) -> OverflowPolicy {
+        self.policy
+    }
+    fn layers(&self) -> usize {
+        self.inner.layers()
+    }
+    fn d_model(&self) -> usize {
+        self.inner.d_model()
+    }
+    fn last(&self) -> &ModelForward {
+        self.inner.last()
+    }
+}
+
+#[cfg(test)]
+#[allow(deprecated)] // the parity oracles ARE the deprecated paths
+mod tests {
+    use super::*;
+    use crate::experts::ExpertBank;
+    use crate::model::{synthetic_stacked_model, StackedModel};
+    use crate::router::{synthetic_lpr_router, ServingEngine};
+    use crate::util::rng::Rng;
+
+    const D: usize = 16;
+    const DZ: usize = 8;
+    const E: usize = 6;
+    const K: usize = 2;
+    const FF: usize = 10;
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    fn tiny_model(n_layers: usize) -> StackedModel {
+        synthetic_stacked_model(
+            "cosine",
+            &Rng::new(5),
+            n_layers,
+            D,
+            DZ,
+            E,
+            K,
+            FF,
+        )
+    }
+
+    fn build(
+        model: StackedModel,
+        backend: Backend,
+        policy: OverflowPolicy,
+        cf: f64,
+    ) -> Engine {
+        Engine::builder()
+            .model(model)
+            .backend(backend)
+            .policy(policy)
+            .capacity_factor(cf)
+            .build()
+            .unwrap()
+    }
+
+    /// Acceptance (tentpole parity): the facade is bit-identical to
+    /// every legacy path it replaces, for both backends × layers
+    /// {1, 3} × workers {1, 2, 3, 8} × every overflow policy — final
+    /// residual stream, every layer's combined output, routed batches,
+    /// and dispatch plans.
+    #[test]
+    fn facade_is_bit_identical_to_legacy_paths() {
+        let mut rng = Rng::new(71);
+        for n_layers in [1usize, 3] {
+            let model = tiny_model(n_layers);
+            for n in [5usize, 61] {
+                let h = rand_vec(&mut rng, n * D);
+                for policy in OverflowPolicy::ALL {
+                    // legacy oracle: scoped ModelEngine, single thread
+                    let mut legacy =
+                        crate::model::ModelEngine::new(model.clone(), 1);
+                    let mut want = ModelForward::new();
+                    legacy.forward(&h, 1.0, policy, &mut want);
+                    for par in [1usize, 2, 3, 8] {
+                        for backend in [
+                            Backend::Scoped { threads: par },
+                            Backend::Pool { workers: par },
+                        ] {
+                            let mut eng = build(
+                                model.clone(),
+                                backend,
+                                policy,
+                                1.0,
+                            );
+                            let out = eng.forward(&h, n);
+                            assert_eq!(out.n_tokens, n);
+                            assert_eq!(
+                                out.hidden, &want.hidden[..],
+                                "L={n_layers} n={n} par={par} \
+                                 {backend:?} {} hidden diverged",
+                                policy.name()
+                            );
+                            for l in 0..n_layers {
+                                assert_eq!(
+                                    out.layers[l].combined,
+                                    want.layers[l].combined,
+                                    "layer {l}"
+                                );
+                                assert_eq!(
+                                    out.layers[l].batch,
+                                    want.layers[l].batch
+                                );
+                                assert_eq!(
+                                    out.layers[l].plan,
+                                    want.layers[l].plan
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// The L=1 facade also pins against the oldest legacy path:
+    /// `ServingEngine::forward_full` with an explicit bank.
+    #[test]
+    fn single_layer_facade_matches_serving_engine_forward_full() {
+        let mut rng = Rng::new(81);
+        let r = synthetic_lpr_router("kl", &mut rng, D, DZ, E, K);
+        let bank = ExpertBank::new(&Rng::new(3), E, D, FF);
+        let h = rand_vec(&mut rng, 33 * D);
+        let mut legacy = ServingEngine::new(r.plan().clone(), 2);
+        let mut want = FullForward::new();
+        legacy.forward_full(
+            &h,
+            &bank,
+            1.25,
+            OverflowPolicy::NextChoice,
+            &mut want,
+        );
+        let mut eng = Engine::builder()
+            .layer(r.plan().clone(), bank)
+            .backend(Backend::Pool { workers: 2 })
+            .policy(OverflowPolicy::NextChoice)
+            .capacity_factor(1.25)
+            .build()
+            .unwrap();
+        let out = eng.forward(&h, 33);
+        assert_eq!(out.layers[0].combined, want.combined);
+        assert_eq!(out.layers[0].batch, want.batch);
+        assert_eq!(out.layers[0].plan, want.plan);
+        // L=1 hidden = h + combined
+        let mut hidden = Vec::new();
+        crate::model::residual_add(&h, &want.combined, &mut hidden);
+        assert_eq!(out.hidden, &hidden[..]);
+    }
+
+    /// `route_into` through the facade equals the legacy routing
+    /// engine, for both backends.
+    #[test]
+    fn facade_route_matches_serving_engine() {
+        let mut rng = Rng::new(91);
+        let model = tiny_model(2);
+        let h = rand_vec(&mut rng, 40 * D);
+        let mut legacy =
+            ServingEngine::new(model.layer(0).plan.clone(), 1);
+        let want = legacy.route(&h);
+        for backend in
+            [Backend::Scoped { threads: 3 }, Backend::Pool { workers: 3 }]
+        {
+            let mut eng = build(
+                model.clone(),
+                backend,
+                OverflowPolicy::Drop,
+                1.25,
+            );
+            let mut got = RouterBatch::new();
+            eng.route_into(&h, &mut got);
+            assert_eq!(got, want, "{backend:?}");
+            // routing-only batches land in the layer-0 balance window
+            assert_eq!(eng.balance().layer(0).total_steps(), 1);
+            assert_eq!(eng.balance().layer(0).windowed(), got.load);
+        }
+    }
+
+    /// Satellite: with a capacity that never drops, `renormalize(true)`
+    /// is a bit-exact no-op through the facade.
+    #[test]
+    fn renormalize_without_drops_is_a_no_op() {
+        let mut rng = Rng::new(13);
+        let model = tiny_model(2);
+        let h = rand_vec(&mut rng, 24 * D);
+        // capacity factor E = one bin per (token, slot): cannot overflow
+        let cf = E as f64;
+        let mut plain = build(
+            model.clone(),
+            Backend::Scoped { threads: 2 },
+            OverflowPolicy::Drop,
+            cf,
+        );
+        let a = plain.forward(&h, 24).hidden.to_vec();
+        let mut renorm = Engine::builder()
+            .model(model)
+            .backend(Backend::Scoped { threads: 2 })
+            .capacity_factor(cf)
+            .renormalize(true)
+            .build()
+            .unwrap();
+        let out = renorm.forward(&h, 24);
+        assert_eq!(out.layers[0].plan.n_dropped, 0);
+        assert_eq!(out.hidden, &a[..]);
+    }
+
+    /// Satellite: the builder validation matrix — every misconfiguration
+    /// returns its typed error, not a panic.
+    #[test]
+    fn builder_rejects_bad_configs_with_typed_errors() {
+        let mut rng = Rng::new(2);
+        let r = synthetic_lpr_router("cosine", &mut rng, D, DZ, E, K);
+        let plan = r.plan().clone();
+        let bank = ExpertBank::new(&Rng::new(1), E, D, FF);
+
+        // no model at all
+        assert_eq!(
+            Engine::builder().build().unwrap_err(),
+            EngineBuildError::MissingModel
+        );
+        // both .model() and .layer()
+        assert_eq!(
+            Engine::builder()
+                .model(tiny_model(1))
+                .layer(plan.clone(), bank.clone())
+                .build()
+                .unwrap_err(),
+            EngineBuildError::ModelAndLayers
+        );
+        // bad d_model: bank width disagrees with the plan
+        let wide_bank = ExpertBank::new(&Rng::new(1), E, 2 * D, FF);
+        assert_eq!(
+            Engine::builder()
+                .layer(plan.clone(), wide_bank)
+                .build()
+                .unwrap_err(),
+            EngineBuildError::LayerMismatch {
+                layer: 0,
+                what: "d_model",
+                plan: D,
+                bank: 2 * D,
+            }
+        );
+        // bad d_model: mixed widths across layers
+        let r2 = synthetic_lpr_router("cosine", &mut rng, 2 * D, DZ, E, K);
+        let bank2 = ExpertBank::new(&Rng::new(1), E, 2 * D, FF);
+        assert_eq!(
+            Engine::builder()
+                .layer(plan.clone(), bank.clone())
+                .layer(r2.plan().clone(), bank2)
+                .build()
+                .unwrap_err(),
+            EngineBuildError::WidthMismatch {
+                layer: 1,
+                d_model: 2 * D,
+                expected: D,
+            }
+        );
+        // expert-count mismatch between plan and bank
+        let small_bank = ExpertBank::new(&Rng::new(1), E - 1, D, FF);
+        assert_eq!(
+            Engine::builder()
+                .layer(plan.clone(), small_bank)
+                .build()
+                .unwrap_err(),
+            EngineBuildError::LayerMismatch {
+                layer: 0,
+                what: "expert count",
+                plan: E,
+                bank: E - 1,
+            }
+        );
+        // top_k > E (plan construction asserts this, so force the state
+        // the builder must defend against via the pub config)
+        let mut bad_plan = plan.clone();
+        bad_plan.cfg.top_k = E + 1;
+        assert_eq!(
+            Engine::builder()
+                .layer(bad_plan, bank.clone())
+                .build()
+                .unwrap_err(),
+            EngineBuildError::TopKExceedsExperts {
+                layer: 0,
+                top_k: E + 1,
+                n_experts: E,
+            }
+        );
+        // zero workers / threads
+        assert_eq!(
+            Engine::builder()
+                .model(tiny_model(1))
+                .backend(Backend::Pool { workers: 0 })
+                .build()
+                .unwrap_err(),
+            EngineBuildError::ZeroParallelism { backend: "pool" }
+        );
+        assert_eq!(
+            Engine::builder()
+                .model(tiny_model(1))
+                .backend(Backend::Scoped { threads: 0 })
+                .build()
+                .unwrap_err(),
+            EngineBuildError::ZeroParallelism { backend: "scoped" }
+        );
+        // zero / negative / NaN capacity factor
+        for cf in [0.0f64, -1.0] {
+            assert_eq!(
+                Engine::builder()
+                    .model(tiny_model(1))
+                    .capacity_factor(cf)
+                    .build()
+                    .unwrap_err(),
+                EngineBuildError::BadCapacityFactor(cf)
+            );
+        }
+        assert!(matches!(
+            Engine::builder()
+                .model(tiny_model(1))
+                .capacity_factor(f64::NAN)
+                .build()
+                .unwrap_err(),
+            EngineBuildError::BadCapacityFactor(_)
+        ));
+        // every error renders through Display and the shared
+        // crate-level conversion
+        let e = Engine::builder().build().unwrap_err();
+        assert!(!e.to_string().is_empty());
+        let shared: crate::Error = e.into();
+        assert!(shared.to_string().contains("model"));
+    }
+
+    /// The facade's accessors describe the stack; `.layer()` pairs
+    /// assemble in call order.
+    #[test]
+    fn accessors_and_layer_assembly() {
+        let model = tiny_model(3);
+        let eng = build(
+            model,
+            Backend::Pool { workers: 2 },
+            OverflowPolicy::LeastLoaded,
+            1.5,
+        );
+        assert_eq!(eng.layers(), 3);
+        assert_eq!(eng.d_model(), D);
+        assert_eq!(eng.backend(), Backend::Pool { workers: 2 });
+        assert_eq!(eng.policy(), OverflowPolicy::LeastLoaded);
+        assert!((eng.capacity_factor() - 1.5).abs() < 1e-12);
+        assert_eq!(eng.balance().n_layers(), 3);
+        // pre-first-forward: last() is valid and empty (the PR 3
+        // contract ServeRuntime relies on)
+        assert!(eng.last().hidden.is_empty());
+        assert_eq!(eng.last().layers.len(), 3);
+        assert!(eng.last().layers[0].combined.is_empty());
+        // the boxed view keeps the same answers
+        let mut boxed = eng.into_inner();
+        assert_eq!(boxed.layers(), 3);
+        assert_eq!(boxed.d_model(), D);
+        let h = vec![0.1f32; 4 * D];
+        assert_eq!(boxed.forward(&h, 4).hidden.len(), 4 * D);
+    }
+}

@@ -1,0 +1,124 @@
+//! One error type for the crate's public surface.
+//!
+//! Before this module the crate's failure modes were a mix of ad-hoc
+//! enums without `Display` (`serve::SubmitError`), panics (engine
+//! misconfiguration), hand-assembled strings (`--policy` parsing), and
+//! `anyhow` chains (checkpoint / bridge / artifact IO). Every typed
+//! error now implements `Display` + `std::error::Error` and converts
+//! into the shared [`Error`], so `main.rs` — and any embedder — can
+//! print one error chain instead of formatting each family by hand:
+//!
+//! ```
+//! use lpr::engine::Engine;
+//!
+//! fn build() -> Result<(), lpr::Error> {
+//!     let _e = Engine::builder().build()?; // EngineBuildError -> lpr::Error
+//!     Ok(())
+//! }
+//! let err = build().unwrap_err();
+//! assert!(err.to_string().contains("model"));
+//! assert!(std::error::Error::source(&err).is_some());
+//! ```
+
+use crate::dispatch::plan::ParsePolicyError;
+use crate::engine::EngineBuildError;
+use crate::serve::SubmitError;
+
+/// The crate-wide error: every typed failure family converts into it
+/// (`?` works across layers), and `source()` exposes the underlying
+/// typed error for callers that match on it.
+#[derive(Debug)]
+pub enum Error {
+    /// Engine/builder configuration rejected
+    /// ([`crate::engine::EngineBuildError`]).
+    Build(EngineBuildError),
+    /// Submission refused by the serving queue
+    /// ([`crate::serve::SubmitError`]).
+    Submit(SubmitError),
+    /// Unrecognized overflow-policy name
+    /// ([`crate::dispatch::ParsePolicyError`]).
+    Policy(ParsePolicyError),
+    /// Checkpoint / bridge / artifact IO or format failure (the
+    /// `anyhow` chains of `coordinator::checkpoint`, `model::bridge`,
+    /// and `runtime`).
+    Artifact(anyhow::Error),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Build(e) => write!(f, "engine configuration: {e}"),
+            Error::Submit(e) => write!(f, "request submission: {e}"),
+            Error::Policy(e) => write!(f, "{e}"),
+            Error::Artifact(e) => write!(f, "{e:#}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Build(e) => Some(e),
+            Error::Submit(e) => Some(e),
+            Error::Policy(e) => Some(e),
+            Error::Artifact(e) => Some(e.as_ref()),
+        }
+    }
+}
+
+impl From<EngineBuildError> for Error {
+    fn from(e: EngineBuildError) -> Error {
+        Error::Build(e)
+    }
+}
+
+impl From<SubmitError> for Error {
+    fn from(e: SubmitError) -> Error {
+        Error::Submit(e)
+    }
+}
+
+impl From<ParsePolicyError> for Error {
+    fn from(e: ParsePolicyError) -> Error {
+        Error::Policy(e)
+    }
+}
+
+impl From<anyhow::Error> for Error {
+    fn from(e: anyhow::Error) -> Error {
+        Error::Artifact(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_family_converts_and_displays() {
+        let cases: Vec<Error> = vec![
+            EngineBuildError::MissingModel.into(),
+            SubmitError::Full.into(),
+            SubmitError::TooLarge.into(),
+            ParsePolicyError("bogus".into()).into(),
+            anyhow::anyhow!("artifact exploded").into(),
+        ];
+        for e in &cases {
+            let msg = e.to_string();
+            assert!(!msg.is_empty());
+            // the chain is inspectable for typed handling
+            assert!(
+                std::error::Error::source(e).is_some(),
+                "{msg} lost its source"
+            );
+        }
+        assert!(cases[3].to_string().contains("bogus"));
+        assert!(cases[3].to_string().contains("least-loaded"));
+    }
+
+    #[test]
+    fn submit_errors_render_their_cause() {
+        assert!(SubmitError::Full.to_string().contains("full"));
+        assert!(SubmitError::TooLarge.to_string().contains("max_batch"));
+    }
+}

@@ -61,12 +61,25 @@
 //! construction; [`metrics::LoadTracker`] gives both a rolling
 //! balance window.
 //!
+//! Since PR 5 the whole forward surface sits behind **one facade**:
+//! [`engine::MoeEngine`], implemented by the scoped and pool backends
+//! for single layers and stacks alike, constructed only through
+//! [`engine::Engine::builder`] (typed [`engine::EngineBuildError`]s
+//! instead of panics, every knob — backend, overflow policy, capacity
+//! factor, renormalization — in one place). [`serve::Server`] makes
+//! the virtual-clock runtime deployable: real `Instant`-stamped
+//! arrivals, a background flusher thread, blocking
+//! `enqueue`/`await_completion`. Typed errors share one conversion
+//! point, [`Error`].
+//!
 //! Start with [`runtime::Runtime`] + [`coordinator::Trainer`] for
-//! training, [`serve::ServeRuntime`] /
-//! [`router::ServingEngine::forward_full`] + [`dispatch::DispatchSim`]
-//! for serving-path studies ([`router::Router`] remains as a
-//! compatibility façade), and [`report::Reporter`] for the paper's
-//! experiments. See `examples/` for end-to-end drivers.
+//! training, [`engine::Engine::builder`] + [`serve::ServeRuntime`] /
+//! [`serve::Server`] + [`dispatch::DispatchSim`] for serving-path
+//! studies (the pre-facade entry points — `Router::forward`,
+//! `ServingEngine::forward_full`, `PoolEngine::forward_full`,
+//! `ServeRuntime::new` — remain as deprecated shims), and
+//! [`report::Reporter`] for the paper's experiments. See `examples/`
+//! for end-to-end drivers.
 //!
 //! A layered map of the whole crate — module dependencies, the
 //! grouped-GEMM layout with a worked example, the thread-determinism
@@ -79,6 +92,8 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod dispatch;
+pub mod engine;
+pub mod error;
 pub mod experts;
 pub mod metrics;
 pub mod model;
@@ -87,6 +102,8 @@ pub mod router;
 pub mod runtime;
 pub mod serve;
 pub mod util;
+
+pub use error::Error;
 
 /// Default artifacts directory (relative to the repo root); override
 /// with env `LPR_ARTIFACTS`.

@@ -38,20 +38,15 @@ use lpr::dispatch::{
     run_full_steps, run_routed_steps, synthetic_assignments,
     DispatchPlan, DispatchSim, OverflowPolicy, SimConfig,
 };
+use lpr::engine::{Backend, Engine, MoeEngine};
 use lpr::experts::ExpertBank;
 use lpr::metrics::{ascii_heatmap, entropy_frac, gini, min_max_ratio};
-use lpr::model::{
-    bridge, run_model_steps, synthetic_stacked_model, ModelEngine,
-    ModelForward, StackedModel,
-};
+use lpr::model::{bridge, run_model_steps, synthetic_stacked_model, StackedModel};
 use lpr::report::Reporter;
-use lpr::router::{
-    synthetic_lpr_router, FullForward, RouterBatch, ServingEngine,
-};
+use lpr::router::{synthetic_lpr_router, RouterBatch};
 use lpr::runtime::{CompiledArtifacts, Runtime};
 use lpr::serve::{
-    measure_service_rate, run_open_loop, PoolEngine, ServeConfig,
-    ServeRuntime,
+    measure_engine_rate, run_open_loop, ServeConfig, ServeRuntime,
 };
 use lpr::util::bench::write_json_rows;
 use lpr::util::cli::Args;
@@ -253,8 +248,8 @@ fn cmd_eval(args: &Args) -> Result<()> {
 }
 
 /// Pure-Rust serving path: no artifacts / PJRT needed. Routes a
-/// clustered token stream through the compiled `RouterPlan` on a
-/// sharded `ServingEngine` and reports balance + throughput.
+/// clustered token stream through the engine facade (scoped backend)
+/// and reports balance + throughput.
 fn cmd_route_synthetic(args: &Args) -> Result<()> {
     let threads = args.opt_usize("threads", 1);
     let metric = args.opt_or("metric", "cosine");
@@ -265,7 +260,13 @@ fn cmd_route_synthetic(args: &Args) -> Result<()> {
     let k = args.opt_usize("topk", 4);
     let mut rng = Rng::new(args.opt_usize("seed", 2025) as u64);
     let router = synthetic_lpr_router(metric, &mut rng, d, dz, e, k);
-    let mut engine = ServingEngine::new(router.plan().clone(), threads);
+    // routing-only study: the FFN stage never runs, so a 1-wide
+    // placeholder bank satisfies the facade's stack shape
+    let bank = ExpertBank::new(&Rng::new(0), e, d, 1);
+    let mut engine = Engine::builder()
+        .layer(router.plan().clone(), bank)
+        .backend(Backend::Scoped { threads })
+        .build()?;
     let mix = MixtureStream::standard(&mut rng, d);
     let mut h = Vec::new();
     mix.fill(&mut rng, n_tokens, &mut h);
@@ -284,8 +285,8 @@ fn cmd_route_synthetic(args: &Args) -> Result<()> {
         gini(&out.load),
         min_max_ratio(&out.load),
         entropy_frac(&out.load),
-        engine.tracker().gini(),
-        engine.tracker().len()
+        engine.balance().layer(0).gini(),
+        engine.balance().layer(0).len()
     );
     println!(
         "  {:.0} tok/s  ({:.0} ns/token)",
@@ -364,12 +365,9 @@ fn cmd_repro(args: &Args) -> Result<()> {
 }
 
 fn parse_policy(args: &Args, default: &str) -> Result<OverflowPolicy> {
-    let name = args.opt_or("policy", default);
-    OverflowPolicy::parse(name).with_context(|| {
-        format!(
-            "unknown --policy '{name}' (drop | next-choice | least-loaded)"
-        )
-    })
+    // ParsePolicyError renders the accepted set itself — no
+    // hand-assembled message here
+    Ok(args.opt_or("policy", default).parse::<OverflowPolicy>()?)
 }
 
 /// Build the model stack `serve`/`model-sim` operate on: a training
@@ -458,14 +456,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "--req-tokens {req_tokens} exceeds --max-batch {max_batch}"
     );
 
+    // the one construction path for the serving engine — calibration
+    // and the runtime share it, so the measured capacity is honest for
+    // exactly the backend that will serve
+    let renormalize = args.has_flag("renormalize");
+    let build_engine = |model: StackedModel| -> Result<Engine> {
+        Ok(Engine::builder()
+            .model(model)
+            .backend(Backend::Pool { workers })
+            .policy(policy)
+            .capacity_factor(cf)
+            .renormalize(renormalize)
+            .build()?)
+    };
+
     // calibrate this machine's stacked-forward capacity, then default
     // the arrival rate to 0.8x of it (below saturation)
     let mut rng = Rng::new(seed);
     let mix = MixtureStream::skewed(&mut rng, d, 1.6);
-    let mut cal = PoolEngine::from_model(model.clone(), workers);
-    let cap_tok_s = measure_service_rate(
-        &mut cal, &mix, &mut rng, max_batch, 3, cf, policy,
-    );
+    let mut cal = build_engine(model.clone())?;
+    let cap_tok_s =
+        measure_engine_rate(&mut cal, &mix, &mut rng, max_batch, 3);
     drop(cal);
     let rate = match args.opt("rate") {
         Some(r) => r.parse::<f64>().context("--rate")?,
@@ -473,16 +484,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
 
     let cfg = ServeConfig {
-        n_workers: workers,
         max_batch,
         max_wait,
         queue_tokens: 8 * max_batch,
-        capacity_factor: cf,
-        policy,
-        renormalize: args.has_flag("renormalize"),
         service_ticks: None,
+        ..ServeConfig::default()
     };
-    let mut rt = ServeRuntime::from_model(model, cfg);
+    let mut rt =
+        ServeRuntime::with_engine(build_engine(model)?.into_inner(), cfg);
     run_open_loop(&mut rt, &mix, &mut rng, n_requests, req_tokens, rate);
     let r = rt.report();
     println!("serve: {desc}");
@@ -509,7 +518,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Stacked-model dispatch study: run the L-layer `ModelForward` through
+/// Stacked-model dispatch study: run the L-layer facade engine through
 /// the layered simulator — per-layer `[L, E]` balance plus the
 /// sequential straggler latency model (layer l+1 waits for layer l's
 /// slowest device).
@@ -544,16 +553,20 @@ fn cmd_model_sim(args: &Args) -> Result<()> {
         k,
         d_ff,
     );
-    let mut engine = ModelEngine::new(model, threads);
-    engine.set_renormalize(args.has_flag("renormalize"));
+    // the facade engine carries cf/policy; built from the sim's cf so
+    // simulated bins and real compute agree
+    let mut engine = Engine::builder()
+        .model(model)
+        .backend(Backend::Scoped { threads })
+        .policy(policy)
+        .capacity_factor(cfg.capacity_factor)
+        .renormalize(args.has_flag("renormalize"))
+        .build()?;
     let mut sim = DispatchSim::new_layered(cfg, n_layers);
     let mut rng = Rng::new(seed);
     let mix = MixtureStream::skewed(&mut rng, d, 1.6);
-    let mut out = ModelForward::new();
-    let fwd_ns = run_model_steps(
-        &mut engine, &mix, &mut rng, &mut sim, steps, tokens, policy,
-        &mut out,
-    );
+    let fwd_ns =
+        run_model_steps(&mut engine, &mix, &mut rng, &mut sim, steps, tokens);
     let r = sim.report();
     println!(
         "model-sim: {n_layers}-layer {metric} stack, {e} experts top-{k}, \
@@ -594,35 +607,37 @@ fn cmd_dispatch_sim(args: &Args) -> Result<()> {
     let threads = args.opt_usize("threads", 1);
     let routed = args.has_flag("routed") || args.opt("routed").is_some();
     let full = args.has_flag("full") || args.opt("full").is_some();
-    let policy_name = args.opt_or("policy", "drop");
-    let policy = OverflowPolicy::parse(policy_name).with_context(|| {
-        format!(
-            "unknown --policy '{policy_name}' \
-             (drop | next-choice | least-loaded)"
-        )
-    })?;
-    let (e, k) = (cfg.n_experts, cfg.top_k);
+    let policy = parse_policy(args, "drop")?;
+    let (e, k, cf) = (cfg.n_experts, cfg.top_k, cfg.capacity_factor);
     let mut sim = DispatchSim::new(cfg);
     let mut rng = Rng::new(args.opt_usize("seed", 7) as u64);
     let t0 = std::time::Instant::now();
     if routed {
-        // serving path: compiled routing engine over clustered tokens
+        // serving path: the engine facade over clustered tokens
         let metric = args.opt_or("metric", "cosine");
         let d = args.opt_usize("dmodel", 64);
         let dz = args.opt_usize("latent", 16);
+        let d_ff = args.opt_usize("dff", 4 * d);
         let router = synthetic_lpr_router(metric, &mut rng, d, dz, e, k);
-        let mut engine =
-            ServingEngine::new(router.plan().clone(), threads);
+        // route-only runs never touch the FFN stage: a 1-wide
+        // placeholder bank keeps the facade's stack shape cheap
+        let bank = if full {
+            ExpertBank::new(&Rng::new(42), e, d, d_ff)
+        } else {
+            ExpertBank::new(&Rng::new(0), e, d, 1)
+        };
+        let mut engine = Engine::builder()
+            .layer(router.plan().clone(), bank)
+            .backend(Backend::Scoped { threads })
+            .policy(policy)
+            .capacity_factor(cf)
+            .renormalize(args.has_flag("renormalize"))
+            .build()?;
         let mix = MixtureStream::standard(&mut rng, d);
         if full {
             // real expert compute: route -> plan -> FFN -> combine
-            let d_ff = args.opt_usize("dff", 4 * d);
-            let bank = ExpertBank::new(&Rng::new(42), e, d, d_ff);
-            engine.set_renormalize(args.has_flag("renormalize"));
-            let mut ff = FullForward::new();
             let fwd_ns = run_full_steps(
-                &mut engine, &bank, &mix, &mut rng, &mut sim, steps,
-                tokens, policy, &mut ff,
+                &mut engine, &mix, &mut rng, &mut sim, steps, tokens,
             );
             println!(
                 "dispatch-sim --routed --full: metric {metric}, \
@@ -721,9 +736,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         workers_list
     };
     let policies: Vec<OverflowPolicy> = match args.opt("policy") {
-        Some(p) => vec![OverflowPolicy::parse(p).with_context(|| {
-            format!("unknown --policy '{p}'")
-        })?],
+        Some(p) => vec![p.parse::<OverflowPolicy>()?],
         None => OverflowPolicy::ALL.to_vec(),
     };
     let fixed_rate = args.opt("rate").map(|r| r.parse::<f64>()).transpose()
@@ -742,22 +755,21 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     );
     let mut json_rows: Vec<String> = Vec::new();
     for &workers in &workers_list {
-        // measured capacity of this worker count anchors the load sweep
+        // measured capacity of this worker count anchors the load
+        // sweep — calibrated through the same builder-constructed
+        // backend the cells use
         let mut rng = Rng::new(seed);
         let router = synthetic_lpr_router(metric, &mut rng, d, dz, e, k);
         let bank = ExpertBank::new(&Rng::new(42), e, d, d_ff);
         let mix = MixtureStream::skewed(&mut rng, d, 1.6);
-        let mut cal =
-            PoolEngine::new(router.plan().clone(), bank.clone(), workers);
-        let cap_tok_s = measure_service_rate(
-            &mut cal,
-            &mix,
-            &mut rng,
-            max_batch,
-            3,
-            cf,
-            OverflowPolicy::Drop,
-        );
+        let mut cal = Engine::builder()
+            .layer(router.plan().clone(), bank)
+            .backend(Backend::Pool { workers })
+            .policy(OverflowPolicy::Drop)
+            .capacity_factor(cf)
+            .build()?;
+        let cap_tok_s =
+            measure_engine_rate(&mut cal, &mix, &mut rng, max_batch, 3);
         drop(cal);
         let rates: Vec<(f64, f64)> = match fixed_rate {
             Some(r) => vec![(r / cap_tok_s, r)],
@@ -774,18 +786,22 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
                     synthetic_lpr_router(metric, &mut rng, d, dz, e, k);
                 let bank = ExpertBank::new(&Rng::new(42), e, d, d_ff);
                 let mix = MixtureStream::skewed(&mut rng, d, 1.6);
+                let engine = Engine::builder()
+                    .layer(router.plan().clone(), bank)
+                    .backend(Backend::Pool { workers })
+                    .policy(policy)
+                    .capacity_factor(cf)
+                    .renormalize(renormalize)
+                    .build()?;
                 let cfg = ServeConfig {
-                    n_workers: workers,
                     max_batch,
                     max_wait,
                     queue_tokens: 8 * max_batch,
-                    capacity_factor: cf,
-                    policy,
-                    renormalize,
                     service_ticks: None,
+                    ..ServeConfig::default()
                 };
                 let mut srv =
-                    ServeRuntime::new(router.plan().clone(), bank, cfg);
+                    ServeRuntime::with_engine(engine.into_inner(), cfg);
                 run_open_loop(
                     &mut srv, &mix, &mut rng, n_requests, req_tokens,
                     rate,

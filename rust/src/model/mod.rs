@@ -271,6 +271,20 @@ impl ModelEngine {
         &self.tracker
     }
 
+    /// Route `h` through **layer 0**'s router only (no dispatch/FFN),
+    /// accounting the batch in the layer-0 balance window — the
+    /// routing-study entry point the engine facade
+    /// ([`crate::engine::MoeEngine::route_into`]) delegates to; the
+    /// pool twin is `serve::PoolEngine::route_into`.
+    pub fn route_into(
+        &mut self,
+        h: &[f32],
+        out: &mut crate::router::RouterBatch,
+    ) {
+        self.engines[0].route_into(h, out);
+        self.tracker.push(0, &out.load);
+    }
+
     /// Gate-weight renormalization for partially-dropped tokens, applied
     /// in every layer's combine (see `experts::combine_rows_opts`).
     pub fn set_renormalize(&mut self, on: bool) {
@@ -283,6 +297,7 @@ impl ModelEngine {
     /// route → plan → expert FFN → combine, then the residual add; the
     /// final stream lands in `out.hidden`. Bit-identical for every
     /// thread count (module docs).
+    #[allow(deprecated)] // backend internals compose the legacy layer path
     pub fn forward(
         &mut self,
         h: &[f32],
@@ -314,35 +329,47 @@ impl ModelEngine {
 }
 
 /// Drive `steps` stacked serving steps end-to-end: sample a mixture
-/// batch, run the full `L`-layer forward, account every layer's plan in
-/// the layered simulator ([`DispatchSim::step_model`]). Returns total
-/// forward nanoseconds. The single protocol behind `lpr model-sim`,
-/// `repro model-serve`'s sim column, and `examples/serving_sim.rs`
-/// part 5 — the stacked sibling of `dispatch::run_full_steps`.
-#[allow(clippy::too_many_arguments)]
+/// batch, run the full `L`-layer forward through the engine facade,
+/// account every layer's plan in the layered simulator
+/// ([`DispatchSim::step_model`]). Returns total forward nanoseconds.
+/// The single protocol behind `lpr model-sim`, `repro model-serve`'s
+/// sim column, and `examples/serving_sim.rs` part 5 — the stacked
+/// sibling of `dispatch::run_full_steps`.
+///
+/// The engine's builder-time capacity factor / overflow policy govern
+/// the forward; build the engine from `sim.cfg.capacity_factor` —
+/// asserted here, so simulator accounting and real compute cannot
+/// silently use different bin sizes.
 pub fn run_model_steps(
-    engine: &mut ModelEngine,
+    engine: &mut dyn crate::engine::MoeEngine,
     mix: &MixtureStream,
     rng: &mut Rng,
     sim: &mut DispatchSim,
     steps: usize,
     tokens_per_step: usize,
-    policy: OverflowPolicy,
-    out: &mut ModelForward,
 ) -> u128 {
+    assert!(
+        (engine.capacity_factor() - sim.cfg.capacity_factor).abs() < 1e-12,
+        "engine capacity factor {} != sim capacity factor {} — build \
+         the engine from sim.cfg.capacity_factor so accounting matches \
+         compute",
+        engine.capacity_factor(),
+        sim.cfg.capacity_factor
+    );
     let mut h = Vec::new();
     let mut fwd_ns = 0u128;
     for _ in 0..steps {
         mix.fill(rng, tokens_per_step, &mut h);
         let t0 = std::time::Instant::now();
-        engine.forward(&h, sim.cfg.capacity_factor, policy, out);
+        engine.forward(&h, tokens_per_step);
         fwd_ns += t0.elapsed().as_nanos();
-        sim.step_model(&out.layers);
+        sim.step_model(&engine.last().layers);
     }
     fwd_ns
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // hand-composed legacy paths are the parity oracle
 mod tests {
     use super::*;
     use crate::dispatch::SimConfig;
@@ -525,8 +552,17 @@ mod tests {
 
     #[test]
     fn run_model_steps_accounts_every_layer() {
+        use crate::engine::{Backend, Engine, MoeEngine};
         let model = tiny_model(3);
-        let mut eng = ModelEngine::new(model, 2);
+        // the facade engine is built from the sim's capacity factor so
+        // simulated bins and real compute agree
+        let mut eng = Engine::builder()
+            .model(model)
+            .backend(Backend::Scoped { threads: 2 })
+            .policy(OverflowPolicy::Drop)
+            .capacity_factor(1.0)
+            .build()
+            .unwrap();
         let mut rng = Rng::new(21);
         let mix = MixtureStream::standard(&mut rng, D);
         let mut sim = DispatchSim::new_layered(
@@ -539,17 +575,7 @@ mod tests {
             },
             3,
         );
-        let mut out = ModelForward::new();
-        run_model_steps(
-            &mut eng,
-            &mix,
-            &mut rng,
-            &mut sim,
-            4,
-            32,
-            OverflowPolicy::Drop,
-            &mut out,
-        );
+        run_model_steps(&mut eng, &mix, &mut rng, &mut sim, 4, 32);
         let rep = sim.report();
         assert_eq!(rep.steps, 4);
         // every (token, slot) of every layer is accounted
@@ -558,7 +584,7 @@ mod tests {
         for lb in &rep.layers {
             assert!(lb.gini >= 0.0 && lb.gini <= 1.0);
         }
-        assert_eq!(out.n_tokens(), 32);
+        assert_eq!(eng.last().n_tokens(), 32);
     }
 
     #[test]

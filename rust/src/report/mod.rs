@@ -20,19 +20,35 @@ use crate::dispatch::{
     assignments_from_load, run_routed_steps, synthetic_assignments,
     DispatchSim, OverflowPolicy, SimConfig,
 };
+use crate::engine::{Backend, Engine};
 use crate::experts::ExpertBank;
 use crate::metrics::ascii_heatmap;
-use crate::model::{
-    bridge, run_model_steps, ModelEngine, ModelForward,
-};
-use crate::router::{synthetic_lpr_router, ServingEngine, METRICS};
+use crate::model::{bridge, run_model_steps, StackedModel};
+use crate::router::{synthetic_lpr_router, RouterPlan, METRICS};
 use crate::runtime::Runtime;
 use crate::serve::{
-    measure_service_rate, run_open_loop, PoolEngine, ServeConfig,
-    ServeRuntime,
+    measure_engine_rate, run_open_loop, ServeConfig, ServeRuntime,
 };
 use crate::util::rng::Rng;
 use crate::util::table::{fmt_sci, Table};
+
+/// The report cells' single engine construction point: a pool- or
+/// scoped-backend facade over one `(plan, bank)` layer. Routing-only
+/// reports pass a 1-wide placeholder bank (the FFN stage never runs).
+fn build_layer_engine(
+    plan: RouterPlan,
+    bank: ExpertBank,
+    backend: Backend,
+    policy: OverflowPolicy,
+    cf: f64,
+) -> Result<Engine> {
+    Ok(Engine::builder()
+        .layer(plan, bank)
+        .backend(backend)
+        .policy(policy)
+        .capacity_factor(cf)
+        .build()?)
+}
 
 // Loss-weight vector indices (configs.LOSS_WEIGHTS layout).
 pub const LW_BETA_RS: usize = 0;
@@ -505,9 +521,9 @@ impl<'a> Reporter<'a> {
     }
 
     /// End-to-end serving path: route real (cluster-structured) token
-    /// streams through the compiled routing engine — parallel sharded
-    /// `ServingEngine` over a `RouterPlan` — and dispatch the flat
-    /// routed batches straight into the simulator, per §2.4.1 metric.
+    /// streams through the engine facade (scoped backend over a
+    /// compiled `RouterPlan`) and dispatch the flat routed batches
+    /// straight into the simulator, per §2.4.1 metric.
     /// Unlike `dispatch_report` (synthetic Zipf assignments), the load
     /// skew here is produced by actual routing geometry.
     pub fn dispatch_routed(&self) -> Result<()> {
@@ -530,8 +546,13 @@ impl<'a> Reporter<'a> {
         for metric in METRICS {
             let mut rng = Rng::new(23);
             let router = synthetic_lpr_router(metric, &mut rng, d, dz, e, k);
-            let mut engine =
-                ServingEngine::new(router.plan().clone(), threads);
+            let mut engine = build_layer_engine(
+                router.plan().clone(),
+                ExpertBank::new(&Rng::new(0), e, d, 1),
+                Backend::Scoped { threads },
+                OverflowPolicy::Drop,
+                1.25,
+            )?;
             let mut sim = DispatchSim::new(SimConfig {
                 n_experts: e,
                 top_k: k,
@@ -600,8 +621,13 @@ impl<'a> Reporter<'a> {
                 let mut rng = Rng::new(23);
                 let router =
                     synthetic_lpr_router("cosine", &mut rng, d, dz, e, k);
-                let mut engine =
-                    ServingEngine::new(router.plan().clone(), threads);
+                let mut engine = build_layer_engine(
+                    router.plan().clone(),
+                    ExpertBank::new(&Rng::new(0), e, d, 1),
+                    Backend::Scoped { threads },
+                    policy,
+                    cf,
+                )?;
                 let mut sim = DispatchSim::new(SimConfig {
                     n_experts: e,
                     top_k: k,
@@ -668,22 +694,23 @@ impl<'a> Reporter<'a> {
             ],
         );
         for &workers in &[1usize, 2, 4] {
-            // calibrate this worker count's service capacity once
+            // calibrate this worker count's service capacity once,
+            // through the same builder-constructed backend the cells
+            // use
             let mut rng = Rng::new(23);
             let router =
                 synthetic_lpr_router("cosine", &mut rng, d, dz, e, k);
             let bank = ExpertBank::new(&Rng::new(42), e, d, d_ff);
             let mix = MixtureStream::skewed(&mut rng, d, 1.6);
-            let mut cal =
-                PoolEngine::new(router.plan().clone(), bank.clone(), workers);
-            let cap_tok_s = measure_service_rate(
-                &mut cal,
-                &mix,
-                &mut rng,
-                max_batch,
-                3,
-                1.25,
+            let mut cal = build_layer_engine(
+                router.plan().clone(),
+                bank.clone(),
+                Backend::Pool { workers },
                 OverflowPolicy::Drop,
+                1.25,
+            )?;
+            let cap_tok_s = measure_engine_rate(
+                &mut cal, &mix, &mut rng, max_batch, 3,
             );
             drop(cal);
             for policy in OverflowPolicy::ALL {
@@ -696,18 +723,21 @@ impl<'a> Reporter<'a> {
                     );
                     let bank = ExpertBank::new(&Rng::new(42), e, d, d_ff);
                     let mix = MixtureStream::skewed(&mut rng, d, 1.6);
+                    let engine = build_layer_engine(
+                        router.plan().clone(),
+                        bank,
+                        Backend::Pool { workers },
+                        policy,
+                        1.25,
+                    )?;
                     let cfg = ServeConfig {
-                        n_workers: workers,
                         max_batch,
                         max_wait,
                         queue_tokens: 8 * max_batch,
-                        capacity_factor: 1.25,
-                        policy,
                         ..ServeConfig::default()
                     };
-                    let mut srv = ServeRuntime::new(
-                        router.plan().clone(),
-                        bank,
+                    let mut srv = ServeRuntime::with_engine(
+                        engine.into_inner(),
                         cfg,
                     );
                     run_open_loop(
@@ -786,30 +816,28 @@ impl<'a> Reporter<'a> {
             ),
             &["layer", "win-GINI", "min-max", "cv", "sim GINI", "sim min-max"],
         );
+        let build_pool = |model: StackedModel| -> Result<Engine> {
+            Ok(Engine::builder()
+                .model(model)
+                .backend(Backend::Pool { workers })
+                .policy(OverflowPolicy::Drop)
+                .capacity_factor(cf)
+                .build()?)
+        };
         let mut rng = Rng::new(23);
         let mix = MixtureStream::skewed(&mut rng, d, 1.6);
-        let mut cal =
-            PoolEngine::from_model(model.clone(), workers);
-        let cap_tok_s = measure_service_rate(
-            &mut cal,
-            &mix,
-            &mut rng,
-            max_batch,
-            3,
-            cf,
-            OverflowPolicy::Drop,
-        );
+        let mut cal = build_pool(model.clone())?;
+        let cap_tok_s =
+            measure_engine_rate(&mut cal, &mix, &mut rng, max_batch, 3);
         drop(cal);
         let cfg = ServeConfig {
-            n_workers: workers,
             max_batch,
             max_wait,
             queue_tokens: 8 * max_batch,
-            capacity_factor: cf,
-            policy: OverflowPolicy::Drop,
             ..ServeConfig::default()
         };
-        let mut srv = ServeRuntime::from_model(model.clone(), cfg);
+        let mut srv =
+            ServeRuntime::with_engine(build_pool(model.clone())?.into_inner(), cfg);
         run_open_loop(
             &mut srv,
             &mix,
@@ -820,8 +848,15 @@ impl<'a> Reporter<'a> {
         );
         let rep = srv.report();
 
-        // the same stack through the layered dispatch simulator
-        let mut engine = ModelEngine::new(model, workers);
+        // the same stack through the layered dispatch simulator, on
+        // the scoped backend this time (the facade makes the swap a
+        // one-word change)
+        let mut engine = Engine::builder()
+            .model(model)
+            .backend(Backend::Scoped { threads: workers })
+            .policy(OverflowPolicy::Drop)
+            .capacity_factor(cf)
+            .build()?;
         let mut sim = crate::dispatch::DispatchSim::new_layered(
             SimConfig {
                 n_experts: e,
@@ -833,17 +868,7 @@ impl<'a> Reporter<'a> {
         );
         let mut rng = Rng::new(23);
         let mix = MixtureStream::skewed(&mut rng, d, 1.6);
-        let mut out = ModelForward::new();
-        run_model_steps(
-            &mut engine,
-            &mix,
-            &mut rng,
-            &mut sim,
-            24,
-            512,
-            OverflowPolicy::Drop,
-            &mut out,
-        );
+        run_model_steps(&mut engine, &mix, &mut rng, &mut sim, 24, 512);
         let sim_rep = sim.report();
 
         for (lb, sb) in rep.layers.iter().zip(&sim_rep.layers) {

@@ -266,6 +266,11 @@ impl ServingEngine {
     /// gate-weighted outputs back into token order in `out.combined`.
     ///
     /// Bit-identical for every thread count (see module docs).
+    #[deprecated(
+        note = "use the engine facade: Engine::builder()…backend(\
+                Backend::Scoped { .. }).build() and MoeEngine::forward \
+                (this engine is a backend internal now)"
+    )]
     pub fn forward_full(
         &mut self,
         h: &[f32],
@@ -339,6 +344,7 @@ impl ServingEngine {
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // the legacy full forward IS the unit under test
 mod tests {
     use super::*;
     use crate::router::synthetic_lpr_router;

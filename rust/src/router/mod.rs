@@ -181,7 +181,13 @@ impl Router {
     /// Compatibility wrapper: routes through the lazily-built
     /// [`RouterPlan`] and converts the flat output to the legacy nested
     /// layout. Hot paths should use [`Router::plan`] /
-    /// [`RouterPlan::forward_into`] (or [`ServingEngine`]) directly.
+    /// [`RouterPlan::forward_into`], or the engine facade
+    /// (`lpr::engine::Engine::builder()` + `MoeEngine::route_into`).
+    #[deprecated(
+        note = "route through Router::plan()/RouterPlan::forward_into, \
+                or the engine facade (Engine::builder() + \
+                MoeEngine::route_into)"
+    )]
     pub fn forward(&self, h: &[f32]) -> RouterOutput {
         self.plan().forward(h).into_nested()
     }
@@ -584,6 +590,7 @@ impl Router {
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // the legacy façade is pinned against the plan path
 mod tests {
     use super::*;
     use crate::util::prop::forall;

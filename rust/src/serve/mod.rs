@@ -1,58 +1,67 @@
-//! Persistent-pool serving runtime: a request front-end over the full
-//! expert-parallel data path.
+//! Serving runtime: a request front-end over the engine facade.
 //!
 //! PR 2 ended with a per-batch pipeline (`route → DispatchPlan →
 //! expert FFN → combine`) but no way to *feed* it from a stream of
-//! requests, and with worker threads re-spawned by `thread::scope` on
-//! every batch. This module supplies both halves of the serving story:
+//! requests. This module supplies the serving story around the
+//! [`crate::engine::MoeEngine`] facade:
 //!
 //! - [`queue::BatchQueue`] — a bounded submission queue that
 //!   micro-batches incoming token groups FIFO: flush on `max_batch`
 //!   tokens or when the oldest request has waited `max_wait` ticks;
 //!   requests are never split or reordered.
-//! - [`pool::PoolEngine`] — a long-lived channel-fed worker pool
-//!   running the full data path — for a single layer or a whole
-//!   [`crate::model::StackedModel`] ([`PoolEngine::forward_model`]) —
-//!   with the workers' `RouteBuffers` / scratch owned for the process
-//!   lifetime; bit-identical to the scoped
-//!   [`crate::router::ServingEngine`] / [`crate::model::ModelEngine`]
-//!   for every worker count.
-//! - [`ServeRuntime`] — glues them together and keeps the serving
-//!   telemetry: per-request latency percentiles (nearest-rank, the
-//!   same [`percentile_nearest_rank`] convention as `DispatchSim`) and
-//!   windowed per-layer `[L, E]` balance stats
-//!   ([`crate::metrics::LayerLoadTracker`]) — build multi-layer
-//!   runtimes with [`ServeRuntime::from_model`] (e.g. from a training
-//!   checkpoint via `model::bridge`, the `lpr serve --ckpt` path).
+//! - [`pool::PoolEngine`] — the persistent channel-fed worker backend
+//!   behind `engine::Backend::Pool`: the full data path — single layer
+//!   or a whole [`crate::model::StackedModel`] — with the workers'
+//!   `RouteBuffers` / scratch owned for the process lifetime;
+//!   bit-identical to the scoped backend for every worker count.
+//! - [`ServeRuntime`] — the **virtual-clock** core: generic over any
+//!   [`MoeEngine`] (build one with `Engine::builder()`, hand it to
+//!   [`ServeRuntime::with_engine`]), it glues queue + engine together
+//!   and keeps the serving telemetry: per-request latency percentiles
+//!   (nearest-rank, the same [`percentile_nearest_rank`] convention as
+//!   `DispatchSim`) and windowed per-layer `[L, E]` balance stats from
+//!   the engine's [`crate::metrics::LayerLoadTracker`].
+//! - [`server::Server`] — the **wall-clock** front-end: owns a
+//!   `ServeRuntime<Box<dyn MoeEngine>>`, stamps real `Instant`-derived
+//!   microsecond arrivals onto `submit`, runs flushes on a background
+//!   thread, and exposes blocking `enqueue` / `await_completion` — the
+//!   deployable server loop over the same deterministic core.
 //!
 //! # Time model
 //!
 //! The runtime is event-driven on a **virtual clock** (integer ticks;
-//! the bench drivers use 1 tick = 1 µs). Callers stamp `submit`/`poll`
-//! with `now`; a flushed batch *starts* at `max(now, busy_until)` —
-//! the pool serves batches in order — and *completes* `service` ticks
-//! later, where `service` is the measured wall time of the real pool
-//! forward (or a fixed [`ServeConfig::service_ticks`] override, which
-//! makes tests fully deterministic). A request's latency is
-//! `completion − arrival`: queueing delay, micro-batch wait, pipeline
-//! backpressure, and real compute all land in the percentiles, which
-//! is what turns arrival-rate sweeps into the queueing-behavior curves
-//! the related serving-dispatch work evaluates.
+//! the bench drivers and the wall-clock [`Server`] use 1 tick = 1 µs).
+//! Callers stamp `submit`/`poll` with `now`; a flushed batch *starts*
+//! at `max(now, busy_until)` — the engine serves batches in order —
+//! and *completes* `service` ticks later, where `service` is the
+//! measured wall time of the real engine forward (or a fixed
+//! [`ServeConfig::service_ticks`] override, which makes tests fully
+//! deterministic). A request's latency is `completion − arrival`:
+//! queueing delay, micro-batch wait, pipeline backpressure, and real
+//! compute all land in the percentiles, which is what turns
+//! arrival-rate sweeps into the queueing-behavior curves the related
+//! serving-dispatch work evaluates.
 //!
 //! [`run_open_loop`] is the single traffic protocol (Poisson arrivals
 //! from a seeded [`Rng`] over a [`MixtureStream`]) shared by
 //! `serve-bench`, `repro serve`, `benches/micro.rs`, and
 //! `examples/serving_sim.rs` — change the measurement protocol here,
-//! not per call site.
+//! not per call site. [`measure_engine_rate`] is the capacity
+//! calibration: it times the **configured** backend (scoped or pool,
+//! any layer count), so load fractions are honest for whichever engine
+//! the builder selected.
 
 pub mod pool;
 pub mod queue;
+pub mod server;
 
 pub use pool::PoolEngine;
 pub use queue::{BatchMember, BatchQueue, SubmitError};
+pub use server::Server;
 
 use crate::data::MixtureStream;
 use crate::dispatch::plan::OverflowPolicy;
+use crate::engine::{Backend, Engine, MoeEngine};
 use crate::experts::ExpertBank;
 use crate::metrics::{percentile_nearest_rank, LayerBalance};
 use crate::model::{ModelForward, StackedModel};
@@ -60,9 +69,17 @@ use crate::router::{FullForward, RouterPlan};
 use crate::util::rng::Rng;
 
 /// Configuration of a [`ServeRuntime`].
+///
+/// The queue/clock fields (`max_batch`, `max_wait`, `queue_tokens`,
+/// `service_ticks`) always apply. The engine-side fields (`n_workers`,
+/// `capacity_factor`, `policy`, `renormalize`) are consumed only by
+/// the deprecated [`ServeRuntime::new`] / [`ServeRuntime::from_model`]
+/// shims, which build a pool engine from them — with
+/// [`ServeRuntime::with_engine`] that configuration lives on the
+/// engine's builder instead.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
-    /// Persistent pool workers (clamped to at least 1).
+    /// Persistent pool workers (legacy shims only; must be >= 1 there).
     pub n_workers: usize,
     /// Micro-batch flush size, tokens.
     pub max_batch: usize,
@@ -70,14 +87,16 @@ pub struct ServeConfig {
     pub max_wait: u64,
     /// Submission-queue bound, tokens (back-pressure past this).
     pub queue_tokens: usize,
-    /// Expert capacity factor per batch (shared `capacity_for` rule).
+    /// Expert capacity factor per batch (legacy shims only).
     pub capacity_factor: f64,
-    /// Overflow policy applied at dispatch-plan build.
+    /// Overflow policy applied at dispatch-plan build (legacy shims
+    /// only).
     pub policy: OverflowPolicy,
-    /// Renormalize surviving gate weights of partially-dropped tokens.
+    /// Renormalize surviving gate weights of partially-dropped tokens
+    /// (legacy shims only).
     pub renormalize: bool,
     /// Fixed per-batch service time in ticks; `None` measures the real
-    /// pool forward (tests pin this for determinism).
+    /// engine forward (tests pin this for determinism).
     pub service_ticks: Option<u64>,
 }
 
@@ -121,7 +140,7 @@ pub struct ServeReport {
     pub latency_p99_us: f64,
     /// Completed tokens over first-arrival → last-completion time.
     pub throughput_tok_per_s: f64,
-    /// Rolling routed-load balance over the pool's window — the mean
+    /// Rolling routed-load balance over the engine's window — the mean
     /// over MoE layers (the paper's model-level convention; identical
     /// to the single window for one-layer runtimes).
     pub window_gini: f64,
@@ -166,21 +185,23 @@ impl ServeReport {
     }
 }
 
-/// The serving runtime: bounded queue → micro-batcher → persistent
-/// pool → latency/balance telemetry. See the module docs for the time
+/// The serving runtime: bounded queue → micro-batcher → engine facade
+/// → latency/balance telemetry, generic over the engine
+/// ([`MoeEngine`]); the default type parameter is the boxed facade an
+/// [`Engine::into_inner`] yields. See the module docs for the time
 /// model.
-#[derive(Debug)]
-pub struct ServeRuntime {
+pub struct ServeRuntime<E: MoeEngine = Box<dyn MoeEngine>> {
     cfg: ServeConfig,
-    pool: PoolEngine,
+    engine: E,
+    d_model: usize,
     queue: BatchQueue,
-    out: ModelForward,
     batch_h: Vec<f32>,
     members: Vec<BatchMember>,
     completions: Vec<Completion>,
     latencies: Vec<f64>,
     latency_sum: f64,
-    /// Virtual tick until which the pool is busy with earlier batches.
+    /// Virtual tick until which the engine is busy with earlier
+    /// batches.
     busy_until: u64,
     n_batches: usize,
     tokens_done: usize,
@@ -189,9 +210,14 @@ pub struct ServeRuntime {
     last_done: u64,
 }
 
-impl ServeRuntime {
-    /// Single-layer runtime (the PR 3 entry point): equivalent to
-    /// [`Self::from_model`] over `StackedModel::single(plan, bank)`.
+impl ServeRuntime<Box<dyn MoeEngine>> {
+    /// Single-layer runtime over a pool engine built from the config's
+    /// engine-side fields — the PR 3 entry point.
+    #[deprecated(
+        note = "build an engine with lpr::engine::Engine::builder() and \
+                use ServeRuntime::with_engine"
+    )]
+    #[allow(deprecated)] // a deprecated shim may call its sibling shim
     pub fn new(
         plan: RouterPlan,
         bank: ExpertBank,
@@ -200,24 +226,60 @@ impl ServeRuntime {
         ServeRuntime::from_model(StackedModel::single(plan, bank), cfg)
     }
 
-    /// Serve a whole `L`-layer model stack: every flushed micro-batch
-    /// runs [`PoolEngine::forward_model`] (route → plan → FFN → combine
-    /// per layer, residual-composed), and the balance telemetry
-    /// resolves per layer.
+    /// Whole-stack runtime over a pool engine built from the config's
+    /// engine-side fields — the PR 4 entry point. Degenerate legacy
+    /// configs keep their documented pre-facade semantics instead of
+    /// the builder's typed rejections: `n_workers: 0` is clamped to 1,
+    /// and a non-finite/non-positive `capacity_factor` degrades to the
+    /// minimum (capacity 1 per expert bin — exactly what
+    /// `dispatch::capacity_for` produced for those values).
+    #[deprecated(
+        note = "build an engine with lpr::engine::Engine::builder() and \
+                use ServeRuntime::with_engine"
+    )]
     pub fn from_model(model: StackedModel, cfg: ServeConfig) -> ServeRuntime {
-        let d = model.d_model();
-        let mut pool = PoolEngine::from_model(model, cfg.n_workers);
-        pool.set_renormalize(cfg.renormalize);
-        let queue =
-            BatchQueue::new(d, cfg.max_batch, cfg.max_wait, cfg.queue_tokens);
-        // pre-size the per-layer slots so `last_forward` is valid (an
-        // empty forward) before the first flush, as it was in PR 3
-        let mut out = ModelForward::new();
-        out.ensure_layers(pool.n_layers());
+        // capacity_for(n, e, cf): (fair·cf).ceil().max(1) — so legacy
+        // 0/negative/NaN cf yielded capacity 1 (reproduced by the
+        // smallest positive cf) and +inf yielded effectively unlimited
+        // bins (reproduced by f64::MAX)
+        let cf = cfg.capacity_factor;
+        let cf = if cf.is_nan() || cf <= 0.0 {
+            f64::MIN_POSITIVE
+        } else if cf.is_infinite() {
+            f64::MAX
+        } else {
+            cf
+        };
+        let engine = Engine::builder()
+            .model(model)
+            .backend(Backend::Pool { workers: cfg.n_workers.max(1) })
+            .policy(cfg.policy)
+            .capacity_factor(cf)
+            .renormalize(cfg.renormalize)
+            .build()
+            .expect("a validated StackedModel cannot fail engine build");
+        ServeRuntime::with_engine(engine.into_inner(), cfg)
+    }
+}
+
+impl<E: MoeEngine> ServeRuntime<E> {
+    /// The runtime over any engine the builder produced — scoped or
+    /// pool, single-layer or stacked (`Engine` itself, its boxed
+    /// [`Engine::into_inner`] form, or any other [`MoeEngine`]). Only
+    /// the queue/clock fields of `cfg` apply; capacity factor, policy,
+    /// and renormalization live on the engine.
+    pub fn with_engine(engine: E, cfg: ServeConfig) -> ServeRuntime<E> {
+        let d_model = engine.d_model();
+        let queue = BatchQueue::new(
+            d_model,
+            cfg.max_batch,
+            cfg.max_wait,
+            cfg.queue_tokens,
+        );
         ServeRuntime {
-            pool,
+            engine,
+            d_model,
             queue,
-            out,
             batch_h: Vec::new(),
             members: Vec::new(),
             completions: Vec::new(),
@@ -237,14 +299,19 @@ impl ServeRuntime {
         &self.cfg
     }
 
-    /// The pool's rolling routed-load balance window (layer 0).
-    pub fn tracker(&self) -> &crate::metrics::LoadTracker {
-        self.pool.tracker()
+    /// The engine behind this runtime.
+    pub fn engine(&self) -> &E {
+        &self.engine
     }
 
-    /// The pool's per-layer `[L, E]` rolling balance windows.
+    /// The engine's rolling routed-load balance window (layer 0).
+    pub fn tracker(&self) -> &crate::metrics::LoadTracker {
+        self.engine.balance().layer(0)
+    }
+
+    /// The engine's per-layer `[L, E]` rolling balance windows.
     pub fn layer_tracker(&self) -> &crate::metrics::LayerLoadTracker {
-        self.pool.layer_tracker()
+        self.engine.balance()
     }
 
     /// The last flushed batch's **layer-0** forward (routed batch,
@@ -252,13 +319,13 @@ impl ServeRuntime {
     /// token rows `members[i].start..start + n_tokens` of `combined`
     /// (and of [`Self::last_model_forward`]'s `hidden`).
     pub fn last_forward(&self) -> &FullForward {
-        &self.out.layers[0]
+        &self.engine.last().layers[0]
     }
 
     /// The last flushed batch's whole-stack forward: per-layer pipeline
     /// state plus the final residual stream.
     pub fn last_model_forward(&self) -> &ModelForward {
-        &self.out
+        self.engine.last()
     }
 
     /// Members of the last flushed batch, in FIFO order.
@@ -269,6 +336,23 @@ impl ServeRuntime {
     /// Pending tokens in the submission queue.
     pub fn pending_tokens(&self) -> usize {
         self.queue.pending_tokens()
+    }
+
+    /// Calibrate this runtime's steady-state service rate (tokens per
+    /// second) **through its own engine** — whichever backend the
+    /// builder selected — so load fractions derived from it are honest
+    /// per backend (the pool-hardcoded free function mis-stated scoped
+    /// engines' capacity). Calibration batches bypass the queue and the
+    /// latency stats but do enter the engine's rolling balance window;
+    /// run it before serving traffic.
+    pub fn measure_service_rate(
+        &mut self,
+        mix: &MixtureStream,
+        rng: &mut Rng,
+        n_tokens: usize,
+        reps: usize,
+    ) -> f64 {
+        measure_engine_rate(&mut self.engine, mix, rng, n_tokens, reps)
     }
 
     /// Submit a request of `h.len() / d` token rows at tick `now`.
@@ -312,17 +396,13 @@ impl ServeRuntime {
 
     fn flush_one(&mut self, now: u64) {
         self.queue.pop_batch(&mut self.batch_h, &mut self.members);
+        let n = self.batch_h.len() / self.d_model;
         let t0 = std::time::Instant::now();
-        self.pool.forward_model(
-            &self.batch_h,
-            self.cfg.capacity_factor,
-            self.cfg.policy,
-            &mut self.out,
-        );
+        self.engine.forward(&self.batch_h, n);
         let measured_us = (t0.elapsed().as_nanos() / 1_000).max(1) as u64;
         let service = self.cfg.service_ticks.unwrap_or(measured_us);
-        // the pool serves batches in order: this batch starts when the
-        // previous one finished (or now, if the pool sat idle)
+        // the engine serves batches in order: this batch starts when
+        // the previous one finished (or now, if the engine sat idle)
         let start = now.max(self.busy_until);
         let done = start + service;
         self.busy_until = done;
@@ -352,6 +432,7 @@ impl ServeRuntime {
             .last_done
             .saturating_sub(self.first_arrival.unwrap_or(0))
             .max(1);
+        let balance = self.engine.balance();
         ServeReport {
             requests,
             tokens: self.tokens_done,
@@ -367,10 +448,10 @@ impl ServeRuntime {
             } else {
                 self.tokens_done as f64 / (elapsed_us as f64 * 1e-6)
             },
-            window_gini: self.pool.layer_tracker().mean_gini(),
-            window_min_max: self.pool.layer_tracker().mean_min_max(),
-            window_cv: self.pool.layer_tracker().mean_cv(),
-            layers: self.pool.layer_tracker().per_layer(),
+            window_gini: balance.mean_gini(),
+            window_min_max: balance.mean_min_max(),
+            window_cv: balance.mean_cv(),
+            layers: balance.per_layer(),
         }
     }
 }
@@ -381,8 +462,8 @@ impl ServeRuntime {
 /// submissions counted as rejected (no retry), and a final drain. The
 /// single traffic protocol behind `serve-bench`, `repro serve`, the
 /// micro benches, and the serving example.
-pub fn run_open_loop(
-    runtime: &mut ServeRuntime,
+pub fn run_open_loop<E: MoeEngine>(
+    runtime: &mut ServeRuntime<E>,
     mix: &MixtureStream,
     rng: &mut Rng,
     n_requests: usize,
@@ -413,13 +494,41 @@ pub fn run_open_loop(
     runtime.drain(now);
 }
 
-/// Measure a pool's steady-state full-forward service rate (tokens per
-/// second) over `reps` batches of `n_tokens` — through the **whole
-/// stack** the pool serves, so multi-layer runtimes calibrate against
-/// multi-layer cost. The calibration `serve-bench` and `repro serve`
-/// use to express arrival rates as load fractions of this machine's
-/// capacity, so the sweep saturates on every box instead of only on
-/// the one it was tuned on.
+/// Measure an engine's steady-state forward service rate (tokens per
+/// second) over `reps` batches of `n_tokens` — through **whichever
+/// backend and stack the builder selected**, so multi-layer and scoped
+/// runtimes calibrate against their real cost. The calibration
+/// `serve`, `serve-bench`, and `repro serve` use to express arrival
+/// rates as load fractions of this machine's capacity, so rate sweeps
+/// saturate on every box instead of only on the one they were tuned
+/// on.
+pub fn measure_engine_rate<E: MoeEngine + ?Sized>(
+    engine: &mut E,
+    mix: &MixtureStream,
+    rng: &mut Rng,
+    n_tokens: usize,
+    reps: usize,
+) -> f64 {
+    let mut h = Vec::new();
+    mix.fill(rng, n_tokens, &mut h);
+    engine.forward(&h, n_tokens); // warm
+    let mut best = f64::INFINITY;
+    for _ in 0..reps.max(1) {
+        mix.fill(rng, n_tokens, &mut h);
+        let t0 = std::time::Instant::now();
+        engine.forward(&h, n_tokens);
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    n_tokens as f64 / best.max(1e-9)
+}
+
+/// Pool-only calibration kept for compatibility; it cannot see scoped
+/// backends, which is exactly the bug [`measure_engine_rate`] fixes.
+#[deprecated(
+    note = "use measure_engine_rate (or ServeRuntime::measure_service_rate) \
+            — this path hard-assumes the pool backend"
+)]
+#[allow(clippy::too_many_arguments)]
 pub fn measure_service_rate(
     pool: &mut PoolEngine,
     mix: &MixtureStream,
@@ -459,6 +568,25 @@ mod tests {
         (r, bank, mix, rng)
     }
 
+    /// Facade-built pool runtime over a single layer, engine-side
+    /// options on the builder.
+    fn facade_runtime(
+        plan: RouterPlan,
+        bank: ExpertBank,
+        cfg: ServeConfig,
+        policy: OverflowPolicy,
+        cf: f64,
+    ) -> ServeRuntime {
+        let engine = Engine::builder()
+            .layer(plan, bank)
+            .backend(Backend::Pool { workers: cfg.n_workers })
+            .policy(policy)
+            .capacity_factor(cf)
+            .build()
+            .unwrap();
+        ServeRuntime::with_engine(engine.into_inner(), cfg)
+    }
+
     /// Deterministic latency accounting on the virtual clock: queue
     /// wait, micro-batch flush rules, and pipeline backpressure all
     /// land in per-request latencies exactly.
@@ -473,7 +601,13 @@ mod tests {
             service_ticks: Some(7),
             ..ServeConfig::default()
         };
-        let mut rt = ServeRuntime::new(r.plan().clone(), bank, cfg);
+        let mut rt = facade_runtime(
+            r.plan().clone(),
+            bank,
+            cfg,
+            OverflowPolicy::Drop,
+            1.25,
+        );
         let mut h = Vec::new();
         // r0 (2 tokens) at t=0: below max_batch, not aged — no flush
         mix.fill(&mut rng, 2, &mut h);
@@ -485,11 +619,11 @@ mod tests {
         let r1 = rt.submit(&h, 9).unwrap();
         let done: Vec<Completion> = rt.poll(9).to_vec();
         assert_eq!(done.len(), 2);
-        // batch starts at t=9 (pool idle), completes at 9 + 7 = 16
+        // batch starts at t=9 (engine idle), completes at 9 + 7 = 16
         assert_eq!(done[0], Completion { id: r0, n_tokens: 2, latency: 16, done_at: 16 });
         assert_eq!(done[1], Completion { id: r1, n_tokens: 2, latency: 7, done_at: 16 });
         // r2 (1 token) at t=11: flushes only once aged out at t=21,
-        // and the pool is free by then (busy_until = 16)
+        // and the engine is free by then (busy_until = 16)
         mix.fill(&mut rng, 1, &mut h);
         let r2 = rt.submit(&h, 11).unwrap();
         assert!(rt.poll(20).is_empty());
@@ -514,6 +648,7 @@ mod tests {
     /// The runtime's combined output for a flushed batch equals the
     /// scoped engine's forward over the same concatenated tokens.
     #[test]
+    #[allow(deprecated)] // the scoped forward_full is the parity oracle
     fn flushed_batch_matches_scoped_engine_forward() {
         let (r, bank, mix, mut rng) = tiny_setup(2);
         let d = 8usize;
@@ -523,11 +658,15 @@ mod tests {
             max_wait: 100,
             queue_tokens: 64,
             service_ticks: Some(1),
-            capacity_factor: 1.25,
-            policy: OverflowPolicy::LeastLoaded,
             ..ServeConfig::default()
         };
-        let mut rt = ServeRuntime::new(r.plan().clone(), bank.clone(), cfg);
+        let mut rt = facade_runtime(
+            r.plan().clone(),
+            bank.clone(),
+            cfg,
+            OverflowPolicy::LeastLoaded,
+            1.25,
+        );
         let (mut a, mut b) = (Vec::new(), Vec::new());
         mix.fill(&mut rng, 3, &mut a);
         mix.fill(&mut rng, 5, &mut b);
@@ -555,14 +694,12 @@ mod tests {
     }
 
     /// A multi-layer runtime serves whole-stack forwards: the flushed
-    /// batch's residual stream equals the scoped `ModelEngine` over the
+    /// batch's residual stream equals a scoped facade engine over the
     /// same concatenated tokens, and the report resolves per-layer
     /// balance.
     #[test]
     fn model_runtime_matches_scoped_stack_and_reports_layers() {
-        use crate::model::{
-            synthetic_stacked_model, ModelEngine, ModelForward,
-        };
+        use crate::model::synthetic_stacked_model;
         let (d, n_layers) = (8usize, 3usize);
         let mut rng = Rng::new(6);
         let model = synthetic_stacked_model(
@@ -577,14 +714,18 @@ mod tests {
         );
         let mix = MixtureStream::standard(&mut rng, d);
         let cfg = ServeConfig {
-            n_workers: 2,
             max_batch: 8,
             max_wait: 100,
             queue_tokens: 64,
             service_ticks: Some(1),
             ..ServeConfig::default()
         };
-        let mut rt = ServeRuntime::from_model(model.clone(), cfg);
+        let pool = Engine::builder()
+            .model(model.clone())
+            .backend(Backend::Pool { workers: 2 })
+            .build()
+            .unwrap();
+        let mut rt = ServeRuntime::with_engine(pool.into_inner(), cfg);
         // valid (empty) before the first flush — the PR 3 contract
         assert!(rt.last_forward().combined.is_empty());
         assert!(rt.last_model_forward().hidden.is_empty());
@@ -596,9 +737,12 @@ mod tests {
         assert_eq!(rt.poll(1).len(), 2);
         let mut h = a.clone();
         h.extend_from_slice(&b);
-        let mut scoped = ModelEngine::new(model, 1);
-        let mut want = ModelForward::new();
-        scoped.forward(&h, 1.25, OverflowPolicy::Drop, &mut want);
+        let mut scoped = Engine::builder()
+            .model(model)
+            .backend(Backend::Scoped { threads: 1 })
+            .build()
+            .unwrap();
+        let want = scoped.forward(&h, 8);
         assert_eq!(rt.last_model_forward().hidden, want.hidden);
         assert_eq!(rt.last_forward().combined, want.layers[0].combined);
         let rep = rt.report();
@@ -608,6 +752,46 @@ mod tests {
             / n_layers as f64;
         assert!((rep.window_gini - mean).abs() < 1e-12);
         assert_eq!(rt.layer_tracker().n_layers(), n_layers);
+    }
+
+    /// The deprecated constructors are thin shims over the facade:
+    /// outputs stay bit-identical to the builder path.
+    #[test]
+    #[allow(deprecated)]
+    fn legacy_constructors_match_facade_runtime() {
+        let (r, bank, mix, mut rng) = tiny_setup(11);
+        let cfg = ServeConfig {
+            n_workers: 2,
+            max_batch: 8,
+            max_wait: 100,
+            queue_tokens: 64,
+            service_ticks: Some(3),
+            policy: OverflowPolicy::NextChoice,
+            capacity_factor: 1.0,
+            ..ServeConfig::default()
+        };
+        let mut legacy =
+            ServeRuntime::new(r.plan().clone(), bank.clone(), cfg.clone());
+        let mut facade = facade_runtime(
+            r.plan().clone(),
+            bank,
+            cfg,
+            OverflowPolicy::NextChoice,
+            1.0,
+        );
+        let mut h = Vec::new();
+        mix.fill(&mut rng, 8, &mut h);
+        legacy.submit(&h, 0).unwrap();
+        facade.submit(&h, 0).unwrap();
+        assert_eq!(legacy.poll(0).to_vec(), facade.poll(0).to_vec());
+        assert_eq!(
+            legacy.last_forward().combined,
+            facade.last_forward().combined
+        );
+        assert_eq!(
+            legacy.last_model_forward().hidden,
+            facade.last_model_forward().hidden
+        );
     }
 
     #[test]
@@ -640,7 +824,13 @@ mod tests {
             service_ticks: Some(1),
             ..ServeConfig::default()
         };
-        let mut rt = ServeRuntime::new(r.plan().clone(), bank, cfg);
+        let mut rt = facade_runtime(
+            r.plan().clone(),
+            bank,
+            cfg,
+            OverflowPolicy::Drop,
+            1.25,
+        );
         let mut h = Vec::new();
         mix.fill(&mut rng, 3, &mut h);
         rt.submit(&h, 0).unwrap();
@@ -664,7 +854,13 @@ mod tests {
             service_ticks: Some(5),
             ..ServeConfig::default()
         };
-        let mut rt = ServeRuntime::new(r.plan().clone(), bank, cfg);
+        let mut rt = facade_runtime(
+            r.plan().clone(),
+            bank,
+            cfg,
+            OverflowPolicy::Drop,
+            1.25,
+        );
         run_open_loop(&mut rt, &mix, &mut rng, 40, 4, 1_000_000.0);
         let rep = rt.report();
         assert_eq!(rep.requests + rep.rejected, 40);
@@ -676,5 +872,38 @@ mod tests {
         assert!(rep.window_gini >= 0.0);
         // every batch respected max_batch
         assert!(rep.mean_batch_tokens <= 16.0);
+    }
+
+    /// Satellite: calibration runs through whichever backend the
+    /// builder selected — a scoped runtime measures its own engine,
+    /// not a hard-coded pool.
+    #[test]
+    fn measure_service_rate_uses_the_configured_backend() {
+        let (r, bank, mix, mut rng) = tiny_setup(5);
+        for backend in
+            [Backend::Scoped { threads: 1 }, Backend::Pool { workers: 2 }]
+        {
+            let engine = Engine::builder()
+                .layer(r.plan().clone(), bank.clone())
+                .backend(backend)
+                .build()
+                .unwrap();
+            let mut rt = ServeRuntime::with_engine(
+                engine.into_inner(),
+                ServeConfig { max_batch: 16, ..ServeConfig::default() },
+            );
+            let rate = rt.measure_service_rate(&mix, &mut rng, 16, 2);
+            assert!(
+                rate.is_finite() && rate > 0.0,
+                "{backend:?}: bad rate {rate}"
+            );
+            // the calibration really drove this runtime's engine
+            assert!(rt.tracker().total_steps() >= 3);
+            // and the runtime still serves normally afterwards
+            let mut h = Vec::new();
+            mix.fill(&mut rng, 4, &mut h);
+            rt.submit(&h, 0).unwrap();
+            assert_eq!(rt.drain(0).len(), 1);
+        }
     }
 }

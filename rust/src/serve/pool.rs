@@ -229,6 +229,10 @@ impl std::fmt::Debug for Worker {
 impl PoolEngine {
     /// Single-layer pool (the PR 3 entry point): equivalent to
     /// [`Self::from_model`] over `StackedModel::single(plan, bank)`.
+    #[deprecated(
+        note = "construct through lpr::engine::Engine::builder() with \
+                Backend::Pool — the pool is a backend internal now"
+    )]
     pub fn new(
         plan: RouterPlan,
         bank: ExpertBank,
@@ -290,6 +294,11 @@ impl PoolEngine {
 
     pub fn n_layers(&self) -> usize {
         self.layers.len()
+    }
+
+    /// Residual-stream width shared by every layer of the stack.
+    pub fn d_model(&self) -> usize {
+        self.d_model
     }
 
     pub fn n_workers(&self) -> usize {
@@ -496,6 +505,10 @@ impl PoolEngine {
     /// [`ServingEngine::forward_full`](crate::router::ServingEngine::forward_full) (the expert bank lives in the
     /// pool, so it is not a parameter). Bit-identical to the scoped
     /// path for every worker count.
+    #[deprecated(
+        note = "use the engine facade: Engine::builder()…backend(\
+                Backend::Pool { .. }).build() and MoeEngine::forward"
+    )]
     pub fn forward_full(
         &mut self,
         h: &[f32],
@@ -559,6 +572,7 @@ impl Drop for PoolEngine {
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // the legacy entry points ARE the parity oracles
 mod tests {
     use super::*;
     use crate::model::{synthetic_stacked_model, ModelEngine};

@@ -23,7 +23,9 @@
 
 use std::collections::VecDeque;
 
-/// Why a submission was refused.
+/// Why a submission was refused. Implements `Display` +
+/// `std::error::Error` and converts into the shared [`crate::Error`],
+/// so callers print it instead of matching and formatting by hand.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SubmitError {
     /// The queue is at `capacity_tokens`; retry after a flush.
@@ -32,6 +34,24 @@ pub enum SubmitError {
     /// flush.
     TooLarge,
 }
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Full => write!(
+                f,
+                "submission queue is full (back-pressure); retry after \
+                 a flush"
+            ),
+            SubmitError::TooLarge => write!(
+                f,
+                "request exceeds max_batch tokens and can never flush"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
 
 /// One request's slice of a flushed batch: token rows
 /// `start..start + n_tokens` of the batch buffer belong to request

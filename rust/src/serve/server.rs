@@ -1,0 +1,396 @@
+//! Wall-clock serving front-end: the deployable loop over the
+//! virtual-clock [`ServeRuntime`] core — the ROADMAP "wall-clock
+//! ingestion" item.
+//!
+//! [`ServeRuntime`] is event-driven on a virtual clock: deterministic,
+//! test-friendly, and driven entirely by the caller stamping `now`
+//! onto `submit`/`poll`. [`Server`] wraps one runtime (over any boxed
+//! [`MoeEngine`](crate::engine::MoeEngine) the builder produced) and
+//! supplies the missing real-time half **without forking the
+//! deterministic core**:
+//!
+//! - `enqueue` stamps real `Instant`-derived microsecond arrivals
+//!   (1 tick = 1 µs since server start) onto `ServeRuntime::submit`;
+//! - a background flusher thread advances the clock every
+//!   `poll_interval`, so micro-batches flush by size *and* by age with
+//!   no caller in the loop;
+//! - `await_completion` blocks (condvar) until the request's
+//!   [`Completion`] lands — the blocking client API a driver thread
+//!   pool needs.
+//!
+//! The virtual-clock semantics are untouched: the same `ServeRuntime`
+//! code path computes batch start (`max(now, busy_until)`), service
+//! time (measured, or the [`crate::serve::ServeConfig::service_ticks`]
+//! override for deterministic tests), and per-request latency.
+//! Virtual-clock tests stay bit-identical; the server only chooses
+//! *which* `now` to pass.
+//!
+//! Lock order: the flusher takes the runtime lock, then the completion
+//! map; `enqueue` takes only the runtime lock; `await_completion` takes
+//! only the map — no ordering cycle. The runtime lock **is held for
+//! the duration of a batch forward** (the engine is one shared compute
+//! resource, so a second batch could not run concurrently anyway), so
+//! `enqueue`/`report` can block for up to one batch service time while
+//! a flush computes; splitting the queue from the engine behind
+//! separate locks — so submissions land during compute — is a noted
+//! follow-up in ROADMAP.md, not a property of this version.
+//!
+//! Unclaimed completions are retained in a **bounded** buffer (the
+//! [`DONE_RETAIN`] most recent); older unclaimed records are discarded
+//! oldest-first, so fire-and-forget clients cannot leak memory — but
+//! `await_completion` on a discarded id would block forever: claim
+//! completions promptly, or use `try_completion`.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::{Completion, ServeReport, ServeRuntime, SubmitError};
+
+/// Unclaimed completions retained before the oldest are discarded.
+pub const DONE_RETAIN: usize = 16_384;
+
+/// Bounded unclaimed-completion buffer: completion records by id, with
+/// insertion order tracked for oldest-first eviction. `order` may hold
+/// ids already claimed (stale); eviction pops them harmlessly, and its
+/// length bound (`DONE_RETAIN`) bounds the map too.
+#[derive(Default)]
+struct DoneMap {
+    map: HashMap<u64, Completion>,
+    order: VecDeque<u64>,
+}
+
+impl DoneMap {
+    fn insert(&mut self, c: Completion) {
+        self.map.insert(c.id, c);
+        self.order.push_back(c.id);
+        while self.order.len() > DONE_RETAIN {
+            if let Some(old) = self.order.pop_front() {
+                self.map.remove(&old);
+            }
+        }
+    }
+}
+
+struct Shared {
+    rt: Mutex<ServeRuntime>,
+    /// Completions not yet claimed by `await_completion`.
+    done: Mutex<DoneMap>,
+    cv: Condvar,
+    stop: AtomicBool,
+    t0: Instant,
+}
+
+impl Shared {
+    fn now_us(&self) -> u64 {
+        self.t0.elapsed().as_micros() as u64
+    }
+
+    /// One flusher step: advance the runtime to wall-clock `now` and
+    /// publish any completions. `final_drain` flushes everything still
+    /// queued (shutdown), regardless of the flush conditions.
+    fn pump(&self, final_drain: bool) {
+        let now = self.now_us();
+        let mut rt = self.rt.lock().expect("serve runtime poisoned");
+        let completed: Vec<Completion> = if final_drain {
+            rt.drain(now).to_vec()
+        } else {
+            rt.poll(now).to_vec()
+        };
+        drop(rt);
+        if !completed.is_empty() {
+            let mut done = self.done.lock().expect("completion map");
+            for c in completed {
+                done.insert(c);
+            }
+            self.cv.notify_all();
+        }
+    }
+}
+
+/// A running wall-clock server. Construct with [`Server::start`];
+/// `&Server` is shareable across client threads (`enqueue` /
+/// `await_completion` take `&self`). Dropping the server stops and
+/// joins the flusher after a final drain.
+///
+/// ```no_run
+/// use lpr::engine::{Backend, Engine};
+/// use lpr::model::synthetic_stacked_model;
+/// use lpr::serve::{Server, ServeConfig, ServeRuntime};
+/// use lpr::util::rng::Rng;
+///
+/// let model =
+///     synthetic_stacked_model("cosine", &Rng::new(7), 2, 8, 4, 4, 2, 6);
+/// let engine = Engine::builder()
+///     .model(model)
+///     .backend(Backend::Pool { workers: 2 })
+///     .build()?;
+/// let cfg = ServeConfig { max_batch: 64, ..ServeConfig::default() };
+/// let server =
+///     Server::start(ServeRuntime::with_engine(engine.into_inner(), cfg));
+/// let id = server.enqueue(&vec![0.0f32; 4 * 8])?;
+/// let completion = server.await_completion(id);
+/// assert_eq!(completion.n_tokens, 4);
+/// let report = server.shutdown();
+/// # Ok::<(), lpr::Error>(())
+/// ```
+pub struct Server {
+    shared: Arc<Shared>,
+    flusher: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start serving `rt` with the default 200 µs flusher cadence.
+    pub fn start(rt: ServeRuntime) -> Server {
+        Server::with_poll_interval(rt, Duration::from_micros(200))
+    }
+
+    /// Start serving `rt`, waking the background flusher every
+    /// `poll_interval` (the granularity at which age-based flushes and
+    /// completions are observed; latency floors at roughly one
+    /// interval).
+    pub fn with_poll_interval(
+        rt: ServeRuntime,
+        poll_interval: Duration,
+    ) -> Server {
+        let shared = Arc::new(Shared {
+            rt: Mutex::new(rt),
+            done: Mutex::new(DoneMap::default()),
+            cv: Condvar::new(),
+            stop: AtomicBool::new(false),
+            t0: Instant::now(),
+        });
+        let worker = shared.clone();
+        let flusher = std::thread::Builder::new()
+            .name("lpr-serve-clock".into())
+            .spawn(move || loop {
+                if worker.stop.load(Ordering::Acquire) {
+                    // final drain so every accepted request completes
+                    // and no awaiter is left blocked
+                    worker.pump(true);
+                    return;
+                }
+                worker.pump(false);
+                std::thread::sleep(poll_interval);
+            })
+            .expect("spawn serve clock thread");
+        Server { shared, flusher: Some(flusher) }
+    }
+
+    /// Microseconds since the server started — the tick domain of every
+    /// [`Completion`] this server reports.
+    pub fn now_us(&self) -> u64 {
+        self.shared.now_us()
+    }
+
+    /// Submit one request of `h.len() / d` token rows, stamped with the
+    /// current wall clock. Back-pressure surfaces as
+    /// [`SubmitError::Full`] (counted in [`ServeReport::rejected`]);
+    /// oversized requests as [`SubmitError::TooLarge`].
+    pub fn enqueue(&self, h: &[f32]) -> Result<u64, SubmitError> {
+        let now = self.shared.now_us();
+        let mut rt = self.shared.rt.lock().expect("serve runtime poisoned");
+        rt.submit(h, now)
+    }
+
+    /// The completion for `id`, if it has already been served (consumes
+    /// the record).
+    pub fn try_completion(&self, id: u64) -> Option<Completion> {
+        self.shared.done.lock().expect("completion map").map.remove(&id)
+    }
+
+    /// Block until request `id` completes and return its
+    /// [`Completion`] (consumes the record). Only pass ids returned by
+    /// [`Server::enqueue`], and claim promptly: a never-enqueued id —
+    /// or one whose unclaimed record aged past the [`DONE_RETAIN`]
+    /// retention bound — never arrives, so this would block forever.
+    pub fn await_completion(&self, id: u64) -> Completion {
+        let mut done = self.shared.done.lock().expect("completion map");
+        loop {
+            if let Some(c) = done.map.remove(&id) {
+                return c;
+            }
+            done = self.shared.cv.wait(done).expect("completion map");
+        }
+    }
+
+    /// Tokens currently queued (not yet flushed into a batch).
+    pub fn pending_tokens(&self) -> usize {
+        self.shared
+            .rt
+            .lock()
+            .expect("serve runtime poisoned")
+            .pending_tokens()
+    }
+
+    /// Aggregate telemetry for everything served so far (same schema as
+    /// the virtual-clock runtime's report).
+    pub fn report(&self) -> ServeReport {
+        self.shared.rt.lock().expect("serve runtime poisoned").report()
+    }
+
+    /// Stop the flusher, drain everything still queued, wake every
+    /// awaiter, and return the final report.
+    pub fn shutdown(mut self) -> ServeReport {
+        self.stop_and_join();
+        self.report()
+    }
+
+    fn stop_and_join(&mut self) {
+        self.shared.stop.store(true, Ordering::Release);
+        if let Some(h) = self.flusher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dispatch::plan::OverflowPolicy;
+    use crate::engine::{Backend, Engine};
+    use crate::model::synthetic_stacked_model;
+    use crate::serve::ServeConfig;
+    use crate::util::rng::Rng;
+
+    const D: usize = 8;
+
+    fn start_server(
+        max_batch: usize,
+        max_wait: u64,
+        service_ticks: Option<u64>,
+    ) -> Server {
+        let model = synthetic_stacked_model(
+            "cosine",
+            &Rng::new(5),
+            2,
+            D,
+            4,
+            4,
+            2,
+            6,
+        );
+        let engine = Engine::builder()
+            .model(model)
+            .backend(Backend::Pool { workers: 2 })
+            .policy(OverflowPolicy::LeastLoaded)
+            .capacity_factor(1.25)
+            .build()
+            .unwrap();
+        let cfg = ServeConfig {
+            max_batch,
+            max_wait,
+            queue_tokens: 16 * max_batch,
+            service_ticks,
+            ..ServeConfig::default()
+        };
+        Server::with_poll_interval(
+            ServeRuntime::with_engine(engine.into_inner(), cfg),
+            Duration::from_micros(200),
+        )
+    }
+
+    /// Acceptance: the wall-clock server round-trips a real-time
+    /// request batch end-to-end — size-flushed and age-flushed — under
+    /// a fixed service-time override for determinism of the service
+    /// accounting.
+    #[test]
+    fn server_round_trips_requests_end_to_end() {
+        // max_wait 50ms: far above the gap between the two enqueues
+        // below (so they cannot age-flush apart under a slow
+        // scheduler), far below test-timeout territory for the
+        // age-flushed third request
+        let server = start_server(4, 50_000, Some(10));
+        // two 2-token requests fill max_batch -> size flush
+        let a = vec![0.25f32; 2 * D];
+        let id0 = server.enqueue(&a).unwrap();
+        let id1 = server.enqueue(&a).unwrap();
+        let c0 = server.await_completion(id0);
+        let c1 = server.await_completion(id1);
+        assert_eq!(c0.n_tokens, 2);
+        assert_eq!(c1.n_tokens, 2);
+        // both flushed in one batch: identical completion tick, and
+        // the fixed override bounds latency from below
+        assert_eq!(c0.done_at, c1.done_at);
+        assert!(c0.latency >= 10);
+        // a lone 1-token request flushes by age (max_wait 1ms)
+        let b = vec![0.5f32; D];
+        let id2 = server.enqueue(&b).unwrap();
+        let c2 = server.await_completion(id2);
+        assert_eq!(c2.n_tokens, 1);
+        assert!(c2.done_at > c0.done_at);
+        // completions are consumed exactly once
+        assert_eq!(server.try_completion(id0), None);
+        let rep = server.shutdown();
+        assert_eq!(rep.requests, 3);
+        assert_eq!(rep.tokens, 5);
+        assert_eq!(rep.batches, 2);
+        assert_eq!(rep.rejected, 0);
+    }
+
+    /// Concurrent clients: blocking enqueue/await from several threads
+    /// all round-trip, and shutdown's final drain leaves nobody
+    /// waiting.
+    #[test]
+    fn concurrent_clients_all_complete() {
+        let server = start_server(64, 2_000, Some(5));
+        std::thread::scope(|scope| {
+            for t in 0..4 {
+                let server = &server;
+                scope.spawn(move || {
+                    for _ in 0..8 {
+                        let h = vec![t as f32; 3 * D];
+                        let id = server.enqueue(&h).unwrap();
+                        let c = server.await_completion(id);
+                        assert_eq!(c.n_tokens, 3);
+                    }
+                });
+            }
+        });
+        let rep = server.shutdown();
+        assert_eq!(rep.requests, 4 * 8);
+        assert_eq!(rep.tokens, 4 * 8 * 3);
+        assert!(rep.batches >= 1);
+        assert!(rep.window_gini >= 0.0);
+    }
+
+    /// The unclaimed-completion buffer is bounded: oldest records are
+    /// discarded past the retention cap, newest are kept.
+    #[test]
+    fn done_map_retention_is_bounded() {
+        let mut dm = DoneMap::default();
+        let last = DONE_RETAIN as u64 + 9;
+        for id in 0..=last {
+            dm.insert(Completion {
+                id,
+                n_tokens: 1,
+                latency: 1,
+                done_at: 1,
+            });
+        }
+        assert_eq!(dm.map.len(), DONE_RETAIN);
+        assert_eq!(dm.order.len(), DONE_RETAIN);
+        assert!(!dm.map.contains_key(&0), "oldest evicted");
+        assert!(dm.map.contains_key(&last), "newest kept");
+    }
+
+    /// Oversized requests are refused with the typed error, and the
+    /// server keeps serving.
+    #[test]
+    fn oversized_request_is_refused() {
+        let server = start_server(4, 500, Some(1));
+        let too_big = vec![0.0f32; 5 * D];
+        assert_eq!(server.enqueue(&too_big), Err(SubmitError::TooLarge));
+        let ok = vec![0.0f32; 2 * D];
+        let id = server.enqueue(&ok).unwrap();
+        assert_eq!(server.await_completion(id).n_tokens, 2);
+        drop(server); // Drop also stops the flusher cleanly
+    }
+}

@@ -1,0 +1,95 @@
+//! Integration tests for the PR 5 public surface: the engine facade
+//! (`Engine::builder()` as the one construction path) and the
+//! wall-clock `serve::Server` front-end. Pure Rust — no artifacts, no
+//! PJRT, so unlike `integration.rs` these never self-skip.
+
+use std::time::Duration;
+
+use lpr::dispatch::OverflowPolicy;
+use lpr::engine::{Backend, Engine, MoeEngine};
+use lpr::model::synthetic_stacked_model;
+use lpr::serve::{Server, ServeConfig, ServeRuntime, SubmitError};
+use lpr::util::rng::Rng;
+
+const D: usize = 16;
+
+fn model(layers: usize) -> lpr::model::StackedModel {
+    synthetic_stacked_model("cosine", &Rng::new(3), layers, D, 8, 6, 2, 10)
+}
+
+/// The facade is one interface over both backends: identical outputs,
+/// from the same builder calls, through the boxed trait object the
+/// runtime consumes.
+#[test]
+fn one_builder_both_backends_bit_identical() {
+    let mut rng = Rng::new(9);
+    let h: Vec<f32> =
+        (0..37 * D).map(|_| rng.normal() as f32).collect();
+    let mut outs: Vec<Vec<f32>> = Vec::new();
+    for backend in
+        [Backend::Scoped { threads: 3 }, Backend::Pool { workers: 2 }]
+    {
+        let mut engine: Box<dyn MoeEngine> = Engine::builder()
+            .model(model(3))
+            .backend(backend)
+            .policy(OverflowPolicy::NextChoice)
+            .capacity_factor(1.0)
+            .build()
+            .expect("valid config")
+            .into_inner();
+        assert_eq!(engine.layers(), 3);
+        assert_eq!(engine.d_model(), D);
+        outs.push(engine.forward(&h, 37).hidden.to_vec());
+    }
+    assert_eq!(outs[0], outs[1]);
+}
+
+/// Acceptance: `serve::Server` round-trips a real-time request batch
+/// end-to-end — wall-clock arrivals, background flushing, blocking
+/// await — with a fixed service-time override keeping the service
+/// accounting deterministic.
+#[test]
+fn server_round_trips_a_real_time_request_batch() {
+    let engine = Engine::builder()
+        .model(model(2))
+        .backend(Backend::Pool { workers: 2 })
+        .policy(OverflowPolicy::Drop)
+        .capacity_factor(1.25)
+        .build()
+        .expect("valid config");
+    let cfg = ServeConfig {
+        max_batch: 32,
+        max_wait: 2_000, // age-flush a partial batch after 2ms
+        queue_tokens: 256,
+        service_ticks: Some(25),
+        ..ServeConfig::default()
+    };
+    let server = Server::with_poll_interval(
+        ServeRuntime::with_engine(engine.into_inner(), cfg),
+        Duration::from_micros(200),
+    );
+    // an oversized request is refused with the typed error up front
+    assert_eq!(
+        server.enqueue(&vec![0.0f32; 33 * D]),
+        Err(SubmitError::TooLarge)
+    );
+    let mut rng = Rng::new(4);
+    let mut ids = Vec::new();
+    for _ in 0..6 {
+        let h: Vec<f32> =
+            (0..4 * D).map(|_| rng.normal() as f32).collect();
+        ids.push(server.enqueue(&h).expect("queue has room"));
+    }
+    for &id in &ids {
+        let c = server.await_completion(id);
+        assert_eq!(c.n_tokens, 4);
+        // latency includes at least the fixed service override
+        assert!(c.latency >= 25, "latency {} < service 25", c.latency);
+    }
+    let report = server.shutdown();
+    assert_eq!(report.requests, 6);
+    assert_eq!(report.tokens, 24);
+    assert_eq!(report.rejected, 0);
+    assert!(report.batches >= 1);
+    assert!(report.latency_p99_us >= report.latency_p50_us);
+}
