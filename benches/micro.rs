@@ -9,10 +9,12 @@
 //! full expert-forward sweep — scoped *and* persistent-pool — to
 //! `BENCH_dispatch.json`, the serving-runtime arrival sweep to
 //! `BENCH_serve.json`, the stacked-model forward sweep — scoped vs
-//! pool backends, layers {1, 4} — to `BENCH_model.json`, and the
+//! pool backends, layers {1, 4} — to `BENCH_model.json`, the
 //! facade-vs-direct overhead rows (boxed `dyn MoeEngine` vs the
-//! backend called directly) to `BENCH_engine.json`, so the perf
-//! trajectory is trackable across PRs). All serving-path engines are
+//! backend called directly) to `BENCH_engine.json`, and the
+//! grouped-GEMM kernel × weight-dtype sweep over the FFN hot loop to
+//! `BENCH_gemm.json`, so the perf trajectory is trackable across
+//! PRs). All serving-path engines are
 //! built through `Engine::builder()`; the `engine_direct/*` rows are
 //! the deliberate exception — they are the baseline the facade rows
 //! compare against. Set `LPR_BENCH_FAST=1` for a short smoke run (CI).
@@ -637,6 +639,63 @@ fn main() {
             push_row("facade/pool", n, res.per_item_ns());
         }
         write_rows_or_warn("BENCH_engine.json", &engine_rows);
+    }
+
+    // ---- grouped-GEMM micro-kernels: the FFN hot loop across every
+    // kernel × weight dtype at the acceptance shapes (E=32,
+    // d ∈ {32, 256}, d_ff = 4·d), emitted as BENCH_gemm.json. Rows
+    // carry a "simd" flag: without `--features simd` (or AVX2+FMA at
+    // runtime) the Simd rows measure the Blocked fallback. ----
+    {
+        use lpr::kernels::{simd_available, Kernel, WeightDtype};
+        let fast = std::env::var("LPR_BENCH_FAST").is_ok();
+        let ge = 32usize;
+        let gm = if fast { 8usize } else { 32 }; // rows per expert
+        let mut gemm_rows: Vec<String> = Vec::new();
+        for gd in [32usize, 256] {
+            let gff = 4 * gd;
+            let bank_f32 = ExpertBank::new(&Rng::new(77), ge, gd, gff);
+            let x = normal_vec(&mut rng, gm * gd, 1.0);
+            let mut hid = Vec::new();
+            let mut out = vec![0.0f32; gm * gd];
+            for dtype in WeightDtype::ALL {
+                let bank = bank_f32.quantized(dtype);
+                for kernel in Kernel::ALL {
+                    let res = b.run_items(
+                        &format!(
+                            "gemm/{}/{}/d{gd}",
+                            kernel.name(),
+                            dtype.name()
+                        ),
+                        (gm * ge) as f64,
+                        &mut || {
+                            for ei in 0..ge {
+                                bank.forward_rows_with(
+                                    kernel,
+                                    ei,
+                                    std::hint::black_box(&x),
+                                    gm,
+                                    &mut hid,
+                                    &mut out,
+                                );
+                            }
+                            std::hint::black_box(&out);
+                        },
+                    );
+                    gemm_rows.push(format!(
+                        "{{\"name\": \"gemm/{}/{}\", \"E\": {ge}, \
+                         \"d\": {gd}, \"d_ff\": {gff}, \
+                         \"m_per_expert\": {gm}, \"simd\": {}, \
+                         \"ns_per_token\": {:.2}}}",
+                        kernel.name(),
+                        dtype.name(),
+                        simd_available(),
+                        res.per_item_ns()
+                    ));
+                }
+            }
+        }
+        write_rows_or_warn("BENCH_gemm.json", &gemm_rows);
     }
 
     // ---- dispatch simulator ----

@@ -73,7 +73,7 @@ pub struct RunSummary {
     /// Per-step training loss (figure 3 input).
     pub loss_curve: Vec<f32>,
     /// Mean top-1 combine weight on held-out tokens (specialization
-    /// proxy for figure 4; see EXPERIMENTS.md).
+    /// proxy for figure 4; see `docs/ARCHITECTURE.md` §Telemetry).
     pub top1_confidence: f64,
     pub wall_s: f64,
     pub steps_per_s: f64,

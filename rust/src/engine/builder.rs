@@ -35,6 +35,7 @@
 
 use crate::dispatch::plan::OverflowPolicy;
 use crate::experts::ExpertBank;
+use crate::kernels::{Kernel, WeightDtype};
 use crate::model::{MoeLayer, StackedModel};
 use crate::router::RouterPlan;
 
@@ -169,7 +170,8 @@ impl std::error::Error for EngineBuildError {}
 
 /// Builder for [`Engine`] — see the module docs for a worked example.
 /// Defaults: `Backend::Scoped { threads: 1 }`, `OverflowPolicy::Drop`,
-/// capacity factor 1.25, renormalization off.
+/// capacity factor 1.25, renormalization off, `Kernel::Naive` GEMM
+/// kernel, f32 weights.
 #[derive(Debug, Clone, Default)]
 pub struct EngineBuilder {
     model: Option<StackedModel>,
@@ -178,6 +180,8 @@ pub struct EngineBuilder {
     policy: OverflowPolicy,
     capacity_factor: Option<f64>,
     renormalize: bool,
+    kernel: Kernel,
+    weight_dtype: WeightDtype,
 }
 
 impl EngineBuilder {
@@ -233,6 +237,28 @@ impl EngineBuilder {
         self
     }
 
+    /// GEMM micro-kernel for every layer's expert FFN stage (default
+    /// [`Kernel::Naive`], which is bit-identical to the historic
+    /// goldens). [`Kernel::Blocked`] / [`Kernel::Simd`] keep the
+    /// bit-identical-across-threads/backends contract per kernel; see
+    /// [`crate::kernels`] for the tiling scheme and the cross-kernel
+    /// equality guarantees.
+    pub fn kernel(mut self, kernel: Kernel) -> EngineBuilder {
+        self.kernel = kernel;
+        self
+    }
+
+    /// Storage dtype for every layer's FFN weights (default
+    /// [`WeightDtype::F32`]). Non-f32 dtypes quantize the banks once at
+    /// build time — halving (bf16) or quartering (int8) the weight
+    /// bytes the FFN streams per token, at the round-trip error bounds
+    /// documented in [`crate::kernels`]. Biases and accumulation stay
+    /// f32.
+    pub fn weight_dtype(mut self, dtype: WeightDtype) -> EngineBuilder {
+        self.weight_dtype = dtype;
+        self
+    }
+
     /// Validate the configuration and construct the backend. The only
     /// place in the crate where backends are built for scenario code.
     pub fn build(self) -> Result<Engine, EngineBuildError> {
@@ -269,6 +295,25 @@ impl EngineBuilder {
         if !cf.is_finite() || cf <= 0.0 {
             return Err(EngineBuildError::BadCapacityFactor(cf));
         }
+        // Quantize once at build time so the serving hot loop only ever
+        // sees a bank in its final storage dtype. `quantized` is a
+        // no-op clone for matching dtypes, so f32 stays zero-cost.
+        let model = if self.weight_dtype == WeightDtype::F32 {
+            model
+        } else {
+            StackedModel::new(
+                model
+                    .into_layers()
+                    .into_iter()
+                    .map(|l| {
+                        MoeLayer::new(
+                            l.plan,
+                            l.bank.quantized(self.weight_dtype),
+                        )
+                    })
+                    .collect(),
+            )
+        };
         let inner: Box<dyn super::MoeEngine> = match backend {
             Backend::Scoped { threads } => Box::new(ScopedBackend::new(
                 model,
@@ -276,6 +321,7 @@ impl EngineBuilder {
                 cf,
                 self.policy,
                 self.renormalize,
+                self.kernel,
             )),
             Backend::Pool { workers } => Box::new(PoolBackend::new(
                 model,
@@ -283,6 +329,7 @@ impl EngineBuilder {
                 cf,
                 self.policy,
                 self.renormalize,
+                self.kernel,
             )),
         };
         Ok(Engine::from_parts(inner, backend, cf, self.policy))

@@ -19,8 +19,12 @@
 //! - [`EngineBuilder`] (via [`Engine::builder`]) — owns **all**
 //!   configuration that used to be scattered across constructors and
 //!   setters (model, backend, overflow policy, capacity factor,
-//!   renormalization) and validates it into typed
-//!   [`EngineBuildError`]s instead of panics.
+//!   renormalization, GEMM kernel, weight dtype) and validates it into
+//!   typed [`EngineBuildError`]s instead of panics. `.kernel(..)`
+//!   selects the FFN micro-kernel (naive / cache-blocked / AVX2) and
+//!   `.weight_dtype(..)` quantizes the expert banks (bf16 / int8) once
+//!   at build time — see [`crate::kernels`] for the determinism and
+//!   error-bound contracts.
 //! - [`Backend`] — `Scoped { threads }` (per-batch `thread::scope`,
 //!   via `model::ModelEngine`) or `Pool { workers }` (persistent
 //!   channel-fed workers, via `serve::PoolEngine`). Both are
@@ -63,6 +67,7 @@ pub mod builder;
 pub use builder::{Backend, EngineBuildError, EngineBuilder};
 
 use crate::dispatch::plan::OverflowPolicy;
+use crate::kernels::Kernel;
 use crate::metrics::LayerLoadTracker;
 use crate::model::{ModelEngine, ModelForward, StackedModel};
 use crate::router::{FullForward, RouterBatch};
@@ -181,9 +186,11 @@ impl ScopedBackend {
         capacity_factor: f64,
         policy: OverflowPolicy,
         renormalize: bool,
+        kernel: Kernel,
     ) -> ScopedBackend {
         let mut eng = ModelEngine::new(model, threads);
         eng.set_renormalize(renormalize);
+        eng.set_kernel(kernel);
         let mut out = ModelForward::new();
         out.ensure_layers(eng.n_layers());
         ScopedBackend { eng, capacity_factor, policy, out }
@@ -240,9 +247,11 @@ impl PoolBackend {
         capacity_factor: f64,
         policy: OverflowPolicy,
         renormalize: bool,
+        kernel: Kernel,
     ) -> PoolBackend {
         let mut pool = PoolEngine::from_model(model, workers);
         pool.set_renormalize(renormalize);
+        pool.set_kernel(kernel);
         let mut out = ModelForward::new();
         out.ensure_layers(pool.n_layers());
         PoolBackend { pool, capacity_factor, policy, out }
@@ -715,5 +724,118 @@ mod tests {
         assert_eq!(boxed.d_model(), D);
         let h = vec![0.1f32; 4 * D];
         assert_eq!(boxed.forward(&h, 4).hidden.len(), 4 * D);
+    }
+
+    /// Tentpole: the builder's `.kernel(..)` knob. The default (Naive)
+    /// is bit-identical to an engine that never touched the knob — the
+    /// goldens cannot move — and every kernel is bit-identical across
+    /// backends through the facade.
+    #[test]
+    fn kernel_knob_keeps_backends_bit_identical() {
+        let mut rng = Rng::new(29);
+        let model = tiny_model(2);
+        let h = rand_vec(&mut rng, 31 * D);
+        let default_hidden = build(
+            model.clone(),
+            Backend::Scoped { threads: 2 },
+            OverflowPolicy::Drop,
+            1.25,
+        )
+        .forward(&h, 31)
+        .hidden
+        .to_vec();
+        for kernel in Kernel::ALL {
+            let mut per_backend = Vec::new();
+            for backend in [
+                Backend::Scoped { threads: 2 },
+                Backend::Pool { workers: 3 },
+            ] {
+                let mut eng = Engine::builder()
+                    .model(model.clone())
+                    .backend(backend)
+                    .kernel(kernel)
+                    .build()
+                    .unwrap();
+                per_backend.push(eng.forward(&h, 31).hidden.to_vec());
+            }
+            assert_eq!(
+                per_backend[0],
+                per_backend[1],
+                "{} diverged across backends",
+                kernel.name()
+            );
+            if kernel == Kernel::Naive {
+                assert_eq!(
+                    per_backend[0], default_hidden,
+                    "explicit Naive must equal the builder default"
+                );
+            }
+            // Blocked shares Naive's f32 accumulation order exactly
+            // (see kernels::blocked_gemm), so it cannot move either.
+            if kernel == Kernel::Blocked {
+                assert_eq!(per_backend[0], default_hidden);
+            }
+        }
+    }
+
+    /// Tentpole: `.weight_dtype(..)` quantizes the banks at build time.
+    /// The quantized forward stays within the documented round-trip
+    /// bounds of the f32 reference and remains bit-identical across
+    /// backends per dtype.
+    #[test]
+    fn weight_dtype_knob_quantizes_within_tolerance() {
+        use crate::kernels::WeightDtype;
+        let mut rng = Rng::new(37);
+        let model = tiny_model(2);
+        let h = rand_vec(&mut rng, 19 * D);
+        let want = build(
+            model.clone(),
+            Backend::Scoped { threads: 1 },
+            OverflowPolicy::Drop,
+            1.25,
+        )
+        .forward(&h, 19)
+        .hidden
+        .to_vec();
+        for dtype in [WeightDtype::Bf16, WeightDtype::Int8] {
+            let mut per_backend = Vec::new();
+            for backend in [
+                Backend::Scoped { threads: 2 },
+                Backend::Pool { workers: 2 },
+            ] {
+                let mut eng = Engine::builder()
+                    .model(model.clone())
+                    .backend(backend)
+                    .weight_dtype(dtype)
+                    .build()
+                    .unwrap();
+                per_backend.push(eng.forward(&h, 19).hidden.to_vec());
+            }
+            assert_eq!(
+                per_backend[0],
+                per_backend[1],
+                "{} diverged across backends",
+                dtype.name()
+            );
+            // Loose end-to-end envelope: two quantized GEMMs per layer
+            // compose, so allow a generous multiple of the per-GEMM
+            // bound; the tight bounds are pinned in kernels::tests.
+            let mut max_rel = 0.0f32;
+            for (a, b) in per_backend[0].iter().zip(&want) {
+                let rel = (a - b).abs() / b.abs().max(1.0);
+                max_rel = max_rel.max(rel);
+            }
+            assert!(
+                max_rel < 0.25,
+                "{} drifted {max_rel} from f32",
+                dtype.name()
+            );
+            assert!(
+                max_rel > 0.0,
+                "{} produced bit-identical output — quantization \
+                 apparently never happened",
+                dtype.name()
+            );
+        }
     }
 }

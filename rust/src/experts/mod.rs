@@ -20,21 +20,29 @@
 //! slots keep their original gate weight.
 
 use crate::dispatch::plan::{DispatchPlan, DROPPED};
-use crate::router::linalg::{matmul_into, silu};
+use crate::kernels::{
+    gemm_bias_act, Kernel, WeightDtype, WeightStore,
+};
 use crate::util::rng::Rng;
 
 /// `E` dense FFN expert shards with flat row-major parameters.
+///
+/// Weights live in a [`WeightStore`] — f32 by default, or bf16/int8
+/// after [`ExpertBank::quantized`] (the `Engine::builder()
+/// .weight_dtype(...)` knob). Biases stay f32 and every kernel
+/// accumulates in f32, so quantization error is exactly the weight
+/// round-trip bound documented in [`crate::kernels`].
 #[derive(Debug, Clone)]
 pub struct ExpertBank {
     pub n_experts: usize,
     pub d_model: usize,
     pub d_ff: usize,
-    /// [E, d, d_ff]
-    w1: Vec<f32>,
+    /// [E, d, d_ff] — viewed as `E·d` rows of length `d_ff`.
+    w1: WeightStore,
     /// [E, d_ff]
     b1: Vec<f32>,
-    /// [E, d_ff, d]
-    w2: Vec<f32>,
+    /// [E, d_ff, d] — viewed as `E·d_ff` rows of length `d`.
+    w2: WeightStore,
     /// [E, d]
     b2: Vec<f32>,
 }
@@ -69,9 +77,9 @@ impl ExpertBank {
             n_experts,
             d_model,
             d_ff,
-            w1,
+            w1: WeightStore::F32(w1),
             b1: vec![0.0; n_experts * d_ff],
-            w2,
+            w2: WeightStore::F32(w2),
             b2: vec![0.0; n_experts * d_model],
         }
     }
@@ -95,19 +103,80 @@ impl ExpertBank {
             n_experts,
             d_model,
             d_ff,
-            w1,
+            w1: WeightStore::F32(w1),
             b1: vec![0.0; n_experts * d_ff],
-            w2,
+            w2: WeightStore::F32(w2),
             b2: vec![0.0; n_experts * d_model],
         }
     }
 
+    /// Storage dtype of the FFN weights (both matrices share it).
+    pub fn dtype(&self) -> WeightDtype {
+        self.w1.dtype()
+    }
+
+    /// Quantize the bank's weights into `dtype` storage (biases stay
+    /// f32). Quantization always starts from full precision — calling
+    /// this on an already-quantized bank with a *different* dtype
+    /// would compound round-trip error, so that panics; re-quantizing
+    /// to the current dtype is a no-op clone.
+    pub fn quantized(&self, dtype: WeightDtype) -> ExpertBank {
+        if dtype == self.dtype() {
+            return self.clone();
+        }
+        let w1 = self.w1.as_f32().expect(
+            "quantized() needs f32 source weights — build the bank at \
+             full precision and quantize once",
+        );
+        let w2 = self.w2.as_f32().unwrap();
+        let (e, d, ff) = (self.n_experts, self.d_model, self.d_ff);
+        ExpertBank {
+            n_experts: e,
+            d_model: d,
+            d_ff: ff,
+            w1: WeightStore::quantize(w1, e * d, ff, dtype),
+            b1: self.b1.clone(),
+            w2: WeightStore::quantize(w2, e * ff, d, dtype),
+            b2: self.b2.clone(),
+        }
+    }
+
+    /// The f32 `w1` buffer (`None` once quantized) — tests and the
+    /// checkpoint bridge read weights back through these.
+    pub fn w1_f32(&self) -> Option<&[f32]> {
+        self.w1.as_f32()
+    }
+
+    /// The f32 `w2` buffer (`None` once quantized).
+    pub fn w2_f32(&self) -> Option<&[f32]> {
+        self.w2.as_f32()
+    }
+
     /// FFN of expert `e` over `m` contiguous rows: `out[m, d] =
-    /// SiLU(x·W1 + b1)·W2 + b2`. `hid` is caller-owned scratch (grows
-    /// once to the high-water bucket size). Pure per expert — the same
-    /// rows give the same bits regardless of which thread runs them.
+    /// SiLU(x·W1 + b1)·W2 + b2`, with [`Kernel::Naive`] — the historic
+    /// bit-exact path, kept as the parity oracle. See
+    /// [`ExpertBank::forward_rows_with`].
     pub fn forward_rows(
         &self,
+        e: usize,
+        x: &[f32],
+        m: usize,
+        hid: &mut Vec<f32>,
+        out: &mut [f32],
+    ) {
+        self.forward_rows_with(Kernel::Naive, e, x, m, hid, out);
+    }
+
+    /// FFN of expert `e` over `m` contiguous rows with an explicit
+    /// GEMM kernel: both matmuls run through
+    /// [`crate::kernels::gemm_bias_act`] with the bias add (and the
+    /// SiLU, for the first matmul) fused into the kernel epilogue.
+    /// `hid` is caller-owned scratch (grows once to the high-water
+    /// bucket size). Pure per expert — the same rows give the same
+    /// bits regardless of which thread runs them, for every kernel.
+    pub fn forward_rows_with(
+        &self,
+        kernel: Kernel,
         e: usize,
         x: &[f32],
         m: usize,
@@ -120,35 +189,48 @@ impl ExpertBank {
         assert_eq!(out.len(), m * d, "out shape");
         hid.clear();
         hid.resize(m * ff, 0.0);
-        matmul_into(x, &self.w1[e * d * ff..(e + 1) * d * ff], hid, m, d, ff);
-        let b1 = &self.b1[e * ff..(e + 1) * ff];
-        for row in hid.chunks_mut(ff) {
-            for (v, &b) in row.iter_mut().zip(b1) {
-                *v += b;
-            }
-        }
-        silu(hid);
-        matmul_into(
+        gemm_bias_act(
+            kernel,
+            x,
+            self.w1.view(e * d, d, ff),
+            &self.b1[e * ff..(e + 1) * ff],
             hid,
-            &self.w2[e * ff * d..(e + 1) * ff * d],
+            m,
+            d,
+            ff,
+            true,
+        );
+        gemm_bias_act(
+            kernel,
+            hid,
+            self.w2.view(e * ff, ff, d),
+            &self.b2[e * d..(e + 1) * d],
             out,
             m,
             ff,
             d,
+            false,
         );
-        let b2 = &self.b2[e * d..(e + 1) * d];
-        for row in out.chunks_mut(d) {
-            for (v, &b) in row.iter_mut().zip(b2) {
-                *v += b;
-            }
-        }
     }
 
     /// Single-threaded reference: run every expert bucket of `plan`
-    /// over the gathered rows `xg` into `y` (both `[kept, d]`). The
-    /// sharded engine path must match this bit-for-bit.
+    /// over the gathered rows `xg` into `y` (both `[kept, d]`) with
+    /// [`Kernel::Naive`]. The sharded engine path must match this
+    /// bit-for-bit.
     pub fn forward_all(
         &self,
+        plan: &DispatchPlan,
+        xg: &[f32],
+        hid: &mut Vec<f32>,
+        y: &mut [f32],
+    ) {
+        self.forward_all_with(Kernel::Naive, plan, xg, hid, y);
+    }
+
+    /// [`ExpertBank::forward_all`] with an explicit GEMM kernel.
+    pub fn forward_all_with(
+        &self,
+        kernel: Kernel,
         plan: &DispatchPlan,
         xg: &[f32],
         hid: &mut Vec<f32>,
@@ -163,7 +245,8 @@ impl ExpertBank {
             if m == 0 {
                 continue;
             }
-            self.forward_rows(
+            self.forward_rows_with(
+                kernel,
                 e,
                 &xg[rows.start * d..rows.end * d],
                 m,
@@ -282,21 +365,29 @@ mod tests {
     fn init_is_deterministic_and_expert_distinct() {
         let a = ExpertBank::new(&Rng::new(5), 4, 8, 16);
         let b = ExpertBank::new(&Rng::new(5), 4, 8, 16);
-        assert_eq!(a.w1, b.w1);
-        assert_eq!(a.w2, b.w2);
+        let (aw1, aw2) = (a.w1_f32().unwrap(), a.w2_f32().unwrap());
+        assert_eq!(aw1, b.w1_f32().unwrap());
+        assert_eq!(aw2, b.w2_f32().unwrap());
         // different experts hold different weights
-        assert_ne!(a.w1[0..8 * 16], a.w1[8 * 16..2 * 8 * 16]);
+        assert_ne!(aw1[0..8 * 16], aw1[8 * 16..2 * 8 * 16]);
         // expert e's params depend only on (seed, e), not on E
         let wide = ExpertBank::new(&Rng::new(5), 6, 8, 16);
-        assert_eq!(a.w1[..4 * 8 * 16], wide.w1[..4 * 8 * 16]);
+        assert_eq!(
+            aw1[..4 * 8 * 16],
+            wide.w1_f32().unwrap()[..4 * 8 * 16]
+        );
     }
 
     #[test]
     fn forward_rows_matches_manual_ffn() {
         // d=2, ff=1: out = silu(x·w1)·w2 with zero biases
-        let mut bank = ExpertBank::new(&Rng::new(1), 1, 2, 1);
-        bank.w1 = vec![1.0, -1.0]; // [2, 1]
-        bank.w2 = vec![0.5, 2.0]; // [1, 2]
+        let bank = ExpertBank::from_weights(
+            1,
+            2,
+            1,
+            vec![1.0, -1.0], // w1 [2, 1]
+            vec![0.5, 2.0],  // w2 [1, 2]
+        );
         let x = [3.0f32, 1.0]; // h = silu(2.0)
         let hpre = 2.0f32;
         let hval = hpre / (1.0 + (-hpre).exp());
@@ -520,5 +611,101 @@ mod tests {
             let want = 0.55 * f1[c] + 0.45 * f1[c];
             assert_eq!(combined[2 * d + c], want, "dim {c}");
         }
+    }
+
+    /// The Blocked kernel preserves the FFN bit-for-bit on f32 banks
+    /// (same ascending-k accumulation, fused epilogue with identical
+    /// per-element op order) — on odd shapes that straddle the tile
+    /// boundaries.
+    #[test]
+    fn blocked_forward_matches_naive_bitwise_on_f32() {
+        let (e, d, ff) = (3usize, 37, 2 * crate::kernels::NC + 5);
+        let bank = ExpertBank::new(&Rng::new(21), e, d, ff);
+        let mut rng = Rng::new(22);
+        let m = crate::kernels::MC + 3;
+        let x = rand_vec(&mut rng, m * d);
+        let (mut hid, mut want, mut got) =
+            (Vec::new(), vec![0.0f32; m * d], vec![0.0f32; m * d]);
+        for ex in 0..e {
+            bank.forward_rows(ex, &x, m, &mut hid, &mut want);
+            bank.forward_rows_with(
+                Kernel::Blocked,
+                ex,
+                &x,
+                m,
+                &mut hid,
+                &mut got,
+            );
+            assert_eq!(got, want, "expert {ex}");
+            bank.forward_rows_with(
+                Kernel::Simd,
+                ex,
+                &x,
+                m,
+                &mut hid,
+                &mut got,
+            );
+            // Simd may differ by FMA rounding only
+            for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
+                assert!(
+                    (g - w).abs() <= 1e-4 * w.abs().max(1.0),
+                    "expert {ex} elem {i}: {g} vs {w}"
+                );
+            }
+        }
+    }
+
+    /// Quantized banks stay within the documented round-trip bound of
+    /// the f32 forward: with unit-scale synthetic weights the FFN
+    /// output error is small and — crucially — identical across
+    /// kernels, since dequantization happens before accumulation.
+    #[test]
+    fn quantized_bank_parity_within_tolerance() {
+        let (e, d, ff, m) = (4usize, 24, 96, 17);
+        let bank = ExpertBank::new(&Rng::new(33), e, d, ff);
+        let mut rng = Rng::new(34);
+        let x = rand_vec(&mut rng, m * d);
+        let (mut hid, mut exact) = (Vec::new(), vec![0.0f32; m * d]);
+        bank.forward_rows(0, &x, m, &mut hid, &mut exact);
+        for dtype in [WeightDtype::Bf16, WeightDtype::Int8] {
+            let q = bank.quantized(dtype);
+            assert_eq!(q.dtype(), dtype);
+            assert!(q.w1_f32().is_none());
+            let mut got = vec![0.0f32; m * d];
+            q.forward_rows(0, &x, m, &mut hid, &mut got);
+            // loose end-to-end bound: both matmuls perturb ≤ ~k·ε_w
+            // relative (see kernels module docs); at these shapes the
+            // bf16 path lands well under 1e-1 absolute and int8 under
+            // ~2e-1 on unit-scale activations.
+            let tol = 0.2f32;
+            for (i, (&g, &w)) in got.iter().zip(&exact).enumerate() {
+                assert!(
+                    (g - w).abs() <= tol * w.abs().max(1.0),
+                    "{} elem {i}: {g} vs {w}",
+                    dtype.name()
+                );
+            }
+            // and every kernel agrees on the same quantized store
+            let mut blocked = vec![0.0f32; m * d];
+            q.forward_rows_with(
+                Kernel::Blocked,
+                0,
+                &x,
+                m,
+                &mut hid,
+                &mut blocked,
+            );
+            assert_eq!(blocked, got, "{}", dtype.name());
+        }
+    }
+
+    #[test]
+    fn requantizing_same_dtype_is_identity() {
+        let bank = ExpertBank::new(&Rng::new(44), 2, 8, 16);
+        let same = bank.quantized(WeightDtype::F32);
+        assert_eq!(same.w1_f32().unwrap(), bank.w1_f32().unwrap());
+        let q = bank.quantized(WeightDtype::Int8);
+        let q2 = q.quantized(WeightDtype::Int8);
+        assert_eq!(q2.dtype(), WeightDtype::Int8);
     }
 }

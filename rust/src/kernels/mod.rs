@@ -1,0 +1,892 @@
+//! GEMM micro-kernels and quantized weight storage for the FFN hot
+//! loop.
+//!
+//! Every served token ends in [`crate::experts::ExpertBank`]'s two
+//! matmuls; this module owns that compute. Three kernels share one
+//! fused entry point, [`gemm_bias_act`] (`C = act(A·B + bias)`), and
+//! three weight storage dtypes share one container, [`WeightStore`]:
+//!
+//! - [`Kernel::Naive`] — the original i-k-j loop from
+//!   `router::linalg::matmul_into` with the bias add and SiLU applied
+//!   per output row. Per-element op order is identical to the
+//!   pre-kernel-layer path (accumulate over `k` in order, add bias,
+//!   apply SiLU), so f32 results are **bit-identical** to the historic
+//!   goldens. The default everywhere.
+//! - [`Kernel::Blocked`] — cache-blocked (BLIS-style `jc → pc → ic`
+//!   loop nest, fixed [`MC`]/[`KC`]/[`NC`] tiles) with the `B` panel
+//!   packed contiguously per `(pc, jc)` block and the bias+activation
+//!   epilogue fused over each `jc` strip after the full `k`
+//!   accumulation. Accumulation still walks `k` in ascending order
+//!   (`pc` blocks in order, rows in order within a block), so for f32
+//!   weights Blocked is bit-identical to Naive too — the win is cache
+//!   locality, not reassociation.
+//! - [`Kernel::Simd`] — the Blocked loop nest with an explicit
+//!   `std::arch` AVX2+FMA inner kernel, compiled behind the `simd`
+//!   cargo feature and selected at runtime via
+//!   `is_x86_feature_detected!`. FMA contracts the multiply-add
+//!   rounding step, so Simd is *not* bit-identical to Naive/Blocked —
+//!   but it is deterministic in itself (fixed tile sizes, fixed lane
+//!   order). Without the feature (or on non-x86_64, or when the CPU
+//!   lacks AVX2/FMA) `Kernel::Simd` transparently falls back to
+//!   Blocked.
+//!
+//! # Determinism contract (per kernel)
+//!
+//! Tile sizes are compile-time constants and the packed-panel scratch
+//! is thread-local and fully overwritten per block, so a kernel's
+//! output depends only on its inputs — never on thread count or which
+//! thread runs the call. The serving engines parallelize at expert-
+//! bucket granularity (see `router::engine`), so every kernel
+//! individually satisfies the crate's bit-identical-across-threads
+//! contract. Cross-*kernel* equality is only promised between Naive
+//! and Blocked on f32 weights.
+//!
+//! # Quantized storage and error bounds
+//!
+//! [`WeightStore`] keeps FFN weights in f32, bf16, or int8 (per-row
+//! absmax scaling). All kernels **accumulate in f32**; quantized
+//! weights are dequantized on the fly (Naive) or at panel-pack time
+//! (Blocked/Simd), so the only error is the weight round-trip:
+//!
+//! - **bf16** (round-to-nearest-even, 8 mantissa bits):
+//!   `|ŵ − w| ≤ 2⁻⁸·|w|` per element (half the ulp at 7 explicit
+//!   mantissa bits, i.e. relative error ≤ 2⁻⁸).
+//! - **int8 per-row absmax** (`scale_r = absmax_r / 127`,
+//!   `q = round(w/scale_r)` clamped to ±127):
+//!   `|ŵ − w| ≤ scale_r/2 = absmax_r/254` per element of row `r`.
+//!
+//! A GEMM output element sums `k` products, so the worst-case output
+//! error is bounded by `k · ε_w · max|a|` with `ε_w` the per-element
+//! bound above — the tolerance the parity tests and
+//! `docs/ARCHITECTURE.md` state.
+
+use std::cell::RefCell;
+
+/// Which GEMM micro-kernel the FFN hot loop runs. Builder knob:
+/// `Engine::builder().kernel(...)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Kernel {
+    /// Original i-k-j loop; bit-identical to the historic goldens.
+    #[default]
+    Naive,
+    /// Cache-blocked with a packed B panel and fused epilogue.
+    Blocked,
+    /// Blocked + `std::arch` AVX2/FMA inner loop (`simd` feature);
+    /// falls back to Blocked when unavailable.
+    Simd,
+}
+
+impl Kernel {
+    pub const ALL: [Kernel; 3] =
+        [Kernel::Naive, Kernel::Blocked, Kernel::Simd];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Kernel::Naive => "naive",
+            Kernel::Blocked => "blocked",
+            Kernel::Simd => "simd",
+        }
+    }
+}
+
+/// Storage dtype of an expert bank's FFN weights. Builder knob:
+/// `Engine::builder().weight_dtype(...)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum WeightDtype {
+    /// Full precision — exact, the default.
+    #[default]
+    F32,
+    /// Truncated-mantissa bfloat16: half the weight bytes, relative
+    /// error ≤ 2⁻⁸ per element.
+    Bf16,
+    /// Int8 with one f32 absmax scale per matrix row: a quarter of the
+    /// weight bytes, absolute error ≤ absmax_row/254 per element.
+    Int8,
+}
+
+impl WeightDtype {
+    pub const ALL: [WeightDtype; 3] =
+        [WeightDtype::F32, WeightDtype::Bf16, WeightDtype::Int8];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            WeightDtype::F32 => "f32",
+            WeightDtype::Bf16 => "bf16",
+            WeightDtype::Int8 => "int8",
+        }
+    }
+}
+
+/// f32 → bf16 with round-to-nearest-even (the standard
+/// `(bits + 0x7FFF + lsb) >> 16` trick); NaN payloads are quieted so
+/// they stay NaN after truncation.
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let lsb = (bits >> 16) & 1;
+    (bits.wrapping_add(0x7FFF + lsb) >> 16) as u16
+}
+
+/// bf16 → f32 (exact: bf16 is a prefix of the f32 bit pattern).
+pub fn bf16_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+/// A `[rows, cols]` row-major weight matrix in one of the
+/// [`WeightDtype`] storages. Int8 keeps one f32 scale per row
+/// (`scale_r = absmax_r / 127`), chosen so dequantization is a single
+/// multiply in the pack/dequant loop.
+#[derive(Debug, Clone)]
+pub enum WeightStore {
+    F32(Vec<f32>),
+    Bf16(Vec<u16>),
+    Int8 { q: Vec<i8>, scales: Vec<f32> },
+}
+
+impl WeightStore {
+    /// Quantize a row-major `[rows, cols]` f32 matrix into `dtype`
+    /// storage.
+    pub fn quantize(
+        w: &[f32],
+        rows: usize,
+        cols: usize,
+        dtype: WeightDtype,
+    ) -> WeightStore {
+        assert_eq!(w.len(), rows * cols, "weight shape");
+        match dtype {
+            WeightDtype::F32 => WeightStore::F32(w.to_vec()),
+            WeightDtype::Bf16 => WeightStore::Bf16(
+                w.iter().map(|&v| f32_to_bf16(v)).collect(),
+            ),
+            WeightDtype::Int8 => {
+                let mut q = Vec::with_capacity(rows * cols);
+                let mut scales = Vec::with_capacity(rows);
+                for row in w.chunks(cols) {
+                    let absmax =
+                        row.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+                    let scale = absmax / 127.0;
+                    scales.push(scale);
+                    if scale == 0.0 {
+                        q.extend(std::iter::repeat(0i8).take(cols));
+                    } else {
+                        q.extend(row.iter().map(|&v| {
+                            (v / scale).round().clamp(-127.0, 127.0) as i8
+                        }));
+                    }
+                }
+                WeightStore::Int8 { q, scales }
+            }
+        }
+    }
+
+    pub fn dtype(&self) -> WeightDtype {
+        match self {
+            WeightStore::F32(_) => WeightDtype::F32,
+            WeightStore::Bf16(_) => WeightDtype::Bf16,
+            WeightStore::Int8 { .. } => WeightDtype::Int8,
+        }
+    }
+
+    /// Borrow rows `[row0, row0 + n_rows)` of a `[*, cols]` matrix as
+    /// a kernel operand.
+    pub fn view(
+        &self,
+        row0: usize,
+        n_rows: usize,
+        cols: usize,
+    ) -> WeightsView<'_> {
+        let (a, b) = (row0 * cols, (row0 + n_rows) * cols);
+        match self {
+            WeightStore::F32(w) => WeightsView::F32(&w[a..b]),
+            WeightStore::Bf16(w) => WeightsView::Bf16(&w[a..b]),
+            WeightStore::Int8 { q, scales } => WeightsView::Int8 {
+                q: &q[a..b],
+                scales: &scales[row0..row0 + n_rows],
+            },
+        }
+    }
+
+    /// The full-precision buffer, when stored as f32 (tests and the
+    /// checkpoint bridge use this; quantized stores return `None`).
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            WeightStore::F32(w) => Some(w),
+            _ => None,
+        }
+    }
+
+    /// Dequantize row `r` of a `[*, cols]` matrix into `out[..cols]`
+    /// (identity copy for f32).
+    pub fn dequant_row(&self, r: usize, cols: usize, out: &mut [f32]) {
+        match self.view(r, 1, cols) {
+            WeightsView::F32(w) => out[..cols].copy_from_slice(w),
+            WeightsView::Bf16(w) => {
+                for (o, &h) in out[..cols].iter_mut().zip(w) {
+                    *o = bf16_to_f32(h);
+                }
+            }
+            WeightsView::Int8 { q, scales } => {
+                let s = scales[0];
+                for (o, &v) in out[..cols].iter_mut().zip(q) {
+                    *o = v as f32 * s;
+                }
+            }
+        }
+    }
+}
+
+/// A borrowed `[k, n]` row-major B operand for [`gemm_bias_act`].
+#[derive(Debug, Clone, Copy)]
+pub enum WeightsView<'a> {
+    F32(&'a [f32]),
+    Bf16(&'a [u16]),
+    Int8 { q: &'a [i8], scales: &'a [f32] },
+}
+
+impl WeightsView<'_> {
+    fn check_shape(&self, k: usize, n: usize) {
+        let len = match self {
+            WeightsView::F32(w) => w.len(),
+            WeightsView::Bf16(w) => w.len(),
+            WeightsView::Int8 { q, scales } => {
+                assert_eq!(scales.len(), k, "int8 scales shape");
+                q.len()
+            }
+        };
+        assert_eq!(len, k * n, "B shape");
+    }
+}
+
+/// Row-panel cache blocking constants (BLIS-style). `KC·NC` f32 panel
+/// ≈ 128 KiB — sized for L2; `MC` rows of A per inner block stay
+/// L1-resident. Compile-time constants: blocking never depends on
+/// runtime state, which is what keeps each kernel deterministic.
+pub const MC: usize = 64;
+pub const KC: usize = 256;
+pub const NC: usize = 128;
+
+thread_local! {
+    /// Packed B panel (`[kc, nc]`, kc ≤ KC, nc ≤ NC). Thread-local and
+    /// fully overwritten per `(pc, jc)` block, so sharing it across
+    /// calls never leaks state between batches or experts.
+    static PANEL: RefCell<Vec<f32>> = RefCell::new(Vec::new());
+}
+
+/// Fused GEMM + bias + optional SiLU: `C[m,n] = act(A[m,k] · B[k,n] +
+/// bias[n])`, f32 accumulation, overwriting `c`. The single entry
+/// point of the kernel layer — `kernel` selects the implementation,
+/// `b` selects the weight dtype; every combination is supported.
+pub fn gemm_bias_act(
+    kernel: Kernel,
+    a: &[f32],
+    b: WeightsView<'_>,
+    bias: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    silu: bool,
+) {
+    assert_eq!(a.len(), m * k, "A shape");
+    b.check_shape(k, n);
+    assert_eq!(bias.len(), n, "bias shape");
+    assert_eq!(c.len(), m * n, "C shape");
+    match kernel {
+        Kernel::Naive => naive_gemm(a, b, bias, c, m, k, n, silu),
+        Kernel::Blocked => {
+            blocked_gemm(a, b, bias, c, m, k, n, silu, false)
+        }
+        Kernel::Simd => {
+            blocked_gemm(a, b, bias, c, m, k, n, silu, simd_available())
+        }
+    }
+}
+
+/// SiLU of one value — the exact expression `router::linalg::silu`
+/// applies, kept in sync so fused epilogues stay bit-identical to the
+/// separate-pass path.
+#[inline]
+fn silu_one(v: f32) -> f32 {
+    v / (1.0 + (-v).exp())
+}
+
+/// The original serving kernel: i-k-j accumulation (ascending `k`),
+/// then bias, then SiLU, per output row. For f32 weights this is
+/// element-for-element the op sequence of the historic
+/// `matmul_into` → bias loop → `silu` path, hence bit-identical.
+#[allow(clippy::too_many_arguments)]
+fn naive_gemm(
+    a: &[f32],
+    b: WeightsView<'_>,
+    bias: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    silu: bool,
+) {
+    c.fill(0.0);
+    for i in 0..m {
+        let a_row = &a[i * k..(i + 1) * k];
+        let c_row = &mut c[i * n..(i + 1) * n];
+        match b {
+            WeightsView::F32(w) => {
+                for (p, &aik) in a_row.iter().enumerate() {
+                    let b_row = &w[p * n..(p + 1) * n];
+                    for (cj, &bv) in c_row.iter_mut().zip(b_row) {
+                        *cj += aik * bv;
+                    }
+                }
+            }
+            WeightsView::Bf16(w) => {
+                for (p, &aik) in a_row.iter().enumerate() {
+                    let b_row = &w[p * n..(p + 1) * n];
+                    for (cj, &bv) in c_row.iter_mut().zip(b_row) {
+                        *cj += aik * bf16_to_f32(bv);
+                    }
+                }
+            }
+            WeightsView::Int8 { q, scales } => {
+                for (p, &aik) in a_row.iter().enumerate() {
+                    let b_row = &q[p * n..(p + 1) * n];
+                    let s = scales[p];
+                    for (cj, &bv) in c_row.iter_mut().zip(b_row) {
+                        *cj += aik * (bv as f32 * s);
+                    }
+                }
+            }
+        }
+        for (cj, &bj) in c_row.iter_mut().zip(bias) {
+            *cj += bj;
+        }
+        if silu {
+            for cj in c_row.iter_mut() {
+                *cj = silu_one(*cj);
+            }
+        }
+    }
+}
+
+/// Pack (and dequantize) `B[pc..pc+kc, jc..jc+nc]` into the
+/// thread-local panel as a contiguous `[kc, nc]` block.
+fn pack_panel(
+    b: WeightsView<'_>,
+    panel: &mut Vec<f32>,
+    n: usize,
+    pc: usize,
+    kc: usize,
+    jc: usize,
+    nc: usize,
+) {
+    panel.clear();
+    panel.reserve(kc * nc);
+    match b {
+        WeightsView::F32(w) => {
+            for p in pc..pc + kc {
+                panel.extend_from_slice(&w[p * n + jc..p * n + jc + nc]);
+            }
+        }
+        WeightsView::Bf16(w) => {
+            for p in pc..pc + kc {
+                panel.extend(
+                    w[p * n + jc..p * n + jc + nc]
+                        .iter()
+                        .map(|&h| bf16_to_f32(h)),
+                );
+            }
+        }
+        WeightsView::Int8 { q, scales } => {
+            for p in pc..pc + kc {
+                let s = scales[p];
+                panel.extend(
+                    q[p * n + jc..p * n + jc + nc]
+                        .iter()
+                        .map(|&v| v as f32 * s),
+                );
+            }
+        }
+    }
+}
+
+/// Cache-blocked GEMM: `jc` (NC columns) → `pc` (KC of the reduction,
+/// B panel packed once per block) → `ic` (MC rows of A). Bias +
+/// activation run as a fused epilogue over each `jc` strip after the
+/// whole reduction, so every output element is touched exactly twice
+/// (accumulate, epilogue). `k` is walked in ascending order across
+/// `pc` blocks, keeping f32 results bit-identical to [`Kernel::Naive`].
+#[allow(clippy::too_many_arguments)]
+fn blocked_gemm(
+    a: &[f32],
+    b: WeightsView<'_>,
+    bias: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    silu: bool,
+    use_simd: bool,
+) {
+    c.fill(0.0);
+    PANEL.with(|cell| {
+        let mut guard = cell.borrow_mut();
+        let panel: &mut Vec<f32> = &mut guard;
+        let mut jc = 0;
+        while jc < n {
+            let nc = NC.min(n - jc);
+            let mut pc = 0;
+            while pc < k {
+                let kc = KC.min(k - pc);
+                pack_panel(b, panel, n, pc, kc, jc, nc);
+                let mut ic = 0;
+                while ic < m {
+                    let mc = MC.min(m - ic);
+                    accumulate_block(
+                        a, panel, c, k, n, ic, mc, pc, kc, jc, nc,
+                        use_simd,
+                    );
+                    ic += MC;
+                }
+                pc += KC;
+            }
+            // epilogue: bias + activation over the finished strip
+            for i in 0..m {
+                let c_row = &mut c[i * n + jc..i * n + jc + nc];
+                let b_row = &bias[jc..jc + nc];
+                for (cj, &bj) in c_row.iter_mut().zip(b_row) {
+                    *cj += bj;
+                }
+                if silu {
+                    for cj in c_row.iter_mut() {
+                        *cj = silu_one(*cj);
+                    }
+                }
+            }
+            jc += NC;
+        }
+    });
+}
+
+/// One `[mc, nc] += A[mc, kc] · panel[kc, nc]` inner block.
+#[allow(clippy::too_many_arguments)]
+fn accumulate_block(
+    a: &[f32],
+    panel: &[f32],
+    c: &mut [f32],
+    k: usize,
+    n: usize,
+    ic: usize,
+    mc: usize,
+    pc: usize,
+    kc: usize,
+    jc: usize,
+    nc: usize,
+    use_simd: bool,
+) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if use_simd {
+        // SAFETY: gated on runtime AVX2+FMA detection (simd_available).
+        unsafe {
+            simd::accumulate_block_avx2(
+                a, panel, c, k, n, ic, mc, pc, kc, jc, nc,
+            );
+        }
+        return;
+    }
+    let _ = use_simd;
+    for i in ic..ic + mc {
+        let a_row = &a[i * k + pc..i * k + pc + kc];
+        let c_row = &mut c[i * n + jc..i * n + jc + nc];
+        for (p, &aik) in a_row.iter().enumerate() {
+            let b_row = &panel[p * nc..(p + 1) * nc];
+            for (cj, &bv) in c_row.iter_mut().zip(b_row) {
+                *cj += aik * bv;
+            }
+        }
+    }
+}
+
+/// Whether the explicit-SIMD inner kernel can run here: the `simd`
+/// feature compiled in, x86_64, and the CPU reporting AVX2 + FMA.
+pub fn simd_available() -> bool {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma")
+    }
+    #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+    {
+        false
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod simd {
+    //! AVX2+FMA inner block. Same blocking as the scalar path; the
+    //! inner j loop runs 8 f32 lanes per `_mm256_fmadd_ps` with a
+    //! scalar tail. FMA fuses the multiply-add rounding, so results
+    //! differ from the scalar kernels in the last ulp — deterministic
+    //! in itself (fixed lane order), just not bit-equal to Blocked.
+
+    #[target_feature(enable = "avx2,fma")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn accumulate_block_avx2(
+        a: &[f32],
+        panel: &[f32],
+        c: &mut [f32],
+        k: usize,
+        n: usize,
+        ic: usize,
+        mc: usize,
+        pc: usize,
+        kc: usize,
+        jc: usize,
+        nc: usize,
+    ) {
+        use std::arch::x86_64::*;
+        let lanes = nc / 8 * 8;
+        for i in ic..ic + mc {
+            let a_row = &a[i * k + pc..i * k + pc + kc];
+            let c_row = &mut c[i * n + jc..i * n + jc + nc];
+            for (p, &aik) in a_row.iter().enumerate() {
+                let b_row = &panel[p * nc..(p + 1) * nc];
+                let va = _mm256_set1_ps(aik);
+                let mut j = 0;
+                while j < lanes {
+                    let vb = _mm256_loadu_ps(b_row.as_ptr().add(j));
+                    let vc = _mm256_loadu_ps(c_row.as_ptr().add(j));
+                    let r = _mm256_fmadd_ps(va, vb, vc);
+                    _mm256_storeu_ps(c_row.as_mut_ptr().add(j), r);
+                    j += 8;
+                }
+                for j in lanes..nc {
+                    c_row[j] = aik.mul_add(b_row[j], c_row[j]);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    /// Reference: the historic separate-pass path (matmul_into → bias
+    /// → silu) the Naive kernel must reproduce bit-for-bit.
+    fn reference(
+        a: &[f32],
+        b: &[f32],
+        bias: &[f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        silu: bool,
+    ) -> Vec<f32> {
+        let mut c = vec![0.0f32; m * n];
+        crate::router::linalg::matmul_into(a, b, &mut c, m, k, n);
+        for row in c.chunks_mut(n) {
+            for (v, &bj) in row.iter_mut().zip(bias) {
+                *v += bj;
+            }
+        }
+        if silu {
+            crate::router::linalg::silu(&mut c);
+        }
+        c
+    }
+
+    /// Odd shapes straddling every block boundary: smaller than one
+    /// tile, exact tiles, and tiles + ragged remainders in m, k and n.
+    const SHAPES: [(usize, usize, usize); 6] = [
+        (1, 1, 1),
+        (3, 5, 7),
+        (MC, KC, NC),
+        (MC + 3, KC + 5, NC + 9),
+        (2 * MC + 1, 2 * KC + 3, 2 * NC + 5),
+        (7, 300, 19),
+    ];
+
+    #[test]
+    fn naive_kernel_is_bit_identical_to_legacy_path() {
+        let mut rng = Rng::new(11);
+        for &(m, k, n) in &SHAPES {
+            let a = rand_vec(&mut rng, m * k);
+            let b = rand_vec(&mut rng, k * n);
+            let bias = rand_vec(&mut rng, n);
+            for silu in [false, true] {
+                let want = reference(&a, &b, &bias, m, k, n, silu);
+                let mut c = vec![9.9f32; m * n]; // must overwrite
+                gemm_bias_act(
+                    Kernel::Naive,
+                    &a,
+                    WeightsView::F32(&b),
+                    &bias,
+                    &mut c,
+                    m,
+                    k,
+                    n,
+                    silu,
+                );
+                assert_eq!(c, want, "shape ({m},{k},{n}) silu={silu}");
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_kernel_matches_naive_bitwise_on_f32() {
+        // same ascending-k accumulation order ⇒ exact equality
+        let mut rng = Rng::new(23);
+        for &(m, k, n) in &SHAPES {
+            let a = rand_vec(&mut rng, m * k);
+            let b = rand_vec(&mut rng, k * n);
+            let bias = rand_vec(&mut rng, n);
+            let want = reference(&a, &b, &bias, m, k, n, true);
+            let mut c = vec![0.0f32; m * n];
+            gemm_bias_act(
+                Kernel::Blocked,
+                &a,
+                WeightsView::F32(&b),
+                &bias,
+                &mut c,
+                m,
+                k,
+                n,
+                true,
+            );
+            assert_eq!(c, want, "shape ({m},{k},{n})");
+        }
+    }
+
+    /// Simd must match Naive within an FMA-reassociation tolerance on
+    /// every odd shape (bit-equal when the feature is off, since it
+    /// falls back to Blocked).
+    #[test]
+    fn simd_kernel_matches_naive_within_tolerance() {
+        let mut rng = Rng::new(37);
+        for &(m, k, n) in &SHAPES {
+            let a = rand_vec(&mut rng, m * k);
+            let b = rand_vec(&mut rng, k * n);
+            let bias = rand_vec(&mut rng, n);
+            let want = reference(&a, &b, &bias, m, k, n, true);
+            let mut c = vec![0.0f32; m * n];
+            gemm_bias_act(
+                Kernel::Simd,
+                &a,
+                WeightsView::F32(&b),
+                &bias,
+                &mut c,
+                m,
+                k,
+                n,
+                true,
+            );
+            // |Σ k products| error scales with k; 1e-5 relative covers
+            // the single FMA rounding per product at these magnitudes.
+            let tol = 1e-5 * (k as f32).sqrt().max(1.0);
+            for (i, (&got, &w)) in c.iter().zip(&want).enumerate() {
+                let scale = w.abs().max(1.0);
+                assert!(
+                    (got - w).abs() <= tol * scale,
+                    "shape ({m},{k},{n}) elem {i}: {got} vs {w}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn each_kernel_is_deterministic_across_calls() {
+        let mut rng = Rng::new(41);
+        let (m, k, n) = (MC + 5, KC + 7, NC + 3);
+        let a = rand_vec(&mut rng, m * k);
+        let b = rand_vec(&mut rng, k * n);
+        let bias = rand_vec(&mut rng, n);
+        for kernel in Kernel::ALL {
+            let mut c1 = vec![0.0f32; m * n];
+            let mut c2 = vec![1.0f32; m * n];
+            for c in [&mut c1, &mut c2] {
+                gemm_bias_act(
+                    kernel,
+                    &a,
+                    WeightsView::F32(&b),
+                    &bias,
+                    c,
+                    m,
+                    k,
+                    n,
+                    true,
+                );
+            }
+            assert_eq!(c1, c2, "{} not deterministic", kernel.name());
+        }
+    }
+
+    #[test]
+    fn bf16_round_trip_stays_within_documented_bound() {
+        let mut rng = Rng::new(53);
+        let w = rand_vec(&mut rng, 4096);
+        for &v in &w {
+            let r = bf16_to_f32(f32_to_bf16(v));
+            assert!(
+                (r - v).abs() <= v.abs() * 2.0f32.powi(-8),
+                "bf16 round-trip {v} -> {r} exceeds 2^-8 relative"
+            );
+        }
+        // exact cases: bf16-representable values survive untouched
+        for v in [0.0f32, -0.0, 1.0, -2.5, 0.15625] {
+            assert_eq!(bf16_to_f32(f32_to_bf16(v)), v);
+        }
+        // NaN stays NaN, infinities survive
+        assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
+        assert_eq!(
+            bf16_to_f32(f32_to_bf16(f32::INFINITY)),
+            f32::INFINITY
+        );
+    }
+
+    #[test]
+    fn int8_round_trip_stays_within_documented_bound() {
+        let mut rng = Rng::new(59);
+        let (rows, cols) = (32usize, 48usize);
+        let w = rand_vec(&mut rng, rows * cols);
+        let store =
+            WeightStore::quantize(&w, rows, cols, WeightDtype::Int8);
+        let mut deq = vec![0.0f32; cols];
+        for r in 0..rows {
+            let row = &w[r * cols..(r + 1) * cols];
+            let absmax =
+                row.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            store.dequant_row(r, cols, &mut deq);
+            for (c, (&v, &rt)) in row.iter().zip(&deq).enumerate() {
+                assert!(
+                    (rt - v).abs() <= absmax / 254.0 + 1e-7,
+                    "row {r} col {c}: {v} -> {rt}, absmax {absmax}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn int8_zero_row_quantizes_to_exact_zero() {
+        let w = vec![0.0f32; 8];
+        let store = WeightStore::quantize(&w, 2, 4, WeightDtype::Int8);
+        let mut deq = vec![1.0f32; 4];
+        store.dequant_row(0, 4, &mut deq);
+        assert_eq!(deq, vec![0.0; 4]);
+    }
+
+    /// Quantized weights through every kernel stay within the GEMM
+    /// error bound `k · ε_w · max|a|` stated in the module docs.
+    #[test]
+    fn quantized_gemm_parity_within_documented_bound() {
+        let mut rng = Rng::new(61);
+        let (m, k, n) = (9usize, 140, 33);
+        let a = rand_vec(&mut rng, m * k);
+        let b = rand_vec(&mut rng, k * n);
+        let bias = rand_vec(&mut rng, n);
+        let amax = a.iter().fold(0.0f32, |mx, &v| mx.max(v.abs()));
+        let mut exact = vec![0.0f32; m * n];
+        gemm_bias_act(
+            Kernel::Naive,
+            &a,
+            WeightsView::F32(&b),
+            &bias,
+            &mut exact,
+            m,
+            k,
+            n,
+            false,
+        );
+        for dtype in [WeightDtype::Bf16, WeightDtype::Int8] {
+            let store = WeightStore::quantize(&b, k, n, dtype);
+            let eps = match dtype {
+                WeightDtype::Bf16 => {
+                    let bmax =
+                        b.iter().fold(0.0f32, |mx, &v| mx.max(v.abs()));
+                    bmax * 2.0f32.powi(-8)
+                }
+                WeightDtype::Int8 => {
+                    // per-row absmax ≤ global absmax
+                    let bmax =
+                        b.iter().fold(0.0f32, |mx, &v| mx.max(v.abs()));
+                    bmax / 254.0
+                }
+                WeightDtype::F32 => unreachable!(),
+            };
+            let bound = k as f32 * eps * amax;
+            for kernel in Kernel::ALL {
+                let mut got = vec![0.0f32; m * n];
+                gemm_bias_act(
+                    kernel,
+                    &a,
+                    store.view(0, k, n),
+                    &bias,
+                    &mut got,
+                    m,
+                    k,
+                    n,
+                    false,
+                );
+                for (i, (&g, &e)) in got.iter().zip(&exact).enumerate()
+                {
+                    assert!(
+                        (g - e).abs() <= bound,
+                        "{}/{} elem {i}: {g} vs {e} (bound {bound})",
+                        kernel.name(),
+                        dtype.name()
+                    );
+                }
+            }
+        }
+    }
+
+    /// All kernels agree bit-for-bit on the *same* quantized store
+    /// when SIMD is unavailable, and within tolerance otherwise —
+    /// dequantization happens before accumulation either way.
+    #[test]
+    fn kernels_agree_on_quantized_stores() {
+        let mut rng = Rng::new(67);
+        let (m, k, n) = (5usize, 130, 21);
+        let a = rand_vec(&mut rng, m * k);
+        let b = rand_vec(&mut rng, k * n);
+        let bias = vec![0.0f32; n];
+        for dtype in WeightDtype::ALL {
+            let store = WeightStore::quantize(&b, k, n, dtype);
+            let mut naive = vec![0.0f32; m * n];
+            let mut blocked = vec![0.0f32; m * n];
+            for (kern, out) in [
+                (Kernel::Naive, &mut naive),
+                (Kernel::Blocked, &mut blocked),
+            ] {
+                gemm_bias_act(
+                    kern,
+                    &a,
+                    store.view(0, k, n),
+                    &bias,
+                    out,
+                    m,
+                    k,
+                    n,
+                    true,
+                );
+            }
+            assert_eq!(naive, blocked, "{}", dtype.name());
+        }
+    }
+
+    #[test]
+    fn names_and_defaults_are_stable() {
+        assert_eq!(Kernel::default(), Kernel::Naive);
+        assert_eq!(WeightDtype::default(), WeightDtype::F32);
+        assert_eq!(Kernel::Simd.name(), "simd");
+        assert_eq!(WeightDtype::Int8.name(), "int8");
+        // Simd silently degrades to Blocked when unsupported — the
+        // knob is always safe to set.
+        let _ = simd_available();
+    }
+}

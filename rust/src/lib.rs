@@ -66,7 +66,11 @@
 //! for single layers and stacks alike, constructed only through
 //! [`engine::Engine::builder`] (typed [`engine::EngineBuildError`]s
 //! instead of panics, every knob — backend, overflow policy, capacity
-//! factor, renormalization — in one place). [`serve::Server`] makes
+//! factor, renormalization, GEMM kernel and weight dtype — in one
+//! place). The FFN matmuls themselves live in [`kernels`]: naive /
+//! cache-blocked / `simd`-feature AVX2 micro-kernels plus bf16 and
+//! int8 quantized weight storage, selected per engine via
+//! `Engine::builder().kernel(...)` / `.weight_dtype(...)`. [`serve::Server`] makes
 //! the virtual-clock runtime deployable: real `Instant`-stamped
 //! arrivals, a background flusher thread, blocking
 //! `enqueue`/`await_completion`. Typed errors share one conversion
@@ -95,6 +99,7 @@ pub mod dispatch;
 pub mod engine;
 pub mod error;
 pub mod experts;
+pub mod kernels;
 pub mod metrics;
 pub mod model;
 pub mod report;

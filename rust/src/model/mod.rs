@@ -293,6 +293,14 @@ impl ModelEngine {
         }
     }
 
+    /// GEMM micro-kernel for every layer's expert FFN stage (the
+    /// `Engine::builder().kernel(..)` knob; see `crate::kernels`).
+    pub fn set_kernel(&mut self, kernel: crate::kernels::Kernel) {
+        for e in &mut self.engines {
+            e.set_kernel(kernel);
+        }
+    }
+
     /// Run the full stack over `h` (`[N, d]` row-major): per layer,
     /// route → plan → expert FFN → combine, then the residual add; the
     /// final stream lands in `out.hidden`. Bit-identical for every

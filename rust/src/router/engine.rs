@@ -44,6 +44,7 @@
 use super::plan::{RouteBuffers, RouterBatch, RouterPlan};
 use crate::dispatch::plan::{capacity_for, DispatchPlan, OverflowPolicy};
 use crate::experts::{combine_rows_opts, gather_rows, ExpertBank};
+use crate::kernels::Kernel;
 use crate::metrics::{LoadTracker, DEFAULT_LOAD_WINDOW};
 
 /// Token range of shard `i` when `n` tokens split into `t` contiguous
@@ -94,9 +95,10 @@ pub(crate) fn expert_group_bounds(
     }
 }
 
-/// Run the FFN buckets of experts `e0..e1` over the gathered rows `xg`,
-/// writing grouped rows `offsets[e0]..offsets[e1]` into `ys` (which
-/// holds exactly that sub-range). Pure per expert, so any thread may
+/// Run the FFN buckets of experts `e0..e1` over the gathered rows `xg`
+/// with GEMM kernel `kernel`, writing grouped rows
+/// `offsets[e0]..offsets[e1]` into `ys` (which holds exactly that
+/// sub-range). Pure per expert for every kernel, so any thread may
 /// execute a group — shared by the scoped engine and the pool workers.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn run_expert_range(
@@ -106,6 +108,7 @@ pub(crate) fn run_expert_range(
     e0: usize,
     e1: usize,
     d: usize,
+    kernel: Kernel,
     hid: &mut Vec<f32>,
     ys: &mut [f32],
 ) {
@@ -117,7 +120,8 @@ pub(crate) fn run_expert_range(
         if m == 0 {
             continue;
         }
-        bank.forward_rows(
+        bank.forward_rows_with(
+            kernel,
             ei,
             &xg[rows.start * d..rows.end * d],
             m,
@@ -142,6 +146,10 @@ pub struct ServingEngine {
     /// Renormalize surviving gate weights of partially-dropped tokens
     /// in the combine (see [`combine_rows_opts`]); off by default.
     renormalize: bool,
+    /// GEMM micro-kernel for the expert FFN stage (the
+    /// `Engine::builder().kernel(..)` knob); [`Kernel::Naive`] by
+    /// default, which is bit-identical to the historic path.
+    kernel: Kernel,
 }
 
 #[derive(Debug, Clone, Default)]
@@ -195,6 +203,7 @@ impl ServingEngine {
             tracker: LoadTracker::new(DEFAULT_LOAD_WINDOW, n_experts),
             plan,
             renormalize: false,
+            kernel: Kernel::default(),
         }
     }
 
@@ -212,6 +221,14 @@ impl ServingEngine {
     /// bit-identical either way (see [`combine_rows_opts`]).
     pub fn set_renormalize(&mut self, on: bool) {
         self.renormalize = on;
+    }
+
+    /// Select the GEMM micro-kernel for the expert FFN stage. Every
+    /// kernel keeps the bit-identical-across-threads contract; only
+    /// [`Kernel::Naive`] (the default) is additionally bit-identical
+    /// to the historic goldens (see [`crate::kernels`]).
+    pub fn set_kernel(&mut self, kernel: Kernel) {
+        self.kernel = kernel;
     }
 
     /// Rolling balance of the batches this engine has routed.
@@ -297,9 +314,10 @@ impl ServingEngine {
         y.clear();
         y.resize(kept * d, 0.0);
         let groups = self.n_threads.min(e).max(1);
+        let kernel = self.kernel;
         if groups == 1 || kept < 2 * self.n_threads {
             let shard = &mut self.shards[0];
-            bank.forward_all(plan, xg, &mut shard.hid, y);
+            bank.forward_all_with(kernel, plan, xg, &mut shard.hid, y);
         } else {
             // contiguous expert ranges balanced by grouped-row count;
             // boundaries depend only on the plan's offsets, so the
@@ -324,8 +342,8 @@ impl ServingEngine {
                     }
                     scope.spawn(move || {
                         run_expert_range(
-                            bank, plan, xg, e0, e1, d, &mut shard.hid,
-                            ys,
+                            bank, plan, xg, e0, e1, d, kernel,
+                            &mut shard.hid, ys,
                         );
                     });
                 }
@@ -541,5 +559,53 @@ mod tests {
         // and re-running h1 reproduces the first result exactly
         eng.forward_full(&h1, &bank, 1.25, OverflowPolicy::Drop, &mut out);
         assert_eq!(out.combined, first);
+    }
+
+    /// Satellite: the determinism contract holds per kernel — each of
+    /// Naive/Blocked/Simd is bit-identical to *itself* across thread
+    /// counts {1, 2, 3, 8}, on shapes that straddle the tile sizes.
+    /// (Cross-kernel equality is separately pinned for Naive=Blocked
+    /// on f32 in `kernels` and `experts`.)
+    #[test]
+    fn every_kernel_bit_identical_across_thread_counts() {
+        let mut rng = Rng::new(93);
+        let (d, dz, e, k, ff_dim) = (16usize, 8, 6, 2, 40);
+        let bank = ExpertBank::new(&Rng::new(4), e, d, ff_dim);
+        let r = synthetic_lpr_router("cosine", &mut rng, d, dz, e, k);
+        let plan = r.plan().clone();
+        for n in [5usize, 73] {
+            let h = rand_vec(&mut rng, n * d);
+            for kernel in Kernel::ALL {
+                let mut single = ServingEngine::new(plan.clone(), 1);
+                single.set_kernel(kernel);
+                let mut want = FullForward::new();
+                single.forward_full(
+                    &h,
+                    &bank,
+                    1.0,
+                    OverflowPolicy::Drop,
+                    &mut want,
+                );
+                for threads in [2usize, 3, 8] {
+                    let mut eng =
+                        ServingEngine::new(plan.clone(), threads);
+                    eng.set_kernel(kernel);
+                    let mut got = FullForward::new();
+                    eng.forward_full(
+                        &h,
+                        &bank,
+                        1.0,
+                        OverflowPolicy::Drop,
+                        &mut got,
+                    );
+                    assert_eq!(
+                        got.combined,
+                        want.combined,
+                        "kernel {} n={n} t={threads} diverged",
+                        kernel.name()
+                    );
+                }
+            }
+        }
     }
 }

@@ -2,7 +2,9 @@
 //!
 //! Row-major f32 throughout. `matmul` is written as an i-k-j loop with a
 //! flat accumulator row so the inner loop auto-vectorizes (this is the
-//! dispatch simulator's hot path; see EXPERIMENTS.md §Perf).
+//! routing hot path; the FFN hot loop lives in [`crate::kernels`] — see
+//! `docs/ARCHITECTURE.md` and the ROADMAP perf-trajectory section for
+//! how the two are tracked).
 
 /// C[n,p] = A[n,m] @ B[m,p]
 pub fn matmul(a: &[f32], b: &[f32], n: usize, m: usize, p: usize) -> Vec<f32> {
@@ -73,10 +75,21 @@ pub fn silu(x: &mut [f32]) {
 }
 
 /// Softmax over each row of [n, d].
+///
+/// Max-folded for stability, seeded with `NEG_INFINITY` (a `f32::MIN`
+/// seed silently corrupts rows whose entries are all below it, and an
+/// all-`-inf` row — every logit masked — used to collapse to `z = 0`
+/// and emit NaNs). A row with no finite maximum degrades to the uniform
+/// distribution instead, matching the convention that a fully-masked
+/// row carries no preference.
 pub fn softmax_rows(x: &mut [f32], n: usize, d: usize) {
     for i in 0..n {
         let row = &mut x[i * d..(i + 1) * d];
-        let m = row.iter().cloned().fold(f32::MIN, f32::max);
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        if !m.is_finite() {
+            row.fill(1.0 / d as f32);
+            continue;
+        }
         let mut z = 0.0;
         for v in row.iter_mut() {
             *v = (*v - m).exp();
@@ -144,5 +157,28 @@ mod tests {
             assert!((s - 1.0).abs() < 1e-6);
         }
         assert!(x[2] > x[1] && x[1] > x[0]);
+    }
+
+    /// Regression: an all-`-inf` row (every logit masked) must yield a
+    /// uniform distribution, not NaNs — and rows below the old
+    /// `f32::MIN` seed must still softmax correctly.
+    #[test]
+    fn softmax_rows_handles_masked_and_tiny_rows() {
+        let inf = f32::NEG_INFINITY;
+        // row 0: fully masked; row 1: ordinary logits; row 2: all
+        // entries below f32::MIN's magnitude would be impossible for
+        // finite f32, so use -inf mixed with a finite entry instead —
+        // the finite max must win and the masked lanes must get 0.
+        let mut x = vec![inf, inf, inf, 1.0, 2.0, 3.0, inf, 0.0, inf];
+        softmax_rows(&mut x, 3, 3);
+        for &v in &x {
+            assert!(v.is_finite(), "softmax emitted a non-finite gate");
+        }
+        for i in 0..3 {
+            let s: f32 = x[i * 3..(i + 1) * 3].iter().sum();
+            assert!((s - 1.0).abs() < 1e-6, "row {i} sums to {s}");
+        }
+        assert_eq!(&x[..3], &[1.0 / 3.0; 3], "masked row must be uniform");
+        assert_eq!(&x[6..], &[0.0, 1.0, 0.0], "masked lanes must be 0");
     }
 }

@@ -22,10 +22,13 @@
 //!   `DispatchSim`) and windowed per-layer `[L, E]` balance stats from
 //!   the engine's [`crate::metrics::LayerLoadTracker`].
 //! - [`server::Server`] — the **wall-clock** front-end: owns a
-//!   `ServeRuntime<Box<dyn MoeEngine>>`, stamps real `Instant`-derived
-//!   microsecond arrivals onto `submit`, runs flushes on a background
-//!   thread, and exposes blocking `enqueue` / `await_completion` — the
-//!   deployable server loop over the same deterministic core.
+//!   `ServeRuntime<Box<dyn MoeEngine>>` plus its own
+//!   separately-locked [`BatchQueue`], stamps real `Instant`-derived
+//!   microsecond arrivals onto submissions, runs flushes on a
+//!   background thread (batches enter the runtime via
+//!   [`ServeRuntime::run_batch`], so `enqueue` never waits on a
+//!   forward), and exposes blocking `enqueue` / `await_completion` —
+//!   the deployable server loop over the same deterministic core.
 //!
 //! # Time model
 //!
@@ -394,8 +397,43 @@ impl<E: MoeEngine> ServeRuntime<E> {
         &self.completions
     }
 
+    /// Run one externally-popped micro-batch (`batch_h` rows plus the
+    /// member slices a caller-owned [`BatchQueue::pop_batch`] produced)
+    /// at tick `now`, with exactly the same service-time and latency
+    /// accounting as an internally-flushed batch; returns the requests
+    /// it completed. This is the wall-clock [`Server`]'s entry point:
+    /// it keeps its submission queue behind a separate lock so
+    /// `enqueue` lands while a forward holds the runtime, and feeds the
+    /// popped batches through here.
+    pub fn run_batch(
+        &mut self,
+        batch_h: &[f32],
+        members: &[BatchMember],
+        now: u64,
+    ) -> &[Completion] {
+        assert!(!members.is_empty(), "run_batch on an empty batch");
+        self.completions.clear();
+        self.batch_h.clear();
+        self.batch_h.extend_from_slice(batch_h);
+        self.members.clear();
+        self.members.extend_from_slice(members);
+        // batches pop FIFO, so the first member of the first external
+        // batch carries the stream's first arrival
+        let arrival = members[0].arrival;
+        let fa = self.first_arrival.get_or_insert(arrival);
+        *fa = (*fa).min(arrival);
+        self.forward_current(now);
+        &self.completions
+    }
+
     fn flush_one(&mut self, now: u64) {
         self.queue.pop_batch(&mut self.batch_h, &mut self.members);
+        self.forward_current(now);
+    }
+
+    /// Forward `self.batch_h` / `self.members` (however they were
+    /// filled) and record completions against the virtual clock.
+    fn forward_current(&mut self, now: u64) {
         let n = self.batch_h.len() / self.d_model;
         let t0 = std::time::Instant::now();
         self.engine.forward(&self.batch_h, n);

@@ -69,6 +69,7 @@ use std::thread::JoinHandle;
 
 use crate::dispatch::plan::{capacity_for, DispatchPlan, OverflowPolicy};
 use crate::experts::{combine_rows_opts, gather_rows, ExpertBank};
+use crate::kernels::Kernel;
 use crate::metrics::{LayerLoadTracker, LoadTracker, DEFAULT_LOAD_WINDOW};
 use crate::model::{residual_add, MoeLayer, ModelForward, StackedModel};
 use crate::router::engine::{
@@ -108,11 +109,14 @@ enum Job {
     },
     /// Run experts `e0..e1` of `shared.plan` over `shared.xg` with
     /// layer `layer`'s bank into `scratch.y` (pre-sized by the caller).
+    /// Carries the engine's GEMM kernel choice — workers only see the
+    /// shared layer stack, so the knob travels with the job.
     Experts {
         layer: usize,
         shared: Arc<BatchShared>,
         e0: usize,
         e1: usize,
+        kernel: Kernel,
         scratch: Box<Scratch>,
     },
 }
@@ -152,7 +156,7 @@ fn run_job(layers: &[MoeLayer], slot: usize, job: Job) -> Done {
             drop(shared);
             Done::Ok { slot, row0: span.start, scratch }
         }
-        Job::Experts { layer, shared, e0, e1, mut scratch } => {
+        Job::Experts { layer, shared, e0, e1, kernel, mut scratch } => {
             let d = layers[layer].plan.cfg.d_model;
             run_expert_range(
                 &layers[layer].bank,
@@ -161,6 +165,7 @@ fn run_job(layers: &[MoeLayer], slot: usize, job: Job) -> Done {
                 e0,
                 e1,
                 d,
+                kernel,
                 &mut scratch.hid,
                 &mut scratch.y,
             );
@@ -216,6 +221,9 @@ pub struct PoolEngine {
     /// Rolling `[L, E]` routed-load balance over this pool's batches.
     trackers: LayerLoadTracker,
     renormalize: bool,
+    /// GEMM micro-kernel for the expert FFN stage; travels inside
+    /// `Job::Experts` messages so the workers see it.
+    kernel: Kernel,
 }
 
 impl std::fmt::Debug for Worker {
@@ -279,6 +287,8 @@ impl PoolEngine {
             n_workers,
             workers,
             done_rx,
+            renormalize: false,
+            kernel: Kernel::default(),
         }
     }
 
@@ -321,6 +331,14 @@ impl PoolEngine {
     /// default.
     pub fn set_renormalize(&mut self, on: bool) {
         self.renormalize = on;
+    }
+
+    /// Select the GEMM micro-kernel for every layer's expert FFN stage
+    /// (the `Engine::builder().kernel(..)` knob). Every kernel keeps
+    /// the bit-identical-across-workers contract; [`Kernel::Naive`]
+    /// (the default) additionally matches the historic goldens.
+    pub fn set_kernel(&mut self, kernel: Kernel) {
+        self.kernel = kernel;
     }
 
     /// Route `h` (`[N, d]` row-major) through **layer 0** into `out` on
@@ -435,7 +453,8 @@ impl PoolEngine {
         out.y.resize(kept * d, 0.0);
         let groups = self.n_workers.min(e).max(1);
         if groups == 1 || kept < 2 * self.n_workers {
-            self.layers[layer].bank.forward_all(
+            self.layers[layer].bank.forward_all_with(
+                self.kernel,
                 &self.shared.plan,
                 &self.shared.xg,
                 &mut self.inline.hid,
@@ -460,6 +479,7 @@ impl PoolEngine {
                     shared: self.shared.clone(),
                     e0,
                     e1,
+                    kernel: self.kernel,
                     scratch,
                 };
                 self.workers[g]
@@ -774,5 +794,43 @@ mod tests {
         assert_eq!(out.hidden, first);
         assert_eq!(pool.layer_tracker().layer(0).total_steps(), 3);
         assert_eq!(pool.n_layers(), 2);
+    }
+
+    /// Satellite: per kernel, the pool is bit-identical to the scoped
+    /// engine running the *same* kernel, for worker counts {1, 2, 3,
+    /// 8} — the cross-backend half of the kernel determinism contract.
+    #[test]
+    fn pool_matches_scoped_engine_for_every_kernel() {
+        let mut rng = Rng::new(97);
+        let (d, dz, e, k, ff) = (16usize, 8, 6, 2, 24);
+        let bank = ExpertBank::new(&Rng::new(6), e, d, ff);
+        let r = synthetic_lpr_router("dot", &mut rng, d, dz, e, k);
+        let plan = r.plan().clone();
+        let h = rand_vec(&mut rng, 53 * d);
+        for kernel in Kernel::ALL {
+            let mut scoped = ServingEngine::new(plan.clone(), 3);
+            scoped.set_kernel(kernel);
+            let mut want = FullForward::new();
+            scoped.forward_full(
+                &h,
+                &bank,
+                1.0,
+                OverflowPolicy::Drop,
+                &mut want,
+            );
+            for workers in [1usize, 2, 3, 8] {
+                let mut pool =
+                    PoolEngine::new(plan.clone(), bank.clone(), workers);
+                pool.set_kernel(kernel);
+                let mut got = FullForward::new();
+                pool.forward_full(&h, 1.0, OverflowPolicy::Drop, &mut got);
+                assert_eq!(
+                    got.combined,
+                    want.combined,
+                    "kernel {} w={workers} diverged from scoped",
+                    kernel.name()
+                );
+            }
+        }
     }
 }

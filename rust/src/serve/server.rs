@@ -10,10 +10,11 @@
 //! deterministic core**:
 //!
 //! - `enqueue` stamps real `Instant`-derived microsecond arrivals
-//!   (1 tick = 1 µs since server start) onto `ServeRuntime::submit`;
-//! - a background flusher thread advances the clock every
-//!   `poll_interval`, so micro-batches flush by size *and* by age with
-//!   no caller in the loop;
+//!   (1 tick = 1 µs since server start) onto a server-owned
+//!   [`BatchQueue`];
+//! - a background flusher thread pops due micro-batches every
+//!   `poll_interval` and forwards them via [`ServeRuntime::run_batch`],
+//!   so batches flush by size *and* by age with no caller in the loop;
 //! - `await_completion` blocks (condvar) until the request's
 //!   [`Completion`] lands — the blocking client API a driver thread
 //!   pool needs.
@@ -25,15 +26,19 @@
 //! Virtual-clock tests stay bit-identical; the server only chooses
 //! *which* `now` to pass.
 //!
-//! Lock order: the flusher takes the runtime lock, then the completion
-//! map; `enqueue` takes only the runtime lock; `await_completion` takes
-//! only the map — no ordering cycle. The runtime lock **is held for
-//! the duration of a batch forward** (the engine is one shared compute
-//! resource, so a second batch could not run concurrently anyway), so
-//! `enqueue`/`report` can block for up to one batch service time while
-//! a flush computes; splitting the queue from the engine behind
-//! separate locks — so submissions land during compute — is a noted
-//! follow-up in ROADMAP.md, not a property of this version.
+//! Lock split & order: the submission [`BatchQueue`] lives behind its
+//! **own** lock, separate from the runtime (engine) lock. `enqueue`
+//! takes only the queue lock — held for a memcpy — so submissions land
+//! even while a batch forward holds the runtime lock for its full
+//! service time (pinned by `enqueue_lands_while_a_batch_forward_is_in_flight`).
+//! The flusher takes the queue lock (pop), releases it, then the
+//! runtime lock (forward, via [`ServeRuntime::run_batch`]), then the
+//! completion map; `await_completion` takes only the map;
+//! `report`/`pending_tokens` take one lock each — never two locks at
+//! once in any path except the flusher's strictly-ordered
+//! queue → runtime → map, so no ordering cycle exists. `Full`
+//! rejections are counted on a lock-free counter and merged into
+//! [`ServeReport::rejected`] by [`Server::report`].
 //!
 //! Unclaimed completions are retained in a **bounded** buffer (the
 //! [`DONE_RETAIN`] most recent); older unclaimed records are discarded
@@ -42,11 +47,14 @@
 //! completions promptly, or use `try_completion`.
 
 use std::collections::{HashMap, VecDeque};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use super::{Completion, ServeReport, ServeRuntime, SubmitError};
+use super::{
+    BatchMember, BatchQueue, Completion, ServeReport, ServeRuntime,
+    SubmitError,
+};
 
 /// Unclaimed completions retained before the oldest are discarded.
 pub const DONE_RETAIN: usize = 16_384;
@@ -75,6 +83,11 @@ impl DoneMap {
 
 struct Shared {
     rt: Mutex<ServeRuntime>,
+    /// The submission queue, behind its own lock (never the runtime's)
+    /// so `enqueue` lands while a batch forward is in flight.
+    queue: Mutex<BatchQueue>,
+    /// `SubmitError::Full` count, merged into the report's `rejected`.
+    rejected: AtomicUsize,
     /// Completions not yet claimed by `await_completion`.
     done: Mutex<DoneMap>,
     cv: Condvar,
@@ -87,24 +100,45 @@ impl Shared {
         self.t0.elapsed().as_micros() as u64
     }
 
-    /// One flusher step: advance the runtime to wall-clock `now` and
-    /// publish any completions. `final_drain` flushes everything still
-    /// queued (shutdown), regardless of the flush conditions.
-    fn pump(&self, final_drain: bool) {
-        let now = self.now_us();
-        let mut rt = self.rt.lock().expect("serve runtime poisoned");
-        let completed: Vec<Completion> = if final_drain {
-            rt.drain(now).to_vec()
-        } else {
-            rt.poll(now).to_vec()
-        };
-        drop(rt);
-        if !completed.is_empty() {
-            let mut done = self.done.lock().expect("completion map");
-            for c in completed {
-                done.insert(c);
+    /// One flusher step: pop every due micro-batch (queue lock only),
+    /// forward each through the runtime (runtime lock only), and
+    /// publish completions. `final_drain` flushes everything still
+    /// queued (shutdown), regardless of the flush conditions. `h`/`m`
+    /// are flusher-owned scratch so the steady state stays
+    /// allocation-free.
+    fn pump(
+        &self,
+        final_drain: bool,
+        h: &mut Vec<f32>,
+        m: &mut Vec<BatchMember>,
+    ) {
+        loop {
+            let now = self.now_us();
+            {
+                let mut q =
+                    self.queue.lock().expect("submission queue poisoned");
+                let due = if final_drain {
+                    !q.is_empty()
+                } else {
+                    q.ready(now)
+                };
+                if !due {
+                    return;
+                }
+                q.pop_batch(h, m);
+            } // queue lock released: submissions land during the forward
+            let completed: Vec<Completion> = {
+                let mut rt =
+                    self.rt.lock().expect("serve runtime poisoned");
+                rt.run_batch(h, m, now).to_vec()
+            };
+            if !completed.is_empty() {
+                let mut done = self.done.lock().expect("completion map");
+                for c in completed {
+                    done.insert(c);
+                }
+                self.cv.notify_all();
             }
-            self.cv.notify_all();
         }
     }
 }
@@ -154,8 +188,19 @@ impl Server {
         rt: ServeRuntime,
         poll_interval: Duration,
     ) -> Server {
+        // the server owns the batching queue (its own lock); the
+        // runtime's internal queue goes unused and stays empty
+        let cfg = rt.config();
+        let queue = BatchQueue::new(
+            rt.engine().d_model(),
+            cfg.max_batch,
+            cfg.max_wait,
+            cfg.queue_tokens,
+        );
         let shared = Arc::new(Shared {
             rt: Mutex::new(rt),
+            queue: Mutex::new(queue),
+            rejected: AtomicUsize::new(0),
             done: Mutex::new(DoneMap::default()),
             cv: Condvar::new(),
             stop: AtomicBool::new(false),
@@ -164,15 +209,18 @@ impl Server {
         let worker = shared.clone();
         let flusher = std::thread::Builder::new()
             .name("lpr-serve-clock".into())
-            .spawn(move || loop {
-                if worker.stop.load(Ordering::Acquire) {
-                    // final drain so every accepted request completes
-                    // and no awaiter is left blocked
-                    worker.pump(true);
-                    return;
+            .spawn(move || {
+                let (mut h, mut m) = (Vec::new(), Vec::new());
+                loop {
+                    if worker.stop.load(Ordering::Acquire) {
+                        // final drain so every accepted request
+                        // completes and no awaiter is left blocked
+                        worker.pump(true, &mut h, &mut m);
+                        return;
+                    }
+                    worker.pump(false, &mut h, &mut m);
+                    std::thread::sleep(poll_interval);
                 }
-                worker.pump(false);
-                std::thread::sleep(poll_interval);
             })
             .expect("spawn serve clock thread");
         Server { shared, flusher: Some(flusher) }
@@ -187,11 +235,21 @@ impl Server {
     /// Submit one request of `h.len() / d` token rows, stamped with the
     /// current wall clock. Back-pressure surfaces as
     /// [`SubmitError::Full`] (counted in [`ServeReport::rejected`]);
-    /// oversized requests as [`SubmitError::TooLarge`].
+    /// oversized requests as [`SubmitError::TooLarge`]. Takes only the
+    /// queue lock (held for a memcpy), never the runtime lock — a
+    /// submission lands even while a batch forward is computing.
     pub fn enqueue(&self, h: &[f32]) -> Result<u64, SubmitError> {
         let now = self.shared.now_us();
-        let mut rt = self.shared.rt.lock().expect("serve runtime poisoned");
-        rt.submit(h, now)
+        let res = self
+            .shared
+            .queue
+            .lock()
+            .expect("submission queue poisoned")
+            .submit(h, now);
+        if res == Err(SubmitError::Full) {
+            self.shared.rejected.fetch_add(1, Ordering::Relaxed);
+        }
+        res
     }
 
     /// The completion for `id`, if it has already been served (consumes
@@ -218,16 +276,20 @@ impl Server {
     /// Tokens currently queued (not yet flushed into a batch).
     pub fn pending_tokens(&self) -> usize {
         self.shared
-            .rt
+            .queue
             .lock()
-            .expect("serve runtime poisoned")
+            .expect("submission queue poisoned")
             .pending_tokens()
     }
 
     /// Aggregate telemetry for everything served so far (same schema as
-    /// the virtual-clock runtime's report).
+    /// the virtual-clock runtime's report), with the server-side
+    /// rejection count merged in.
     pub fn report(&self) -> ServeReport {
-        self.shared.rt.lock().expect("serve runtime poisoned").report()
+        let mut rep =
+            self.shared.rt.lock().expect("serve runtime poisoned").report();
+        rep.rejected += self.shared.rejected.load(Ordering::Relaxed);
+        rep
     }
 
     /// Stop the flusher, drain everything still queued, wake every
@@ -255,8 +317,10 @@ impl Drop for Server {
 mod tests {
     use super::*;
     use crate::dispatch::plan::OverflowPolicy;
-    use crate::engine::{Backend, Engine};
-    use crate::model::synthetic_stacked_model;
+    use crate::engine::{Backend, Engine, EngineOutput, MoeEngine};
+    use crate::metrics::LayerLoadTracker;
+    use crate::model::{synthetic_stacked_model, ModelForward};
+    use crate::router::RouterBatch;
     use crate::serve::ServeConfig;
     use crate::util::rng::Rng;
 
@@ -359,6 +423,107 @@ mod tests {
         assert_eq!(rep.tokens, 4 * 8 * 3);
         assert!(rep.batches >= 1);
         assert!(rep.window_gini >= 0.0);
+    }
+
+    /// An engine whose forward sleeps: stands in for a long batch so
+    /// the lock-split test can catch `enqueue` blocking behind it.
+    struct SlowEngine {
+        inner: Box<dyn MoeEngine>,
+        delay: Duration,
+        in_forward: Arc<AtomicBool>,
+    }
+
+    impl MoeEngine for SlowEngine {
+        fn forward(&mut self, h: &[f32], n: usize) -> EngineOutput<'_> {
+            self.in_forward.store(true, Ordering::SeqCst);
+            std::thread::sleep(self.delay);
+            let out = self.inner.forward(h, n);
+            self.in_forward.store(false, Ordering::SeqCst);
+            out
+        }
+        fn route_into(&mut self, h: &[f32], out: &mut RouterBatch) {
+            self.inner.route_into(h, out)
+        }
+        fn balance(&self) -> &LayerLoadTracker {
+            self.inner.balance()
+        }
+        fn capacity_factor(&self) -> f64 {
+            self.inner.capacity_factor()
+        }
+        fn policy(&self) -> OverflowPolicy {
+            self.inner.policy()
+        }
+        fn layers(&self) -> usize {
+            self.inner.layers()
+        }
+        fn d_model(&self) -> usize {
+            self.inner.d_model()
+        }
+        fn last(&self) -> &ModelForward {
+            self.inner.last()
+        }
+    }
+
+    /// Satellite (lock split): a submission must land while a batch
+    /// forward holds the runtime lock — `enqueue` takes only the queue
+    /// lock. Before the split this blocked for the full (here 80 ms)
+    /// service time.
+    #[test]
+    fn enqueue_lands_while_a_batch_forward_is_in_flight() {
+        let model = synthetic_stacked_model(
+            "cosine",
+            &Rng::new(5),
+            2,
+            D,
+            4,
+            4,
+            2,
+            6,
+        );
+        let engine = Engine::builder()
+            .model(model)
+            .backend(Backend::Pool { workers: 2 })
+            .build()
+            .unwrap();
+        let in_forward = Arc::new(AtomicBool::new(false));
+        let slow = SlowEngine {
+            inner: engine.into_inner(),
+            delay: Duration::from_millis(80),
+            in_forward: in_forward.clone(),
+        };
+        let cfg = ServeConfig {
+            max_batch: 4,
+            max_wait: 1, // age-flush essentially immediately
+            queue_tokens: 64,
+            service_ticks: Some(1),
+            ..ServeConfig::default()
+        };
+        let server = Server::with_poll_interval(
+            ServeRuntime::with_engine(
+                Box::new(slow) as Box<dyn MoeEngine>,
+                cfg,
+            ),
+            Duration::from_micros(100),
+        );
+        let h = vec![0.5f32; 2 * D];
+        let id0 = server.enqueue(&h).unwrap();
+        // wait until the flusher is inside the slow forward for id0
+        while !in_forward.load(Ordering::SeqCst) {
+            std::thread::yield_now();
+        }
+        let t0 = Instant::now();
+        let id1 = server.enqueue(&h).unwrap();
+        let took = t0.elapsed();
+        assert!(
+            took < Duration::from_millis(40),
+            "enqueue blocked {took:?} behind an in-flight forward"
+        );
+        // and the queue really absorbed it mid-forward
+        assert_eq!(server.await_completion(id0).n_tokens, 2);
+        assert_eq!(server.await_completion(id1).n_tokens, 2);
+        let rep = server.shutdown();
+        assert_eq!(rep.requests, 2);
+        assert_eq!(rep.rejected, 0);
     }
 
     /// The unclaimed-completion buffer is bounded: oldest records are

@@ -2,7 +2,8 @@
 //!
 //! `cargo bench` binaries use `Bench` to time closures with warmup and
 //! report min/median/mean like criterion's summary line. Results are
-//! also appended to a CSV so EXPERIMENTS.md §Perf can track deltas
+//! also appended to CSV/JSON artifacts so the ROADMAP perf-trajectory
+//! tables (see `docs/ARCHITECTURE.md` §Benchmarks) can track deltas
 //! across optimization iterations.
 
 use std::time::Instant;
