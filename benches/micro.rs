@@ -13,7 +13,9 @@
 //! facade-vs-direct overhead rows (boxed `dyn MoeEngine` vs the
 //! backend called directly) to `BENCH_engine.json`, and the
 //! grouped-GEMM kernel × weight-dtype sweep over the FFN hot loop to
-//! `BENCH_gemm.json`, so the perf trajectory is trackable across
+//! `BENCH_gemm.json`, and the expert-placement sweep — pool forward
+//! wall-clock plus modelled step latency/stall per planner — to
+//! `BENCH_placement.json`, so the perf trajectory is trackable across
 //! PRs). All serving-path engines are
 //! built through `Engine::builder()`; the `engine_direct/*` rows are
 //! the deliberate exception — they are the baseline the facade rows
@@ -21,8 +23,9 @@
 
 use lpr::data::{Batcher, MixtureStream, ZipfMarkovCorpus};
 use lpr::dispatch::{
-    capacity_for, synthetic_assignments, DispatchPlan, DispatchSim,
-    OverflowPolicy, SimConfig,
+    capacity_for, run_routed_steps, synthetic_assignments, DispatchPlan,
+    DispatchSim, OverflowPolicy, PlacementConfig, PlacementPolicy,
+    SimConfig,
 };
 use lpr::engine::{Backend, Engine, MoeEngine};
 use lpr::experts::ExpertBank;
@@ -698,11 +701,122 @@ fn main() {
         write_rows_or_warn("BENCH_gemm.json", &gemm_rows);
     }
 
+    // ---- expert placement: the same pool forward under each
+    // placement planner (wall-clock, where load-aware partitioning
+    // shows up as pool_forward time), plus the dispatch simulator's
+    // modelled serving numbers per planner on a Zipf-skewed routed
+    // stream. Emitted as BENCH_placement.json. ----
+    {
+        let fast = std::env::var("LPR_BENCH_FAST").is_ok();
+        let (pd, pdz, pe, pk, pn, pff) =
+            (64usize, 16usize, 64usize, 8usize, 1024usize, 256usize);
+        let sim_steps = if fast { 16usize } else { 48 };
+        let mut placement_rows: Vec<String> = Vec::new();
+        let router =
+            synthetic_lpr_router("cosine", &mut rng, pd, pdz, pe, pk);
+        let bank = ExpertBank::new(&Rng::new(42), pe, pd, pff);
+        let mix = MixtureStream::skewed(&mut rng, pd, 1.6);
+        let mut hp = Vec::new();
+        mix.fill(&mut rng, pn, &mut hp);
+        for placement in PlacementPolicy::ALL {
+            for workers in [1usize, 4] {
+                if workers > cores {
+                    continue;
+                }
+                let mut pool = Engine::builder()
+                    .layer(router.plan().clone(), bank.clone())
+                    .backend(Backend::Pool { workers })
+                    .policy(OverflowPolicy::Drop)
+                    .capacity_factor(1.25)
+                    .placement(PlacementConfig::with_policy(placement))
+                    .build()
+                    .expect("valid engine config");
+                let res = b.run_items(
+                    &format!(
+                        "placement/pool_forward/{}/t{workers}/{pn}tok",
+                        placement.name()
+                    ),
+                    pn as f64,
+                    &mut || {
+                        let out =
+                            pool.forward(std::hint::black_box(&hp), pn);
+                        std::hint::black_box(out.hidden.len());
+                    },
+                );
+                placement_rows.push(format!(
+                    "{{\"name\": \"placement/pool_forward/{}\", \
+                     \"n\": {pn}, \"d\": {pd}, \"d_ff\": {pff}, \
+                     \"E\": {pe}, \"k\": {pk}, \"workers\": {workers}, \
+                     \"ns_per_token\": {:.2}}}",
+                    placement.name(),
+                    res.per_item_ns()
+                ));
+            }
+            // modelled serving numbers on the same router geometry:
+            // mean step latency / stall under this planner at G=8
+            let mut srng = Rng::new(23);
+            let sr = synthetic_lpr_router(
+                "cosine", &mut srng, 32, 16, pe, pk,
+            );
+            let mut eng = Engine::builder()
+                .layer(
+                    sr.plan().clone(),
+                    ExpertBank::new(&Rng::new(0), pe, 32, 1),
+                )
+                .backend(Backend::Scoped { threads: 1 })
+                .build()
+                .expect("valid engine config");
+            let smix = MixtureStream::skewed(&mut srng, 32, 1.6);
+            let mut sim = DispatchSim::new(SimConfig::default())
+                .expect("E=64 over G=8 is a valid sim config");
+            sim.set_placement(PlacementConfig {
+                policy: placement,
+                replan_every: 8,
+                bytes_per_expert: 4096,
+                ..PlacementConfig::default()
+            });
+            run_routed_steps(
+                &mut eng,
+                &smix,
+                &mut srng,
+                &mut sim,
+                sim_steps,
+                512,
+                OverflowPolicy::Drop,
+            );
+            let rep = sim.report();
+            println!(
+                "micro/placement/sim/{}    mean {:>7.0} us  p99 \
+                 {:>7.0} us  stall {:.3}  replans {}  migrated {:.0} KiB",
+                placement.name(),
+                rep.latency_mean_us,
+                rep.latency_p99_us,
+                rep.stall_frac,
+                rep.replans,
+                rep.migrated_bytes as f64 / 1024.0
+            );
+            placement_rows.push(format!(
+                "{{\"name\": \"placement/sim/{}\", \"E\": {pe}, \
+                 \"k\": {pk}, \"workers\": 8, \"mean_us\": {:.1}, \
+                 \"p99_us\": {:.1}, \"stall\": {:.4}, \"replans\": {}, \
+                 \"migrated_kib\": {:.0}}}",
+                placement.name(),
+                rep.latency_mean_us,
+                rep.latency_p99_us,
+                rep.stall_frac,
+                rep.replans,
+                rep.migrated_bytes as f64 / 1024.0
+            ));
+        }
+        write_rows_or_warn("BENCH_placement.json", &placement_rows);
+    }
+
     // ---- dispatch simulator ----
     let assignments =
         synthetic_assignments(&mut rng, 2048, 8, 64, 0.7);
     b.run_items("dispatch_sim/step/2048tok", 2048.0, &mut || {
-        let mut sim = DispatchSim::new(SimConfig::default());
+        let mut sim = DispatchSim::new(SimConfig::default())
+            .expect("default sim config is valid");
         sim.step(std::hint::black_box(&assignments));
         std::hint::black_box(sim.report());
     });

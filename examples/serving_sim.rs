@@ -68,7 +68,8 @@ fn main() {
 
     let mut baseline_tps = None;
     for &skew in &[0.0, 0.25, 0.5, 0.75, 1.0, 1.5, 2.0] {
-        let mut sim = DispatchSim::new(base.clone());
+        let mut sim = DispatchSim::new(base.clone())
+            .expect("64 experts over 8 devices is a valid sim config");
         let mut rng = Rng::new(17);
         for _ in 0..300 {
             let a = synthetic_assignments(
@@ -135,7 +136,8 @@ fn main() {
             .backend(Backend::Scoped { threads })
             .build()
             .expect("valid engine config");
-        let mut sim = DispatchSim::new(base.clone());
+        let mut sim = DispatchSim::new(base.clone())
+            .expect("64 experts over 8 devices is a valid sim config");
         // Zipf-clustered Gaussian-mixture stream (§2.2.1 assumptions)
         let mix = MixtureStream::standard(&mut rng, d);
         let n_tokens = 2048usize;
@@ -192,7 +194,8 @@ fn main() {
             .capacity_factor(full_cfg.capacity_factor)
             .build()
             .expect("valid engine config");
-        let mut sim = DispatchSim::new(full_cfg.clone());
+        let mut sim = DispatchSim::new(full_cfg.clone())
+            .expect("64 experts over 8 devices is a valid sim config");
         let mix = MixtureStream::skewed(&mut rng, d, 1.6);
         let fwd_ns = run_full_steps(
             &mut engine, &mix, &mut rng, &mut sim, steps, n_tokens,
@@ -330,7 +333,8 @@ fn main() {
             ..base.clone()
         },
         n_layers,
-    );
+    )
+    .expect("32 experts over 8 devices is a valid sim config");
     let mut rng = Rng::new(2025);
     let mix = MixtureStream::skewed(&mut rng, md, 1.6);
     let fwd_ns =

@@ -1,0 +1,640 @@
+//! Expert→device placement for the expert-parallel serving path.
+//!
+//! Standard expert parallelism shards experts round-robin over devices
+//! (`e % G`), so any residual routing skew turns straight into
+//! straggler time: the step finishes when the hottest device finishes.
+//! This module makes the placement itself a planned quantity:
+//!
+//! - [`ExpertPlacement::round_robin`] — the historical oracle layout
+//!   (and the default everywhere; every pinned number predating this
+//!   module is unchanged under it).
+//! - [`ExpertPlacement::load_aware`] — LPT (longest-processing-time)
+//!   greedy bin-packing of experts onto devices by *measured* load:
+//!   experts sorted by load descending land on the currently
+//!   least-loaded device. Deterministic (ties break toward the lower
+//!   expert/device id).
+//! - [`ExpertPlacement::replicated`] — load-aware packing plus
+//!   replication of the hottest experts: each hot expert is hosted on
+//!   its primary device and the `r − 1` least-loaded other devices,
+//!   with per-replica routing weights *water-filled* so the hosting
+//!   devices' totals approach a common target.
+//!
+//! # Replica routing determinism
+//!
+//! When an expert has multiple replicas, the replica serving one
+//! assignment is [`ExpertPlacement::replica_for`]`(token_slot, expert,
+//! step)` — a pure function of those three values (a splitmix-style
+//! hash mapped through the replica weights' cumulative distribution).
+//! No scheduler state, queue depth, or thread timing is consulted, so
+//! dispatch under replication stays deterministic, and because every
+//! grouped row's FFN output depends only on its own input row and the
+//! expert weights, *any* partition of rows across devices/workers
+//! yields bit-identical combined outputs — the thread-count/backend
+//! contract survives replication untouched.
+//!
+//! # Live migration cost model
+//!
+//! Re-planning between windows moves expert weights between devices.
+//! [`migration_bytes`] charges one `bytes_per_expert` payload for every
+//! (expert, device) pair that the new placement hosts and the old one
+//! did not; the simulator converts bytes to microseconds
+//! (`us_per_byte`) and adds the transfer to that step's latency — so a
+//! placement that churns pays for it where it hurts, in step latency.
+//! `DispatchSim` additionally applies an adoption guard: a candidate
+//! placement is only installed when its projected straggler saving over
+//! the next re-plan interval exceeds the transfer cost.
+
+/// Which placement planner the simulator / pool should run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PlacementPolicy {
+    /// `e % G` — standard expert parallelism; never re-plans.
+    #[default]
+    RoundRobin,
+    /// LPT bin-packing by measured per-window load.
+    LoadAware,
+    /// LPT plus weighted replication of the hottest experts.
+    Replicated,
+}
+
+/// Error of `PlacementPolicy::from_str`: carries the rejected name and
+/// renders the accepted set (mirrors
+/// [`crate::dispatch::ParsePolicyError`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParsePlacementError(pub String);
+
+impl std::fmt::Display for ParsePlacementError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "unknown placement policy '{}' (expected ", self.0)?;
+        for (i, p) in PlacementPolicy::ALL.iter().enumerate() {
+            if i > 0 {
+                write!(f, " | ")?;
+            }
+            write!(f, "{}", p.name())?;
+        }
+        write!(f, ")")
+    }
+}
+
+impl std::error::Error for ParsePlacementError {}
+
+impl std::str::FromStr for PlacementPolicy {
+    type Err = ParsePlacementError;
+
+    fn from_str(s: &str) -> Result<PlacementPolicy, ParsePlacementError> {
+        PlacementPolicy::parse(s)
+            .ok_or_else(|| ParsePlacementError(s.into()))
+    }
+}
+
+impl PlacementPolicy {
+    pub const ALL: [PlacementPolicy; 3] = [
+        PlacementPolicy::RoundRobin,
+        PlacementPolicy::LoadAware,
+        PlacementPolicy::Replicated,
+    ];
+
+    pub fn parse(s: &str) -> Option<PlacementPolicy> {
+        Some(match s {
+            "roundrobin" | "round-robin" | "rr" => {
+                PlacementPolicy::RoundRobin
+            }
+            "loadaware" | "load-aware" => PlacementPolicy::LoadAware,
+            "replicated" | "repl" => PlacementPolicy::Replicated,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PlacementPolicy::RoundRobin => "roundrobin",
+            PlacementPolicy::LoadAware => "loadaware",
+            PlacementPolicy::Replicated => "replicated",
+        }
+    }
+}
+
+/// Placement knob carried by `Engine::builder().placement(..)` and
+/// `DispatchSim::set_placement`: the planner to run plus its re-plan
+/// cadence and transfer-cost model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlacementConfig {
+    pub policy: PlacementPolicy,
+    /// How many of the hottest experts [`PlacementPolicy::Replicated`]
+    /// replicates.
+    pub hot_experts: usize,
+    /// Replicas per hot expert (clamped to the device count, min 2).
+    pub replicas: usize,
+    /// Steps between re-plans in the simulator (0 = never re-plan).
+    pub replan_every: usize,
+    /// Weight payload one expert moves in a migration, bytes.
+    pub bytes_per_expert: usize,
+    /// Transfer cost charged to step latency, microseconds per byte.
+    pub us_per_byte: f64,
+}
+
+impl Default for PlacementConfig {
+    fn default() -> Self {
+        PlacementConfig {
+            policy: PlacementPolicy::RoundRobin,
+            hot_experts: 4,
+            replicas: 2,
+            replan_every: 16,
+            // 64 KiB of expert weights over a ~100 GB/s interconnect.
+            bytes_per_expert: 1 << 16,
+            us_per_byte: 1e-5,
+        }
+    }
+}
+
+impl PlacementConfig {
+    /// Convenience constructor: default knobs under `policy`.
+    pub fn with_policy(policy: PlacementPolicy) -> Self {
+        PlacementConfig { policy, ..PlacementConfig::default() }
+    }
+}
+
+/// A concrete expert→device assignment: for every expert, the (sorted)
+/// list of hosting devices and the normalized routing weight of each
+/// replica. Unreplicated experts have exactly one host with weight 1.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExpertPlacement {
+    n_devices: usize,
+    /// `[E]` hosting-device lists, each sorted ascending, `len >= 1`.
+    replicas: Vec<Vec<usize>>,
+    /// `[E]` per-replica routing weights (same shape as `replicas`;
+    /// each list sums to 1).
+    weights: Vec<Vec<f64>>,
+}
+
+/// splitmix64-style avalanche — the deterministic replica hash.
+fn mix64(mut x: u64) -> u64 {
+    x ^= x >> 33;
+    x = x.wrapping_mul(0xff51_afd7_ed55_8ccd);
+    x ^= x >> 33;
+    x = x.wrapping_mul(0xc4ce_b9fe_1a85_ec53);
+    x ^ (x >> 33)
+}
+
+impl ExpertPlacement {
+    /// The standard expert-parallel layout: expert `e` on device
+    /// `e % n_devices`.
+    pub fn round_robin(n_experts: usize, n_devices: usize) -> Self {
+        ExpertPlacement {
+            n_devices,
+            replicas: (0..n_experts).map(|e| vec![e % n_devices]).collect(),
+            weights: vec![vec![1.0]; n_experts],
+        }
+    }
+
+    /// LPT greedy bin-packing: experts in descending load order, each
+    /// onto the currently least-loaded device (ties → lower id).
+    pub fn load_aware(load: &[f64], n_devices: usize) -> Self {
+        let n_experts = load.len();
+        let mut order: Vec<usize> = (0..n_experts).collect();
+        order.sort_by(|&a, &b| {
+            load[b].total_cmp(&load[a]).then(a.cmp(&b))
+        });
+        let mut dev_load = vec![0.0f64; n_devices];
+        let mut replicas = vec![Vec::new(); n_experts];
+        for &e in &order {
+            let d = (0..n_devices)
+                .min_by(|&a, &b| {
+                    dev_load[a].total_cmp(&dev_load[b]).then(a.cmp(&b))
+                })
+                .expect("n_devices >= 1");
+            dev_load[d] += load[e];
+            replicas[e] = vec![d];
+        }
+        ExpertPlacement {
+            n_devices,
+            replicas,
+            weights: vec![vec![1.0]; n_experts],
+        }
+    }
+
+    /// [`Self::load_aware`] plus replication of the `hot_experts`
+    /// hottest experts across `replicas` devices each (primary host +
+    /// the least-loaded others), with water-filled routing weights:
+    /// each replica's share is proportional to the gap between its
+    /// device's load and the hosts' common target, so the hosting
+    /// devices finish together.
+    pub fn replicated(
+        load: &[f64],
+        n_devices: usize,
+        hot_experts: usize,
+        replicas: usize,
+    ) -> Self {
+        let mut p = Self::load_aware(load, n_devices);
+        if n_devices < 2 || hot_experts == 0 {
+            return p;
+        }
+        let r = replicas.max(2).min(n_devices);
+        let mut dev_load = vec![0.0f64; n_devices];
+        for (e, &l) in load.iter().enumerate() {
+            dev_load[p.replicas[e][0]] += l;
+        }
+        let mut order: Vec<usize> = (0..load.len()).collect();
+        order.sort_by(|&a, &b| {
+            load[b].total_cmp(&load[a]).then(a.cmp(&b))
+        });
+        for &e in order.iter().take(hot_experts.min(load.len())) {
+            if load[e] <= 0.0 {
+                break; // nothing to split
+            }
+            let primary = p.replicas[e][0];
+            dev_load[primary] -= load[e];
+            let mut others: Vec<usize> =
+                (0..n_devices).filter(|&d| d != primary).collect();
+            others.sort_by(|&a, &b| {
+                dev_load[a].total_cmp(&dev_load[b]).then(a.cmp(&b))
+            });
+            let mut hosts = vec![primary];
+            hosts.extend(others.into_iter().take(r - 1));
+            // water-fill: weight each host by its gap to the common
+            // target load, clamp negatives (hosts already past the
+            // target take no share), renormalize
+            let base: Vec<f64> =
+                hosts.iter().map(|&d| dev_load[d]).collect();
+            let target = (base.iter().sum::<f64>() + load[e])
+                / hosts.len() as f64;
+            let mut w: Vec<f64> =
+                base.iter().map(|&b| (target - b).max(0.0)).collect();
+            let total: f64 = w.iter().sum();
+            if total > 0.0 {
+                for x in w.iter_mut() {
+                    *x /= total;
+                }
+            } else {
+                w = vec![1.0 / hosts.len() as f64; hosts.len()];
+            }
+            let mut pairs: Vec<(usize, f64)> = hosts
+                .into_iter()
+                .zip(w)
+                .filter(|&(_, wi)| wi > 1e-12)
+                .collect();
+            if pairs.is_empty() {
+                pairs.push((primary, 1.0));
+            }
+            let kept: f64 = pairs.iter().map(|&(_, wi)| wi).sum();
+            for (_, wi) in pairs.iter_mut() {
+                *wi /= kept;
+            }
+            pairs.sort_by_key(|&(d, _)| d);
+            for &(d, wi) in &pairs {
+                dev_load[d] += wi * load[e];
+            }
+            p.replicas[e] = pairs.iter().map(|&(d, _)| d).collect();
+            p.weights[e] = pairs.iter().map(|&(_, wi)| wi).collect();
+        }
+        p
+    }
+
+    /// Run the planner selected by `cfg.policy` on a measured load
+    /// vector.
+    pub fn plan(
+        cfg: &PlacementConfig,
+        load: &[f64],
+        n_devices: usize,
+    ) -> Self {
+        match cfg.policy {
+            PlacementPolicy::RoundRobin => {
+                Self::round_robin(load.len(), n_devices)
+            }
+            PlacementPolicy::LoadAware => {
+                Self::load_aware(load, n_devices)
+            }
+            PlacementPolicy::Replicated => Self::replicated(
+                load,
+                n_devices,
+                cfg.hot_experts,
+                cfg.replicas,
+            ),
+        }
+    }
+
+    pub fn n_experts(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.n_devices
+    }
+
+    /// The lowest-id device hosting expert `e`.
+    pub fn device_of(&self, e: usize) -> usize {
+        self.replicas[e][0]
+    }
+
+    /// All devices hosting expert `e` (sorted ascending).
+    pub fn replicas_of(&self, e: usize) -> &[usize] {
+        &self.replicas[e]
+    }
+
+    /// Normalized routing weights matching [`Self::replicas_of`].
+    pub fn weights_of(&self, e: usize) -> &[f64] {
+        &self.weights[e]
+    }
+
+    /// The device serving assignment `(token_slot, expert)` at `step` —
+    /// a **pure function** of its arguments (plus this placement), so
+    /// replica routing is deterministic and independent of thread
+    /// count, backend, and scheduler timing. The hash value is mapped
+    /// through the replica weights' cumulative distribution, so over
+    /// many slots each replica serves its weight's share of the load.
+    pub fn replica_for(
+        &self,
+        token_slot: usize,
+        expert: usize,
+        step: u64,
+    ) -> usize {
+        let reps = &self.replicas[expert];
+        if reps.len() == 1 {
+            return reps[0];
+        }
+        let h = mix64(
+            (token_slot as u64)
+                ^ (expert as u64).rotate_left(21)
+                ^ step.rotate_left(42),
+        );
+        // 53 uniform mantissa bits -> u in [0, 1)
+        let u = (h >> 11) as f64 / (1u64 << 53) as f64;
+        let ws = &self.weights[expert];
+        let mut acc = 0.0f64;
+        for (i, &w) in ws.iter().enumerate() {
+            acc += w;
+            if u < acc {
+                return reps[i];
+            }
+        }
+        reps[reps.len() - 1]
+    }
+
+    /// Split post-policy per-expert token counts over devices into
+    /// `per_device` (cleared first). Single-host experts contribute
+    /// their whole count to their host; replicated experts assign each
+    /// of their `cnt` token slots through [`Self::replica_for`]`(slot,
+    /// e, step)` — deterministic, and conserving `sum(counts)` exactly.
+    pub fn device_counts(
+        &self,
+        counts: &[u32],
+        step: u64,
+        per_device: &mut [u32],
+    ) {
+        assert_eq!(counts.len(), self.n_experts());
+        assert_eq!(per_device.len(), self.n_devices);
+        per_device.fill(0);
+        for (e, &cnt) in counts.iter().enumerate() {
+            let reps = &self.replicas[e];
+            if reps.len() == 1 {
+                per_device[reps[0]] += cnt;
+            } else {
+                for slot in 0..cnt as usize {
+                    per_device[self.replica_for(slot, e, step)] += 1;
+                }
+            }
+        }
+    }
+
+    /// Projected straggler load: the max over devices of the weighted
+    /// expert load assigned to it (in `load`'s unit — tokens per step
+    /// when fed a per-step average window). The simulator's adoption
+    /// guard converts this to microseconds via its `beta_us`.
+    pub fn makespan_tokens(&self, load: &[f64]) -> f64 {
+        let mut dev = vec![0.0f64; self.n_devices];
+        for (e, &l) in load.iter().enumerate() {
+            for (ri, &d) in self.replicas[e].iter().enumerate() {
+                dev[d] += self.weights[e][ri] * l;
+            }
+        }
+        dev.iter().cloned().fold(0.0, f64::max)
+    }
+}
+
+/// Transfer volume of switching `old` → `new`: one `bytes_per_expert`
+/// payload for every (expert, device) pair hosted by `new` but not by
+/// `old`. Dropping a replica is free (no data moves); weight-only
+/// changes on an existing host are free too.
+pub fn migration_bytes(
+    old: &ExpertPlacement,
+    new: &ExpertPlacement,
+    bytes_per_expert: usize,
+) -> u64 {
+    assert_eq!(
+        old.n_experts(),
+        new.n_experts(),
+        "placements cover different expert counts"
+    );
+    let mut moved = 0u64;
+    for e in 0..new.n_experts() {
+        for d in new.replicas_of(e) {
+            if !old.replicas_of(e).contains(d) {
+                moved += 1;
+            }
+        }
+    }
+    moved * bytes_per_expert as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn policy_parse_roundtrips() {
+        for p in PlacementPolicy::ALL {
+            assert_eq!(PlacementPolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(
+            PlacementPolicy::parse("rr"),
+            Some(PlacementPolicy::RoundRobin)
+        );
+        assert_eq!(PlacementPolicy::parse("nope"), None);
+        let err = "nope".parse::<PlacementPolicy>().unwrap_err();
+        assert!(err.to_string().contains("roundrobin"), "{err}");
+        assert!(err.to_string().contains("replicated"), "{err}");
+    }
+
+    #[test]
+    fn round_robin_matches_modulo_layout() {
+        let p = ExpertPlacement::round_robin(10, 4);
+        for e in 0..10 {
+            assert_eq!(p.replicas_of(e), &[e % 4]);
+            assert_eq!(p.weights_of(e), &[1.0]);
+            assert_eq!(p.replica_for(7, e, 3), e % 4);
+        }
+    }
+
+    /// Hand-computed LPT: loads [10, 1, 1, 1] on 2 devices isolate the
+    /// hot expert; round-robin pairs it with another expert.
+    #[test]
+    fn lpt_isolates_the_hot_expert() {
+        let load = [10.0, 1.0, 1.0, 1.0];
+        let p = ExpertPlacement::load_aware(&load, 2);
+        assert_eq!(p.replicas_of(0), &[0]);
+        assert_eq!(p.replicas_of(1), &[1]);
+        assert_eq!(p.replicas_of(2), &[1]);
+        assert_eq!(p.replicas_of(3), &[1]);
+        assert_eq!(p.makespan_tokens(&load), 10.0);
+        let rr = ExpertPlacement::round_robin(4, 2);
+        assert_eq!(rr.makespan_tokens(&load), 11.0); // e0 + e2
+    }
+
+    /// Replication splits the hot expert across both devices with
+    /// water-filled weights: device 1 already carries 3.0, so device 0
+    /// takes (target − 0) = 6.5 of the 10.0 and device 1 takes 3.5.
+    #[test]
+    fn replication_water_fills_the_hot_expert() {
+        let load = [10.0, 1.0, 1.0, 1.0];
+        let p = ExpertPlacement::replicated(&load, 2, 1, 2);
+        assert_eq!(p.replicas_of(0), &[0, 1]);
+        let w = p.weights_of(0);
+        assert!((w[0] - 0.65).abs() < 1e-12, "{w:?}");
+        assert!((w[1] - 0.35).abs() < 1e-12, "{w:?}");
+        // both devices land exactly on the target
+        assert!((p.makespan_tokens(&load) - 6.5).abs() < 1e-12);
+        // the cold experts stay single-host
+        for e in 1..4 {
+            assert_eq!(p.replicas_of(e).len(), 1);
+        }
+    }
+
+    #[test]
+    fn replica_for_is_deterministic_and_weight_respecting() {
+        let load = [10.0, 1.0, 1.0, 1.0];
+        let p = ExpertPlacement::replicated(&load, 2, 1, 2);
+        let mut on0 = 0usize;
+        for slot in 0..10_000 {
+            let d = p.replica_for(slot, 0, 5);
+            assert_eq!(d, p.replica_for(slot, 0, 5), "pure function");
+            assert!(p.replicas_of(0).contains(&d));
+            if d == 0 {
+                on0 += 1;
+            }
+        }
+        // weight 0.65 ± a few percent over 10k hashed slots
+        let frac = on0 as f64 / 10_000.0;
+        assert!((frac - 0.65).abs() < 0.03, "replica split {frac}");
+        // a different step re-shuffles at least one slot
+        assert!(
+            (0..64).any(|s| p.replica_for(s, 0, 5) != p.replica_for(s, 0, 6)),
+            "step must enter the hash"
+        );
+    }
+
+    #[test]
+    fn planner_weights_always_normalize_and_conserve() {
+        forall(
+            24,
+            4242,
+            |rng| {
+                let e = 2 + rng.below(62);
+                let g = (1 + rng.below(8)).min(e);
+                let load: Vec<f64> =
+                    (0..e).map(|_| rng.range_f64(0.0, 100.0)).collect();
+                let hot = rng.below(6);
+                let reps = 2 + rng.below(3);
+                (load, g, hot, reps)
+            },
+            |(load, g, hot, reps)| {
+                for cfg in [
+                    PlacementConfig::with_policy(PlacementPolicy::RoundRobin),
+                    PlacementConfig {
+                        policy: PlacementPolicy::LoadAware,
+                        ..PlacementConfig::default()
+                    },
+                    PlacementConfig {
+                        policy: PlacementPolicy::Replicated,
+                        hot_experts: *hot,
+                        replicas: *reps,
+                        ..PlacementConfig::default()
+                    },
+                ] {
+                    let p = ExpertPlacement::plan(&cfg, load, *g);
+                    for e in 0..load.len() {
+                        let reps = p.replicas_of(e);
+                        if reps.is_empty() {
+                            return Err(format!("expert {e} unhosted"));
+                        }
+                        if reps.windows(2).any(|w| w[0] >= w[1]) {
+                            return Err(format!(
+                                "hosts of {e} not sorted: {reps:?}"
+                            ));
+                        }
+                        if reps.iter().any(|&d| d >= *g) {
+                            return Err("device out of range".into());
+                        }
+                        let sum: f64 = p.weights_of(e).iter().sum();
+                        if (sum - 1.0).abs() > 1e-9 {
+                            return Err(format!(
+                                "weights of {e} sum to {sum}"
+                            ));
+                        }
+                    }
+                    // weighted makespan never exceeds putting
+                    // everything on one device
+                    let total: f64 = load.iter().sum();
+                    if p.makespan_tokens(load) > total + 1e-9 {
+                        return Err("makespan exceeds total".into());
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Token conservation under replication: however the hashed
+    /// replica choice lands, every token slot is served on exactly one
+    /// device — the per-device counts sum back to the expert counts.
+    #[test]
+    fn device_counts_conserve_tokens_under_replication() {
+        forall(
+            32,
+            777,
+            |rng| {
+                let e = 2 + rng.below(62);
+                let g = (2 + rng.below(7)).min(e);
+                let load: Vec<f64> =
+                    (0..e).map(|_| rng.range_f64(0.0, 50.0)).collect();
+                let counts: Vec<u32> =
+                    (0..e).map(|_| rng.below(200) as u32).collect();
+                let step = rng.below(1000) as u64;
+                (load, counts, g, step)
+            },
+            |(load, counts, g, step)| {
+                let p = ExpertPlacement::replicated(load, *g, 6, 3);
+                let mut per_device = vec![0u32; *g];
+                p.device_counts(counts, *step, &mut per_device);
+                let total: u64 =
+                    counts.iter().map(|&c| c as u64).sum();
+                let placed: u64 =
+                    per_device.iter().map(|&c| c as u64).sum();
+                if total != placed {
+                    return Err(format!(
+                        "placed {placed} of {total} tokens"
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Hand-computed migration: round-robin [e0,e2→d0; e1,e3→d1] to
+    /// the LPT plan for loads [10,1,1,1] ([e0→d0; e1,e2,e3→d1]) moves
+    /// exactly one expert (e2 gains host d1).
+    #[test]
+    fn migration_counts_only_new_hosts() {
+        let load = [10.0, 1.0, 1.0, 1.0];
+        let rr = ExpertPlacement::round_robin(4, 2);
+        let lpt = ExpertPlacement::load_aware(&load, 2);
+        assert_eq!(migration_bytes(&rr, &lpt, 1000), 1000);
+        // identical placements move nothing; direction matters
+        assert_eq!(migration_bytes(&lpt, &lpt, 1000), 0);
+        assert_eq!(migration_bytes(&lpt, &rr, 1000), 1000);
+        // replication adds one more host (e0 gains d1) on top of e2
+        let rep = ExpertPlacement::replicated(&load, 2, 1, 2);
+        assert_eq!(migration_bytes(&rr, &rep, 1000), 2000);
+        // dropping a replica is free
+        assert_eq!(migration_bytes(&rep, &lpt, 1000), 0);
+    }
+}

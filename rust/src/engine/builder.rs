@@ -33,6 +33,7 @@
 //! # Ok::<(), lpr::engine::EngineBuildError>(())
 //! ```
 
+use crate::dispatch::placement::{PlacementConfig, PlacementPolicy};
 use crate::dispatch::plan::OverflowPolicy;
 use crate::experts::ExpertBank;
 use crate::kernels::{Kernel, WeightDtype};
@@ -110,6 +111,12 @@ pub enum EngineBuildError {
     /// expert bin to the minimum regardless of batch size — always a
     /// misconfiguration, never an intent).
     BadCapacityFactor(f64),
+    /// More devices (or pool workers, with a placement planner
+    /// engaged) than experts — expert-parallel placement needs at
+    /// least one expert per device. Also raised by
+    /// [`crate::dispatch::DispatchSim::new`], which used to panic on
+    /// this instead.
+    DevicesExceedExperts { n_experts: usize, n_devices: usize },
 }
 
 impl std::fmt::Display for EngineBuildError {
@@ -162,6 +169,15 @@ impl std::fmt::Display for EngineBuildError {
                 f,
                 "capacity factor must be finite and > 0, got {cf}"
             ),
+            EngineBuildError::DevicesExceedExperts {
+                n_experts,
+                n_devices,
+            } => write!(
+                f,
+                "{n_devices} devices exceed {n_experts} experts — \
+                 expert-parallel placement needs at least one expert \
+                 per device"
+            ),
         }
     }
 }
@@ -182,6 +198,7 @@ pub struct EngineBuilder {
     renormalize: bool,
     kernel: Kernel,
     weight_dtype: WeightDtype,
+    placement: PlacementConfig,
 }
 
 impl EngineBuilder {
@@ -259,6 +276,25 @@ impl EngineBuilder {
         self
     }
 
+    /// Expert→worker placement policy for the pool backend (default
+    /// round-robin — the historical layout, bit-identical to every
+    /// pre-placement pin). `LoadAware` re-partitions each batch's
+    /// expert buckets onto workers by LPT over the measured load
+    /// window; [`PlacementPolicy::Replicated`] additionally
+    /// splits the hottest experts' rows across workers with the
+    /// deterministic `(token_slot, expert, step)` replica hash. Either
+    /// way the combined outputs stay bit-identical to round-robin —
+    /// every grouped row's FFN output depends only on its own input
+    /// row — so this knob moves wall time, never results. The scoped
+    /// backend (fresh threads per batch, no persistent worker↔expert
+    /// affinity) accepts the knob and keeps its per-batch contiguous
+    /// split: it is the bit-identity oracle the pool is checked
+    /// against.
+    pub fn placement(mut self, placement: PlacementConfig) -> EngineBuilder {
+        self.placement = placement;
+        self
+    }
+
     /// Validate the configuration and construct the backend. The only
     /// place in the crate where backends are built for scenario code.
     pub fn build(self) -> Result<Engine, EngineBuildError> {
@@ -295,6 +331,21 @@ impl EngineBuilder {
         if !cf.is_finite() || cf <= 0.0 {
             return Err(EngineBuildError::BadCapacityFactor(cf));
         }
+        if self.placement.policy != PlacementPolicy::RoundRobin {
+            // a placement planner needs at least one expert per worker
+            // "device" on every layer it packs
+            let workers = backend.parallelism();
+            if let Some(min_e) =
+                model.layers().iter().map(|l| l.plan.cfg.n_experts).min()
+            {
+                if min_e < workers {
+                    return Err(EngineBuildError::DevicesExceedExperts {
+                        n_experts: min_e,
+                        n_devices: workers,
+                    });
+                }
+            }
+        }
         // Quantize once at build time so the serving hot loop only ever
         // sees a bank in its final storage dtype. `quantized` is a
         // no-op clone for matching dtypes, so f32 stays zero-cost.
@@ -323,14 +374,18 @@ impl EngineBuilder {
                 self.renormalize,
                 self.kernel,
             )),
-            Backend::Pool { workers } => Box::new(PoolBackend::new(
-                model,
-                workers,
-                cf,
-                self.policy,
-                self.renormalize,
-                self.kernel,
-            )),
+            Backend::Pool { workers } => {
+                let mut pool = PoolBackend::new(
+                    model,
+                    workers,
+                    cf,
+                    self.policy,
+                    self.renormalize,
+                    self.kernel,
+                );
+                pool.set_placement(self.placement.clone());
+                Box::new(pool)
+            }
         };
         Ok(Engine::from_parts(inner, backend, cf, self.policy))
     }

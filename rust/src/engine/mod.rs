@@ -66,6 +66,7 @@ pub mod builder;
 
 pub use builder::{Backend, EngineBuildError, EngineBuilder};
 
+use crate::dispatch::placement::PlacementConfig;
 use crate::dispatch::plan::OverflowPolicy;
 use crate::kernels::Kernel;
 use crate::metrics::LayerLoadTracker;
@@ -255,6 +256,13 @@ impl PoolBackend {
         let mut out = ModelForward::new();
         out.ensure_layers(pool.n_layers());
         PoolBackend { pool, capacity_factor, policy, out }
+    }
+
+    /// Forward the builder's `.placement(..)` knob to the pool's
+    /// expert-stage partitioner (see
+    /// [`PoolEngine::set_placement`](crate::serve::PoolEngine::set_placement)).
+    pub(crate) fn set_placement(&mut self, cfg: PlacementConfig) {
+        self.pool.set_placement(cfg);
     }
 }
 
@@ -724,6 +732,77 @@ mod tests {
         assert_eq!(boxed.d_model(), D);
         let h = vec![0.1f32; 4 * D];
         assert_eq!(boxed.forward(&h, 4).hidden.len(), 4 * D);
+    }
+
+    /// Satellite: the `.placement(..)` knob — more devices than experts
+    /// under a non-trivial placement is a typed builder error (through
+    /// the crate-level `Error` too), the round-robin default never
+    /// triggers it, and with placement engaged the facade stays
+    /// bit-identical across backends and worker counts.
+    #[test]
+    fn placement_knob_validates_and_stays_bit_identical() {
+        use crate::dispatch::{PlacementConfig, PlacementPolicy};
+        let err = Engine::builder()
+            .model(tiny_model(1))
+            .backend(Backend::Pool { workers: E + 2 })
+            .placement(PlacementConfig::with_policy(
+                PlacementPolicy::LoadAware,
+            ))
+            .build()
+            .unwrap_err();
+        assert_eq!(
+            err,
+            EngineBuildError::DevicesExceedExperts {
+                n_experts: E,
+                n_devices: E + 2,
+            }
+        );
+        assert!(err.to_string().contains("devices exceed"), "{err}");
+        let shared: crate::Error = err.into();
+        assert!(shared.to_string().contains("engine configuration"));
+        // the round-robin default builds fine at the same worker count
+        assert!(Engine::builder()
+            .model(tiny_model(1))
+            .backend(Backend::Pool { workers: E + 2 })
+            .build()
+            .is_ok());
+        // placement moves wall time, never bytes: every policy ×
+        // backend × parallelism equals the no-knob oracle
+        let mut rng = Rng::new(41);
+        let model = tiny_model(2);
+        let h = rand_vec(&mut rng, 37 * D);
+        let want = build(
+            model.clone(),
+            Backend::Scoped { threads: 2 },
+            OverflowPolicy::Drop,
+            1.25,
+        )
+        .forward(&h, 37)
+        .hidden
+        .to_vec();
+        for policy in
+            [PlacementPolicy::LoadAware, PlacementPolicy::Replicated]
+        {
+            for backend in [
+                Backend::Scoped { threads: 3 },
+                Backend::Pool { workers: 2 },
+                Backend::Pool { workers: 3 },
+            ] {
+                let mut eng = Engine::builder()
+                    .model(model.clone())
+                    .backend(backend)
+                    .capacity_factor(1.25)
+                    .placement(PlacementConfig::with_policy(policy))
+                    .build()
+                    .unwrap();
+                assert_eq!(
+                    eng.forward(&h, 37).hidden.to_vec(),
+                    want,
+                    "{backend:?} {} diverged with placement engaged",
+                    policy.name()
+                );
+            }
+        }
     }
 
     /// Tentpole: the builder's `.kernel(..)` knob. The default (Naive)

@@ -20,6 +20,7 @@
 //! assert!(std::error::Error::source(&err).is_some());
 //! ```
 
+use crate::dispatch::placement::ParsePlacementError;
 use crate::dispatch::plan::ParsePolicyError;
 use crate::engine::EngineBuildError;
 use crate::serve::SubmitError;
@@ -38,6 +39,9 @@ pub enum Error {
     /// Unrecognized overflow-policy name
     /// ([`crate::dispatch::ParsePolicyError`]).
     Policy(ParsePolicyError),
+    /// Unrecognized placement-policy name
+    /// ([`crate::dispatch::ParsePlacementError`]).
+    Placement(ParsePlacementError),
     /// Checkpoint / bridge / artifact IO or format failure (the
     /// `anyhow` chains of `coordinator::checkpoint`, `model::bridge`,
     /// and `runtime`).
@@ -50,6 +54,7 @@ impl std::fmt::Display for Error {
             Error::Build(e) => write!(f, "engine configuration: {e}"),
             Error::Submit(e) => write!(f, "request submission: {e}"),
             Error::Policy(e) => write!(f, "{e}"),
+            Error::Placement(e) => write!(f, "{e}"),
             Error::Artifact(e) => write!(f, "{e:#}"),
         }
     }
@@ -61,6 +66,7 @@ impl std::error::Error for Error {
             Error::Build(e) => Some(e),
             Error::Submit(e) => Some(e),
             Error::Policy(e) => Some(e),
+            Error::Placement(e) => Some(e),
             Error::Artifact(e) => Some(e.as_ref()),
         }
     }
@@ -84,6 +90,12 @@ impl From<ParsePolicyError> for Error {
     }
 }
 
+impl From<ParsePlacementError> for Error {
+    fn from(e: ParsePlacementError) -> Error {
+        Error::Placement(e)
+    }
+}
+
 impl From<anyhow::Error> for Error {
     fn from(e: anyhow::Error) -> Error {
         Error::Artifact(e)
@@ -101,6 +113,7 @@ mod tests {
             SubmitError::Full.into(),
             SubmitError::TooLarge.into(),
             ParsePolicyError("bogus".into()).into(),
+            ParsePlacementError("nowhere".into()).into(),
             anyhow::anyhow!("artifact exploded").into(),
         ];
         for e in &cases {
@@ -114,6 +127,8 @@ mod tests {
         }
         assert!(cases[3].to_string().contains("bogus"));
         assert!(cases[3].to_string().contains("least-loaded"));
+        assert!(cases[4].to_string().contains("nowhere"));
+        assert!(cases[4].to_string().contains("loadaware"));
     }
 
     #[test]

@@ -5,8 +5,8 @@
 //!   eval <preset> --ckpt  evaluate a checkpoint
 //!   repro <exp>           reproduce a paper table/figure
 //!                         (t1..t7, fig1, fig3, fig4, dispatch,
-//!                          dispatch-routed, dispatch-policies, serve,
-//!                          dispatch-replay, all)
+//!                          dispatch-routed, dispatch-policies,
+//!                          placement, serve, dispatch-replay, all)
 //!   dispatch-sim          run the expert-parallel dispatch simulator;
 //!                         --routed drives it from the compiled routing
 //!                         engine (--threads shards the batch)
@@ -25,6 +25,8 @@
 //!   route <preset>        run the standalone router artifact and print
 //!                         the specialization proxy; `route synthetic`
 //!                         runs the pure-Rust serving engine instead
+//!   bench-tables          render BENCH_*.json perf artifacts into the
+//!                         ROADMAP perf-trajectory markdown tables
 //!   list                  list artifacts present in the artifacts dir
 //!
 //! Global options: --artifacts DIR, --out DIR, --steps N, --seed N.
@@ -36,7 +38,8 @@ use lpr::coordinator::{checkpoint, Trainer};
 use lpr::data::{MixtureStream, ZipfMarkovCorpus};
 use lpr::dispatch::{
     run_full_steps, run_routed_steps, synthetic_assignments,
-    DispatchPlan, DispatchSim, OverflowPolicy, SimConfig,
+    DispatchPlan, DispatchSim, OverflowPolicy, PlacementConfig,
+    PlacementPolicy, SimConfig,
 };
 use lpr::engine::{Backend, Engine, MoeEngine};
 use lpr::experts::ExpertBank;
@@ -70,11 +73,13 @@ USAGE:
                 [--dmodel D] [--dff F] [--threads N] [--policy P]
                 [--steps N] [--tokens N] [--cf F] [--devices N]
   lpr repro <t1|t2|t3|t4|t5|t6|t7|fig1|fig3|fig4|dispatch
-            |dispatch-routed|dispatch-policies|serve|model-serve
-            |dispatch-replay|all> [--steps N]
+            |dispatch-routed|dispatch-policies|placement|serve
+            |model-serve|dispatch-replay|all> [--steps N]
   lpr dispatch-sim [--experts N] [--devices N] [--topk K] [--skew S]
                    [--cf F] [--steps N] [--threads N] [--metric M]
                    [--policy P] [--routed] [--full] [--renormalize]
+                   [--placement P] [--replan N] [--hot N] [--replicas N]
+  lpr bench-tables [--dir DIR] [--out FILE]
   lpr serve-bench [--metric M] [--experts N] [--topk K] [--dmodel D]
                   [--dff F] [--workers N] [--policy P] [--rate TOK/S]
                   [--requests N] [--req-tokens N] [--max-batch N]
@@ -90,6 +95,12 @@ Options:
   --routed          dispatch-sim: drive the simulator from the compiled
                     routing engine on clustered tokens instead of
                     synthetic Zipf assignments
+  --placement P     dispatch-sim: expert-placement planner:
+                    roundrobin | loadaware | replicated (default
+                    roundrobin = standard expert parallelism)
+  --replan N        dispatch-sim: steps between placement re-plans
+                    (default 16); --hot/--replicas size the replicated
+                    planner's hot set
   --full            dispatch-sim: with --routed, run the real expert
                     FFN path (route -> plan -> compute -> combine)
                     instead of the latency model alone
@@ -141,6 +152,7 @@ fn run(args: &Args) -> Result<()> {
         "model-sim" => cmd_model_sim(args),
         "dispatch-sim" => cmd_dispatch_sim(args),
         "serve-bench" => cmd_serve_bench(args),
+        "bench-tables" => cmd_bench_tables(args),
         "list" => cmd_list(args),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
@@ -332,6 +344,7 @@ fn cmd_repro(args: &Args) -> Result<()> {
         "dispatch"
             | "dispatch-routed"
             | "dispatch-policies"
+            | "placement"
             | "serve"
             | "model-serve"
     );
@@ -355,6 +368,7 @@ fn cmd_repro(args: &Args) -> Result<()> {
         "dispatch" => rep.dispatch_report()?,
         "dispatch-routed" => rep.dispatch_routed()?,
         "dispatch-policies" => rep.dispatch_policies()?,
+        "placement" => rep.placement()?,
         "serve" => rep.serve_table()?,
         "model-serve" => rep.model_serve_table()?,
         "dispatch-replay" => rep.dispatch_replay()?,
@@ -368,6 +382,21 @@ fn parse_policy(args: &Args, default: &str) -> Result<OverflowPolicy> {
     // ParsePolicyError renders the accepted set itself — no
     // hand-assembled message here
     Ok(args.opt_or("policy", default).parse::<OverflowPolicy>()?)
+}
+
+/// `--placement/--replan/--hot/--replicas` into a [`PlacementConfig`];
+/// a bad `--placement` surfaces the typed [`lpr::Error`] (which renders
+/// the accepted planner set itself).
+fn parse_placement(args: &Args) -> Result<PlacementConfig> {
+    let policy = args
+        .opt_or("placement", "roundrobin")
+        .parse::<PlacementPolicy>()
+        .map_err(lpr::Error::from)?;
+    let mut cfg = PlacementConfig::with_policy(policy);
+    cfg.replan_every = args.opt_usize("replan", cfg.replan_every);
+    cfg.hot_experts = args.opt_usize("hot", cfg.hot_experts);
+    cfg.replicas = args.opt_usize("replicas", cfg.replicas);
+    Ok(cfg)
 }
 
 /// Build the model stack `serve`/`model-sim` operate on: a training
@@ -562,7 +591,7 @@ fn cmd_model_sim(args: &Args) -> Result<()> {
         .capacity_factor(cfg.capacity_factor)
         .renormalize(args.has_flag("renormalize"))
         .build()?;
-    let mut sim = DispatchSim::new_layered(cfg, n_layers);
+    let mut sim = DispatchSim::new_layered(cfg, n_layers)?;
     let mut rng = Rng::new(seed);
     let mix = MixtureStream::skewed(&mut rng, d, 1.6);
     let fwd_ns =
@@ -608,8 +637,10 @@ fn cmd_dispatch_sim(args: &Args) -> Result<()> {
     let routed = args.has_flag("routed") || args.opt("routed").is_some();
     let full = args.has_flag("full") || args.opt("full").is_some();
     let policy = parse_policy(args, "drop")?;
+    let placement = parse_placement(args)?;
     let (e, k, cf) = (cfg.n_experts, cfg.top_k, cfg.capacity_factor);
-    let mut sim = DispatchSim::new(cfg);
+    let mut sim = DispatchSim::new(cfg)?;
+    sim.set_placement(placement);
     let mut rng = Rng::new(args.opt_usize("seed", 7) as u64);
     let t0 = std::time::Instant::now();
     if routed {
@@ -692,6 +723,104 @@ fn cmd_dispatch_sim(args: &Args) -> Result<()> {
         r.utilization,
         r.stall_frac
     );
+    if r.placement != "roundrobin" {
+        println!(
+            "  placement {}: {} replans, {:.0} KiB migrated \
+             ({:.1} us charged to step latency)",
+            r.placement,
+            r.replans,
+            r.migrated_bytes as f64 / 1024.0,
+            r.migration_us
+        );
+    }
+    Ok(())
+}
+
+/// Render downloaded `BENCH_*.json` perf artifacts (the bench-smoke CI
+/// uploads) into the markdown tables the ROADMAP perf-trajectory
+/// section tracks across PRs. Missing files are skipped with a note so
+/// one command works on any subset of artifacts.
+fn cmd_bench_tables(args: &Args) -> Result<()> {
+    const BENCH_FILES: &[&str] = &[
+        "BENCH_router.json",
+        "BENCH_dispatch.json",
+        "BENCH_serve.json",
+        "BENCH_model.json",
+        "BENCH_engine.json",
+        "BENCH_gemm.json",
+        "BENCH_placement.json",
+    ];
+    let dir = PathBuf::from(args.opt_or("dir", "."));
+    let mut md = String::new();
+    let mut rendered = 0usize;
+    for file in BENCH_FILES {
+        let path = dir.join(file);
+        let Ok(text) = std::fs::read_to_string(&path) else {
+            eprintln!("note: {} not found, skipped", path.display());
+            continue;
+        };
+        let json = lpr::util::json::Json::parse(&text)
+            .with_context(|| format!("parse {}", path.display()))?;
+        let lpr::util::json::Json::Arr(rows) = &json else {
+            bail!("{}: expected a top-level array", path.display());
+        };
+        // column set = union of keys over all rows ("name" first,
+        // the rest in BTreeMap order — stable across runs)
+        let mut cols: Vec<String> = Vec::new();
+        for row in rows {
+            if let lpr::util::json::Json::Obj(m) = row {
+                for key in m.keys() {
+                    if !cols.contains(key) {
+                        cols.push(key.clone());
+                    }
+                }
+            }
+        }
+        cols.sort();
+        if let Some(i) = cols.iter().position(|c| c == "name") {
+            let name = cols.remove(i);
+            cols.insert(0, name);
+        }
+        let headers: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+        let mut t = lpr::util::table::Table::new(file, &headers);
+        for row in rows {
+            let cells = cols
+                .iter()
+                .map(|c| match row.get(c) {
+                    Some(lpr::util::json::Json::Str(s)) => s.clone(),
+                    Some(lpr::util::json::Json::Num(x)) => {
+                        if x.fract() == 0.0 && x.abs() < 1e15 {
+                            format!("{}", *x as i64)
+                        } else {
+                            format!("{x}")
+                        }
+                    }
+                    Some(lpr::util::json::Json::Bool(b)) => b.to_string(),
+                    Some(other) => format!("{other:?}"),
+                    None => "-".to_string(),
+                })
+                .collect();
+            t.row(cells);
+        }
+        md.push_str(&t.to_markdown());
+        md.push('\n');
+        rendered += 1;
+    }
+    if rendered == 0 {
+        bail!(
+            "no BENCH_*.json artifacts in {} — run `cargo bench --bench \
+             micro` or download the bench-smoke CI artifacts first",
+            dir.display()
+        );
+    }
+    match args.opt("out") {
+        Some(out) => {
+            std::fs::write(out, &md)
+                .with_context(|| format!("write {out}"))?;
+            eprintln!("wrote {rendered} tables to {out}");
+        }
+        None => print!("{md}"),
+    }
     Ok(())
 }
 

@@ -183,15 +183,23 @@ impl LoadMatrix {
 /// million tokens and collapsed afterwards still looks fine on the
 /// cumulative Gini).
 ///
-/// `push` is O(E) (ring-buffer overwrite); the windowed metrics
-/// recompute the per-expert sums from the ring on demand, so they are
-/// exact — no incremental add/subtract float drift.
+/// `push` is O(E) (ring-buffer overwrite plus an incremental update of
+/// the per-expert column sums: subtract the evicted ring row, add the
+/// new one), so windowed Gini / min-max / CV reads are O(E) instead of
+/// an O(window·E) recompute. The sums accumulate in f64 — every f32
+/// load value is exactly representable there, so add/subtract cancels
+/// exactly for realistic token counts — and every windowed read
+/// debug-asserts the incremental sums against the exact from-the-ring
+/// recompute (`incremental_window_sums_never_drift` pins the parity
+/// across thousands of mixed pushes in release mode too).
 #[derive(Debug, Clone)]
 pub struct LoadTracker {
     window: usize,
     n_experts: usize,
     /// [window * n_experts] ring of per-step load rows.
     ring: Vec<f32>,
+    /// [n_experts] incremental column sums over the live ring rows.
+    sums: Vec<f64>,
     /// Next write slot in [0, window).
     head: usize,
     /// Filled rows (saturates at `window`).
@@ -207,6 +215,7 @@ impl LoadTracker {
             window,
             n_experts,
             ring: vec![0.0; window * n_experts],
+            sums: vec![0.0; n_experts],
             head: 0,
             len: 0,
             total_steps: 0,
@@ -236,8 +245,17 @@ impl LoadTracker {
     pub fn push(&mut self, step_load: &[f32]) {
         assert_eq!(step_load.len(), self.n_experts, "load row shape");
         let e = self.n_experts;
-        self.ring[self.head * e..(self.head + 1) * e]
-            .copy_from_slice(step_load);
+        let row = &mut self.ring[self.head * e..(self.head + 1) * e];
+        if self.len == self.window {
+            // evicting: subtract the overwritten row from the sums
+            for (s, &old) in self.sums.iter_mut().zip(row.iter()) {
+                *s -= old as f64;
+            }
+        }
+        row.copy_from_slice(step_load);
+        for (s, &v) in self.sums.iter_mut().zip(step_load) {
+            *s += v as f64;
+        }
         self.head = (self.head + 1) % self.window;
         self.len = (self.len + 1).min(self.window);
         self.total_steps += 1;
@@ -247,11 +265,17 @@ impl LoadTracker {
     pub fn push_counts(&mut self, counts: &[u32]) {
         assert_eq!(counts.len(), self.n_experts, "load row shape");
         let e = self.n_experts;
-        for (slot, &c) in self.ring[self.head * e..(self.head + 1) * e]
-            .iter_mut()
-            .zip(counts)
+        let row = &mut self.ring[self.head * e..(self.head + 1) * e];
+        if self.len == self.window {
+            for (s, &old) in self.sums.iter_mut().zip(row.iter()) {
+                *s -= old as f64;
+            }
+        }
+        for ((slot, s), &c) in
+            row.iter_mut().zip(&mut self.sums).zip(counts)
         {
             *slot = c as f32;
+            *s += c as f64;
         }
         self.head = (self.head + 1) % self.window;
         self.len = (self.len + 1).min(self.window);
@@ -259,14 +283,33 @@ impl LoadTracker {
     }
 
     /// Per-expert load summed over the window, into a reusable buffer.
+    /// O(E): reads the incrementally-maintained column sums.
     pub fn windowed_into(&self, out: &mut Vec<f32>) {
         out.clear();
-        out.resize(self.n_experts, 0.0);
+        out.extend(self.sums.iter().map(|&s| s as f32));
+        debug_assert!(
+            {
+                let exact = self.windowed_exact();
+                self.sums.iter().zip(&exact).all(|(&s, &x)| {
+                    (s - x).abs() <= 1e-6 * x.abs().max(1.0)
+                })
+            },
+            "incremental window sums drifted from the exact recompute"
+        );
+    }
+
+    /// Exact per-expert window sums recomputed from the ring — the
+    /// O(window·E) reference the incremental `sums` are checked against
+    /// (debug assertion in [`Self::windowed_into`] plus the
+    /// `incremental_window_sums_never_drift` regression test).
+    fn windowed_exact(&self) -> Vec<f64> {
+        let mut out = vec![0.0f64; self.n_experts];
         for row in self.ring.chunks(self.n_experts).take(self.len) {
             for (acc, &v) in out.iter_mut().zip(row) {
-                *acc += v;
+                *acc += v as f64;
             }
         }
+        out
     }
 
     /// Per-expert load summed over the window.
@@ -614,6 +657,44 @@ mod tests {
         }
         assert!(gini(&cumulative) < 0.2, "cumulative hides the collapse");
         assert!(t.gini() > 0.7, "window must expose it: {}", t.gini());
+    }
+
+    /// Satellite regression: the incremental column sums (add new row,
+    /// subtract evicted row) must track the exact from-the-ring
+    /// recompute across thousands of mixed `push`/`push_counts` calls
+    /// with many evictions — in release builds too, where the
+    /// per-read debug assertion is compiled out.
+    #[test]
+    fn incremental_window_sums_never_drift() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(7);
+        let (window, e) = (17usize, 5);
+        let mut t = LoadTracker::new(window, e);
+        for step in 0..10_000usize {
+            if step % 3 == 0 {
+                let counts: Vec<u32> =
+                    (0..e).map(|_| rng.below(5000) as u32).collect();
+                t.push_counts(&counts);
+            } else {
+                let row: Vec<f32> = (0..e)
+                    .map(|_| rng.range_f64(0.0, 1.0e4) as f32)
+                    .collect();
+                t.push(&row);
+            }
+            if step % 997 == 0 || step + 1 == 10_000 {
+                let got = t.windowed();
+                let exact = t.windowed_exact();
+                for (i, (&g, &x)) in got.iter().zip(&exact).enumerate() {
+                    assert!(
+                        (g as f64 - x).abs() <= 1e-6 * x.abs().max(1.0),
+                        "expert {i} drifted at step {step}: \
+                         incremental {g} vs exact {x}"
+                    );
+                }
+            }
+        }
+        assert_eq!(t.len(), window);
+        assert_eq!(t.total_steps(), 10_000);
     }
 
     #[test]

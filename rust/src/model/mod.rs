@@ -582,7 +582,8 @@ mod tests {
                 ..SimConfig::default()
             },
             3,
-        );
+        )
+        .unwrap();
         run_model_steps(&mut eng, &mix, &mut rng, &mut sim, 4, 32);
         let rep = sim.report();
         assert_eq!(rep.steps, 4);

@@ -18,7 +18,8 @@ use crate::config::{execute_run_arts, RunSpec, RunSummary};
 use crate::data::MixtureStream;
 use crate::dispatch::{
     assignments_from_load, run_routed_steps, synthetic_assignments,
-    DispatchSim, OverflowPolicy, SimConfig,
+    DispatchSim, OverflowPolicy, PlacementConfig, PlacementPolicy,
+    SimConfig,
 };
 use crate::engine::{Backend, Engine};
 use crate::experts::ExpertBank;
@@ -500,7 +501,7 @@ impl<'a> Reporter<'a> {
             ],
         );
         for &skew in &[0.0, 0.3, 0.7, 1.0, 1.5, 2.0] {
-            let mut sim = DispatchSim::new(SimConfig::default());
+            let mut sim = DispatchSim::new(SimConfig::default())?;
             let mut rng = Rng::new(7);
             for _ in 0..200 {
                 let a = synthetic_assignments(&mut rng, 1024, 8, 64, skew);
@@ -557,7 +558,7 @@ impl<'a> Reporter<'a> {
                 n_experts: e,
                 top_k: k,
                 ..SimConfig::default()
-            });
+            })?;
             // Gaussian-mixture stream with Zipf-skewed cluster sizes
             // (the paper's §2.2.1 clusterability assumptions)
             let mix = MixtureStream::standard(&mut rng, d);
@@ -633,7 +634,7 @@ impl<'a> Reporter<'a> {
                     top_k: k,
                     capacity_factor: cf,
                     ..SimConfig::default()
-                });
+                })?;
                 let mix = MixtureStream::skewed(&mut rng, d, 1.6);
                 run_routed_steps(
                     &mut engine,
@@ -663,6 +664,92 @@ impl<'a> Reporter<'a> {
             "\nGINI/min-max are over the *routed* load (policy-\
              invariant by construction at equal seeds); drop/reroute/\
              throughput are where the policies separate.\n",
+        )?;
+        Ok(())
+    }
+
+    /// Placement sweep: overflow policy × expert-placement planner on
+    /// one skewed clustered stream, all routed through the compiled
+    /// engine. The routed load (and therefore Gini/min-max and the
+    /// drop fraction) is placement-invariant by construction —
+    /// placement moves *experts across devices*, never tokens — so the
+    /// planners separate exactly where the ISSUE says they should:
+    /// straggler latency and stall fraction. `replans`/`moved` show
+    /// the live-migration traffic the adoption guard let through.
+    pub fn placement(&self) -> Result<()> {
+        let (d, dz, e, k) = (64usize, 16usize, 64usize, 8usize);
+        let (n_tokens, steps) = (1024usize, 50usize);
+        let cf = 1.25f64;
+        let mut t = Table::new(
+            &format!(
+                "Expert placement × overflow policy ({e} experts, 8 \
+                 devices, top-{k}, cf={cf}, cosine router, skewed \
+                 Zipf(1.6) clustered tokens)"
+            ),
+            &[
+                "policy", "placement", "win-GINI", "min-max",
+                "mean lat us", "p99 lat us", "stall %", "replans",
+                "moved KiB",
+            ],
+        );
+        for policy in OverflowPolicy::ALL {
+            for placement in PlacementPolicy::ALL {
+                // identical seed per cell: every placement sees the
+                // same token stream and routed assignments
+                let mut rng = Rng::new(23);
+                let router =
+                    synthetic_lpr_router("cosine", &mut rng, d, dz, e, k);
+                let mut engine = build_layer_engine(
+                    router.plan().clone(),
+                    ExpertBank::new(&Rng::new(0), e, d, 1),
+                    Backend::Scoped { threads: 1 },
+                    policy,
+                    cf,
+                )?;
+                let mut sim = DispatchSim::new(SimConfig {
+                    n_experts: e,
+                    top_k: k,
+                    capacity_factor: cf,
+                    ..SimConfig::default()
+                })?;
+                sim.set_placement(PlacementConfig {
+                    policy: placement,
+                    replan_every: 8,
+                    bytes_per_expert: 4096,
+                    ..PlacementConfig::default()
+                });
+                let mix = MixtureStream::skewed(&mut rng, d, 1.6);
+                run_routed_steps(
+                    &mut engine,
+                    &mix,
+                    &mut rng,
+                    &mut sim,
+                    steps,
+                    n_tokens,
+                    policy,
+                );
+                let r = sim.report();
+                t.row(vec![
+                    policy.name().to_string(),
+                    r.placement.to_string(),
+                    fmt_sci(r.window_gini),
+                    fmt_sci(r.window_min_max),
+                    format!("{:.0}", r.latency_mean_us),
+                    format!("{:.0}", r.latency_p99_us),
+                    format!("{:.1}", 100.0 * r.stall_frac),
+                    format!("{}", r.replans),
+                    format!("{:.0}", r.migrated_bytes as f64 / 1024.0),
+                ]);
+            }
+        }
+        self.emit(
+            "placement",
+            &t,
+            "\nwin-GINI/min-max are over the *routed* load — identical \
+             down a policy's rows because placement never changes what \
+             was routed; latency/stall are where the planners win. \
+             'moved KiB' is adopted live-migration traffic (charged to \
+             step latency at the configured per-byte cost).\n",
         )?;
         Ok(())
     }
@@ -865,7 +952,7 @@ impl<'a> Reporter<'a> {
                 ..SimConfig::default()
             },
             n_layers,
-        );
+        )?;
         let mut rng = Rng::new(23);
         let mix = MixtureStream::skewed(&mut rng, d, 1.6);
         run_model_steps(&mut engine, &mix, &mut rng, &mut sim, 24, 512);
@@ -944,7 +1031,7 @@ impl<'a> Reporter<'a> {
                 n_devices: 8,
                 top_k: k,
                 ..SimConfig::default()
-            });
+            })?;
             let mut rng = Rng::new(11);
             for _ in 0..200 {
                 let a = assignments_from_load(&mut rng, &load, 1024, k);
@@ -976,6 +1063,7 @@ impl<'a> Reporter<'a> {
         self.dispatch_report()?;
         self.dispatch_routed()?;
         self.dispatch_policies()?;
+        self.placement()?;
         self.serve_table()?;
         self.model_serve_table()?;
         self.dispatch_replay_from(&v, &l)?;

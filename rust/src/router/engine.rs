@@ -29,9 +29,11 @@
 //! same pipeline on a **persistent channel-fed worker pool** instead;
 //! it shares this module's partition helpers ([`shard_span`],
 //! `expert_group_bounds`) and merge/compute steps (`merge_route_shard`,
-//! `run_expert_range`), so pool outputs are bit-identical to the scoped
-//! path for every worker count (pinned by
-//! `pool_forward_full_matches_scoped_engine` in `serve::pool`).
+//! `run_expert_rows` — the row-granular sibling of `run_expert_range`
+//! that expert placement splits replicated buckets with), so pool
+//! outputs are bit-identical to the scoped path for every worker count
+//! (pinned by `pool_forward_full_matches_scoped_engine` in
+//! `serve::pool`).
 //!
 //! Thread-determinism contract: token routing is per-token pure, shard
 //! boundaries depend only on `(N, T)` (routing) or the plan's offsets
@@ -131,6 +133,48 @@ pub(crate) fn run_expert_range(
         cursor += m * d;
     }
     debug_assert_eq!(cursor, (plan.offsets[e1] as usize - row0) * d);
+}
+
+/// Run the FFN compute for grouped rows `row0..row1` — a row range
+/// that may start or stop **mid-bucket** — writing `(row1 - row0) * d`
+/// values into `ys`. The generalization of [`run_expert_range`] that
+/// expert placement needs: a replicated expert's bucket is split
+/// across workers at row granularity, so a worker's share is a row
+/// span, not a whole expert range. Per-row FFN outputs depend only on
+/// the input row and the expert weights (independent of row batching —
+/// pinned per kernel in `experts`), so any partition of rows across
+/// workers is bit-identical to running the buckets whole.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_expert_rows(
+    bank: &ExpertBank,
+    plan: &DispatchPlan,
+    xg: &[f32],
+    row0: usize,
+    row1: usize,
+    d: usize,
+    kernel: Kernel,
+    hid: &mut Vec<f32>,
+    ys: &mut [f32],
+) {
+    let mut cursor = 0usize;
+    let mut r = row0;
+    while r < row1 {
+        // the bucket holding grouped row r: offsets[e] <= r < offsets[e+1]
+        let e = plan.offsets.partition_point(|&o| o <= r as u32) - 1;
+        let end = (plan.offsets[e + 1] as usize).min(row1);
+        let m = end - r;
+        bank.forward_rows_with(
+            kernel,
+            e,
+            &xg[r * d..end * d],
+            m,
+            hid,
+            &mut ys[cursor..cursor + m * d],
+        );
+        cursor += m * d;
+        r = end;
+    }
+    debug_assert_eq!(cursor, (row1 - row0) * d);
 }
 
 /// A reusable routing engine: owns the compiled plan plus per-shard

@@ -40,11 +40,19 @@
 //!    on worker `i`; results merge in shard order after all workers
 //!    answer.
 //! 2. **plan + gather** — on the caller's thread, single-threaded.
-//! 3. **experts** — contiguous expert ranges from the plan's offsets;
-//!    each worker computes its grouped rows into its own buffer, which
-//!    the caller copies into the fixed destination range (completion
-//!    *order* does not matter — destinations are disjoint and the
-//!    content per range is pure).
+//! 3. **experts** — the grouped rows are partitioned into per-worker
+//!    segment lists by the active
+//!    [`PlacementConfig`](crate::dispatch::PlacementConfig): the
+//!    round-robin default reproduces the historical contiguous
+//!    `expert_group_bounds` split exactly; load-aware placement
+//!    LPT-packs whole expert buckets onto workers by this batch's
+//!    executed counts; replication additionally splits the hottest
+//!    buckets' rows across workers through the deterministic replica
+//!    hash. Each worker computes its segments into its own buffer,
+//!    which the caller copies segment-by-segment into the fixed
+//!    destination ranges (completion *order* does not matter —
+//!    destinations are disjoint and per-row compute is pure, so every
+//!    partition yields identical bytes; only wall time moves).
 //! 4. **combine** — on the caller's thread, fixed (token, slot) order.
 //! 5. **residual** (model path) — fixed elementwise add on the caller's
 //!    thread, feeding the next layer.
@@ -67,13 +75,16 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
+use crate::dispatch::placement::{
+    ExpertPlacement, PlacementConfig, PlacementPolicy,
+};
 use crate::dispatch::plan::{capacity_for, DispatchPlan, OverflowPolicy};
 use crate::experts::{combine_rows_opts, gather_rows, ExpertBank};
 use crate::kernels::Kernel;
 use crate::metrics::{LayerLoadTracker, LoadTracker, DEFAULT_LOAD_WINDOW};
 use crate::model::{residual_add, MoeLayer, ModelForward, StackedModel};
 use crate::router::engine::{
-    expert_group_bounds, merge_route_shard, run_expert_range, shard_span,
+    expert_group_bounds, merge_route_shard, run_expert_rows, shard_span,
 };
 use crate::router::{FullForward, RouteBuffers, RouterBatch, RouterPlan};
 
@@ -96,6 +107,11 @@ struct Scratch {
     out: RouterBatch,
     hid: Vec<f32>,
     y: Vec<f32>,
+    /// Grouped-row segments `[r0, r1)` this worker's expert job covers
+    /// (placement-assigned); `y` holds their outputs concatenated in
+    /// list order. The caller reads the list back to scatter `y` into
+    /// the grouped output.
+    segs: Vec<(u32, u32)>,
 }
 
 enum Job {
@@ -107,15 +123,14 @@ enum Job {
         span: Range<usize>,
         scratch: Box<Scratch>,
     },
-    /// Run experts `e0..e1` of `shared.plan` over `shared.xg` with
-    /// layer `layer`'s bank into `scratch.y` (pre-sized by the caller).
-    /// Carries the engine's GEMM kernel choice — workers only see the
-    /// shared layer stack, so the knob travels with the job.
+    /// Run the grouped-row segments listed in `scratch.segs` over
+    /// `shared.plan` / `shared.xg` with layer `layer`'s bank into
+    /// `scratch.y` (pre-sized by the caller). Carries the engine's
+    /// GEMM kernel choice — workers only see the shared layer stack,
+    /// so the knob travels with the job.
     Experts {
         layer: usize,
         shared: Arc<BatchShared>,
-        e0: usize,
-        e1: usize,
         kernel: Kernel,
         scratch: Box<Scratch>,
     },
@@ -124,9 +139,6 @@ enum Job {
 enum Done {
     Ok {
         slot: usize,
-        /// Grouped-row start of an expert job's output (unused for
-        /// routing; route shards merge by slot via `shard_span`).
-        row0: usize,
         scratch: Box<Scratch>,
     },
     /// The job panicked on the worker; the engine re-raises on the
@@ -143,6 +155,19 @@ struct Worker {
     handle: Option<JoinHandle<()>>,
 }
 
+/// Append segment `[r0, r1)` to a worker's list, merging with the
+/// previous segment when adjacent (keeps replica runs and consecutive
+/// whole buckets as one copy/compute span).
+fn push_seg(segs: &mut Vec<(u32, u32)>, r0: u32, r1: u32) {
+    if let Some(last) = segs.last_mut() {
+        if last.1 == r0 {
+            last.1 = r1;
+            return;
+        }
+    }
+    segs.push((r0, r1));
+}
+
 /// Execute one job to completion; the shared handle is dropped
 /// *before* constructing the answer so the engine's `make_mut` never
 /// observes a stale clone once the `Done` arrives.
@@ -154,24 +179,29 @@ fn run_job(layers: &[MoeLayer], slot: usize, job: Job) -> Done {
             let hs = &shared.h[span.start * d..span.end * d];
             plan.forward_into(hs, &mut scratch.buf, &mut scratch.out);
             drop(shared);
-            Done::Ok { slot, row0: span.start, scratch }
+            Done::Ok { slot, scratch }
         }
-        Job::Experts { layer, shared, e0, e1, kernel, mut scratch } => {
+        Job::Experts { layer, shared, kernel, mut scratch } => {
             let d = layers[layer].plan.cfg.d_model;
-            run_expert_range(
-                &layers[layer].bank,
-                &shared.plan,
-                &shared.xg,
-                e0,
-                e1,
-                d,
-                kernel,
-                &mut scratch.hid,
-                &mut scratch.y,
-            );
-            let row0 = shared.plan.offsets[e0] as usize;
+            let Scratch { hid, y, segs, .. } = &mut *scratch;
+            let mut off = 0usize;
+            for &(r0, r1) in segs.iter() {
+                let m = (r1 - r0) as usize;
+                run_expert_rows(
+                    &layers[layer].bank,
+                    &shared.plan,
+                    &shared.xg,
+                    r0 as usize,
+                    r1 as usize,
+                    d,
+                    kernel,
+                    hid,
+                    &mut y[off..off + m * d],
+                );
+                off += m * d;
+            }
             drop(shared);
-            Done::Ok { slot, row0, scratch }
+            Done::Ok { slot, scratch }
         }
     }
 }
@@ -218,12 +248,20 @@ pub struct PoolEngine {
     /// Caller-thread scratch for inline (small-batch) stages.
     inline: Box<Scratch>,
     bounds: Vec<usize>,
+    /// Per-worker segment lists built by `plan_groups` each batch.
+    group_segs: Vec<Vec<(u32, u32)>>,
     /// Rolling `[L, E]` routed-load balance over this pool's batches.
     trackers: LayerLoadTracker,
     renormalize: bool,
     /// GEMM micro-kernel for the expert FFN stage; travels inside
     /// `Job::Experts` messages so the workers see it.
     kernel: Kernel,
+    /// Worker↔expert-group placement for the expert stage (the
+    /// `Engine::builder().placement(..)` knob); round-robin default =
+    /// the historical contiguous split.
+    placement_cfg: PlacementConfig,
+    /// Forward-layer counter feeding the deterministic replica hash.
+    step: u64,
 }
 
 impl std::fmt::Debug for Worker {
@@ -277,6 +315,7 @@ impl PoolEngine {
             parked: (0..n_workers).map(|_| Some(Box::default())).collect(),
             inline: Box::default(),
             bounds: Vec::new(),
+            group_segs: Vec::new(),
             shared: Arc::new(BatchShared::default()),
             trackers: LayerLoadTracker::with_experts(
                 DEFAULT_LOAD_WINDOW,
@@ -289,6 +328,8 @@ impl PoolEngine {
             done_rx,
             renormalize: false,
             kernel: Kernel::default(),
+            placement_cfg: PlacementConfig::default(),
+            step: 0,
         }
     }
 
@@ -339,6 +380,26 @@ impl PoolEngine {
     /// (the default) additionally matches the historic goldens.
     pub fn set_kernel(&mut self, kernel: Kernel) {
         self.kernel = kernel;
+    }
+
+    /// Adopt a placement policy for the expert stage's worker↔expert
+    /// assignment (the `Engine::builder().placement(..)` knob). The
+    /// round-robin default reproduces the historical contiguous
+    /// `expert_group_bounds` split exactly; `LoadAware` LPT-packs
+    /// whole expert buckets onto workers by each batch's executed
+    /// counts; `Replicated` additionally splits the hottest buckets'
+    /// rows across workers through the deterministic replica hash
+    /// ([`ExpertPlacement::replica_for`] on the row's flat token
+    /// slot). Per-row expert compute is pure, so every policy yields
+    /// bit-identical outputs — the knob only moves where the FFN time
+    /// is spent, shrinking the straggler worker on skewed batches.
+    pub fn set_placement(&mut self, cfg: PlacementConfig) {
+        self.placement_cfg = cfg;
+    }
+
+    /// The active placement knob.
+    pub fn placement_cfg(&self) -> &PlacementConfig {
+        &self.placement_cfg
     }
 
     /// Route `h` (`[N, d]` row-major) through **layer 0** into `out` on
@@ -461,24 +522,25 @@ impl PoolEngine {
                 &mut out.y,
             );
         } else {
-            expert_group_bounds(&self.shared.plan, groups, &mut self.bounds);
+            self.plan_groups(groups);
             let mut outstanding = 0usize;
             for g in 0..groups {
-                let (e0, e1) = (self.bounds[g], self.bounds[g + 1]);
-                let row0 = self.shared.plan.offsets[e0] as usize;
-                let row1 = self.shared.plan.offsets[e1] as usize;
-                if row1 == row0 {
-                    continue; // no rows in this group
+                let rows: usize = self.group_segs[g]
+                    .iter()
+                    .map(|&(r0, r1)| (r1 - r0) as usize)
+                    .sum();
+                if rows == 0 {
+                    continue; // no rows assigned to this worker
                 }
                 let mut scratch =
                     self.parked[g].take().expect("worker scratch parked");
+                scratch.segs.clear();
+                scratch.segs.extend_from_slice(&self.group_segs[g]);
                 scratch.y.clear();
-                scratch.y.resize((row1 - row0) * d, 0.0);
+                scratch.y.resize(rows * d, 0.0);
                 let job = Job::Experts {
                     layer,
                     shared: self.shared.clone(),
-                    e0,
-                    e1,
                     kernel: self.kernel,
                     scratch,
                 };
@@ -490,13 +552,19 @@ impl PoolEngine {
                     .expect("pool worker died");
                 outstanding += 1;
             }
-            // copy each group's rows into its fixed disjoint range;
-            // completion order is irrelevant to the result
+            // scatter each worker's segments into their fixed disjoint
+            // ranges; completion order is irrelevant to the result
             for _ in 0..outstanding {
                 match self.done_rx.recv().expect("pool worker died") {
-                    Done::Ok { slot, row0, scratch } => {
-                        out.y[row0 * d..row0 * d + scratch.y.len()]
-                            .copy_from_slice(&scratch.y);
+                    Done::Ok { slot, scratch } => {
+                        let mut off = 0usize;
+                        for &(r0, r1) in &scratch.segs {
+                            let len = (r1 - r0) as usize * d;
+                            let dst = r0 as usize * d;
+                            out.y[dst..dst + len]
+                                .copy_from_slice(&scratch.y[off..off + len]);
+                            off += len;
+                        }
                         self.parked[slot] = Some(scratch);
                     }
                     Done::Panicked { slot } => {
@@ -518,6 +586,90 @@ impl PoolEngine {
             self.renormalize,
             &mut out.combined,
         );
+        self.step += 1;
+    }
+
+    /// Partition the compiled plan's grouped rows into per-worker
+    /// segment lists (`self.group_segs`) under the active placement
+    /// policy. Every partition covers each grouped row exactly once,
+    /// so the expert-stage output is identical bytes for all of them;
+    /// the policies differ only in which worker computes what:
+    ///
+    /// - round-robin: the historical contiguous balanced split from
+    ///   [`expert_group_bounds`] — the bit-identity oracle, and still
+    ///   the default.
+    /// - load-aware: LPT bin-packing of whole expert buckets onto
+    ///   workers by this batch's executed counts (`plan.counts`). The
+    ///   pool schedules the batch it is holding, so it plans from that
+    ///   batch directly; windowed planning plus the migration-cost
+    ///   model belong to [`crate::dispatch::DispatchSim`], where
+    ///   moving an expert between devices actually moves bytes.
+    /// - replicated: load-aware, plus the hottest buckets' rows split
+    ///   across their replica workers row-by-row via the pure hash
+    ///   [`ExpertPlacement::replica_for`]`(src[row], e, step)`,
+    ///   emitted as maximal contiguous runs.
+    fn plan_groups(&mut self, groups: usize) {
+        if self.group_segs.len() < groups {
+            self.group_segs.resize_with(groups, Vec::new);
+        }
+        for segs in self.group_segs.iter_mut() {
+            segs.clear();
+        }
+        let plan = &self.shared.plan;
+        match self.placement_cfg.policy {
+            PlacementPolicy::RoundRobin => {
+                expert_group_bounds(plan, groups, &mut self.bounds);
+                for g in 0..groups {
+                    let r0 = plan.offsets[self.bounds[g]];
+                    let r1 = plan.offsets[self.bounds[g + 1]];
+                    if r1 > r0 {
+                        self.group_segs[g].push((r0, r1));
+                    }
+                }
+            }
+            PlacementPolicy::LoadAware | PlacementPolicy::Replicated => {
+                let load: Vec<f64> =
+                    plan.counts.iter().map(|&c| c as f64).collect();
+                let placement = ExpertPlacement::plan(
+                    &self.placement_cfg,
+                    &load,
+                    groups,
+                );
+                let step = self.step;
+                for e in 0..plan.counts.len() {
+                    let (r0, r1) = (plan.offsets[e], plan.offsets[e + 1]);
+                    if r1 == r0 {
+                        continue;
+                    }
+                    let reps = placement.replicas_of(e);
+                    if reps.len() == 1 {
+                        push_seg(&mut self.group_segs[reps[0]], r0, r1);
+                        continue;
+                    }
+                    // deterministic per-row replica choice, emitted as
+                    // maximal runs
+                    let mut start = r0;
+                    let mut dev = placement.replica_for(
+                        plan.src[r0 as usize] as usize,
+                        e,
+                        step,
+                    );
+                    for r in r0 + 1..r1 {
+                        let next = placement.replica_for(
+                            plan.src[r as usize] as usize,
+                            e,
+                            step,
+                        );
+                        if next != dev {
+                            push_seg(&mut self.group_segs[dev], start, r);
+                            start = r;
+                            dev = next;
+                        }
+                    }
+                    push_seg(&mut self.group_segs[dev], start, r1);
+                }
+            }
+        }
     }
 
     /// The full expert-parallel data path for one batch through
@@ -799,6 +951,64 @@ mod tests {
     /// Satellite: per kernel, the pool is bit-identical to the scoped
     /// engine running the *same* kernel, for worker counts {1, 2, 3,
     /// 8} — the cross-backend half of the kernel determinism contract.
+    /// Satellite (bit-identity with the placement knob engaged): under
+    /// load-aware and replicated placement the pool stays bit-identical
+    /// to the scoped engine for worker counts {1, 2, 3, 8} — placement
+    /// re-partitions *where* grouped rows compute, never their values.
+    /// Runs each pool twice so the step counter advances the replica
+    /// hash between batches.
+    #[test]
+    fn pool_placement_bit_identical_to_scoped() {
+        let mut rng = Rng::new(101);
+        let (d, dz, e, k, ff) = (16usize, 8, 8, 3, 12);
+        let bank = ExpertBank::new(&Rng::new(3), e, d, ff);
+        let r = synthetic_lpr_router("cosine", &mut rng, d, dz, e, k);
+        let plan = r.plan().clone();
+        for n in [5usize, 97] {
+            let h = rand_vec(&mut rng, n * d);
+            let mut scoped = ServingEngine::new(plan.clone(), 1);
+            let mut want = FullForward::new();
+            scoped.forward_full(
+                &h,
+                &bank,
+                1.0,
+                OverflowPolicy::Drop,
+                &mut want,
+            );
+            for policy in
+                [PlacementPolicy::LoadAware, PlacementPolicy::Replicated]
+            {
+                for workers in [1usize, 2, 3, 8] {
+                    let mut pool = PoolEngine::new(
+                        plan.clone(),
+                        bank.clone(),
+                        workers,
+                    );
+                    pool.set_placement(PlacementConfig::with_policy(
+                        policy,
+                    ));
+                    let mut got = FullForward::new();
+                    for batch in 0..2 {
+                        pool.forward_full(
+                            &h,
+                            1.0,
+                            OverflowPolicy::Drop,
+                            &mut got,
+                        );
+                        assert_eq!(
+                            got.combined,
+                            want.combined,
+                            "{} n={n} w={workers} batch={batch} \
+                             diverged",
+                            policy.name()
+                        );
+                        assert_eq!(got.plan, want.plan);
+                    }
+                }
+            }
+        }
+    }
+
     #[test]
     fn pool_matches_scoped_engine_for_every_kernel() {
         let mut rng = Rng::new(97);
