@@ -15,7 +15,9 @@
 //! grouped-GEMM kernel × weight-dtype sweep over the FFN hot loop to
 //! `BENCH_gemm.json`, and the expert-placement sweep — pool forward
 //! wall-clock plus modelled step latency/stall per planner — to
-//! `BENCH_placement.json`, so the perf trajectory is trackable across
+//! `BENCH_placement.json`, and the admission front-end rows —
+//! compiled-matcher classify cost plus a 2x-overload lane run — to
+//! `BENCH_admission.json`, so the perf trajectory is trackable across
 //! PRs). All serving-path engines are
 //! built through `Engine::builder()`; the `engine_direct/*` rows are
 //! the deliberate exception — they are the baseline the facade rows
@@ -37,8 +39,9 @@ use lpr::router::{
     RouterConfig, RouterKind, RouterParams, METRICS,
 };
 use lpr::serve::{
-    measure_engine_rate, run_open_loop, PoolEngine, ServeConfig,
-    ServeRuntime,
+    measure_engine_rate, run_admitted_open_loop, run_open_loop,
+    AdmissionConfig, AdmittedRuntime, PoolEngine, RequestMeta,
+    ServeConfig, ServeRuntime,
 };
 use lpr::util::bench::{write_json_rows, Bench};
 use lpr::util::json::Json;
@@ -809,6 +812,130 @@ fn main() {
             ));
         }
         write_rows_or_warn("BENCH_placement.json", &placement_rows);
+    }
+
+
+    // ---- admission front-end: the compiled matcher vs the naive
+    // first-match reference scan on a 16-lane config, plus a short
+    // admitted overload run (priority + best-effort lanes at 2x the
+    // virtual-clock service rate). Emitted as BENCH_admission.json. ----
+    {
+        let fast = std::env::var("LPR_BENCH_FAST").is_ok();
+        let mut admission_rows: Vec<String> = Vec::new();
+        let mut text = String::new();
+        for i in 0..15 {
+            text.push_str(&format!(
+                "lane lane{i}\n  path /v{i}/generate\n  quota 512\n"
+            ));
+        }
+        text.push_str("lane rest\n  quota 512\n");
+        let config = AdmissionConfig::parse(&text)
+            .expect("16-lane bench config parses");
+        let adm = config
+            .compile(8, 64)
+            .expect("16-lane bench config compiles");
+        let metas: Vec<RequestMeta> =
+            config.lanes.iter().map(|l| l.example_meta()).collect();
+        for (name, compiled) in [("compiled", true), ("reference", false)]
+        {
+            let res = b.run_items(
+                &format!("admission/classify_{name}/16lanes"),
+                metas.len() as f64,
+                &mut || {
+                    for m in &metas {
+                        let lane = if compiled {
+                            adm.classify(std::hint::black_box(m))
+                        } else {
+                            adm.classify_reference(
+                                std::hint::black_box(m),
+                            )
+                        };
+                        std::hint::black_box(lane);
+                    }
+                },
+            );
+            admission_rows.push(format!(
+                "{{\"name\": \"admission/classify_{name}\", \
+                 \"lanes\": 16, \"ns_per_request\": {:.2}}}",
+                res.per_item_ns()
+            ));
+        }
+        // overload run: deterministic virtual clock (every batch takes
+        // 500 ticks), so capacity is max_batch / 500 us with no
+        // wall-clock measurement needed
+        let (ad, adz, ae, ak, aff) =
+            (32usize, 16usize, 32usize, 4usize, 64usize);
+        let (amax_batch, areq_tokens) = (64usize, 8usize);
+        let an_requests = if fast { 128usize } else { 512 };
+        let lanes_text = "lane priority\n  path_prefix /priority\n\
+                          \x20 quota 256\n  weight 8\n\
+                          lane best-effort\n  quota 128\n";
+        let lane_cfg = AdmissionConfig::parse(lanes_text)
+            .expect("two-lane bench config parses");
+        let mut arng = Rng::new(23);
+        let arouter =
+            synthetic_lpr_router("cosine", &mut arng, ad, adz, ae, ak);
+        let abank = ExpertBank::new(&Rng::new(42), ae, ad, aff);
+        let amix = MixtureStream::skewed(&mut arng, ad, 1.6);
+        let aengine = Engine::builder()
+            .layer(arouter.plan().clone(), abank)
+            .backend(Backend::Pool { workers: 2 })
+            .policy(OverflowPolicy::Drop)
+            .capacity_factor(1.25)
+            .build()
+            .expect("valid engine config");
+        let acfg = ServeConfig {
+            max_batch: amax_batch,
+            max_wait: 200,
+            queue_tokens: 8 * amax_batch,
+            service_ticks: Some(500),
+            ..ServeConfig::default()
+        };
+        let aadm = lane_cfg
+            .compile(ad, amax_batch)
+            .expect("two-lane bench config compiles");
+        let ametas: Vec<RequestMeta> = {
+            let prio = lane_cfg.lanes[0].example_meta();
+            let best = lane_cfg.lanes[1].example_meta();
+            vec![prio, best.clone(), best.clone(), best]
+        };
+        let cap_tok_s = amax_batch as f64 / (500.0 / 1_000_000.0);
+        let mut art =
+            AdmittedRuntime::new(aengine.into_inner(), acfg, aadm);
+        run_admitted_open_loop(
+            &mut art,
+            &amix,
+            &mut arng,
+            &ametas,
+            an_requests,
+            areq_tokens,
+            2.0 * cap_tok_s,
+        );
+        let arep = art.report();
+        for l in &arep.lanes {
+            println!(
+                "micro/admission/overload/{}    admitted {:>5}  shed \
+                 {:>5}  p50 {:>7.0} us  p99 {:>7.0} us",
+                l.name,
+                l.admitted,
+                l.rejected,
+                l.latency_p50_us,
+                l.latency_p99_us
+            );
+            admission_rows.push(format!(
+                "{{\"name\": \"admission/overload/{}\", \
+                 \"load\": 2.0, \"weight\": {}, \
+                 \"admitted\": {}, \"rejected\": {}, \
+                 \"p50_us\": {:.1}, \"p99_us\": {:.1}}}",
+                l.name,
+                l.weight,
+                l.admitted,
+                l.rejected,
+                l.latency_p50_us,
+                l.latency_p99_us
+            ));
+        }
+        write_rows_or_warn("BENCH_admission.json", &admission_rows);
     }
 
     // ---- dispatch simulator ----

@@ -23,7 +23,7 @@
 use crate::dispatch::placement::ParsePlacementError;
 use crate::dispatch::plan::ParsePolicyError;
 use crate::engine::EngineBuildError;
-use crate::serve::SubmitError;
+use crate::serve::{AdmissionError, AdmitError, SubmitError};
 
 /// The crate-wide error: every typed failure family converts into it
 /// (`?` works across layers), and `source()` exposes the underlying
@@ -36,6 +36,12 @@ pub enum Error {
     /// Submission refused by the serving queue
     /// ([`crate::serve::SubmitError`]).
     Submit(SubmitError),
+    /// Admission config rejected at parse/validate/compile
+    /// ([`crate::serve::AdmissionError`]).
+    Admission(AdmissionError),
+    /// Request refused by the compiled admission layer
+    /// ([`crate::serve::AdmitError`]).
+    Admit(AdmitError),
     /// Unrecognized overflow-policy name
     /// ([`crate::dispatch::ParsePolicyError`]).
     Policy(ParsePolicyError),
@@ -53,6 +59,10 @@ impl std::fmt::Display for Error {
         match self {
             Error::Build(e) => write!(f, "engine configuration: {e}"),
             Error::Submit(e) => write!(f, "request submission: {e}"),
+            Error::Admission(e) => {
+                write!(f, "admission configuration: {e}")
+            }
+            Error::Admit(e) => write!(f, "request admission: {e}"),
             Error::Policy(e) => write!(f, "{e}"),
             Error::Placement(e) => write!(f, "{e}"),
             Error::Artifact(e) => write!(f, "{e:#}"),
@@ -65,6 +75,8 @@ impl std::error::Error for Error {
         match self {
             Error::Build(e) => Some(e),
             Error::Submit(e) => Some(e),
+            Error::Admission(e) => Some(e),
+            Error::Admit(e) => Some(e),
             Error::Policy(e) => Some(e),
             Error::Placement(e) => Some(e),
             Error::Artifact(e) => Some(e.as_ref()),
@@ -81,6 +93,18 @@ impl From<EngineBuildError> for Error {
 impl From<SubmitError> for Error {
     fn from(e: SubmitError) -> Error {
         Error::Submit(e)
+    }
+}
+
+impl From<AdmissionError> for Error {
+    fn from(e: AdmissionError) -> Error {
+        Error::Admission(e)
+    }
+}
+
+impl From<AdmitError> for Error {
+    fn from(e: AdmitError) -> Error {
+        Error::Admit(e)
     }
 }
 
@@ -112,6 +136,8 @@ mod tests {
             EngineBuildError::MissingModel.into(),
             SubmitError::Full.into(),
             SubmitError::TooLarge.into(),
+            AdmissionError::NoLanes.into(),
+            AdmitError::NoRoute { path: "/x".into() }.into(),
             ParsePolicyError("bogus".into()).into(),
             ParsePlacementError("nowhere".into()).into(),
             anyhow::anyhow!("artifact exploded").into(),
@@ -125,10 +151,12 @@ mod tests {
                 "{msg} lost its source"
             );
         }
-        assert!(cases[3].to_string().contains("bogus"));
-        assert!(cases[3].to_string().contains("least-loaded"));
-        assert!(cases[4].to_string().contains("nowhere"));
-        assert!(cases[4].to_string().contains("loadaware"));
+        assert!(cases[5].to_string().contains("bogus"));
+        assert!(cases[5].to_string().contains("least-loaded"));
+        assert!(cases[6].to_string().contains("nowhere"));
+        assert!(cases[6].to_string().contains("loadaware"));
+        assert!(cases[3].to_string().contains("admission"));
+        assert!(cases[4].to_string().contains("/x"));
     }
 
     #[test]

@@ -76,6 +76,21 @@
 //! `enqueue`/`await_completion`. Typed errors share one conversion
 //! point, [`Error`].
 //!
+//! In front of the server sits a **network + admission layer**:
+//! [`serve::AdmissionConfig`] declares per-tenant/path/priority lanes
+//! as data (each lane with its own token quota, flush weight, and
+//! shed/spill back-pressure), validates into typed
+//! [`serve::AdmissionError`]s like the builder, and compiles once into
+//! a matcher tree ([`serve::Admission`]) evaluated per request with
+//! zero steady-state allocation — property-tested bit-equal to its
+//! naive first-match reference and pinned by a fixture-driven
+//! conformance suite (`rust/tests/fixtures/admission/`).
+//! [`serve::NetServer`] is the dependency-free TCP front-end feeding
+//! [`serve::Server`] over a [`serve::Wire`] — native length-prefixed
+//! framing or HTTP/1.1-shaped request lines — answering admission
+//! refusals with explicit 503-style statuses while priority lanes
+//! keep bounded latency under overload (`lpr listen`).
+//!
 //! Start with [`runtime::Runtime`] + [`coordinator::Trainer`] for
 //! training, [`engine::Engine::builder`] + [`serve::ServeRuntime`] /
 //! [`serve::Server`] + [`dispatch::DispatchSim`] for serving-path

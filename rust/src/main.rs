@@ -22,6 +22,10 @@
 //!                         through the persistent-pool serving runtime
 //!                         (policy x workers x arrival-rate sweep,
 //!                         emits BENCH_serve.json)
+//!   listen                bind the TCP serving front-end (native
+//!                         length-prefixed framing, or --http) over a
+//!                         synthetic engine, optionally behind a
+//!                         multi-lane --lanes admission config
 //!   route <preset>        run the standalone router artifact and print
 //!                         the specialization proxy; `route synthetic`
 //!                         runs the pure-Rust serving engine instead
@@ -49,7 +53,9 @@ use lpr::report::Reporter;
 use lpr::router::{synthetic_lpr_router, RouterBatch};
 use lpr::runtime::{CompiledArtifacts, Runtime};
 use lpr::serve::{
-    measure_engine_rate, run_open_loop, ServeConfig, ServeRuntime,
+    measure_engine_rate, run_admitted_open_loop, run_open_loop,
+    AdmissionConfig, AdmittedRuntime, HttpWire, LengthPrefixed, NetServer,
+    RequestMeta, Server, ServeConfig, ServeRuntime,
 };
 use lpr::util::bench::write_json_rows;
 use lpr::util::cli::Args;
@@ -74,7 +80,7 @@ USAGE:
                 [--steps N] [--tokens N] [--cf F] [--devices N]
   lpr repro <t1|t2|t3|t4|t5|t6|t7|fig1|fig3|fig4|dispatch
             |dispatch-routed|dispatch-policies|placement|serve
-            |model-serve|dispatch-replay|all> [--steps N]
+            |model-serve|admission|dispatch-replay|all> [--steps N]
   lpr dispatch-sim [--experts N] [--devices N] [--topk K] [--skew S]
                    [--cf F] [--steps N] [--threads N] [--metric M]
                    [--policy P] [--routed] [--full] [--renormalize]
@@ -84,6 +90,10 @@ USAGE:
                   [--dff F] [--workers N] [--policy P] [--rate TOK/S]
                   [--requests N] [--req-tokens N] [--max-batch N]
                   [--max-wait TICKS] [--cf F] [--renormalize]
+                  [--lanes FILE]
+  lpr listen [--addr HOST:PORT] [--http] [--lanes FILE] [--metric M]
+             [--experts N] [--topk K] [--dmodel D] [--dff F]
+             [--workers N] [--max-batch N] [--max-wait TICKS]
   lpr list
 Options:
   --artifacts DIR   artifact directory (default: artifacts/)
@@ -115,6 +125,13 @@ Options:
                     served stack (default 4)
   --ckpt FILE       serve/eval/route: training checkpoint; serve builds
                     the whole L-layer model from it (pure Rust, no PJRT)
+  --lanes FILE      listen / serve-bench: multi-lane admission config
+                    (lane / path / tenant / quota / weight / overflow
+                    directives — see docs/ARCHITECTURE.md); default is
+                    one catch-all lane
+  --addr HOST:PORT  listen: bind address (default 127.0.0.1:7077)
+  --http            listen: speak the HTTP/1.1-shaped wire instead of
+                    the native length-prefixed framing
 ";
 
 fn main() {
@@ -152,6 +169,7 @@ fn run(args: &Args) -> Result<()> {
         "model-sim" => cmd_model_sim(args),
         "dispatch-sim" => cmd_dispatch_sim(args),
         "serve-bench" => cmd_serve_bench(args),
+        "listen" => cmd_listen(args),
         "bench-tables" => cmd_bench_tables(args),
         "list" => cmd_list(args),
         "help" | "--help" | "-h" => {
@@ -347,6 +365,7 @@ fn cmd_repro(args: &Args) -> Result<()> {
             | "placement"
             | "serve"
             | "model-serve"
+            | "admission"
     );
     let rt = if pure_rust { None } else { Some(Runtime::cpu()?) };
     let mut rep = Reporter::new(rt.as_ref(), &art, &out);
@@ -371,6 +390,7 @@ fn cmd_repro(args: &Args) -> Result<()> {
         "placement" => rep.placement()?,
         "serve" => rep.serve_table()?,
         "model-serve" => rep.model_serve_table()?,
+        "admission" => rep.admission_table()?,
         "dispatch-replay" => rep.dispatch_replay()?,
         "all" => rep.all()?,
         other => bail!("unknown experiment '{other}'"),
@@ -749,6 +769,7 @@ fn cmd_bench_tables(args: &Args) -> Result<()> {
         "BENCH_engine.json",
         "BENCH_gemm.json",
         "BENCH_placement.json",
+        "BENCH_admission.json",
     ];
     let dir = PathBuf::from(args.opt_or("dir", "."));
     let mut md = String::new();
@@ -834,6 +855,9 @@ fn cmd_bench_tables(args: &Args) -> Result<()> {
 /// full-forward capacity per worker count (so the sweep brackets
 /// saturation everywhere); `--rate` pins one absolute rate instead.
 fn cmd_serve_bench(args: &Args) -> Result<()> {
+    if let Some(file) = args.opt("lanes") {
+        return serve_bench_lanes(args, file);
+    }
     let metric = args.opt_or("metric", "cosine");
     let d = args.opt_usize("dmodel", 32);
     let dz = args.opt_usize("latent", 16);
@@ -961,6 +985,224 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         eprintln!("wrote BENCH_serve.json ({} rows)", json_rows.len());
     }
     Ok(())
+}
+
+/// `serve-bench --lanes FILE`: drive the compiled admission front at
+/// 0.5x/1x/2x of measured capacity with traffic aimed at every lane's
+/// canonical meta, print the per-lane shed/latency table, and emit the
+/// rows as `BENCH_admission.json` (rendered by `lpr bench-tables` and
+/// uploaded by the bench-smoke CI job).
+fn serve_bench_lanes(args: &Args, file: &str) -> Result<()> {
+    let metric = args.opt_or("metric", "cosine");
+    let d = args.opt_usize("dmodel", 32);
+    let dz = args.opt_usize("latent", 16);
+    let e = args.opt_usize("experts", 64);
+    let k = args.opt_usize("topk", 4);
+    let d_ff = args.opt_usize("dff", 2 * d);
+    let req_tokens = args.opt_usize("req-tokens", 32);
+    let n_requests = args.opt_usize("requests", 256);
+    let max_batch = args.opt_usize("max-batch", 256);
+    let max_wait = args.opt_usize("max-wait", 2000) as u64;
+    let workers = args.opt_usize("workers", 2);
+    let cf = args.opt_f64("cf", 1.25);
+    let seed = args.opt_usize("seed", 23) as u64;
+    anyhow::ensure!(
+        req_tokens <= max_batch,
+        "--req-tokens {req_tokens} exceeds --max-batch {max_batch}"
+    );
+    let text = std::fs::read_to_string(file)
+        .with_context(|| format!("read lane config {file}"))?;
+    let config = AdmissionConfig::parse(&text)?;
+    config.validate(max_batch)?;
+    let metas: Vec<RequestMeta> =
+        config.lanes.iter().map(|l| l.example_meta()).collect();
+
+    // capacity calibration through the same builder-constructed
+    // backend the cells use, exactly like the policy sweep
+    let mut rng = Rng::new(seed);
+    let router = synthetic_lpr_router(metric, &mut rng, d, dz, e, k);
+    let bank = ExpertBank::new(&Rng::new(42), e, d, d_ff);
+    let mix = MixtureStream::skewed(&mut rng, d, 1.6);
+    let mut cal = Engine::builder()
+        .layer(router.plan().clone(), bank)
+        .backend(Backend::Pool { workers })
+        .capacity_factor(cf)
+        .build()?;
+    let cap_tok_s =
+        measure_engine_rate(&mut cal, &mix, &mut rng, max_batch, 3);
+    drop(cal);
+
+    println!(
+        "serve-bench --lanes {file}: {} lanes, {metric} router, \
+         {e} experts top-{k}, d={d}, capacity {cap_tok_s:.0} tok/s, \
+         {req_tokens}-token requests x {n_requests}",
+        config.lanes.len()
+    );
+    println!(
+        "{:<14} {:>6} {:>7} {:>9} {:>9} {:>9} {:>9} {:>9}",
+        "lane", "load", "weight", "admitted", "shed", "p50 us",
+        "p99 us", "mean us"
+    );
+    let mut json_rows: Vec<String> = Vec::new();
+    for &load in &[0.5f64, 1.0, 2.0] {
+        let rate = load * cap_tok_s;
+        // identical seeds per cell: same router, same stream
+        let mut rng = Rng::new(seed);
+        let router = synthetic_lpr_router(metric, &mut rng, d, dz, e, k);
+        let bank = ExpertBank::new(&Rng::new(42), e, d, d_ff);
+        let mix = MixtureStream::skewed(&mut rng, d, 1.6);
+        let engine = Engine::builder()
+            .layer(router.plan().clone(), bank)
+            .backend(Backend::Pool { workers })
+            .capacity_factor(cf)
+            .build()?;
+        let cfg = ServeConfig {
+            max_batch,
+            max_wait,
+            queue_tokens: 8 * max_batch,
+            ..ServeConfig::default()
+        };
+        let adm = config.compile(d, max_batch)?;
+        let mut rt =
+            AdmittedRuntime::new(engine.into_inner(), cfg, adm);
+        run_admitted_open_loop(
+            &mut rt, &mix, &mut rng, &metas, n_requests, req_tokens,
+            rate,
+        );
+        let rep = rt.report();
+        for l in &rep.lanes {
+            println!(
+                "{:<14} {:>6.2} {:>7} {:>9} {:>9} {:>9.0} {:>9.0} \
+                 {:>9.0}",
+                l.name,
+                load,
+                l.weight,
+                l.admitted,
+                l.rejected,
+                l.latency_p50_us,
+                l.latency_p99_us,
+                l.latency_mean_us
+            );
+            json_rows.push(format!(
+                "{{\"name\": \"admission/{}\", \"load\": {:.2}, \
+                 \"rate_tok_s\": {:.0}, \"weight\": {}, \
+                 \"admitted\": {}, \"rejected\": {}, \
+                 \"spilled_in\": {}, \"p50_us\": {:.1}, \
+                 \"p99_us\": {:.1}, \"mean_us\": {:.1}}}",
+                l.name,
+                load,
+                rate,
+                l.weight,
+                l.admitted,
+                l.rejected,
+                l.spilled_in,
+                l.latency_p50_us,
+                l.latency_p99_us,
+                l.latency_mean_us
+            ));
+        }
+    }
+    if let Err(e) = write_json_rows("BENCH_admission.json", &json_rows) {
+        eprintln!("warn: could not write BENCH_admission.json: {e}");
+    } else {
+        eprintln!(
+            "wrote BENCH_admission.json ({} rows)",
+            json_rows.len()
+        );
+    }
+    Ok(())
+}
+
+/// `lpr listen`: bind the TCP front-end over a synthetic single-layer
+/// engine and serve until interrupted, printing per-lane admission
+/// stats every few seconds. `--lanes FILE` compiles a multi-lane
+/// admission config; the default is one catch-all lane sized from the
+/// serve config.
+fn cmd_listen(args: &Args) -> Result<()> {
+    let metric = args.opt_or("metric", "cosine");
+    let d = args.opt_usize("dmodel", 32);
+    let dz = args.opt_usize("latent", 16);
+    let e = args.opt_usize("experts", 64);
+    let k = args.opt_usize("topk", 4);
+    let d_ff = args.opt_usize("dff", 2 * d);
+    let workers = args.opt_usize("workers", 2);
+    let max_batch = args.opt_usize("max-batch", 256);
+    let max_wait = args.opt_usize("max-wait", 2000) as u64;
+    let addr = args.opt_or("addr", "127.0.0.1:7077");
+    let http = args.has_flag("http");
+    let seed = args.opt_usize("seed", 23) as u64;
+
+    let mut rng = Rng::new(seed);
+    let router = synthetic_lpr_router(metric, &mut rng, d, dz, e, k);
+    let bank = ExpertBank::new(&Rng::new(42), e, d, d_ff);
+    let engine = Engine::builder()
+        .layer(router.plan().clone(), bank)
+        .backend(Backend::Pool { workers })
+        .build()?;
+    let cfg = ServeConfig {
+        max_batch,
+        max_wait,
+        queue_tokens: 8 * max_batch,
+        ..ServeConfig::default()
+    };
+    let rt = ServeRuntime::with_engine(engine.into_inner(), cfg);
+    let server = match args.opt("lanes") {
+        Some(file) => {
+            let text = std::fs::read_to_string(file)
+                .with_context(|| format!("read lane config {file}"))?;
+            let adm = AdmissionConfig::parse(&text)?
+                .compile(d, max_batch)?;
+            println!("admission lanes ({file}):");
+            for s in adm.specs() {
+                println!(
+                    "  {:<14} quota {} tokens, weight {}",
+                    s.name, s.quota, s.weight
+                );
+            }
+            Server::with_admission(
+                rt,
+                adm,
+                std::time::Duration::from_micros(200),
+            )
+        }
+        None => Server::start(rt),
+    };
+    let server = std::sync::Arc::new(server);
+    let net = if http {
+        NetServer::start(server.clone(), addr, HttpWire::default())?
+    } else {
+        NetServer::start(
+            server.clone(),
+            addr,
+            LengthPrefixed::default(),
+        )?
+    };
+    println!(
+        "listening on {} ({} wire, d_model {d}, max_batch {max_batch}) \
+         — ctrl-c to stop",
+        net.addr(),
+        if http { "http" } else { "length-prefixed" }
+    );
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(5));
+        let rep = server.report();
+        let lanes: Vec<String> = rep
+            .lanes
+            .iter()
+            .map(|l| {
+                format!(
+                    "{}: {} ok / {} shed / {} queued",
+                    l.name, l.admitted, l.rejected, l.queue_depth_tokens
+                )
+            })
+            .collect();
+        println!(
+            "served {} requests ({} tokens)  |  {}",
+            rep.requests,
+            rep.tokens,
+            lanes.join("  |  ")
+        );
+    }
 }
 
 fn cmd_list(args: &Args) -> Result<()> {

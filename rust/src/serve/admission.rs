@@ -1,0 +1,1639 @@
+//! Compiled admission control: multi-tenant lanes in front of the
+//! serving queue.
+//!
+//! The paper's balance story (routed-load Gini 0.70 → 0.035) is about
+//! experts; this module applies the same discipline one layer up, to
+//! *requests*. An [`AdmissionConfig`] declares **lanes** as data — each
+//! lane matches on request path / tenant / priority and owns its own
+//! bounded [`BatchQueue`] (token quota), flush weight, and
+//! back-pressure policy — and is validated into typed
+//! [`AdmissionError`]s exactly like `Engine::builder()`. Validation
+//! then **compiles** the match rules once into a [`CompiledMatcher`]
+//! (exact-path table + prefix byte-trie + pathless list) evaluated per
+//! request with zero steady-state allocation; the naive first-match
+//! linear scan is kept as [`Admission::classify_reference`], the
+//! parity oracle the property tests pin the compiled tree against
+//! (same pattern as `Router::forward_reference`).
+//!
+//! Semantics:
+//!
+//! - **Matching** is first-match-wins in config order. The compiled
+//!   tree returns the *minimum* config index among matching lanes,
+//!   which is the same thing; validation rejects lanes a strictly more
+//!   general earlier lane shadows ([`AdmissionError::ShadowedLane`]),
+//!   so dead config is a typed error, not a silent no-op.
+//! - **Quota** bounds each lane's queue in tokens. A full lane either
+//!   **sheds** the submission with an explicit 503-style rejection
+//!   ([`AdmitError::LaneFull`]) or **spills** it into one named
+//!   fallback lane ([`BackPressure::Spill`]; one hop only — spill
+//!   chains are rejected at validation).
+//! - **Weight** orders flushing: when several lanes have a due batch,
+//!   the highest weight flushes first (ties break on config order), so
+//!   under overload high-weight lanes keep bounded latency while
+//!   low-weight lanes absorb the shedding.
+//! - **Stats** (`admitted` / `rejected` / queue depth / per-lane
+//!   latency percentiles) accumulate per lane and flow into
+//!   [`ServeReport::lanes`](super::ServeReport::lanes).
+//!
+//! [`AdmittedRuntime`] couples an [`Admission`] with the virtual-clock
+//! [`ServeRuntime`] for deterministic overload tests and benches; the
+//! wall-clock `serve::Server` fronts itself with the same `Admission`
+//! type. Request ids are globally unique across lanes: the lane index
+//! lives in the top 16 bits ([`lane_of_id`]), the lane-local FIFO
+//! counter in the low 48.
+
+use super::queue::{BatchMember, BatchQueue, SubmitError};
+use super::{Completion, ServeConfig, ServeReport, ServeRuntime};
+use crate::engine::MoeEngine;
+use crate::metrics::percentile_nearest_rank;
+
+/// Lanes are indexed by `u16` in the compiled matcher and in the
+/// request-id encoding.
+pub const MAX_LANES: usize = u16::MAX as usize;
+
+const LANE_ID_SHIFT: u32 = 48;
+
+/// The lane index encoded in a request id returned by
+/// [`Admission::submit`].
+pub fn lane_of_id(id: u64) -> usize {
+    (id >> LANE_ID_SHIFT) as usize
+}
+
+fn global_id(lane: usize, local: u64) -> u64 {
+    debug_assert!(local < (1u64 << LANE_ID_SHIFT));
+    ((lane as u64) << LANE_ID_SHIFT) | local
+}
+
+/// Request attributes the admission layer matches on. The network
+/// front-end (`serve::net`) decodes one of these per request; embedders
+/// fill it directly.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RequestMeta {
+    /// Request path, `/`-rooted (e.g. `/v1/generate`).
+    pub path: String,
+    /// Tenant header, if the client sent one.
+    pub tenant: Option<String>,
+    /// Client priority, 0 (lowest) to 255.
+    pub priority: u8,
+}
+
+impl Default for RequestMeta {
+    fn default() -> RequestMeta {
+        RequestMeta { path: "/".to_string(), tenant: None, priority: 0 }
+    }
+}
+
+/// How a lane matches the request path.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PathMatch {
+    /// The path equals this string exactly.
+    Exact(String),
+    /// The path starts with this string.
+    Prefix(String),
+}
+
+/// What a lane does with a submission its quota cannot absorb.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum BackPressure {
+    /// Refuse with [`AdmitError::LaneFull`] (a 503 on the wire).
+    Shed,
+    /// Try the named lane's queue instead (one hop; the target must
+    /// itself shed).
+    Spill(String),
+}
+
+/// One lane of an [`AdmissionConfig`]: match rules + queue policy.
+/// Construct with [`LaneSpec::new`] (catch-all, quota 8192 tokens,
+/// weight 1, max_wait 2000 ticks, shed) and set fields directly.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LaneSpec {
+    pub name: String,
+    /// Path rule; `None` matches every path.
+    pub path: Option<PathMatch>,
+    /// Tenant rule; `None` matches every tenant (including none).
+    pub tenant: Option<String>,
+    /// Minimum request priority; `None` matches every priority.
+    pub min_priority: Option<u8>,
+    /// Lane queue bound, tokens (must be >= the engine `max_batch`).
+    pub quota: usize,
+    /// Flush priority: when several lanes are due, the highest weight
+    /// flushes first (ties break on config order). Must be >= 1.
+    pub weight: u32,
+    /// Oldest-request age (ticks) that forces this lane to flush.
+    pub max_wait: u64,
+    pub overflow: BackPressure,
+}
+
+impl LaneSpec {
+    pub fn new(name: &str) -> LaneSpec {
+        LaneSpec {
+            name: name.to_string(),
+            path: None,
+            tenant: None,
+            min_priority: None,
+            quota: 8_192,
+            weight: 1,
+            max_wait: 2_000,
+            overflow: BackPressure::Shed,
+        }
+    }
+
+    /// A canonical request this lane's own rules accept — the traffic
+    /// generator `serve-bench --lanes` uses to aim load at each lane.
+    /// (An *earlier* lane may still capture it; classify to find out.)
+    pub fn example_meta(&self) -> RequestMeta {
+        RequestMeta {
+            path: match &self.path {
+                Some(PathMatch::Exact(p)) | Some(PathMatch::Prefix(p)) => {
+                    p.clone()
+                }
+                None => "/".to_string(),
+            },
+            tenant: self.tenant.clone(),
+            priority: self.min_priority.unwrap_or(0),
+        }
+    }
+}
+
+/// Does `spec` accept `meta`? The single matching rule both evaluators
+/// share.
+fn lane_matches(spec: &LaneSpec, meta: &RequestMeta) -> bool {
+    let path_ok = match &spec.path {
+        None => true,
+        Some(PathMatch::Exact(p)) => meta.path == *p,
+        Some(PathMatch::Prefix(p)) => meta.path.starts_with(p.as_str()),
+    };
+    let tenant_ok = match spec.tenant.as_deref() {
+        None => true,
+        Some(t) => meta.tenant.as_deref() == Some(t),
+    };
+    let prio_ok = match spec.min_priority {
+        None => true,
+        Some(mp) => meta.priority >= mp,
+    };
+    path_ok && tenant_ok && prio_ok
+}
+
+/// Does every request lane `a` accepts also match lane `b`'s rules
+/// rule-by-rule? Used to reject config where an earlier lane shadows a
+/// later one. (Conservative per-rule containment: it cannot prove
+/// cross-rule containments, which is fine — validation only *rejects*
+/// on `true`.)
+fn covers(a: &LaneSpec, b: &LaneSpec) -> bool {
+    let path = match (&a.path, &b.path) {
+        (None, _) => true,
+        (Some(_), None) => false,
+        (Some(PathMatch::Exact(p)), Some(PathMatch::Exact(q))) => p == q,
+        (Some(PathMatch::Exact(_)), Some(PathMatch::Prefix(_))) => false,
+        (Some(PathMatch::Prefix(p)), Some(PathMatch::Exact(q)))
+        | (Some(PathMatch::Prefix(p)), Some(PathMatch::Prefix(q))) => {
+            q.starts_with(p.as_str())
+        }
+    };
+    let tenant = match (&a.tenant, &b.tenant) {
+        (None, _) => true,
+        (Some(_), None) => false,
+        (Some(s), Some(t)) => s == t,
+    };
+    let prio = match (a.min_priority, b.min_priority) {
+        (None, _) => true,
+        (Some(p), None) => p == 0,
+        (Some(p), Some(q)) => p <= q,
+    };
+    path && tenant && prio
+}
+
+/// Why an [`AdmissionConfig`] was rejected. Every variant names the
+/// offending lane/value (the `EngineBuildError` convention) and has a
+/// stable [`AdmissionError::code`] the conformance fixtures assert.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AdmissionError {
+    /// The config declares no lanes at all.
+    NoLanes,
+    /// A lane's name is empty.
+    EmptyLaneName,
+    /// Two lanes share a name.
+    DuplicateLane(String),
+    /// More than [`MAX_LANES`] lanes.
+    TooManyLanes(usize),
+    /// A path rule does not start with `/`.
+    BadPath { lane: String, path: String },
+    /// A lane quota of zero could never admit anything.
+    ZeroQuota(String),
+    /// A lane quota below the engine `max_batch` could never fill a
+    /// batch (the `BatchQueue` capacity invariant, as a typed error).
+    QuotaBelowBatch { lane: String, quota: usize, max_batch: usize },
+    /// A lane weight of zero has no defined flush order.
+    ZeroWeight(String),
+    /// `overflow spill` names a lane that does not exist.
+    SpillUnknownLane { lane: String, target: String },
+    /// A lane spills into itself.
+    SpillSelf(String),
+    /// A lane spills into a lane that itself spills (chains are
+    /// disallowed: spilling is one hop).
+    SpillChain { lane: String, target: String },
+    /// An earlier, strictly more general lane captures every request
+    /// this lane matches — the lane is dead config.
+    ShadowedLane { lane: String, by: String },
+    /// The config text itself could not be parsed.
+    Syntax { line: usize, msg: String },
+}
+
+impl AdmissionError {
+    /// Stable machine-readable code, asserted by the malformed-config
+    /// conformance fixtures.
+    pub fn code(&self) -> &'static str {
+        match self {
+            AdmissionError::NoLanes => "no-lanes",
+            AdmissionError::EmptyLaneName => "empty-lane-name",
+            AdmissionError::DuplicateLane(_) => "duplicate-lane",
+            AdmissionError::TooManyLanes(_) => "too-many-lanes",
+            AdmissionError::BadPath { .. } => "bad-path",
+            AdmissionError::ZeroQuota(_) => "zero-quota",
+            AdmissionError::QuotaBelowBatch { .. } => "quota-below-batch",
+            AdmissionError::ZeroWeight(_) => "zero-weight",
+            AdmissionError::SpillUnknownLane { .. } => "spill-unknown-lane",
+            AdmissionError::SpillSelf(_) => "spill-self",
+            AdmissionError::SpillChain { .. } => "spill-chain",
+            AdmissionError::ShadowedLane { .. } => "shadowed-lane",
+            AdmissionError::Syntax { .. } => "syntax",
+        }
+    }
+}
+
+impl std::fmt::Display for AdmissionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdmissionError::NoLanes => {
+                write!(f, "admission config declares no lanes")
+            }
+            AdmissionError::EmptyLaneName => {
+                write!(f, "a lane has an empty name")
+            }
+            AdmissionError::DuplicateLane(n) => {
+                write!(f, "duplicate lane `{n}`: lane names must be unique")
+            }
+            AdmissionError::TooManyLanes(n) => write!(
+                f,
+                "config declares {n} lanes; at most {MAX_LANES} are \
+                 supported"
+            ),
+            AdmissionError::BadPath { lane, path } => write!(
+                f,
+                "lane `{lane}`: path `{path}` must start with '/'"
+            ),
+            AdmissionError::ZeroQuota(lane) => write!(
+                f,
+                "lane `{lane}`: quota must be >= 1 token"
+            ),
+            AdmissionError::QuotaBelowBatch { lane, quota, max_batch } => {
+                write!(
+                    f,
+                    "lane `{lane}`: quota {quota} tokens is below \
+                     max_batch {max_batch}, so its queue could never \
+                     fill a batch"
+                )
+            }
+            AdmissionError::ZeroWeight(lane) => write!(
+                f,
+                "lane `{lane}`: weight must be >= 1"
+            ),
+            AdmissionError::SpillUnknownLane { lane, target } => write!(
+                f,
+                "lane `{lane}` spills into `{target}`, which is not a \
+                 configured lane"
+            ),
+            AdmissionError::SpillSelf(lane) => write!(
+                f,
+                "lane `{lane}` spills into itself"
+            ),
+            AdmissionError::SpillChain { lane, target } => write!(
+                f,
+                "lane `{lane}` spills into `{target}`, which itself \
+                 spills; spilling is one hop (the target must shed)"
+            ),
+            AdmissionError::ShadowedLane { lane, by } => write!(
+                f,
+                "lane `{lane}` is unreachable: earlier lane `{by}` \
+                 matches everything it matches"
+            ),
+            AdmissionError::Syntax { line, msg } => {
+                write!(f, "admission config line {line}: {msg}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for AdmissionError {}
+
+/// Why one *request* was refused at admission. Maps to 503-style
+/// responses on the wire; implements `Display` + `Error` and converts
+/// into the shared [`crate::Error`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AdmitError {
+    /// No lane matched the request.
+    NoRoute { path: String },
+    /// The matched lane (and its spill target, if any) is at quota.
+    LaneFull { lane: String },
+    /// The request alone exceeds `max_batch` tokens and can never
+    /// flush.
+    TooLarge { lane: String, max_batch: usize },
+}
+
+impl std::fmt::Display for AdmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdmitError::NoRoute { path } => write!(
+                f,
+                "no admission lane matches request path `{path}`"
+            ),
+            AdmitError::LaneFull { lane } => write!(
+                f,
+                "lane `{lane}` is at its token quota (back-pressure); \
+                 retry after a flush"
+            ),
+            AdmitError::TooLarge { lane, max_batch } => write!(
+                f,
+                "request exceeds lane `{lane}`'s max_batch \
+                 ({max_batch} tokens) and can never flush"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for AdmitError {}
+
+/// The declarative admission config: an ordered list of lanes,
+/// first-match-wins. Parse one from text with
+/// [`AdmissionConfig::parse`], validate + compile it with
+/// [`AdmissionConfig::compile`].
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct AdmissionConfig {
+    pub lanes: Vec<LaneSpec>,
+}
+
+fn num<T: std::str::FromStr>(
+    line: usize,
+    key: &str,
+    s: &str,
+) -> Result<T, AdmissionError> {
+    s.parse().map_err(|_| AdmissionError::Syntax {
+        line,
+        msg: format!("`{key}` expects a number, got `{s}`"),
+    })
+}
+
+impl AdmissionConfig {
+    /// Parse the line-based config text (the same format the
+    /// conformance fixtures and `--lanes FILE` use):
+    ///
+    /// ```text
+    /// # comment
+    /// lane realtime
+    ///   path_prefix /v1/generate
+    ///   tenant acme
+    ///   min_priority 4
+    ///   quota 4096
+    ///   weight 8
+    ///   max_wait 500
+    ///   overflow spill bulk
+    /// lane bulk
+    ///   quota 1024
+    /// ```
+    ///
+    /// `lane NAME` opens a lane; the keys that follow set its fields
+    /// (`path` is an exact match, `path_prefix` a prefix match;
+    /// `overflow` is `shed` or `spill LANE`). Indentation is free-form.
+    /// Unrecognized directives are [`AdmissionError::Syntax`] — parsing
+    /// is validation too.
+    pub fn parse(text: &str) -> Result<AdmissionConfig, AdmissionError> {
+        let mut lanes: Vec<LaneSpec> = Vec::new();
+        for (i, raw) in text.lines().enumerate() {
+            let ln = i + 1;
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            let key = it.next().expect("non-empty trimmed line");
+            let rest: Vec<&str> = it.collect();
+            if key == "lane" {
+                match rest.as_slice() {
+                    [name] => lanes.push(LaneSpec::new(name)),
+                    _ => {
+                        return Err(AdmissionError::Syntax {
+                            line: ln,
+                            msg: "expected `lane NAME`".to_string(),
+                        })
+                    }
+                }
+                continue;
+            }
+            let Some(lane) = lanes.last_mut() else {
+                return Err(AdmissionError::Syntax {
+                    line: ln,
+                    msg: format!("`{key}` before any `lane`"),
+                });
+            };
+            match (key, rest.as_slice()) {
+                ("path", [p]) => {
+                    lane.path = Some(PathMatch::Exact(p.to_string()))
+                }
+                ("path_prefix", [p]) => {
+                    lane.path = Some(PathMatch::Prefix(p.to_string()))
+                }
+                ("tenant", [t]) => lane.tenant = Some(t.to_string()),
+                ("min_priority", [n]) => {
+                    lane.min_priority = Some(num(ln, key, n)?)
+                }
+                ("quota", [n]) => lane.quota = num(ln, key, n)?,
+                ("weight", [n]) => lane.weight = num(ln, key, n)?,
+                ("max_wait", [n]) => lane.max_wait = num(ln, key, n)?,
+                ("overflow", ["shed"]) => {
+                    lane.overflow = BackPressure::Shed
+                }
+                ("overflow", ["spill", t]) => {
+                    lane.overflow = BackPressure::Spill(t.to_string())
+                }
+                _ => {
+                    return Err(AdmissionError::Syntax {
+                        line: ln,
+                        msg: format!("unrecognized directive `{line}`"),
+                    })
+                }
+            }
+        }
+        Ok(AdmissionConfig { lanes })
+    }
+
+    /// Validate the config against an engine `max_batch` without
+    /// building queues. [`AdmissionConfig::compile`] runs this first;
+    /// it is public so config can be checked before an engine exists.
+    pub fn validate(&self, max_batch: usize) -> Result<(), AdmissionError> {
+        if self.lanes.is_empty() {
+            return Err(AdmissionError::NoLanes);
+        }
+        if self.lanes.len() > MAX_LANES {
+            return Err(AdmissionError::TooManyLanes(self.lanes.len()));
+        }
+        for (j, lane) in self.lanes.iter().enumerate() {
+            if lane.name.is_empty() {
+                return Err(AdmissionError::EmptyLaneName);
+            }
+            if self.lanes[..j].iter().any(|l| l.name == lane.name) {
+                return Err(AdmissionError::DuplicateLane(lane.name.clone()));
+            }
+            if let Some(
+                PathMatch::Exact(p) | PathMatch::Prefix(p),
+            ) = &lane.path
+            {
+                if !p.starts_with('/') {
+                    return Err(AdmissionError::BadPath {
+                        lane: lane.name.clone(),
+                        path: p.clone(),
+                    });
+                }
+            }
+            if lane.quota == 0 {
+                return Err(AdmissionError::ZeroQuota(lane.name.clone()));
+            }
+            if lane.quota < max_batch {
+                return Err(AdmissionError::QuotaBelowBatch {
+                    lane: lane.name.clone(),
+                    quota: lane.quota,
+                    max_batch,
+                });
+            }
+            if lane.weight == 0 {
+                return Err(AdmissionError::ZeroWeight(lane.name.clone()));
+            }
+            if let BackPressure::Spill(target) = &lane.overflow {
+                let Some(t) =
+                    self.lanes.iter().find(|l| l.name == *target)
+                else {
+                    return Err(AdmissionError::SpillUnknownLane {
+                        lane: lane.name.clone(),
+                        target: target.clone(),
+                    });
+                };
+                if t.name == lane.name {
+                    return Err(AdmissionError::SpillSelf(
+                        lane.name.clone(),
+                    ));
+                }
+                if t.overflow != BackPressure::Shed {
+                    return Err(AdmissionError::SpillChain {
+                        lane: lane.name.clone(),
+                        target: target.clone(),
+                    });
+                }
+            }
+            if let Some(by) =
+                self.lanes[..j].iter().find(|l| covers(l, lane))
+            {
+                return Err(AdmissionError::ShadowedLane {
+                    lane: lane.name.clone(),
+                    by: by.name.clone(),
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Validate and compile: match rules become a [`CompiledMatcher`],
+    /// each lane gets its own [`BatchQueue`] of `quota` tokens over
+    /// `d_model`-wide rows flushing at `max_batch`.
+    pub fn compile(
+        &self,
+        d_model: usize,
+        max_batch: usize,
+    ) -> Result<Admission, AdmissionError> {
+        self.validate(max_batch)?;
+        let matcher = CompiledMatcher::build(&self.lanes);
+        let lanes: Vec<LaneState> = self
+            .lanes
+            .iter()
+            .map(|l| LaneState {
+                queue: BatchQueue::new(
+                    d_model,
+                    max_batch,
+                    l.max_wait,
+                    l.quota,
+                ),
+                admitted: 0,
+                rejected: 0,
+                spilled_in: 0,
+                latencies: Vec::new(),
+                latency_sum: 0.0,
+            })
+            .collect();
+        let spill: Vec<Option<usize>> = self
+            .lanes
+            .iter()
+            .map(|l| match &l.overflow {
+                BackPressure::Shed => None,
+                BackPressure::Spill(t) => {
+                    self.lanes.iter().position(|x| x.name == *t)
+                }
+            })
+            .collect();
+        // flush order: descending weight, ties in config order — the
+        // deterministic priority the overload tests pin
+        let mut order: Vec<u16> = (0..self.lanes.len() as u16).collect();
+        order.sort_by_key(|&i| {
+            (std::cmp::Reverse(self.lanes[i as usize].weight), i)
+        });
+        Ok(Admission {
+            specs: self.lanes.clone(),
+            matcher,
+            lanes,
+            spill,
+            order,
+            d_model,
+            max_batch,
+            unrouted: 0,
+        })
+    }
+}
+
+/// One node of the prefix byte-trie: sorted outgoing edges plus the
+/// (config-ordered) prefix lanes terminating here.
+#[derive(Debug, Default)]
+struct TrieNode {
+    edges: Vec<(u8, u32)>,
+    lanes: Vec<u16>,
+}
+
+/// Per-lane non-path rules, indexed by lane for the compiled
+/// evaluation.
+#[derive(Debug)]
+struct RestPred {
+    tenant: Option<String>,
+    min_priority: Option<u8>,
+}
+
+/// The compiled matcher tree: a sorted exact-path table (binary
+/// search), a byte-trie over path prefixes, and the pathless lanes.
+/// Built once by [`AdmissionConfig::compile`]; evaluation walks
+/// pre-built vectors only — no allocation, no hashing.
+#[derive(Debug)]
+pub struct CompiledMatcher {
+    preds: Vec<RestPred>,
+    /// `(path, lanes)` sorted by path; lane lists ascend in config
+    /// order.
+    exact: Vec<(String, Vec<u16>)>,
+    trie: Vec<TrieNode>,
+    pathless: Vec<u16>,
+}
+
+impl CompiledMatcher {
+    fn build(specs: &[LaneSpec]) -> CompiledMatcher {
+        let preds = specs
+            .iter()
+            .map(|s| RestPred {
+                tenant: s.tenant.clone(),
+                min_priority: s.min_priority,
+            })
+            .collect();
+        let mut exact: Vec<(String, Vec<u16>)> = Vec::new();
+        let mut trie = vec![TrieNode::default()];
+        let mut pathless: Vec<u16> = Vec::new();
+        for (i, spec) in specs.iter().enumerate() {
+            let li = i as u16;
+            match &spec.path {
+                None => pathless.push(li),
+                Some(PathMatch::Exact(p)) => {
+                    match exact
+                        .binary_search_by(|(q, _)| q.as_str().cmp(p))
+                    {
+                        Ok(pos) => exact[pos].1.push(li),
+                        Err(pos) => {
+                            exact.insert(pos, (p.clone(), vec![li]))
+                        }
+                    }
+                }
+                Some(PathMatch::Prefix(p)) => {
+                    let mut node = 0usize;
+                    for &b in p.as_bytes() {
+                        let found = trie[node]
+                            .edges
+                            .iter()
+                            .find(|&&(eb, _)| eb == b)
+                            .map(|&(_, next)| next as usize);
+                        node = match found {
+                            Some(next) => next,
+                            None => {
+                                trie.push(TrieNode::default());
+                                let next = trie.len() - 1;
+                                trie[node].edges.push((b, next as u32));
+                                next
+                            }
+                        };
+                    }
+                    trie[node].lanes.push(li);
+                }
+            }
+        }
+        for n in &mut trie {
+            n.edges.sort_unstable_by_key(|&(b, _)| b);
+        }
+        CompiledMatcher { preds, exact, trie, pathless }
+    }
+
+    /// First lane in the (config-ascending) candidate list whose
+    /// non-path rules accept `meta`.
+    fn first_rest_match(
+        &self,
+        lanes: &[u16],
+        meta: &RequestMeta,
+    ) -> Option<u16> {
+        lanes.iter().copied().find(|&li| {
+            let p = &self.preds[li as usize];
+            let tenant_ok = match p.tenant.as_deref() {
+                None => true,
+                Some(t) => meta.tenant.as_deref() == Some(t),
+            };
+            let prio_ok = match p.min_priority {
+                None => true,
+                Some(mp) => meta.priority >= mp,
+            };
+            tenant_ok && prio_ok
+        })
+    }
+
+    /// The first-match-wins lane for `meta`, or `None`. Computed as
+    /// the minimum config index over the exact-table hit, every trie
+    /// node on the path's byte walk, and the pathless list — which is
+    /// exactly the linear scan's answer (property-pinned against
+    /// [`Admission::classify_reference`]). Zero allocation.
+    pub fn evaluate(&self, meta: &RequestMeta) -> Option<usize> {
+        let mut best = u16::MAX;
+        if let Ok(pos) = self
+            .exact
+            .binary_search_by(|(q, _)| q.as_str().cmp(&meta.path))
+        {
+            if let Some(li) =
+                self.first_rest_match(&self.exact[pos].1, meta)
+            {
+                best = best.min(li);
+            }
+        }
+        let bytes = meta.path.as_bytes();
+        let mut node = Some(0usize);
+        let mut i = 0;
+        while let Some(n) = node {
+            if let Some(li) = self.first_rest_match(&self.trie[n].lanes, meta)
+            {
+                best = best.min(li);
+            }
+            if i >= bytes.len() {
+                break;
+            }
+            node = self.trie[n]
+                .edges
+                .binary_search_by_key(&bytes[i], |&(eb, _)| eb)
+                .ok()
+                .map(|pos| self.trie[n].edges[pos].1 as usize);
+            i += 1;
+        }
+        if let Some(li) = self.first_rest_match(&self.pathless, meta) {
+            best = best.min(li);
+        }
+        if best == u16::MAX { None } else { Some(best as usize) }
+    }
+}
+
+/// Live per-lane state: the lane's own bounded queue plus its stats.
+#[derive(Debug)]
+struct LaneState {
+    queue: BatchQueue,
+    admitted: usize,
+    rejected: usize,
+    /// Submissions admitted here after overflowing their matched lane.
+    spilled_in: usize,
+    latencies: Vec<f64>,
+    latency_sum: f64,
+}
+
+/// Per-lane telemetry, reported in
+/// [`ServeReport::lanes`](super::ServeReport::lanes).
+#[derive(Debug, Clone, Default)]
+pub struct LaneStats {
+    pub name: String,
+    pub weight: u32,
+    /// Submissions this lane's queue accepted (including spill-ins).
+    pub admitted: usize,
+    /// Submissions refused while this lane was the matched lane.
+    pub rejected: usize,
+    /// Of `admitted`, how many overflowed here from another lane.
+    pub spilled_in: usize,
+    /// Requests completed (latency samples recorded).
+    pub completed: usize,
+    /// Tokens still queued in this lane.
+    pub queue_depth_tokens: usize,
+    pub latency_mean_us: f64,
+    pub latency_p50_us: f64,
+    pub latency_p99_us: f64,
+}
+
+/// A compiled admission front: the matcher tree plus one live
+/// [`BatchQueue`] per lane. Built by [`AdmissionConfig::compile`];
+/// both the virtual-clock [`AdmittedRuntime`] and the wall-clock
+/// `serve::Server` drive one of these.
+#[derive(Debug)]
+pub struct Admission {
+    specs: Vec<LaneSpec>,
+    matcher: CompiledMatcher,
+    lanes: Vec<LaneState>,
+    spill: Vec<Option<usize>>,
+    /// Lane indices in flush order (descending weight, config order).
+    order: Vec<u16>,
+    d_model: usize,
+    max_batch: usize,
+    /// Submissions no lane matched ([`AdmitError::NoRoute`]).
+    unrouted: usize,
+}
+
+impl Admission {
+    /// A single catch-all lane over the runtime config's queue bounds —
+    /// what `Server::start` uses when no admission config is given, so
+    /// the un-fronted server keeps its exact pre-admission semantics.
+    pub fn single(d_model: usize, cfg: &ServeConfig) -> Admission {
+        let mut lane = LaneSpec::new("default");
+        lane.quota = cfg.queue_tokens;
+        lane.max_wait = cfg.max_wait;
+        AdmissionConfig { lanes: vec![lane] }
+            .compile(d_model, cfg.max_batch)
+            .expect("a single catch-all lane over a valid ServeConfig \
+                     cannot fail validation")
+    }
+
+    pub fn d_model(&self) -> usize {
+        self.d_model
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    pub fn n_lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    pub fn lane_name(&self, lane: usize) -> &str {
+        &self.specs[lane].name
+    }
+
+    /// The validated lane specs, config order.
+    pub fn specs(&self) -> &[LaneSpec] {
+        &self.specs
+    }
+
+    /// The compiled first-match lane for `meta` (the hot path).
+    pub fn classify(&self, meta: &RequestMeta) -> Option<usize> {
+        self.matcher.evaluate(meta)
+    }
+
+    /// The naive first-match-wins linear scan over the lane specs: the
+    /// parity oracle [`Self::classify`] is property-tested bit-equal
+    /// to (the `Router::forward_reference` pattern).
+    pub fn classify_reference(&self, meta: &RequestMeta) -> Option<usize> {
+        self.specs.iter().position(|s| lane_matches(s, meta))
+    }
+
+    /// Classify and enqueue one request of `h.len() / d_model` token
+    /// rows at tick `now`. On success the returned id encodes the
+    /// admitting lane ([`lane_of_id`]). A full lane spills once if
+    /// configured, else sheds; rejections are charged to the *matched*
+    /// lane's stats.
+    pub fn submit(
+        &mut self,
+        meta: &RequestMeta,
+        h: &[f32],
+        now: u64,
+    ) -> Result<u64, AdmitError> {
+        let Some(lane) = self.matcher.evaluate(meta) else {
+            self.unrouted += 1;
+            return Err(AdmitError::NoRoute { path: meta.path.clone() });
+        };
+        match self.lanes[lane].queue.submit(h, now) {
+            Ok(local) => {
+                self.lanes[lane].admitted += 1;
+                return Ok(global_id(lane, local));
+            }
+            Err(SubmitError::TooLarge) => {
+                self.lanes[lane].rejected += 1;
+                return Err(AdmitError::TooLarge {
+                    lane: self.specs[lane].name.clone(),
+                    max_batch: self.max_batch,
+                });
+            }
+            Err(SubmitError::Full) => {}
+        }
+        if let Some(target) = self.spill[lane] {
+            if let Ok(local) = self.lanes[target].queue.submit(h, now) {
+                self.lanes[target].admitted += 1;
+                self.lanes[target].spilled_in += 1;
+                return Ok(global_id(target, local));
+            }
+        }
+        self.lanes[lane].rejected += 1;
+        Err(AdmitError::LaneFull { lane: self.specs[lane].name.clone() })
+    }
+
+    /// Pop the next due micro-batch across lanes, highest weight
+    /// first, rewriting member ids to their global (lane-encoded)
+    /// form. `all` pops regardless of flush conditions (drain).
+    /// Returns the flushed lane, or `None` when nothing is due.
+    pub fn pop_due(
+        &mut self,
+        now: u64,
+        all: bool,
+        h: &mut Vec<f32>,
+        m: &mut Vec<BatchMember>,
+    ) -> Option<usize> {
+        for &li in &self.order {
+            let lane = li as usize;
+            let q = &mut self.lanes[lane].queue;
+            let due = if all { !q.is_empty() } else { q.ready(now) };
+            if due {
+                q.pop_batch(h, m);
+                for mem in m.iter_mut() {
+                    mem.id = global_id(lane, mem.id);
+                }
+                return Some(lane);
+            }
+        }
+        None
+    }
+
+    /// Record a flushed batch's completions against `lane`'s latency
+    /// stats (the batch [`Self::pop_due`] returned that lane for).
+    pub fn record(&mut self, lane: usize, completions: &[Completion]) {
+        let st = &mut self.lanes[lane];
+        for c in completions {
+            st.latencies.push(c.latency as f64);
+            st.latency_sum += c.latency as f64;
+        }
+    }
+
+    /// Tokens queued across all lanes.
+    pub fn pending_tokens(&self) -> usize {
+        self.lanes.iter().map(|l| l.queue.pending_tokens()).sum()
+    }
+
+    /// Whether every lane queue is empty.
+    pub fn is_empty(&self) -> bool {
+        self.lanes.iter().all(|l| l.queue.is_empty())
+    }
+
+    pub fn total_admitted(&self) -> usize {
+        self.lanes.iter().map(|l| l.admitted).sum()
+    }
+
+    /// All refusals: per-lane sheds plus unrouted submissions.
+    pub fn total_rejected(&self) -> usize {
+        self.unrouted + self.lanes.iter().map(|l| l.rejected).sum::<usize>()
+    }
+
+    /// Submissions no lane matched.
+    pub fn unrouted(&self) -> usize {
+        self.unrouted
+    }
+
+    /// Per-lane stats snapshots, config order.
+    pub fn lane_stats(&self) -> Vec<LaneStats> {
+        self.specs
+            .iter()
+            .zip(&self.lanes)
+            .map(|(spec, st)| {
+                let mut lat = st.latencies.clone();
+                lat.sort_by(f64::total_cmp);
+                LaneStats {
+                    name: spec.name.clone(),
+                    weight: spec.weight,
+                    admitted: st.admitted,
+                    rejected: st.rejected,
+                    spilled_in: st.spilled_in,
+                    completed: st.latencies.len(),
+                    queue_depth_tokens: st.queue.pending_tokens(),
+                    latency_mean_us: st.latency_sum
+                        / st.latencies.len().max(1) as f64,
+                    latency_p50_us: percentile_nearest_rank(&lat, 0.5),
+                    latency_p99_us: percentile_nearest_rank(&lat, 0.99),
+                }
+            })
+            .collect()
+    }
+}
+
+/// The virtual-clock serving loop behind an [`Admission`] front:
+/// submissions classify into lanes, due batches flush highest-weight
+/// first through [`ServeRuntime::run_batch`], and the report carries
+/// per-lane stats. Deterministic under
+/// [`ServeConfig::service_ticks`] — the overload tests and
+/// `serve-bench --lanes` drive this.
+pub struct AdmittedRuntime<E: MoeEngine = Box<dyn MoeEngine>> {
+    rt: ServeRuntime<E>,
+    adm: Admission,
+    h: Vec<f32>,
+    m: Vec<BatchMember>,
+    done: Vec<Completion>,
+}
+
+impl<E: MoeEngine> AdmittedRuntime<E> {
+    /// Couple an admission front with a fresh runtime over `engine`.
+    /// The admission must have been compiled against the same
+    /// `d_model` and `max_batch` as `cfg`.
+    pub fn new(
+        engine: E,
+        cfg: ServeConfig,
+        adm: Admission,
+    ) -> AdmittedRuntime<E> {
+        assert_eq!(
+            adm.d_model(),
+            engine.d_model(),
+            "admission compiled for a different d_model"
+        );
+        assert_eq!(
+            adm.max_batch(),
+            cfg.max_batch,
+            "admission compiled for a different max_batch"
+        );
+        AdmittedRuntime {
+            rt: ServeRuntime::with_engine(engine, cfg),
+            adm,
+            h: Vec::new(),
+            m: Vec::new(),
+            done: Vec::new(),
+        }
+    }
+
+    pub fn admission(&self) -> &Admission {
+        &self.adm
+    }
+
+    pub fn runtime(&self) -> &ServeRuntime<E> {
+        &self.rt
+    }
+
+    /// Classify + enqueue at tick `now`; see [`Admission::submit`].
+    pub fn submit(
+        &mut self,
+        meta: &RequestMeta,
+        h: &[f32],
+        now: u64,
+    ) -> Result<u64, AdmitError> {
+        self.adm.submit(meta, h, now)
+    }
+
+    fn flush(&mut self, now: u64, all: bool) -> &[Completion] {
+        self.done.clear();
+        while let Some(lane) =
+            self.adm.pop_due(now, all, &mut self.h, &mut self.m)
+        {
+            let completed = self.rt.run_batch(&self.h, &self.m, now);
+            self.adm.record(lane, completed);
+            self.done.extend_from_slice(completed);
+        }
+        &self.done
+    }
+
+    /// Advance to tick `now`: flush every due lane batch (highest
+    /// weight first) and return the completions.
+    pub fn poll(&mut self, now: u64) -> &[Completion] {
+        self.flush(now, false)
+    }
+
+    /// Flush everything still queued in every lane (end of run /
+    /// shutdown drain).
+    pub fn drain(&mut self, now: u64) -> &[Completion] {
+        self.flush(now, true)
+    }
+
+    /// The runtime's aggregate report with admission-side rejections
+    /// merged in and per-lane stats attached.
+    pub fn report(&self) -> ServeReport {
+        let mut rep = self.rt.report();
+        rep.rejected += self.adm.total_rejected();
+        rep.lanes = self.adm.lane_stats();
+        rep
+    }
+}
+
+/// Drive `n_requests` open-loop requests of `req_tokens` tokens
+/// through an admitted runtime: Poisson arrivals at `rate_tok_per_s`
+/// (1 tick = 1 µs), request metas drawn uniformly from `metas` (one
+/// canonical meta per lane gives an even tenant mix), payload tokens
+/// from `mix`, refused submissions counted per lane (no retry), and a
+/// final drain. The admitted twin of [`super::run_open_loop`].
+pub fn run_admitted_open_loop<E: MoeEngine>(
+    runtime: &mut AdmittedRuntime<E>,
+    mix: &crate::data::MixtureStream,
+    rng: &mut crate::util::rng::Rng,
+    metas: &[RequestMeta],
+    n_requests: usize,
+    req_tokens: usize,
+    rate_tok_per_s: f64,
+) {
+    assert!(rate_tok_per_s > 0.0, "arrival rate must be positive");
+    assert!(!metas.is_empty(), "need at least one request meta");
+    assert!(
+        req_tokens <= runtime.adm.max_batch(),
+        "req_tokens {req_tokens} exceeds max_batch {} — requests \
+         would never fit a micro-batch",
+        runtime.adm.max_batch()
+    );
+    let mean_gap_us = req_tokens as f64 / rate_tok_per_s * 1e6;
+    let mut h = Vec::new();
+    let mut now = 0u64;
+    for _ in 0..n_requests {
+        let gap = (-(1.0 - rng.f64()).ln() * mean_gap_us).max(1.0);
+        now += gap as u64;
+        runtime.poll(now);
+        mix.fill(rng, req_tokens, &mut h);
+        let meta = &metas[rng.below(metas.len())];
+        let _ = runtime.submit(meta, &h, now);
+    }
+    runtime.drain(now);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::MixtureStream;
+    use crate::engine::{Backend, Engine};
+    use crate::experts::ExpertBank;
+    use crate::router::synthetic_lpr_router;
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    const D: usize = 8;
+
+    fn tiny_engine(seed: u64) -> Box<dyn MoeEngine> {
+        let mut rng = Rng::new(seed);
+        let r = synthetic_lpr_router("cosine", &mut rng, D, 4, 4, 2);
+        let bank = ExpertBank::new(&Rng::new(9), 4, D, 6);
+        Engine::builder()
+            .layer(r.plan().clone(), bank)
+            .backend(Backend::Scoped { threads: 1 })
+            .build()
+            .unwrap()
+            .into_inner()
+    }
+
+    fn meta(path: &str, tenant: Option<&str>, priority: u8) -> RequestMeta {
+        RequestMeta {
+            path: path.to_string(),
+            tenant: tenant.map(str::to_string),
+            priority,
+        }
+    }
+
+    #[test]
+    fn parse_round_trips_the_documented_format() {
+        let text = "\
+# comment
+lane realtime
+  path_prefix /v1/generate
+  tenant acme
+  min_priority 4
+  quota 4096
+  weight 8
+  max_wait 500
+  overflow spill bulk
+
+lane bulk
+  path /v1/batch
+  quota 1024
+";
+        let cfg = AdmissionConfig::parse(text).unwrap();
+        assert_eq!(cfg.lanes.len(), 2);
+        let rt = &cfg.lanes[0];
+        assert_eq!(rt.name, "realtime");
+        assert_eq!(
+            rt.path,
+            Some(PathMatch::Prefix("/v1/generate".to_string()))
+        );
+        assert_eq!(rt.tenant.as_deref(), Some("acme"));
+        assert_eq!(rt.min_priority, Some(4));
+        assert_eq!(rt.quota, 4096);
+        assert_eq!(rt.weight, 8);
+        assert_eq!(rt.max_wait, 500);
+        assert_eq!(rt.overflow, BackPressure::Spill("bulk".to_string()));
+        let bulk = &cfg.lanes[1];
+        assert_eq!(bulk.path, Some(PathMatch::Exact("/v1/batch".into())));
+        assert_eq!(bulk.quota, 1024);
+        assert_eq!(bulk.weight, 1, "default");
+        assert_eq!(bulk.overflow, BackPressure::Shed, "default");
+        cfg.validate(64).unwrap();
+    }
+
+    /// Every validation failure is a typed error naming the offending
+    /// lane/value, with the stable code the fixtures assert — the
+    /// `EngineBuildError` convention.
+    #[test]
+    fn validation_rejects_bad_configs_with_typed_errors() {
+        let lane = |n: &str| LaneSpec::new(n);
+        let cases: Vec<(Vec<LaneSpec>, &str)> = vec![
+            (vec![], "no-lanes"),
+            (vec![lane("")], "empty-lane-name"),
+            (vec![lane("a"), lane("a")], "duplicate-lane"),
+            (
+                vec![{
+                    let mut l = lane("a");
+                    l.path = Some(PathMatch::Exact("api".into()));
+                    l
+                }],
+                "bad-path",
+            ),
+            (
+                vec![{
+                    let mut l = lane("a");
+                    l.quota = 0;
+                    l
+                }],
+                "zero-quota",
+            ),
+            (
+                vec![{
+                    let mut l = lane("a");
+                    l.quota = 2;
+                    l
+                }],
+                "quota-below-batch",
+            ),
+            (
+                vec![{
+                    let mut l = lane("a");
+                    l.weight = 0;
+                    l
+                }],
+                "zero-weight",
+            ),
+            (
+                vec![{
+                    let mut l = lane("a");
+                    l.overflow = BackPressure::Spill("ghost".into());
+                    l
+                }],
+                "spill-unknown-lane",
+            ),
+            (
+                vec![{
+                    let mut l = lane("a");
+                    l.overflow = BackPressure::Spill("a".into());
+                    l
+                }],
+                "spill-self",
+            ),
+            (
+                vec![
+                    {
+                        let mut l = lane("a");
+                        l.overflow = BackPressure::Spill("b".into());
+                        l
+                    },
+                    {
+                        let mut l = lane("b");
+                        l.overflow = BackPressure::Spill("a".into());
+                        l.path = Some(PathMatch::Prefix("/b".into()));
+                        l
+                    },
+                ],
+                "spill-chain",
+            ),
+            (
+                vec![lane("all"), {
+                    let mut l = lane("dead");
+                    l.path = Some(PathMatch::Prefix("/x".into()));
+                    l
+                }],
+                "shadowed-lane",
+            ),
+        ];
+        for (lanes, code) in cases {
+            let err = AdmissionConfig { lanes: lanes.clone() }
+                .validate(4)
+                .unwrap_err();
+            assert_eq!(err.code(), code, "{err}");
+            assert!(!err.to_string().is_empty());
+            // compile surfaces the identical error
+            let cerr = AdmissionConfig { lanes }
+                .compile(D, 4)
+                .map(|_| ())
+                .unwrap_err();
+            assert_eq!(cerr, err);
+        }
+        let many: Vec<LaneSpec> =
+            (0..=MAX_LANES).map(|i| lane(&format!("l{i}"))).collect();
+        let err =
+            AdmissionConfig { lanes: many }.validate(4).unwrap_err();
+        assert_eq!(err.code(), "too-many-lanes");
+    }
+
+    #[test]
+    fn parse_errors_are_typed_syntax_errors() {
+        for text in [
+            "bogus",
+            "lane",
+            "lane a b",
+            "quota 4",                   // field before any lane
+            "lane a\n  quota none",      // non-numeric
+            "lane a\n  overflow maybe",  // unknown policy
+        ] {
+            let err = AdmissionConfig::parse(text).unwrap_err();
+            assert_eq!(err.code(), "syntax", "{text:?} -> {err}");
+        }
+        // the error names the 1-based line
+        let err =
+            AdmissionConfig::parse("lane a\nwat").unwrap_err();
+        assert!(err.to_string().contains("line 2"), "{err}");
+    }
+
+    /// Exact table, prefix trie, and pathless list all feed the same
+    /// first-match-wins answer; overlapping rules resolve to the
+    /// minimum config index.
+    #[test]
+    fn compiled_matcher_first_match_semantics() {
+        let mut exact = LaneSpec::new("exact-acme");
+        exact.path = Some(PathMatch::Exact("/v1/gen".into()));
+        exact.tenant = Some("acme".into());
+        let mut deep = LaneSpec::new("deep");
+        deep.path = Some(PathMatch::Prefix("/v1/gen".into()));
+        let mut wide = LaneSpec::new("wide");
+        wide.path = Some(PathMatch::Prefix("/v1".into()));
+        let mut vip = LaneSpec::new("vip");
+        vip.min_priority = Some(5);
+        let cfg =
+            AdmissionConfig { lanes: vec![exact, deep, wide, vip] };
+        let adm = cfg.compile(D, 4).unwrap();
+        let cases = [
+            (meta("/v1/gen", Some("acme"), 0), Some(0)),
+            (meta("/v1/gen", Some("umbrella"), 0), Some(1)),
+            (meta("/v1/gen/fast", None, 0), Some(1)),
+            (meta("/v1/embed", None, 0), Some(2)),
+            (meta("/v2/gen", None, 5), Some(3)),
+            (meta("/v2/gen", None, 4), None),
+            (meta("/", None, 9), Some(3)),
+        ];
+        for (m, want) in cases {
+            assert_eq!(adm.classify(&m), want, "{m:?}");
+            assert_eq!(adm.classify_reference(&m), want, "{m:?}");
+        }
+    }
+
+    fn random_path(rng: &mut Rng) -> String {
+        const SEGS: [&str; 4] = ["/api", "/chat", "/v2", "/x"];
+        const TAILS: [&str; 3] = ["", "/gen", "/raw"];
+        let mut p = SEGS[rng.below(SEGS.len())].to_string();
+        if rng.below(2) == 0 {
+            p.push_str(SEGS[rng.below(SEGS.len())]);
+        }
+        p.push_str(TAILS[rng.below(TAILS.len())]);
+        p
+    }
+
+    /// Satellite property: the compiled matcher tree is bit-equal to
+    /// the naive linear-scan reference on random valid configs and
+    /// random requests.
+    #[test]
+    fn compiled_matcher_equals_reference_on_random_configs() {
+        const TENANTS: [&str; 3] = ["acme", "globex", "umbrella"];
+        forall(
+            60,
+            3117,
+            |rng| {
+                let mut cfg = AdmissionConfig::default();
+                let want = 1 + rng.below(6);
+                // rejection-sample lanes: keep a candidate only if the
+                // config stays valid (no shadowing etc.)
+                for t in 0..24 {
+                    if cfg.lanes.len() >= want {
+                        break;
+                    }
+                    let mut lane = LaneSpec::new(&format!("l{t}"));
+                    lane.path = match rng.below(4) {
+                        0 => None,
+                        1 => Some(PathMatch::Exact(random_path(rng))),
+                        _ => Some(PathMatch::Prefix(random_path(rng))),
+                    };
+                    if rng.below(2) == 0 {
+                        lane.tenant =
+                            Some(TENANTS[rng.below(3)].to_string());
+                    }
+                    if rng.below(2) == 0 {
+                        lane.min_priority =
+                            Some((rng.below(4) * 3) as u8);
+                    }
+                    cfg.lanes.push(lane);
+                    if cfg.validate(16).is_err() {
+                        cfg.lanes.pop();
+                    }
+                }
+                let metas: Vec<RequestMeta> = (0..40)
+                    .map(|_| RequestMeta {
+                        path: random_path(rng),
+                        tenant: if rng.below(3) == 0 {
+                            None
+                        } else {
+                            Some(TENANTS[rng.below(3)].to_string())
+                        },
+                        priority: rng.below(12) as u8,
+                    })
+                    .collect();
+                (cfg, metas)
+            },
+            |(cfg, metas)| {
+                if cfg.lanes.is_empty() {
+                    return Ok(()); // nothing sampled valid this case
+                }
+                let adm = cfg
+                    .compile(D, 16)
+                    .map_err(|e| format!("compile: {e}"))?;
+                for m in metas {
+                    let fast = adm.classify(m);
+                    let slow = adm.classify_reference(m);
+                    if fast != slow {
+                        return Err(format!(
+                            "compiled {fast:?} != reference {slow:?} \
+                             for {m:?}"
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Satellite property (determinism pin): admission never reorders
+    /// requests within a lane — per-lane completion order equals
+    /// per-lane admission order — and `admitted + rejected` conserves
+    /// submissions exactly.
+    #[test]
+    fn admission_preserves_within_lane_fifo_and_conserves() {
+        forall(
+            12,
+            4243,
+            |rng| {
+                let n = 10 + rng.below(40);
+                let reqs: Vec<(bool, usize, u64)> = (0..n)
+                    .map(|_| {
+                        (
+                            rng.below(2) == 0,
+                            1 + rng.below(4),
+                            rng.below(6) as u64,
+                        )
+                    })
+                    .collect();
+                reqs
+            },
+            |reqs| {
+                let max_batch = 8;
+                let mut hi = LaneSpec::new("hi");
+                hi.path = Some(PathMatch::Prefix("/hi".into()));
+                hi.quota = max_batch;
+                hi.weight = 4;
+                hi.max_wait = 6;
+                let mut lo = LaneSpec::new("lo");
+                lo.quota = max_batch;
+                lo.max_wait = 6;
+                let adm = AdmissionConfig { lanes: vec![hi, lo] }
+                    .compile(D, max_batch)
+                    .map_err(|e| e.to_string())?;
+                let cfg = ServeConfig {
+                    max_batch,
+                    max_wait: 6,
+                    service_ticks: Some(3),
+                    ..ServeConfig::default()
+                };
+                let mut rt =
+                    AdmittedRuntime::new(tiny_engine(5), cfg, adm);
+                let mut accepted: Vec<Vec<u64>> = vec![vec![], vec![]];
+                let mut now = 0u64;
+                let mut done: Vec<Completion> = Vec::new();
+                for &(is_hi, n_tok, gap) in reqs {
+                    now += gap;
+                    done.extend_from_slice(rt.poll(now));
+                    let m = if is_hi {
+                        meta("/hi/req", None, 0)
+                    } else {
+                        meta("/other", None, 0)
+                    };
+                    let h = vec![0.1f32; n_tok * D];
+                    if let Ok(id) = rt.submit(&m, &h, now) {
+                        accepted[lane_of_id(id)].push(id);
+                    }
+                }
+                done.extend_from_slice(rt.drain(now));
+                // per-lane completion order == per-lane admission order
+                for lane in 0..2 {
+                    let got: Vec<u64> = done
+                        .iter()
+                        .map(|c| c.id)
+                        .filter(|&id| lane_of_id(id) == lane)
+                        .collect();
+                    if got != accepted[lane] {
+                        return Err(format!(
+                            "lane {lane} reordered: {got:?} != \
+                             {accepted:?}"
+                        ));
+                    }
+                }
+                // exact conservation, including per-lane stats
+                let rep = rt.report();
+                let n_acc: usize =
+                    accepted.iter().map(Vec::len).sum();
+                if rep.requests != n_acc {
+                    return Err(format!(
+                        "completed {} != accepted {n_acc}",
+                        rep.requests
+                    ));
+                }
+                if rep.requests + rep.rejected != reqs.len() {
+                    return Err(format!(
+                        "requests {} + rejected {} != submissions {}",
+                        rep.requests,
+                        rep.rejected,
+                        reqs.len()
+                    ));
+                }
+                let stats = rt.admission().lane_stats();
+                for (lane, st) in stats.iter().enumerate() {
+                    if st.admitted != accepted[lane].len() {
+                        return Err(format!(
+                            "lane {lane} admitted {} != {}",
+                            st.admitted,
+                            accepted[lane].len()
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Weight orders flushing: when two lanes are due at the same tick
+    /// the higher-weight lane's batch enters the engine first.
+    #[test]
+    fn higher_weight_lane_flushes_first() {
+        let mut hi = LaneSpec::new("hi");
+        hi.path = Some(PathMatch::Prefix("/hi".into()));
+        hi.quota = 64;
+        hi.weight = 8;
+        hi.max_wait = 5;
+        let mut lo = LaneSpec::new("lo");
+        lo.quota = 64;
+        lo.weight = 1;
+        lo.max_wait = 5;
+        let adm = AdmissionConfig { lanes: vec![hi, lo] }
+            .compile(D, 4)
+            .unwrap();
+        let cfg = ServeConfig {
+            max_batch: 4,
+            max_wait: 5,
+            service_ticks: Some(10),
+            ..ServeConfig::default()
+        };
+        let mut rt = AdmittedRuntime::new(tiny_engine(6), cfg, adm);
+        let h = vec![0.2f32; 2 * D];
+        // submit low-priority first so config order alone cannot win
+        let lo_id = rt.submit(&meta("/other", None, 0), &h, 0).unwrap();
+        let hi_id = rt.submit(&meta("/hi/x", None, 0), &h, 0).unwrap();
+        let done = rt.poll(5).to_vec(); // both lanes age out together
+        assert_eq!(done.len(), 2);
+        assert_eq!(done[0].id, hi_id, "high weight flushes first");
+        assert_eq!(done[1].id, lo_id);
+        // serial engine: the high-weight batch finished first
+        assert!(done[0].done_at < done[1].done_at);
+        assert_eq!(done[0].done_at, 15);
+        assert_eq!(done[1].done_at, 25);
+    }
+
+    /// Spill-once back-pressure: a full lane overflows into its
+    /// configured target; when the target is full too, the submission
+    /// sheds and is charged to the *matched* lane.
+    #[test]
+    fn spill_overflows_once_then_sheds() {
+        let mut a = LaneSpec::new("a");
+        a.path = Some(PathMatch::Prefix("/a".into()));
+        a.quota = 8;
+        a.overflow = BackPressure::Spill("b".into());
+        let mut b = LaneSpec::new("b");
+        b.quota = 8;
+        let mut adm = AdmissionConfig { lanes: vec![a, b] }
+            .compile(D, 8)
+            .unwrap();
+        let m = meta("/a/x", None, 0);
+        let full = vec![0.0f32; 8 * D];
+        let part = vec![0.0f32; 4 * D];
+        let id0 = adm.submit(&m, &full, 0).unwrap();
+        assert_eq!(lane_of_id(id0), 0);
+        // lane a is at quota: the next submission spills into b
+        let id1 = adm.submit(&m, &part, 1).unwrap();
+        assert_eq!(lane_of_id(id1), 1);
+        // b cannot absorb 8 more tokens either: shed, charged to a
+        let err = adm.submit(&m, &full, 2).unwrap_err();
+        assert_eq!(err, AdmitError::LaneFull { lane: "a".into() });
+        let stats = adm.lane_stats();
+        assert_eq!((stats[0].admitted, stats[0].rejected), (1, 1));
+        assert_eq!((stats[1].admitted, stats[1].spilled_in), (1, 1));
+        assert_eq!(adm.total_admitted(), 2);
+        assert_eq!(adm.total_rejected(), 1);
+        // an unmatched path is a typed NoRoute, counted as unrouted
+        let err = adm
+            .submit(&meta("/zzz", None, 0), &part, 3)
+            .unwrap_err();
+        assert!(matches!(err, AdmitError::NoRoute { .. }));
+        assert_eq!(adm.unrouted(), 1);
+        assert_eq!(adm.total_rejected(), 2);
+    }
+
+    /// The implicit single catch-all lane admits everything a bare
+    /// `BatchQueue` would — the un-fronted Server's semantics.
+    #[test]
+    fn single_catch_all_lane_admits_everything() {
+        let cfg = ServeConfig {
+            max_batch: 4,
+            queue_tokens: 16,
+            ..ServeConfig::default()
+        };
+        let mut adm = Admission::single(D, &cfg);
+        assert_eq!(adm.n_lanes(), 1);
+        assert_eq!(adm.lane_name(0), "default");
+        for m in [
+            RequestMeta::default(),
+            meta("/any/path", Some("acme"), 9),
+        ] {
+            assert_eq!(adm.classify(&m), Some(0));
+        }
+        let h = vec![0.0f32; 2 * D];
+        let id = adm.submit(&RequestMeta::default(), &h, 0).unwrap();
+        assert_eq!(lane_of_id(id), 0);
+        // oversized requests keep the typed refusal
+        let big = vec![0.0f32; 5 * D];
+        assert!(matches!(
+            adm.submit(&RequestMeta::default(), &big, 0),
+            Err(AdmitError::TooLarge { .. })
+        ));
+    }
+
+    /// Lane stats aggregate recorded completions with the shared
+    /// nearest-rank percentile convention.
+    #[test]
+    fn lane_stats_percentiles() {
+        let mut adm = Admission::single(D, &ServeConfig::default());
+        adm.record(
+            0,
+            &[
+                Completion { id: 0, n_tokens: 1, latency: 10, done_at: 10 },
+                Completion { id: 1, n_tokens: 1, latency: 20, done_at: 20 },
+            ],
+        );
+        let st = &adm.lane_stats()[0];
+        assert_eq!(st.completed, 2);
+        assert_eq!(st.latency_mean_us, 15.0);
+        assert_eq!(st.latency_p50_us, 10.0);
+        assert_eq!(st.latency_p99_us, 20.0);
+    }
+}

@@ -29,6 +29,18 @@
 //!   [`ServeRuntime::run_batch`], so `enqueue` never waits on a
 //!   forward), and exposes blocking `enqueue` / `await_completion` —
 //!   the deployable server loop over the same deterministic core.
+//! - [`admission::Admission`] — the compiled multi-lane admission
+//!   layer in front of either clock: [`admission::AdmissionConfig`]
+//!   declares lanes as data (path/tenant/priority match, per-lane
+//!   token quota, weight, back-pressure policy), validates into typed
+//!   [`admission::AdmissionError`]s like `EngineBuilder`, and compiles
+//!   once into a matcher evaluated per request with zero steady-state
+//!   allocation. Per-lane stats land in [`ServeReport::lanes`].
+//! - [`net::NetServer`] — the dependency-free TCP front-end: a
+//!   length-prefixed framing (HTTP/1.1-shaped lines behind the same
+//!   [`net::Wire`] trait) feeding `Server::enqueue_with` /
+//!   `await_completion`, with admission refusals answered as explicit
+//!   503-style responses.
 //!
 //! # Time model
 //!
@@ -54,10 +66,21 @@
 //! any layer count), so load fractions are honest for whichever engine
 //! the builder selected.
 
+pub mod admission;
+pub mod net;
 pub mod pool;
 pub mod queue;
 pub mod server;
 
+pub use admission::{
+    lane_of_id, run_admitted_open_loop, Admission, AdmissionConfig,
+    AdmissionError, AdmittedRuntime, AdmitError, BackPressure, LaneSpec,
+    LaneStats, PathMatch, RequestMeta, MAX_LANES,
+};
+pub use net::{
+    FrameError, HttpWire, LengthPrefixed, NetRequest, NetResponse,
+    NetServer, Status, Wire,
+};
 pub use pool::PoolEngine;
 pub use queue::{BatchMember, BatchQueue, SubmitError};
 pub use server::Server;
@@ -151,6 +174,9 @@ pub struct ServeReport {
     pub window_cv: f64,
     /// Layer-resolved rolling balance (`[L, E]` tracking), layer order.
     pub layers: Vec<LayerBalance>,
+    /// Per-lane admission stats (empty unless an
+    /// [`admission::Admission`] front-end produced this report).
+    pub lanes: Vec<LaneStats>,
 }
 
 impl ServeReport {
@@ -490,6 +516,7 @@ impl<E: MoeEngine> ServeRuntime<E> {
             window_min_max: balance.mean_min_max(),
             window_cv: balance.mean_cv(),
             layers: balance.per_layer(),
+            lanes: Vec::new(),
         }
     }
 }

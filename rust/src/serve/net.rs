@@ -1,0 +1,948 @@
+//! Dependency-free TCP front-end: framed requests over a loopback or
+//! LAN socket into the wall-clock [`Server`](super::Server).
+//!
+//! Two wire formats implement the same [`Wire`] trait:
+//!
+//! - [`LengthPrefixed`] — the native framing: a little-endian `u32`
+//!   payload length, then `u16`-prefixed path and tenant strings, a
+//!   priority byte, a declared token count, and the raw `f32` activation
+//!   rows. Symmetric fixed-size responses. This is the format
+//!   `lpr listen` speaks by default and the framing round-trip tests
+//!   exercise (split reads, coalesced frames, oversized frames,
+//!   partial-write shutdown).
+//! - [`HttpWire`] — HTTP/1.1-shaped request lines (`POST /path`),
+//!   `x-tenant` / `x-priority` headers, and the same `f32` body; lane
+//!   shedding maps to `503 Service Unavailable`, oversized payloads to
+//!   `413`, malformed framing to `400`. Shaped, not a full HTTP stack:
+//!   enough for `curl --data-binary` smoke tests.
+//!
+//! [`NetServer`] binds a listener, accepts on a polling loop, and runs
+//! one thread per connection: read a request, decode its
+//! [`RequestMeta`], feed `Server::enqueue_with` → `await_completion`,
+//! write the response. Admission refusals ([`AdmitError`]) are
+//! *responses*, not connection errors — the connection keeps serving,
+//! which is what makes lane shedding observable as explicit 503s.
+//! Framing errors close the connection after a best-effort error
+//! response (a split or half-written frame cannot be resynced).
+//!
+//! Connections serve requests sequentially (one in flight per
+//! connection — pipeline by opening more connections). Shut the
+//! [`NetServer`] down before the [`Server`](super::Server) so every
+//! in-flight `await_completion` can land.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::admission::{AdmitError, RequestMeta};
+use super::Server;
+
+/// Response status on the wire. [`Status::http_code`] is the HTTP
+/// mapping; [`Status::byte`] the length-prefixed encoding.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Status {
+    Ok,
+    /// The matched lane (and spill target) is at quota — shed.
+    LaneFull,
+    /// No admission lane matches the request.
+    NoRoute,
+    /// The request exceeds `max_batch` and can never flush.
+    TooLarge,
+    /// The frame itself was malformed or oversized.
+    BadFrame,
+}
+
+impl Status {
+    pub fn byte(self) -> u8 {
+        match self {
+            Status::Ok => 0,
+            Status::LaneFull => 1,
+            Status::NoRoute => 2,
+            Status::TooLarge => 3,
+            Status::BadFrame => 4,
+        }
+    }
+
+    pub fn from_byte(b: u8) -> Option<Status> {
+        Some(match b {
+            0 => Status::Ok,
+            1 => Status::LaneFull,
+            2 => Status::NoRoute,
+            3 => Status::TooLarge,
+            4 => Status::BadFrame,
+            _ => return None,
+        })
+    }
+
+    /// The HTTP status line this maps to: admission back-pressure is
+    /// an explicit 503, oversized payloads 413, bad framing 400.
+    pub fn http_code(self) -> (u16, &'static str) {
+        match self {
+            Status::Ok => (200, "OK"),
+            Status::LaneFull => (503, "Service Unavailable"),
+            Status::NoRoute => (503, "Service Unavailable"),
+            Status::TooLarge => (413, "Payload Too Large"),
+            Status::BadFrame => (400, "Bad Request"),
+        }
+    }
+
+    fn from_admit_error(e: &AdmitError) -> Status {
+        match e {
+            AdmitError::NoRoute { .. } => Status::NoRoute,
+            AdmitError::LaneFull { .. } => Status::LaneFull,
+            AdmitError::TooLarge { .. } => Status::TooLarge,
+        }
+    }
+}
+
+/// One decoded request from the wire.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetRequest {
+    pub meta: RequestMeta,
+    /// Activation length (f32 count) the client declared, if the
+    /// format carries one (cross-checked against the parsed `h.len()`
+    /// by the server; the wire itself does not know `d_model`).
+    pub declared_len: Option<u32>,
+    /// Activation rows, row-major `[n, d_model]`.
+    pub h: Vec<f32>,
+}
+
+/// One response on the wire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NetResponse {
+    pub status: Status,
+    /// The admitted request id (lane-encoded; 0 on errors).
+    pub id: u64,
+    pub n_tokens: u32,
+    /// Submission → completion latency, µs (0 on errors).
+    pub latency_us: u64,
+}
+
+/// Why a frame could not be read.
+#[derive(Debug)]
+pub enum FrameError {
+    /// Clean end-of-stream between frames.
+    Eof,
+    /// No bytes arrived within the read timeout (poll again).
+    Idle,
+    /// The frame declares more bytes than the wire allows.
+    Oversized { len: usize, max: usize },
+    /// The bytes violate the framing (including mid-frame EOF).
+    Malformed(String),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Eof => write!(f, "connection closed"),
+            FrameError::Idle => write!(f, "no request within timeout"),
+            FrameError::Oversized { len, max } => write!(
+                f,
+                "frame of {len} bytes exceeds the {max}-byte limit"
+            ),
+            FrameError::Malformed(m) => write!(f, "malformed frame: {m}"),
+            FrameError::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+/// A request/response wire format. Implementations must tolerate
+/// arbitrarily split and coalesced TCP reads (they see a raw byte
+/// stream), surface frames larger than their configured bound as
+/// [`FrameError::Oversized`] *before* buffering them, and report a
+/// timeout before the first byte of a frame as [`FrameError::Idle`]
+/// (so the connection loop can poll its stop flag).
+pub trait Wire: Send + Sync + 'static {
+    fn read_request(
+        &self,
+        r: &mut dyn Read,
+    ) -> Result<NetRequest, FrameError>;
+    fn write_response(
+        &self,
+        w: &mut dyn Write,
+        resp: &NetResponse,
+    ) -> std::io::Result<()>;
+    fn name(&self) -> &'static str;
+}
+
+fn would_block(e: &std::io::Error) -> bool {
+    matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut)
+}
+
+/// Mid-frame stalls retry on the socket's read timeout; give up after
+/// this many so a wedged peer cannot pin a connection thread forever.
+const FRAME_STALL_RETRIES: usize = 600;
+
+/// Read one byte, distinguishing idle (no data before timeout) from
+/// EOF. Only valid at a frame boundary.
+fn read_first(r: &mut dyn Read) -> Result<Option<u8>, FrameError> {
+    let mut b = [0u8; 1];
+    loop {
+        match r.read(&mut b) {
+            Ok(0) => return Ok(None),
+            Ok(_) => return Ok(Some(b[0])),
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) if would_block(&e) => return Err(FrameError::Idle),
+            Err(e) => return Err(FrameError::Io(e)),
+        }
+    }
+}
+
+/// Fill `buf` completely; EOF mid-frame is malformed, timeouts retry
+/// (bounded by [`FRAME_STALL_RETRIES`]).
+fn read_exact_frame(
+    r: &mut dyn Read,
+    buf: &mut [u8],
+) -> Result<(), FrameError> {
+    let mut off = 0;
+    let mut stalls = 0;
+    while off < buf.len() {
+        match r.read(&mut buf[off..]) {
+            Ok(0) => {
+                return Err(FrameError::Malformed(
+                    "connection closed mid-frame".to_string(),
+                ))
+            }
+            Ok(n) => off += n,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) if would_block(&e) => {
+                stalls += 1;
+                if stalls > FRAME_STALL_RETRIES {
+                    return Err(FrameError::Malformed(
+                        "peer stalled mid-frame".to_string(),
+                    ));
+                }
+            }
+            Err(e) => return Err(FrameError::Io(e)),
+        }
+    }
+    Ok(())
+}
+
+/// Byte-slice cursor for decoding a buffered frame payload.
+struct Cur<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], FrameError> {
+        if self.i + n > self.b.len() {
+            return Err(FrameError::Malformed(format!(
+                "frame payload truncated at byte {}",
+                self.i
+            )));
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, FrameError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, FrameError> {
+        let s = self.take(2)?;
+        Ok(u16::from_le_bytes([s[0], s[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32, FrameError> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn str(&mut self, n: usize) -> Result<String, FrameError> {
+        String::from_utf8(self.take(n)?.to_vec()).map_err(|_| {
+            FrameError::Malformed("string field is not utf-8".to_string())
+        })
+    }
+}
+
+/// The native length-prefixed framing. Request frame (all integers
+/// little-endian):
+///
+/// ```text
+/// u32 payload_len
+/// u16 path_len   | path bytes (utf-8)
+/// u16 tenant_len | tenant bytes (0 = no tenant)
+/// u8  priority
+/// u32 h_len                    declared f32 count (integrity check)
+/// f32 × h_len                  activation rows, n_tokens · d_model
+/// ```
+///
+/// Response frame: `u32 payload_len (=21) | u8 status | u64 id |
+/// u32 n_tokens | u64 latency_us`.
+#[derive(Debug, Clone)]
+pub struct LengthPrefixed {
+    /// Largest accepted request payload, bytes.
+    pub max_frame: usize,
+}
+
+impl Default for LengthPrefixed {
+    fn default() -> LengthPrefixed {
+        LengthPrefixed { max_frame: 1 << 20 }
+    }
+}
+
+impl LengthPrefixed {
+    /// Encode one request frame (the client side; tests and
+    /// `examples/` use this).
+    pub fn encode_request(meta: &RequestMeta, h: &[f32]) -> Vec<u8> {
+        let tenant = meta.tenant.as_deref().unwrap_or("");
+        let payload_len = 2
+            + meta.path.len()
+            + 2
+            + tenant.len()
+            + 1
+            + 4
+            + 4 * h.len();
+        let mut out = Vec::with_capacity(4 + payload_len);
+        out.extend_from_slice(&(payload_len as u32).to_le_bytes());
+        out.extend_from_slice(&(meta.path.len() as u16).to_le_bytes());
+        out.extend_from_slice(meta.path.as_bytes());
+        out.extend_from_slice(&(tenant.len() as u16).to_le_bytes());
+        out.extend_from_slice(tenant.as_bytes());
+        out.push(meta.priority);
+        out.extend_from_slice(&(h.len() as u32).to_le_bytes());
+        for &x in h {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+        out
+    }
+
+    /// Read one response frame (the client side).
+    pub fn read_response(
+        r: &mut dyn Read,
+    ) -> Result<NetResponse, FrameError> {
+        let mut len = [0u8; 4];
+        read_exact_frame(r, &mut len)?;
+        let len = u32::from_le_bytes(len) as usize;
+        if len != 21 {
+            return Err(FrameError::Malformed(format!(
+                "response payload of {len} bytes, expected 21"
+            )));
+        }
+        let mut buf = [0u8; 21];
+        read_exact_frame(r, &mut buf)?;
+        let mut c = Cur { b: &buf, i: 0 };
+        let status = Status::from_byte(c.u8()?).ok_or_else(|| {
+            FrameError::Malformed("unknown status byte".to_string())
+        })?;
+        let id = {
+            let s = c.take(8)?;
+            u64::from_le_bytes(s.try_into().expect("8 bytes"))
+        };
+        let n_tokens = c.u32()?;
+        let latency_us = {
+            let s = c.take(8)?;
+            u64::from_le_bytes(s.try_into().expect("8 bytes"))
+        };
+        Ok(NetResponse { status, id, n_tokens, latency_us })
+    }
+}
+
+impl Wire for LengthPrefixed {
+    fn read_request(
+        &self,
+        r: &mut dyn Read,
+    ) -> Result<NetRequest, FrameError> {
+        // the length prefix arrives byte-split like everything else:
+        // first byte decides idle/EOF, the rest must follow
+        let b0 = match read_first(r)? {
+            None => return Err(FrameError::Eof),
+            Some(b) => b,
+        };
+        let mut rest = [0u8; 3];
+        read_exact_frame(r, &mut rest)?;
+        let len = u32::from_le_bytes([b0, rest[0], rest[1], rest[2]])
+            as usize;
+        if len > self.max_frame {
+            return Err(FrameError::Oversized {
+                len,
+                max: self.max_frame,
+            });
+        }
+        let mut payload = vec![0u8; len];
+        read_exact_frame(r, &mut payload)?;
+        let mut c = Cur { b: &payload, i: 0 };
+        let path_len = c.u16()? as usize;
+        let path = c.str(path_len)?;
+        let tenant_len = c.u16()? as usize;
+        let tenant = c.str(tenant_len)?;
+        let priority = c.u8()?;
+        let n_len = c.u32()?;
+        let rest = c.take(payload.len() - c.i)?;
+        if rest.len() % 4 != 0 {
+            return Err(FrameError::Malformed(
+                "activation bytes not a multiple of 4".to_string(),
+            ));
+        }
+        let h: Vec<f32> = rest
+            .chunks_exact(4)
+            .map(|s| f32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+            .collect();
+        Ok(NetRequest {
+            meta: RequestMeta {
+                path,
+                tenant: if tenant.is_empty() { None } else { Some(tenant) },
+                priority,
+            },
+            declared_len: Some(n_len),
+            h,
+        })
+    }
+
+    fn write_response(
+        &self,
+        w: &mut dyn Write,
+        resp: &NetResponse,
+    ) -> std::io::Result<()> {
+        let mut out = [0u8; 25];
+        out[..4].copy_from_slice(&21u32.to_le_bytes());
+        out[4] = resp.status.byte();
+        out[5..13].copy_from_slice(&resp.id.to_le_bytes());
+        out[13..17].copy_from_slice(&resp.n_tokens.to_le_bytes());
+        out[17..25].copy_from_slice(&resp.latency_us.to_le_bytes());
+        w.write_all(&out)?;
+        w.flush()
+    }
+
+    fn name(&self) -> &'static str {
+        "length-prefixed"
+    }
+}
+
+/// HTTP/1.1-shaped wire: `POST <path> HTTP/1.1` request lines,
+/// `x-tenant` / `x-priority` / `content-length` headers, raw
+/// little-endian `f32` body. See the module docs for the status
+/// mapping.
+#[derive(Debug, Clone)]
+pub struct HttpWire {
+    /// Largest accepted body, bytes (headers are capped at 8 KiB).
+    pub max_body: usize,
+}
+
+impl Default for HttpWire {
+    fn default() -> HttpWire {
+        HttpWire { max_body: 1 << 20 }
+    }
+}
+
+const MAX_HEADER_BYTES: usize = 8 << 10;
+
+impl HttpWire {
+    /// Read one response (the client side): status line + headers;
+    /// the id/latency/token fields ride in `x-` headers.
+    pub fn read_response(
+        r: &mut dyn Read,
+    ) -> Result<NetResponse, FrameError> {
+        let head = read_until_blank_line(r, None)?;
+        let head = String::from_utf8(head).map_err(|_| {
+            FrameError::Malformed("response head not utf-8".to_string())
+        })?;
+        let mut lines = head.split("\r\n");
+        let status_line = lines.next().unwrap_or("");
+        let code: u16 = status_line
+            .split_whitespace()
+            .nth(1)
+            .and_then(|c| c.parse().ok())
+            .ok_or_else(|| {
+                FrameError::Malformed(format!(
+                    "bad status line `{status_line}`"
+                ))
+            })?;
+        let mut id = 0u64;
+        let mut n_tokens = 0u32;
+        let mut latency_us = 0u64;
+        let mut status_hdr: Option<Status> = None;
+        for line in lines {
+            let Some((k, v)) = line.split_once(':') else { continue };
+            let v = v.trim();
+            match k.to_ascii_lowercase().as_str() {
+                "x-request-id" => id = v.parse().unwrap_or(0),
+                "x-tokens" => n_tokens = v.parse().unwrap_or(0),
+                "x-latency-us" => latency_us = v.parse().unwrap_or(0),
+                "x-status" => {
+                    status_hdr = v.parse().ok().and_then(Status::from_byte)
+                }
+                _ => {}
+            }
+        }
+        // x-status disambiguates the two 503 causes; fall back to the
+        // code for foreign responses
+        let status = status_hdr.unwrap_or(match code {
+            200 => Status::Ok,
+            413 => Status::TooLarge,
+            503 => Status::LaneFull,
+            _ => Status::BadFrame,
+        });
+        Ok(NetResponse { status, id, n_tokens, latency_us })
+    }
+}
+
+/// Accumulate bytes until the `\r\n\r\n` head terminator (capped at
+/// [`MAX_HEADER_BYTES`]). `first` is a byte already consumed by the
+/// idle/EOF probe, if any.
+fn read_until_blank_line(
+    r: &mut dyn Read,
+    first: Option<u8>,
+) -> Result<Vec<u8>, FrameError> {
+    let mut head: Vec<u8> = Vec::new();
+    if let Some(b) = first {
+        head.push(b);
+    }
+    let mut one = [0u8; 1];
+    loop {
+        if head.ends_with(b"\r\n\r\n") {
+            head.truncate(head.len() - 4);
+            return Ok(head);
+        }
+        if head.len() > MAX_HEADER_BYTES {
+            return Err(FrameError::Oversized {
+                len: head.len(),
+                max: MAX_HEADER_BYTES,
+            });
+        }
+        read_exact_frame(r, &mut one)?;
+        head.push(one[0]);
+    }
+}
+
+impl Wire for HttpWire {
+    fn read_request(
+        &self,
+        r: &mut dyn Read,
+    ) -> Result<NetRequest, FrameError> {
+        let b0 = match read_first(r)? {
+            None => return Err(FrameError::Eof),
+            Some(b) => b,
+        };
+        let head = read_until_blank_line(r, Some(b0))?;
+        let head = String::from_utf8(head).map_err(|_| {
+            FrameError::Malformed("request head not utf-8".to_string())
+        })?;
+        let mut lines = head.split("\r\n");
+        let request_line = lines.next().unwrap_or("");
+        let mut parts = request_line.split_whitespace();
+        let (method, path) = (
+            parts.next().unwrap_or(""),
+            parts.next().unwrap_or(""),
+        );
+        if method != "POST" || path.is_empty() {
+            return Err(FrameError::Malformed(format!(
+                "expected `POST <path> HTTP/1.1`, got `{request_line}`"
+            )));
+        }
+        let mut tenant: Option<String> = None;
+        let mut priority = 0u8;
+        let mut content_length: Option<usize> = None;
+        for line in lines {
+            let Some((k, v)) = line.split_once(':') else { continue };
+            let v = v.trim();
+            match k.to_ascii_lowercase().as_str() {
+                "x-tenant" => {
+                    if !v.is_empty() {
+                        tenant = Some(v.to_string());
+                    }
+                }
+                "x-priority" => {
+                    priority = v.parse().map_err(|_| {
+                        FrameError::Malformed(format!(
+                            "x-priority `{v}` is not a u8"
+                        ))
+                    })?;
+                }
+                "content-length" => {
+                    content_length = Some(v.parse().map_err(|_| {
+                        FrameError::Malformed(format!(
+                            "content-length `{v}` is not a number"
+                        ))
+                    })?);
+                }
+                _ => {}
+            }
+        }
+        let Some(len) = content_length else {
+            return Err(FrameError::Malformed(
+                "missing content-length".to_string(),
+            ));
+        };
+        if len > self.max_body {
+            return Err(FrameError::Oversized { len, max: self.max_body });
+        }
+        if len % 4 != 0 {
+            return Err(FrameError::Malformed(
+                "body bytes not a multiple of 4".to_string(),
+            ));
+        }
+        let mut body = vec![0u8; len];
+        read_exact_frame(r, &mut body)?;
+        let h: Vec<f32> = body
+            .chunks_exact(4)
+            .map(|s| f32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+            .collect();
+        Ok(NetRequest {
+            meta: RequestMeta {
+                path: path.to_string(),
+                tenant,
+                priority,
+            },
+            declared_len: None,
+            h,
+        })
+    }
+
+    fn write_response(
+        &self,
+        w: &mut dyn Write,
+        resp: &NetResponse,
+    ) -> std::io::Result<()> {
+        let (code, phrase) = resp.status.http_code();
+        write!(
+            w,
+            "HTTP/1.1 {code} {phrase}\r\n\
+             x-status: {}\r\n\
+             x-request-id: {}\r\n\
+             x-tokens: {}\r\n\
+             x-latency-us: {}\r\n\
+             content-length: 0\r\n\
+             \r\n",
+            resp.status.byte(),
+            resp.id,
+            resp.n_tokens,
+            resp.latency_us
+        )?;
+        w.flush()
+    }
+
+    fn name(&self) -> &'static str {
+        "http"
+    }
+}
+
+/// The polling read timeout connection threads use so they can notice
+/// the stop flag between requests.
+const CONN_POLL: Duration = Duration::from_millis(50);
+
+/// A running TCP listener feeding a [`Server`](super::Server). Bind
+/// with [`NetServer::start`]; stop with [`NetServer::shutdown`] (or
+/// drop). The `lpr listen` command is a thin wrapper over this.
+pub struct NetServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<std::thread::JoinHandle<()>>,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
+    /// serve `server` over `wire`.
+    pub fn start<W: Wire>(
+        server: Arc<Server>,
+        addr: &str,
+        wire: W,
+    ) -> std::io::Result<NetServer> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let wire = Arc::new(wire);
+        let stop_accept = stop.clone();
+        let accept = std::thread::Builder::new()
+            .name("lpr-net-accept".into())
+            .spawn(move || {
+                let mut conns: Vec<std::thread::JoinHandle<()>> =
+                    Vec::new();
+                while !stop_accept.load(Ordering::Acquire) {
+                    match listener.accept() {
+                        Ok((stream, _peer)) => {
+                            let server = server.clone();
+                            let wire = wire.clone();
+                            let stop = stop_accept.clone();
+                            conns.retain(|c| !c.is_finished());
+                            let h = std::thread::Builder::new()
+                                .name("lpr-net-conn".into())
+                                .spawn(move || {
+                                    handle_conn(server, wire, stream, stop)
+                                })
+                                .expect("spawn connection thread");
+                            conns.push(h);
+                        }
+                        Err(e) if would_block(&e) => {
+                            std::thread::sleep(Duration::from_millis(1));
+                        }
+                        Err(_) => break,
+                    }
+                }
+                for c in conns {
+                    let _ = c.join();
+                }
+            })
+            .expect("spawn accept thread");
+        Ok(NetServer { addr, stop, accept: Some(accept) })
+    }
+
+    /// The bound address (resolves ephemeral ports).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, wait for every connection thread to finish its
+    /// in-flight request, and return.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+/// Serve one connection: requests in, responses out, until EOF, a
+/// framing error, or server stop. Admission refusals answer and keep
+/// the connection; framing errors answer best-effort and close.
+fn handle_conn<W: Wire>(
+    server: Arc<Server>,
+    wire: Arc<W>,
+    mut stream: TcpStream,
+    stop: Arc<AtomicBool>,
+) {
+    let _ = stream.set_read_timeout(Some(CONN_POLL));
+    let _ = stream.set_nodelay(true);
+    let d = server.d_model();
+    let reject = |status: Status| NetResponse {
+        status,
+        id: 0,
+        n_tokens: 0,
+        latency_us: 0,
+    };
+    loop {
+        match wire.read_request(&mut stream) {
+            Ok(req) => {
+                let declared_mismatch = match req.declared_len {
+                    Some(t) => t as usize != req.h.len(),
+                    None => false,
+                };
+                if req.h.is_empty()
+                    || req.h.len() % d != 0
+                    || declared_mismatch
+                {
+                    if wire
+                        .write_response(
+                            &mut stream,
+                            &reject(Status::BadFrame),
+                        )
+                        .is_err()
+                    {
+                        return;
+                    }
+                    continue;
+                }
+                let resp = match server.enqueue_with(&req.meta, &req.h) {
+                    Ok(id) => {
+                        let c = server.await_completion(id);
+                        NetResponse {
+                            status: Status::Ok,
+                            id,
+                            n_tokens: c.n_tokens as u32,
+                            latency_us: c.latency,
+                        }
+                    }
+                    Err(e) => reject(Status::from_admit_error(&e)),
+                };
+                if wire.write_response(&mut stream, &resp).is_err() {
+                    return;
+                }
+            }
+            Err(FrameError::Idle) => {
+                if stop.load(Ordering::Acquire) {
+                    return;
+                }
+            }
+            Err(FrameError::Eof) => return,
+            Err(FrameError::Oversized { .. }) => {
+                // answer if the peer still listens, then close: the
+                // stream cannot be resynced past an unread frame
+                let _ = wire
+                    .write_response(&mut stream, &reject(Status::TooLarge));
+                return;
+            }
+            Err(FrameError::Malformed(_)) => {
+                let _ = wire
+                    .write_response(&mut stream, &reject(Status::BadFrame));
+                return;
+            }
+            Err(FrameError::Io(_)) => return,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn meta(path: &str, tenant: Option<&str>, priority: u8) -> RequestMeta {
+        RequestMeta {
+            path: path.to_string(),
+            tenant: tenant.map(str::to_string),
+            priority,
+        }
+    }
+
+    #[test]
+    fn length_prefixed_round_trips_requests() {
+        let wire = LengthPrefixed::default();
+        let h = vec![0.5f32, -1.25, 3.0, 0.0];
+        let m = meta("/v1/generate", Some("acme"), 7);
+        let bytes = LengthPrefixed::encode_request(&m, &h);
+        let req =
+            wire.read_request(&mut Cursor::new(bytes)).unwrap();
+        assert_eq!(req.meta, m);
+        assert_eq!(req.declared_len, Some(4));
+        assert_eq!(req.h, h);
+        // no tenant encodes as the empty string and decodes to None
+        let m2 = meta("/x", None, 0);
+        let req2 = wire
+            .read_request(&mut Cursor::new(
+                LengthPrefixed::encode_request(&m2, &h),
+            ))
+            .unwrap();
+        assert_eq!(req2.meta.tenant, None);
+    }
+
+    #[test]
+    fn length_prefixed_round_trips_responses() {
+        let wire = LengthPrefixed::default();
+        let resp = NetResponse {
+            status: Status::LaneFull,
+            id: (3u64 << 48) | 42,
+            n_tokens: 9,
+            latency_us: 12_345,
+        };
+        let mut buf = Vec::new();
+        wire.write_response(&mut buf, &resp).unwrap();
+        let got =
+            LengthPrefixed::read_response(&mut Cursor::new(buf)).unwrap();
+        assert_eq!(got, resp);
+    }
+
+    #[test]
+    fn oversized_and_truncated_frames_are_typed_errors() {
+        let wire = LengthPrefixed { max_frame: 64 };
+        // length prefix larger than the bound: refused before any
+        // payload is buffered
+        let mut oversized = Vec::new();
+        oversized.extend_from_slice(&1_000u32.to_le_bytes());
+        match wire.read_request(&mut Cursor::new(oversized)) {
+            Err(FrameError::Oversized { len: 1_000, max: 64 }) => {}
+            other => panic!("expected Oversized, got {other:?}"),
+        }
+        // a frame cut mid-payload is malformed (EOF mid-frame)
+        let full = LengthPrefixed::encode_request(
+            &meta("/x", None, 0),
+            &[1.0f32; 4],
+        );
+        let cut = full[..full.len() - 3].to_vec();
+        match wire.read_request(&mut Cursor::new(cut)) {
+            Err(FrameError::Malformed(_)) => {}
+            other => panic!("expected Malformed, got {other:?}"),
+        }
+        // empty stream at a frame boundary is a clean EOF
+        match wire.read_request(&mut Cursor::new(Vec::new())) {
+            Err(FrameError::Eof) => {}
+            other => panic!("expected Eof, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn http_wire_parses_shaped_requests() {
+        let wire = HttpWire::default();
+        let body: Vec<u8> = [0.5f32, 1.5]
+            .iter()
+            .flat_map(|x| x.to_le_bytes())
+            .collect();
+        let mut req = Vec::new();
+        req.extend_from_slice(
+            b"POST /v1/generate HTTP/1.1\r\n\
+              X-Tenant: acme\r\n\
+              X-Priority: 9\r\n\
+              Content-Length: 8\r\n\
+              \r\n",
+        );
+        req.extend_from_slice(&body);
+        let got = wire.read_request(&mut Cursor::new(req)).unwrap();
+        assert_eq!(got.meta, meta("/v1/generate", Some("acme"), 9));
+        assert_eq!(got.declared_len, None);
+        assert_eq!(got.h, vec![0.5f32, 1.5]);
+        // a GET is not a submission
+        let bad = b"GET / HTTP/1.1\r\n\r\n".to_vec();
+        assert!(matches!(
+            wire.read_request(&mut Cursor::new(bad)),
+            Err(FrameError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn http_wire_renders_status_mapping() {
+        let wire = HttpWire::default();
+        for (status, code) in [
+            (Status::Ok, 200),
+            (Status::LaneFull, 503),
+            (Status::NoRoute, 503),
+            (Status::TooLarge, 413),
+            (Status::BadFrame, 400),
+        ] {
+            let mut buf = Vec::new();
+            wire.write_response(
+                &mut buf,
+                &NetResponse {
+                    status,
+                    id: 7,
+                    n_tokens: 2,
+                    latency_us: 11,
+                },
+            )
+            .unwrap();
+            let text = String::from_utf8(buf.clone()).unwrap();
+            assert!(
+                text.starts_with(&format!("HTTP/1.1 {code} ")),
+                "{text}"
+            );
+            // and the client parser round-trips the exact status
+            let got =
+                HttpWire::read_response(&mut Cursor::new(buf)).unwrap();
+            assert_eq!(got.status, status);
+            assert_eq!(got.id, 7);
+            assert_eq!(got.latency_us, 11);
+        }
+    }
+
+    #[test]
+    fn status_bytes_round_trip() {
+        for s in [
+            Status::Ok,
+            Status::LaneFull,
+            Status::NoRoute,
+            Status::TooLarge,
+            Status::BadFrame,
+        ] {
+            assert_eq!(Status::from_byte(s.byte()), Some(s));
+        }
+        assert_eq!(Status::from_byte(99), None);
+    }
+}

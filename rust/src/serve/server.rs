@@ -9,12 +9,16 @@
 //! supplies the missing real-time half **without forking the
 //! deterministic core**:
 //!
-//! - `enqueue` stamps real `Instant`-derived microsecond arrivals
-//!   (1 tick = 1 µs since server start) onto a server-owned
-//!   [`BatchQueue`];
+//! - `enqueue` / `enqueue_with` stamp real `Instant`-derived
+//!   microsecond arrivals (1 tick = 1 µs since server start) onto a
+//!   server-owned [`Admission`] front — one catch-all lane by default
+//!   ([`Server::start`]), or any compiled multi-lane
+//!   [`AdmissionConfig`](super::AdmissionConfig) via
+//!   [`Server::with_admission`];
 //! - a background flusher thread pops due micro-batches every
-//!   `poll_interval` and forwards them via [`ServeRuntime::run_batch`],
-//!   so batches flush by size *and* by age with no caller in the loop;
+//!   `poll_interval` (highest-weight lane first) and forwards them via
+//!   [`ServeRuntime::run_batch`], so batches flush by size *and* by
+//!   age with no caller in the loop;
 //! - `await_completion` blocks (condvar) until the request's
 //!   [`Completion`] lands — the blocking client API a driver thread
 //!   pool needs.
@@ -26,19 +30,20 @@
 //! Virtual-clock tests stay bit-identical; the server only chooses
 //! *which* `now` to pass.
 //!
-//! Lock split & order: the submission [`BatchQueue`] lives behind its
-//! **own** lock, separate from the runtime (engine) lock. `enqueue`
-//! takes only the queue lock — held for a memcpy — so submissions land
-//! even while a batch forward holds the runtime lock for its full
-//! service time (pinned by `enqueue_lands_while_a_batch_forward_is_in_flight`).
-//! The flusher takes the queue lock (pop), releases it, then the
-//! runtime lock (forward, via [`ServeRuntime::run_batch`]), then the
-//! completion map; `await_completion` takes only the map;
-//! `report`/`pending_tokens` take one lock each — never two locks at
-//! once in any path except the flusher's strictly-ordered
-//! queue → runtime → map, so no ordering cycle exists. `Full`
-//! rejections are counted on a lock-free counter and merged into
-//! [`ServeReport::rejected`] by [`Server::report`].
+//! Lock split & order: the [`Admission`] (every lane queue plus the
+//! admission counters) lives behind its **own** lock, separate from
+//! the runtime (engine) lock. `enqueue` takes only the admission lock
+//! — held for a classify + memcpy — so submissions land even while a
+//! batch forward holds the runtime lock for its full service time
+//! (pinned by `enqueue_lands_while_a_batch_forward_is_in_flight`).
+//! The flusher takes the admission lock (pop one due batch), releases
+//! it, then the runtime lock (forward, via
+//! [`ServeRuntime::run_batch`]), releases it, then the admission lock
+//! again (latency record) and the completion map — strictly one lock
+//! at a time, so no ordering cycle exists. Admission refusals are
+//! counted per lane under the admission lock and merged into
+//! [`ServeReport::rejected`] (with per-lane detail in
+//! [`ServeReport::lanes`]) by [`Server::report`].
 //!
 //! Unclaimed completions are retained in a **bounded** buffer (the
 //! [`DONE_RETAIN`] most recent); older unclaimed records are discarded
@@ -47,13 +52,13 @@
 //! completions promptly, or use `try_completion`.
 
 use std::collections::{HashMap, VecDeque};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+use super::admission::{Admission, AdmitError, RequestMeta};
 use super::{
-    BatchMember, BatchQueue, Completion, ServeReport, ServeRuntime,
-    SubmitError,
+    BatchMember, Completion, ServeReport, ServeRuntime, SubmitError,
 };
 
 /// Unclaimed completions retained before the oldest are discarded.
@@ -83,16 +88,18 @@ impl DoneMap {
 
 struct Shared {
     rt: Mutex<ServeRuntime>,
-    /// The submission queue, behind its own lock (never the runtime's)
-    /// so `enqueue` lands while a batch forward is in flight.
-    queue: Mutex<BatchQueue>,
-    /// `SubmitError::Full` count, merged into the report's `rejected`.
-    rejected: AtomicUsize,
+    /// The admission front (lane queues + counters), behind its own
+    /// lock (never the runtime's) so `enqueue` lands while a batch
+    /// forward is in flight.
+    adm: Mutex<Admission>,
     /// Completions not yet claimed by `await_completion`.
     done: Mutex<DoneMap>,
     cv: Condvar,
     stop: AtomicBool,
     t0: Instant,
+    /// Engine model width, cached so request validation (`net.rs`)
+    /// never needs the runtime lock.
+    d_model: usize,
 }
 
 impl Shared {
@@ -100,11 +107,12 @@ impl Shared {
         self.t0.elapsed().as_micros() as u64
     }
 
-    /// One flusher step: pop every due micro-batch (queue lock only),
-    /// forward each through the runtime (runtime lock only), and
-    /// publish completions. `final_drain` flushes everything still
-    /// queued (shutdown), regardless of the flush conditions. `h`/`m`
-    /// are flusher-owned scratch so the steady state stays
+    /// One flusher step: pop every due micro-batch (admission lock
+    /// only, highest-weight lane first), forward each through the
+    /// runtime (runtime lock only), record lane latency, and publish
+    /// completions. `final_drain` flushes everything still queued
+    /// (shutdown), regardless of the flush conditions. `h`/`m` are
+    /// flusher-owned scratch so the steady state stays
     /// allocation-free.
     fn pump(
         &self,
@@ -114,24 +122,21 @@ impl Shared {
     ) {
         loop {
             let now = self.now_us();
-            {
-                let mut q =
-                    self.queue.lock().expect("submission queue poisoned");
-                let due = if final_drain {
-                    !q.is_empty()
-                } else {
-                    q.ready(now)
-                };
-                if !due {
-                    return;
-                }
-                q.pop_batch(h, m);
-            } // queue lock released: submissions land during the forward
+            let lane = {
+                let mut adm =
+                    self.adm.lock().expect("admission front poisoned");
+                adm.pop_due(now, final_drain, h, m)
+            }; // admission lock released: submissions land during the forward
+            let Some(lane) = lane else { return };
             let completed: Vec<Completion> = {
                 let mut rt =
                     self.rt.lock().expect("serve runtime poisoned");
                 rt.run_batch(h, m, now).to_vec()
             };
+            self.adm
+                .lock()
+                .expect("admission front poisoned")
+                .record(lane, &completed);
             if !completed.is_empty() {
                 let mut done = self.done.lock().expect("completion map");
                 for c in completed {
@@ -143,10 +148,11 @@ impl Shared {
     }
 }
 
-/// A running wall-clock server. Construct with [`Server::start`];
-/// `&Server` is shareable across client threads (`enqueue` /
-/// `await_completion` take `&self`). Dropping the server stops and
-/// joins the flusher after a final drain.
+/// A running wall-clock server. Construct with [`Server::start`] (one
+/// catch-all admission lane) or [`Server::with_admission`] (a compiled
+/// multi-lane config); `&Server` is shareable across client threads
+/// (`enqueue` / `await_completion` take `&self`). Dropping the server
+/// stops and joins the flusher after a final drain.
 ///
 /// ```no_run
 /// use lpr::engine::{Backend, Engine};
@@ -175,36 +181,54 @@ pub struct Server {
 }
 
 impl Server {
-    /// Start serving `rt` with the default 200 µs flusher cadence.
+    /// Start serving `rt` with a single catch-all admission lane and
+    /// the default 200 µs flusher cadence.
     pub fn start(rt: ServeRuntime) -> Server {
         Server::with_poll_interval(rt, Duration::from_micros(200))
     }
 
-    /// Start serving `rt`, waking the background flusher every
-    /// `poll_interval` (the granularity at which age-based flushes and
-    /// completions are observed; latency floors at roughly one
-    /// interval).
+    /// Start serving `rt` with a single catch-all admission lane
+    /// (quota/age from the runtime's [`super::ServeConfig`] — the
+    /// pre-admission server semantics, exactly), waking the background
+    /// flusher every `poll_interval` (the granularity at which
+    /// age-based flushes and completions are observed; latency floors
+    /// at roughly one interval).
     pub fn with_poll_interval(
         rt: ServeRuntime,
         poll_interval: Duration,
     ) -> Server {
-        // the server owns the batching queue (its own lock); the
-        // runtime's internal queue goes unused and stays empty
-        let cfg = rt.config();
-        let queue = BatchQueue::new(
-            rt.engine().d_model(),
-            cfg.max_batch,
-            cfg.max_wait,
-            cfg.queue_tokens,
+        let adm = Admission::single(rt.engine().d_model(), rt.config());
+        Server::with_admission(rt, adm, poll_interval)
+    }
+
+    /// Start serving `rt` behind a compiled multi-lane [`Admission`]
+    /// (from [`super::AdmissionConfig::compile`]). The admission must
+    /// agree with the runtime on `d_model` and `max_batch` — a
+    /// mismatch would let one side build batches the other refuses.
+    pub fn with_admission(
+        rt: ServeRuntime,
+        adm: Admission,
+        poll_interval: Duration,
+    ) -> Server {
+        let d_model = rt.engine().d_model();
+        assert_eq!(
+            adm.d_model(),
+            d_model,
+            "admission d_model must match the engine"
+        );
+        assert_eq!(
+            adm.max_batch(),
+            rt.config().max_batch,
+            "admission max_batch must match the serve config"
         );
         let shared = Arc::new(Shared {
             rt: Mutex::new(rt),
-            queue: Mutex::new(queue),
-            rejected: AtomicUsize::new(0),
+            adm: Mutex::new(adm),
             done: Mutex::new(DoneMap::default()),
             cv: Condvar::new(),
             stop: AtomicBool::new(false),
             t0: Instant::now(),
+            d_model,
         });
         let worker = shared.clone();
         let flusher = std::thread::Builder::new()
@@ -232,24 +256,46 @@ impl Server {
         self.shared.now_us()
     }
 
-    /// Submit one request of `h.len() / d` token rows, stamped with the
-    /// current wall clock. Back-pressure surfaces as
-    /// [`SubmitError::Full`] (counted in [`ServeReport::rejected`]);
-    /// oversized requests as [`SubmitError::TooLarge`]. Takes only the
-    /// queue lock (held for a memcpy), never the runtime lock — a
-    /// submission lands even while a batch forward is computing.
+    /// Engine model width: requests carry `h.len() / d_model()` token
+    /// rows. Lock-free (cached at construction).
+    pub fn d_model(&self) -> usize {
+        self.shared.d_model
+    }
+
+    /// Submit one request of `h.len() / d` token rows with the default
+    /// [`RequestMeta`] (path `/`, no tenant, priority 0), stamped with
+    /// the current wall clock. Back-pressure — a full (or unmatched)
+    /// lane — surfaces as [`SubmitError::Full`] (counted in
+    /// [`ServeReport::rejected`]); oversized requests as
+    /// [`SubmitError::TooLarge`]. Takes only the admission lock (held
+    /// for a classify + memcpy), never the runtime lock — a submission
+    /// lands even while a batch forward is computing.
     pub fn enqueue(&self, h: &[f32]) -> Result<u64, SubmitError> {
+        self.enqueue_with(&RequestMeta::default(), h).map_err(|e| {
+            match e {
+                AdmitError::TooLarge { .. } => SubmitError::TooLarge,
+                AdmitError::LaneFull { .. }
+                | AdmitError::NoRoute { .. } => SubmitError::Full,
+            }
+        })
+    }
+
+    /// Submit one request routed by `meta` through the compiled
+    /// admission config; refusals keep their typed [`AdmitError`]
+    /// detail (which lane shed, or that no lane matched). The returned
+    /// id encodes the admitting lane
+    /// ([`super::lane_of_id`]).
+    pub fn enqueue_with(
+        &self,
+        meta: &RequestMeta,
+        h: &[f32],
+    ) -> Result<u64, AdmitError> {
         let now = self.shared.now_us();
-        let res = self
-            .shared
-            .queue
+        self.shared
+            .adm
             .lock()
-            .expect("submission queue poisoned")
-            .submit(h, now);
-        if res == Err(SubmitError::Full) {
-            self.shared.rejected.fetch_add(1, Ordering::Relaxed);
-        }
-        res
+            .expect("admission front poisoned")
+            .submit(meta, h, now)
     }
 
     /// The completion for `id`, if it has already been served (consumes
@@ -273,22 +319,26 @@ impl Server {
         }
     }
 
-    /// Tokens currently queued (not yet flushed into a batch).
+    /// Tokens currently queued across every lane (not yet flushed into
+    /// a batch).
     pub fn pending_tokens(&self) -> usize {
         self.shared
-            .queue
+            .adm
             .lock()
-            .expect("submission queue poisoned")
+            .expect("admission front poisoned")
             .pending_tokens()
     }
 
     /// Aggregate telemetry for everything served so far (same schema as
-    /// the virtual-clock runtime's report), with the server-side
-    /// rejection count merged in.
+    /// the virtual-clock runtime's report), with admission-side
+    /// rejections merged in and per-lane stats attached
+    /// ([`ServeReport::lanes`]).
     pub fn report(&self) -> ServeReport {
         let mut rep =
             self.shared.rt.lock().expect("serve runtime poisoned").report();
-        rep.rejected += self.shared.rejected.load(Ordering::Relaxed);
+        let adm = self.shared.adm.lock().expect("admission front poisoned");
+        rep.rejected += adm.total_rejected();
+        rep.lanes = adm.lane_stats();
         rep
     }
 
@@ -321,7 +371,7 @@ mod tests {
     use crate::metrics::LayerLoadTracker;
     use crate::model::{synthetic_stacked_model, ModelForward};
     use crate::router::RouterBatch;
-    use crate::serve::ServeConfig;
+    use crate::serve::{lane_of_id, AdmissionConfig, ServeConfig};
     use crate::util::rng::Rng;
 
     const D: usize = 8;
@@ -397,6 +447,10 @@ mod tests {
         assert_eq!(rep.tokens, 5);
         assert_eq!(rep.batches, 2);
         assert_eq!(rep.rejected, 0);
+        // the default front is one catch-all lane, reported as such
+        assert_eq!(rep.lanes.len(), 1);
+        assert_eq!(rep.lanes[0].name, "default");
+        assert_eq!(rep.lanes[0].admitted, 3);
     }
 
     /// Concurrent clients: blocking enqueue/await from several threads
@@ -465,9 +519,9 @@ mod tests {
     }
 
     /// Satellite (lock split): a submission must land while a batch
-    /// forward holds the runtime lock — `enqueue` takes only the queue
-    /// lock. Before the split this blocked for the full (here 80 ms)
-    /// service time.
+    /// forward holds the runtime lock — `enqueue` takes only the
+    /// admission lock. Before the split this blocked for the full
+    /// (here 80 ms) service time.
     #[test]
     fn enqueue_lands_while_a_batch_forward_is_in_flight() {
         let model = synthetic_stacked_model(
@@ -557,5 +611,80 @@ mod tests {
         let id = server.enqueue(&ok).unwrap();
         assert_eq!(server.await_completion(id).n_tokens, 2);
         drop(server); // Drop also stops the flusher cleanly
+    }
+
+    /// A compiled multi-lane config over the wall clock: metas route
+    /// to their lanes (visible in the id encoding and per-lane
+    /// report), and a full lane sheds with the typed refusal while the
+    /// other lane keeps admitting.
+    #[test]
+    fn lanes_route_and_shed_over_the_wall_clock() {
+        let model = synthetic_stacked_model(
+            "cosine",
+            &Rng::new(5),
+            2,
+            D,
+            4,
+            4,
+            2,
+            6,
+        );
+        let engine = Engine::builder()
+            .model(model)
+            .backend(Backend::Pool { workers: 2 })
+            .build()
+            .unwrap();
+        // max_wait far above test duration and max_batch above the
+        // submitted tokens: nothing flushes until the shutdown drain,
+        // so the quota arithmetic below is deterministic
+        let cfg = ServeConfig {
+            max_batch: 8,
+            max_wait: 60_000_000,
+            queue_tokens: 64,
+            service_ticks: Some(1),
+            ..ServeConfig::default()
+        };
+        let adm = AdmissionConfig::parse(
+            "lane hi\n  path_prefix /hi\n  quota 8\n  weight 4\n\
+             lane rest\n  quota 64\n",
+        )
+        .unwrap()
+        .compile(D, cfg.max_batch)
+        .unwrap();
+        let server = Server::with_admission(
+            ServeRuntime::with_engine(engine.into_inner(), cfg),
+            adm,
+            Duration::from_micros(200),
+        );
+        let hi = RequestMeta {
+            path: "/hi/generate".to_string(),
+            ..RequestMeta::default()
+        };
+        let h3 = vec![0.5f32; 3 * D];
+        // two 3-token requests fit the hi quota (6 <= 8), a third
+        // (9 > 8) sheds; 6 < max_batch 8 so no size flush races this
+        let a = server.enqueue_with(&hi, &h3).unwrap();
+        let b = server.enqueue_with(&hi, &h3).unwrap();
+        assert_eq!(lane_of_id(a), 0);
+        assert_eq!(lane_of_id(b), 0);
+        match server.enqueue_with(&hi, &h3) {
+            Err(AdmitError::LaneFull { lane }) => assert_eq!(lane, "hi"),
+            other => panic!("expected hi to shed, got {other:?}"),
+        }
+        // the catch-all lane still admits (default meta → lane 1)
+        let c = server.enqueue(&h3).unwrap();
+        assert_eq!(lane_of_id(c), 1);
+        // shutdown drains every lane: all three admitted requests
+        // complete (requests == 3 below) even though nothing was due
+        let rep = server.shutdown();
+        assert_eq!(rep.requests, 3);
+        assert_eq!(rep.rejected, 1);
+        assert_eq!(rep.lanes.len(), 2);
+        assert_eq!(rep.lanes[0].name, "hi");
+        assert_eq!(rep.lanes[0].admitted, 2);
+        assert_eq!(rep.lanes[0].rejected, 1);
+        assert_eq!(rep.lanes[1].name, "rest");
+        assert_eq!(rep.lanes[1].admitted, 1);
+        assert_eq!(rep.lanes[1].rejected, 0);
     }
 }

@@ -1,0 +1,302 @@
+//! Fixture-driven conformance suite for the admission front-end.
+//!
+//! Every `rust/tests/fixtures/admission/*.txt` file declares a lane
+//! config plus either a `[cases]` table of `(path, headers) ->
+//! expected lane | reject` rows or an `[error]` section naming the
+//! typed validation error the config must die with. Each case is
+//! driven through BOTH the compiled matcher
+//! (`Admission::classify`) and the naive first-match reference
+//! (`Admission::classify_reference`), so adding a fixture file is
+//! adding a test — no Rust edits needed.
+//!
+//! Failures print one `FIXTURE FAIL <file>: ...` line per defect (CI
+//! greps these into the job summary) and the test asserts at the end,
+//! so a broken fixture reports every bad case at once.
+//!
+//! Fixture format:
+//!
+//! ```text
+//! # comments anywhere
+//! [lanes]
+//! lane api
+//!   path /v1/generate
+//!   quota 64
+//! lane rest
+//!   quota 64
+//!
+//! [cases]
+//! /v1/generate => api
+//! /other tenant=acme priority=9 => rest
+//! /nothing/matches => reject        # only without a catch-all lane
+//!
+//! [error]          # instead of [cases], for malformed configs
+//! duplicate-lane   # AdmissionError::code() string
+//! ```
+
+use std::path::PathBuf;
+
+use lpr::serve::{AdmissionConfig, RequestMeta};
+
+/// The geometry every fixture compiles against. Quotas in valid
+/// fixtures must be >= MAX_BATCH or validation refuses them.
+const D_MODEL: usize = 4;
+const MAX_BATCH: usize = 32;
+
+fn fixture_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/fixtures/admission")
+}
+
+fn fixture_files() -> Vec<PathBuf> {
+    let mut files: Vec<PathBuf> = std::fs::read_dir(fixture_dir())
+        .expect("fixture directory exists")
+        .map(|e| e.expect("readable dir entry").path())
+        .filter(|p| p.extension().is_some_and(|x| x == "txt"))
+        .collect();
+    files.sort();
+    files
+}
+
+/// One parsed fixture: the lane config text, the case table, and the
+/// expected error code for malformed-config fixtures.
+struct Fixture {
+    lanes: String,
+    cases: Vec<(String, RequestMeta, Option<String>)>,
+    error: Option<String>,
+}
+
+fn parse_case(
+    line: &str,
+) -> Result<(RequestMeta, Option<String>), String> {
+    let (lhs, rhs) = line
+        .split_once("=>")
+        .ok_or_else(|| "case line missing `=>`".to_string())?;
+    let expect = rhs.trim();
+    let expect = if expect == "reject" {
+        None
+    } else {
+        Some(expect.to_string())
+    };
+    let mut toks = lhs.split_whitespace();
+    let mut meta = RequestMeta {
+        path: toks
+            .next()
+            .ok_or_else(|| "case line missing path".to_string())?
+            .to_string(),
+        ..RequestMeta::default()
+    };
+    for t in toks {
+        if let Some(v) = t.strip_prefix("tenant=") {
+            meta.tenant = Some(v.to_string());
+        } else if let Some(v) = t.strip_prefix("priority=") {
+            meta.priority = v
+                .parse()
+                .map_err(|_| format!("bad priority `{v}`"))?;
+        } else {
+            return Err(format!("unknown case token `{t}`"));
+        }
+    }
+    Ok((meta, expect))
+}
+
+fn parse_fixture(text: &str) -> Result<Fixture, String> {
+    let mut section = "";
+    let mut fx = Fixture {
+        lanes: String::new(),
+        cases: Vec::new(),
+        error: None,
+    };
+    for raw in text.lines() {
+        let line = raw.trim();
+        match line {
+            "[lanes]" | "[cases]" | "[error]" => {
+                section = line;
+                continue;
+            }
+            _ => {}
+        }
+        match section {
+            "[lanes]" => {
+                // keep raw so lane-config comments stay line-accurate
+                fx.lanes.push_str(raw);
+                fx.lanes.push('\n');
+            }
+            "[cases]" => {
+                if line.is_empty() || line.starts_with('#') {
+                    continue;
+                }
+                let (meta, expect) = parse_case(line)?;
+                fx.cases.push((line.to_string(), meta, expect));
+            }
+            "[error]" => {
+                if line.is_empty() || line.starts_with('#') {
+                    continue;
+                }
+                if fx.error.is_some() {
+                    return Err(
+                        "multiple [error] codes".to_string()
+                    );
+                }
+                fx.error = Some(line.to_string());
+            }
+            _ => {
+                if !(line.is_empty() || line.starts_with('#')) {
+                    return Err(format!(
+                        "content before any section: `{line}`"
+                    ));
+                }
+            }
+        }
+    }
+    if fx.error.is_some() == !fx.cases.is_empty() {
+        return Err(
+            "fixture needs exactly one of [cases] or [error]"
+                .to_string(),
+        );
+    }
+    Ok(fx)
+}
+
+/// Run one fixture; returns one message per defect (empty = pass).
+fn run_fixture(fx: &Fixture) -> Vec<String> {
+    let mut fails = Vec::new();
+    let parsed = AdmissionConfig::parse(&fx.lanes);
+    if let Some(want) = &fx.error {
+        // malformed-config fixture: parse or validation must die with
+        // the declared typed error, and compile must agree
+        let got = match parsed {
+            Err(e) => Some(e),
+            Ok(config) => config.validate(MAX_BATCH).err(),
+        };
+        match got {
+            None => fails.push(format!(
+                "expected error `{want}` but config was accepted"
+            )),
+            Some(e) if e.code() != want => fails.push(format!(
+                "expected error `{want}`, got `{}` ({e})",
+                e.code()
+            )),
+            Some(_) => {}
+        }
+        return fails;
+    }
+    let config = match parsed {
+        Ok(c) => c,
+        Err(e) => {
+            fails.push(format!("config failed to parse: {e}"));
+            return fails;
+        }
+    };
+    let adm = match config.compile(D_MODEL, MAX_BATCH) {
+        Ok(a) => a,
+        Err(e) => {
+            fails.push(format!("config failed to compile: {e}"));
+            return fails;
+        }
+    };
+    for (line, meta, expect) in &fx.cases {
+        let want = match expect {
+            None => None,
+            Some(name) => {
+                let Some(i) = config
+                    .lanes
+                    .iter()
+                    .position(|l| l.name == *name)
+                else {
+                    fails.push(format!(
+                        "case `{line}` names unknown lane `{name}`"
+                    ));
+                    continue;
+                };
+                Some(i)
+            }
+        };
+        let compiled = adm.classify(meta);
+        let reference = adm.classify_reference(meta);
+        if compiled != want {
+            fails.push(format!(
+                "case `{line}`: compiled matcher chose {:?}, \
+                 expected {:?}",
+                compiled.map(|i| &config.lanes[i].name),
+                expect.as_ref()
+            ));
+        }
+        if reference != want {
+            fails.push(format!(
+                "case `{line}`: reference matcher chose {:?}, \
+                 expected {:?}",
+                reference.map(|i| &config.lanes[i].name),
+                expect.as_ref()
+            ));
+        }
+    }
+    fails
+}
+
+/// Every fixture passes the parser, validator, compiled matcher, and
+/// naive reference matcher; all defects across all fixtures are
+/// reported in one run.
+#[test]
+fn every_fixture_passes_both_matchers() {
+    let mut fails = Vec::new();
+    for path in fixture_files() {
+        let file = path
+            .file_name()
+            .expect("fixture has a file name")
+            .to_string_lossy()
+            .into_owned();
+        let text = std::fs::read_to_string(&path)
+            .expect("fixture file is readable");
+        match parse_fixture(&text) {
+            Err(e) => fails.push(format!("FIXTURE FAIL {file}: {e}")),
+            Ok(fx) => {
+                for msg in run_fixture(&fx) {
+                    fails.push(format!("FIXTURE FAIL {file}: {msg}"));
+                }
+            }
+        }
+    }
+    for f in &fails {
+        println!("{f}");
+    }
+    assert!(
+        fails.is_empty(),
+        "{} fixture defect(s); see FIXTURE FAIL lines above",
+        fails.len()
+    );
+}
+
+/// Guard against the suite silently testing nothing: the fixture set
+/// must exercise lane cases, explicit rejects, and malformed configs.
+#[test]
+fn fixture_set_is_populated() {
+    let mut n_valid = 0usize;
+    let mut n_error = 0usize;
+    let mut n_reject_cases = 0usize;
+    for path in fixture_files() {
+        let text = std::fs::read_to_string(&path)
+            .expect("fixture file is readable");
+        let fx = parse_fixture(&text).expect("fixture parses");
+        if fx.error.is_some() {
+            n_error += 1;
+        } else {
+            n_valid += 1;
+            assert!(
+                !fx.cases.is_empty(),
+                "valid fixture {} has no cases",
+                path.display()
+            );
+            n_reject_cases +=
+                fx.cases.iter().filter(|c| c.2.is_none()).count();
+        }
+    }
+    assert!(n_valid >= 5, "want >= 5 valid fixtures, have {n_valid}");
+    assert!(
+        n_error >= 4,
+        "want >= 4 malformed-config fixtures, have {n_error}"
+    );
+    assert!(
+        n_reject_cases >= 1,
+        "no fixture case exercises an explicit reject"
+    );
+}

@@ -1,0 +1,361 @@
+//! Admission under overload, and the TCP framing layer over real
+//! loopback sockets.
+//!
+//! The overload test drives the virtual-clock [`AdmittedRuntime`] at
+//! 2x its (deterministic, `service_ticks`-pinned) capacity with a
+//! best-effort-heavy mix and pins the contract the admission layer
+//! sells: the best-effort lane absorbs >= 90% of the shedding, the
+//! priority lane keeps a bounded p99, and `admitted + rejected`
+//! conserves submissions exactly.
+//!
+//! The framing tests run a wall-clock [`Server`] behind a
+//! [`NetServer`] on `127.0.0.1:0` and exercise the wire the way real
+//! peers do: byte-split writes, two frames coalesced into one write,
+//! malformed-but-framed requests (connection survives), an oversized
+//! frame (typed refusal, then close), a half-written frame cut by the
+//! client, and the HTTP-shaped wire's 503 mapping.
+
+use std::io::Write;
+use std::net::{Shutdown, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+use lpr::data::MixtureStream;
+use lpr::dispatch::OverflowPolicy;
+use lpr::engine::{Backend, Engine, MoeEngine};
+use lpr::experts::ExpertBank;
+use lpr::router::synthetic_lpr_router;
+use lpr::serve::{
+    run_admitted_open_loop, AdmissionConfig, AdmittedRuntime, HttpWire,
+    LengthPrefixed, NetServer, RequestMeta, Server, ServeConfig,
+    ServeRuntime, Status,
+};
+use lpr::util::rng::Rng;
+
+/// Build the small single-layer pool engine the socket tests serve.
+fn small_engine(
+    d: usize,
+    dz: usize,
+    e: usize,
+    k: usize,
+    d_ff: usize,
+) -> Box<dyn MoeEngine> {
+    let mut rng = Rng::new(23);
+    let router = synthetic_lpr_router("cosine", &mut rng, d, dz, e, k);
+    let bank = ExpertBank::new(&Rng::new(42), e, d, d_ff);
+    Engine::builder()
+        .layer(router.plan().clone(), bank)
+        .backend(Backend::Scoped { threads: 1 })
+        .policy(OverflowPolicy::Drop)
+        .capacity_factor(1.25)
+        .build()
+        .expect("valid engine config")
+        .into_inner()
+}
+
+/// 2x overload, 3:1 best-effort-heavy traffic: best-effort sheds,
+/// priority holds. Deterministic — the virtual clock and the pinned
+/// `service_ticks` make capacity exact, not measured.
+#[test]
+fn two_x_overload_sheds_best_effort_and_bounds_priority_p99() {
+    let (d, dz, e, k, d_ff) = (32usize, 16, 32, 4, 64);
+    let (max_batch, req_tokens, n_requests) = (64usize, 8usize, 600usize);
+    let mut rng = Rng::new(23);
+    let router = synthetic_lpr_router("cosine", &mut rng, d, dz, e, k);
+    let bank = ExpertBank::new(&Rng::new(42), e, d, d_ff);
+    let mix = MixtureStream::skewed(&mut rng, d, 1.6);
+    let engine = Engine::builder()
+        .layer(router.plan().clone(), bank)
+        .backend(Backend::Pool { workers: 2 })
+        .policy(OverflowPolicy::Drop)
+        .capacity_factor(1.25)
+        .build()
+        .expect("valid engine config");
+    let cfg = ServeConfig {
+        max_batch,
+        max_wait: 200,
+        queue_tokens: 8 * max_batch,
+        service_ticks: Some(500),
+        ..ServeConfig::default()
+    };
+    let config = AdmissionConfig::parse(
+        "lane priority\n  path_prefix /priority\n  quota 512\n\
+         \x20 weight 8\n  max_wait 200\nlane best-effort\n\
+         \x20 quota 128\n  max_wait 200\n",
+    )
+    .expect("two-lane overload config parses");
+    let adm = config
+        .compile(d, max_batch)
+        .expect("two-lane overload config compiles");
+    let metas = {
+        let prio = config.lanes[0].example_meta();
+        let best = config.lanes[1].example_meta();
+        [prio, best.clone(), best.clone(), best]
+    };
+    let mut rt = AdmittedRuntime::new(engine.into_inner(), cfg, adm);
+    // every batch takes exactly 500 ticks (1 tick = 1 us), so capacity
+    // is max_batch / 500 us = 128k tok/s; offer twice that
+    let cap_tok_s = max_batch as f64 / 500e-6;
+    run_admitted_open_loop(
+        &mut rt,
+        &mix,
+        &mut rng,
+        &metas,
+        n_requests,
+        req_tokens,
+        2.0 * cap_tok_s,
+    );
+    let rep = rt.report();
+    assert_eq!(rep.lanes.len(), 2);
+    let (pri, best) = (&rep.lanes[0], &rep.lanes[1]);
+    assert_eq!(pri.name, "priority");
+    assert_eq!(best.name, "best-effort");
+    // conservation: every submission is admitted or rejected, exactly
+    let admitted = pri.admitted + best.admitted;
+    let rejected = pri.rejected + best.rejected;
+    assert_eq!(
+        admitted + rejected,
+        n_requests,
+        "admitted {admitted} + rejected {rejected} must conserve \
+         submissions"
+    );
+    // the drain at the end of the open loop completes every admission
+    assert_eq!(pri.completed, pri.admitted);
+    assert_eq!(best.completed, best.admitted);
+    assert_eq!(pri.queue_depth_tokens, 0);
+    assert_eq!(best.queue_depth_tokens, 0);
+    // 2x offered load must actually shed, and best-effort absorbs it:
+    // >= 90% of all rejections land on the best-effort lane
+    assert!(rejected > 0, "2x overload produced no shedding at all");
+    assert!(
+        best.rejected * 10 >= rejected * 9,
+        "best-effort absorbed {} of {} rejections (< 90%)",
+        best.rejected,
+        rejected
+    );
+    // the priority lane keeps completing (it sheds at most 10% of its
+    // own traffic) and its p99 stays bounded by its own quota backlog
+    // (8 batches) plus the best-effort quota in flight — far below
+    // the unbounded queueing a shared queue shows
+    assert!(
+        pri.rejected * 10 <= pri.admitted,
+        "priority shed {} of {} admitted",
+        pri.rejected,
+        pri.admitted
+    );
+    assert!(
+        pri.latency_p99_us <= 8_000.0,
+        "priority p99 {} us exceeds the 8000 us bound",
+        pri.latency_p99_us
+    );
+}
+
+/// A wall-clock `Server` + `NetServer` over loopback, plus the bound
+/// address. `max_wait` 2 ms so sub-batch requests age-flush quickly.
+fn start_net<W: lpr::serve::Wire>(
+    d: usize,
+    wire: W,
+) -> (NetServer, Arc<Server>) {
+    let engine = small_engine(d, 4, 8, 2, 16);
+    let cfg = ServeConfig {
+        max_batch: 8,
+        max_wait: 2_000,
+        queue_tokens: 64,
+        service_ticks: Some(1),
+        ..ServeConfig::default()
+    };
+    let rt = ServeRuntime::with_engine(engine, cfg);
+    let server = Arc::new(Server::start(rt));
+    let net = NetServer::start(server.clone(), "127.0.0.1:0", wire)
+        .expect("bind loopback");
+    (net, server)
+}
+
+fn stop_net(net: NetServer, server: Arc<Server>) {
+    net.shutdown();
+    Arc::try_unwrap(server)
+        .ok()
+        .expect("net server released its handle")
+        .shutdown();
+}
+
+const D: usize = 8;
+
+/// Byte-split and coalesced writes both frame correctly, a malformed
+/// (but well-framed) request answers 400 and keeps the connection,
+/// and the stream resyncs onto the next request.
+#[test]
+fn length_prefixed_survives_split_and_coalesced_writes() {
+    let (net, server) = start_net(D, LengthPrefixed::default());
+    let mut s =
+        TcpStream::connect(net.addr()).expect("connect loopback");
+    s.set_nodelay(true).ok();
+
+    // one request, written three bytes at a time
+    let frame = LengthPrefixed::encode_request(
+        &RequestMeta::default(),
+        &vec![0.25f32; 2 * D],
+    );
+    for chunk in frame.chunks(3) {
+        s.write_all(chunk).expect("split write");
+        s.flush().expect("flush");
+    }
+    let r = LengthPrefixed::read_response(&mut s).expect("response");
+    assert_eq!(r.status, Status::Ok);
+    assert_eq!(r.n_tokens, 2);
+
+    // two requests coalesced into a single write
+    let mut two = LengthPrefixed::encode_request(
+        &RequestMeta::default(),
+        &vec![0.5f32; D],
+    );
+    two.extend_from_slice(&LengthPrefixed::encode_request(
+        &RequestMeta::default(),
+        &vec![-0.5f32; D],
+    ));
+    s.write_all(&two).expect("coalesced write");
+    let r1 = LengthPrefixed::read_response(&mut s).expect("first");
+    let r2 = LengthPrefixed::read_response(&mut s).expect("second");
+    assert_eq!(r1.status, Status::Ok);
+    assert_eq!(r2.status, Status::Ok);
+    assert_ne!(r1.id, r2.id, "each request gets its own id");
+
+    // a well-framed request whose activations are not a whole number
+    // of d_model rows: 400, but the connection keeps serving
+    let bad = LengthPrefixed::encode_request(
+        &RequestMeta::default(),
+        &vec![1.0f32; 3],
+    );
+    s.write_all(&bad).expect("bad-shape write");
+    let r = LengthPrefixed::read_response(&mut s).expect("reject");
+    assert_eq!(r.status, Status::BadFrame);
+    let again = LengthPrefixed::encode_request(
+        &RequestMeta::default(),
+        &vec![0.125f32; D],
+    );
+    s.write_all(&again).expect("recovery write");
+    let r = LengthPrefixed::read_response(&mut s).expect("recovery");
+    assert_eq!(r.status, Status::Ok);
+
+    drop(s);
+    stop_net(net, server);
+}
+
+/// An oversized declared frame gets a typed 413-style refusal and the
+/// connection closes (the stream cannot be resynced past it).
+#[test]
+fn oversized_frame_is_refused_then_closed() {
+    let (net, server) =
+        start_net(D, LengthPrefixed { max_frame: 256 });
+    let mut s =
+        TcpStream::connect(net.addr()).expect("connect loopback");
+    s.write_all(&100_000u32.to_le_bytes()).expect("prefix write");
+    let r = LengthPrefixed::read_response(&mut s).expect("refusal");
+    assert_eq!(r.status, Status::TooLarge);
+    assert!(
+        LengthPrefixed::read_response(&mut s).is_err(),
+        "server must close after an oversized frame"
+    );
+    drop(s);
+    stop_net(net, server);
+}
+
+/// A client that dies mid-frame gets a best-effort 400 and a clean
+/// close — no hang, no partial request reaching the engine.
+#[test]
+fn half_written_frame_then_close_is_answered_and_dropped() {
+    let (net, server) = start_net(D, LengthPrefixed::default());
+    let mut s =
+        TcpStream::connect(net.addr()).expect("connect loopback");
+    // declare 64 payload bytes, deliver 10, hang up
+    s.write_all(&64u32.to_le_bytes()).expect("prefix write");
+    s.write_all(&[0u8; 10]).expect("partial payload");
+    s.shutdown(Shutdown::Write).expect("half-close");
+    let r = LengthPrefixed::read_response(&mut s).expect("refusal");
+    assert_eq!(r.status, Status::BadFrame);
+    assert_eq!(
+        server.report().requests,
+        0,
+        "no partial request may be admitted"
+    );
+    drop(s);
+    stop_net(net, server);
+}
+
+/// The HTTP-shaped wire round-trips, maps admission refusals to 503
+/// with the typed `x-status` header, and keeps the connection across
+/// refusals.
+#[test]
+fn http_wire_round_trips_and_maps_refusals_to_503() {
+    let engine = small_engine(D, 4, 8, 2, 16);
+    let cfg = ServeConfig {
+        max_batch: 8,
+        max_wait: 2_000,
+        queue_tokens: 64,
+        service_ticks: Some(1),
+        ..ServeConfig::default()
+    };
+    // one /hi lane, no catch-all: everything else is a typed 503
+    let config =
+        AdmissionConfig::parse("lane hi\n  path_prefix /hi\n  quota 8\n")
+            .expect("single-lane config parses");
+    let adm = config.compile(D, 8).expect("single-lane config compiles");
+    let rt = ServeRuntime::with_engine(engine, cfg);
+    let server = Arc::new(Server::with_admission(
+        rt,
+        adm,
+        Duration::from_micros(200),
+    ));
+    let net = NetServer::start(
+        server.clone(),
+        "127.0.0.1:0",
+        HttpWire::default(),
+    )
+    .expect("bind loopback");
+    let mut s =
+        TcpStream::connect(net.addr()).expect("connect loopback");
+
+    let body: Vec<u8> = vec![0.5f32; D]
+        .iter()
+        .flat_map(|x| x.to_le_bytes())
+        .collect();
+    let mut req = format!(
+        "POST /hi/generate HTTP/1.1\r\nx-tenant: acme\r\n\
+         x-priority: 7\r\ncontent-length: {}\r\n\r\n",
+        body.len()
+    )
+    .into_bytes();
+    req.extend_from_slice(&body);
+    s.write_all(&req).expect("http request");
+    let r = HttpWire::read_response(&mut s).expect("http response");
+    assert_eq!(r.status, Status::Ok);
+    assert_eq!(r.n_tokens, 1);
+
+    // no lane matches /nowhere: explicit 503, connection survives
+    let miss = format!(
+        "POST /nowhere HTTP/1.1\r\ncontent-length: {}\r\n\r\n",
+        body.len()
+    );
+    s.write_all(miss.as_bytes()).expect("miss head");
+    s.write_all(&body).expect("miss body");
+    let r = HttpWire::read_response(&mut s).expect("miss response");
+    assert_eq!(r.status, Status::NoRoute);
+    assert_eq!(r.status.http_code().0, 503);
+
+    // and the connection still serves after the refusal
+    s.write_all(&req).expect("http request after 503");
+    let r = HttpWire::read_response(&mut s).expect("post-503 response");
+    assert_eq!(r.status, Status::Ok);
+
+    drop(s);
+    net.shutdown();
+    let rep = Arc::try_unwrap(server)
+        .ok()
+        .expect("net server released its handle")
+        .shutdown();
+    assert_eq!(rep.requests, 2);
+    assert_eq!(rep.rejected, 1);
+    assert_eq!(rep.lanes.len(), 1);
+    assert_eq!(rep.lanes[0].admitted, 2);
+    assert_eq!(rep.lanes[0].rejected, 1);
+}
