@@ -648,57 +648,191 @@ fn main() {
     }
 
     // ---- grouped-GEMM micro-kernels: the FFN hot loop across every
-    // kernel × weight dtype at the acceptance shapes (E=32,
-    // d ∈ {32, 256}, d_ff = 4·d), emitted as BENCH_gemm.json. Rows
-    // carry a "simd" flag: without `--features simd` (or AVX2+FMA at
-    // runtime) the Simd rows measure the Blocked fallback. ----
+    // kernel × weight dtype × plain/gated bank at the acceptance
+    // shapes (E=32, d ∈ {32, 256}, d_ff = 4·d), plus an m_per_expert
+    // sweep and a small MC×KC×NC tile grid, emitted as
+    // BENCH_gemm.json. Rows carry "simd"/"neon" flags: without the
+    // matching feature + runtime support those rows measure the
+    // scalar register-tile fallback. ----
     {
-        use lpr::kernels::{simd_available, Kernel, WeightDtype};
+        use lpr::kernels::{
+            neon_available, simd_available, GemmTiles, Kernel,
+            WeightDtype,
+        };
         let fast = std::env::var("LPR_BENCH_FAST").is_ok();
         let ge = 32usize;
         let gm = if fast { 8usize } else { 32 }; // rows per expert
         let mut gemm_rows: Vec<String> = Vec::new();
+        let mut push_gemm_row = |name: &str,
+                                 gd: usize,
+                                 gff: usize,
+                                 gm: usize,
+                                 tiles: Option<GemmTiles>,
+                                 ns: f64| {
+            let tiles_field = match tiles {
+                Some(t) => format!("\"{t}\""),
+                None => "\"default\"".to_string(),
+            };
+            gemm_rows.push(format!(
+                "{{\"name\": \"{name}\", \"E\": {ge}, \"d\": {gd}, \
+                 \"d_ff\": {gff}, \"m_per_expert\": {gm}, \
+                 \"tiles\": {tiles_field}, \"simd\": {}, \
+                 \"neon\": {}, \"ns_per_token\": {:.2}}}",
+                simd_available(),
+                neon_available(),
+                ns
+            ));
+        };
+        let gated_bank = |seed: u64, e: usize, d: usize, ff: usize| {
+            let mut grng = Rng::new(seed);
+            let w1 = normal_vec(&mut grng, e * d * ff, 0.05);
+            let w3 = normal_vec(&mut grng, e * d * ff, 0.05);
+            let w2 = normal_vec(&mut grng, e * ff * d, 0.05);
+            ExpertBank::from_weights_gated(e, d, ff, w1, w3, w2)
+        };
+        // kernel × dtype × plain/gated at the acceptance shapes
         for gd in [32usize, 256] {
             let gff = 4 * gd;
             let bank_f32 = ExpertBank::new(&Rng::new(77), ge, gd, gff);
+            let gated_f32 = gated_bank(78, ge, gd, gff);
             let x = normal_vec(&mut rng, gm * gd, 1.0);
             let mut hid = Vec::new();
             let mut out = vec![0.0f32; gm * gd];
             for dtype in WeightDtype::ALL {
-                let bank = bank_f32.quantized(dtype);
-                for kernel in Kernel::ALL {
-                    let res = b.run_items(
-                        &format!(
-                            "gemm/{}/{}/d{gd}",
-                            kernel.name(),
-                            dtype.name()
-                        ),
-                        (gm * ge) as f64,
-                        &mut || {
-                            for ei in 0..ge {
-                                bank.forward_rows_with(
-                                    kernel,
-                                    ei,
-                                    std::hint::black_box(&x),
-                                    gm,
-                                    &mut hid,
-                                    &mut out,
-                                );
-                            }
-                            std::hint::black_box(&out);
-                        },
-                    );
-                    gemm_rows.push(format!(
-                        "{{\"name\": \"gemm/{}/{}\", \"E\": {ge}, \
-                         \"d\": {gd}, \"d_ff\": {gff}, \
-                         \"m_per_expert\": {gm}, \"simd\": {}, \
-                         \"ns_per_token\": {:.2}}}",
-                        kernel.name(),
-                        dtype.name(),
-                        simd_available(),
-                        res.per_item_ns()
-                    ));
+                for (tag, src) in
+                    [("plain", &bank_f32), ("gated", &gated_f32)]
+                {
+                    let bank = src.quantized(dtype).unwrap();
+                    for kernel in Kernel::ALL {
+                        let res = b.run_items(
+                            &format!(
+                                "gemm/{}/{}/{tag}/d{gd}",
+                                kernel.name(),
+                                dtype.name()
+                            ),
+                            (gm * ge) as f64,
+                            &mut || {
+                                for ei in 0..ge {
+                                    bank.forward_rows_with(
+                                        kernel,
+                                        ei,
+                                        std::hint::black_box(&x),
+                                        gm,
+                                        &mut hid,
+                                        &mut out,
+                                    );
+                                }
+                                std::hint::black_box(&out);
+                            },
+                        );
+                        push_gemm_row(
+                            &format!(
+                                "gemm/{}/{}/{tag}",
+                                kernel.name(),
+                                dtype.name()
+                            ),
+                            gd,
+                            gff,
+                            gm,
+                            None,
+                            res.per_item_ns(),
+                        );
+                    }
                 }
+            }
+        }
+        // m_per_expert sweep: how the register tiles amortise as the
+        // per-expert row count grows (f32, d=256, plain + gated)
+        {
+            let (gd, gff) = (256usize, 1024usize);
+            let bank_f32 = ExpertBank::new(&Rng::new(77), ge, gd, gff);
+            let gated_f32 = gated_bank(78, ge, gd, gff);
+            let m_sweep: &[usize] =
+                if fast { &[4, 32] } else { &[4, 32, 256] };
+            for &m in m_sweep {
+                let x = normal_vec(&mut rng, m * gd, 1.0);
+                let mut hid = Vec::new();
+                let mut out = vec![0.0f32; m * gd];
+                for (tag, bank) in
+                    [("plain", &bank_f32), ("gated", &gated_f32)]
+                {
+                    for kernel in Kernel::ALL {
+                        let res = b.run_items(
+                            &format!(
+                                "gemm_m/{}/{tag}/m{m}",
+                                kernel.name()
+                            ),
+                            (m * ge) as f64,
+                            &mut || {
+                                for ei in 0..ge {
+                                    bank.forward_rows_with(
+                                        kernel,
+                                        ei,
+                                        std::hint::black_box(&x),
+                                        m,
+                                        &mut hid,
+                                        &mut out,
+                                    );
+                                }
+                                std::hint::black_box(&out);
+                            },
+                        );
+                        push_gemm_row(
+                            &format!(
+                                "gemm_m/{}/{tag}",
+                                kernel.name()
+                            ),
+                            gd,
+                            gff,
+                            m,
+                            None,
+                            res.per_item_ns(),
+                        );
+                    }
+                }
+            }
+        }
+        // MC×KC×NC tile grid: the blocked kernel at the big shape
+        // under a few cache-tile choices (the `--tiles` /
+        // LPR_GEMM_TILES knob)
+        {
+            let (gd, gff) = (256usize, 1024usize);
+            let bank = ExpertBank::new(&Rng::new(77), ge, gd, gff);
+            let x = normal_vec(&mut rng, gm * gd, 1.0);
+            let mut hid = Vec::new();
+            let mut out = vec![0.0f32; gm * gd];
+            let grid = [
+                GemmTiles::new(32, 128, 64),
+                GemmTiles::default(),
+                GemmTiles::new(128, 512, 256),
+            ];
+            for tiles in grid {
+                let res = b.run_items(
+                    &format!("gemm_tiles/blocked/{tiles}"),
+                    (gm * ge) as f64,
+                    &mut || {
+                        for ei in 0..ge {
+                            bank.forward_rows_tiled(
+                                Kernel::Blocked,
+                                tiles,
+                                ei,
+                                std::hint::black_box(&x),
+                                gm,
+                                &mut hid,
+                                &mut out,
+                            );
+                        }
+                        std::hint::black_box(&out);
+                    },
+                );
+                push_gemm_row(
+                    "gemm_tiles/blocked",
+                    gd,
+                    gff,
+                    gm,
+                    Some(tiles),
+                    res.per_item_ns(),
+                );
             }
         }
         write_rows_or_warn("BENCH_gemm.json", &gemm_rows);

@@ -36,7 +36,7 @@
 use crate::dispatch::placement::{PlacementConfig, PlacementPolicy};
 use crate::dispatch::plan::OverflowPolicy;
 use crate::experts::ExpertBank;
-use crate::kernels::{Kernel, WeightDtype};
+use crate::kernels::{GemmTiles, Kernel, WeightDtype};
 use crate::model::{MoeLayer, StackedModel};
 use crate::router::RouterPlan;
 
@@ -117,6 +117,15 @@ pub enum EngineBuildError {
     /// [`crate::dispatch::DispatchSim::new`], which used to panic on
     /// this instead.
     DevicesExceedExperts { n_experts: usize, n_devices: usize },
+    /// An already-quantized expert bank was asked to re-quantize into a
+    /// *different* storage dtype — that would compound round-trip
+    /// error, so [`crate::experts::ExpertBank::quantized`] rejects it
+    /// (it used to panic).
+    RequantizeDtype { from: WeightDtype, to: WeightDtype },
+    /// The GEMM cache tiles — from [`EngineBuilder::gemm_tiles`] or the
+    /// `LPR_GEMM_TILES` environment override — failed to parse or
+    /// validate; `detail` carries the parser's message.
+    BadGemmTiles { detail: String },
 }
 
 impl std::fmt::Display for EngineBuildError {
@@ -178,6 +187,17 @@ impl std::fmt::Display for EngineBuildError {
                  expert-parallel placement needs at least one expert \
                  per device"
             ),
+            EngineBuildError::RequantizeDtype { from, to } => write!(
+                f,
+                "cannot requantize {} weights to {} — quantization \
+                 must start from f32 (rebuild the bank in full \
+                 precision first)",
+                from.name(),
+                to.name()
+            ),
+            EngineBuildError::BadGemmTiles { detail } => {
+                write!(f, "bad GEMM tiles: {detail}")
+            }
         }
     }
 }
@@ -186,8 +206,10 @@ impl std::error::Error for EngineBuildError {}
 
 /// Builder for [`Engine`] — see the module docs for a worked example.
 /// Defaults: `Backend::Scoped { threads: 1 }`, `OverflowPolicy::Drop`,
-/// capacity factor 1.25, renormalization off, `Kernel::Naive` GEMM
-/// kernel, f32 weights.
+/// capacity factor 1.25, renormalization off, auto-picked GEMM kernel
+/// ([`Kernel::Naive`] for f32 weights, [`Kernel::Blocked`] once
+/// [`EngineBuilder::weight_dtype`] quantizes — see
+/// [`EngineBuilder::kernel`]), default [`GemmTiles`], f32 weights.
 #[derive(Debug, Clone, Default)]
 pub struct EngineBuilder {
     model: Option<StackedModel>,
@@ -196,7 +218,8 @@ pub struct EngineBuilder {
     policy: OverflowPolicy,
     capacity_factor: Option<f64>,
     renormalize: bool,
-    kernel: Kernel,
+    kernel: Option<Kernel>,
+    gemm_tiles: Option<GemmTiles>,
     weight_dtype: WeightDtype,
     placement: PlacementConfig,
 }
@@ -254,14 +277,33 @@ impl EngineBuilder {
         self
     }
 
-    /// GEMM micro-kernel for every layer's expert FFN stage (default
-    /// [`Kernel::Naive`], which is bit-identical to the historic
-    /// goldens). [`Kernel::Blocked`] / [`Kernel::Simd`] keep the
+    /// GEMM micro-kernel for every layer's expert FFN stage. When not
+    /// called, the builder auto-picks: [`Kernel::Naive`] (bit-identical
+    /// to the historic goldens) for f32 weights, [`Kernel::Blocked`]
+    /// once [`EngineBuilder::weight_dtype`] quantizes the banks —
+    /// quantized stores pay a per-element dequantize in the naive inner
+    /// loop but amortize it panel-at-a-time in the blocked path, and
+    /// Blocked stays bitwise equal to Naive, so the switch never
+    /// changes results. An explicit call always wins. All four kernels
+    /// ([`Kernel::Simd`] / [`Kernel::Neon`] included) keep the
     /// bit-identical-across-threads/backends contract per kernel; see
     /// [`crate::kernels`] for the tiling scheme and the cross-kernel
     /// equality guarantees.
     pub fn kernel(mut self, kernel: Kernel) -> EngineBuilder {
-        self.kernel = kernel;
+        self.kernel = Some(kernel);
+        self
+    }
+
+    /// Cache-blocking tile sizes (MC×KC×NC) for the blocked/SIMD GEMM
+    /// paths. Precedence: this call, else a well-formed
+    /// `LPR_GEMM_TILES=MCxKCxNC` environment override, else the
+    /// [`GemmTiles::default`] constants. Tiles move cache behaviour,
+    /// never results — every kernel is bitwise tile-invariant (pinned
+    /// in `kernels::tests`) — so this knob is safe to sweep in benches.
+    /// Malformed values (zero dims, unparseable env strings) surface as
+    /// [`EngineBuildError::BadGemmTiles`] at [`Self::build`].
+    pub fn gemm_tiles(mut self, tiles: GemmTiles) -> EngineBuilder {
+        self.gemm_tiles = Some(tiles);
         self
     }
 
@@ -346,24 +388,43 @@ impl EngineBuilder {
                 }
             }
         }
+        // Kernel auto-pick: an explicit .kernel(..) always wins;
+        // otherwise quantized weights get Blocked (panel-at-a-time
+        // dequantization instead of a per-element dequant in the naive
+        // inner loop — same bits, since Blocked ≡ Naive bitwise) and
+        // f32 keeps the Naive golden default.
+        let kernel = self.kernel.unwrap_or(
+            if self.weight_dtype != WeightDtype::F32 {
+                Kernel::Blocked
+            } else {
+                Kernel::Naive
+            },
+        );
+        // Tiles: explicit > LPR_GEMM_TILES env > defaults; malformed
+        // values are typed errors, never silent fallbacks.
+        let tiles = match self.gemm_tiles {
+            Some(t) => t,
+            None => GemmTiles::from_env()
+                .map_err(|detail| EngineBuildError::BadGemmTiles {
+                    detail,
+                })?
+                .unwrap_or_default(),
+        };
+        tiles
+            .validate()
+            .map_err(|detail| EngineBuildError::BadGemmTiles { detail })?;
         // Quantize once at build time so the serving hot loop only ever
         // sees a bank in its final storage dtype. `quantized` is a
         // no-op clone for matching dtypes, so f32 stays zero-cost.
         let model = if self.weight_dtype == WeightDtype::F32 {
             model
         } else {
-            StackedModel::new(
-                model
-                    .into_layers()
-                    .into_iter()
-                    .map(|l| {
-                        MoeLayer::new(
-                            l.plan,
-                            l.bank.quantized(self.weight_dtype),
-                        )
-                    })
-                    .collect(),
-            )
+            let mut layers = Vec::new();
+            for l in model.into_layers() {
+                let bank = l.bank.quantized(self.weight_dtype)?;
+                layers.push(MoeLayer::new(l.plan, bank));
+            }
+            StackedModel::new(layers)
         };
         let inner: Box<dyn super::MoeEngine> = match backend {
             Backend::Scoped { threads } => Box::new(ScopedBackend::new(
@@ -372,7 +433,8 @@ impl EngineBuilder {
                 cf,
                 self.policy,
                 self.renormalize,
-                self.kernel,
+                kernel,
+                tiles,
             )),
             Backend::Pool { workers } => {
                 let mut pool = PoolBackend::new(
@@ -381,13 +443,14 @@ impl EngineBuilder {
                     cf,
                     self.policy,
                     self.renormalize,
-                    self.kernel,
+                    kernel,
+                    tiles,
                 );
                 pool.set_placement(self.placement.clone());
                 Box::new(pool)
             }
         };
-        Ok(Engine::from_parts(inner, backend, cf, self.policy))
+        Ok(Engine::from_parts(inner, backend, cf, self.policy, kernel, tiles))
     }
 }
 

@@ -21,7 +21,9 @@
 //!   setters (model, backend, overflow policy, capacity factor,
 //!   renormalization, GEMM kernel, weight dtype) and validates it into
 //!   typed [`EngineBuildError`]s instead of panics. `.kernel(..)`
-//!   selects the FFN micro-kernel (naive / cache-blocked / AVX2) and
+//!   selects the FFN micro-kernel (naive / register-blocked / AVX2 /
+//!   NEON; auto-picked from the weight dtype when omitted),
+//!   `.gemm_tiles(..)` sets the MC×KC×NC cache tiles, and
 //!   `.weight_dtype(..)` quantizes the expert banks (bf16 / int8) once
 //!   at build time — see [`crate::kernels`] for the determinism and
 //!   error-bound contracts.
@@ -68,7 +70,7 @@ pub use builder::{Backend, EngineBuildError, EngineBuilder};
 
 use crate::dispatch::placement::PlacementConfig;
 use crate::dispatch::plan::OverflowPolicy;
-use crate::kernels::Kernel;
+use crate::kernels::{GemmTiles, Kernel};
 use crate::metrics::LayerLoadTracker;
 use crate::model::{ModelEngine, ModelForward, StackedModel};
 use crate::router::{FullForward, RouterBatch};
@@ -188,10 +190,12 @@ impl ScopedBackend {
         policy: OverflowPolicy,
         renormalize: bool,
         kernel: Kernel,
+        tiles: GemmTiles,
     ) -> ScopedBackend {
         let mut eng = ModelEngine::new(model, threads);
         eng.set_renormalize(renormalize);
         eng.set_kernel(kernel);
+        eng.set_gemm_tiles(tiles);
         let mut out = ModelForward::new();
         out.ensure_layers(eng.n_layers());
         ScopedBackend { eng, capacity_factor, policy, out }
@@ -249,10 +253,12 @@ impl PoolBackend {
         policy: OverflowPolicy,
         renormalize: bool,
         kernel: Kernel,
+        tiles: GemmTiles,
     ) -> PoolBackend {
         let mut pool = PoolEngine::from_model(model, workers);
         pool.set_renormalize(renormalize);
         pool.set_kernel(kernel);
+        pool.set_gemm_tiles(tiles);
         let mut out = ModelForward::new();
         out.ensure_layers(pool.n_layers());
         PoolBackend { pool, capacity_factor, policy, out }
@@ -313,6 +319,8 @@ pub struct Engine {
     backend: Backend,
     capacity_factor: f64,
     policy: OverflowPolicy,
+    kernel: Kernel,
+    gemm_tiles: GemmTiles,
 }
 
 impl Engine {
@@ -326,14 +334,29 @@ impl Engine {
         backend: Backend,
         capacity_factor: f64,
         policy: OverflowPolicy,
+        kernel: Kernel,
+        gemm_tiles: GemmTiles,
     ) -> Engine {
-        Engine { inner, backend, capacity_factor, policy }
+        Engine { inner, backend, capacity_factor, policy, kernel, gemm_tiles }
     }
 
     /// The backend this engine was built with. (Capacity factor and
     /// policy are exposed through the [`MoeEngine`] trait.)
     pub fn backend(&self) -> Backend {
         self.backend
+    }
+
+    /// The GEMM kernel the build resolved to — the explicit
+    /// [`EngineBuilder::kernel`] choice, or the auto-pick (Blocked for
+    /// quantized weights, Naive for f32).
+    pub fn kernel(&self) -> Kernel {
+        self.kernel
+    }
+
+    /// The GEMM cache tiles the build resolved to (explicit knob >
+    /// `LPR_GEMM_TILES` > defaults).
+    pub fn gemm_tiles(&self) -> GemmTiles {
+        self.gemm_tiles
     }
 
     /// Unwrap into the boxed trait object (e.g. for
@@ -352,6 +375,8 @@ impl std::fmt::Debug for Engine {
             .field("d_model", &self.inner.d_model())
             .field("capacity_factor", &self.capacity_factor)
             .field("policy", &self.policy.name())
+            .field("kernel", &self.kernel.name())
+            .field("gemm_tiles", &self.gemm_tiles)
             .finish()
     }
 }
@@ -915,6 +940,216 @@ mod tests {
                  apparently never happened",
                 dtype.name()
             );
+        }
+    }
+
+    /// Satellite: the kernel auto-pick selection matrix. With no
+    /// explicit `.kernel(..)`, f32 weights keep the Naive golden
+    /// default and quantized weights get Blocked (panel-at-a-time
+    /// dequantization); an explicit call always wins, for every
+    /// kernel × dtype combination.
+    #[test]
+    fn builder_auto_picks_blocked_for_quantized_weights() {
+        use crate::kernels::WeightDtype;
+        let pick = |kernel: Option<Kernel>, dtype: WeightDtype| {
+            let mut b = Engine::builder()
+                .model(tiny_model(1))
+                .weight_dtype(dtype);
+            if let Some(k) = kernel {
+                b = b.kernel(k);
+            }
+            b.build().unwrap().kernel()
+        };
+        // auto-pick row: f32 -> Naive, quantized -> Blocked
+        assert_eq!(pick(None, WeightDtype::F32), Kernel::Naive);
+        assert_eq!(pick(None, WeightDtype::Bf16), Kernel::Blocked);
+        assert_eq!(pick(None, WeightDtype::Int8), Kernel::Blocked);
+        // explicit rows: the caller's choice survives every dtype
+        for kernel in Kernel::ALL {
+            for dtype in
+                [WeightDtype::F32, WeightDtype::Bf16, WeightDtype::Int8]
+            {
+                assert_eq!(
+                    pick(Some(kernel), dtype),
+                    kernel,
+                    "explicit {} lost to auto-pick under {}",
+                    kernel.name(),
+                    dtype.name()
+                );
+            }
+        }
+        // and the auto-pick never changes bits: Blocked ≡ Naive
+        let mut rng = Rng::new(47);
+        let h = rand_vec(&mut rng, 17 * D);
+        use crate::kernels::WeightDtype::Bf16;
+        let mut auto_eng = Engine::builder()
+            .model(tiny_model(1))
+            .weight_dtype(Bf16)
+            .build()
+            .unwrap();
+        let mut naive_eng = Engine::builder()
+            .model(tiny_model(1))
+            .weight_dtype(Bf16)
+            .kernel(Kernel::Naive)
+            .build()
+            .unwrap();
+        assert_eq!(
+            auto_eng.forward(&h, 17).hidden,
+            naive_eng.forward(&h, 17).hidden
+        );
+    }
+
+    /// Satellite (regression): handing the builder an
+    /// already-quantized bank and asking for a different dtype is the
+    /// typed [`EngineBuildError::RequantizeDtype`] — it used to be a
+    /// panic inside `ExpertBank::quantized`.
+    #[test]
+    fn requantize_error_surfaces_through_builder() {
+        use crate::kernels::WeightDtype;
+        let mut rng = Rng::new(2);
+        let r = synthetic_lpr_router("cosine", &mut rng, D, DZ, E, K);
+        let bank = ExpertBank::new(&Rng::new(1), E, D, FF);
+        let int8 = bank.quantized(WeightDtype::Int8).unwrap();
+        let err = Engine::builder()
+            .layer(r.plan().clone(), int8.clone())
+            .weight_dtype(WeightDtype::Bf16)
+            .build()
+            .unwrap_err();
+        assert_eq!(
+            err,
+            EngineBuildError::RequantizeDtype {
+                from: WeightDtype::Int8,
+                to: WeightDtype::Bf16,
+            }
+        );
+        assert!(err.to_string().contains("requantize"), "{err}");
+        // same dtype is the no-op clone, so it still builds
+        assert!(Engine::builder()
+            .layer(r.plan().clone(), int8)
+            .weight_dtype(WeightDtype::Int8)
+            .build()
+            .is_ok());
+    }
+
+    /// Tentpole: `.gemm_tiles(..)` moves cache behaviour, never bits —
+    /// the forward is bitwise tile-invariant per kernel across both
+    /// backends — and a zero dimension is the typed
+    /// [`EngineBuildError::BadGemmTiles`].
+    #[test]
+    fn gemm_tiles_knob_keeps_results_bit_identical() {
+        use crate::kernels::GemmTiles;
+        let mut rng = Rng::new(53);
+        let model = tiny_model(2);
+        let h = rand_vec(&mut rng, 23 * D);
+        for kernel in [Kernel::Naive, Kernel::Blocked, Kernel::Simd] {
+            let mut oracle = Engine::builder()
+                .model(model.clone())
+                .kernel(kernel)
+                .build()
+                .unwrap();
+            let want = oracle.forward(&h, 23).hidden.to_vec();
+            for tiles in [
+                GemmTiles::new(1, 1, 1),
+                GemmTiles::new(8, 16, 8),
+                GemmTiles::new(512, 512, 512),
+            ] {
+                for backend in [
+                    Backend::Scoped { threads: 2 },
+                    Backend::Pool { workers: 3 },
+                ] {
+                    let mut eng = Engine::builder()
+                        .model(model.clone())
+                        .backend(backend)
+                        .kernel(kernel)
+                        .gemm_tiles(tiles)
+                        .build()
+                        .unwrap();
+                    assert_eq!(eng.gemm_tiles(), tiles);
+                    assert_eq!(
+                        eng.forward(&h, 23).hidden,
+                        &want[..],
+                        "{} {backend:?} tiles {tiles} moved bits",
+                        kernel.name()
+                    );
+                }
+            }
+        }
+        let err = Engine::builder()
+            .model(model)
+            .gemm_tiles(GemmTiles::new(0, 4, 4))
+            .build()
+            .unwrap_err();
+        assert!(
+            matches!(err, EngineBuildError::BadGemmTiles { .. }),
+            "{err}"
+        );
+        assert!(err.to_string().contains("tiles"), "{err}");
+    }
+
+    /// Tentpole: a gated (SwiGLU) bank serves bit-identically across
+    /// backends and parallelism for every kernel, and its output
+    /// actually differs from the ungated bank built from the same
+    /// `w1`/`w2` — the gate is live, not decorative.
+    #[test]
+    fn gated_banks_stay_bit_identical_across_backends() {
+        let mut rng = Rng::new(59);
+        let r = synthetic_lpr_router("cosine", &mut rng, D, DZ, E, K);
+        let w1 = rand_vec(&mut rng, E * D * FF);
+        let w3 = rand_vec(&mut rng, E * D * FF);
+        let w2 = rand_vec(&mut rng, E * FF * D);
+        let gated = ExpertBank::from_weights_gated(
+            E,
+            D,
+            FF,
+            w1.clone(),
+            w3,
+            w2.clone(),
+        );
+        let ungated = ExpertBank::from_weights(E, D, FF, w1, w2);
+        let h = rand_vec(&mut rng, 21 * D);
+        let mut oracle = Engine::builder()
+            .layer(r.plan().clone(), gated.clone())
+            .backend(Backend::Scoped { threads: 1 })
+            .build()
+            .unwrap();
+        let want = oracle.forward(&h, 21).hidden.to_vec();
+        let mut plain = Engine::builder()
+            .layer(r.plan().clone(), ungated)
+            .backend(Backend::Scoped { threads: 1 })
+            .build()
+            .unwrap();
+        assert_ne!(
+            plain.forward(&h, 21).hidden,
+            &want[..],
+            "the gate projection changed nothing"
+        );
+        for kernel in Kernel::ALL {
+            let mut per_config = Vec::new();
+            for backend in [
+                Backend::Scoped { threads: 3 },
+                Backend::Pool { workers: 2 },
+                Backend::Pool { workers: 8 },
+            ] {
+                let mut eng = Engine::builder()
+                    .layer(r.plan().clone(), gated.clone())
+                    .backend(backend)
+                    .kernel(kernel)
+                    .build()
+                    .unwrap();
+                per_config.push(eng.forward(&h, 21).hidden.to_vec());
+            }
+            assert!(
+                per_config.windows(2).all(|w| w[0] == w[1]),
+                "{} diverged across gated backends",
+                kernel.name()
+            );
+            if matches!(kernel, Kernel::Naive | Kernel::Blocked) {
+                assert_eq!(
+                    per_config[0], want,
+                    "{} diverged from the gated oracle",
+                    kernel.name()
+                );
+            }
         }
     }
 }

@@ -1,8 +1,13 @@
 //! Real expert FFN compute for the serving path — the stage PR 1's
 //! analytic latency model stood in for. A [`ExpertBank`] holds `E`
-//! dense SwiGLU-less FFN shards (`out = SiLU(x·W1 + b1)·W2 + b2`,
-//! matching the SiLU idiom of the LPR encoder); tokens reach it through
-//! a [`DispatchPlan`]'s grouped layout:
+//! dense FFN shards in one of two forms: the plain
+//! `out = SiLU(x·W1 + b1)·W2 + b2` (matching the SiLU idiom of the
+//! LPR encoder) or, when built with [`ExpertBank::from_weights_gated`],
+//! the SwiGLU `out = (SiLU(x·W1 + b1) ⊙ (x·W3 + b3))·W2 + b2` — the
+//! first stage runs through the fused
+//! [`crate::kernels::gemm_bias_act_gated`] kernel, one pass per
+//! column strip instead of two GEMMs plus a product pass. Tokens reach
+//! the bank through a [`DispatchPlan`]'s grouped layout:
 //!
 //! 1. **gather** ([`gather_rows`]) — copy each surviving token's
 //!    activation into the expert-grouped `[kept, d]` buffer (one
@@ -20,8 +25,10 @@
 //! slots keep their original gate weight.
 
 use crate::dispatch::plan::{DispatchPlan, DROPPED};
+use crate::engine::EngineBuildError;
 use crate::kernels::{
-    gemm_bias_act, Kernel, WeightDtype, WeightStore,
+    gemm_bias_act_gated, gemm_bias_act_tiled, GemmTiles, Kernel,
+    WeightDtype, WeightStore,
 };
 use crate::util::rng::Rng;
 
@@ -45,6 +52,11 @@ pub struct ExpertBank {
     w2: WeightStore,
     /// [E, d]
     b2: Vec<f32>,
+    /// SwiGLU gate projection `[E, d, d_ff]` — present only for gated
+    /// banks ([`ExpertBank::from_weights_gated`]).
+    w3: Option<WeightStore>,
+    /// [E, d_ff]; empty for ungated banks.
+    b3: Vec<f32>,
 }
 
 impl ExpertBank {
@@ -81,6 +93,8 @@ impl ExpertBank {
             b1: vec![0.0; n_experts * d_ff],
             w2: WeightStore::F32(w2),
             b2: vec![0.0; n_experts * d_model],
+            w3: None,
+            b3: Vec::new(),
         }
     }
 
@@ -107,7 +121,46 @@ impl ExpertBank {
             b1: vec![0.0; n_experts * d_ff],
             w2: WeightStore::F32(w2),
             b2: vec![0.0; n_experts * d_model],
+            w3: None,
+            b3: Vec::new(),
         }
+    }
+
+    /// Build a **gated** (SwiGLU) bank: like
+    /// [`ExpertBank::from_weights`] plus the gate projection `w3`
+    /// (`[E, d, ff]`, the same layout as `w1`). The first FFN stage
+    /// becomes `SiLU(x·W1 + b1) ⊙ (x·W3 + b3)` through the fused
+    /// [`crate::kernels::gemm_bias_act_gated`] kernel. This is the
+    /// layout of a checkpoint's `w3` expert leaves, which
+    /// `model::bridge` now loads.
+    pub fn from_weights_gated(
+        n_experts: usize,
+        d_model: usize,
+        d_ff: usize,
+        w1: Vec<f32>,
+        w3: Vec<f32>,
+        w2: Vec<f32>,
+    ) -> ExpertBank {
+        assert!(n_experts > 0 && d_model > 0 && d_ff > 0);
+        assert_eq!(w1.len(), n_experts * d_model * d_ff, "w1 shape");
+        assert_eq!(w3.len(), n_experts * d_model * d_ff, "w3 shape");
+        assert_eq!(w2.len(), n_experts * d_ff * d_model, "w2 shape");
+        ExpertBank {
+            n_experts,
+            d_model,
+            d_ff,
+            w1: WeightStore::F32(w1),
+            b1: vec![0.0; n_experts * d_ff],
+            w2: WeightStore::F32(w2),
+            b2: vec![0.0; n_experts * d_model],
+            w3: Some(WeightStore::F32(w3)),
+            b3: vec![0.0; n_experts * d_ff],
+        }
+    }
+
+    /// Whether this bank carries the SwiGLU gate projection.
+    pub fn is_gated(&self) -> bool {
+        self.w3.is_some()
     }
 
     /// Storage dtype of the FFN weights (both matrices share it).
@@ -116,21 +169,30 @@ impl ExpertBank {
     }
 
     /// Quantize the bank's weights into `dtype` storage (biases stay
-    /// f32). Quantization always starts from full precision — calling
-    /// this on an already-quantized bank with a *different* dtype
-    /// would compound round-trip error, so that panics; re-quantizing
-    /// to the current dtype is a no-op clone.
-    pub fn quantized(&self, dtype: WeightDtype) -> ExpertBank {
+    /// f32; a gated bank's `w3` quantizes alongside `w1`/`w2`).
+    /// Quantization always starts from full precision — calling this
+    /// on an already-quantized bank with a *different* dtype would
+    /// compound round-trip error, so that is rejected with the typed
+    /// [`EngineBuildError::RequantizeDtype`] (it used to panic);
+    /// re-quantizing to the current dtype is a no-op clone.
+    pub fn quantized(
+        &self,
+        dtype: WeightDtype,
+    ) -> Result<ExpertBank, EngineBuildError> {
         if dtype == self.dtype() {
-            return self.clone();
+            return Ok(self.clone());
         }
-        let w1 = self.w1.as_f32().expect(
-            "quantized() needs f32 source weights — build the bank at \
-             full precision and quantize once",
-        );
-        let w2 = self.w2.as_f32().unwrap();
+        let from = self.dtype();
+        if from != WeightDtype::F32 {
+            return Err(EngineBuildError::RequantizeDtype {
+                from,
+                to: dtype,
+            });
+        }
+        let w1 = self.w1.as_f32().expect("f32 store has f32 buffer");
+        let w2 = self.w2.as_f32().expect("f32 store has f32 buffer");
         let (e, d, ff) = (self.n_experts, self.d_model, self.d_ff);
-        ExpertBank {
+        Ok(ExpertBank {
             n_experts: e,
             d_model: d,
             d_ff: ff,
@@ -138,7 +200,16 @@ impl ExpertBank {
             b1: self.b1.clone(),
             w2: WeightStore::quantize(w2, e * ff, d, dtype),
             b2: self.b2.clone(),
-        }
+            w3: self.w3.as_ref().map(|w3| {
+                WeightStore::quantize(
+                    w3.as_f32().expect("f32 store has f32 buffer"),
+                    e * d,
+                    ff,
+                    dtype,
+                )
+            }),
+            b3: self.b3.clone(),
+        })
     }
 
     /// The f32 `w1` buffer (`None` once quantized) — tests and the
@@ -150,6 +221,11 @@ impl ExpertBank {
     /// The f32 `w2` buffer (`None` once quantized).
     pub fn w2_f32(&self) -> Option<&[f32]> {
         self.w2.as_f32()
+    }
+
+    /// The f32 `w3` buffer (`None` for ungated or quantized banks).
+    pub fn w3_f32(&self) -> Option<&[f32]> {
+        self.w3.as_ref().and_then(|w| w.as_f32())
     }
 
     /// FFN of expert `e` over `m` contiguous rows: `out[m, d] =
@@ -168,15 +244,43 @@ impl ExpertBank {
     }
 
     /// FFN of expert `e` over `m` contiguous rows with an explicit
-    /// GEMM kernel: both matmuls run through
-    /// [`crate::kernels::gemm_bias_act`] with the bias add (and the
-    /// SiLU, for the first matmul) fused into the kernel epilogue.
-    /// `hid` is caller-owned scratch (grows once to the high-water
-    /// bucket size). Pure per expert — the same rows give the same
-    /// bits regardless of which thread runs them, for every kernel.
+    /// GEMM kernel at the default [`GemmTiles`] — see
+    /// [`ExpertBank::forward_rows_tiled`].
     pub fn forward_rows_with(
         &self,
         kernel: Kernel,
+        e: usize,
+        x: &[f32],
+        m: usize,
+        hid: &mut Vec<f32>,
+        out: &mut [f32],
+    ) {
+        self.forward_rows_tiled(
+            kernel,
+            GemmTiles::default(),
+            e,
+            x,
+            m,
+            hid,
+            out,
+        );
+    }
+
+    /// FFN of expert `e` over `m` contiguous rows with an explicit
+    /// GEMM kernel and cache-blocking tiles: both matmuls run through
+    /// [`crate::kernels::gemm_bias_act_tiled`] with the bias add (and
+    /// the SiLU, for the first matmul) fused into the kernel epilogue;
+    /// a gated bank's first stage runs the fused
+    /// [`crate::kernels::gemm_bias_act_gated`] SwiGLU kernel instead.
+    /// `hid` is caller-owned scratch (grows once to the high-water
+    /// bucket size). Pure per expert — the same rows give the same
+    /// bits regardless of which thread runs them, for every kernel and
+    /// every valid tile choice.
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward_rows_tiled(
+        &self,
+        kernel: Kernel,
+        tiles: GemmTiles,
         e: usize,
         x: &[f32],
         m: usize,
@@ -189,19 +293,36 @@ impl ExpertBank {
         assert_eq!(out.len(), m * d, "out shape");
         hid.clear();
         hid.resize(m * ff, 0.0);
-        gemm_bias_act(
+        match &self.w3 {
+            Some(w3) => gemm_bias_act_gated(
+                kernel,
+                tiles,
+                x,
+                self.w1.view(e * d, d, ff),
+                &self.b1[e * ff..(e + 1) * ff],
+                w3.view(e * d, d, ff),
+                &self.b3[e * ff..(e + 1) * ff],
+                hid,
+                m,
+                d,
+                ff,
+            ),
+            None => gemm_bias_act_tiled(
+                kernel,
+                tiles,
+                x,
+                self.w1.view(e * d, d, ff),
+                &self.b1[e * ff..(e + 1) * ff],
+                hid,
+                m,
+                d,
+                ff,
+                true,
+            ),
+        }
+        gemm_bias_act_tiled(
             kernel,
-            x,
-            self.w1.view(e * d, d, ff),
-            &self.b1[e * ff..(e + 1) * ff],
-            hid,
-            m,
-            d,
-            ff,
-            true,
-        );
-        gemm_bias_act(
-            kernel,
+            tiles,
             hid,
             self.w2.view(e * ff, ff, d),
             &self.b2[e * d..(e + 1) * d],
@@ -227,10 +348,32 @@ impl ExpertBank {
         self.forward_all_with(Kernel::Naive, plan, xg, hid, y);
     }
 
-    /// [`ExpertBank::forward_all`] with an explicit GEMM kernel.
+    /// [`ExpertBank::forward_all`] with an explicit GEMM kernel at the
+    /// default [`GemmTiles`].
     pub fn forward_all_with(
         &self,
         kernel: Kernel,
+        plan: &DispatchPlan,
+        xg: &[f32],
+        hid: &mut Vec<f32>,
+        y: &mut [f32],
+    ) {
+        self.forward_all_tiled(
+            kernel,
+            GemmTiles::default(),
+            plan,
+            xg,
+            hid,
+            y,
+        );
+    }
+
+    /// [`ExpertBank::forward_all`] with an explicit GEMM kernel and
+    /// cache-blocking tiles.
+    pub fn forward_all_tiled(
+        &self,
+        kernel: Kernel,
+        tiles: GemmTiles,
         plan: &DispatchPlan,
         xg: &[f32],
         hid: &mut Vec<f32>,
@@ -245,8 +388,9 @@ impl ExpertBank {
             if m == 0 {
                 continue;
             }
-            self.forward_rows_with(
+            self.forward_rows_tiled(
                 kernel,
+                tiles,
                 e,
                 &xg[rows.start * d..rows.end * d],
                 m,
@@ -668,7 +812,7 @@ mod tests {
         let (mut hid, mut exact) = (Vec::new(), vec![0.0f32; m * d]);
         bank.forward_rows(0, &x, m, &mut hid, &mut exact);
         for dtype in [WeightDtype::Bf16, WeightDtype::Int8] {
-            let q = bank.quantized(dtype);
+            let q = bank.quantized(dtype).unwrap();
             assert_eq!(q.dtype(), dtype);
             assert!(q.w1_f32().is_none());
             let mut got = vec![0.0f32; m * d];
@@ -702,10 +846,232 @@ mod tests {
     #[test]
     fn requantizing_same_dtype_is_identity() {
         let bank = ExpertBank::new(&Rng::new(44), 2, 8, 16);
-        let same = bank.quantized(WeightDtype::F32);
+        let same = bank.quantized(WeightDtype::F32).unwrap();
         assert_eq!(same.w1_f32().unwrap(), bank.w1_f32().unwrap());
-        let q = bank.quantized(WeightDtype::Int8);
-        let q2 = q.quantized(WeightDtype::Int8);
+        let q = bank.quantized(WeightDtype::Int8).unwrap();
+        let q2 = q.quantized(WeightDtype::Int8).unwrap();
         assert_eq!(q2.dtype(), WeightDtype::Int8);
+    }
+
+    /// Regression (used to panic): requantizing an already-quantized
+    /// bank to a *different* dtype is a typed builder-style error
+    /// naming both dtypes, never a panic.
+    #[test]
+    fn requantize_to_different_dtype_is_typed_error() {
+        let bank = ExpertBank::new(&Rng::new(44), 2, 8, 16);
+        let q = bank.quantized(WeightDtype::Int8).unwrap();
+        let err = q.quantized(WeightDtype::Bf16).unwrap_err();
+        assert_eq!(
+            err,
+            EngineBuildError::RequantizeDtype {
+                from: WeightDtype::Int8,
+                to: WeightDtype::Bf16,
+            }
+        );
+        let msg = err.to_string();
+        assert!(msg.contains("int8") && msg.contains("bf16"), "{msg}");
+        // the bf16 -> int8 direction is equally rejected
+        let q = bank.quantized(WeightDtype::Bf16).unwrap();
+        assert!(q.quantized(WeightDtype::Int8).is_err());
+    }
+
+    fn gated_bank(
+        seed: u64,
+        e: usize,
+        d: usize,
+        ff: usize,
+    ) -> (ExpertBank, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let w1 = rand_vec(&mut rng, e * d * ff);
+        let w3 = rand_vec(&mut rng, e * d * ff);
+        let w2 = rand_vec(&mut rng, e * ff * d);
+        let bank = ExpertBank::from_weights_gated(
+            e,
+            d,
+            ff,
+            w1.clone(),
+            w3.clone(),
+            w2.clone(),
+        );
+        (bank, w1, w3, w2)
+    }
+
+    /// Property test: the gated bank's forward equals the
+    /// hand-composed `silu(x·w1) ⊙ (x·w3) · w2` reference — bitwise
+    /// for the scalar kernels, within the documented FMA tolerance for
+    /// Simd/Neon — across odd shapes straddling the tile boundaries.
+    #[test]
+    fn gated_bank_matches_hand_composed_swiglu_reference() {
+        use crate::kernels::gemm_bias_act;
+        for (seed, e, d, ff, m) in [
+            (51u64, 2usize, 5usize, 9usize, 3usize),
+            (52, 3, 37, crate::kernels::NC + 5, 7),
+            (53, 1, 24, 96, crate::kernels::MC + 1),
+        ] {
+            let (bank, w1, w3, w2) = gated_bank(seed, e, d, ff);
+            assert!(bank.is_gated());
+            let mut rng = Rng::new(seed ^ 0xff);
+            let x = rand_vec(&mut rng, m * d);
+            let zeros_ff = vec![0.0f32; ff];
+            let zeros_d = vec![0.0f32; d];
+            let mut hid = Vec::new();
+            for ex in 0..e {
+                // hand-composed reference, all-naive
+                let mut h1 = vec![0.0f32; m * ff];
+                let mut h3 = vec![0.0f32; m * ff];
+                gemm_bias_act(
+                    Kernel::Naive,
+                    &x,
+                    crate::kernels::WeightsView::F32(
+                        &w1[ex * d * ff..(ex + 1) * d * ff],
+                    ),
+                    &zeros_ff,
+                    &mut h1,
+                    m,
+                    d,
+                    ff,
+                    true,
+                );
+                gemm_bias_act(
+                    Kernel::Naive,
+                    &x,
+                    crate::kernels::WeightsView::F32(
+                        &w3[ex * d * ff..(ex + 1) * d * ff],
+                    ),
+                    &zeros_ff,
+                    &mut h3,
+                    m,
+                    d,
+                    ff,
+                    false,
+                );
+                let prod: Vec<f32> = h1
+                    .iter()
+                    .zip(&h3)
+                    .map(|(&a, &b)| a * b)
+                    .collect();
+                let mut want = vec![0.0f32; m * d];
+                gemm_bias_act(
+                    Kernel::Naive,
+                    &prod,
+                    crate::kernels::WeightsView::F32(
+                        &w2[ex * ff * d..(ex + 1) * ff * d],
+                    ),
+                    &zeros_d,
+                    &mut want,
+                    m,
+                    ff,
+                    d,
+                    false,
+                );
+                for kernel in Kernel::ALL {
+                    let mut got = vec![0.0f32; m * d];
+                    bank.forward_rows_with(
+                        kernel, ex, &x, m, &mut hid, &mut got,
+                    );
+                    match kernel {
+                        Kernel::Naive | Kernel::Blocked => {
+                            assert_eq!(
+                                got,
+                                want,
+                                "{} expert {ex}",
+                                kernel.name()
+                            );
+                        }
+                        _ => {
+                            let tol =
+                                2e-4 * (ff as f32).sqrt().max(1.0);
+                            for (i, (&g, &w)) in
+                                got.iter().zip(&want).enumerate()
+                            {
+                                assert!(
+                                    (g - w).abs()
+                                        <= tol * w.abs().max(1.0),
+                                    "{} expert {ex} elem {i}: \
+                                     {g} vs {w}",
+                                    kernel.name()
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Tiles are a pure cache knob on the bank level too: a gated and
+    /// an ungated forward are bitwise tile-invariant per kernel.
+    #[test]
+    fn bank_forward_is_tile_invariant() {
+        use crate::kernels::GemmTiles;
+        let (gated, ..) = gated_bank(61, 2, 19, 33);
+        let plain = ExpertBank::new(&Rng::new(62), 2, 19, 33);
+        let mut rng = Rng::new(63);
+        let m = 9;
+        let x = rand_vec(&mut rng, m * 19);
+        let mut hid = Vec::new();
+        for bank in [&gated, &plain] {
+            for kernel in [Kernel::Naive, Kernel::Blocked] {
+                let mut want = vec![0.0f32; m * 19];
+                bank.forward_rows_with(
+                    kernel, 1, &x, m, &mut hid, &mut want,
+                );
+                for tiles in
+                    [GemmTiles::new(1, 1, 1), GemmTiles::new(8, 16, 8)]
+                {
+                    let mut got = vec![0.0f32; m * 19];
+                    bank.forward_rows_tiled(
+                        kernel, tiles, 1, &x, m, &mut hid, &mut got,
+                    );
+                    assert_eq!(
+                        got,
+                        want,
+                        "gated={} {} tiles {tiles}",
+                        bank.is_gated(),
+                        kernel.name()
+                    );
+                }
+            }
+        }
+    }
+
+    /// Quantizing a gated bank quantizes `w3` alongside `w1`/`w2` and
+    /// keeps the gate within the documented round-trip tolerance.
+    #[test]
+    fn quantized_gated_bank_keeps_gate_within_tolerance() {
+        let (bank, ..) = gated_bank(71, 2, 16, 48);
+        let mut rng = Rng::new(72);
+        let m = 11;
+        let x = rand_vec(&mut rng, m * 16);
+        let mut hid = Vec::new();
+        let mut exact = vec![0.0f32; m * 16];
+        bank.forward_rows(1, &x, m, &mut hid, &mut exact);
+        for dtype in [WeightDtype::Bf16, WeightDtype::Int8] {
+            let q = bank.quantized(dtype).unwrap();
+            assert!(q.is_gated(), "{} lost the gate", dtype.name());
+            assert!(q.w3_f32().is_none(), "w3 must be quantized too");
+            let mut got = vec![0.0f32; m * 16];
+            q.forward_rows(1, &x, m, &mut hid, &mut got);
+            let mut max_rel = 0.0f32;
+            for (&g, &w) in got.iter().zip(&exact) {
+                max_rel = max_rel.max((g - w).abs() / w.abs().max(1.0));
+            }
+            assert!(
+                max_rel > 0.0 && max_rel < 0.3,
+                "{}: max_rel {max_rel}",
+                dtype.name()
+            );
+            // kernels agree bit-for-bit on the same quantized store
+            let mut blocked = vec![0.0f32; m * 16];
+            q.forward_rows_with(
+                Kernel::Blocked,
+                1,
+                &x,
+                m,
+                &mut hid,
+                &mut blocked,
+            );
+            assert_eq!(blocked, got, "{}", dtype.name());
+        }
     }
 }

@@ -1,0 +1,341 @@
+//! Cache-blocked GEMM engine: operand packing and the MR×NR
+//! register-tiled inner kernel behind `Kernel::Blocked` and both SIMD
+//! kernels.
+//!
+//! Loop nest (BLIS-style, tile sizes from [`GemmTiles`]):
+//!
+//! ```text
+//! jc strip (nc ≤ tiles.nc columns)
+//!   pc block (kc ≤ tiles.kc of the reduction)
+//!     pack B[pc.., jc..] -> [nc/NR][kc][NR] micro-panels  (dequantized)
+//!     ic block (mc ≤ tiles.mc rows)
+//!       pack A[ic.., pc..] -> [mc/MR][kc][MR] strips
+//!       for each (MR×NR) register tile: load C, kc rank-1 updates, store C
+//!   fused bias (+SiLU) epilogue over the finished strip
+//! ```
+//!
+//! Bit-identity: every output element accumulates its `k` products in
+//! ascending order (pc blocks ascend, `p` ascends inside a tile) with
+//! a plain multiply-then-add in the scalar tile, so f32 results equal
+//! `Kernel::Naive` bit-for-bit for any tile sizes. Packing is pure
+//! data movement; ragged edges are zero-padded in the packs and the
+//! padded accumulator lanes are simply never stored back. The SIMD
+//! tiles keep the same loop structure but use FMA, trading the
+//! bit-identity for one fewer rounding per product.
+
+use std::cell::RefCell;
+
+use super::{bf16_to_f32, silu_one, GemmTiles, WeightsView};
+
+/// Register-tile rows (of A) per inner micro-kernel call.
+pub(crate) const MR: usize = 4;
+/// Register-tile columns (of B) per inner micro-kernel call — one
+/// `__m256` / two `float32x4` per tile row.
+pub(crate) const NR: usize = 8;
+
+/// Which inner register tile the blocked engine runs. Resolved once
+/// per GEMM by `Kernel::micro` (runtime ISA detection happens there,
+/// not in the hot loop).
+#[derive(Debug, Clone, Copy)]
+pub(crate) enum Micro {
+    /// Portable scalar tile — plain mul-then-add, the bit-exact path.
+    Scalar,
+    /// AVX2+FMA tile (`simd` feature, x86_64, runtime-detected).
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    Avx2,
+    /// NEON FMA tile (`simd` feature, aarch64, runtime-detected).
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    Neon,
+}
+
+thread_local! {
+    /// Packed A strips (`[mc/MR][kc][MR]`). Thread-local and fully
+    /// overwritten per `(ic, pc)` block, so sharing across calls never
+    /// leaks state between batches or experts.
+    static PACK_A: RefCell<Vec<f32>> = RefCell::new(Vec::new());
+    /// Packed, dequantized B micro-panels (`[nc/NR][kc][NR]`); same
+    /// overwrite discipline per `(pc, jc)` block.
+    static PACK_B: RefCell<Vec<f32>> = RefCell::new(Vec::new());
+}
+
+/// Run `f` with the two thread-local pack buffers borrowed — the one
+/// scratch entry point shared by the plain and gated drivers.
+pub(crate) fn with_packs<R>(
+    f: impl FnOnce(&mut Vec<f32>, &mut Vec<f32>) -> R,
+) -> R {
+    PACK_A.with(|ca| {
+        PACK_B.with(|cb| {
+            let mut ga = ca.borrow_mut();
+            let mut gb = cb.borrow_mut();
+            f(&mut ga, &mut gb)
+        })
+    })
+}
+
+/// Full blocked GEMM with the fused bias(+SiLU) epilogue per strip:
+/// the body behind `gemm_bias_act_tiled` for every non-Naive kernel.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gemm(
+    a: &[f32],
+    b: WeightsView<'_>,
+    bias: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    silu: bool,
+    tiles: GemmTiles,
+    micro: Micro,
+) {
+    c.fill(0.0);
+    with_packs(|pack_a, pack_b| {
+        let mut jc = 0;
+        while jc < n {
+            let nc = tiles.nc.min(n - jc);
+            accumulate_strip(
+                a, k, b, n, m, jc, nc, c, n, jc, tiles, micro, pack_a,
+                pack_b,
+            );
+            epilogue_strip(c, n, jc, nc, m, bias, silu);
+            jc += tiles.nc;
+        }
+    });
+}
+
+/// Accumulate `A[m,k] · B[k, jc..jc+nc]` into `dst` (row-major with
+/// row stride `dst_stride`, columns starting at `dst_col0`), walking
+/// the full reduction in ascending `pc` blocks. `dst` carries the
+/// partial sums between calls, so a caller may split one logical GEMM
+/// across two accumulation targets (the gated driver does).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn accumulate_strip(
+    a: &[f32],
+    k: usize,
+    b: WeightsView<'_>,
+    n: usize,
+    m: usize,
+    jc: usize,
+    nc: usize,
+    dst: &mut [f32],
+    dst_stride: usize,
+    dst_col0: usize,
+    tiles: GemmTiles,
+    micro: Micro,
+    pack_a: &mut Vec<f32>,
+    pack_b: &mut Vec<f32>,
+) {
+    let mut pc = 0;
+    while pc < k {
+        let kc = tiles.kc.min(k - pc);
+        pack_b_micropanels(b, pack_b, n, pc, kc, jc, nc);
+        let mut ic = 0;
+        while ic < m {
+            let mc = tiles.mc.min(m - ic);
+            pack_a_strip(a, pack_a, k, ic, mc, pc, kc);
+            run_block_tiles(
+                pack_a, pack_b, dst, dst_stride, dst_col0, ic, mc, nc,
+                kc, micro,
+            );
+            ic += tiles.mc;
+        }
+        pc += tiles.kc;
+    }
+}
+
+/// Fused bias + optional SiLU over the finished `jc` strip — every
+/// output element is touched exactly twice per GEMM (accumulate,
+/// epilogue).
+fn epilogue_strip(
+    c: &mut [f32],
+    n: usize,
+    jc: usize,
+    nc: usize,
+    m: usize,
+    bias: &[f32],
+    silu: bool,
+) {
+    for i in 0..m {
+        let c_row = &mut c[i * n + jc..i * n + jc + nc];
+        let b_row = &bias[jc..jc + nc];
+        for (cj, &bj) in c_row.iter_mut().zip(b_row) {
+            *cj += bj;
+        }
+        if silu {
+            for cj in c_row.iter_mut() {
+                *cj = silu_one(*cj);
+            }
+        }
+    }
+}
+
+/// Pack `A[ic..ic+mc, pc..pc+kc]` into `[mc/MR]` strips of `[kc, MR]`
+/// (k-major within a strip, so the micro-kernel streams both packs
+/// linearly). Ragged row tails are zero-padded.
+fn pack_a_strip(
+    a: &[f32],
+    pack: &mut Vec<f32>,
+    k: usize,
+    ic: usize,
+    mc: usize,
+    pc: usize,
+    kc: usize,
+) {
+    let strips = mc.div_ceil(MR);
+    pack.clear();
+    pack.resize(strips * kc * MR, 0.0);
+    for t in 0..strips {
+        let i0 = ic + t * MR;
+        let mr = MR.min(ic + mc - i0);
+        let dst = &mut pack[t * kc * MR..(t + 1) * kc * MR];
+        for (r, dcol) in dst.chunks_exact_mut(MR).enumerate().take(kc) {
+            // r walks the kc reduction; dcol holds MR row values
+            let p = pc + r;
+            for (rr, d) in dcol.iter_mut().enumerate().take(mr) {
+                *d = a[(i0 + rr) * k + p];
+            }
+        }
+    }
+}
+
+/// Pack (and dequantize) `B[pc..pc+kc, jc..jc+nc]` into `[nc/NR]`
+/// micro-panels of `[kc, NR]`. Quantized stores dequantize here,
+/// panel-at-a-time, directly into the layout the register tile
+/// consumes — no row-scratch round trip. Ragged column tails are
+/// zero-padded.
+fn pack_b_micropanels(
+    b: WeightsView<'_>,
+    pack: &mut Vec<f32>,
+    n: usize,
+    pc: usize,
+    kc: usize,
+    jc: usize,
+    nc: usize,
+) {
+    let panels = nc.div_ceil(NR);
+    pack.clear();
+    pack.resize(panels * kc * NR, 0.0);
+    for t in 0..panels {
+        let j0 = jc + t * NR;
+        let nr = NR.min(jc + nc - j0);
+        let dst = &mut pack[t * kc * NR..(t + 1) * kc * NR];
+        match b {
+            WeightsView::F32(w) => {
+                for (r, drow) in
+                    dst.chunks_exact_mut(NR).enumerate().take(kc)
+                {
+                    let src = &w[(pc + r) * n + j0..][..nr];
+                    drow[..nr].copy_from_slice(src);
+                }
+            }
+            WeightsView::Bf16(w) => {
+                for (r, drow) in
+                    dst.chunks_exact_mut(NR).enumerate().take(kc)
+                {
+                    let src = &w[(pc + r) * n + j0..][..nr];
+                    for (d, &h) in drow.iter_mut().zip(src) {
+                        *d = bf16_to_f32(h);
+                    }
+                }
+            }
+            WeightsView::Int8 { q, scales } => {
+                for (r, drow) in
+                    dst.chunks_exact_mut(NR).enumerate().take(kc)
+                {
+                    let s = scales[pc + r];
+                    let src = &q[(pc + r) * n + j0..][..nr];
+                    for (d, &v) in drow.iter_mut().zip(src) {
+                        *d = v as f32 * s;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Sweep the packed block with MR×NR register tiles: per tile, load
+/// the live C sub-block into the accumulator, run the `kc` rank-1
+/// updates, store the valid lanes back. Padded lanes never reach
+/// `dst`.
+#[allow(clippy::too_many_arguments)]
+fn run_block_tiles(
+    pack_a: &[f32],
+    pack_b: &[f32],
+    dst: &mut [f32],
+    dst_stride: usize,
+    dst_col0: usize,
+    ic: usize,
+    mc: usize,
+    nc: usize,
+    kc: usize,
+    micro: Micro,
+) {
+    for jt in 0..nc.div_ceil(NR) {
+        let j0 = jt * NR;
+        let nr = NR.min(nc - j0);
+        let bp = &pack_b[jt * kc * NR..(jt + 1) * kc * NR];
+        for it in 0..mc.div_ceil(MR) {
+            let i0 = it * MR;
+            let mr = MR.min(mc - i0);
+            let ap = &pack_a[it * kc * MR..(it + 1) * kc * MR];
+            let mut acc = [[0.0f32; NR]; MR];
+            for (r, accr) in acc.iter_mut().enumerate().take(mr) {
+                let row =
+                    (ic + i0 + r) * dst_stride + dst_col0 + j0;
+                accr[..nr].copy_from_slice(&dst[row..row + nr]);
+            }
+            micro_tile(micro, ap, bp, kc, &mut acc);
+            for (r, accr) in acc.iter().enumerate().take(mr) {
+                let row =
+                    (ic + i0 + r) * dst_stride + dst_col0 + j0;
+                dst[row..row + nr].copy_from_slice(&accr[..nr]);
+            }
+        }
+    }
+}
+
+/// One MR×NR register tile over packed `[kc, MR]` / `[kc, NR]`
+/// operands — the only place the three engines differ.
+fn micro_tile(
+    micro: Micro,
+    ap: &[f32],
+    bp: &[f32],
+    kc: usize,
+    acc: &mut [[f32; NR]; MR],
+) {
+    match micro {
+        Micro::Scalar => scalar_tile(ap, bp, kc, acc),
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        Micro::Avx2 => {
+            // SAFETY: Micro::Avx2 is only constructed after runtime
+            // AVX2+FMA detection (`Kernel::micro` / `simd_available`).
+            unsafe { super::simd_x86::tile_avx2(ap, bp, kc, acc) }
+        }
+        #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+        Micro::Neon => {
+            // SAFETY: Micro::Neon is only constructed after runtime
+            // NEON detection (`Kernel::micro` / `neon_available`).
+            unsafe { super::simd_neon::tile_neon(ap, bp, kc, acc) }
+        }
+    }
+}
+
+/// Portable scalar tile: `kc` rank-1 updates with plain
+/// multiply-then-add in ascending `p` order — the op sequence that
+/// keeps Blocked bit-identical to Naive on f32.
+#[inline]
+fn scalar_tile(
+    ap: &[f32],
+    bp: &[f32],
+    kc: usize,
+    acc: &mut [[f32; NR]; MR],
+) {
+    for p in 0..kc {
+        let av = &ap[p * MR..(p + 1) * MR];
+        let bv = &bp[p * NR..(p + 1) * NR];
+        for (accr, &a) in acc.iter_mut().zip(av) {
+            for (cell, &b) in accr.iter_mut().zip(bv) {
+                *cell += a * b;
+            }
+        }
+    }
+}

@@ -1,0 +1,398 @@
+//! Fused SwiGLU first stage:
+//! `C[m,n] = silu(A·B1 + bias1) ⊙ (A·B3 + bias3)`.
+//!
+//! A gated expert's up-projection needs two GEMMs over the *same*
+//! activations. Instead of materializing both `[m, d_ff]` products
+//! and multiplying in a third pass, [`gemm_bias_act_gated`] walks each
+//! `jc` strip once: accumulate the `B1` panels into `c`, the `B3`
+//! panels into a thread-local gate scratch (`[m, nc]`, re-zeroed per
+//! strip), then run one fused epilogue
+//! `c = silu(c + bias1) ⊙ (gate + bias3)` while the strip is still
+//! cache-hot.
+//!
+//! Op-order contract: the epilogue applies exactly the expression a
+//! hand-composed `silu(x·w1 + b1)` (via `gemm_bias_act`, silu on)
+//! times `(x·w3 + b3)` (silu off) would, and the accumulation order
+//! per element is the same ascending-`k` walk as the plain kernels.
+//! So for f32 weights, Naive-gated and Blocked-gated are
+//! **bit-identical** to that hand-composed reference (pinned below);
+//! Simd/Neon match it within the usual FMA tolerance.
+
+use std::cell::RefCell;
+
+use super::blocked::{self, Micro};
+use super::{silu_one, GemmTiles, Kernel, WeightsView};
+
+thread_local! {
+    /// Gate accumulator: `[m, nc]` per `jc` strip for the blocked
+    /// drivers, `[n]` per row for the naive driver. Fully re-zeroed
+    /// before each use, so sharing across calls never leaks state.
+    static GATE: RefCell<Vec<f32>> = RefCell::new(Vec::new());
+}
+
+/// Fused gated GEMM: `C[m,n] = silu(A·B1 + bias1) ⊙ (A·B3 + bias3)`,
+/// f32 accumulation, overwriting `c`. `b1`/`b3` must share the
+/// `[k, n]` shape (any [`WeightsView`] dtype, independently). The
+/// gated counterpart of `gemm_bias_act_tiled` — same kernel dispatch,
+/// same tile semantics (results are tile-invariant per kernel).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_bias_act_gated(
+    kernel: Kernel,
+    tiles: GemmTiles,
+    a: &[f32],
+    b1: WeightsView<'_>,
+    bias1: &[f32],
+    b3: WeightsView<'_>,
+    bias3: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    assert_eq!(a.len(), m * k, "A shape");
+    b1.check_shape(k, n);
+    b3.check_shape(k, n);
+    assert_eq!(bias1.len(), n, "bias1 shape");
+    assert_eq!(bias3.len(), n, "bias3 shape");
+    assert_eq!(c.len(), m * n, "C shape");
+    tiles.check();
+    match kernel {
+        Kernel::Naive => {
+            naive_gated(a, b1, bias1, b3, bias3, c, m, k, n)
+        }
+        other => blocked_gated(
+            a,
+            b1,
+            bias1,
+            b3,
+            bias3,
+            c,
+            m,
+            k,
+            n,
+            tiles,
+            other.micro(),
+        ),
+    }
+}
+
+/// Row-at-a-time gated reference path: per row, accumulate `x·w1`
+/// into `c` and `x·w3` into the gate scratch (both ascending `k`),
+/// then apply the fused epilogue. Bit-identical to hand-composing two
+/// naive `gemm_bias_act` calls and an elementwise product.
+#[allow(clippy::too_many_arguments)]
+fn naive_gated(
+    a: &[f32],
+    b1: WeightsView<'_>,
+    bias1: &[f32],
+    b3: WeightsView<'_>,
+    bias3: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    c.fill(0.0);
+    GATE.with(|cell| {
+        let mut guard = cell.borrow_mut();
+        let gate: &mut Vec<f32> = &mut guard;
+        gate.clear();
+        gate.resize(n, 0.0);
+        for i in 0..m {
+            let a_row = &a[i * k..(i + 1) * k];
+            let c_row = &mut c[i * n..(i + 1) * n];
+            gate.fill(0.0);
+            super::accumulate_row_naive(a_row, b1, c_row, n);
+            super::accumulate_row_naive(a_row, b3, gate, n);
+            for (((cj, &g), &bj1), &bj3) in
+                c_row.iter_mut().zip(gate.iter()).zip(bias1).zip(bias3)
+            {
+                *cj = silu_one(*cj + bj1) * (g + bj3);
+            }
+        }
+    });
+}
+
+/// Blocked gated driver: per `jc` strip, run the full reduction for
+/// both operands through the shared register-tiled engine, then the
+/// fused epilogue. `c` holds the `w1` partials in place; the gate
+/// partials live in the `[m, nc]` thread-local scratch.
+#[allow(clippy::too_many_arguments)]
+fn blocked_gated(
+    a: &[f32],
+    b1: WeightsView<'_>,
+    bias1: &[f32],
+    b3: WeightsView<'_>,
+    bias3: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    tiles: GemmTiles,
+    micro: Micro,
+) {
+    c.fill(0.0);
+    blocked::with_packs(|pack_a, pack_b| {
+        GATE.with(|cell| {
+            let mut guard = cell.borrow_mut();
+            let gate: &mut Vec<f32> = &mut guard;
+            let mut jc = 0;
+            while jc < n {
+                let nc = tiles.nc.min(n - jc);
+                gate.clear();
+                gate.resize(m * nc, 0.0);
+                blocked::accumulate_strip(
+                    a, k, b1, n, m, jc, nc, c, n, jc, tiles, micro,
+                    pack_a, pack_b,
+                );
+                blocked::accumulate_strip(
+                    a, k, b3, n, m, jc, nc, gate, nc, 0, tiles, micro,
+                    pack_a, pack_b,
+                );
+                for i in 0..m {
+                    let c_row = &mut c[i * n + jc..i * n + jc + nc];
+                    let g_row = &gate[i * nc..(i + 1) * nc];
+                    let b1_row = &bias1[jc..jc + nc];
+                    let b3_row = &bias3[jc..jc + nc];
+                    for (((cj, &g), &bj1), &bj3) in c_row
+                        .iter_mut()
+                        .zip(g_row)
+                        .zip(b1_row)
+                        .zip(b3_row)
+                    {
+                        *cj = silu_one(*cj + bj1) * (g + bj3);
+                    }
+                }
+                jc += tiles.nc;
+            }
+        });
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{
+        gemm_bias_act, GemmTiles, Kernel, WeightDtype, WeightStore,
+        WeightsView, KC, MC, NC,
+    };
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    /// Hand-composed SwiGLU reference: `silu(x·w1 + b1)` and
+    /// `(x·w3 + b3)` as two separate naive GEMMs, multiplied
+    /// elementwise — the exact path a bank without the fused kernel
+    /// would take.
+    #[allow(clippy::too_many_arguments)]
+    fn hand_composed(
+        a: &[f32],
+        w1: &[f32],
+        b1: &[f32],
+        w3: &[f32],
+        b3: &[f32],
+        m: usize,
+        k: usize,
+        n: usize,
+    ) -> Vec<f32> {
+        let mut h1 = vec![0.0f32; m * n];
+        let mut h3 = vec![0.0f32; m * n];
+        gemm_bias_act(
+            Kernel::Naive,
+            a,
+            WeightsView::F32(w1),
+            b1,
+            &mut h1,
+            m,
+            k,
+            n,
+            true,
+        );
+        gemm_bias_act(
+            Kernel::Naive,
+            a,
+            WeightsView::F32(w3),
+            b3,
+            &mut h3,
+            m,
+            k,
+            n,
+            false,
+        );
+        h1.iter().zip(&h3).map(|(&x, &g)| x * g).collect()
+    }
+
+    /// Odd shapes straddling the default tile boundaries.
+    const SHAPES: [(usize, usize, usize); 5] = [
+        (1, 1, 1),
+        (3, 5, 7),
+        (7, 300, 19),
+        (MC + 3, KC + 5, NC + 9),
+        (13, 2 * KC + 3, NC + 1),
+    ];
+
+    /// Naive- and Blocked-gated are bit-identical to the
+    /// hand-composed `silu(x·w1+b1) ⊙ (x·w3+b3)` on f32 — the fused
+    /// epilogue changes no op order, only memory traffic. Holds for
+    /// any valid tile choice, like the plain kernels.
+    #[test]
+    fn gated_scalar_kernels_match_hand_composed_bitwise() {
+        let mut rng = Rng::new(71);
+        let tile_grid = [
+            GemmTiles::default(),
+            GemmTiles::new(1, 1, 1),
+            GemmTiles::new(8, 16, 8),
+        ];
+        for &(m, k, n) in &SHAPES {
+            let a = rand_vec(&mut rng, m * k);
+            let w1 = rand_vec(&mut rng, k * n);
+            let b1 = rand_vec(&mut rng, n);
+            let w3 = rand_vec(&mut rng, k * n);
+            let b3 = rand_vec(&mut rng, n);
+            let want = hand_composed(&a, &w1, &b1, &w3, &b3, m, k, n);
+            for kernel in [Kernel::Naive, Kernel::Blocked] {
+                for tiles in tile_grid {
+                    let mut c = vec![9.9f32; m * n]; // must overwrite
+                    gemm_bias_act_gated(
+                        kernel,
+                        tiles,
+                        &a,
+                        WeightsView::F32(&w1),
+                        &b1,
+                        WeightsView::F32(&w3),
+                        &b3,
+                        &mut c,
+                        m,
+                        k,
+                        n,
+                    );
+                    assert_eq!(
+                        c,
+                        want,
+                        "{} shape ({m},{k},{n}) tiles {tiles}",
+                        kernel.name()
+                    );
+                }
+            }
+        }
+    }
+
+    /// Simd/Neon gated stay within the documented FMA tolerance of
+    /// the hand-composed reference (bit-equal when falling back to
+    /// Blocked). The product of two ~k-sum terms squares the relative
+    /// scale, hence the scale factor below.
+    #[test]
+    fn gated_simd_kernels_match_within_tolerance() {
+        let mut rng = Rng::new(73);
+        for &(m, k, n) in &SHAPES {
+            let a = rand_vec(&mut rng, m * k);
+            let w1 = rand_vec(&mut rng, k * n);
+            let b1 = rand_vec(&mut rng, n);
+            let w3 = rand_vec(&mut rng, k * n);
+            let b3 = rand_vec(&mut rng, n);
+            let want = hand_composed(&a, &w1, &b1, &w3, &b3, m, k, n);
+            let tol = 2e-5 * (k as f32).sqrt().max(1.0);
+            for kernel in [Kernel::Simd, Kernel::Neon] {
+                let mut c = vec![0.0f32; m * n];
+                gemm_bias_act_gated(
+                    kernel,
+                    GemmTiles::default(),
+                    &a,
+                    WeightsView::F32(&w1),
+                    &b1,
+                    WeightsView::F32(&w3),
+                    &b3,
+                    &mut c,
+                    m,
+                    k,
+                    n,
+                );
+                for (i, (&got, &w)) in c.iter().zip(&want).enumerate()
+                {
+                    // silu is bounded by |x|, the gate by the raw sum,
+                    // so scale by the larger of the two magnitudes
+                    let scale =
+                        w.abs().max((k as f32).sqrt()).max(1.0);
+                    assert!(
+                        (got - w).abs() <= tol * scale,
+                        "{} shape ({m},{k},{n}) elem {i}: {got} vs {w}",
+                        kernel.name()
+                    );
+                }
+            }
+        }
+    }
+
+    /// Quantized gated stores: Naive and Blocked agree bit-for-bit on
+    /// the same store (dequantize-before-accumulate either way), and
+    /// mixing dtypes between w1 and w3 is supported.
+    #[test]
+    fn gated_quantized_stores_agree_across_scalar_kernels() {
+        let mut rng = Rng::new(79);
+        let (m, k, n) = (5usize, 130, 21);
+        let a = rand_vec(&mut rng, m * k);
+        let w1 = rand_vec(&mut rng, k * n);
+        let w3 = rand_vec(&mut rng, k * n);
+        let b1 = rand_vec(&mut rng, n);
+        let b3 = rand_vec(&mut rng, n);
+        for dtype in WeightDtype::ALL {
+            let s1 = WeightStore::quantize(&w1, k, n, dtype);
+            // mixed dtypes: w3 one notch away from w1's
+            let s3 = WeightStore::quantize(&w3, k, n, WeightDtype::Bf16);
+            let mut naive = vec![0.0f32; m * n];
+            let mut blocked = vec![0.0f32; m * n];
+            for (kern, out) in [
+                (Kernel::Naive, &mut naive),
+                (Kernel::Blocked, &mut blocked),
+            ] {
+                gemm_bias_act_gated(
+                    kern,
+                    GemmTiles::default(),
+                    &a,
+                    s1.view(0, k, n),
+                    &b1,
+                    s3.view(0, k, n),
+                    &b3,
+                    out,
+                    m,
+                    k,
+                    n,
+                );
+            }
+            assert_eq!(naive, blocked, "{}", dtype.name());
+        }
+    }
+
+    #[test]
+    fn gated_is_deterministic_across_calls_for_every_kernel() {
+        let mut rng = Rng::new(83);
+        let (m, k, n) = (MC + 1, KC + 3, NC + 5);
+        let a = rand_vec(&mut rng, m * k);
+        let w1 = rand_vec(&mut rng, k * n);
+        let w3 = rand_vec(&mut rng, k * n);
+        let b1 = rand_vec(&mut rng, n);
+        let b3 = rand_vec(&mut rng, n);
+        for kernel in Kernel::ALL {
+            let mut c1 = vec![0.0f32; m * n];
+            let mut c2 = vec![5.0f32; m * n];
+            for c in [&mut c1, &mut c2] {
+                gemm_bias_act_gated(
+                    kernel,
+                    GemmTiles::default(),
+                    &a,
+                    WeightsView::F32(&w1),
+                    &b1,
+                    WeightsView::F32(&w3),
+                    &b3,
+                    c,
+                    m,
+                    k,
+                    n,
+                );
+            }
+            assert_eq!(c1, c2, "{} not deterministic", kernel.name());
+        }
+    }
+}

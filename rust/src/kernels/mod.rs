@@ -2,51 +2,77 @@
 //! loop.
 //!
 //! Every served token ends in [`crate::experts::ExpertBank`]'s two
-//! matmuls; this module owns that compute. Three kernels share one
-//! fused entry point, [`gemm_bias_act`] (`C = act(A·B + bias)`), and
-//! three weight storage dtypes share one container, [`WeightStore`]:
+//! matmuls; this module owns that compute. Four kernels share two
+//! fused entry points — [`gemm_bias_act`] (`C = act(A·B + bias)`) and
+//! [`gemm_bias_act_gated`] (`C = silu(A·B1 + bias1) ⊙ (A·B3 + bias3)`,
+//! the SwiGLU first stage) — and three weight storage dtypes share one
+//! container, [`WeightStore`]. The implementation is split by file:
+//! `mod.rs` (types, dispatch, the Naive golden), `blocked.rs` (packing
+//! and the register-tiled scalar engine), `simd_x86.rs` /
+//! `simd_neon.rs` (the AVX2 and NEON inner tiles), and `gated.rs` (the
+//! fused SwiGLU driver).
 //!
 //! - [`Kernel::Naive`] — the original i-k-j loop from
 //!   `router::linalg::matmul_into` with the bias add and SiLU applied
 //!   per output row. Per-element op order is identical to the
 //!   pre-kernel-layer path (accumulate over `k` in order, add bias,
 //!   apply SiLU), so f32 results are **bit-identical** to the historic
-//!   goldens. The default everywhere.
+//!   goldens. The default for f32 weights.
 //! - [`Kernel::Blocked`] — cache-blocked (BLIS-style `jc → pc → ic`
-//!   loop nest, fixed [`MC`]/[`KC`]/[`NC`] tiles) with the `B` panel
-//!   packed contiguously per `(pc, jc)` block and the bias+activation
-//!   epilogue fused over each `jc` strip after the full `k`
-//!   accumulation. Accumulation still walks `k` in ascending order
-//!   (`pc` blocks in order, rows in order within a block), so for f32
-//!   weights Blocked is bit-identical to Naive too — the win is cache
-//!   locality, not reassociation.
+//!   loop nest, [`GemmTiles`] MC/KC/NC blocking) with **both** operands
+//!   packed: `B` into `[kc, NR]` column micro-panels per `(pc, jc)`
+//!   block and `A` into `[kc, MR]` row strips per `(ic, pc)` block,
+//!   feeding an `MR×NR = 4×8` register-tile inner kernel that holds a
+//!   full accumulator tile across the `kc` reduction. Each output
+//!   element still accumulates its `k` products in ascending order
+//!   with a plain multiply-then-add, so for f32 weights Blocked is
+//!   bit-identical to Naive **for any tile sizes** — the win is cache
+//!   and register locality, not reassociation.
 //! - [`Kernel::Simd`] — the Blocked loop nest with an explicit
-//!   `std::arch` AVX2+FMA inner kernel, compiled behind the `simd`
-//!   cargo feature and selected at runtime via
-//!   `is_x86_feature_detected!`. FMA contracts the multiply-add
+//!   `std::arch` AVX2+FMA register tile (one `__m256` per tile row),
+//!   compiled behind the `simd` cargo feature and selected at runtime
+//!   via `is_x86_feature_detected!`. FMA contracts the multiply-add
 //!   rounding step, so Simd is *not* bit-identical to Naive/Blocked —
 //!   but it is deterministic in itself (fixed tile sizes, fixed lane
 //!   order). Without the feature (or on non-x86_64, or when the CPU
 //!   lacks AVX2/FMA) `Kernel::Simd` transparently falls back to
 //!   Blocked.
+//! - [`Kernel::Neon`] — the same contract on aarch64: `simd` feature +
+//!   runtime `is_aarch64_feature_detected!("neon")`, two `float32x4`
+//!   FMA lanes per tile row. Everywhere else (including x86_64) it
+//!   transparently falls back to Blocked, so the knob is always safe
+//!   to set and the enum round-trips through configs on any host.
+//!
+//! # Tile tunables
+//!
+//! [`GemmTiles`] carries the MC/KC/NC cache-blocking sizes at runtime.
+//! Defaults are the [`MC`]/[`KC`]/[`NC`] constants (64/256/128 — a
+//! `KC·NC` f32 panel ≈ 128 KiB, sized for L2). Overrides thread from
+//! `Engine::builder().gemm_tiles(..)`, the `LPR_GEMM_TILES=MCxKCxNC`
+//! environment variable, or the CLI `--tiles` flag (builder-explicit
+//! wins over env wins over default). Tiles move cache behavior only,
+//! never results: the ascending-`k` accumulation order is preserved
+//! for every valid tile choice, which is pinned by the
+//! any-tiles-bitwise test below.
 //!
 //! # Determinism contract (per kernel)
 //!
-//! Tile sizes are compile-time constants and the packed-panel scratch
-//! is thread-local and fully overwritten per block, so a kernel's
-//! output depends only on its inputs — never on thread count or which
-//! thread runs the call. The serving engines parallelize at expert-
-//! bucket granularity (see `router::engine`), so every kernel
-//! individually satisfies the crate's bit-identical-across-threads
-//! contract. Cross-*kernel* equality is only promised between Naive
-//! and Blocked on f32 weights.
+//! Tile sizes are fixed per call and the packed-operand scratch
+//! buffers are thread-local and fully overwritten per block, so a
+//! kernel's output depends only on its inputs and tiles — never on
+//! thread count or which thread runs the call. The serving engines
+//! parallelize at expert-bucket granularity (see `router::engine`), so
+//! every kernel individually satisfies the crate's
+//! bit-identical-across-threads contract. Cross-*kernel* equality is
+//! only promised between Naive and Blocked on f32 weights.
 //!
 //! # Quantized storage and error bounds
 //!
 //! [`WeightStore`] keeps FFN weights in f32, bf16, or int8 (per-row
 //! absmax scaling). All kernels **accumulate in f32**; quantized
-//! weights are dequantized on the fly (Naive) or at panel-pack time
-//! (Blocked/Simd), so the only error is the weight round-trip:
+//! weights are dequantized on the fly (Naive) or at pack time straight
+//! into the `[kc, NR]` micro-panels the register tile consumes
+//! (Blocked/Simd/Neon), so the only error is the weight round-trip:
 //!
 //! - **bf16** (round-to-nearest-even, 8 mantissa bits):
 //!   `|ŵ − w| ≤ 2⁻⁸·|w|` per element (half the ulp at 7 explicit
@@ -60,7 +86,14 @@
 //! bound above — the tolerance the parity tests and
 //! `docs/ARCHITECTURE.md` state.
 
-use std::cell::RefCell;
+mod blocked;
+mod gated;
+#[cfg(all(feature = "simd", target_arch = "aarch64"))]
+mod simd_neon;
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod simd_x86;
+
+pub use gated::gemm_bias_act_gated;
 
 /// Which GEMM micro-kernel the FFN hot loop runs. Builder knob:
 /// `Engine::builder().kernel(...)`.
@@ -69,22 +102,52 @@ pub enum Kernel {
     /// Original i-k-j loop; bit-identical to the historic goldens.
     #[default]
     Naive,
-    /// Cache-blocked with a packed B panel and fused epilogue.
+    /// Cache-blocked with packed A/B operands and an MR×NR
+    /// register-tile inner kernel; bit-identical to Naive on f32.
     Blocked,
-    /// Blocked + `std::arch` AVX2/FMA inner loop (`simd` feature);
-    /// falls back to Blocked when unavailable.
+    /// Blocked + `std::arch` AVX2/FMA register tile (`simd` feature,
+    /// x86_64); falls back to Blocked when unavailable.
     Simd,
+    /// Blocked + `std::arch` NEON/FMA register tile (`simd` feature,
+    /// aarch64); falls back to Blocked when unavailable.
+    Neon,
 }
 
 impl Kernel {
-    pub const ALL: [Kernel; 3] =
-        [Kernel::Naive, Kernel::Blocked, Kernel::Simd];
+    pub const ALL: [Kernel; 4] =
+        [Kernel::Naive, Kernel::Blocked, Kernel::Simd, Kernel::Neon];
 
     pub fn name(&self) -> &'static str {
         match self {
             Kernel::Naive => "naive",
             Kernel::Blocked => "blocked",
             Kernel::Simd => "simd",
+            Kernel::Neon => "neon",
+        }
+    }
+
+    /// Resolve the register-tile engine this kernel runs on this host
+    /// (the runtime-dispatch point; Naive never calls it).
+    fn micro(self) -> blocked::Micro {
+        match self {
+            Kernel::Naive => {
+                unreachable!("Naive dispatches before tiling")
+            }
+            Kernel::Blocked => blocked::Micro::Scalar,
+            Kernel::Simd => {
+                #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+                if simd_available() {
+                    return blocked::Micro::Avx2;
+                }
+                blocked::Micro::Scalar
+            }
+            Kernel::Neon => {
+                #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+                if neon_available() {
+                    return blocked::Micro::Neon;
+                }
+                blocked::Micro::Scalar
+            }
         }
     }
 }
@@ -113,6 +176,93 @@ impl WeightDtype {
             WeightDtype::F32 => "f32",
             WeightDtype::Bf16 => "bf16",
             WeightDtype::Int8 => "int8",
+        }
+    }
+}
+
+/// Runtime MC/KC/NC cache-blocking sizes for the blocked kernels (see
+/// the module docs) — `mc` rows of A per inner block, `kc` of the
+/// reduction per packed panel, `nc` columns per strip. Results are
+/// tile-invariant; only cache behavior moves. Defaults to
+/// [`MC`]`x`[`KC`]`x`[`NC`]; override via
+/// `Engine::builder().gemm_tiles(..)`, the [`GemmTiles::ENV`]
+/// environment variable, or the CLI `--tiles MCxKCxNC`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GemmTiles {
+    pub mc: usize,
+    pub kc: usize,
+    pub nc: usize,
+}
+
+impl Default for GemmTiles {
+    fn default() -> GemmTiles {
+        GemmTiles { mc: MC, kc: KC, nc: NC }
+    }
+}
+
+impl std::fmt::Display for GemmTiles {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}x{}x{}", self.mc, self.kc, self.nc)
+    }
+}
+
+impl GemmTiles {
+    /// Environment override read by `Engine::builder()` when no
+    /// explicit `.gemm_tiles(..)` is set: `LPR_GEMM_TILES=MCxKCxNC`.
+    pub const ENV: &'static str = "LPR_GEMM_TILES";
+
+    pub fn new(mc: usize, kc: usize, nc: usize) -> GemmTiles {
+        GemmTiles { mc, kc, nc }
+    }
+
+    /// Every dimension must be ≥ 1 (a zero tile would never advance
+    /// the block loops).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.mc == 0 || self.kc == 0 || self.nc == 0 {
+            return Err(format!(
+                "tile dims must all be >= 1, got {self}"
+            ));
+        }
+        Ok(())
+    }
+
+    /// Parse the `MCxKCxNC` spec shared by the env var and `--tiles`.
+    pub fn parse(s: &str) -> Result<GemmTiles, String> {
+        let parts: Vec<&str> = s.trim().split(['x', 'X']).collect();
+        if parts.len() != 3 {
+            return Err(format!(
+                "expected MCxKCxNC (e.g. 64x256x128), got {s:?}"
+            ));
+        }
+        let mut dims = [0usize; 3];
+        for (d, part) in dims.iter_mut().zip(&parts) {
+            *d = part.trim().parse::<usize>().map_err(|_| {
+                format!("bad tile dim {part:?} in {s:?}")
+            })?;
+        }
+        let tiles = GemmTiles::new(dims[0], dims[1], dims[2]);
+        tiles.validate()?;
+        Ok(tiles)
+    }
+
+    /// The [`Self::ENV`] override, if set: `Ok(None)` when absent or
+    /// empty, `Err` when set but unparseable (the builder surfaces
+    /// that as a typed `EngineBuildError` instead of silently
+    /// ignoring a typo'd sweep).
+    pub fn from_env() -> Result<Option<GemmTiles>, String> {
+        match std::env::var(GemmTiles::ENV) {
+            Ok(s) if !s.trim().is_empty() => GemmTiles::parse(&s)
+                .map(Some)
+                .map_err(|e| format!("{}: {e}", GemmTiles::ENV)),
+            _ => Ok(None),
+        }
+    }
+
+    /// Panic with the validation message — the kernel entry points'
+    /// guard for callers that bypass the builder.
+    pub(crate) fn check(&self) {
+        if let Err(e) = self.validate() {
+            panic!("invalid GemmTiles: {e}");
         }
     }
 }
@@ -259,27 +409,53 @@ impl WeightsView<'_> {
     }
 }
 
-/// Row-panel cache blocking constants (BLIS-style). `KC·NC` f32 panel
-/// ≈ 128 KiB — sized for L2; `MC` rows of A per inner block stay
-/// L1-resident. Compile-time constants: blocking never depends on
-/// runtime state, which is what keeps each kernel deterministic.
+/// Default cache-blocking sizes (BLIS-style). `KC·NC` f32 panel ≈
+/// 128 KiB — sized for L2; `MC` rows of A per inner block stay
+/// L1-resident. [`GemmTiles`] carries runtime overrides; these
+/// constants remain the defaults (and the shapes the golden tests
+/// straddle).
 pub const MC: usize = 64;
 pub const KC: usize = 256;
 pub const NC: usize = 128;
 
-thread_local! {
-    /// Packed B panel (`[kc, nc]`, kc ≤ KC, nc ≤ NC). Thread-local and
-    /// fully overwritten per `(pc, jc)` block, so sharing it across
-    /// calls never leaks state between batches or experts.
-    static PANEL: RefCell<Vec<f32>> = RefCell::new(Vec::new());
-}
-
 /// Fused GEMM + bias + optional SiLU: `C[m,n] = act(A[m,k] · B[k,n] +
-/// bias[n])`, f32 accumulation, overwriting `c`. The single entry
-/// point of the kernel layer — `kernel` selects the implementation,
-/// `b` selects the weight dtype; every combination is supported.
+/// bias[n])`, f32 accumulation, overwriting `c`, at the default
+/// [`GemmTiles`]. `kernel` selects the implementation, `b` selects the
+/// weight dtype; every combination is supported. Engines that carry a
+/// tile override call [`gemm_bias_act_tiled`] instead.
+#[allow(clippy::too_many_arguments)]
 pub fn gemm_bias_act(
     kernel: Kernel,
+    a: &[f32],
+    b: WeightsView<'_>,
+    bias: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    silu: bool,
+) {
+    gemm_bias_act_tiled(
+        kernel,
+        GemmTiles::default(),
+        a,
+        b,
+        bias,
+        c,
+        m,
+        k,
+        n,
+        silu,
+    );
+}
+
+/// [`gemm_bias_act`] with explicit cache-blocking tiles. Results are
+/// bit-identical across every valid `tiles` value per kernel; tiles
+/// only move cache behavior.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_bias_act_tiled(
+    kernel: Kernel,
+    tiles: GemmTiles,
     a: &[f32],
     b: WeightsView<'_>,
     bias: &[f32],
@@ -293,14 +469,21 @@ pub fn gemm_bias_act(
     b.check_shape(k, n);
     assert_eq!(bias.len(), n, "bias shape");
     assert_eq!(c.len(), m * n, "C shape");
+    tiles.check();
     match kernel {
         Kernel::Naive => naive_gemm(a, b, bias, c, m, k, n, silu),
-        Kernel::Blocked => {
-            blocked_gemm(a, b, bias, c, m, k, n, silu, false)
-        }
-        Kernel::Simd => {
-            blocked_gemm(a, b, bias, c, m, k, n, silu, simd_available())
-        }
+        other => blocked::gemm(
+            a,
+            b,
+            bias,
+            c,
+            m,
+            k,
+            n,
+            silu,
+            tiles,
+            other.micro(),
+        ),
     }
 }
 
@@ -310,6 +493,44 @@ pub fn gemm_bias_act(
 #[inline]
 fn silu_one(v: f32) -> f32 {
     v / (1.0 + (-v).exp())
+}
+
+/// Accumulate `a_row[k] · B[k,n]` into `c_row[n]`, walking `k` in
+/// ascending order with a plain multiply-then-add — the bit-exact
+/// golden op order both the naive GEMM and the naive gated path share.
+fn accumulate_row_naive(
+    a_row: &[f32],
+    b: WeightsView<'_>,
+    c_row: &mut [f32],
+    n: usize,
+) {
+    match b {
+        WeightsView::F32(w) => {
+            for (p, &aik) in a_row.iter().enumerate() {
+                let b_row = &w[p * n..(p + 1) * n];
+                for (cj, &bv) in c_row.iter_mut().zip(b_row) {
+                    *cj += aik * bv;
+                }
+            }
+        }
+        WeightsView::Bf16(w) => {
+            for (p, &aik) in a_row.iter().enumerate() {
+                let b_row = &w[p * n..(p + 1) * n];
+                for (cj, &bv) in c_row.iter_mut().zip(b_row) {
+                    *cj += aik * bf16_to_f32(bv);
+                }
+            }
+        }
+        WeightsView::Int8 { q, scales } => {
+            for (p, &aik) in a_row.iter().enumerate() {
+                let b_row = &q[p * n..(p + 1) * n];
+                let s = scales[p];
+                for (cj, &bv) in c_row.iter_mut().zip(b_row) {
+                    *cj += aik * (bv as f32 * s);
+                }
+            }
+        }
+    }
 }
 
 /// The original serving kernel: i-k-j accumulation (ascending `k`),
@@ -331,33 +552,7 @@ fn naive_gemm(
     for i in 0..m {
         let a_row = &a[i * k..(i + 1) * k];
         let c_row = &mut c[i * n..(i + 1) * n];
-        match b {
-            WeightsView::F32(w) => {
-                for (p, &aik) in a_row.iter().enumerate() {
-                    let b_row = &w[p * n..(p + 1) * n];
-                    for (cj, &bv) in c_row.iter_mut().zip(b_row) {
-                        *cj += aik * bv;
-                    }
-                }
-            }
-            WeightsView::Bf16(w) => {
-                for (p, &aik) in a_row.iter().enumerate() {
-                    let b_row = &w[p * n..(p + 1) * n];
-                    for (cj, &bv) in c_row.iter_mut().zip(b_row) {
-                        *cj += aik * bf16_to_f32(bv);
-                    }
-                }
-            }
-            WeightsView::Int8 { q, scales } => {
-                for (p, &aik) in a_row.iter().enumerate() {
-                    let b_row = &q[p * n..(p + 1) * n];
-                    let s = scales[p];
-                    for (cj, &bv) in c_row.iter_mut().zip(b_row) {
-                        *cj += aik * (bv as f32 * s);
-                    }
-                }
-            }
-        }
+        accumulate_row_naive(a_row, b, c_row, n);
         for (cj, &bj) in c_row.iter_mut().zip(bias) {
             *cj += bj;
         }
@@ -369,145 +564,7 @@ fn naive_gemm(
     }
 }
 
-/// Pack (and dequantize) `B[pc..pc+kc, jc..jc+nc]` into the
-/// thread-local panel as a contiguous `[kc, nc]` block.
-fn pack_panel(
-    b: WeightsView<'_>,
-    panel: &mut Vec<f32>,
-    n: usize,
-    pc: usize,
-    kc: usize,
-    jc: usize,
-    nc: usize,
-) {
-    panel.clear();
-    panel.reserve(kc * nc);
-    match b {
-        WeightsView::F32(w) => {
-            for p in pc..pc + kc {
-                panel.extend_from_slice(&w[p * n + jc..p * n + jc + nc]);
-            }
-        }
-        WeightsView::Bf16(w) => {
-            for p in pc..pc + kc {
-                panel.extend(
-                    w[p * n + jc..p * n + jc + nc]
-                        .iter()
-                        .map(|&h| bf16_to_f32(h)),
-                );
-            }
-        }
-        WeightsView::Int8 { q, scales } => {
-            for p in pc..pc + kc {
-                let s = scales[p];
-                panel.extend(
-                    q[p * n + jc..p * n + jc + nc]
-                        .iter()
-                        .map(|&v| v as f32 * s),
-                );
-            }
-        }
-    }
-}
-
-/// Cache-blocked GEMM: `jc` (NC columns) → `pc` (KC of the reduction,
-/// B panel packed once per block) → `ic` (MC rows of A). Bias +
-/// activation run as a fused epilogue over each `jc` strip after the
-/// whole reduction, so every output element is touched exactly twice
-/// (accumulate, epilogue). `k` is walked in ascending order across
-/// `pc` blocks, keeping f32 results bit-identical to [`Kernel::Naive`].
-#[allow(clippy::too_many_arguments)]
-fn blocked_gemm(
-    a: &[f32],
-    b: WeightsView<'_>,
-    bias: &[f32],
-    c: &mut [f32],
-    m: usize,
-    k: usize,
-    n: usize,
-    silu: bool,
-    use_simd: bool,
-) {
-    c.fill(0.0);
-    PANEL.with(|cell| {
-        let mut guard = cell.borrow_mut();
-        let panel: &mut Vec<f32> = &mut guard;
-        let mut jc = 0;
-        while jc < n {
-            let nc = NC.min(n - jc);
-            let mut pc = 0;
-            while pc < k {
-                let kc = KC.min(k - pc);
-                pack_panel(b, panel, n, pc, kc, jc, nc);
-                let mut ic = 0;
-                while ic < m {
-                    let mc = MC.min(m - ic);
-                    accumulate_block(
-                        a, panel, c, k, n, ic, mc, pc, kc, jc, nc,
-                        use_simd,
-                    );
-                    ic += MC;
-                }
-                pc += KC;
-            }
-            // epilogue: bias + activation over the finished strip
-            for i in 0..m {
-                let c_row = &mut c[i * n + jc..i * n + jc + nc];
-                let b_row = &bias[jc..jc + nc];
-                for (cj, &bj) in c_row.iter_mut().zip(b_row) {
-                    *cj += bj;
-                }
-                if silu {
-                    for cj in c_row.iter_mut() {
-                        *cj = silu_one(*cj);
-                    }
-                }
-            }
-            jc += NC;
-        }
-    });
-}
-
-/// One `[mc, nc] += A[mc, kc] · panel[kc, nc]` inner block.
-#[allow(clippy::too_many_arguments)]
-fn accumulate_block(
-    a: &[f32],
-    panel: &[f32],
-    c: &mut [f32],
-    k: usize,
-    n: usize,
-    ic: usize,
-    mc: usize,
-    pc: usize,
-    kc: usize,
-    jc: usize,
-    nc: usize,
-    use_simd: bool,
-) {
-    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
-    if use_simd {
-        // SAFETY: gated on runtime AVX2+FMA detection (simd_available).
-        unsafe {
-            simd::accumulate_block_avx2(
-                a, panel, c, k, n, ic, mc, pc, kc, jc, nc,
-            );
-        }
-        return;
-    }
-    let _ = use_simd;
-    for i in ic..ic + mc {
-        let a_row = &a[i * k + pc..i * k + pc + kc];
-        let c_row = &mut c[i * n + jc..i * n + jc + nc];
-        for (p, &aik) in a_row.iter().enumerate() {
-            let b_row = &panel[p * nc..(p + 1) * nc];
-            for (cj, &bv) in c_row.iter_mut().zip(b_row) {
-                *cj += aik * bv;
-            }
-        }
-    }
-}
-
-/// Whether the explicit-SIMD inner kernel can run here: the `simd`
+/// Whether the explicit AVX2 inner kernel can run here: the `simd`
 /// feature compiled in, x86_64, and the CPU reporting AVX2 + FMA.
 pub fn simd_available() -> bool {
     #[cfg(all(feature = "simd", target_arch = "x86_64"))]
@@ -521,50 +578,18 @@ pub fn simd_available() -> bool {
     }
 }
 
-#[cfg(all(feature = "simd", target_arch = "x86_64"))]
-mod simd {
-    //! AVX2+FMA inner block. Same blocking as the scalar path; the
-    //! inner j loop runs 8 f32 lanes per `_mm256_fmadd_ps` with a
-    //! scalar tail. FMA fuses the multiply-add rounding, so results
-    //! differ from the scalar kernels in the last ulp — deterministic
-    //! in itself (fixed lane order), just not bit-equal to Blocked.
-
-    #[target_feature(enable = "avx2,fma")]
-    #[allow(clippy::too_many_arguments)]
-    pub unsafe fn accumulate_block_avx2(
-        a: &[f32],
-        panel: &[f32],
-        c: &mut [f32],
-        k: usize,
-        n: usize,
-        ic: usize,
-        mc: usize,
-        pc: usize,
-        kc: usize,
-        jc: usize,
-        nc: usize,
-    ) {
-        use std::arch::x86_64::*;
-        let lanes = nc / 8 * 8;
-        for i in ic..ic + mc {
-            let a_row = &a[i * k + pc..i * k + pc + kc];
-            let c_row = &mut c[i * n + jc..i * n + jc + nc];
-            for (p, &aik) in a_row.iter().enumerate() {
-                let b_row = &panel[p * nc..(p + 1) * nc];
-                let va = _mm256_set1_ps(aik);
-                let mut j = 0;
-                while j < lanes {
-                    let vb = _mm256_loadu_ps(b_row.as_ptr().add(j));
-                    let vc = _mm256_loadu_ps(c_row.as_ptr().add(j));
-                    let r = _mm256_fmadd_ps(va, vb, vc);
-                    _mm256_storeu_ps(c_row.as_mut_ptr().add(j), r);
-                    j += 8;
-                }
-                for j in lanes..nc {
-                    c_row[j] = aik.mul_add(b_row[j], c_row[j]);
-                }
-            }
-        }
+/// Whether the explicit NEON inner kernel can run here: the `simd`
+/// feature compiled in, aarch64, and the CPU reporting NEON (always
+/// true on AArch64 application profiles, but checked anyway so the
+/// dispatch rule matches AVX2's).
+pub fn neon_available() -> bool {
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    {
+        std::arch::is_aarch64_feature_detected!("neon")
+    }
+    #[cfg(not(all(feature = "simd", target_arch = "aarch64")))]
+    {
+        false
     }
 }
 
@@ -663,38 +688,156 @@ mod tests {
         }
     }
 
+    /// The register-tiled Blocked kernel stays bitwise-equal to Naive
+    /// for *every* valid tile choice — tiles (and the MR×NR register
+    /// tiling beneath them) are pure data-layout moves, never
+    /// reassociation. Deliberately extreme tiles included: 1x1x1
+    /// degenerates to single-element blocks, the large one makes every
+    /// dimension a single block.
+    #[test]
+    fn blocked_kernel_is_tile_invariant_bitwise() {
+        let tile_grid = [
+            GemmTiles::new(1, 1, 1),
+            GemmTiles::new(2, 3, 5),
+            GemmTiles::new(8, 16, 8),
+            GemmTiles::new(16, 64, 48),
+            GemmTiles::default(),
+            GemmTiles::new(1000, 1000, 1000),
+        ];
+        let mut rng = Rng::new(29);
+        for &(m, k, n) in
+            &[(3usize, 5usize, 7usize), (MC + 3, KC + 5, NC + 9)]
+        {
+            let a = rand_vec(&mut rng, m * k);
+            let b = rand_vec(&mut rng, k * n);
+            let bias = rand_vec(&mut rng, n);
+            let want = reference(&a, &b, &bias, m, k, n, true);
+            for tiles in tile_grid {
+                let mut c = vec![0.0f32; m * n];
+                gemm_bias_act_tiled(
+                    Kernel::Blocked,
+                    tiles,
+                    &a,
+                    WeightsView::F32(&b),
+                    &bias,
+                    &mut c,
+                    m,
+                    k,
+                    n,
+                    true,
+                );
+                assert_eq!(c, want, "shape ({m},{k},{n}) tiles {tiles}");
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_tiles_parse_validate_and_env() {
+        assert_eq!(GemmTiles::default(), GemmTiles::new(MC, KC, NC));
+        assert_eq!(GemmTiles::default().to_string(), "64x256x128");
+        assert_eq!(
+            GemmTiles::parse("32x64x16").unwrap(),
+            GemmTiles::new(32, 64, 16)
+        );
+        assert_eq!(
+            GemmTiles::parse(" 8X8X8 ").unwrap(),
+            GemmTiles::new(8, 8, 8)
+        );
+        assert!(GemmTiles::parse("64x256").is_err());
+        assert!(GemmTiles::parse("axbxc").is_err());
+        assert!(GemmTiles::parse("0x256x128").is_err());
+        assert!(GemmTiles::new(64, 0, 128).validate().is_err());
+        // env: absent -> Ok(None); set -> parsed; bad -> Err naming
+        // the variable. No other test writes this variable (tests in
+        // one binary share the process environment).
+        std::env::remove_var(GemmTiles::ENV);
+        assert_eq!(GemmTiles::from_env(), Ok(None));
+        std::env::set_var(GemmTiles::ENV, "16x32x64");
+        assert_eq!(
+            GemmTiles::from_env(),
+            Ok(Some(GemmTiles::new(16, 32, 64)))
+        );
+        // the builder picks the env override up when no explicit
+        // .gemm_tiles(..) is given...
+        let model = crate::model::synthetic_stacked_model(
+            "cosine",
+            &crate::util::rng::Rng::new(5),
+            1,
+            8,
+            4,
+            4,
+            2,
+            6,
+        );
+        let eng = crate::engine::Engine::builder()
+            .model(model.clone())
+            .build()
+            .unwrap();
+        assert_eq!(eng.gemm_tiles(), GemmTiles::new(16, 32, 64));
+        // ...an explicit knob still wins...
+        let eng = crate::engine::Engine::builder()
+            .model(model)
+            .gemm_tiles(GemmTiles::new(8, 8, 8))
+            .build()
+            .unwrap();
+        assert_eq!(eng.gemm_tiles(), GemmTiles::new(8, 8, 8));
+        // ...and a malformed override is an Err naming the variable.
+        // Window kept minimal: while a *valid* value is set, parallel
+        // tests building engines just pick it up (tiles are bit-free),
+        // but a garbage value would fail their builds — so nothing
+        // runs between set, read, and remove. The builder wraps this
+        // Err into `EngineBuildError::BadGemmTiles` verbatim (the
+        // invalid-tiles build path itself is pinned in
+        // `engine::tests::gemm_tiles_knob_keeps_results_bit_identical`
+        // via an explicit `.gemm_tiles(..)`).
+        std::env::set_var(GemmTiles::ENV, "garbage");
+        let err = GemmTiles::from_env().unwrap_err();
+        std::env::remove_var(GemmTiles::ENV);
+        assert!(err.contains(GemmTiles::ENV), "{err}");
+        let build_err =
+            crate::engine::EngineBuildError::BadGemmTiles { detail: err };
+        assert!(build_err.to_string().contains(GemmTiles::ENV));
+        assert_eq!(GemmTiles::from_env(), Ok(None));
+    }
+
     /// Simd must match Naive within an FMA-reassociation tolerance on
     /// every odd shape (bit-equal when the feature is off, since it
-    /// falls back to Blocked).
+    /// falls back to Blocked). Neon has the identical contract on
+    /// aarch64 and the identical fallback elsewhere.
     #[test]
-    fn simd_kernel_matches_naive_within_tolerance() {
+    fn simd_kernels_match_naive_within_tolerance() {
         let mut rng = Rng::new(37);
         for &(m, k, n) in &SHAPES {
             let a = rand_vec(&mut rng, m * k);
             let b = rand_vec(&mut rng, k * n);
             let bias = rand_vec(&mut rng, n);
             let want = reference(&a, &b, &bias, m, k, n, true);
-            let mut c = vec![0.0f32; m * n];
-            gemm_bias_act(
-                Kernel::Simd,
-                &a,
-                WeightsView::F32(&b),
-                &bias,
-                &mut c,
-                m,
-                k,
-                n,
-                true,
-            );
-            // |Σ k products| error scales with k; 1e-5 relative covers
-            // the single FMA rounding per product at these magnitudes.
-            let tol = 1e-5 * (k as f32).sqrt().max(1.0);
-            for (i, (&got, &w)) in c.iter().zip(&want).enumerate() {
-                let scale = w.abs().max(1.0);
-                assert!(
-                    (got - w).abs() <= tol * scale,
-                    "shape ({m},{k},{n}) elem {i}: {got} vs {w}"
+            for kernel in [Kernel::Simd, Kernel::Neon] {
+                let mut c = vec![0.0f32; m * n];
+                gemm_bias_act(
+                    kernel,
+                    &a,
+                    WeightsView::F32(&b),
+                    &bias,
+                    &mut c,
+                    m,
+                    k,
+                    n,
+                    true,
                 );
+                // |Σ k products| error scales with k; 1e-5 relative
+                // covers the single FMA rounding per product at these
+                // magnitudes.
+                let tol = 1e-5 * (k as f32).sqrt().max(1.0);
+                for (i, (&got, &w)) in c.iter().zip(&want).enumerate()
+                {
+                    let scale = w.abs().max(1.0);
+                    assert!(
+                        (got - w).abs() <= tol * scale,
+                        "{} shape ({m},{k},{n}) elem {i}: {got} vs {w}",
+                        kernel.name()
+                    );
+                }
             }
         }
     }
@@ -884,9 +1027,16 @@ mod tests {
         assert_eq!(Kernel::default(), Kernel::Naive);
         assert_eq!(WeightDtype::default(), WeightDtype::F32);
         assert_eq!(Kernel::Simd.name(), "simd");
+        assert_eq!(Kernel::Neon.name(), "neon");
         assert_eq!(WeightDtype::Int8.name(), "int8");
-        // Simd silently degrades to Blocked when unsupported — the
-        // knob is always safe to set.
+        assert_eq!(Kernel::ALL.len(), 4);
+        // Simd/Neon silently degrade to Blocked when unsupported —
+        // the knob is always safe to set on any host.
         let _ = simd_available();
+        let _ = neon_available();
+        assert!(
+            !(simd_available() && neon_available()),
+            "one ISA at a time"
+        );
     }
 }

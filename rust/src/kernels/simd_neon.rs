@@ -1,0 +1,51 @@
+//! NEON register tile (aarch64, `simd` feature).
+//!
+//! Same packing and loop structure as the scalar tile in
+//! `blocked.rs`; each of the MR accumulator rows is two `float32x4`
+//! halves (NR = 8 f32 lanes) updated with `vfmaq_f32` per reduction
+//! step. Like the AVX2 tile, the fused multiply-add drops one
+//! rounding per product, so results are deterministic in themselves
+//! but not bit-equal to Blocked/Naive.
+
+use super::blocked::{MR, NR};
+
+// the paired-quad loads below assume two float32x4 per tile row
+const _: () = assert!(NR == 8);
+
+/// One MR×NR register tile over packed `[kc, MR]` A and `[kc, NR]` B.
+///
+/// # Safety
+///
+/// Caller must have verified NEON at runtime (`neon_available`);
+/// `ap`/`bp` must hold at least `kc*MR` / `kc*NR` elements (the packed
+/// layouts `blocked.rs` builds).
+#[target_feature(enable = "neon")]
+#[allow(clippy::needless_range_loop)]
+pub(crate) unsafe fn tile_neon(
+    ap: &[f32],
+    bp: &[f32],
+    kc: usize,
+    acc: &mut [[f32; NR]; MR],
+) {
+    use std::arch::aarch64::*;
+    let mut lo = [vdupq_n_f32(0.0); MR];
+    let mut hi = [vdupq_n_f32(0.0); MR];
+    for r in 0..MR {
+        lo[r] = vld1q_f32(acc[r].as_ptr());
+        hi[r] = vld1q_f32(acc[r].as_ptr().add(4));
+    }
+    for p in 0..kc {
+        let b_lo = vld1q_f32(bp.as_ptr().add(p * NR));
+        let b_hi = vld1q_f32(bp.as_ptr().add(p * NR + 4));
+        let av = &ap[p * MR..(p + 1) * MR];
+        for r in 0..MR {
+            let va = vdupq_n_f32(av[r]);
+            lo[r] = vfmaq_f32(lo[r], va, b_lo);
+            hi[r] = vfmaq_f32(hi[r], va, b_hi);
+        }
+    }
+    for r in 0..MR {
+        vst1q_f32(acc[r].as_mut_ptr(), lo[r]);
+        vst1q_f32(acc[r].as_mut_ptr().add(4), hi[r]);
+    }
+}

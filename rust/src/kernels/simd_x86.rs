@@ -1,0 +1,46 @@
+//! AVX2+FMA register tile (x86_64, `simd` feature).
+//!
+//! Same packing and loop structure as the scalar tile in
+//! `blocked.rs`; each of the MR accumulator rows is one `__m256`
+//! (NR = 8 f32 lanes) updated with `_mm256_fmadd_ps` per reduction
+//! step. FMA fuses the multiply-add rounding, so results differ from
+//! the scalar kernels in the last ulp — deterministic in itself
+//! (fixed tile sizes, fixed lane order), just not bit-equal to
+//! Blocked.
+
+use super::blocked::{MR, NR};
+
+// the whole-register loads below assume one __m256 per tile row
+const _: () = assert!(NR == 8);
+
+/// One MR×NR register tile over packed `[kc, MR]` A and `[kc, NR]` B.
+///
+/// # Safety
+///
+/// Caller must have verified AVX2+FMA at runtime (`simd_available`);
+/// `ap`/`bp` must hold at least `kc*MR` / `kc*NR` elements (the packed
+/// layouts `blocked.rs` builds).
+#[target_feature(enable = "avx2,fma")]
+pub(crate) unsafe fn tile_avx2(
+    ap: &[f32],
+    bp: &[f32],
+    kc: usize,
+    acc: &mut [[f32; NR]; MR],
+) {
+    use std::arch::x86_64::*;
+    let mut vacc = [_mm256_setzero_ps(); MR];
+    for (v, row) in vacc.iter_mut().zip(acc.iter()) {
+        *v = _mm256_loadu_ps(row.as_ptr());
+    }
+    for p in 0..kc {
+        let vb = _mm256_loadu_ps(bp.as_ptr().add(p * NR));
+        let av = &ap[p * MR..(p + 1) * MR];
+        for (v, &a) in vacc.iter_mut().zip(av) {
+            let va = _mm256_set1_ps(a);
+            *v = _mm256_fmadd_ps(va, vb, *v);
+        }
+    }
+    for (row, &v) in acc.iter_mut().zip(vacc.iter()) {
+        _mm256_storeu_ps(row.as_mut_ptr(), v);
+    }
+}

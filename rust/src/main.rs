@@ -132,6 +132,10 @@ Options:
   --addr HOST:PORT  listen: bind address (default 127.0.0.1:7077)
   --http            listen: speak the HTTP/1.1-shaped wire instead of
                     the native length-prefixed framing
+  --tiles MCxKCxNC  cache-tile override for the expert-FFN GEMM
+                    kernels, e.g. 64x256x128 (serve / model-sim /
+                    dispatch-sim --routed; default comes from the
+                    LPR_GEMM_TILES env var, else the built-in tiles)
 ";
 
 fn main() {
@@ -404,6 +408,18 @@ fn parse_policy(args: &Args, default: &str) -> Result<OverflowPolicy> {
     Ok(args.opt_or("policy", default).parse::<OverflowPolicy>()?)
 }
 
+/// `--tiles MCxKCxNC` into a [`lpr::kernels::GemmTiles`] override for
+/// the expert-FFN GEMM kernels; `None` lets the engine builder fall
+/// back to `LPR_GEMM_TILES` / the built-in defaults.
+fn parse_tiles(args: &Args) -> Result<Option<lpr::kernels::GemmTiles>> {
+    args.opt("tiles")
+        .map(|s| {
+            lpr::kernels::GemmTiles::parse(s)
+                .map_err(|detail| anyhow::anyhow!("--tiles: {detail}"))
+        })
+        .transpose()
+}
+
 /// `--placement/--replan/--hot/--replicas` into a [`PlacementConfig`];
 /// a bad `--placement` surfaces the typed [`lpr::Error`] (which renders
 /// the accepted planner set itself).
@@ -509,14 +525,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // and the runtime share it, so the measured capacity is honest for
     // exactly the backend that will serve
     let renormalize = args.has_flag("renormalize");
+    let tiles = parse_tiles(args)?;
     let build_engine = |model: StackedModel| -> Result<Engine> {
-        Ok(Engine::builder()
+        let mut b = Engine::builder()
             .model(model)
             .backend(Backend::Pool { workers })
             .policy(policy)
             .capacity_factor(cf)
-            .renormalize(renormalize)
-            .build()?)
+            .renormalize(renormalize);
+        if let Some(t) = tiles {
+            b = b.gemm_tiles(t);
+        }
+        Ok(b.build()?)
     };
 
     // calibrate this machine's stacked-forward capacity, then default
@@ -604,13 +624,16 @@ fn cmd_model_sim(args: &Args) -> Result<()> {
     );
     // the facade engine carries cf/policy; built from the sim's cf so
     // simulated bins and real compute agree
-    let mut engine = Engine::builder()
+    let mut builder = Engine::builder()
         .model(model)
         .backend(Backend::Scoped { threads })
         .policy(policy)
         .capacity_factor(cfg.capacity_factor)
-        .renormalize(args.has_flag("renormalize"))
-        .build()?;
+        .renormalize(args.has_flag("renormalize"));
+    if let Some(t) = parse_tiles(args)? {
+        builder = builder.gemm_tiles(t);
+    }
+    let mut engine = builder.build()?;
     let mut sim = DispatchSim::new_layered(cfg, n_layers)?;
     let mut rng = Rng::new(seed);
     let mix = MixtureStream::skewed(&mut rng, d, 1.6);
@@ -677,13 +700,16 @@ fn cmd_dispatch_sim(args: &Args) -> Result<()> {
         } else {
             ExpertBank::new(&Rng::new(0), e, d, 1)
         };
-        let mut engine = Engine::builder()
+        let mut builder = Engine::builder()
             .layer(router.plan().clone(), bank)
             .backend(Backend::Scoped { threads })
             .policy(policy)
             .capacity_factor(cf)
-            .renormalize(args.has_flag("renormalize"))
-            .build()?;
+            .renormalize(args.has_flag("renormalize"));
+        if let Some(t) = parse_tiles(args)? {
+            builder = builder.gemm_tiles(t);
+        }
+        let mut engine = builder.build()?;
         let mix = MixtureStream::standard(&mut rng, d);
         if full {
             // real expert compute: route -> plan -> FFN -> combine

@@ -19,14 +19,17 @@
 //! serving" follow-up (serving-time balance measured on the routers the
 //! trainer trained, not on `synthetic_lpr_router`).
 //!
-//! Caveat, stated rather than hidden: the python training FFN is SwiGLU
-//! (`w1`/`w3`/`w2`); the Rust serving bank is the crate's SiLU FFN
-//! (PR 2), so the bridge consumes `w1`/`w2` and ignores the `w3` gate.
-//! Routing — the quantity whose balance the paper measures — is exact;
-//! expert outputs are the serving-path approximation. The synthesized
-//! checkpoints used by the tests (and `synth_checkpoint_artifact`)
-//! describe exactly what is served, so every pinned bit-identity claim
-//! is over a self-consistent model.
+//! The python training FFN is SwiGLU (`w1`/`w3`/`w2`), and the bridge
+//! now consumes all three: when a layer carries a
+//! `['layers'][ℓ]['moe']['w3']` leaf the bank is built gated
+//! ([`ExpertBank::from_weights_gated`]) and serves
+//! `SiLU(x·W1) ⊙ (x·W3) · W2` through the fused
+//! `kernels::gemm_bias_act_gated` epilogue — the checkpointed FFN,
+//! exactly. Checkpoints without `w3` leaves (the pre-gate artifact
+//! layout) still load as ungated SiLU banks, so old files keep
+//! serving. The synthesized checkpoints (`synth_checkpoint_artifact`)
+//! emit `w3`, so every pinned bit-identity claim covers the gated
+//! path end-to-end.
 
 use anyhow::{bail, ensure, Context, Result};
 use std::path::Path;
@@ -176,9 +179,11 @@ pub fn router_params_for_layer(
     Ok(p)
 }
 
-/// Layer `ℓ`'s [`ExpertBank`] from the stacked `w1` (`[E, d, ff]`) and
-/// `w2` (`[E, ff, d]`) expert weights (SwiGLU `w3` is not consumed —
-/// module docs).
+/// Layer `ℓ`'s [`ExpertBank`] from the stacked expert weights: `w1`
+/// (`[E, d, ff]`), `w2` (`[E, ff, d]`), and — when the checkpoint
+/// carries one — the SwiGLU gate `w3` (`[E, d, ff]`), which makes the
+/// bank **gated** ([`ExpertBank::from_weights_gated`]). Checkpoints
+/// without a `w3` leaf load as ungated SiLU banks (module docs).
 pub fn expert_bank_for_layer(
     meta: &ArtifactMeta,
     buffers: &[Vec<f32>],
@@ -204,6 +209,18 @@ pub fn expert_bank_for_layer(
     );
     let w1 = leaf_buf(meta, buffers, &w1_path)?.clone();
     let w2 = leaf_buf(meta, buffers, &w2_path)?.clone();
+    // optional gate leaf: present -> gated SwiGLU bank
+    let w3_path = moe_leaf_path(layer, "w3");
+    if let Some(idx) = meta.params.iter().position(|s| s.path == w3_path) {
+        let w3_spec = &meta.params[idx];
+        ensure!(
+            w3_spec.shape == vec![e, d, d_ff],
+            "w3 leaf {w3_path} has shape {:?}, want [{e}, {d}, {d_ff}]",
+            w3_spec.shape
+        );
+        let w3 = leaf_buf(meta, buffers, &w3_path)?.clone();
+        return Ok(ExpertBank::from_weights_gated(e, d, d_ff, w1, w3, w2));
+    }
     Ok(ExpertBank::from_weights(e, d, d_ff, w1, w2))
 }
 
@@ -359,6 +376,11 @@ pub fn synth_checkpoint_artifact(
             normal(e * d * d_ff, 1.0 / (d as f32).sqrt()),
         ));
         leaves.push((
+            moe_leaf_path(l, "w3"),
+            vec![e, d, d_ff],
+            normal(e * d * d_ff, 1.0 / (d as f32).sqrt()),
+        ));
+        leaves.push((
             moe_leaf_path(l, "w2"),
             vec![e, d_ff, d],
             normal(e * d_ff * d, 1.0 / (d_ff as f32).sqrt()),
@@ -487,6 +509,10 @@ mod tests {
         assert_eq!(model.d_model(), 16);
         assert_eq!(model.layer(0).plan.cfg.n_experts, 6);
         assert_eq!(model.layer(0).bank.d_ff, 10);
+        // synthesized checkpoints carry w3, so every bank is gated
+        for l in 0..3 {
+            assert!(model.layer(l).bank.is_gated(), "layer {l}");
+        }
         // params-only prefix builds the same model
         let model2 =
             model_from_state(&meta, &state[..meta.n_params]).unwrap();
@@ -497,6 +523,77 @@ mod tests {
         a.forward(&h, 1.25, OverflowPolicy::Drop, &mut fa);
         b.forward(&h, 1.25, OverflowPolicy::Drop, &mut fb);
         assert_eq!(fa.hidden, fb.hidden);
+    }
+
+    /// The `w3` gate leaves are **consumed**: perturbing only a `w3`
+    /// buffer changes the served outputs (the old ignore-`w3` bridge
+    /// would have produced identical hidden states).
+    #[test]
+    fn w3_leaves_are_consumed_and_change_served_outputs() {
+        let (meta, state) = synth_checkpoint_artifact(
+            "m", "cosine", 1, 16, 8, 4, 2, 8, 13,
+        )
+        .unwrap();
+        let params = &state[..meta.n_params];
+        let base = model_from_state(&meta, params).unwrap();
+        assert!(base.layer(0).bank.is_gated());
+        let w3_path = moe_leaf_path(0, "w3");
+        let w3_idx = meta
+            .params
+            .iter()
+            .position(|s| s.path == w3_path)
+            .unwrap();
+        let mut bent = params.to_vec();
+        for v in &mut bent[w3_idx] {
+            *v += 0.5;
+        }
+        let bent_model = model_from_state(&meta, &bent).unwrap();
+
+        let h = rand_vec(&mut Rng::new(17), 10 * 16);
+        let mut a = ModelEngine::new(base, 1);
+        let mut b = ModelEngine::new(bent_model, 1);
+        let (mut fa, mut fb) = (ModelForward::new(), ModelForward::new());
+        a.forward(&h, 1.25, OverflowPolicy::Drop, &mut fa);
+        b.forward(&h, 1.25, OverflowPolicy::Drop, &mut fb);
+        assert_ne!(
+            fa.hidden, fb.hidden,
+            "w3 must be consumed by the serving path"
+        );
+        // routing is upstream of the FFN and must not move
+        assert_eq!(fa.layers[0].plan, fb.layers[0].plan);
+    }
+
+    /// Checkpoints in the pre-gate layout (no `w3` leaves) still load,
+    /// as ungated SiLU banks.
+    #[test]
+    fn checkpoints_without_w3_load_as_ungated_banks() {
+        let (mut meta, state) = synth_checkpoint_artifact(
+            "m", "cosine", 2, 16, 8, 4, 2, 8, 9,
+        )
+        .unwrap();
+        let keep: Vec<usize> = meta
+            .params
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| leaf_name(&s.path).unwrap() != "w3")
+            .map(|(i, _)| i)
+            .collect();
+        let stripped: Vec<Vec<f32>> =
+            keep.iter().map(|&i| state[i].clone()).collect();
+        meta.params =
+            keep.iter().map(|&i| meta.params[i].clone()).collect();
+        meta.n_params = meta.params.len();
+        meta.n_state = 3 * meta.n_params;
+        let model = model_from_state(&meta, &stripped).unwrap();
+        for l in 0..2 {
+            assert!(!model.layer(l).bank.is_gated(), "layer {l}");
+        }
+        // and it still serves
+        let h = rand_vec(&mut Rng::new(29), 6 * 16);
+        let mut eng = ModelEngine::new(model, 1);
+        let mut out = ModelForward::new();
+        eng.forward(&h, 1.25, OverflowPolicy::Drop, &mut out);
+        assert_eq!(out.hidden.len(), 6 * 16);
     }
 
     #[test]

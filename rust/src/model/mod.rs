@@ -301,6 +301,14 @@ impl ModelEngine {
         }
     }
 
+    /// MC×KC×NC cache tiles for every layer's FFN GEMMs (the
+    /// `Engine::builder().gemm_tiles(..)` knob; see `crate::kernels`).
+    pub fn set_gemm_tiles(&mut self, tiles: crate::kernels::GemmTiles) {
+        for e in &mut self.engines {
+            e.set_gemm_tiles(tiles);
+        }
+    }
+
     /// Run the full stack over `h` (`[N, d]` row-major): per layer,
     /// route → plan → expert FFN → combine, then the residual add; the
     /// final stream lands in `out.hidden`. Bit-identical for every

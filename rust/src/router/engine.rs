@@ -46,7 +46,7 @@
 use super::plan::{RouteBuffers, RouterBatch, RouterPlan};
 use crate::dispatch::plan::{capacity_for, DispatchPlan, OverflowPolicy};
 use crate::experts::{combine_rows_opts, gather_rows, ExpertBank};
-use crate::kernels::Kernel;
+use crate::kernels::{GemmTiles, Kernel};
 use crate::metrics::{LoadTracker, DEFAULT_LOAD_WINDOW};
 
 /// Token range of shard `i` when `n` tokens split into `t` contiguous
@@ -111,6 +111,7 @@ pub(crate) fn run_expert_range(
     e1: usize,
     d: usize,
     kernel: Kernel,
+    tiles: GemmTiles,
     hid: &mut Vec<f32>,
     ys: &mut [f32],
 ) {
@@ -122,8 +123,9 @@ pub(crate) fn run_expert_range(
         if m == 0 {
             continue;
         }
-        bank.forward_rows_with(
+        bank.forward_rows_tiled(
             kernel,
+            tiles,
             ei,
             &xg[rows.start * d..rows.end * d],
             m,
@@ -153,6 +155,7 @@ pub(crate) fn run_expert_rows(
     row1: usize,
     d: usize,
     kernel: Kernel,
+    tiles: GemmTiles,
     hid: &mut Vec<f32>,
     ys: &mut [f32],
 ) {
@@ -163,8 +166,9 @@ pub(crate) fn run_expert_rows(
         let e = plan.offsets.partition_point(|&o| o <= r as u32) - 1;
         let end = (plan.offsets[e + 1] as usize).min(row1);
         let m = end - r;
-        bank.forward_rows_with(
+        bank.forward_rows_tiled(
             kernel,
+            tiles,
             e,
             &xg[r * d..end * d],
             m,
@@ -194,6 +198,10 @@ pub struct ServingEngine {
     /// `Engine::builder().kernel(..)` knob); [`Kernel::Naive`] by
     /// default, which is bit-identical to the historic path.
     kernel: Kernel,
+    /// MC×KC×NC cache tiles for the blocked/SIMD GEMM paths (the
+    /// `Engine::builder().gemm_tiles(..)` knob). A pure cache knob:
+    /// every kernel is bitwise tile-invariant.
+    tiles: GemmTiles,
 }
 
 #[derive(Debug, Clone, Default)]
@@ -248,6 +256,7 @@ impl ServingEngine {
             plan,
             renormalize: false,
             kernel: Kernel::default(),
+            tiles: GemmTiles::default(),
         }
     }
 
@@ -273,6 +282,13 @@ impl ServingEngine {
     /// to the historic goldens (see [`crate::kernels`]).
     pub fn set_kernel(&mut self, kernel: Kernel) {
         self.kernel = kernel;
+    }
+
+    /// Select the MC×KC×NC cache tiles for the expert FFN GEMMs (the
+    /// `Engine::builder().gemm_tiles(..)` knob). Tiles move cache
+    /// behaviour, never bits; the caller (the builder) validates them.
+    pub fn set_gemm_tiles(&mut self, tiles: GemmTiles) {
+        self.tiles = tiles;
     }
 
     /// Rolling balance of the batches this engine has routed.
@@ -359,9 +375,17 @@ impl ServingEngine {
         y.resize(kept * d, 0.0);
         let groups = self.n_threads.min(e).max(1);
         let kernel = self.kernel;
+        let tiles = self.tiles;
         if groups == 1 || kept < 2 * self.n_threads {
             let shard = &mut self.shards[0];
-            bank.forward_all_with(kernel, plan, xg, &mut shard.hid, y);
+            bank.forward_all_tiled(
+                kernel,
+                tiles,
+                plan,
+                xg,
+                &mut shard.hid,
+                y,
+            );
         } else {
             // contiguous expert ranges balanced by grouped-row count;
             // boundaries depend only on the plan's offsets, so the
@@ -386,7 +410,7 @@ impl ServingEngine {
                     }
                     scope.spawn(move || {
                         run_expert_range(
-                            bank, plan, xg, e0, e1, d, kernel,
+                            bank, plan, xg, e0, e1, d, kernel, tiles,
                             &mut shard.hid, ys,
                         );
                     });
@@ -606,48 +630,71 @@ mod tests {
     }
 
     /// Satellite: the determinism contract holds per kernel — each of
-    /// Naive/Blocked/Simd is bit-identical to *itself* across thread
-    /// counts {1, 2, 3, 8}, on shapes that straddle the tile sizes.
-    /// (Cross-kernel equality is separately pinned for Naive=Blocked
-    /// on f32 in `kernels` and `experts`.)
+    /// Naive/Blocked/Simd/Neon is bit-identical to *itself* across
+    /// thread counts {1, 2, 3, 8}, on shapes that straddle the tile
+    /// sizes, for a plain **and** a gated (SwiGLU) bank, at default
+    /// **and** deliberately-awkward cache tiles. (Cross-kernel
+    /// equality is separately pinned for Naive=Blocked on f32 in
+    /// `kernels` and `experts`.)
     #[test]
     fn every_kernel_bit_identical_across_thread_counts() {
         let mut rng = Rng::new(93);
         let (d, dz, e, k, ff_dim) = (16usize, 8, 6, 2, 40);
-        let bank = ExpertBank::new(&Rng::new(4), e, d, ff_dim);
+        let plain = ExpertBank::new(&Rng::new(4), e, d, ff_dim);
+        let gated = ExpertBank::from_weights_gated(
+            e,
+            d,
+            ff_dim,
+            rand_vec(&mut rng, e * d * ff_dim),
+            rand_vec(&mut rng, e * d * ff_dim),
+            rand_vec(&mut rng, e * ff_dim * d),
+        );
         let r = synthetic_lpr_router("cosine", &mut rng, d, dz, e, k);
         let plan = r.plan().clone();
-        for n in [5usize, 73] {
-            let h = rand_vec(&mut rng, n * d);
-            for kernel in Kernel::ALL {
-                let mut single = ServingEngine::new(plan.clone(), 1);
-                single.set_kernel(kernel);
-                let mut want = FullForward::new();
-                single.forward_full(
-                    &h,
-                    &bank,
-                    1.0,
-                    OverflowPolicy::Drop,
-                    &mut want,
-                );
-                for threads in [2usize, 3, 8] {
-                    let mut eng =
-                        ServingEngine::new(plan.clone(), threads);
-                    eng.set_kernel(kernel);
-                    let mut got = FullForward::new();
-                    eng.forward_full(
-                        &h,
-                        &bank,
-                        1.0,
-                        OverflowPolicy::Drop,
-                        &mut got,
-                    );
-                    assert_eq!(
-                        got.combined,
-                        want.combined,
-                        "kernel {} n={n} t={threads} diverged",
-                        kernel.name()
-                    );
+        for bank in [&plain, &gated] {
+            for n in [5usize, 73] {
+                let h = rand_vec(&mut rng, n * d);
+                for kernel in Kernel::ALL {
+                    for tiles in
+                        [GemmTiles::default(), GemmTiles::new(2, 3, 5)]
+                    {
+                        let mut single =
+                            ServingEngine::new(plan.clone(), 1);
+                        single.set_kernel(kernel);
+                        single.set_gemm_tiles(tiles);
+                        let mut want = FullForward::new();
+                        single.forward_full(
+                            &h,
+                            bank,
+                            1.0,
+                            OverflowPolicy::Drop,
+                            &mut want,
+                        );
+                        for threads in [2usize, 3, 8] {
+                            let mut eng = ServingEngine::new(
+                                plan.clone(),
+                                threads,
+                            );
+                            eng.set_kernel(kernel);
+                            eng.set_gemm_tiles(tiles);
+                            let mut got = FullForward::new();
+                            eng.forward_full(
+                                &h,
+                                bank,
+                                1.0,
+                                OverflowPolicy::Drop,
+                                &mut got,
+                            );
+                            assert_eq!(
+                                got.combined,
+                                want.combined,
+                                "kernel {} gated={} n={n} \
+                                 t={threads} tiles {tiles} diverged",
+                                kernel.name(),
+                                bank.is_gated()
+                            );
+                        }
+                    }
                 }
             }
         }

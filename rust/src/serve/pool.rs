@@ -80,7 +80,7 @@ use crate::dispatch::placement::{
 };
 use crate::dispatch::plan::{capacity_for, DispatchPlan, OverflowPolicy};
 use crate::experts::{combine_rows_opts, gather_rows, ExpertBank};
-use crate::kernels::Kernel;
+use crate::kernels::{GemmTiles, Kernel};
 use crate::metrics::{LayerLoadTracker, LoadTracker, DEFAULT_LOAD_WINDOW};
 use crate::model::{residual_add, MoeLayer, ModelForward, StackedModel};
 use crate::router::engine::{
@@ -126,12 +126,13 @@ enum Job {
     /// Run the grouped-row segments listed in `scratch.segs` over
     /// `shared.plan` / `shared.xg` with layer `layer`'s bank into
     /// `scratch.y` (pre-sized by the caller). Carries the engine's
-    /// GEMM kernel choice — workers only see the shared layer stack,
-    /// so the knob travels with the job.
+    /// GEMM kernel and tile choices — workers only see the shared
+    /// layer stack, so the knobs travel with the job.
     Experts {
         layer: usize,
         shared: Arc<BatchShared>,
         kernel: Kernel,
+        tiles: GemmTiles,
         scratch: Box<Scratch>,
     },
 }
@@ -181,7 +182,7 @@ fn run_job(layers: &[MoeLayer], slot: usize, job: Job) -> Done {
             drop(shared);
             Done::Ok { slot, scratch }
         }
-        Job::Experts { layer, shared, kernel, mut scratch } => {
+        Job::Experts { layer, shared, kernel, tiles, mut scratch } => {
             let d = layers[layer].plan.cfg.d_model;
             let Scratch { hid, y, segs, .. } = &mut *scratch;
             let mut off = 0usize;
@@ -195,6 +196,7 @@ fn run_job(layers: &[MoeLayer], slot: usize, job: Job) -> Done {
                     r1 as usize,
                     d,
                     kernel,
+                    tiles,
                     hid,
                     &mut y[off..off + m * d],
                 );
@@ -256,6 +258,10 @@ pub struct PoolEngine {
     /// GEMM micro-kernel for the expert FFN stage; travels inside
     /// `Job::Experts` messages so the workers see it.
     kernel: Kernel,
+    /// MC×KC×NC cache tiles for the FFN GEMMs; travels inside
+    /// `Job::Experts` alongside the kernel. A pure cache knob — every
+    /// kernel is bitwise tile-invariant.
+    tiles: GemmTiles,
     /// Worker↔expert-group placement for the expert stage (the
     /// `Engine::builder().placement(..)` knob); round-robin default =
     /// the historical contiguous split.
@@ -328,6 +334,7 @@ impl PoolEngine {
             done_rx,
             renormalize: false,
             kernel: Kernel::default(),
+            tiles: GemmTiles::default(),
             placement_cfg: PlacementConfig::default(),
             step: 0,
         }
@@ -380,6 +387,13 @@ impl PoolEngine {
     /// (the default) additionally matches the historic goldens.
     pub fn set_kernel(&mut self, kernel: Kernel) {
         self.kernel = kernel;
+    }
+
+    /// Select the MC×KC×NC cache tiles for every layer's FFN GEMMs
+    /// (the `Engine::builder().gemm_tiles(..)` knob). Tiles move cache
+    /// behaviour, never bits; the caller (the builder) validates them.
+    pub fn set_gemm_tiles(&mut self, tiles: GemmTiles) {
+        self.tiles = tiles;
     }
 
     /// Adopt a placement policy for the expert stage's worker↔expert
@@ -514,8 +528,9 @@ impl PoolEngine {
         out.y.resize(kept * d, 0.0);
         let groups = self.n_workers.min(e).max(1);
         if groups == 1 || kept < 2 * self.n_workers {
-            self.layers[layer].bank.forward_all_with(
+            self.layers[layer].bank.forward_all_tiled(
                 self.kernel,
+                self.tiles,
                 &self.shared.plan,
                 &self.shared.xg,
                 &mut self.inline.hid,
@@ -542,6 +557,7 @@ impl PoolEngine {
                     layer,
                     shared: self.shared.clone(),
                     kernel: self.kernel,
+                    tiles: self.tiles,
                     scratch,
                 };
                 self.workers[g]
@@ -1018,28 +1034,41 @@ mod tests {
         let plan = r.plan().clone();
         let h = rand_vec(&mut rng, 53 * d);
         for kernel in Kernel::ALL {
-            let mut scoped = ServingEngine::new(plan.clone(), 3);
-            scoped.set_kernel(kernel);
-            let mut want = FullForward::new();
-            scoped.forward_full(
-                &h,
-                &bank,
-                1.0,
-                OverflowPolicy::Drop,
-                &mut want,
-            );
-            for workers in [1usize, 2, 3, 8] {
-                let mut pool =
-                    PoolEngine::new(plan.clone(), bank.clone(), workers);
-                pool.set_kernel(kernel);
-                let mut got = FullForward::new();
-                pool.forward_full(&h, 1.0, OverflowPolicy::Drop, &mut got);
-                assert_eq!(
-                    got.combined,
-                    want.combined,
-                    "kernel {} w={workers} diverged from scoped",
-                    kernel.name()
+            for tiles in [GemmTiles::default(), GemmTiles::new(2, 3, 5)] {
+                let mut scoped = ServingEngine::new(plan.clone(), 3);
+                scoped.set_kernel(kernel);
+                scoped.set_gemm_tiles(tiles);
+                let mut want = FullForward::new();
+                scoped.forward_full(
+                    &h,
+                    &bank,
+                    1.0,
+                    OverflowPolicy::Drop,
+                    &mut want,
                 );
+                for workers in [1usize, 2, 3, 8] {
+                    let mut pool = PoolEngine::new(
+                        plan.clone(),
+                        bank.clone(),
+                        workers,
+                    );
+                    pool.set_kernel(kernel);
+                    pool.set_gemm_tiles(tiles);
+                    let mut got = FullForward::new();
+                    pool.forward_full(
+                        &h,
+                        1.0,
+                        OverflowPolicy::Drop,
+                        &mut got,
+                    );
+                    assert_eq!(
+                        got.combined,
+                        want.combined,
+                        "kernel {} tiles {tiles} w={workers} \
+                         diverged from scoped",
+                        kernel.name()
+                    );
+                }
             }
         }
     }
