@@ -17,8 +17,10 @@
 //! wall-clock plus modelled step latency/stall per planner — to
 //! `BENCH_placement.json`, and the admission front-end rows —
 //! compiled-matcher classify cost plus a 2x-overload lane run — to
-//! `BENCH_admission.json`, so the perf trajectory is trackable across
-//! PRs). All serving-path engines are
+//! `BENCH_admission.json`, and the autoregressive decode sweep —
+//! prefill vs KV-cached single-token steps, layers {1, 4} x batch
+//! {1, 8, 32} — to `BENCH_decode.json`, so the perf trajectory is
+//! trackable across PRs). All serving-path engines are
 //! built through `Engine::builder()`; the `engine_direct/*` rows are
 //! the deliberate exception — they are the baseline the facade rows
 //! compare against. Set `LPR_BENCH_FAST=1` for a short smoke run (CI).
@@ -32,7 +34,11 @@ use lpr::dispatch::{
 use lpr::engine::{Backend, Engine, MoeEngine};
 use lpr::experts::ExpertBank;
 use lpr::metrics::{gini, min_max_ratio};
-use lpr::model::{synthetic_stacked_model, ModelEngine, ModelForward};
+use lpr::model::cache::{KvCache, SeqSpan};
+use lpr::model::{
+    synthetic_decoder_model, synthetic_stacked_model, ModelEngine,
+    ModelForward,
+};
 use lpr::router::linalg::matmul;
 use lpr::router::{
     synthetic_lpr_router, RouteBuffers, Router, RouterBatch,
@@ -545,6 +551,134 @@ fn main() {
             }
         }
         write_rows_or_warn("BENCH_model.json", &model_rows);
+    }
+
+    // ---- autoregressive decode: the same T tokens per sequence
+    // through the cached sequence path, either as one prefill call or
+    // as T single-token decode steps (the generation loop's shape).
+    // Attention decoders, layers {1, 4} x batch {1, 8, 32}, no-drop
+    // cf = E so both paths do identical routing work. Emitted as
+    // BENCH_decode.json. ----
+    {
+        let (dd, ddz, de, dk, dff, dh, dv, dt) =
+            (32usize, 16usize, 16usize, 2usize, 64usize, 4usize,
+             64usize, 32usize);
+        let mut decode_rows: Vec<String> = Vec::new();
+        let mut push_row = |name: &str,
+                            layers: usize,
+                            batch: usize,
+                            ns_per_token: f64| {
+            decode_rows.push(format!(
+                "{{\"name\": \"{name}\", \"layers\": {layers}, \
+                 \"batch\": {batch}, \"seq\": {dt}, \"d\": {dd}, \
+                 \"d_ff\": {dff}, \"E\": {de}, \"k\": {dk}, \
+                 \"heads\": {dh}, \"ns_per_token\": {ns_per_token:.2}}}"
+            ));
+        };
+        for n_layers in [1usize, 4] {
+            let (model, _head) = synthetic_decoder_model(
+                "cosine",
+                &Rng::new(2025),
+                n_layers,
+                dd,
+                ddz,
+                de,
+                dk,
+                dff,
+                dh,
+                dv,
+            )
+            .into_parts();
+            for batch in [1usize, 8, 32] {
+                let mut eng = Engine::builder()
+                    .model(model.clone())
+                    .backend(Backend::Scoped { threads: 1 })
+                    .capacity_factor(de as f64)
+                    .build()
+                    .expect("valid engine config");
+                let mut rng = Rng::new(7);
+                // per-sequence activations: batch sequences x dt rows
+                let h_full = normal_vec(&mut rng, batch * dt * dd, 0.5);
+                // the same rows re-laid-out one decode step at a time:
+                // step t holds every sequence's t-th token row
+                let h_steps: Vec<Vec<f32>> = (0..dt)
+                    .map(|t| {
+                        let mut rows = Vec::with_capacity(batch * dd);
+                        for s in 0..batch {
+                            let at = (s * dt + t) * dd;
+                            rows.extend_from_slice(
+                                &h_full[at..at + dd],
+                            );
+                        }
+                        rows
+                    })
+                    .collect();
+                let mut cache =
+                    KvCache::new(batch, n_layers, dd, dt);
+                let slots: Vec<usize> = (0..batch)
+                    .map(|_| cache.alloc().expect("slot"))
+                    .collect();
+                let full_spans: Vec<SeqSpan> = slots
+                    .iter()
+                    .map(|&slot| SeqSpan { slot, n_tokens: dt })
+                    .collect();
+                let step_spans: Vec<SeqSpan> = slots
+                    .iter()
+                    .map(|&slot| SeqSpan { slot, n_tokens: 1 })
+                    .collect();
+
+                let res = b.run_items(
+                    &format!(
+                        "decode/prefill/L{n_layers}/b{batch}/{dt}tok"
+                    ),
+                    (batch * dt) as f64,
+                    &mut || {
+                        for &slot in &slots {
+                            cache.reset(slot);
+                        }
+                        let out = eng.forward_seqs(
+                            std::hint::black_box(&h_full),
+                            &full_spans,
+                            &mut cache,
+                        );
+                        std::hint::black_box(out.hidden.len());
+                    },
+                );
+                push_row(
+                    &format!("decode/prefill/L{n_layers}"),
+                    n_layers,
+                    batch,
+                    res.per_item_ns(),
+                );
+
+                let res = b.run_items(
+                    &format!(
+                        "decode/cached/L{n_layers}/b{batch}/{dt}tok"
+                    ),
+                    (batch * dt) as f64,
+                    &mut || {
+                        for &slot in &slots {
+                            cache.reset(slot);
+                        }
+                        for step_h in &h_steps {
+                            let out = eng.forward_seqs(
+                                std::hint::black_box(step_h),
+                                &step_spans,
+                                &mut cache,
+                            );
+                            std::hint::black_box(out.hidden.len());
+                        }
+                    },
+                );
+                push_row(
+                    &format!("decode/cached/L{n_layers}"),
+                    n_layers,
+                    batch,
+                    res.per_item_ns(),
+                );
+            }
+        }
+        write_rows_or_warn("BENCH_decode.json", &decode_rows);
     }
 
     // ---- engine facade overhead: the same forward through a boxed

@@ -422,7 +422,7 @@ impl EngineBuilder {
             let mut layers = Vec::new();
             for l in model.into_layers() {
                 let bank = l.bank.quantized(self.weight_dtype)?;
-                layers.push(MoeLayer::new(l.plan, bank));
+                layers.push(MoeLayer::with_attn(l.plan, bank, l.attn));
             }
             StackedModel::new(layers)
         };

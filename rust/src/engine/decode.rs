@@ -1,0 +1,633 @@
+//! Continuous-batching autoregressive decode loop over the
+//! [`MoeEngine`] facade.
+//!
+//! A [`DecodeSession`] owns an engine, a [`DecodeHead`] (tied
+//! embedding + final norm → greedy argmax), a slot-pooled
+//! [`KvCache`], and a [`BatchQueue`] admission lane. Requests enter
+//! through [`DecodeSession::submit`] as token prompts; every
+//! [`DecodeSession::step`] coalesces all in-flight work into **one
+//! ragged step batch** — prompt prefills for sequences admitted this
+//! step, a single row for every sequence already generating — and runs
+//! it through [`MoeEngine::forward_seqs`] in one forward. New requests
+//! join mid-generation as cache slots free up (continuous batching);
+//! finished sequences release their slot the step they complete.
+//!
+//! # Determinism and the no-drop precondition
+//!
+//! Greedy decode here is bit-deterministic: every pipeline stage is
+//! row-independent with a fixed reduction order, so a sequence's
+//! hidden states — and therefore its argmax tokens — do not depend on
+//! which other sequences share its step batches, on thread count, or
+//! on backend. That holds **provided no token is ever dropped**:
+//! dispatch bins scale with the step-batch size, so a capacity factor
+//! that drops under load would make routing depend on who else is in
+//! the batch. Build the engine with `capacity_factor >= n_experts`
+//! (bins of `n·k` slots can never overflow) when batch-invariant
+//! output matters; [`StepStat::n_dropped`] reports violations.
+//!
+//! # Telemetry
+//!
+//! Each step records a [`StepStat`]: batch shape, latency, and the
+//! **per-step** per-layer balance view
+//! ([`LayerLoadTracker::last_step`](crate::metrics::LayerLoadTracker::last_step))
+//! — the paper's Gini / min-max numbers for the n=1 serving regime,
+//! where the engine's rolling window would smear consecutive
+//! single-token steps together.
+
+use std::collections::{HashMap, VecDeque};
+use std::fmt;
+use std::time::Instant;
+
+use super::MoeEngine;
+use crate::metrics::LayerBalance;
+use crate::model::cache::{KvCache, SeqSpan};
+use crate::model::DecodeHead;
+use crate::serve::queue::{BatchQueue, SubmitError};
+
+/// One generation request: a token prompt plus a generation budget.
+/// Generation is greedy (argmax, ties to the lowest token id) and runs
+/// for exactly `max_new` tokens — the synthetic vocabulary has no
+/// end-of-sequence convention.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GenRequest {
+    /// Prompt token ids, each `< vocab`.
+    pub prompt: Vec<usize>,
+    /// Tokens to generate after the prompt (>= 1).
+    pub max_new: usize,
+}
+
+/// Typed submission failures. Everything here is caught at
+/// [`DecodeSession::submit`] time — a request that enters the session
+/// always runs to completion.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DecodeError {
+    /// The admission queue refused the prompt (full / over-sized).
+    Queue(SubmitError),
+    /// `prompt + max_new` positions would exceed the cache's per-slot
+    /// `max_seq` bound.
+    TooLong { prompt: usize, max_new: usize, max_seq: usize },
+    /// The prompt carries no tokens.
+    EmptyPrompt,
+    /// `max_new` is zero.
+    NoNewTokens,
+    /// A prompt token is outside the head's vocabulary.
+    BadToken { tok: usize, vocab: usize },
+}
+
+impl fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            DecodeError::Queue(ref e) => write!(f, "admission queue: {e}"),
+            DecodeError::TooLong { prompt, max_new, max_seq } => write!(
+                f,
+                "prompt of {prompt} tokens + {max_new} generated exceeds \
+                 the kv cache max_seq bound of {max_seq}"
+            ),
+            DecodeError::EmptyPrompt => {
+                write!(f, "prompt must carry at least one token")
+            }
+            DecodeError::NoNewTokens => {
+                write!(f, "max_new must be >= 1")
+            }
+            DecodeError::BadToken { tok, vocab } => write!(
+                f,
+                "prompt token {tok} is outside the vocabulary of {vocab}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for DecodeError {}
+
+impl From<SubmitError> for DecodeError {
+    fn from(e: SubmitError) -> DecodeError {
+        DecodeError::Queue(e)
+    }
+}
+
+/// A completed generation, as drained by
+/// [`DecodeSession::take_finished`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FinishedSeq {
+    /// Request id handed out by [`DecodeSession::submit`].
+    pub id: u64,
+    /// Prompt length the request was admitted with.
+    pub prompt_len: usize,
+    /// The `max_new` greedily generated token ids, in order.
+    pub tokens: Vec<usize>,
+}
+
+/// One decode step's telemetry: the ragged batch shape, wall-clock
+/// latency, and the per-step per-layer balance table (module docs).
+#[derive(Debug, Clone)]
+pub struct StepStat {
+    /// 0-based index of this productive step.
+    pub step: usize,
+    /// Sequences in the step batch (after admissions).
+    pub n_seqs: usize,
+    /// Sequences admitted (prefilled) this step.
+    pub n_joined: usize,
+    /// Total batch rows (prompt rows + one per generating sequence).
+    pub n_tokens: usize,
+    /// Routed slots dropped across all layers this step — non-zero
+    /// only when the engine's capacity factor violates the no-drop
+    /// precondition (module docs).
+    pub n_dropped: usize,
+    /// Forward wall-clock for this step.
+    pub latency_ns: u128,
+    /// Per-layer Gini / min-max / CV of **this step's** routed load.
+    pub layers: Vec<LayerBalance>,
+}
+
+/// A sequence holding a cache slot and generating.
+#[derive(Debug)]
+struct ActiveSeq {
+    id: u64,
+    slot: usize,
+    prompt_len: usize,
+    max_new: usize,
+    /// Tokens generated so far.
+    tokens: Vec<usize>,
+    /// Rows to feed the next step: the embedded prompt right after
+    /// admission, then the last generated token's embedding.
+    pending: Vec<f32>,
+}
+
+/// A request popped from the admission queue, waiting for a slot.
+#[derive(Debug)]
+struct Waiting {
+    id: u64,
+    prompt_len: usize,
+    max_new: usize,
+    h: Vec<f32>,
+}
+
+/// Per-request metadata kept while the prompt sits in the queue.
+#[derive(Debug, Clone, Copy)]
+struct PendingMeta {
+    max_new: usize,
+}
+
+/// Continuous-batching greedy decode driver (module docs).
+///
+/// ```
+/// use lpr::engine::{Backend, DecodeSession, Engine, GenRequest};
+/// use lpr::model::synthetic_decoder_model;
+/// use lpr::util::rng::Rng;
+///
+/// let (e, k) = (4usize, 2usize);
+/// let dec = synthetic_decoder_model(
+///     "cosine", &Rng::new(7), 2, 8, 4, e, k, 6, 2, 16,
+/// );
+/// let (model, head) = dec.into_parts();
+/// let engine = Engine::builder()
+///     .model(model)
+///     .backend(Backend::Scoped { threads: 2 })
+///     .capacity_factor(e as f64) // no-drop: decode is batch-invariant
+///     .build()?;
+/// let mut sess = DecodeSession::new(engine, head, 2, 32);
+/// let id = sess.submit(GenRequest { prompt: vec![1, 2, 3], max_new: 4 })?;
+/// let stats = sess.run_to_idle();
+/// let fin = sess.take_finished();
+/// assert_eq!((fin[0].id, fin[0].tokens.len()), (id, 4));
+/// assert!(stats.iter().all(|s| s.n_dropped == 0));
+/// # Ok::<(), Box<dyn std::error::Error>>(())
+/// ```
+pub struct DecodeSession<E: MoeEngine> {
+    engine: E,
+    head: DecodeHead,
+    cache: KvCache,
+    queue: BatchQueue,
+    meta: HashMap<u64, PendingMeta>,
+    waiting: VecDeque<Waiting>,
+    active: Vec<ActiveSeq>,
+    finished: Vec<FinishedSeq>,
+    /// Virtual clock driving the admission queue, one tick per step.
+    now: u64,
+    steps: usize,
+    // reusable per-step scratch
+    step_h: Vec<f32>,
+    spans: Vec<SeqSpan>,
+    batch_h: Vec<f32>,
+    members: Vec<crate::serve::queue::BatchMember>,
+    next_toks: Vec<usize>,
+    embed_buf: Vec<f32>,
+    norm_scratch: Vec<f32>,
+}
+
+impl<E: MoeEngine> DecodeSession<E> {
+    /// A session over `engine`/`head` with `n_slots` concurrent
+    /// sequences, each bounded to `max_seq` cached positions. The head
+    /// width must match the engine's residual stream.
+    pub fn new(
+        engine: E,
+        head: DecodeHead,
+        n_slots: usize,
+        max_seq: usize,
+    ) -> DecodeSession<E> {
+        let d = engine.d_model();
+        assert_eq!(
+            d,
+            head.d_model(),
+            "decode head width must match the engine"
+        );
+        let cache = KvCache::new(n_slots, engine.layers().max(1), d, max_seq);
+        // The queue admits whole prompts only; its token bound is the
+        // most the cache could ever hold, so it never splits a join
+        // wave smaller than the slot pool allows.
+        let max_batch = n_slots.saturating_mul(max_seq).max(1);
+        let queue =
+            BatchQueue::new(d, max_batch, 0, max_batch.saturating_mul(2));
+        DecodeSession {
+            engine,
+            head,
+            cache,
+            queue,
+            meta: HashMap::new(),
+            waiting: VecDeque::new(),
+            active: Vec::new(),
+            finished: Vec::new(),
+            now: 0,
+            steps: 0,
+            step_h: Vec::new(),
+            spans: Vec::new(),
+            batch_h: Vec::new(),
+            members: Vec::new(),
+            next_toks: Vec::new(),
+            embed_buf: Vec::new(),
+            norm_scratch: Vec::new(),
+        }
+    }
+
+    pub fn engine(&self) -> &E {
+        &self.engine
+    }
+
+    pub fn head(&self) -> &DecodeHead {
+        &self.head
+    }
+
+    /// The slot-pooled cache (inspectable for slot accounting).
+    pub fn cache(&self) -> &KvCache {
+        &self.cache
+    }
+
+    /// Sequences currently holding a slot and generating.
+    pub fn n_active(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Requests admitted but not yet finished, plus queued prompts.
+    pub fn is_idle(&self) -> bool {
+        self.active.is_empty()
+            && self.waiting.is_empty()
+            && self.queue.is_empty()
+    }
+
+    /// Productive steps run so far.
+    pub fn steps(&self) -> usize {
+        self.steps
+    }
+
+    /// Validate and enqueue a request; returns its id. The request
+    /// joins generation at the next [`Self::step`] with a free slot.
+    pub fn submit(&mut self, req: GenRequest) -> Result<u64, DecodeError> {
+        if req.prompt.is_empty() {
+            return Err(DecodeError::EmptyPrompt);
+        }
+        if req.max_new == 0 {
+            return Err(DecodeError::NoNewTokens);
+        }
+        let vocab = self.head.vocab();
+        if let Some(&tok) = req.prompt.iter().find(|&&t| t >= vocab) {
+            return Err(DecodeError::BadToken { tok, vocab });
+        }
+        // Conservative by one: the final generated token is never fed
+        // back, so at most prompt + max_new - 1 positions are cached.
+        if req.prompt.len() + req.max_new > self.cache.max_seq() {
+            return Err(DecodeError::TooLong {
+                prompt: req.prompt.len(),
+                max_new: req.max_new,
+                max_seq: self.cache.max_seq(),
+            });
+        }
+        self.head.embed_tokens(&req.prompt, &mut self.embed_buf);
+        let id = self.queue.submit(&self.embed_buf, self.now)?;
+        self.meta.insert(id, PendingMeta { max_new: req.max_new });
+        Ok(id)
+    }
+
+    /// Move queued prompts into free cache slots, FIFO. Returns the
+    /// number of sequences admitted.
+    fn admit(&mut self) -> usize {
+        let d = self.head.d_model();
+        let mut joined = 0;
+        while self.cache.n_live() < self.cache.n_slots() {
+            if let Some(w) = self.waiting.pop_front() {
+                let slot =
+                    self.cache.alloc().expect("a free slot was just checked");
+                self.active.push(ActiveSeq {
+                    id: w.id,
+                    slot,
+                    prompt_len: w.prompt_len,
+                    max_new: w.max_new,
+                    tokens: Vec::new(),
+                    pending: w.h,
+                });
+                joined += 1;
+            } else if !self.queue.is_empty() && self.queue.ready(self.now) {
+                self.queue.pop_batch(&mut self.batch_h, &mut self.members);
+                for m in &self.members {
+                    let meta = self
+                        .meta
+                        .remove(&m.id)
+                        .expect("submitted request has metadata");
+                    let rows = &self.batch_h
+                        [m.start * d..(m.start + m.n_tokens) * d];
+                    self.waiting.push_back(Waiting {
+                        id: m.id,
+                        prompt_len: m.n_tokens,
+                        max_new: meta.max_new,
+                        h: rows.to_vec(),
+                    });
+                }
+            } else {
+                break;
+            }
+        }
+        joined
+    }
+
+    /// One decode step: admit what fits, coalesce every in-flight
+    /// sequence into one ragged batch, forward, extend each sequence
+    /// by its greedy next token, and retire finished sequences.
+    /// Returns `None` when there is nothing to run.
+    pub fn step(&mut self) -> Option<StepStat> {
+        self.now += 1;
+        let n_joined = self.admit();
+        if self.active.is_empty() {
+            return None;
+        }
+        let d = self.head.d_model();
+        self.step_h.clear();
+        self.spans.clear();
+        for seq in &self.active {
+            let n = seq.pending.len() / d;
+            debug_assert!(n >= 1, "an active sequence always has rows");
+            self.spans.push(SeqSpan { slot: seq.slot, n_tokens: n });
+            self.step_h.extend_from_slice(&seq.pending);
+        }
+        let n_tokens = self.step_h.len() / d;
+        let t0 = Instant::now();
+        let out = self.engine.forward_seqs(
+            &self.step_h,
+            &self.spans,
+            &mut self.cache,
+        );
+        let n_dropped: usize =
+            out.layers.iter().map(|l| l.plan.n_dropped).sum();
+        self.next_toks.clear();
+        let mut off = 0;
+        for span in &self.spans {
+            let h_last = out.token_row(off + span.n_tokens - 1);
+            self.next_toks
+                .push(self.head.greedy_next(h_last, &mut self.norm_scratch));
+            off += span.n_tokens;
+        }
+        let latency_ns = t0.elapsed().as_nanos();
+        let layers = self.engine.balance().last_step();
+
+        let DecodeSession { active, cache, finished, head, next_toks, .. } =
+            self;
+        let mut i = 0;
+        active.retain_mut(|seq| {
+            let tok = next_toks[i];
+            i += 1;
+            seq.tokens.push(tok);
+            if seq.tokens.len() >= seq.max_new {
+                cache.free(seq.slot);
+                finished.push(FinishedSeq {
+                    id: seq.id,
+                    prompt_len: seq.prompt_len,
+                    tokens: std::mem::take(&mut seq.tokens),
+                });
+                false
+            } else {
+                seq.pending.clear();
+                seq.pending.extend_from_slice(head.embedding(tok));
+                true
+            }
+        });
+
+        let stat = StepStat {
+            step: self.steps,
+            n_seqs: self.spans.len(),
+            n_joined,
+            n_tokens,
+            n_dropped,
+            latency_ns,
+            layers,
+        };
+        self.steps += 1;
+        Some(stat)
+    }
+
+    /// Drive [`Self::step`] until every submitted request has
+    /// finished; returns the per-step telemetry.
+    pub fn run_to_idle(&mut self) -> Vec<StepStat> {
+        let mut stats = Vec::new();
+        while !self.is_idle() {
+            match self.step() {
+                Some(s) => stats.push(s),
+                // Defensive: unreachable with this queue configuration
+                // (max_wait 0 ⇒ pending work is always admissible).
+                None => break,
+            }
+        }
+        stats
+    }
+
+    /// Drain completed generations, in completion order.
+    pub fn take_finished(&mut self) -> Vec<FinishedSeq> {
+        std::mem::take(&mut self.finished)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{Backend, Engine};
+    use crate::model::synthetic_decoder_model;
+    use crate::util::rng::Rng;
+
+    const L: usize = 2;
+    const D: usize = 16;
+    const DZ: usize = 8;
+    const E: usize = 6;
+    const K: usize = 2;
+    const FF: usize = 10;
+    const H: usize = 4;
+    const V: usize = 32;
+
+    fn session(
+        backend: Backend,
+        n_slots: usize,
+        max_seq: usize,
+    ) -> DecodeSession<Engine> {
+        let dec = synthetic_decoder_model(
+            "cosine",
+            &Rng::new(11),
+            L,
+            D,
+            DZ,
+            E,
+            K,
+            FF,
+            H,
+            V,
+        );
+        let (model, head) = dec.into_parts();
+        let engine = Engine::builder()
+            .model(model)
+            .backend(backend)
+            .capacity_factor(E as f64) // no-drop: batch-invariant decode
+            .build()
+            .expect("engine builds");
+        DecodeSession::new(engine, head, n_slots, max_seq)
+    }
+
+    /// Greedy output is a pure function of the prompt: the same
+    /// request, run solo or sharing its batches with another sequence
+    /// that joins mid-generation, generates the same tokens on both
+    /// backends — the continuous-batching invariance the module
+    /// promises.
+    #[test]
+    fn joins_do_not_change_generated_tokens() {
+        let prompt_a = vec![3usize, 1, 4, 1, 5];
+        let prompt_b = vec![9usize, 2, 6];
+
+        // solo references
+        let mut solo = session(Backend::Scoped { threads: 1 }, 1, 32);
+        let ida = solo.submit(GenRequest {
+            prompt: prompt_a.clone(),
+            max_new: 6,
+        });
+        solo.run_to_idle();
+        let ref_a = solo.take_finished().remove(0);
+        assert_eq!(Some(ref_a.id), ida.ok());
+        let mut solo_b = session(Backend::Scoped { threads: 1 }, 1, 32);
+        solo_b
+            .submit(GenRequest { prompt: prompt_b.clone(), max_new: 4 })
+            .unwrap();
+        solo_b.run_to_idle();
+        let ref_b = solo_b.take_finished().remove(0);
+
+        for backend in [
+            Backend::Scoped { threads: 3 },
+            Backend::Pool { workers: 2 },
+        ] {
+            let mut sess = session(backend, 2, 32);
+            let ida = sess
+                .submit(GenRequest { prompt: prompt_a.clone(), max_new: 6 })
+                .unwrap();
+            // let A prefill + generate two tokens before B joins
+            let s0 = sess.step().unwrap();
+            assert_eq!((s0.n_joined, s0.n_tokens), (1, prompt_a.len()));
+            sess.step().unwrap();
+            let idb = sess
+                .submit(GenRequest { prompt: prompt_b.clone(), max_new: 4 })
+                .unwrap();
+            let s2 = sess.step().unwrap();
+            // B's prefill shares the batch with A's decode row
+            assert_eq!(s2.n_joined, 1);
+            assert_eq!(s2.n_tokens, prompt_b.len() + 1);
+            let stats = sess.run_to_idle();
+            assert!(stats.iter().all(|s| s.n_dropped == 0));
+            let fin = sess.take_finished();
+            let a = fin.iter().find(|f| f.id == ida).unwrap();
+            let b = fin.iter().find(|f| f.id == idb).unwrap();
+            assert_eq!(a.tokens, ref_a.tokens, "{backend:?}");
+            assert_eq!(b.tokens, ref_b.tokens, "{backend:?}");
+            assert_eq!(a.prompt_len, prompt_a.len());
+            assert!(sess.is_idle());
+            assert_eq!(sess.cache().n_live(), 0);
+        }
+    }
+
+    /// With one slot, the second request waits in the queue, joins
+    /// when the first finishes, and reuses the freed slot.
+    #[test]
+    fn one_slot_serializes_and_recycles() {
+        let mut sess = session(Backend::Scoped { threads: 2 }, 1, 16);
+        let ida = sess
+            .submit(GenRequest { prompt: vec![1, 2], max_new: 3 })
+            .unwrap();
+        let idb = sess
+            .submit(GenRequest { prompt: vec![3], max_new: 2 })
+            .unwrap();
+        assert_ne!(ida, idb);
+        let stats = sess.run_to_idle();
+        // every step batches exactly one sequence
+        assert!(stats.iter().all(|s| s.n_seqs == 1));
+        assert_eq!(stats.len(), 3 + 2);
+        let fin = sess.take_finished();
+        assert_eq!(fin.len(), 2);
+        assert_eq!(fin[0].id, ida, "FIFO admission");
+        assert_eq!(fin[1].id, idb);
+        assert_eq!(sess.cache().n_live(), 0);
+
+        // the same session keeps serving after going idle
+        sess.submit(GenRequest { prompt: vec![5, 6, 7], max_new: 1 })
+            .unwrap();
+        sess.run_to_idle();
+        assert_eq!(sess.take_finished().len(), 1);
+    }
+
+    /// Submission-time validation is typed and total.
+    #[test]
+    fn submit_rejects_bad_requests() {
+        let mut sess = session(Backend::Scoped { threads: 1 }, 1, 8);
+        assert_eq!(
+            sess.submit(GenRequest { prompt: vec![], max_new: 1 }),
+            Err(DecodeError::EmptyPrompt)
+        );
+        assert_eq!(
+            sess.submit(GenRequest { prompt: vec![1], max_new: 0 }),
+            Err(DecodeError::NoNewTokens)
+        );
+        assert_eq!(
+            sess.submit(GenRequest { prompt: vec![V], max_new: 1 }),
+            Err(DecodeError::BadToken { tok: V, vocab: V })
+        );
+        let err = sess
+            .submit(GenRequest { prompt: vec![1; 6], max_new: 3 })
+            .unwrap_err();
+        assert_eq!(
+            err,
+            DecodeError::TooLong { prompt: 6, max_new: 3, max_seq: 8 }
+        );
+        assert!(err.to_string().contains("max_seq"), "{err}");
+        // the boundary itself is accepted
+        assert!(sess
+            .submit(GenRequest { prompt: vec![1; 5], max_new: 3 })
+            .is_ok());
+    }
+
+    /// Per-step telemetry carries one balance row per layer and a
+    /// non-trivial load snapshot once routing has run.
+    #[test]
+    fn step_stats_resolve_layers() {
+        let mut sess = session(Backend::Scoped { threads: 2 }, 2, 16);
+        sess.submit(GenRequest { prompt: vec![2, 4, 8], max_new: 2 })
+            .unwrap();
+        let stat = sess.step().unwrap();
+        assert_eq!(stat.step, 0);
+        assert_eq!(stat.layers.len(), L);
+        assert!(stat.layers.iter().enumerate().all(|(l, b)| b.layer == l));
+        // a 3-token, k=2 step routes 6 slots over 6 experts: min-max is
+        // defined (not the empty-load 0/0 convention) and gini < 1
+        assert!(stat.layers.iter().all(|b| b.gini < 1.0));
+        assert!(stat.n_dropped == 0);
+        assert!(stat.latency_ns > 0);
+    }
+}

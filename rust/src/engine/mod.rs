@@ -65,13 +65,18 @@
 //! ```
 
 pub mod builder;
+pub mod decode;
 
 pub use builder::{Backend, EngineBuildError, EngineBuilder};
+pub use decode::{
+    DecodeError, DecodeSession, FinishedSeq, GenRequest, StepStat,
+};
 
 use crate::dispatch::placement::PlacementConfig;
 use crate::dispatch::plan::OverflowPolicy;
 use crate::kernels::{GemmTiles, Kernel};
 use crate::metrics::LayerLoadTracker;
+use crate::model::cache::{KvCache, SeqSpan};
 use crate::model::{ModelEngine, ModelForward, StackedModel};
 use crate::router::{FullForward, RouterBatch};
 use crate::serve::PoolEngine;
@@ -142,11 +147,39 @@ pub trait MoeEngine: Send {
     /// the first call). `serve::ServeRuntime` uses this to map batch
     /// members onto combined rows.
     fn last(&self) -> &ModelForward;
+
+    /// Run the stack over a **ragged step batch**: `h` is `[N, d]`
+    /// whose rows concatenate `spans` in span order, each span
+    /// extending one cached sequence by its new positions (1 for a
+    /// decode step, the prompt length for a prefill — see
+    /// [`crate::model::cache`]). Attention sublayers read each span's
+    /// past keys/values from (and append the new ones to) its cache
+    /// slot; on attention-less stacks the cache only tracks lengths.
+    /// Bit-identical however a sequence's rows are split across calls
+    /// and across thread counts/backends, provided the engine's
+    /// capacity factor admits every token — dispatch bins scale with
+    /// batch size, so a dropping configuration is not batch-invariant
+    /// (see [`decode`]). Callers pre-check slot capacity with
+    /// [`KvCache::check_capacity`]; violations panic.
+    fn forward_seqs(
+        &mut self,
+        h: &[f32],
+        spans: &[SeqSpan],
+        cache: &mut KvCache,
+    ) -> EngineOutput<'_>;
 }
 
 impl MoeEngine for Box<dyn MoeEngine> {
     fn forward(&mut self, h: &[f32], n: usize) -> EngineOutput<'_> {
         (**self).forward(h, n)
+    }
+    fn forward_seqs(
+        &mut self,
+        h: &[f32],
+        spans: &[SeqSpan],
+        cache: &mut KvCache,
+    ) -> EngineOutput<'_> {
+        (**self).forward_seqs(h, spans, cache)
     }
     fn route_into(&mut self, h: &[f32], out: &mut RouterBatch) {
         (**self).route_into(h, out)
@@ -206,6 +239,27 @@ impl MoeEngine for ScopedBackend {
     fn forward(&mut self, h: &[f32], n: usize) -> EngineOutput<'_> {
         assert_eq!(h.len(), n * self.eng.d_model(), "h must be [n, d]");
         self.eng.forward(h, self.capacity_factor, self.policy, &mut self.out);
+        EngineOutput {
+            n_tokens: n,
+            hidden: &self.out.hidden,
+            layers: &self.out.layers,
+        }
+    }
+    fn forward_seqs(
+        &mut self,
+        h: &[f32],
+        spans: &[SeqSpan],
+        cache: &mut KvCache,
+    ) -> EngineOutput<'_> {
+        let n = h.len() / self.eng.d_model().max(1);
+        self.eng.forward_seqs(
+            h,
+            spans,
+            self.capacity_factor,
+            self.policy,
+            cache,
+            &mut self.out,
+        );
         EngineOutput {
             n_tokens: n,
             hidden: &self.out.hidden,
@@ -279,6 +333,27 @@ impl MoeEngine for PoolBackend {
             h,
             self.capacity_factor,
             self.policy,
+            &mut self.out,
+        );
+        EngineOutput {
+            n_tokens: n,
+            hidden: &self.out.hidden,
+            layers: &self.out.layers,
+        }
+    }
+    fn forward_seqs(
+        &mut self,
+        h: &[f32],
+        spans: &[SeqSpan],
+        cache: &mut KvCache,
+    ) -> EngineOutput<'_> {
+        let n = h.len() / self.pool.d_model().max(1);
+        self.pool.forward_model_seqs(
+            h,
+            spans,
+            self.capacity_factor,
+            self.policy,
+            cache,
             &mut self.out,
         );
         EngineOutput {
@@ -384,6 +459,14 @@ impl std::fmt::Debug for Engine {
 impl MoeEngine for Engine {
     fn forward(&mut self, h: &[f32], n: usize) -> EngineOutput<'_> {
         self.inner.forward(h, n)
+    }
+    fn forward_seqs(
+        &mut self,
+        h: &[f32],
+        spans: &[SeqSpan],
+        cache: &mut KvCache,
+    ) -> EngineOutput<'_> {
+        self.inner.forward_seqs(h, spans, cache)
     }
     fn route_into(&mut self, h: &[f32], out: &mut RouterBatch) {
         self.inner.route_into(h, out)

@@ -15,6 +15,12 @@
 //!                         training checkpoint (pure Rust, no PJRT),
 //!                         `synthetic` builds an L-layer LPR stack;
 //!                         prints the per-layer Gini/min-max table
+//!   generate <preset|synthetic>  autoregressive greedy decode on the
+//!                         KV-cached continuous-batching session:
+//!                         `--ckpt FILE` bridges a training checkpoint
+//!                         (attention + MoE leaves, prints the leaf
+//!                         load summary), `synthetic` builds a decoder
+//!                         stack; emits per-step balance telemetry
 //!   model-sim             run the stacked model through the layered
 //!                         dispatch simulator (per-layer balance +
 //!                         sequential straggler latency model)
@@ -45,10 +51,15 @@ use lpr::dispatch::{
     DispatchPlan, DispatchSim, OverflowPolicy, PlacementConfig,
     PlacementPolicy, SimConfig,
 };
-use lpr::engine::{Backend, Engine, MoeEngine};
+use lpr::engine::{
+    Backend, DecodeSession, Engine, GenRequest, MoeEngine,
+};
 use lpr::experts::ExpertBank;
 use lpr::metrics::{ascii_heatmap, entropy_frac, gini, min_max_ratio};
-use lpr::model::{bridge, run_model_steps, synthetic_stacked_model, StackedModel};
+use lpr::model::{
+    bridge, run_model_steps, synthetic_decoder_model,
+    synthetic_stacked_model, DecoderModel, StackedModel,
+};
 use lpr::report::Reporter;
 use lpr::router::{synthetic_lpr_router, RouterBatch};
 use lpr::runtime::{CompiledArtifacts, Runtime};
@@ -75,12 +86,18 @@ USAGE:
             [--requests N] [--req-tokens N] [--cf F] [--renormalize]
   lpr serve synthetic [--layers L] [--metric M] [--experts N] [--topk K]
             [--dmodel D] [--latent Z] [--dff F] [...same options]
+  lpr generate <preset> --ckpt FILE [--prompt TOKS] [--max-new N]
+               [--slots N] [--max-seq N] [--threads N] [--cf F]
+  lpr generate synthetic [--layers L] [--metric M] [--experts N]
+               [--topk K] [--dmodel D] [--latent Z] [--dff F]
+               [--heads H] [--vocab V] [...same decode options]
   lpr model-sim [--layers L] [--metric M] [--experts N] [--topk K]
                 [--dmodel D] [--dff F] [--threads N] [--policy P]
                 [--steps N] [--tokens N] [--cf F] [--devices N]
   lpr repro <t1|t2|t3|t4|t5|t6|t7|fig1|fig3|fig4|dispatch
             |dispatch-routed|dispatch-policies|placement|serve
-            |model-serve|admission|dispatch-replay|all> [--steps N]
+            |model-serve|admission|decode|dispatch-replay|all>
+            [--steps N]
   lpr dispatch-sim [--experts N] [--devices N] [--topk K] [--skew S]
                    [--cf F] [--steps N] [--threads N] [--metric M]
                    [--policy P] [--routed] [--full] [--renormalize]
@@ -129,6 +146,13 @@ Options:
                     (lane / path / tenant / quota / weight / overflow
                     directives — see docs/ARCHITECTURE.md); default is
                     one catch-all lane
+  --prompt TOKS     generate: comma-separated token ids; `;` separates
+                    sequences batched together (default \"3,1,4\")
+  --max-new N       generate: new tokens per sequence (default 16)
+  --slots N         generate: KV-cache slots, the max concurrently
+                    decoding sequences (default 4)
+  --max-seq N       generate: per-slot KV capacity in tokens (default
+                    longest prompt + max-new)
   --addr HOST:PORT  listen: bind address (default 127.0.0.1:7077)
   --http            listen: speak the HTTP/1.1-shaped wire instead of
                     the native length-prefixed framing
@@ -170,6 +194,7 @@ fn run(args: &Args) -> Result<()> {
         "route" => cmd_route(args),
         "repro" => cmd_repro(args),
         "serve" => cmd_serve(args),
+        "generate" => cmd_generate(args),
         "model-sim" => cmd_model_sim(args),
         "dispatch-sim" => cmd_dispatch_sim(args),
         "serve-bench" => cmd_serve_bench(args),
@@ -370,6 +395,7 @@ fn cmd_repro(args: &Args) -> Result<()> {
             | "serve"
             | "model-serve"
             | "admission"
+            | "decode"
     );
     let rt = if pure_rust { None } else { Some(Runtime::cpu()?) };
     let mut rep = Reporter::new(rt.as_ref(), &art, &out);
@@ -395,6 +421,7 @@ fn cmd_repro(args: &Args) -> Result<()> {
         "serve" => rep.serve_table()?,
         "model-serve" => rep.model_serve_table()?,
         "admission" => rep.admission_table()?,
+        "decode" => rep.decode_table()?,
         "dispatch-replay" => rep.dispatch_replay()?,
         "all" => rep.all()?,
         other => bail!("unknown experiment '{other}'"),
@@ -584,6 +611,200 @@ fn cmd_serve(args: &Args) -> Result<()> {
         r.window_gini, r.window_min_max
     );
     print_layer_table(&r.layers);
+    Ok(())
+}
+
+/// `--prompt "3,1,4;2,7"`: comma-separated token ids, `;` between
+/// sequences that join the same continuous-batching session.
+fn parse_prompts(s: &str) -> Result<Vec<Vec<usize>>> {
+    s.split(';')
+        .map(|seq| {
+            let toks = seq
+                .split(',')
+                .map(str::trim)
+                .filter(|t| !t.is_empty())
+                .map(|t| {
+                    t.parse::<usize>().with_context(|| {
+                        format!("--prompt: bad token id '{t}'")
+                    })
+                })
+                .collect::<Result<Vec<usize>>>()?;
+            anyhow::ensure!(
+                !toks.is_empty(),
+                "--prompt: empty sequence (check the ';' splits)"
+            );
+            Ok(toks)
+        })
+        .collect()
+}
+
+/// The decoder `generate` operates on: a training checkpoint through
+/// the attention-aware bridge when `--ckpt` is given (printing which
+/// leaves were consumed vs skipped), otherwise a synthetic decoder
+/// stack. Also returns a description line and the expert count (the
+/// no-drop capacity-factor default).
+fn decoder_model_arg(
+    args: &Args,
+    preset: &str,
+) -> Result<(DecoderModel, String, usize)> {
+    if preset == "synthetic" {
+        let n_layers = args.opt_usize("layers", 2);
+        let metric = args.opt_or("metric", "cosine");
+        let d = args.opt_usize("dmodel", 32);
+        let dz = args.opt_usize("latent", 16);
+        let e = args.opt_usize("experts", 16);
+        let k = args.opt_usize("topk", 2);
+        let d_ff = args.opt_usize("dff", 2 * d);
+        let heads = args.opt_usize("heads", 4);
+        let vocab = args.opt_usize("vocab", 64);
+        anyhow::ensure!(
+            heads > 0 && d % heads == 0,
+            "--dmodel {d} must split evenly into --heads {heads}"
+        );
+        let seed = args.opt_usize("seed", 2025) as u64;
+        let dec = synthetic_decoder_model(
+            metric,
+            &Rng::new(seed),
+            n_layers,
+            d,
+            dz,
+            e,
+            k,
+            d_ff,
+            heads,
+            vocab,
+        );
+        let desc = format!(
+            "synthetic {n_layers}-layer {metric} decoder, {e} experts \
+             top-{k}, d={d} heads={heads} vocab={vocab}"
+        );
+        Ok((dec, desc, e))
+    } else {
+        let ckpt = args.opt("ckpt").context(
+            "--ckpt FILE required for a checkpointed decoder (or use \
+             `generate synthetic`)",
+        )?;
+        let (meta, dec, summary) = bridge::decoder_from_files(
+            &art_dir(args),
+            preset,
+            std::path::Path::new(ckpt),
+        )?;
+        println!("checkpoint leaves: {summary}");
+        let attn = if dec.model().has_attn() {
+            "attention"
+        } else {
+            "MoE-only (no attention leaves)"
+        };
+        let desc = format!(
+            "checkpoint {ckpt} ({preset}: {} layers, {} experts \
+             top-{}, {attn}, vocab {})",
+            meta.config.n_layers,
+            meta.config.n_experts,
+            meta.config.top_k,
+            dec.vocab()
+        );
+        Ok((dec, desc, meta.config.n_experts))
+    }
+}
+
+/// Greedy autoregressive generation on the KV-cached decode session:
+/// submit every `--prompt` sequence, run continuous-batching steps to
+/// idle, and print the generated tokens plus the per-step per-layer
+/// routed-load balance (the paper's Gini / min-max lens at decode's
+/// n=1 regime). Defaults to the no-drop capacity factor (`cf =
+/// n_experts`) so cached decode is bitwise the prefill forward.
+fn cmd_generate(args: &Args) -> Result<()> {
+    let preset = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("synthetic");
+    let (dec, desc, n_experts) = decoder_model_arg(args, preset)?;
+    let prompts = parse_prompts(args.opt_or("prompt", "3,1,4"))?;
+    let max_new = args.opt_usize("max-new", 16);
+    let slots = args.opt_usize("slots", 4);
+    let longest = prompts.iter().map(Vec::len).max().unwrap_or(1);
+    let max_seq = args.opt_usize("max-seq", longest + max_new);
+    let threads = args.opt_usize("threads", 1);
+    let cf = args.opt_f64("cf", n_experts as f64);
+    if cf < n_experts as f64 {
+        eprintln!(
+            "note: --cf {cf} can drop tokens; decode is only \
+             batch-invariant at the no-drop cf {n_experts}"
+        );
+    }
+
+    let (model, head) = dec.into_parts();
+    let mut builder = Engine::builder()
+        .model(model)
+        .backend(Backend::Scoped { threads })
+        .capacity_factor(cf);
+    if let Some(t) = parse_tiles(args)? {
+        builder = builder.gemm_tiles(t);
+    }
+    let engine = builder.build()?;
+    let mut sess = DecodeSession::new(engine, head, slots, max_seq);
+    for prompt in &prompts {
+        sess.submit(GenRequest { prompt: prompt.clone(), max_new })?;
+    }
+
+    println!("generate: {desc}");
+    println!(
+        "  {} sequence(s), {max_new} new tokens each, {slots} KV \
+         slots x {max_seq} tokens, cf {cf}, {threads} threads",
+        prompts.len()
+    );
+    let t0 = std::time::Instant::now();
+    let stats = sess.run_to_idle();
+    let dt = t0.elapsed().as_secs_f64();
+
+    println!(
+        "  {:<5} {:>5} {:>5} {:>5} {:>5} {:>10} {:>9} {:>9}",
+        "step", "seqs", "join", "toks", "drop", "mean-GINI", "min-max",
+        "us"
+    );
+    for s in &stats {
+        let nl = s.layers.len().max(1) as f64;
+        let mean_gini =
+            s.layers.iter().map(|l| l.gini).sum::<f64>() / nl;
+        let mean_mm =
+            s.layers.iter().map(|l| l.min_max).sum::<f64>() / nl;
+        println!(
+            "  {:<5} {:>5} {:>5} {:>5} {:>5} {:>10.4} {:>9.4} {:>9.1}",
+            s.step,
+            s.n_seqs,
+            s.n_joined,
+            s.n_tokens,
+            s.n_dropped,
+            mean_gini,
+            mean_mm,
+            s.latency_ns as f64 / 1e3
+        );
+    }
+    if let Some(last) = stats.last() {
+        println!("  final-step per-layer balance:");
+        print_layer_table(&last.layers);
+    }
+
+    let fin = sess.take_finished();
+    let new_tokens: usize = fin.iter().map(|f| f.tokens.len()).sum();
+    for f in &fin {
+        let toks: Vec<String> =
+            f.tokens.iter().map(usize::to_string).collect();
+        println!(
+            "  seq {} ({}-token prompt) -> {}",
+            f.id,
+            f.prompt_len,
+            toks.join(",")
+        );
+    }
+    println!(
+        "  {} new tokens in {} steps, {:.1} ms ({:.0} ns/token)",
+        new_tokens,
+        stats.len(),
+        dt * 1e3,
+        dt * 1e9 / new_tokens.max(1) as f64
+    );
     Ok(())
 }
 
@@ -796,6 +1017,7 @@ fn cmd_bench_tables(args: &Args) -> Result<()> {
         "BENCH_gemm.json",
         "BENCH_placement.json",
         "BENCH_admission.json",
+        "BENCH_decode.json",
     ];
     let dir = PathBuf::from(args.opt_or("dir", "."));
     let mut md = String::new();

@@ -336,6 +336,19 @@ impl LoadTracker {
     pub fn cv(&self) -> f64 {
         cv(&self.windowed())
     }
+
+    /// The most recently pushed `[E]` load row, or `None` before the
+    /// first push. This is the single-step (n=1 decode) view behind
+    /// [`LayerLoadTracker::last_step`]; the windowed accessors above
+    /// smooth over up to `window` steps.
+    pub fn last_row(&self) -> Option<&[f32]> {
+        if self.len == 0 {
+            return None;
+        }
+        let e = self.n_experts;
+        let idx = (self.head + self.window - 1) % self.window;
+        Some(&self.ring[idx * e..(idx + 1) * e])
+    }
 }
 
 /// One layer's rolling balance snapshot, as reported by
@@ -410,6 +423,28 @@ impl LayerLoadTracker {
                 gini: t.gini(),
                 min_max: t.min_max(),
                 cv: t.cv(),
+            })
+            .collect()
+    }
+
+    /// Balance of every layer computed over the **last pushed step
+    /// only** — the per-decode-step view `lpr generate` / `repro
+    /// decode` print for the paper's n=1 serving regime, where
+    /// [`Self::per_layer`]'s rolling window would smear consecutive
+    /// single-token steps together. Layers that have not recorded a
+    /// step yet report the empty-load conventions (gini 0, min-max 0).
+    pub fn last_step(&self) -> Vec<LayerBalance> {
+        self.layers
+            .iter()
+            .enumerate()
+            .map(|(layer, t)| {
+                let row = t.last_row().unwrap_or(&[]);
+                LayerBalance {
+                    layer,
+                    gini: gini(row),
+                    min_max: min_max_ratio(row),
+                    cv: cv(row),
+                }
             })
             .collect()
     }
@@ -662,6 +697,31 @@ mod tests {
     /// Satellite regression: the incremental column sums (add new row,
     /// subtract evicted row) must track the exact from-the-ring
     /// recompute across thousands of mixed `push`/`push_counts` calls
+    /// The per-step view reads exactly the last pushed row — across
+    /// ring wrap-around — and never mixes steps the way the windowed
+    /// accessors do.
+    #[test]
+    fn last_row_tracks_the_most_recent_step() {
+        let mut t = LoadTracker::new(3, 2);
+        assert_eq!(t.last_row(), None);
+        for step in 0..7u32 {
+            let row = [step as f32, 10.0 + step as f32];
+            t.push(&row);
+            assert_eq!(t.last_row(), Some(&row[..]));
+        }
+        // the layer-resolved view: layer 0 pushed, layer 1 untouched
+        let mut lt = LayerLoadTracker::new(2, 4, 2);
+        lt.push(0, &[3.0, 1.0]);
+        let snap = lt.last_step();
+        assert_eq!(snap.len(), 2);
+        assert!((snap[0].gini - gini(&[3.0, 1.0])).abs() < 1e-12);
+        assert!(
+            (snap[0].min_max - min_max_ratio(&[3.0, 1.0])).abs() < 1e-12
+        );
+        assert_eq!(snap[1].gini, 0.0);
+        assert_eq!(snap[1].min_max, 0.0);
+    }
+
     /// with many evictions — in release builds too, where the
     /// per-read debug assertion is compiled out.
     #[test]

@@ -1,0 +1,294 @@
+//! Multi-head causal self-attention sublayer for the decode subsystem.
+//!
+//! [`AttnBlock`] is the pre-norm attention half of a transformer block:
+//! `h += W_o · attend(RMSNorm(h) · W_q, K, V)` with keys/values appended
+//! to a per-request [`KvCache`](super::cache::KvCache) slot, followed by
+//! the existing MoE block (`h += moe(h)`). No positional encoding is
+//! applied (RoPE is a noted follow-up); position enters only through
+//! the causal mask, which is enough to make decode-time routing
+//! measurable.
+//!
+//! # The decode ≡ prefill bitwise contract
+//!
+//! Decoding token-at-a-time through the cache must produce *bitwise*
+//! the same hidden states as one full-sequence prefill. That holds by
+//! construction because every stage is **row-independent with a fixed
+//! reduction order**:
+//!
+//! - RMSNorm and the Q/K/V/O projections use
+//!   [`rms_norm_rows_into`] / [`matmul_into`], whose per-row
+//!   accumulation order (`k` ascending) does not depend on how many
+//!   rows are in the call;
+//! - the attention scores for the query at absolute position `p` are
+//!   computed over keys `0..=p` in ascending key order, max-folded and
+//!   normalized in that same order, and the value reduction walks keys
+//!   ascending — identical float operations whether the call carries
+//!   one new row (decode) or the whole sequence (prefill).
+//!
+//! So a stacked forward over `[prompt]` followed by `T` single-token
+//! forwards equals one forward over `[prompt + T tokens]`, bit for bit,
+//! per layer — which composes with the MoE stage's own per-token
+//! determinism as long as no token is dropped (capacity bins scale with
+//! batch size, so a dropping configuration is *not* batch-invariant;
+//! see `engine::decode`). Attention always runs on the **caller's
+//! thread**, sequentially, in both backends, so thread-count and
+//! backend invariance are inherited rather than re-proven.
+
+use crate::router::linalg::{matmul_into, rms_norm_rows_into, softmax_rows};
+use crate::util::rng::Rng;
+
+/// Reusable buffers of one attention forward (normed input, Q rows,
+/// per-head scores, context rows, output rows). Lives in
+/// [`ModelForward`](super::ModelForward) so both backends share one
+/// steady-state-allocation-free scratch across layers and calls.
+#[derive(Debug, Clone, Default)]
+pub struct AttnScratch {
+    x: Vec<f32>,
+    q: Vec<f32>,
+    scores: Vec<f32>,
+    ctx: Vec<f32>,
+    out: Vec<f32>,
+}
+
+/// One layer's multi-head causal self-attention parameters: RMSNorm
+/// scale `norm` (`[d]`) and square projections `wq`/`wk`/`wv`/`wo`
+/// (`[d, d]` row-major), split into `n_heads` heads of `d / n_heads`
+/// lanes each.
+#[derive(Debug, Clone)]
+pub struct AttnBlock {
+    n_heads: usize,
+    norm: Vec<f32>,
+    wq: Vec<f32>,
+    wk: Vec<f32>,
+    wv: Vec<f32>,
+    wo: Vec<f32>,
+}
+
+impl AttnBlock {
+    pub fn new(
+        n_heads: usize,
+        norm: Vec<f32>,
+        wq: Vec<f32>,
+        wk: Vec<f32>,
+        wv: Vec<f32>,
+        wo: Vec<f32>,
+    ) -> AttnBlock {
+        let d = norm.len();
+        assert!(n_heads >= 1, "attention needs at least one head");
+        assert!(d >= 1, "norm must be [d]");
+        assert_eq!(
+            d % n_heads,
+            0,
+            "d_model {d} must split evenly into {n_heads} heads"
+        );
+        for (name, w) in
+            [("wq", &wq), ("wk", &wk), ("wv", &wv), ("wo", &wo)]
+        {
+            assert_eq!(w.len(), d * d, "{name} must be [{d}, {d}]");
+        }
+        AttnBlock { n_heads, norm, wq, wk, wv, wo }
+    }
+
+    pub fn d_model(&self) -> usize {
+        self.norm.len()
+    }
+
+    pub fn n_heads(&self) -> usize {
+        self.n_heads
+    }
+
+    /// Run the sublayer over `n` new rows of `h` (`[n, d]`, updated in
+    /// place: `h += attn(norm(h))`), appending the rows' keys/values to
+    /// `k_cache`/`v_cache` — one (slot, layer) pair of buffers already
+    /// holding the sequence's past positions. The caller commits the
+    /// new positions via [`KvCache::advance`](super::cache::KvCache::advance)
+    /// once every layer has appended.
+    pub fn forward(
+        &self,
+        h: &mut [f32],
+        n: usize,
+        k_cache: &mut Vec<f32>,
+        v_cache: &mut Vec<f32>,
+        scratch: &mut AttnScratch,
+    ) {
+        let d = self.d_model();
+        assert_eq!(h.len(), n * d, "h must be [n, d]");
+        assert_eq!(k_cache.len() % d, 0, "k cache must be [past, d]");
+        assert_eq!(k_cache.len(), v_cache.len(), "k/v cache shapes");
+        let past = k_cache.len() / d;
+        let dh = d / self.n_heads;
+        let scale = 1.0 / (dh as f32).sqrt();
+
+        // pre-norm + projections (row-independent: module docs)
+        scratch.x.resize(n * d, 0.0);
+        rms_norm_rows_into(h, &self.norm, &mut scratch.x, n, d);
+        scratch.q.resize(n * d, 0.0);
+        matmul_into(&scratch.x, &self.wq, &mut scratch.q, n, d, d);
+        let off = past * d;
+        k_cache.resize(off + n * d, 0.0);
+        matmul_into(&scratch.x, &self.wk, &mut k_cache[off..], n, d, d);
+        v_cache.resize(off + n * d, 0.0);
+        matmul_into(&scratch.x, &self.wv, &mut v_cache[off..], n, d, d);
+
+        // causal attention: query i (absolute position past + i) over
+        // keys 0..=past+i, ascending — the fixed reduction order the
+        // decode ≡ prefill contract depends on
+        scratch.ctx.resize(n * d, 0.0);
+        for i in 0..n {
+            let p = past + i;
+            for head in 0..self.n_heads {
+                let hs = head * dh;
+                let qv = &scratch.q[i * d + hs..i * d + hs + dh];
+                scratch.scores.clear();
+                for j in 0..=p {
+                    let kv = &k_cache[j * d + hs..j * d + hs + dh];
+                    let mut s = 0.0f32;
+                    for (a, b) in qv.iter().zip(kv) {
+                        s += a * b;
+                    }
+                    scratch.scores.push(s * scale);
+                }
+                softmax_rows(&mut scratch.scores, 1, p + 1);
+                let ctx = &mut scratch.ctx[i * d + hs..i * d + hs + dh];
+                ctx.fill(0.0);
+                for (j, &w) in scratch.scores.iter().enumerate() {
+                    let vv = &v_cache[j * d + hs..j * d + hs + dh];
+                    for (c, &vx) in ctx.iter_mut().zip(vv) {
+                        *c += w * vx;
+                    }
+                }
+            }
+        }
+
+        // output projection, then the residual add in place
+        scratch.out.resize(n * d, 0.0);
+        matmul_into(&scratch.ctx, &self.wo, &mut scratch.out, n, d, d);
+        for (hv, &o) in h.iter_mut().zip(&scratch.out) {
+            *hv += o;
+        }
+    }
+}
+
+/// Deterministic synthetic attention block: unit norm scales and
+/// `1/sqrt(d)`-scaled normal projections, drawn from `rng` in a fixed
+/// field order — the attention sibling of
+/// [`synthetic_stacked_model`](super::synthetic_stacked_model)'s
+/// per-layer init.
+pub fn synthetic_attn(rng: &mut Rng, d: usize, n_heads: usize) -> AttnBlock {
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut normal =
+        |n: usize| -> Vec<f32> {
+            (0..n).map(|_| rng.normal() as f32 * scale).collect()
+        };
+    let wq = normal(d * d);
+    let wk = normal(d * d);
+    let wv = normal(d * d);
+    let wo = normal(d * d);
+    AttnBlock::new(n_heads, vec![1.0; d], wq, wk, wv, wo)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const D: usize = 16;
+    const H: usize = 4;
+
+    fn rand_rows(seed: u64, n: usize) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n * D).map(|_| rng.normal() as f32).collect()
+    }
+
+    fn block(seed: u64) -> AttnBlock {
+        synthetic_attn(&mut Rng::new(seed), D, H)
+    }
+
+    #[test]
+    fn forward_is_causal() {
+        // perturbing the last token must not move any earlier row
+        let attn = block(3);
+        let t = 6;
+        let h0 = rand_rows(11, t);
+        let mut h1 = h0.clone();
+        for v in &mut h1[(t - 1) * D..] {
+            *v += 1.0;
+        }
+        let (mut a, mut b) = (h0.clone(), h1.clone());
+        let mut s = AttnScratch::default();
+        let (mut k0, mut v0) = (Vec::new(), Vec::new());
+        attn.forward(&mut a, t, &mut k0, &mut v0, &mut s);
+        let (mut k1, mut v1) = (Vec::new(), Vec::new());
+        attn.forward(&mut b, t, &mut k1, &mut v1, &mut s);
+        assert_eq!(
+            &a[..(t - 1) * D],
+            &b[..(t - 1) * D],
+            "future tokens leaked into the past"
+        );
+        assert_ne!(&a[(t - 1) * D..], &b[(t - 1) * D..]);
+        // and the sublayer actually did something
+        assert_ne!(a, h0);
+    }
+
+    #[test]
+    fn cached_decode_is_bitwise_prefill() {
+        let attn = block(7);
+        let t = 9;
+        let h = rand_rows(13, t);
+        // prefill: all rows in one call
+        let mut pre = h.clone();
+        let mut s = AttnScratch::default();
+        let (mut kp, mut vp) = (Vec::new(), Vec::new());
+        attn.forward(&mut pre, t, &mut kp, &mut vp, &mut s);
+        // decode: one row at a time through a growing cache
+        let (mut kd, mut vd) = (Vec::new(), Vec::new());
+        let mut dec = Vec::new();
+        for i in 0..t {
+            let mut row = h[i * D..(i + 1) * D].to_vec();
+            attn.forward(&mut row, 1, &mut kd, &mut vd, &mut s);
+            dec.extend_from_slice(&row);
+        }
+        assert_eq!(dec, pre, "decode-with-cache diverged from prefill");
+        assert_eq!(kd, kp);
+        assert_eq!(vd, vp);
+        // ragged splits too: [0..4) then [4..t)
+        let (mut kr, mut vr) = (Vec::new(), Vec::new());
+        let mut rag = h.clone();
+        let (head, tail) = rag.split_at_mut(4 * D);
+        attn.forward(head, 4, &mut kr, &mut vr, &mut s);
+        attn.forward(tail, t - 4, &mut kr, &mut vr, &mut s);
+        assert_eq!(rag, pre);
+    }
+
+    #[test]
+    fn synthetic_is_deterministic_in_the_seed() {
+        let a = block(5);
+        let b = block(5);
+        let c = block(6);
+        let mut s = AttnScratch::default();
+        let h = rand_rows(1, 3);
+        let (mut ha, mut hb, mut hc) = (h.clone(), h.clone(), h);
+        let (mut k, mut v) = (Vec::new(), Vec::new());
+        a.forward(&mut ha, 3, &mut k, &mut v, &mut s);
+        let (mut k, mut v) = (Vec::new(), Vec::new());
+        b.forward(&mut hb, 3, &mut k, &mut v, &mut s);
+        let (mut k, mut v) = (Vec::new(), Vec::new());
+        c.forward(&mut hc, 3, &mut k, &mut v, &mut s);
+        assert_eq!(ha, hb);
+        assert_ne!(ha, hc);
+        assert_eq!(a.d_model(), D);
+        assert_eq!(a.n_heads(), H);
+    }
+
+    #[test]
+    #[should_panic(expected = "split evenly")]
+    fn ragged_heads_are_rejected() {
+        AttnBlock::new(
+            3,
+            vec![1.0; D],
+            vec![0.0; D * D],
+            vec![0.0; D * D],
+            vec![0.0; D * D],
+            vec![0.0; D * D],
+        );
+    }
+}

@@ -32,6 +32,8 @@
 //! path end-to-end.
 
 use anyhow::{bail, ensure, Context, Result};
+use std::collections::HashSet;
+use std::fmt;
 use std::path::Path;
 
 use crate::coordinator::checkpoint::{self, Checkpoint};
@@ -43,7 +45,8 @@ use crate::runtime::ArtifactMeta;
 use crate::util::json::{obj, Json};
 use crate::util::rng::Rng;
 
-use super::{MoeLayer, StackedModel};
+use super::attention::AttnBlock;
+use super::{DecoderModel, MoeLayer, StackedModel};
 
 /// Last `['name']` segment of a pytree key string
 /// (`"['layers'][0]['moe']['router']['proto_mu']"` → `proto_mu`).
@@ -66,6 +69,11 @@ fn moe_leaf_path(l: usize, name: &str) -> String {
 
 fn router_leaf_path(l: usize, name: &str) -> String {
     format!("['layers'][{l}]['moe']['router']['{name}']")
+}
+
+/// Full pytree path of layer `l`'s attention-sublayer leaf `name`.
+fn attn_leaf_path(l: usize, name: &str) -> String {
+    format!("['layers'][{l}]['attn']['{name}']")
 }
 
 /// Index of the param leaf at exactly `path`.
@@ -280,6 +288,235 @@ pub fn model_from_files(
 }
 
 // ---------------------------------------------------------------------
+// Load accounting + the decode-capable (attention / embed / norm) bridge
+// ---------------------------------------------------------------------
+
+/// What a bridge load actually read from the checkpoint: every param
+/// leaf is either consumed into the built model or listed in
+/// `skipped` — nothing is silently ignored. A decoder load of a
+/// decoder checkpoint skips nothing; an MoE-only load of the same file
+/// reports the attention / embed / norm leaves it left behind, and a
+/// leaf no loader recognizes (junk, renamed, future format) always
+/// surfaces here instead of vanishing.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct LoadSummary {
+    /// Param leaves consumed into the model.
+    pub consumed: usize,
+    /// Pytree paths of the leaves this load did not read, in
+    /// checkpoint order.
+    pub skipped: Vec<String>,
+}
+
+impl fmt::Display for LoadSummary {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.skipped.is_empty() {
+            write!(f, "consumed all {} param leaves", self.consumed)
+        } else {
+            write!(
+                f,
+                "consumed {}/{} param leaves; skipped: {}",
+                self.consumed,
+                self.consumed + self.skipped.len(),
+                self.skipped.join(", ")
+            )
+        }
+    }
+}
+
+/// Diff `meta.params` against the paths a load consumed.
+fn summarize(meta: &ArtifactMeta, consumed: &[String]) -> LoadSummary {
+    let set: HashSet<&str> = consumed.iter().map(|s| s.as_str()).collect();
+    let skipped: Vec<String> = meta
+        .params
+        .iter()
+        .filter(|s| !set.contains(s.path.as_str()))
+        .map(|s| s.path.clone())
+        .collect();
+    LoadSummary { consumed: meta.params.len() - skipped.len(), skipped }
+}
+
+/// Every path [`model_from_state`] reads (MoE-only: per-layer router
+/// leaves, `w1`/`w2`, and `w3` where present).
+fn moe_consumed_paths(meta: &ArtifactMeta) -> Result<Vec<String>> {
+    let mut v = Vec::new();
+    for l in 0..meta.config.n_layers {
+        for spec in &meta.router_params {
+            v.push(router_leaf_path(l, leaf_name(&spec.path)?));
+        }
+        v.push(moe_leaf_path(l, "w1"));
+        v.push(moe_leaf_path(l, "w2"));
+        let w3 = moe_leaf_path(l, "w3");
+        if meta.params.iter().any(|s| s.path == w3) {
+            v.push(w3);
+        }
+    }
+    Ok(v)
+}
+
+/// [`model_from_state`] plus the [`LoadSummary`] accounting of what the
+/// MoE-only load left behind.
+pub fn model_from_state_summary(
+    meta: &ArtifactMeta,
+    buffers: &[Vec<f32>],
+) -> Result<(StackedModel, LoadSummary)> {
+    let model = model_from_state(meta, buffers)?;
+    Ok((model, summarize(meta, &moe_consumed_paths(meta)?)))
+}
+
+/// Layer `ℓ`'s attention sublayer, when the checkpoint carries one.
+/// Attention leaves are **all-or-nothing per layer**: a
+/// `['layers'][ℓ]['attn']['norm']` leaf commits the layer to `wq`,
+/// `wk`, `wv`, `wo` too (a partial sublayer is a corrupt checkpoint,
+/// not a loadable one); no `norm` leaf means the layer has no
+/// attention sublayer and loads exactly as the MoE-only bridge does.
+///
+/// The `wq` leaf is `[H, d, d/H]` — `n_heads` is recovered from its
+/// leading dim, the same shape-borne convention as the router's
+/// cross-attention `wq` — stored as `H` head-major `[d, dh]` blocks
+/// and repacked here into the row-major `[d, d]` (head-split along
+/// columns) layout [`AttnBlock`] multiplies with. The repack is a pure
+/// permutation, so it preserves bits. `wk`/`wv`/`wo` are plain
+/// `[d, d]`.
+pub fn attn_for_layer(
+    meta: &ArtifactMeta,
+    buffers: &[Vec<f32>],
+    layer: usize,
+) -> Result<Option<AttnBlock>> {
+    let d = meta.config.d_model;
+    let norm_path = attn_leaf_path(layer, "norm");
+    if !meta.params.iter().any(|s| s.path == norm_path) {
+        return Ok(None);
+    }
+    let norm_spec = &meta.params[find_leaf(meta, &norm_path)?];
+    ensure!(
+        norm_spec.shape == vec![d],
+        "attn norm leaf {norm_path} has shape {:?}, want [{d}]",
+        norm_spec.shape
+    );
+    let wq_path = attn_leaf_path(layer, "wq");
+    let wq_spec = &meta.params[find_leaf(meta, &wq_path)?];
+    ensure!(
+        wq_spec.shape.len() == 3
+            && wq_spec.shape[1] == d
+            && wq_spec.shape[0] * wq_spec.shape[2] == d,
+        "attn wq leaf {wq_path} has shape {:?}, want [H, {d}, {d}/H]",
+        wq_spec.shape
+    );
+    let (heads, dh) = (wq_spec.shape[0], wq_spec.shape[2]);
+    let wq_raw = leaf_buf(meta, buffers, &wq_path)?;
+    let mut wq = vec![0.0f32; d * d];
+    for h in 0..heads {
+        for r in 0..d {
+            wq[r * d + h * dh..r * d + (h + 1) * dh]
+                .copy_from_slice(&wq_raw[(h * d + r) * dh..(h * d + r + 1) * dh]);
+        }
+    }
+    let square = |name: &str| -> Result<Vec<f32>> {
+        let path = attn_leaf_path(layer, name);
+        let spec = &meta.params[find_leaf(meta, &path)?];
+        ensure!(
+            spec.shape == vec![d, d],
+            "attn {name} leaf {path} has shape {:?}, want [{d}, {d}]",
+            spec.shape
+        );
+        Ok(leaf_buf(meta, buffers, &path)?.clone())
+    };
+    let (wk, wv, wo) = (square("wk")?, square("wv")?, square("wo")?);
+    let norm = leaf_buf(meta, buffers, &norm_path)?.clone();
+    Ok(Some(AttnBlock::new(heads, norm, wq, wk, wv, wo)))
+}
+
+/// Build the decode-capable model from host state buffers: the MoE
+/// stack of [`model_from_state`], plus per-layer attention sublayers
+/// ([`attn_for_layer`]) and the `['embed']` / `['final_norm']` leaves
+/// that make up the greedy [`DecodeHead`](super::DecodeHead).
+/// Checkpoints without attention leaves load as attention-less stacks
+/// that serve bit-identically to the MoE-only bridge.
+pub fn decoder_from_state(
+    meta: &ArtifactMeta,
+    buffers: &[Vec<f32>],
+) -> Result<(DecoderModel, LoadSummary)> {
+    ensure!(
+        buffers.len() == meta.n_params || buffers.len() == meta.n_state,
+        "state has {} buffers; meta '{}' wants {} (params) or {} \
+         (params + Adam moments)",
+        buffers.len(),
+        meta.name,
+        meta.n_params,
+        meta.n_state
+    );
+    let params = &buffers[..meta.n_params];
+    let cfg = router_config_from_meta(meta)?;
+    let d = meta.config.d_model;
+    let mut consumed = moe_consumed_paths(meta)?;
+    let mut layers = Vec::with_capacity(meta.config.n_layers);
+    for l in 0..meta.config.n_layers {
+        let rp = router_params_for_layer(meta, params, l)
+            .with_context(|| format!("layer {l} router"))?;
+        let bank = expert_bank_for_layer(meta, params, l)
+            .with_context(|| format!("layer {l} experts"))?;
+        let attn = attn_for_layer(meta, params, l)
+            .with_context(|| format!("layer {l} attention"))?;
+        if attn.is_some() {
+            for name in ["norm", "wq", "wk", "wv", "wo"] {
+                consumed.push(attn_leaf_path(l, name));
+            }
+        }
+        layers.push(MoeLayer::with_attn(
+            RouterPlan::new(cfg.clone(), &rp),
+            bank,
+            attn,
+        ));
+    }
+    let embed_path = "['embed']";
+    let embed_spec = &meta.params[find_leaf(meta, embed_path)?];
+    ensure!(
+        embed_spec.shape.len() == 2 && embed_spec.shape[1] == d,
+        "embed leaf has shape {:?}, want [vocab, {d}]",
+        embed_spec.shape
+    );
+    let embed = leaf_buf(meta, params, embed_path)?.clone();
+    let norm_path = "['final_norm']";
+    let norm_spec = &meta.params[find_leaf(meta, norm_path)?];
+    ensure!(
+        norm_spec.shape == vec![d],
+        "final_norm leaf has shape {:?}, want [{d}]",
+        norm_spec.shape
+    );
+    let final_norm = leaf_buf(meta, params, norm_path)?.clone();
+    consumed.push(embed_path.to_string());
+    consumed.push(norm_path.to_string());
+    let model =
+        DecoderModel::new(StackedModel::new(layers), embed, final_norm);
+    let summary = summarize(meta, &consumed);
+    Ok((model, summary))
+}
+
+/// [`decoder_from_state`] for a loaded checkpoint; rejects checkpoints
+/// saved for a different artifact.
+pub fn decoder_from_checkpoint(
+    meta: &ArtifactMeta,
+    ck: &Checkpoint,
+) -> Result<(DecoderModel, LoadSummary)> {
+    ck.expect_artifact(&meta.name)?;
+    decoder_from_state(meta, &ck.buffers)
+}
+
+/// One-call CLI path for `lpr generate --ckpt`: meta + checkpoint file
+/// → the decode-capable model and its load accounting.
+pub fn decoder_from_files(
+    art_dir: &Path,
+    preset: &str,
+    ckpt: &Path,
+) -> Result<(ArtifactMeta, DecoderModel, LoadSummary)> {
+    let meta = ArtifactMeta::load(art_dir, preset)?;
+    let ck = checkpoint::load(ckpt)
+        .with_context(|| format!("load checkpoint {}", ckpt.display()))?;
+    let (model, summary) = decoder_from_checkpoint(&meta, &ck)?;
+    Ok((meta, model, summary))
+}
+
+// ---------------------------------------------------------------------
 // Synthesized checkpoint artifacts (tests + offline demos)
 // ---------------------------------------------------------------------
 
@@ -311,6 +548,62 @@ pub fn synth_checkpoint_artifact(
     k: usize,
     d_ff: usize,
     seed: u64,
+) -> Result<(ArtifactMeta, Vec<Vec<f32>>)> {
+    synth_artifact_impl(name, metric, n_layers, d, dz, e, k, d_ff, seed, None)
+}
+
+/// [`synth_checkpoint_artifact`] plus per-layer attention sublayers:
+/// each layer additionally carries `['attn']['norm'|'wq'|'wk'|'wv'|'wo']`
+/// leaves (`wq` in the `[H, d, d/H]` head-major layout
+/// [`attn_for_layer`] repacks), making the artifact loadable through
+/// [`decoder_from_state`] as a full decode stack. `d` must split
+/// evenly into `n_heads`. The attention-less
+/// [`synth_checkpoint_artifact`] is byte-for-byte what it always was —
+/// the two share one generator, and the attention draws only happen
+/// when requested.
+#[allow(clippy::too_many_arguments)]
+pub fn synth_decoder_artifact(
+    name: &str,
+    metric: &str,
+    n_layers: usize,
+    d: usize,
+    dz: usize,
+    e: usize,
+    k: usize,
+    d_ff: usize,
+    n_heads: usize,
+    seed: u64,
+) -> Result<(ArtifactMeta, Vec<Vec<f32>>)> {
+    assert!(
+        n_heads >= 1 && d % n_heads == 0,
+        "d_model {d} must split evenly into {n_heads} heads"
+    );
+    synth_artifact_impl(
+        name,
+        metric,
+        n_layers,
+        d,
+        dz,
+        e,
+        k,
+        d_ff,
+        seed,
+        Some(n_heads),
+    )
+}
+
+#[allow(clippy::too_many_arguments)]
+fn synth_artifact_impl(
+    name: &str,
+    metric: &str,
+    n_layers: usize,
+    d: usize,
+    dz: usize,
+    e: usize,
+    k: usize,
+    d_ff: usize,
+    seed: u64,
+    attn_heads: Option<usize>,
 ) -> Result<(ArtifactMeta, Vec<Vec<f32>>)> {
     assert!(n_layers >= 1 && d >= 1 && dz >= 1 && e >= 1 && d_ff >= 1);
     let heads = 4usize;
@@ -346,6 +639,23 @@ pub fn synth_checkpoint_artifact(
         router_template.push(("wk", vec![heads, dz, dh]));
     }
     for l in 0..n_layers {
+        if let Some(h) = attn_heads {
+            let adh = d / h;
+            let scale = 1.0 / (d as f32).sqrt();
+            leaves.push((attn_leaf_path(l, "norm"), vec![d], vec![1.0; d]));
+            leaves.push((
+                attn_leaf_path(l, "wq"),
+                vec![h, d, adh],
+                normal(d * d, scale),
+            ));
+            for nm in ["wk", "wv", "wo"] {
+                leaves.push((
+                    attn_leaf_path(l, nm),
+                    vec![d, d],
+                    normal(d * d, scale),
+                ));
+            }
+        }
         for (rname, shape) in &router_template {
             let numel: usize = shape.iter().product();
             let buf = match *rname {
@@ -667,6 +977,119 @@ mod tests {
                 assert_eq!(got.layers[l].plan, want.layers[l].plan);
             }
         }
+    }
+
+    /// Satellite: nothing is silently ignored. An MoE-only load
+    /// reports the embed / final-norm leaves it leaves behind, and a
+    /// junk leaf no loader recognizes surfaces in the summary instead
+    /// of vanishing.
+    #[test]
+    fn load_summary_reports_skipped_and_junk_leaves() {
+        use crate::runtime::LeafSpec;
+        let (mut meta, state) = synth_checkpoint_artifact(
+            "m", "cosine", 2, 16, 8, 4, 2, 8, 3,
+        )
+        .unwrap();
+        let mut bufs = state[..meta.n_params].to_vec();
+        meta.params.push(LeafSpec {
+            path: "['junk']".to_string(),
+            shape: vec![5],
+            dtype: "float32".to_string(),
+        });
+        meta.n_params += 1;
+        meta.n_state = 3 * meta.n_params;
+        bufs.push(vec![0.5; 5]);
+
+        let (model, summary) =
+            model_from_state_summary(&meta, &bufs).unwrap();
+        assert_eq!(model.n_layers(), 2);
+        assert_eq!(
+            summary.skipped,
+            vec![
+                "['embed']".to_string(),
+                "['final_norm']".to_string(),
+                "['junk']".to_string(),
+            ]
+        );
+        assert_eq!(summary.consumed, meta.params.len() - 3);
+        let line = summary.to_string();
+        assert!(line.contains("['junk']"), "{line}");
+
+        // the decoder load consumes embed/final_norm but still flags
+        // the junk leaf
+        let (_, dsum) = decoder_from_state(&meta, &bufs).unwrap();
+        assert_eq!(dsum.skipped, vec!["['junk']".to_string()]);
+    }
+
+    /// A decoder artifact (attention + embed + final-norm leaves)
+    /// round-trips through a checkpoint file into a decode-capable
+    /// model with nothing skipped, and the head-count survives via the
+    /// `wq` leaf shape.
+    #[test]
+    fn decoder_artifact_loads_with_attention_and_head() {
+        let (meta, state) = synth_decoder_artifact(
+            "dec", "cosine", 2, 16, 8, 4, 2, 8, 4, 31,
+        )
+        .unwrap();
+        let dir = temp_dir("dec");
+        let path = dir.join("dec.ckpt");
+        checkpoint::save(&path, "dec", 5, &state).unwrap();
+        let ck = checkpoint::load(&path).unwrap();
+        let (dec, summary) = decoder_from_checkpoint(&meta, &ck).unwrap();
+        assert!(summary.skipped.is_empty(), "{summary}");
+        assert_eq!(summary.consumed, meta.params.len());
+        assert!(dec.model().has_attn());
+        assert_eq!(dec.model().layer(0).attn.as_ref().unwrap().n_heads(), 4);
+        assert_eq!(dec.head().vocab(), 32);
+        assert_eq!(dec.head().d_model(), 16);
+    }
+
+    /// Checkpoints without attention leaves load through the decoder
+    /// bridge as attention-less stacks that serve **bit-identically**
+    /// to the MoE-only bridge — the backward-compatibility half of the
+    /// tentpole contract.
+    #[test]
+    fn attention_less_decoder_load_matches_moe_only_bridge() {
+        let (meta, state) = synth_checkpoint_artifact(
+            "m", "cosine", 2, 16, 8, 4, 2, 8, 19,
+        )
+        .unwrap();
+        let moe_model = model_from_state(&meta, &state).unwrap();
+        let (dec, _) = decoder_from_state(&meta, &state).unwrap();
+        assert!(!dec.model().has_attn());
+        let h = rand_vec(&mut Rng::new(5), 7 * 16);
+        let mut a = ModelEngine::new(moe_model, 2);
+        let mut b = ModelEngine::new(dec.into_parts().0, 2);
+        let (mut fa, mut fb) = (ModelForward::new(), ModelForward::new());
+        a.forward(&h, 1.25, OverflowPolicy::Drop, &mut fa);
+        b.forward(&h, 1.25, OverflowPolicy::Drop, &mut fb);
+        assert_eq!(fa.hidden, fb.hidden);
+    }
+
+    /// A partial attention sublayer (norm present, projections missing)
+    /// is a load error, not a silently attention-less layer.
+    #[test]
+    fn partial_attention_sublayer_is_rejected() {
+        let (mut meta, state) = synth_decoder_artifact(
+            "dec", "cosine", 1, 16, 8, 4, 2, 8, 4, 2,
+        )
+        .unwrap();
+        let wq_path = attn_leaf_path(0, "wq");
+        let keep: Vec<usize> = meta
+            .params
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.path != wq_path)
+            .map(|(i, _)| i)
+            .collect();
+        let bufs: Vec<Vec<f32>> =
+            keep.iter().map(|&i| state[i].clone()).collect();
+        meta.params =
+            keep.iter().map(|&i| meta.params[i].clone()).collect();
+        meta.n_params = meta.params.len();
+        meta.n_state = 3 * meta.n_params;
+        let err = decoder_from_state(&meta, &bufs).unwrap_err();
+        assert!(format!("{err:#}").contains("attn"), "{err:#}");
     }
 
     #[test]

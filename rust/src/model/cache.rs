@@ -1,0 +1,294 @@
+//! Per-request KV cache for the autoregressive decode path.
+//!
+//! A [`KvCache`] owns a fixed number of **slots**, one per in-flight
+//! request. Each slot holds, per model layer, the key and value rows of
+//! every token the request has pushed through the stack so far — the
+//! state that makes token-at-a-time decode O(T) per step instead of
+//! O(T²) re-prefill. Slots are recycled through a free list:
+//! [`KvCache::alloc`] hands out the lowest free slot, [`KvCache::free`]
+//! resets it and returns it to the pool, so a long-running
+//! [`DecodeSession`](crate::engine::decode::DecodeSession) serves an
+//! unbounded request stream with bounded memory.
+//!
+//! # Capacity bound
+//!
+//! Every slot is bounded by `max_seq` positions. The bound is enforced
+//! *before* a forward touches the cache — [`KvCache::check_capacity`]
+//! returns the typed [`CacheError::Overflow`] — so an over-long request
+//! is refused at submission instead of corrupting a mid-stack append.
+//!
+//! # Layout
+//!
+//! Slot `s`, layer `l` keeps two row-major `[t, d_model]` buffers
+//! (`t` = tokens cached so far). Appends happen inside
+//! [`AttnBlock::forward`](super::attention::AttnBlock::forward), one
+//! layer at a time during a stacked forward; the per-slot length is
+//! advanced once per forward by [`KvCache::advance`] after every layer
+//! has appended. Buffers keep their allocation across [`KvCache::reset`]
+//! so steady-state decode does not allocate.
+
+use std::fmt;
+
+/// One contiguous run of rows in a ragged step batch: `n_tokens` new
+/// positions for the request holding cache slot `slot`. The rows of a
+/// `[N, d]` batch are consumed span by span, in span order — span `i`'s
+/// rows start where span `i-1`'s ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SeqSpan {
+    /// Cache slot of the sequence these rows extend.
+    pub slot: usize,
+    /// New positions in this forward (1 for a decode step, the prompt
+    /// length for a prefill).
+    pub n_tokens: usize,
+}
+
+/// Typed cache failures. `Overflow` is the per-slot `max_seq` bound;
+/// `NoFreeSlot` means every slot is held by an in-flight request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheError {
+    /// `len + add` would exceed the slot's `max_seq` bound.
+    Overflow { slot: usize, len: usize, add: usize, max_seq: usize },
+    /// All slots are allocated.
+    NoFreeSlot { n_slots: usize },
+}
+
+impl fmt::Display for CacheError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            CacheError::Overflow { slot, len, add, max_seq } => write!(
+                f,
+                "kv cache slot {slot} holds {len} positions; appending \
+                 {add} exceeds the max_seq bound of {max_seq}"
+            ),
+            CacheError::NoFreeSlot { n_slots } => write!(
+                f,
+                "all {n_slots} kv cache slots are held by in-flight \
+                 requests"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for CacheError {}
+
+/// Slot-pooled per-layer key/value cache (module docs).
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    n_slots: usize,
+    n_layers: usize,
+    d_model: usize,
+    max_seq: usize,
+    /// `[n_slots * n_layers]` key buffers, each row-major `[t, d]`.
+    k: Vec<Vec<f32>>,
+    /// `[n_slots * n_layers]` value buffers, same layout.
+    v: Vec<Vec<f32>>,
+    /// Cached positions per slot (committed by [`Self::advance`]).
+    lens: Vec<usize>,
+    /// Allocation state per slot.
+    live: Vec<bool>,
+}
+
+impl KvCache {
+    /// A cache with `n_slots` request slots for an `n_layers` stack of
+    /// width `d_model`, each slot bounded to `max_seq` positions.
+    pub fn new(
+        n_slots: usize,
+        n_layers: usize,
+        d_model: usize,
+        max_seq: usize,
+    ) -> KvCache {
+        assert!(n_slots >= 1, "a cache needs at least one slot");
+        assert!(n_layers >= 1 && d_model >= 1, "cache shape");
+        assert!(max_seq >= 1, "max_seq must be >= 1");
+        KvCache {
+            n_slots,
+            n_layers,
+            d_model,
+            max_seq,
+            k: vec![Vec::new(); n_slots * n_layers],
+            v: vec![Vec::new(); n_slots * n_layers],
+            lens: vec![0; n_slots],
+            live: vec![false; n_slots],
+        }
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.n_slots
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+
+    pub fn d_model(&self) -> usize {
+        self.d_model
+    }
+
+    /// Per-slot position bound.
+    pub fn max_seq(&self) -> usize {
+        self.max_seq
+    }
+
+    /// Slots currently allocated.
+    pub fn n_live(&self) -> usize {
+        self.live.iter().filter(|&&b| b).count()
+    }
+
+    /// Claim the lowest free slot (reset to length 0).
+    pub fn alloc(&mut self) -> Result<usize, CacheError> {
+        match self.live.iter().position(|&b| !b) {
+            Some(slot) => {
+                self.live[slot] = true;
+                self.reset(slot);
+                Ok(slot)
+            }
+            None => Err(CacheError::NoFreeSlot { n_slots: self.n_slots }),
+        }
+    }
+
+    /// Drop a slot's cached positions, keeping its buffer allocations.
+    pub fn reset(&mut self, slot: usize) {
+        self.lens[slot] = 0;
+        for l in 0..self.n_layers {
+            self.k[slot * self.n_layers + l].clear();
+            self.v[slot * self.n_layers + l].clear();
+        }
+    }
+
+    /// Release a slot back to the free pool (resetting it).
+    pub fn free(&mut self, slot: usize) {
+        assert!(self.live[slot], "freeing a slot that was never allocated");
+        self.reset(slot);
+        self.live[slot] = false;
+    }
+
+    /// Committed positions in `slot`.
+    pub fn len(&self, slot: usize) -> usize {
+        self.lens[slot]
+    }
+
+    /// True when `slot` holds no positions.
+    pub fn is_empty(&self, slot: usize) -> bool {
+        self.lens[slot] == 0
+    }
+
+    /// Refuse an append that would blow the `max_seq` bound — call
+    /// before a forward touches the cache.
+    pub fn check_capacity(
+        &self,
+        slot: usize,
+        add: usize,
+    ) -> Result<(), CacheError> {
+        let len = self.lens[slot];
+        if len + add > self.max_seq {
+            return Err(CacheError::Overflow {
+                slot,
+                len,
+                add,
+                max_seq: self.max_seq,
+            });
+        }
+        Ok(())
+    }
+
+    /// Layer `l`'s key/value buffers of `slot`, for the attention
+    /// forward to read and append to.
+    pub fn layer_mut(
+        &mut self,
+        slot: usize,
+        l: usize,
+    ) -> (&mut Vec<f32>, &mut Vec<f32>) {
+        assert!(l < self.n_layers, "layer {l} out of range");
+        let idx = slot * self.n_layers + l;
+        (&mut self.k[idx], &mut self.v[idx])
+    }
+
+    /// Commit `add` new positions to `slot` after every layer has
+    /// appended its k/v rows for them (debug-checked against the
+    /// per-layer buffer lengths; a layer without an attention sublayer
+    /// never appends and keeps an empty buffer, which is also in sync).
+    pub fn advance(&mut self, slot: usize, add: usize) {
+        self.lens[slot] += add;
+        debug_assert!(
+            (0..self.n_layers).all(|l| {
+                let len = self.k[slot * self.n_layers + l].len();
+                len == self.lens[slot] * self.d_model || len == 0
+            }),
+            "cache advance out of sync with per-layer appends"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slots_recycle_through_the_free_list() {
+        let mut c = KvCache::new(2, 3, 4, 16);
+        let a = c.alloc().unwrap();
+        let b = c.alloc().unwrap();
+        assert_eq!((a, b), (0, 1));
+        assert_eq!(c.n_live(), 2);
+        assert_eq!(
+            c.alloc().unwrap_err(),
+            CacheError::NoFreeSlot { n_slots: 2 }
+        );
+        // freeing the lower slot makes it the next allocation
+        c.free(a);
+        assert_eq!(c.n_live(), 1);
+        assert_eq!(c.alloc().unwrap(), 0);
+    }
+
+    #[test]
+    fn reuse_resets_lengths_and_buffers() {
+        let mut c = KvCache::new(1, 2, 4, 16);
+        let s = c.alloc().unwrap();
+        for l in 0..2 {
+            let (k, v) = c.layer_mut(s, l);
+            k.extend_from_slice(&[1.0; 8]);
+            v.extend_from_slice(&[2.0; 8]);
+        }
+        c.advance(s, 2);
+        assert_eq!(c.len(s), 2);
+        assert!(!c.is_empty(s));
+        c.free(s);
+        let s2 = c.alloc().unwrap();
+        assert_eq!(s2, s);
+        assert_eq!(c.len(s2), 0);
+        assert!(c.is_empty(s2));
+        let (k, v) = c.layer_mut(s2, 0);
+        assert!(k.is_empty() && v.is_empty());
+    }
+
+    #[test]
+    fn capacity_bound_is_a_typed_error() {
+        let mut c = KvCache::new(1, 1, 4, 3);
+        let s = c.alloc().unwrap();
+        assert!(c.check_capacity(s, 3).is_ok());
+        assert_eq!(
+            c.check_capacity(s, 4).unwrap_err(),
+            CacheError::Overflow { slot: 0, len: 0, add: 4, max_seq: 3 }
+        );
+        let (k, v) = c.layer_mut(s, 0);
+        k.extend_from_slice(&[0.0; 8]);
+        v.extend_from_slice(&[0.0; 8]);
+        c.advance(s, 2);
+        assert!(c.check_capacity(s, 1).is_ok());
+        let err = c.check_capacity(s, 2).unwrap_err();
+        assert_eq!(
+            err,
+            CacheError::Overflow { slot: 0, len: 2, add: 2, max_seq: 3 }
+        );
+        assert!(err.to_string().contains("max_seq"), "{err}");
+    }
+
+    #[test]
+    #[should_panic(expected = "never allocated")]
+    fn double_free_panics() {
+        let mut c = KvCache::new(1, 1, 2, 4);
+        let s = c.alloc().unwrap();
+        c.free(s);
+        c.free(s);
+    }
+}

@@ -31,10 +31,13 @@
 //! MoE output added back onto the residual stream, elementwise in token
 //! order. Dropped slots contribute nothing to `combined`, so a dropped
 //! token's row passes through unchanged — exactly the capacity-factor
-//! training semantics (`python/compile/moe.py`). Attention sublayers are
-//! out of scope: this is the *MoE serving* stack, the part whose balance
-//! the paper measures; `combined` per layer stays observable in
-//! [`ModelForward::layers`] for the telemetry.
+//! training semantics (`python/compile/moe.py`). A layer may also carry
+//! a pre-norm causal attention sublayer ([`attention::AttnBlock`]) that
+//! runs *before* its MoE block — `h += attn(norm(h))`, then
+//! `h += moe(h)` — reading and appending per-request keys/values in a
+//! [`cache::KvCache`] slot ([`ModelEngine::forward_seqs`]); `combined`
+//! per layer stays observable in [`ModelForward::layers`] for the
+//! telemetry either way.
 //!
 //! # Determinism
 //!
@@ -51,25 +54,36 @@
 //! `runtime::ArtifactMeta` → [`StackedModel`], no PJRT needed) lives in
 //! [`bridge`].
 
+pub mod attention;
 pub mod bridge;
+pub mod cache;
+
+use attention::{synthetic_attn, AttnBlock, AttnScratch};
+use cache::{KvCache, SeqSpan};
 
 use crate::data::MixtureStream;
 use crate::dispatch::plan::OverflowPolicy;
 use crate::dispatch::{DispatchPlan, DispatchSim};
 use crate::experts::ExpertBank;
 use crate::metrics::{LayerLoadTracker, DEFAULT_LOAD_WINDOW};
+use crate::router::linalg::rms_norm_rows_into;
 use crate::router::{
     synthetic_lpr_router, FullForward, RouterPlan, ServingEngine,
 };
 use crate::util::rng::Rng;
 
-/// One MoE layer of a served model: its compiled router plan and its
-/// expert bank. Construction validates that the two agree on `d_model`
-/// and expert count.
+/// One layer of a served model: its compiled router plan, its expert
+/// bank, and (for decoder stacks) the causal attention sublayer that
+/// precedes the MoE block. Construction validates that the pieces agree
+/// on `d_model` and expert count.
 #[derive(Debug, Clone)]
 pub struct MoeLayer {
     pub plan: RouterPlan,
     pub bank: ExpertBank,
+    /// Pre-norm causal self-attention, run before the MoE block.
+    /// `None` for the MoE-only stacks of PRs 1–9, which serve
+    /// bit-identically to before.
+    pub attn: Option<AttnBlock>,
 }
 
 impl MoeLayer {
@@ -82,7 +96,26 @@ impl MoeLayer {
             plan.cfg.n_experts, bank.n_experts,
             "layer plan/bank expert count mismatch"
         );
-        MoeLayer { plan, bank }
+        MoeLayer { plan, bank, attn: None }
+    }
+
+    /// A layer with an optional attention sublayer in front of the MoE
+    /// block.
+    pub fn with_attn(
+        plan: RouterPlan,
+        bank: ExpertBank,
+        attn: Option<AttnBlock>,
+    ) -> MoeLayer {
+        let mut layer = MoeLayer::new(plan, bank);
+        if let Some(a) = &attn {
+            assert_eq!(
+                a.d_model(),
+                layer.plan.cfg.d_model,
+                "layer attn d_model mismatch"
+            );
+        }
+        layer.attn = attn;
+        layer
     }
 }
 
@@ -134,6 +167,13 @@ impl StackedModel {
     pub fn into_layers(self) -> Vec<MoeLayer> {
         self.layers
     }
+
+    /// True when any layer carries an attention sublayer (i.e. the
+    /// stack is a decoder and plain forwards run through the internal
+    /// prefill cache).
+    pub fn has_attn(&self) -> bool {
+        self.layers.iter().any(|l| l.attn.is_some())
+    }
 }
 
 /// Deterministic synthetic `L`-layer model: one [`synthetic_lpr_router`]
@@ -163,6 +203,158 @@ pub fn synthetic_stacked_model(
     StackedModel::new(layers)
 }
 
+/// The decoder's token head: tied input/output embedding (`[vocab, d]`
+/// row-major) and the final RMSNorm scale (`[d]`). Logits are
+/// `rms_norm(h_last, final_norm) · embed[v]`; greedy decode takes the
+/// argmax with ties broken toward the **lowest** token id, so the next
+/// token is a pure function of the hidden row.
+#[derive(Debug, Clone)]
+pub struct DecodeHead {
+    embed: Vec<f32>,
+    final_norm: Vec<f32>,
+    d_model: usize,
+}
+
+impl DecodeHead {
+    pub fn new(embed: Vec<f32>, final_norm: Vec<f32>) -> DecodeHead {
+        let d = final_norm.len();
+        assert!(d >= 1, "final_norm must be [d]");
+        assert!(
+            !embed.is_empty() && embed.len() % d == 0,
+            "embed must be [vocab, d]"
+        );
+        DecodeHead { embed, final_norm, d_model: d }
+    }
+
+    pub fn d_model(&self) -> usize {
+        self.d_model
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.embed.len() / self.d_model
+    }
+
+    /// Token `tok`'s embedding row — the model input for that token.
+    pub fn embedding(&self, tok: usize) -> &[f32] {
+        let d = self.d_model;
+        &self.embed[tok * d..(tok + 1) * d]
+    }
+
+    /// Fill `out` with the `[len, d]` embedding rows of `toks`.
+    pub fn embed_tokens(&self, toks: &[usize], out: &mut Vec<f32>) {
+        out.clear();
+        for &t in toks {
+            out.extend_from_slice(self.embedding(t));
+        }
+    }
+
+    /// Greedy next token for a final hidden row (`[d]`): argmax over
+    /// the tied-embedding logits, ties → lowest id. `scratch` holds the
+    /// normed row between calls so steady-state decode does not
+    /// allocate.
+    pub fn greedy_next(
+        &self,
+        h_last: &[f32],
+        scratch: &mut Vec<f32>,
+    ) -> usize {
+        let d = self.d_model;
+        assert_eq!(h_last.len(), d, "h_last must be [d]");
+        scratch.resize(d, 0.0);
+        rms_norm_rows_into(h_last, &self.final_norm, scratch, 1, d);
+        let mut best = 0usize;
+        let mut best_score = f32::NEG_INFINITY;
+        for v in 0..self.vocab() {
+            let row = &self.embed[v * d..(v + 1) * d];
+            let mut s = 0.0f32;
+            for (a, b) in scratch.iter().zip(row) {
+                s += a * b;
+            }
+            if s > best_score {
+                best_score = s;
+                best = v;
+            }
+        }
+        best
+    }
+}
+
+/// A decoder: an attention-carrying [`StackedModel`] plus the token
+/// head that turns hidden rows into greedy next tokens. The generation
+/// loop lives in [`crate::engine::decode::DecodeSession`]; this type
+/// just pairs the parts the bridge / synthetic builders produce.
+#[derive(Debug, Clone)]
+pub struct DecoderModel {
+    model: StackedModel,
+    head: DecodeHead,
+}
+
+impl DecoderModel {
+    pub fn new(
+        model: StackedModel,
+        embed: Vec<f32>,
+        final_norm: Vec<f32>,
+    ) -> DecoderModel {
+        assert_eq!(
+            final_norm.len(),
+            model.d_model(),
+            "final_norm width must match the stack"
+        );
+        DecoderModel { model, head: DecodeHead::new(embed, final_norm) }
+    }
+
+    pub fn model(&self) -> &StackedModel {
+        &self.model
+    }
+
+    pub fn head(&self) -> &DecodeHead {
+        &self.head
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.head.vocab()
+    }
+
+    /// Split into the stack (for the engine builder) and the head (for
+    /// the decode session).
+    pub fn into_parts(self) -> (StackedModel, DecodeHead) {
+        (self.model, self.head)
+    }
+}
+
+/// Deterministic synthetic decoder: [`synthetic_stacked_model`]'s
+/// per-layer init plus an attention sublayer per layer (drawn from the
+/// layer's own child stream), a `[vocab, d]` embedding at scale `0.02`,
+/// and a unit final norm. The builder behind `lpr generate` without
+/// `--ckpt`, the decode benches, and the parity tests.
+#[allow(clippy::too_many_arguments)]
+pub fn synthetic_decoder_model(
+    metric: &str,
+    rng: &Rng,
+    n_layers: usize,
+    d: usize,
+    dz: usize,
+    e: usize,
+    k: usize,
+    d_ff: usize,
+    n_heads: usize,
+    vocab: usize,
+) -> DecoderModel {
+    let layers = (0..n_layers)
+        .map(|l| {
+            let mut lr = rng.fold(l as u64);
+            let router = synthetic_lpr_router(metric, &mut lr, d, dz, e, k);
+            let bank = ExpertBank::new(&lr.fold(u64::MAX), e, d, d_ff);
+            let attn =
+                synthetic_attn(&mut lr.fold(u64::MAX - 1), d, n_heads);
+            MoeLayer::with_attn(router.plan().clone(), bank, Some(attn))
+        })
+        .collect();
+    let mut er = rng.fold(u64::MAX);
+    let embed =
+        (0..vocab * d).map(|_| er.normal() as f32 * 0.02).collect();
+    DecoderModel::new(StackedModel::new(layers), embed, vec![1.0; d])
+}
+
 /// Residual-stream update shared by every stack executor: `out[i] =
 /// h[i] + moe[i]`, elementwise in token order. One fixed walk on the
 /// caller's thread, so composing bit-identical layer forwards through
@@ -185,6 +377,8 @@ pub struct ModelForward {
     pub hidden: Vec<f32>,
     /// Current layer's `[N, d]` input (ping-pongs with `hidden`).
     pub(crate) h_cur: Vec<f32>,
+    /// Attention scratch shared by both backends' stack executors.
+    pub(crate) attn_scratch: AttnScratch,
 }
 
 impl ModelForward {
@@ -224,9 +418,18 @@ impl ModelForward {
 pub struct ModelEngine {
     engines: Vec<ServingEngine>,
     banks: Vec<ExpertBank>,
+    /// Per-layer attention sublayers (`None` on MoE-only stacks), run
+    /// on the caller's thread before each layer's MoE block.
+    attn: Vec<Option<AttnBlock>>,
     d_model: usize,
     /// Rolling `[L, E]` routed-load balance over this engine's batches.
     tracker: LayerLoadTracker,
+    /// One-slot scratch cache backing plain [`Self::forward`] on
+    /// attention stacks (the batch is treated as one full-sequence
+    /// prefill, reset every call). `None` on MoE-only stacks, whose
+    /// forward path is byte-for-byte the PR 9 loop. Kept in an `Option`
+    /// so `forward` can temporarily take it while borrowing `self`.
+    prefill: Option<KvCache>,
 }
 
 impl ModelEngine {
@@ -239,19 +442,40 @@ impl ModelEngine {
             .collect();
         let mut engines = Vec::with_capacity(experts.len());
         let mut banks = Vec::with_capacity(experts.len());
+        let mut attn = Vec::with_capacity(experts.len());
         for layer in model.into_layers() {
             engines.push(ServingEngine::new(layer.plan, n_threads));
             banks.push(layer.bank);
+            attn.push(layer.attn);
         }
+        let prefill = if attn.iter().any(Option::is_some) {
+            let mut c = KvCache::new(
+                1,
+                engines.len(),
+                d_model,
+                usize::MAX / 2,
+            );
+            let _ = c.alloc();
+            Some(c)
+        } else {
+            None
+        };
         ModelEngine {
             engines,
             banks,
+            attn,
             d_model,
             tracker: LayerLoadTracker::with_experts(
                 DEFAULT_LOAD_WINDOW,
                 &experts,
             ),
+            prefill,
         }
+    }
+
+    /// True when any layer carries an attention sublayer.
+    pub fn has_attn(&self) -> bool {
+        self.attn.iter().any(Option::is_some)
     }
 
     pub fn n_layers(&self) -> usize {
@@ -310,9 +534,13 @@ impl ModelEngine {
     }
 
     /// Run the full stack over `h` (`[N, d]` row-major): per layer,
-    /// route → plan → expert FFN → combine, then the residual add; the
-    /// final stream lands in `out.hidden`. Bit-identical for every
-    /// thread count (module docs).
+    /// (attention sublayer, if present) → route → plan → expert FFN →
+    /// combine, then the residual add; the final stream lands in
+    /// `out.hidden`. Bit-identical for every thread count (module
+    /// docs). On an attention stack the batch is treated as **one
+    /// sequence** prefilled from position 0 through the internal
+    /// one-slot cache — bitwise equal to decoding the same rows
+    /// token-at-a-time through [`Self::forward_seqs`].
     #[allow(deprecated)] // backend internals compose the legacy layer path
     pub fn forward(
         &mut self,
@@ -322,9 +550,25 @@ impl ModelEngine {
         out: &mut ModelForward,
     ) {
         assert_eq!(h.len() % self.d_model, 0, "h must be [N, d]");
+        if let Some(mut cache) = self.prefill.take() {
+            cache.reset(0);
+            let n = h.len() / self.d_model;
+            let spans = [SeqSpan { slot: 0, n_tokens: n }];
+            let spans = if n == 0 { &[][..] } else { &spans[..] };
+            self.forward_seqs(
+                h,
+                spans,
+                capacity_factor,
+                policy,
+                &mut cache,
+                out,
+            );
+            self.prefill = Some(cache);
+            return;
+        }
         let n_layers = self.engines.len();
         out.ensure_layers(n_layers);
-        let ModelForward { layers, hidden, h_cur } = out;
+        let ModelForward { layers, hidden, h_cur, .. } = out;
         h_cur.clear();
         h_cur.extend_from_slice(h);
         for l in 0..n_layers {
@@ -340,6 +584,79 @@ impl ModelEngine {
             if l + 1 < n_layers {
                 std::mem::swap(&mut *h_cur, &mut *hidden);
             }
+        }
+    }
+
+    /// Run the stack over a **ragged step batch**: `h` is `[N, d]`
+    /// whose rows are the concatenation of `spans` in span order — each
+    /// span extends one cached sequence by `n_tokens` new positions
+    /// (1 for a decode step, the prompt length for a prefill).
+    /// Attention sublayers read each span's past keys/values from (and
+    /// append the new ones to) the span's cache slot, span by span on
+    /// the caller's thread; MoE stages see the whole coalesced batch at
+    /// once. The per-span result is bit-identical however the
+    /// sequence's rows are split across calls (decode ≡ prefill; see
+    /// [`attention`]) and across thread counts — provided the
+    /// capacity factor admits every token, since dispatch bins scale
+    /// with batch size (see `engine::decode`).
+    ///
+    /// Slots must be allocated with room for their spans — sessions
+    /// pre-check with [`KvCache::check_capacity`]; violations panic
+    /// here.
+    #[allow(deprecated)] // backend internals compose the legacy layer path
+    pub fn forward_seqs(
+        &mut self,
+        h: &[f32],
+        spans: &[SeqSpan],
+        capacity_factor: f64,
+        policy: OverflowPolicy,
+        cache: &mut KvCache,
+        out: &mut ModelForward,
+    ) {
+        let d = self.d_model;
+        assert_eq!(h.len() % d, 0, "h must be [N, d]");
+        let n = h.len() / d;
+        let spanned: usize = spans.iter().map(|s| s.n_tokens).sum();
+        assert_eq!(spanned, n, "spans must cover the batch exactly");
+        let n_layers = self.engines.len();
+        assert_eq!(cache.n_layers(), n_layers, "cache depth mismatch");
+        assert_eq!(cache.d_model(), d, "cache width mismatch");
+        for s in spans {
+            assert!(s.n_tokens >= 1, "spans must carry tokens");
+            cache
+                .check_capacity(s.slot, s.n_tokens)
+                .expect("kv capacity must be pre-checked by the caller");
+        }
+        out.ensure_layers(n_layers);
+        let ModelForward { layers, hidden, h_cur, attn_scratch } = out;
+        h_cur.clear();
+        h_cur.extend_from_slice(h);
+        for l in 0..n_layers {
+            if let Some(attn) = &self.attn[l] {
+                let mut off = 0usize;
+                for s in spans {
+                    let rows =
+                        &mut h_cur[off * d..(off + s.n_tokens) * d];
+                    let (k, v) = cache.layer_mut(s.slot, l);
+                    attn.forward(rows, s.n_tokens, k, v, attn_scratch);
+                    off += s.n_tokens;
+                }
+            }
+            self.engines[l].forward_full(
+                &h_cur[..],
+                &self.banks[l],
+                capacity_factor,
+                policy,
+                &mut layers[l],
+            );
+            self.tracker.push(l, &layers[l].batch.load);
+            residual_add(&h_cur[..], &layers[l].combined, hidden);
+            if l + 1 < n_layers {
+                std::mem::swap(&mut *h_cur, &mut *hidden);
+            }
+        }
+        for s in spans {
+            cache.advance(s.slot, s.n_tokens);
         }
     }
 }
@@ -602,6 +919,189 @@ mod tests {
             assert!(lb.gini >= 0.0 && lb.gini <= 1.0);
         }
         assert_eq!(eng.last().n_tokens(), 32);
+    }
+
+    const H: usize = 4;
+    const V: usize = 32;
+
+    fn tiny_decoder(n_layers: usize) -> DecoderModel {
+        synthetic_decoder_model(
+            "cosine",
+            &Rng::new(5),
+            n_layers,
+            D,
+            DZ,
+            E,
+            K,
+            FF,
+            H,
+            V,
+        )
+    }
+
+    /// Tentpole contract at the engine level: a full-sequence prefill
+    /// through plain `forward` equals token-at-a-time decode through an
+    /// external cache, bitwise, and a ragged prompt+decode split lands
+    /// on the same rows. Capacity factor E admits every token — the
+    /// contract's precondition, since bins scale with batch size.
+    #[test]
+    fn attn_stack_decode_matches_prefill() {
+        let (model, _head) = tiny_decoder(3).into_parts();
+        assert!(model.has_attn());
+        let cf = E as f64; // cannot drop
+        let t = 6;
+        let h = rand_vec(&mut Rng::new(1), t * D);
+        let mut eng = ModelEngine::new(model.clone(), 2);
+        let mut pre = ModelForward::new();
+        eng.forward(&h, cf, OverflowPolicy::Drop, &mut pre);
+        let want = pre.hidden.clone();
+        // plain forward resets its internal prefill slot per call
+        eng.forward(&h, cf, OverflowPolicy::Drop, &mut pre);
+        assert_eq!(pre.hidden, want);
+
+        // token-at-a-time through an external cache
+        let mut dec = ModelEngine::new(model.clone(), 2);
+        let mut cache = KvCache::new(1, 3, D, t);
+        let slot = cache.alloc().unwrap();
+        let mut out = ModelForward::new();
+        let mut got = Vec::new();
+        for i in 0..t {
+            let spans = [SeqSpan { slot, n_tokens: 1 }];
+            dec.forward_seqs(
+                &h[i * D..(i + 1) * D],
+                &spans,
+                cf,
+                OverflowPolicy::Drop,
+                &mut cache,
+                &mut out,
+            );
+            got.extend_from_slice(&out.hidden);
+        }
+        assert_eq!(got, want, "decode diverged from prefill");
+        assert_eq!(cache.len(slot), t);
+
+        // ragged: 4-token prompt prefill, then single-token steps
+        let mut rag = ModelEngine::new(model, 2);
+        cache.reset(slot);
+        let mut rows = Vec::new();
+        rag.forward_seqs(
+            &h[..4 * D],
+            &[SeqSpan { slot, n_tokens: 4 }],
+            cf,
+            OverflowPolicy::Drop,
+            &mut cache,
+            &mut out,
+        );
+        rows.extend_from_slice(&out.hidden);
+        for i in 4..t {
+            rag.forward_seqs(
+                &h[i * D..(i + 1) * D],
+                &[SeqSpan { slot, n_tokens: 1 }],
+                cf,
+                OverflowPolicy::Drop,
+                &mut cache,
+                &mut out,
+            );
+            rows.extend_from_slice(&out.hidden);
+        }
+        assert_eq!(rows, want, "ragged prefill+decode diverged");
+    }
+
+    /// Two sequences interleaved in one ragged step batch produce the
+    /// same rows as each sequence decoded alone — span order feeds the
+    /// cache per slot, and with no drops the MoE stage is row-
+    /// independent.
+    #[test]
+    fn coalesced_spans_match_isolated_sequences() {
+        let (model, _head) = tiny_decoder(2).into_parts();
+        let cf = E as f64;
+        let t = 4;
+        let ha = rand_vec(&mut Rng::new(2), t * D);
+        let hb = rand_vec(&mut Rng::new(3), t * D);
+        // isolated references
+        let mut solo = Vec::new();
+        for h in [&ha, &hb] {
+            let mut eng = ModelEngine::new(model.clone(), 1);
+            let mut out = ModelForward::new();
+            eng.forward(h, cf, OverflowPolicy::Drop, &mut out);
+            solo.push(out.hidden.clone());
+        }
+        // coalesced: both sequences advance one token per step
+        let mut eng = ModelEngine::new(model, 1);
+        let mut cache = KvCache::new(2, 2, D, t);
+        let (sa, sb) = (cache.alloc().unwrap(), cache.alloc().unwrap());
+        let mut out = ModelForward::new();
+        let (mut got_a, mut got_b) = (Vec::new(), Vec::new());
+        let mut step = Vec::new();
+        for i in 0..t {
+            step.clear();
+            step.extend_from_slice(&ha[i * D..(i + 1) * D]);
+            step.extend_from_slice(&hb[i * D..(i + 1) * D]);
+            let spans = [
+                SeqSpan { slot: sa, n_tokens: 1 },
+                SeqSpan { slot: sb, n_tokens: 1 },
+            ];
+            eng.forward_seqs(
+                &step,
+                &spans,
+                cf,
+                OverflowPolicy::Drop,
+                &mut cache,
+                &mut out,
+            );
+            got_a.extend_from_slice(&out.hidden[..D]);
+            got_b.extend_from_slice(&out.hidden[D..]);
+        }
+        assert_eq!(got_a, solo[0], "sequence A moved by its batchmate");
+        assert_eq!(got_b, solo[1], "sequence B moved by its batchmate");
+    }
+
+    #[test]
+    fn greedy_head_is_argmax_with_low_tie() {
+        #[rustfmt::skip]
+        let head = DecodeHead::new(
+            vec![1.0, 0.0,
+                 0.0, 1.0,
+                 1.0, 0.0],
+            vec![1.0, 1.0],
+        );
+        assert_eq!(head.vocab(), 3);
+        assert_eq!(head.d_model(), 2);
+        let mut scratch = Vec::new();
+        // rows 0 and 2 tie on a dim-0 hidden → lowest id wins
+        assert_eq!(head.greedy_next(&[2.0, 0.0], &mut scratch), 0);
+        assert_eq!(head.greedy_next(&[0.0, 2.0], &mut scratch), 1);
+        let mut h = Vec::new();
+        head.embed_tokens(&[2, 1], &mut h);
+        assert_eq!(h, vec![1.0, 0.0, 0.0, 1.0]);
+        assert_eq!(head.embedding(1), &[0.0, 1.0]);
+    }
+
+    #[test]
+    fn moe_only_forward_seqs_matches_forward() {
+        // an attention-less stack through the seqs path: cache is a
+        // pass-through and rows equal the plain forward
+        let model = tiny_model(2);
+        let cf = E as f64;
+        let h = rand_vec(&mut Rng::new(4), 5 * D);
+        let mut eng = ModelEngine::new(model.clone(), 1);
+        assert!(!eng.has_attn());
+        let mut want = ModelForward::new();
+        eng.forward(&h, cf, OverflowPolicy::Drop, &mut want);
+        let mut cache = KvCache::new(1, 2, D, 8);
+        let slot = cache.alloc().unwrap();
+        let mut out = ModelForward::new();
+        let mut eng2 = ModelEngine::new(model, 1);
+        eng2.forward_seqs(
+            &h,
+            &[SeqSpan { slot, n_tokens: 5 }],
+            cf,
+            OverflowPolicy::Drop,
+            &mut cache,
+            &mut out,
+        );
+        assert_eq!(out.hidden, want.hidden);
+        assert_eq!(cache.len(slot), 5);
     }
 
     #[test]

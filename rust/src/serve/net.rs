@@ -26,9 +26,12 @@
 //! response (a split or half-written frame cannot be resynced).
 //!
 //! Connections serve requests sequentially (one in flight per
-//! connection — pipeline by opening more connections). Shut the
-//! [`NetServer`] down before the [`Server`](super::Server) so every
-//! in-flight `await_completion` can land.
+//! connection — pipeline by opening more connections), with an
+//! optional keep-alive request cap ([`NetServer::start_with_limit`]):
+//! after N responses the connection closes gracefully and the peer
+//! reconnects. Shut the [`NetServer`] down before the
+//! [`Server`](super::Server) so every in-flight `await_completion`
+//! can land.
 
 use std::io::{ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -641,11 +644,30 @@ pub struct NetServer {
 
 impl NetServer {
     /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
-    /// serve `server` over `wire`.
+    /// serve `server` over `wire`, with unbounded keep-alive (no
+    /// per-connection request cap).
     pub fn start<W: Wire>(
         server: Arc<Server>,
         addr: &str,
         wire: W,
+    ) -> std::io::Result<NetServer> {
+        NetServer::start_with_limit(server, addr, wire, None)
+    }
+
+    /// [`NetServer::start`] with a keep-alive request cap: each
+    /// connection serves at most `max_requests` responses (successes
+    /// and admission refusals both count), then closes gracefully —
+    /// the capping response is fully written and flushed before the
+    /// close, so a well-behaved client sees N answers and then a clean
+    /// EOF, never a torn frame. Long-lived peers are expected to
+    /// reconnect; the cap bounds how long any one connection can pin a
+    /// server thread and gives load balancers a natural rebalance
+    /// point. `None` disables the cap.
+    pub fn start_with_limit<W: Wire>(
+        server: Arc<Server>,
+        addr: &str,
+        wire: W,
+        max_requests: Option<usize>,
     ) -> std::io::Result<NetServer> {
         let listener = TcpListener::bind(addr)?;
         listener.set_nonblocking(true)?;
@@ -668,7 +690,13 @@ impl NetServer {
                             let h = std::thread::Builder::new()
                                 .name("lpr-net-conn".into())
                                 .spawn(move || {
-                                    handle_conn(server, wire, stream, stop)
+                                    handle_conn(
+                                        server,
+                                        wire,
+                                        stream,
+                                        stop,
+                                        max_requests,
+                                    )
                                 })
                                 .expect("spawn connection thread");
                             conns.push(h);
@@ -713,13 +741,16 @@ impl Drop for NetServer {
 }
 
 /// Serve one connection: requests in, responses out, until EOF, a
-/// framing error, or server stop. Admission refusals answer and keep
-/// the connection; framing errors answer best-effort and close.
+/// framing error, server stop, or the keep-alive request cap.
+/// Admission refusals answer and keep the connection; framing errors
+/// answer best-effort and close; the cap closes gracefully right
+/// after its final flushed response.
 fn handle_conn<W: Wire>(
     server: Arc<Server>,
     wire: Arc<W>,
     mut stream: TcpStream,
     stop: Arc<AtomicBool>,
+    max_requests: Option<usize>,
 ) {
     let _ = stream.set_read_timeout(Some(CONN_POLL));
     let _ = stream.set_nodelay(true);
@@ -730,6 +761,7 @@ fn handle_conn<W: Wire>(
         n_tokens: 0,
         latency_us: 0,
     };
+    let mut served = 0usize;
     loop {
         match wire.read_request(&mut stream) {
             Ok(req) => {
@@ -750,6 +782,10 @@ fn handle_conn<W: Wire>(
                     {
                         return;
                     }
+                    served += 1;
+                    if Some(served) == max_requests {
+                        return;
+                    }
                     continue;
                 }
                 let resp = match server.enqueue_with(&req.meta, &req.h) {
@@ -765,6 +801,10 @@ fn handle_conn<W: Wire>(
                     Err(e) => reject(Status::from_admit_error(&e)),
                 };
                 if wire.write_response(&mut stream, &resp).is_err() {
+                    return;
+                }
+                served += 1;
+                if Some(served) == max_requests {
                     return;
                 }
             }

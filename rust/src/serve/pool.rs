@@ -82,6 +82,7 @@ use crate::dispatch::plan::{capacity_for, DispatchPlan, OverflowPolicy};
 use crate::experts::{combine_rows_opts, gather_rows, ExpertBank};
 use crate::kernels::{GemmTiles, Kernel};
 use crate::metrics::{LayerLoadTracker, LoadTracker, DEFAULT_LOAD_WINDOW};
+use crate::model::cache::{KvCache, SeqSpan};
 use crate::model::{residual_add, MoeLayer, ModelForward, StackedModel};
 use crate::router::engine::{
     expert_group_bounds, merge_route_shard, run_expert_rows, shard_span,
@@ -268,6 +269,12 @@ pub struct PoolEngine {
     placement_cfg: PlacementConfig,
     /// Forward-layer counter feeding the deterministic replica hash.
     step: u64,
+    /// One-slot scratch cache backing plain [`Self::forward_model`] on
+    /// attention stacks (batch = one full-sequence prefill, reset every
+    /// call); `None` on MoE-only stacks, whose path is unchanged.
+    /// Attention always runs on the caller's thread — never on the
+    /// workers — so worker count cannot move its bits.
+    prefill: Option<KvCache>,
 }
 
 impl std::fmt::Debug for Worker {
@@ -305,6 +312,18 @@ impl PoolEngine {
             .map(|l| l.plan.cfg.n_experts)
             .collect();
         let layers = Arc::new(model.into_layers());
+        let prefill = if layers.iter().any(|l| l.attn.is_some()) {
+            let mut c = KvCache::new(
+                1,
+                layers.len(),
+                d_model,
+                usize::MAX / 2,
+            );
+            let _ = c.alloc();
+            Some(c)
+        } else {
+            None
+        };
         let (done_tx, done_rx) = channel();
         let mut workers = Vec::with_capacity(n_workers);
         for slot in 0..n_workers {
@@ -337,7 +356,13 @@ impl PoolEngine {
             tiles: GemmTiles::default(),
             placement_cfg: PlacementConfig::default(),
             step: 0,
+            prefill,
         }
+    }
+
+    /// True when any layer carries an attention sublayer.
+    pub fn has_attn(&self) -> bool {
+        self.layers.iter().any(|l| l.attn.is_some())
     }
 
     /// Layer 0's compiled plan (the whole plan stack is reachable via
@@ -723,9 +748,25 @@ impl PoolEngine {
     ) {
         let d = self.d_model;
         assert_eq!(h.len() % d, 0, "h must be [N, {d}]");
+        if let Some(mut cache) = self.prefill.take() {
+            cache.reset(0);
+            let n = h.len() / d;
+            let spans = [SeqSpan { slot: 0, n_tokens: n }];
+            let spans = if n == 0 { &[][..] } else { &spans[..] };
+            self.forward_model_seqs(
+                h,
+                spans,
+                capacity_factor,
+                policy,
+                &mut cache,
+                out,
+            );
+            self.prefill = Some(cache);
+            return;
+        }
         let n_layers = self.layers.len();
         out.ensure_layers(n_layers);
-        let ModelForward { layers: louts, hidden, h_cur } = out;
+        let ModelForward { layers: louts, hidden, h_cur, .. } = out;
         h_cur.clear();
         h_cur.extend_from_slice(h);
         for l in 0..n_layers {
@@ -740,6 +781,71 @@ impl PoolEngine {
             if l + 1 < n_layers {
                 std::mem::swap(&mut *h_cur, &mut *hidden);
             }
+        }
+    }
+
+    /// The pool twin of
+    /// [`ModelEngine::forward_seqs`](crate::model::ModelEngine::forward_seqs):
+    /// run the stack over a ragged step batch whose rows concatenate
+    /// `spans` in span order, each span extending one cached sequence.
+    /// Attention runs span-by-span on the caller's thread against the
+    /// span's cache slot; the MoE stages run the coalesced batch on the
+    /// persistent workers — so the output is bit-identical to the
+    /// scoped path for every worker count, and decode ≡ prefill
+    /// whenever the capacity factor admits every token.
+    pub fn forward_model_seqs(
+        &mut self,
+        h: &[f32],
+        spans: &[SeqSpan],
+        capacity_factor: f64,
+        policy: OverflowPolicy,
+        cache: &mut KvCache,
+        out: &mut ModelForward,
+    ) {
+        let d = self.d_model;
+        assert_eq!(h.len() % d, 0, "h must be [N, {d}]");
+        let n = h.len() / d;
+        let spanned: usize = spans.iter().map(|s| s.n_tokens).sum();
+        assert_eq!(spanned, n, "spans must cover the batch exactly");
+        let n_layers = self.layers.len();
+        assert_eq!(cache.n_layers(), n_layers, "cache depth mismatch");
+        assert_eq!(cache.d_model(), d, "cache width mismatch");
+        for s in spans {
+            assert!(s.n_tokens >= 1, "spans must carry tokens");
+            cache
+                .check_capacity(s.slot, s.n_tokens)
+                .expect("kv capacity must be pre-checked by the caller");
+        }
+        out.ensure_layers(n_layers);
+        let ModelForward { layers: louts, hidden, h_cur, attn_scratch } =
+            out;
+        h_cur.clear();
+        h_cur.extend_from_slice(h);
+        for l in 0..n_layers {
+            if let Some(attn) = &self.layers[l].attn {
+                let mut off = 0usize;
+                for s in spans {
+                    let rows =
+                        &mut h_cur[off * d..(off + s.n_tokens) * d];
+                    let (k, v) = cache.layer_mut(s.slot, l);
+                    attn.forward(rows, s.n_tokens, k, v, attn_scratch);
+                    off += s.n_tokens;
+                }
+            }
+            self.forward_layer(
+                l,
+                &h_cur[..],
+                capacity_factor,
+                policy,
+                &mut louts[l],
+            );
+            residual_add(&h_cur[..], &louts[l].combined, hidden);
+            if l + 1 < n_layers {
+                std::mem::swap(&mut *h_cur, &mut *hidden);
+            }
+        }
+        for s in spans {
+            cache.advance(s.slot, s.n_tokens);
         }
     }
 }
@@ -860,6 +966,59 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    /// Decode tentpole: on an attention stack, the pool's plain
+    /// `forward_model` (internal prefill) and its span path both match
+    /// the scoped `ModelEngine` bitwise for worker counts {1, 2, 3, 8}
+    /// — attention runs on the caller's thread in both backends, so
+    /// parallelism cannot move its bits.
+    #[test]
+    fn pool_attn_forward_matches_scoped() {
+        use crate::model::synthetic_decoder_model;
+        let (model, _head) = synthetic_decoder_model(
+            "cosine",
+            &Rng::new(7),
+            2,
+            16,
+            8,
+            6,
+            2,
+            10,
+            4,
+            32,
+        )
+        .into_parts();
+        let cf = 6.0; // = n_experts: admits every token
+        let mut rng = Rng::new(23);
+        let t = 5;
+        let h = rand_vec(&mut rng, t * 16);
+        let mut scoped = ModelEngine::new(model.clone(), 1);
+        let mut want = ModelForward::new();
+        scoped.forward(&h, cf, OverflowPolicy::Drop, &mut want);
+        for workers in [1usize, 2, 3, 8] {
+            let mut pool = PoolEngine::from_model(model.clone(), workers);
+            assert!(pool.has_attn());
+            let mut got = ModelForward::new();
+            pool.forward_model(&h, cf, OverflowPolicy::Drop, &mut got);
+            assert_eq!(got.hidden, want.hidden, "w={workers} prefill");
+            // token-at-a-time through an external cache
+            let mut cache = KvCache::new(1, 2, 16, t);
+            let slot = cache.alloc().unwrap();
+            let mut dec = Vec::new();
+            for i in 0..t {
+                pool.forward_model_seqs(
+                    &h[i * 16..(i + 1) * 16],
+                    &[SeqSpan { slot, n_tokens: 1 }],
+                    cf,
+                    OverflowPolicy::Drop,
+                    &mut cache,
+                    &mut got,
+                );
+                dec.extend_from_slice(&got.hidden);
+            }
+            assert_eq!(dec, want.hidden, "w={workers} decode");
         }
     }
 

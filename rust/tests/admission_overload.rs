@@ -241,6 +241,64 @@ fn length_prefixed_survives_split_and_coalesced_writes() {
     stop_net(net, server);
 }
 
+/// Keep-alive request cap: a connection serves exactly N responses —
+/// each fully flushed — then closes gracefully; a fresh connection is
+/// unaffected (the cap is per-connection, not per-server).
+#[test]
+fn keep_alive_cap_closes_after_n_requests() {
+    let engine = small_engine(D, 4, 8, 2, 16);
+    let cfg = ServeConfig {
+        max_batch: 8,
+        max_wait: 2_000,
+        queue_tokens: 64,
+        service_ticks: Some(1),
+        ..ServeConfig::default()
+    };
+    let rt = ServeRuntime::with_engine(engine, cfg);
+    let server = Arc::new(Server::start(rt));
+    let net = NetServer::start_with_limit(
+        server.clone(),
+        "127.0.0.1:0",
+        LengthPrefixed::default(),
+        Some(2),
+    )
+    .expect("bind loopback");
+
+    let mut s =
+        TcpStream::connect(net.addr()).expect("connect loopback");
+    s.set_nodelay(true).ok();
+    let frame = LengthPrefixed::encode_request(
+        &RequestMeta::default(),
+        &vec![0.25f32; D],
+    );
+    // two requests coalesced into one write: both are answered
+    let mut two = frame.clone();
+    two.extend_from_slice(&frame);
+    s.write_all(&two).expect("write first two");
+    let r1 = LengthPrefixed::read_response(&mut s).expect("first");
+    let r2 = LengthPrefixed::read_response(&mut s).expect("second");
+    assert_eq!(r1.status, Status::Ok);
+    assert_eq!(r2.status, Status::Ok);
+    // the capped connection is now closed: a third request never gets
+    // a response
+    let _ = s.write_all(&frame);
+    let _ = s.flush();
+    assert!(
+        LengthPrefixed::read_response(&mut s).is_err(),
+        "connection must close after its 2-request cap"
+    );
+    drop(s);
+
+    // a new connection gets its own budget
+    let mut s2 =
+        TcpStream::connect(net.addr()).expect("reconnect loopback");
+    s2.write_all(&frame).expect("write on fresh connection");
+    let r = LengthPrefixed::read_response(&mut s2).expect("fresh");
+    assert_eq!(r.status, Status::Ok);
+    drop(s2);
+    stop_net(net, server);
+}
+
 /// An oversized declared frame gets a typed 413-style refusal and the
 /// connection closes (the stream cannot be resynced past it).
 #[test]

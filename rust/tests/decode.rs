@@ -1,0 +1,289 @@
+//! Decode-path acceptance: cached token-at-a-time decode is **bitwise
+//! identical** to full-sequence prefill, across thread counts, both
+//! backends, and arbitrary ragged splits — the determinism contract of
+//! the autoregressive subsystem (`model::attention`, `model::cache`,
+//! `engine::decode`).
+//!
+//! Every engine here is built with `capacity_factor = n_experts`, the
+//! no-drop configuration: dispatch bins scale with batch size, so only
+//! a configuration that admits every token is batch-invariant. With
+//! drops possible, a token's routing could depend on which other rows
+//! share its forward — and prefill-vs-decode parity would be off the
+//! table by construction, not by bug.
+//!
+//! The generation golden is self-contained: an independent no-cache
+//! reference (re-prefill the whole prefix every step, no `KvCache`, no
+//! `DecodeSession`) pins what greedy generation must produce, and the
+//! continuous-batching session must match it bitwise on every backend.
+
+use lpr::engine::{Backend, DecodeSession, Engine, GenRequest, MoeEngine};
+use lpr::model::cache::{KvCache, SeqSpan};
+use lpr::model::{synthetic_decoder_model, DecoderModel};
+use lpr::util::rng::Rng;
+
+const L: usize = 2;
+const D: usize = 16;
+const DZ: usize = 8;
+const E: usize = 6;
+const K: usize = 2;
+const FF: usize = 10;
+const H: usize = 4;
+const V: usize = 32;
+
+fn decoder(seed: u64) -> DecoderModel {
+    synthetic_decoder_model(
+        "cosine",
+        &Rng::new(seed),
+        L,
+        D,
+        DZ,
+        E,
+        K,
+        FF,
+        H,
+        V,
+    )
+}
+
+/// A fresh engine over the seed's model on the given backend, built
+/// with the no-drop capacity factor.
+fn engine(seed: u64, backend: Backend) -> Engine {
+    let (model, _head) = decoder(seed).into_parts();
+    Engine::builder()
+        .model(model)
+        .backend(backend)
+        .capacity_factor(E as f64)
+        .build()
+        .expect("engine builds")
+}
+
+/// Run `h` through the engine in ragged `chunks` via the cached
+/// sequence path, concatenating the output rows.
+fn decode_chunked(eng: &mut Engine, h: &[f32], chunks: &[usize]) -> Vec<f32> {
+    assert_eq!(chunks.iter().sum::<usize>(), h.len() / D);
+    let mut cache = KvCache::new(1, eng.layers(), D, h.len() / D);
+    let slot = cache.alloc().expect("slot");
+    let mut got = Vec::new();
+    let mut off = 0;
+    for &c in chunks {
+        let rows = &h[off * D..(off + c) * D];
+        let out =
+            eng.forward_seqs(rows, &[SeqSpan { slot, n_tokens: c }], &mut cache);
+        got.extend_from_slice(out.hidden);
+        off += c;
+    }
+    assert_eq!(cache.len(slot), h.len() / D);
+    got
+}
+
+/// Property: for random stacks and activations, every split of the
+/// sequence — full prefill, token-at-a-time, ragged — produces the
+/// prefill's hidden states bit-for-bit, on scoped and pool backends
+/// across thread counts {1, 2, 3, 8}.
+#[test]
+fn decode_is_bitwise_prefill_across_backends_and_threads() {
+    let t = 9usize;
+    for seed in [5u64, 29] {
+        let h: Vec<f32> = {
+            let mut rng = Rng::new(seed ^ 0xfeed);
+            (0..t * D).map(|_| rng.normal() as f32 * 0.5).collect()
+        };
+        let want = {
+            let mut oracle = engine(seed, Backend::Scoped { threads: 1 });
+            oracle.forward(&h, t).hidden.to_vec()
+        };
+        let ones = vec![1usize; t];
+        let ragged = vec![4usize, 1, 1, 3];
+        let mixed = vec![2usize, 5, 2];
+        for threads in [1usize, 2, 3, 8] {
+            for backend in [
+                Backend::Scoped { threads },
+                Backend::Pool { workers: threads },
+            ] {
+                let mut eng = engine(seed, backend);
+                // full-sequence prefill through the cache path
+                let full = decode_chunked(&mut eng, &h, &[t]);
+                assert_eq!(full, want, "prefill seed={seed} {backend:?}");
+                for chunks in [&ones, &ragged, &mixed] {
+                    let mut eng = engine(seed, backend);
+                    let got = decode_chunked(&mut eng, &h, chunks);
+                    assert_eq!(
+                        got, want,
+                        "seed={seed} {backend:?} chunks={chunks:?}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The independent no-cache greedy reference: every step re-prefills
+/// the whole token prefix through a **fresh** engine and takes the
+/// argmax of the last row — no `KvCache`, no session, no shared state
+/// with the code under test.
+fn greedy_reference(
+    seed: u64,
+    prompt: &[usize],
+    max_new: usize,
+) -> Vec<usize> {
+    let head = decoder(seed).into_parts().1;
+    let mut toks = prompt.to_vec();
+    let mut out = Vec::new();
+    let mut scratch = Vec::new();
+    let mut h = Vec::new();
+    for _ in 0..max_new {
+        let mut eng = engine(seed, Backend::Scoped { threads: 1 });
+        head.embed_tokens(&toks, &mut h);
+        let fwd = eng.forward(&h, toks.len());
+        let last = fwd.token_row(toks.len() - 1);
+        let tok = head.greedy_next(last, &mut scratch);
+        out.push(tok);
+        toks.push(tok);
+    }
+    out
+}
+
+/// Golden generation: the session's cached continuous-batching decode
+/// reproduces the no-cache reference bitwise (same argmax at every
+/// step), identically on every backend and thread count — and twice in
+/// a row on the same session (slot reuse does not leak state).
+#[test]
+fn generation_matches_no_cache_reference_on_all_backends() {
+    let seed = 11u64;
+    let prompt = vec![3usize, 1, 4, 1, 5];
+    let max_new = 8usize;
+    let golden = greedy_reference(seed, &prompt, max_new);
+    assert_eq!(golden.len(), max_new);
+    assert!(golden.iter().all(|&t| t < V));
+
+    for backend in [
+        Backend::Scoped { threads: 1 },
+        Backend::Scoped { threads: 3 },
+        Backend::Scoped { threads: 8 },
+        Backend::Pool { workers: 2 },
+        Backend::Pool { workers: 8 },
+    ] {
+        let (model, head) = decoder(seed).into_parts();
+        let eng = Engine::builder()
+            .model(model)
+            .backend(backend)
+            .capacity_factor(E as f64)
+            .build()
+            .expect("engine builds");
+        let mut sess = DecodeSession::new(eng, head, 2, 32);
+        sess.submit(GenRequest { prompt: prompt.clone(), max_new })
+            .expect("submit");
+        let stats = sess.run_to_idle();
+        assert!(
+            stats.iter().all(|s| s.n_dropped == 0),
+            "no-drop config must never drop"
+        );
+        let fin = sess.take_finished();
+        assert_eq!(fin[0].tokens, golden, "{backend:?}");
+
+        // second pass on the same session: freed slot, same output
+        sess.submit(GenRequest { prompt: prompt.clone(), max_new })
+            .expect("resubmit");
+        sess.run_to_idle();
+        assert_eq!(
+            sess.take_finished()[0].tokens,
+            golden,
+            "slot reuse {backend:?}"
+        );
+        assert_eq!(sess.cache().n_live(), 0);
+    }
+}
+
+/// Join-timing invariance: whether a second request is submitted
+/// up-front or only after the first has generated half its budget, both
+/// sequences produce their solo outputs — batching composition never
+/// leaks between sequences.
+#[test]
+fn join_timing_does_not_change_any_sequence() {
+    let seed = 47u64;
+    let pa = vec![7usize, 7, 2, 9];
+    let pb = vec![1usize, 30];
+    let ga = greedy_reference(seed, &pa, 5);
+    let gb = greedy_reference(seed, &pb, 5);
+
+    let session = |sub_b_at: Option<usize>| {
+        let (model, head) = decoder(seed).into_parts();
+        let eng = Engine::builder()
+            .model(model)
+            .backend(Backend::Pool { workers: 3 })
+            .capacity_factor(E as f64)
+            .build()
+            .expect("engine builds");
+        let mut sess = DecodeSession::new(eng, head, 2, 32);
+        let ida = sess
+            .submit(GenRequest { prompt: pa.clone(), max_new: 5 })
+            .unwrap();
+        let mut idb = None;
+        match sub_b_at {
+            None => {
+                idb = Some(
+                    sess.submit(GenRequest { prompt: pb.clone(), max_new: 5 })
+                        .unwrap(),
+                );
+            }
+            Some(steps) => {
+                for _ in 0..steps {
+                    let _ = sess.step();
+                }
+                idb = Some(
+                    sess.submit(GenRequest { prompt: pb.clone(), max_new: 5 })
+                        .unwrap(),
+                );
+            }
+        }
+        sess.run_to_idle();
+        let fin = sess.take_finished();
+        let a = fin.iter().find(|f| f.id == ida).unwrap().tokens.clone();
+        let b = fin
+            .iter()
+            .find(|f| Some(f.id) == idb)
+            .unwrap()
+            .tokens
+            .clone();
+        (a, b)
+    };
+
+    for timing in [None, Some(1), Some(3)] {
+        let (a, b) = session(timing);
+        assert_eq!(a, ga, "sequence A, join timing {timing:?}");
+        assert_eq!(b, gb, "sequence B, join timing {timing:?}");
+    }
+}
+
+/// Slot lifecycle under more requests than slots: three requests on a
+/// two-slot cache all finish, FIFO admission holds, and every slot is
+/// back in the free pool at idle.
+#[test]
+fn oversubscribed_slots_drain_fifo() {
+    let (model, head) = decoder(3).into_parts();
+    let eng = Engine::builder()
+        .model(model)
+        .backend(Backend::Scoped { threads: 2 })
+        .capacity_factor(E as f64)
+        .build()
+        .expect("engine builds");
+    let mut sess = DecodeSession::new(eng, head, 2, 16);
+    let ids: Vec<u64> = [(vec![1usize, 2], 4), (vec![3usize], 2), (vec![4usize, 5, 6], 3)]
+        .into_iter()
+        .map(|(prompt, max_new)| {
+            sess.submit(GenRequest { prompt, max_new }).unwrap()
+        })
+        .collect();
+    let stats = sess.run_to_idle();
+    assert!(stats.iter().any(|s| s.n_seqs == 2), "work must overlap");
+    let fin = sess.take_finished();
+    assert_eq!(fin.len(), 3);
+    // ids come back exactly once each; the two-slot cache forces the
+    // third request to wait for a freed slot, so completion order is
+    // admission order for same-budget work
+    let mut seen: Vec<u64> = fin.iter().map(|f| f.id).collect();
+    seen.sort_unstable();
+    assert_eq!(seen, ids);
+    assert_eq!(sess.cache().n_live(), 0);
+    assert!(sess.is_idle());
+}
